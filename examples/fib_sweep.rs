@@ -1,0 +1,26 @@
+//! Figure-5 sweep: fibonacci gain from bubbles on both paper machines.
+//!
+//! ```sh
+//! cargo run --release --example fib_sweep            # full sweep
+//! cargo run --release --example fib_sweep -- --quick # CI-sized
+//! ```
+
+use bubbles::apps::fib::FibParams;
+use bubbles::experiments::fig5;
+use bubbles::topology::Topology;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let counts: Vec<usize> = if quick {
+        vec![4, 16, 64]
+    } else {
+        fig5::default_thread_counts()
+    };
+    println!("Figure 5 — gain (%) of bubbles over the classical scheduler");
+    println!("(paper: (a) HT Xeon stabilises at 30-40% from 16 threads;");
+    println!("        (b) NUMA 4x4 Itanium: 40% @ 32 threads, ~80% @ 512)\n");
+    for topo in [Topology::xeon_2x_ht(), Topology::numa(4, 4)] {
+        let series = fig5::run(&topo, &counts, &FibParams::default());
+        println!("{}", series.render());
+    }
+}

@@ -1,0 +1,51 @@
+//! Quickstart: the Figure-4 API, bubble evolution (Figure 3), and a
+//! first simulated run.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use bubbles::apps::conduction::{self, HeatParams};
+use bubbles::apps::StructureMode;
+use bubbles::marcel::Marcel;
+use bubbles::sched::Scheduler;
+use bubbles::topology::{CpuId, Topology};
+
+fn main() {
+    // ---- 1. Figure 4: build and launch a bubble ---------------------
+    println!("== Figure 4: marcel-style API ==");
+    let m = Marcel::new(Topology::numa(2, 2));
+    let sys = m.system().clone();
+    sys.trace.set_enabled(true);
+
+    let bubble = m.bubble_init();
+    let t1 = m.create_dontsched("thread1");
+    let t2 = m.create_dontsched("thread2");
+    m.bubble_inserttask(bubble, t1);
+    m.wake_up_bubble(bubble);
+    m.bubble_inserttask(bubble, t2); // late insertion, as in the paper
+
+    // ---- 2. Figure 3: watch the bubble descend and burst ------------
+    let sched = m.scheduler().clone();
+    let got = sched.pick(&sys, CpuId(0));
+    println!("cpu0 picked: {:?}", got.map(|t| sys.tasks.name(t)));
+    println!("\nscheduler trace (Figure 3 evolution):");
+    print!("{}", sys.trace.dump());
+
+    // ---- 3. A first experiment: Table-2 rows on a small machine -----
+    println!("\n== conduction on numa-2x2, all three approaches ==");
+    let topo = Topology::numa(2, 2);
+    let p = HeatParams { threads: 4, cycles: 10, work: 500_000, mem_fraction: 0.35 };
+    let seq = conduction::run_sequential(&topo, &p).total_time;
+    println!("{:<12} {:>12} cycles", "sequential", seq);
+    for mode in [StructureMode::Simple, StructureMode::Bound, StructureMode::Bubbles] {
+        let t = conduction::run(&topo, mode, &p).total_time;
+        println!(
+            "{:<12} {:>12} cycles   speedup {:.2}",
+            mode.label(),
+            t,
+            seq as f64 / t as f64
+        );
+    }
+    println!("\nNext: `repro table2`, `repro fig5`, `cargo run --release --example heat_e2e`");
+}

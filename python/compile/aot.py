@@ -1,0 +1,132 @@
+"""AOT lowering: jax (L2+L1) -> HLO *text* -> artifacts/ for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is a single HLO module for one (function, stripe shape).
+A ``manifest.txt`` indexes them for the rust artifact registry
+(rust/src/runtime/artifact.rs); its line format is::
+
+    <name> <kind> <rows> <cols> <dtype> <file>
+
+where ``rows`` is the *output* stripe height (the input carries +2 halo
+rows for the stencil kinds).
+
+Run once via ``make artifacts``; python never runs on the request path.
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Mesh geometry shared with the rust side (rust/src/apps/conduction.rs):
+# the Table-2 reproduction uses a MESH_ROWS x MESH_COLS mesh split into
+# 1/4/8/16 stripes (16 = one per CPU of the numa-4x4 machine).
+MESH_ROWS = 64
+MESH_COLS = 256
+STRIPE_HEIGHTS = (4, 8, 16, 64)
+# Small shapes exercised by the unit/integration tests.
+TEST_SHAPES = ((4, 32), (8, 16))
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_conduction(rows: int, cols: int) -> str:
+    fn = jax.jit(model.conduction_stripe_step)
+    return to_hlo_text(fn.lower(_spec((rows + 2, cols)), _spec((1,))))
+
+
+def lower_advection(rows: int, cols: int) -> str:
+    fn = jax.jit(model.advection_stripe_step)
+    return to_hlo_text(fn.lower(_spec((rows + 2, cols)), _spec((2,))))
+
+
+def lower_residual(rows: int, cols: int) -> str:
+    fn = jax.jit(model.mesh_residual)
+    return to_hlo_text(fn.lower(_spec((rows, cols)), _spec((rows, cols))))
+
+
+def lower_conduction_multistep(rows: int, cols: int, n_steps: int) -> str:
+    fn = jax.jit(functools.partial(model.conduction_stripe_multistep, n_steps=n_steps))
+    return to_hlo_text(fn.lower(_spec((rows + 2, cols)), _spec((1,))))
+
+
+def artifact_plan():
+    """Yield (name, kind, rows, cols, lower_fn) for every artifact."""
+    for rows in STRIPE_HEIGHTS:
+        cols = MESH_COLS
+        yield (f"conduction_r{rows}_c{cols}", "conduction", rows, cols,
+               lambda r=rows, c=cols: lower_conduction(r, c))
+        yield (f"advection_r{rows}_c{cols}", "advection", rows, cols,
+               lambda r=rows, c=cols: lower_advection(r, c))
+    # Multistep variant for the perf ablation (frozen-halo inner loop).
+    yield (f"conduction_ms8_r{STRIPE_HEIGHTS[0]}_c{MESH_COLS}", "conduction_ms8",
+           STRIPE_HEIGHTS[0], MESH_COLS,
+           lambda: lower_conduction_multistep(STRIPE_HEIGHTS[0], MESH_COLS, 8))
+    # Whole-mesh residual for convergence verification in the e2e driver.
+    yield (f"residual_r{MESH_ROWS}_c{MESH_COLS}", "residual", MESH_ROWS, MESH_COLS,
+           lambda: lower_residual(MESH_ROWS, MESH_COLS))
+    # Small shapes for the rust unit tests (fast to compile + run).
+    for rows, cols in TEST_SHAPES:
+        yield (f"conduction_r{rows}_c{cols}", "conduction", rows, cols,
+               lambda r=rows, c=cols: lower_conduction(r, c))
+        yield (f"advection_r{rows}_c{cols}", "advection", rows, cols,
+               lambda r=rows, c=cols: lower_advection(r, c))
+    yield (f"residual_r{TEST_SHAPES[0][0]}_c{TEST_SHAPES[0][1]}", "residual",
+           TEST_SHAPES[0][0], TEST_SHAPES[0][1],
+           lambda: lower_residual(*TEST_SHAPES[0]))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--list", action="store_true", help="print the plan and exit")
+    args = ap.parse_args()
+
+    plan = list(artifact_plan())
+    if args.list:
+        for name, kind, rows, cols, _ in plan:
+            print(f"{name} {kind} {rows} {cols}")
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = []
+    total = 0
+    for name, kind, rows, cols, lower in plan:
+        text = lower()
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {kind} {rows} {cols} f32 {fname}")
+        total += len(text)
+        print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("# name kind rows cols dtype file\n")
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(plan)} artifacts ({total} chars) + manifest.txt to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+Each kernel is written as a Pallas kernel and lowered with
+``interpret=True`` so the resulting HLO runs on any PJRT backend,
+including the rust CPU client on the request path. ``ref.py`` holds the
+pure-jnp oracles the pytest suite checks the kernels against.
+"""
+
+from .stencil import conduction_step, pick_row_block, CONDUCTION_ROW_BLOCK
+from .advection import advection_step
+from .reduce import residual_max
+
+__all__ = [
+    "conduction_step",
+    "advection_step",
+    "residual_max",
+    "pick_row_block",
+    "CONDUCTION_ROW_BLOCK",
+]

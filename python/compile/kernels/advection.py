@@ -1,0 +1,68 @@
+"""Advection kernel (Pallas, Layer 1).
+
+The paper's second Table-2 application is an advection simulation with
+the same structure as conduction (parallel stripes + global barrier) but
+a much shorter runtime (16.13 s sequential vs 250.2 s). We implement a
+first-order upwind scheme for constant positive velocity (cu, cv) in
+Courant-number form:
+
+  q' = q - cu * (q - q[up]) - cv * (q - q[left])
+
+Stability requires cu + cv <= 1. The stripe layout matches the
+conduction kernel: one halo row above and below, Dirichlet columns.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .stencil import pick_row_block
+
+
+def _advection_kernel(x_ref, c_ref, o_ref):
+    """One row-block of the upwind advection update.
+
+    x_ref: (R+2, C) stripe with halo rows; c_ref: (2,) = [cu, cv]
+    Courant numbers (row-wind, column-wind); o_ref: (BR, C).
+    """
+    i = pl.program_id(0)
+    br = o_ref.shape[0]
+    win = x_ref[pl.ds(i * br, br + 2), :]
+    cu = c_ref[0]
+    cv = c_ref[1]
+    center = win[1:-1, :]
+    up = win[:-2, :]
+    left = jnp.concatenate([center[:, :1], center[:, :-1]], axis=1)
+    out = center - cu * (center - up) - cv * (center - left)
+    # Inflow column boundary (Dirichlet): keep the wall value.
+    out = jnp.concatenate([center[:, :1], out[:, 1:]], axis=1)
+    o_ref[...] = out
+
+
+@functools.partial(jax.named_call, name="advection_step")
+def advection_step(x, c):
+    """One upwind advection step over a stripe.
+
+    Args:
+      x: (R+2, C) stripe with halo rows.
+      c: (2,) f32 Courant numbers [cu, cv], cu + cv <= 1, both >= 0.
+
+    Returns:
+      (R, C) updated interior stripe.
+    """
+    rows = x.shape[0] - 2
+    cols = x.shape[1]
+    br = pick_row_block(rows)
+    return pl.pallas_call(
+        _advection_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((rows + 2, cols), lambda i: (0, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=True,
+    )(x, c)

@@ -1,0 +1,33 @@
+"""Reduction kernel (Pallas, Layer 1): max-abs residual between meshes.
+
+Used by the rust end-to-end driver to verify convergence of the
+conduction run (paper §5.2 applications iterate until their cycle count;
+we additionally check the numerics against the pure-jnp oracle).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _residual_kernel(a_ref, b_ref, o_ref):
+    o_ref[0, 0] = jnp.max(jnp.abs(a_ref[...] - b_ref[...]))
+
+
+@functools.partial(jax.named_call, name="residual_max")
+def residual_max(a, b):
+    """max |a - b| over two equally-shaped meshes, returned as (1, 1)."""
+    rows, cols = a.shape
+    return pl.pallas_call(
+        _residual_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+            pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), a.dtype),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,36 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+These are the specification: simple, obviously-correct jnp expressions
+with no Pallas machinery. pytest asserts allclose(kernel, ref) across a
+hypothesis-driven sweep of shapes, dtypes and parameter values.
+"""
+
+import jax.numpy as jnp
+
+
+def conduction_ref(x, alpha):
+    """5-point Jacobi heat step over stripe x: (R+2, C) -> (R, C)."""
+    a = jnp.asarray(alpha).reshape(())
+    center = x[1:-1, :]
+    up = x[:-2, :]
+    down = x[2:, :]
+    left = jnp.concatenate([center[:, :1], center[:, :-1]], axis=1)
+    right = jnp.concatenate([center[:, 1:], center[:, -1:]], axis=1)
+    out = center + a * (up + down + left + right - 4.0 * center)
+    return jnp.concatenate([center[:, :1], out[:, 1:-1], center[:, -1:]], axis=1)
+
+
+def advection_ref(x, c):
+    """First-order upwind advection over stripe x: (R+2, C) -> (R, C)."""
+    c = jnp.asarray(c)
+    cu, cv = c[0], c[1]
+    center = x[1:-1, :]
+    up = x[:-2, :]
+    left = jnp.concatenate([center[:, :1], center[:, :-1]], axis=1)
+    out = center - cu * (center - up) - cv * (center - left)
+    return jnp.concatenate([center[:, :1], out[:, 1:]], axis=1)
+
+
+def residual_max_ref(a, b):
+    """max |a - b| as a (1, 1) array."""
+    return jnp.max(jnp.abs(a - b)).reshape(1, 1)

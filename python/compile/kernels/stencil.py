@@ -1,0 +1,97 @@
+"""Heat-conduction stencil kernel (Pallas, Layer 1).
+
+The paper's Table-2 "conduction" application performs cycles of fully
+parallel stripe computation followed by a global hierarchical barrier.
+Each MARCEL thread owns one horizontal stripe of the mesh. This kernel
+is the per-stripe compute hot-spot: one explicit-Euler step of the 2-D
+heat equation (5-point Jacobi stencil) over a stripe that carries one
+halo row above and one below.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles
+work per NUMA node; here the same "keep data next to compute" insight is
+expressed at kernel level with a row-block grid. Each grid step copies
+its (block + halo) row window from the stripe (HBM→VMEM in a real TPU
+lowering; the BlockSpec schedule below is what a threadblock/shared-mem
+schedule would be on the paper's-era hardware) and writes one output
+block. VMEM footprint per step = (BR+2+BR)*C*4 bytes, far under the
+~16 MiB VMEM budget for every shape we emit.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated against ``ref.py`` by pytest and
+the interpreted lowering is what ships in ``artifacts/``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block size for the grid. Shapes emitted by aot.py always have the
+# stripe height as a multiple of the chosen block (pick_row_block).
+CONDUCTION_ROW_BLOCK = 16
+
+
+def pick_row_block(rows: int) -> int:
+    """Largest block <= CONDUCTION_ROW_BLOCK that divides ``rows``."""
+    for cand in (CONDUCTION_ROW_BLOCK, 8, 4, 2, 1):
+        if rows % cand == 0 and cand <= rows:
+            return cand
+    return 1
+
+
+def _conduction_kernel(x_ref, a_ref, o_ref):
+    """One row-block of the 5-point stencil.
+
+    x_ref: (R+2, C) full stripe incl. top/bottom halo rows (ANY memory);
+    a_ref: (1,) diffusion coefficient alpha (= dt/dx^2 premultiplied);
+    o_ref: (BR, C) output row block.
+    """
+    i = pl.program_id(0)
+    br = o_ref.shape[0]
+    # Load this block's window: BR interior rows plus one halo row on
+    # each side. In a real TPU lowering this is the HBM->VMEM copy.
+    win = x_ref[pl.ds(i * br, br + 2), :]
+    alpha = a_ref[0]
+    center = win[1:-1, :]
+    up = win[:-2, :]
+    down = win[2:, :]
+    # Edge-replicated column neighbours; the true boundary columns are
+    # overwritten below (Dirichlet in the column direction).
+    left = jnp.concatenate([center[:, :1], center[:, :-1]], axis=1)
+    right = jnp.concatenate([center[:, 1:], center[:, -1:]], axis=1)
+    out = center + alpha * (up + down + left + right - 4.0 * center)
+    # Dirichlet side walls: boundary columns keep their value.
+    out = jnp.concatenate([center[:, :1], out[:, 1:-1], center[:, -1:]], axis=1)
+    o_ref[...] = out
+
+
+@functools.partial(jax.named_call, name="conduction_step")
+def conduction_step(x, alpha):
+    """One explicit heat-equation step over a stripe.
+
+    Args:
+      x: (R+2, C) stripe with halo rows. Row 0 and row R+1 are halo
+         (either a neighbour stripe's edge or the global Dirichlet wall).
+      alpha: (1,) f32, stability requires alpha < 0.25.
+
+    Returns:
+      (R, C) updated interior stripe.
+    """
+    rows = x.shape[0] - 2
+    cols = x.shape[1]
+    br = pick_row_block(rows)
+    return pl.pallas_call(
+        _conduction_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            # Full stripe visible to every grid step; each step slices
+            # its own overlapping halo window (overlap is not
+            # expressible as a non-overlapping BlockSpec partition).
+            pl.BlockSpec((rows + 2, cols), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x.dtype),
+        interpret=True,
+    )(x, alpha)

@@ -1,0 +1,68 @@
+"""AOT path: every artifact in the plan lowers to parseable HLO text and
+the emitted module has the expected parameter/result shapes."""
+
+import re
+
+import pytest
+
+from compile import aot
+
+
+def test_plan_names_are_unique():
+    names = [name for name, *_ in aot.artifact_plan()]
+    assert len(names) == len(set(names))
+
+
+def test_plan_covers_table2_stripe_heights():
+    kinds = {}
+    for name, kind, rows, cols, _ in aot.artifact_plan():
+        kinds.setdefault(kind, set()).add(rows)
+    # 16/8/4-way splits of the 64-row mesh plus whole-mesh sequential.
+    assert {4, 8, 16, 64} <= kinds["conduction"]
+    assert {4, 8, 16, 64} <= kinds["advection"]
+    assert "residual" in kinds
+
+
+@pytest.mark.parametrize("rows,cols", [(4, 32), (8, 16)])
+def test_conduction_lowers_to_hlo_text(rows, cols):
+    text = aot.lower_conduction(rows, cols)
+    assert "HloModule" in text
+    assert f"f32[{rows + 2},{cols}]" in text    # input with halo
+    assert f"f32[{rows},{cols}]" in text        # output stripe
+    assert "f32[1]" in text                     # alpha parameter
+
+
+def test_advection_lowers_to_hlo_text():
+    text = aot.lower_advection(4, 32)
+    assert "HloModule" in text
+    assert "f32[6,32]" in text
+    assert "f32[2]" in text                     # [cu, cv]
+
+
+def test_residual_lowers_to_hlo_text():
+    text = aot.lower_residual(4, 32)
+    assert "HloModule" in text
+    assert "f32[1,1]" in text
+
+
+def test_hlo_has_root_tuple():
+    """return_tuple=True so the rust side can always to_tuple1()."""
+    text = aot.lower_conduction(4, 32)
+    root = [l for l in text.splitlines() if "ROOT" in l]
+    assert root, text
+    assert any("tuple" in l or "(f32" in l for l in root)
+
+
+def test_multistep_lowers_with_loop():
+    text = aot.lower_conduction_multistep(4, 32, 8)
+    assert "HloModule" in text
+    # fori_loop lowers to a while op in HLO.
+    assert "while" in text
+
+
+def test_hlo_text_ids_fit_32bit():
+    """The whole reason we ship text: ids must be reparseable; sanity-check
+    none of the textual ids overflow i32 (xla_extension 0.5.1 limit)."""
+    text = aot.lower_conduction(4, 32)
+    for m in re.finditer(r"%[A-Za-z_0-9.\-]+\.(\d+)", text):
+        assert int(m.group(1)) <= 2**31 - 1

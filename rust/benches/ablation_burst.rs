@@ -1,0 +1,18 @@
+//! Ablation (§3.3.1): bursting-level sweep — affinity (deep burst) vs
+//! processor utilisation (high burst) on the conduction workload.
+
+use bubbles::apps::conduction::HeatParams;
+use bubbles::experiments::ablations;
+use bubbles::topology::Topology;
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let p = HeatParams {
+        cycles: if full { 60 } else { 15 },
+        ..HeatParams::conduction()
+    };
+    for topo in [Topology::numa(4, 4), Topology::deep()] {
+        println!("machine: {}", topo.name());
+        println!("{}", ablations::burst_level(&topo, &p).render());
+    }
+}

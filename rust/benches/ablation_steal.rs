@@ -1,0 +1,15 @@
+//! Ablation (§3.3.3 / §3.4): regeneration & stealing policies on the
+//! terminal-imbalance workload (where rebalancing should help) and the
+//! barrier-coupled AMR workload (where the paper's ping-pong caveat
+//! bites).
+
+use bubbles::apps::amr::{AmrParams, SkewParams};
+use bubbles::experiments::ablations;
+use bubbles::topology::Topology;
+
+fn main() {
+    let topo = Topology::numa(4, 4);
+    println!("{}", ablations::regeneration_skewed(&topo, &SkewParams::default()).render());
+    let p = AmrParams { cycles: 12, redraw_every: 3, ..Default::default() };
+    println!("{}", ablations::regeneration(&topo, &p).render());
+}

@@ -1,0 +1,18 @@
+//! Figure 5 — fibonacci gain (%) vs thread count on both paper
+//! machines. Set BENCH_FULL=1 for the full 2..512 sweep.
+
+use bubbles::apps::fib::FibParams;
+use bubbles::experiments::fig5;
+use bubbles::topology::Topology;
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let counts: Vec<usize> =
+        if full { fig5::default_thread_counts() } else { vec![4, 16, 64, 128] };
+    println!("Figure 5 — bubble gain over the classical scheduler");
+    println!("(paper: (a) 30-40% from 16 threads; (b) 40% @32 → 80% @512)\n");
+    for topo in [Topology::xeon_2x_ht(), Topology::numa(4, 4)] {
+        let series = fig5::run(&topo, &counts, &FibParams::default());
+        println!("{}", series.render());
+    }
+}

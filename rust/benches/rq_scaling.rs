@@ -1,0 +1,58 @@
+//! §2.2's contention claim, measured: "a unique thread list for the
+//! whole machine is a bottleneck, particularly when the machine has
+//! many processors" (Dandamudi & Cheng). We hammer a single global
+//! RunList vs per-CPU lists from N OS threads and report throughput.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use bubbles::rq::RunList;
+use bubbles::task::TaskId;
+use bubbles::topology::LevelId;
+use bubbles::util::fmt::Table;
+
+/// Ops/sec with `threads` workers over `lists` (each worker uses
+/// list[worker % lists]).
+fn throughput(threads: usize, lists: usize, dur_ms: u64) -> f64 {
+    let lists: Arc<Vec<RunList>> =
+        Arc::new((0..lists).map(|i| RunList::new(LevelId(i))).collect());
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for w in 0..threads {
+        let lists = lists.clone();
+        let stop = stop.clone();
+        joins.push(std::thread::spawn(move || {
+            let l = &lists[w % lists.len()];
+            let mut ops = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                l.push(TaskId(w), 1);
+                let _ = l.pop_max();
+                ops += 2;
+            }
+            ops
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(dur_ms));
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    total as f64 / (dur_ms as f64 / 1e3)
+}
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let dur = if fast { 50 } else { 300 };
+    println!("runqueue contention: single global list vs per-CPU lists\n");
+    let mut t = Table::new(&["threads", "global Mops/s", "per-cpu Mops/s", "hierarchy win"]);
+    for threads in [1usize, 2, 4, 8] {
+        let global = throughput(threads, 1, dur);
+        let percpu = throughput(threads, threads, dur);
+        t.row(&[
+            threads.to_string(),
+            format!("{:.2}", global / 1e6),
+            format!("{:.2}", percpu / 1e6),
+            format!("{:.2}x", percpu / global),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("expected shape: the win grows with the thread count (§2.2).");
+}

@@ -1,0 +1,27 @@
+//! Table 1 — scheduler micro-costs: Yield (list search) and Switch
+//! (synchronisation + context switch), for the flat per-CPU structure,
+//! the full bubble hierarchy, and kernel threads.
+//!
+//! Paper (2.66 GHz P4 Xeon): marcel 186/84 ns, bubbles 250/148 ns,
+//! NPTL 672/1488 ns. The shape to check: hierarchy costs a small
+//! constant factor over flat; both are far below kernel threads.
+
+use bubbles::experiments::table1;
+
+fn main() {
+    let user_switch = table1::fiber_switch_ns();
+    let os_switch = table1::os_switch_ns();
+    let t = table1::run(user_switch, os_switch);
+    println!("Table 1 — measured on this testbed");
+    println!("(paper: marcel 186/84, bubbles 250/148, NPTL 672/1488 ns)\n");
+    println!("{}", t.render());
+
+    let flat = &t.rows[0];
+    let deep = &t.rows[1];
+    let os = &t.rows[2];
+    println!(
+        "ratios: hierarchy/flat yield = {:.2}x (paper 1.34x), os/user switch = {:.1}x (paper ~10x)",
+        deep.yield_ns / flat.yield_ns,
+        os.switch_ns / deep.switch_ns,
+    );
+}

@@ -1,0 +1,24 @@
+//! Table 2 — conduction & advection under Sequential / Simple / Bound /
+//! Bubbles on the NovaScale stand-in (numa-4x4, NUMA factor 3).
+//! BENCH_FULL=1 runs the full cycle counts.
+
+use bubbles::experiments::table2;
+use bubbles::topology::Topology;
+
+fn main() {
+    let full = std::env::var("BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let scale = if full { 1.0 } else { 0.25 };
+    let topo = Topology::numa(4, 4);
+    let t2 = table2::run(&topo, scale);
+    println!("Table 2 on `{}` (scale {scale})", topo.name());
+    println!("(paper: Simple 10.58/9.11, Bound 15.82/12.40, Bubbles 15.80/12.40)\n");
+    println!("{}", t2.render());
+    let b = t2.row("Bound");
+    let u = t2.row("Bubbles");
+    let s = t2.row("Simple");
+    println!(
+        "shape: bubbles/bound speedup gap = {:.1}% (paper 0.1%), bound/simple = {:.2}x (paper 1.50x)",
+        100.0 * (b.conduction_speedup - u.conduction_speedup).abs() / b.conduction_speedup,
+        b.conduction_speedup / s.conduction_speedup,
+    );
+}

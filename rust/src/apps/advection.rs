@@ -1,0 +1,67 @@
+//! Advection simulation workload (paper §5.2, Table 2, right half).
+//!
+//! Structurally identical to [`super::conduction`] — parallel stripes +
+//! global barrier — but with far less compute per cycle (sequential
+//! 16.13 s vs 250.2 s), so scheduling and synchronisation overheads
+//! weigh more and speedups are lower across the board (paper: 12.40 vs
+//! 15.82 for Bound).
+
+use crate::sim::SimReport;
+use crate::task::TaskId;
+use crate::topology::Topology;
+
+use super::conduction::{self, HeatParams};
+use super::StructureMode;
+
+/// Advection parameters (thin wrapper: the stripe/barrier structure is
+/// shared with conduction, as in the paper).
+pub fn params() -> HeatParams {
+    HeatParams::advection()
+}
+
+/// Build into an engine.
+pub fn build(
+    engine: &mut crate::sim::SimEngine,
+    mode: StructureMode,
+    p: &HeatParams,
+) -> Vec<TaskId> {
+    conduction::build(engine, mode, p)
+}
+
+/// Run one row.
+pub fn run(topo: &Topology, mode: StructureMode, p: &HeatParams) -> SimReport {
+    conduction::run(topo, mode, p)
+}
+
+/// Run the sequential row.
+pub fn run_sequential(topo: &Topology, p: &HeatParams) -> SimReport {
+    conduction::run_sequential(topo, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::StructureMode::*;
+
+    #[test]
+    fn advection_speedups_below_conduction() {
+        // Less work per barrier → relatively more overhead → lower
+        // speedup (the Table-2 contrast between the two columns).
+        let topo = Topology::numa(4, 4);
+        let heavy = HeatParams { cycles: 8, ..HeatParams::conduction() };
+        let light = HeatParams { cycles: 8, ..HeatParams::advection() };
+
+        let su = |p: &HeatParams| {
+            let seq = run_sequential(&topo, p).total_time as f64;
+            let par = run(&topo, Bound, p).total_time as f64;
+            seq / par
+        };
+        let su_heavy = su(&heavy);
+        let su_light = su(&light);
+        assert!(
+            su_light < su_heavy,
+            "advection speedup {su_light} should trail conduction {su_heavy}"
+        );
+        assert!(su_light > 6.0, "still a real speedup: {su_light}");
+    }
+}

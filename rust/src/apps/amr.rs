@@ -1,0 +1,295 @@
+//! AMR-like imbalanced workload (paper §5.2 closing paragraph).
+//!
+//! "In the future these applications will be modified to benefit from
+//! Adaptive Mesh Refinement (AMR) which increases computing precision
+//! on interesting areas. This will entail large workload imbalances in
+//! the mesh both at runtime and according to the computation results."
+//!
+//! We synthesise that future workload: stripes whose per-cycle work is
+//! drawn from a heavy-tailed (Pareto) distribution and *re-drawn* every
+//! cycle block — the refinement front moving through the mesh. This is
+//! the workload where corrective bubble regeneration (§3.3.3) earns
+//! its keep: `Bound` suffers pinned imbalance, `Simple` balances but
+//! destroys affinity, bubbles rebalance *groups* while keeping
+//! affinity.
+
+use crate::marcel::Marcel;
+use crate::sim::{Program, SimEngine, SimReport};
+use crate::task::{TaskId, PRIO_THREAD};
+use crate::topology::Topology;
+use crate::util::Rng;
+
+use super::StructureMode;
+
+/// Imbalanced-stripe parameters.
+#[derive(Debug, Clone)]
+pub struct AmrParams {
+    pub threads: usize,
+    /// Barrier cycles in total.
+    pub cycles: usize,
+    /// Cycles between re-draws of the imbalance pattern.
+    pub redraw_every: usize,
+    /// Mean per-stripe work per cycle.
+    pub mean_work: u64,
+    /// Pareto shape (smaller = heavier tail = worse imbalance).
+    pub shape: f64,
+    pub mem_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for AmrParams {
+    fn default() -> Self {
+        AmrParams {
+            // Twice as many stripes as the reference machine's CPUs:
+            // rebalancing is meaningless at 1 thread/CPU (every
+            // schedule then executes one stripe per CPU per cycle).
+            threads: 32,
+            cycles: 24,
+            redraw_every: 6,
+            mean_work: 800_000,
+            shape: 1.2,
+            // AMR work is compute-dominated; the refinement data is
+            // small relative to the arithmetic on it.
+            mem_fraction: 0.15,
+            seed: 42,
+        }
+    }
+}
+
+/// Per-stripe per-cycle work table (deterministic from the seed).
+pub fn work_table(p: &AmrParams) -> Vec<Vec<u64>> {
+    let mut rng = Rng::new(p.seed);
+    let mut table = vec![vec![0u64; p.cycles]; p.threads];
+    let mut current: Vec<u64> = vec![p.mean_work; p.threads];
+    for c in 0..p.cycles {
+        if c % p.redraw_every == 0 {
+            // Refinement front moved: re-draw stripe weights with the
+            // same total (the mesh is the same size, detail moved).
+            let draws: Vec<f64> =
+                (0..p.threads).map(|_| rng.pareto(1.0, p.shape)).collect();
+            let total: f64 = draws.iter().sum();
+            for (i, d) in draws.iter().enumerate() {
+                current[i] =
+                    ((d / total) * p.mean_work as f64 * p.threads as f64).max(1.0) as u64;
+            }
+        }
+        for i in 0..p.threads {
+            table[i][c] = current[i];
+        }
+    }
+    table
+}
+
+/// Build the AMR workload under a structure mode.
+pub fn build(engine: &mut SimEngine, mode: StructureMode, p: &AmrParams) -> Vec<TaskId> {
+    let table = work_table(p);
+    let barrier = engine.alloc_barrier(p.threads);
+    let regions: Vec<_> = (0..p.threads).map(|_| engine.alloc_region()).collect();
+    let program = |i: usize, r| {
+        let mut prog = Program::new();
+        for c in 0..p.cycles {
+            prog = prog.compute(table[i][c], p.mem_fraction, Some(r)).barrier(barrier);
+        }
+        prog
+    };
+    match mode {
+        StructureMode::Simple | StructureMode::Bound => {
+            let mut out = Vec::new();
+            for (i, &r) in regions.iter().enumerate() {
+                let t = engine.add_thread(format!("amr{i}"), PRIO_THREAD, program(i, r));
+                engine.wake(t);
+                out.push(t);
+            }
+            out
+        }
+        StructureMode::Bubbles => {
+            let sys = engine.sys.clone();
+            let m = Marcel::with_system(&sys);
+            let names: Vec<String> = (0..p.threads).map(|i| format!("amr{i}")).collect();
+            let (root, threads) = m.bubbles_from_topology(&names);
+            for (i, (&t, &r)) in threads.iter().zip(regions.iter()).enumerate() {
+                engine.set_program(t, program(i, r));
+            }
+            engine.wake(root);
+            threads
+        }
+    }
+}
+
+/// Run one AMR row.
+pub fn run(topo: &Topology, mode: StructureMode, p: &AmrParams) -> SimReport {
+    let mut e = super::engine_for(topo, mode);
+    build(&mut e, mode, p);
+    e.run().expect("amr run")
+}
+
+// --------------------------------------------------------------------
+// Terminal imbalance: the §3.3.3 scenario proper.
+// --------------------------------------------------------------------
+
+/// Parameters for the skewed-groups workload: "it is possible that a
+/// whole thread group has far less work than others and terminates
+/// before them, leaving idle the whole part of the machine that was
+/// running it" (§3.3.3). One group per NUMA node, one group much
+/// heavier; no barrier coupling, so rebalancing genuinely shortens the
+/// makespan.
+#[derive(Debug, Clone)]
+pub struct SkewParams {
+    /// Bubbles per NUMA node. Using more than one gives corrective
+    /// regeneration a unit it can actually split the heavy group by.
+    pub bubbles_per_node: usize,
+    /// Threads per bubble.
+    pub threads_per_bubble: usize,
+    /// Compute per thread (identical for all threads; the *imbalance*
+    /// is in thread count, which is what bubble affinity pins).
+    pub light_work: u64,
+    /// Node 0's bubbles hold `heavy_factor`× as many threads.
+    pub heavy_factor: f64,
+    /// Chunks each thread's work is split into (yield points).
+    pub chunks: usize,
+    pub mem_fraction: f64,
+}
+
+impl Default for SkewParams {
+    fn default() -> Self {
+        SkewParams {
+            bubbles_per_node: 1,
+            threads_per_bubble: 4,
+            light_work: 4_000_000,
+            heavy_factor: 3.0,
+            chunks: 8,
+            mem_fraction: 0.15,
+        }
+    }
+}
+
+impl SkewParams {
+    /// Threads per NUMA-node group.
+    pub fn threads_per_group(&self) -> usize {
+        self.bubbles_per_node * self.threads_per_bubble
+    }
+}
+
+/// Build the skewed-groups workload (bubble structure:
+/// `bubbles_per_node` bubbles per node, node 0's bubbles heavy).
+/// Returns the thread ids.
+pub fn build_skewed(engine: &mut SimEngine, p: &SkewParams) -> Vec<TaskId> {
+    let n_nodes = engine.sys.topo.n_numa().max(2);
+    let sys = engine.sys.clone();
+    let m = Marcel::with_system(&sys);
+    let root = m.bubble_init_with(
+        crate::task::BurstLevel::Immediate,
+        crate::task::PRIO_BUBBLE,
+    );
+    let mut threads = Vec::new();
+    for node in 0..n_nodes {
+        for b in 0..p.bubbles_per_node {
+            let bubble = m.bubble_init();
+            // The heavy group holds more threads — the imbalance a
+            // purely affinity-driven distribution cannot absorb,
+            // because the whole bubble lands on one node.
+            let n_threads = if node == 0 {
+                (p.threads_per_bubble as f64 * p.heavy_factor) as usize
+            } else {
+                p.threads_per_bubble
+            };
+            for k in 0..n_threads {
+                let t = m.create_dontsched(format!("skew-n{node}-b{b}-t{k}"));
+                m.bubble_inserttask(bubble, t);
+                let r = engine.alloc_region();
+                let mut prog = Program::new();
+                for _ in 0..p.chunks {
+                    prog = prog.compute(
+                        p.light_work / p.chunks as u64,
+                        p.mem_fraction,
+                        Some(r),
+                    );
+                }
+                engine.set_program(t, prog);
+                threads.push(t);
+            }
+            m.bubble_insertbubble(root, bubble);
+        }
+    }
+    engine.wake(root);
+    threads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::StructureMode::*;
+
+    #[test]
+    fn work_table_is_deterministic_and_imbalanced() {
+        let p = AmrParams::default();
+        let a = work_table(&p);
+        let b = work_table(&p);
+        assert_eq!(a, b);
+        // Within one cycle, max/min across stripes must be skewed.
+        let col: Vec<u64> = (0..p.threads).map(|i| a[i][0]).collect();
+        let max = *col.iter().max().unwrap() as f64;
+        let min = *col.iter().min().unwrap() as f64;
+        assert!(max / min > 2.0, "imbalance too mild: {max}/{min}");
+    }
+
+    #[test]
+    fn redraw_changes_pattern() {
+        let p = AmrParams::default();
+        let t = work_table(&p);
+        let before: Vec<u64> = (0..p.threads).map(|i| t[i][0]).collect();
+        let after: Vec<u64> = (0..p.threads).map(|i| t[i][p.redraw_every]).collect();
+        assert_ne!(before, after);
+    }
+
+    #[test]
+    fn all_modes_complete() {
+        let topo = Topology::numa(2, 2);
+        let p = AmrParams { threads: 4, cycles: 8, redraw_every: 4, ..Default::default() };
+        for mode in [Simple, Bound, Bubbles] {
+            assert!(run(&topo, mode, &p).total_time > 0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn imbalance_erodes_the_bound_advantage() {
+        // On the balanced conduction workload Bound dominates Simple by
+        // a wide margin (Table 2). Under AMR imbalance, pinning loses
+        // part of that advantage: the simple/bound ratio must shrink.
+        let topo = Topology::numa(4, 4);
+        let p = AmrParams { cycles: 12, redraw_every: 3, shape: 2.5, ..Default::default() };
+        let bound = run(&topo, Bound, &p).total_time as f64;
+        let simple = run(&topo, Simple, &p).total_time as f64;
+        let ratio_amr = simple / bound;
+
+        let hp = crate::apps::conduction::HeatParams {
+            threads: 32,
+            cycles: 12,
+            work: 800_000,
+            mem_fraction: 0.15,
+        };
+        let bound_c = crate::apps::conduction::run(&topo, Bound, &hp).total_time as f64;
+        let simple_c = crate::apps::conduction::run(&topo, Simple, &hp).total_time as f64;
+        let ratio_balanced = simple_c / bound_c;
+        assert!(
+            ratio_amr < ratio_balanced,
+            "pinning advantage should erode under imbalance: \
+             amr {ratio_amr:.2} vs balanced {ratio_balanced:.2}"
+        );
+    }
+
+    #[test]
+    fn skewed_groups_complete() {
+        let topo = Topology::numa(2, 2);
+        let p = SkewParams {
+            bubbles_per_node: 1,
+            threads_per_bubble: 2,
+            heavy_factor: 3.0,
+            ..Default::default()
+        };
+        let mut e = crate::apps::engine_for(&topo, Bubbles);
+        let threads = build_skewed(&mut e, &p);
+        assert_eq!(threads.len(), 8); // 6 heavy + 2 light on 2 nodes
+        assert!(e.run().unwrap().total_time > 0);
+    }
+}

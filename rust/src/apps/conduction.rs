@@ -1,0 +1,187 @@
+//! Heat-conduction simulation workload (paper §5.2, Table 2).
+//!
+//! "The applications perform cycles of fully parallel computing
+//! followed by global hierarchical communication barrier." The mesh is
+//! split into as many stripes as threads; each stripe's data is homed
+//! by first touch; every cycle each thread computes its stripe and all
+//! threads synchronise.
+//!
+//! The *Bubbles* variant queries the topology and builds one bubble per
+//! NUMA node (4 bubbles × 4 threads on the paper's NovaScale).
+
+use crate::marcel::Marcel;
+use crate::sim::{Program, SimEngine, SimReport};
+use crate::task::{TaskId, PRIO_THREAD};
+
+use super::StructureMode;
+
+/// Stripe-cycle workload parameters.
+#[derive(Debug, Clone)]
+pub struct HeatParams {
+    /// Number of stripes (= threads). The paper uses one per CPU.
+    pub threads: usize,
+    /// Barrier cycles.
+    pub cycles: usize,
+    /// Compute cycles per stripe per barrier cycle.
+    pub work: u64,
+    /// Memory-bound fraction of the stripe compute.
+    pub mem_fraction: f64,
+}
+
+impl HeatParams {
+    /// Table-2 conduction: heavy, long run (sequential 250.2 s).
+    pub fn conduction() -> HeatParams {
+        HeatParams { threads: 16, cycles: 60, work: 2_000_000, mem_fraction: 0.35 }
+    }
+
+    /// Table-2 advection: same structure, far less work per cycle
+    /// (sequential 16.13 s) so fixed costs weigh more.
+    pub fn advection() -> HeatParams {
+        HeatParams { threads: 16, cycles: 40, work: 190_000, mem_fraction: 0.35 }
+    }
+}
+
+/// Build the striped workload into `engine` under the given structure
+/// mode. Returns the thread ids.
+pub fn build(engine: &mut SimEngine, mode: StructureMode, p: &HeatParams) -> Vec<TaskId> {
+    build_with_policy(engine, mode, p, crate::sim::AllocPolicy::FirstTouch)
+}
+
+/// Build with an explicit memory allocation policy (§2.3 ablation).
+pub fn build_with_policy(
+    engine: &mut SimEngine,
+    mode: StructureMode,
+    p: &HeatParams,
+    policy: crate::sim::AllocPolicy,
+) -> Vec<TaskId> {
+    let barrier = engine.alloc_barrier(p.threads);
+    let regions: Vec<_> =
+        (0..p.threads).map(|_| engine.alloc_region_policy(policy)).collect();
+    let program = |r| {
+        let mut prog = Program::new();
+        for _ in 0..p.cycles {
+            prog = prog.compute(p.work, p.mem_fraction, Some(r)).barrier(barrier);
+        }
+        prog
+    };
+    match mode {
+        StructureMode::Simple | StructureMode::Bound => {
+            // Loose threads; the scheduler decides everything.
+            let mut out = Vec::with_capacity(p.threads);
+            for (i, &r) in regions.iter().enumerate() {
+                let t = engine.add_thread(format!("stripe{i}"), PRIO_THREAD, program(r));
+                engine.wake(t);
+                out.push(t);
+            }
+            out
+        }
+        StructureMode::Bubbles => {
+            // Figure-4 style: query the machine, group stripes into one
+            // bubble per NUMA node, wake the root bubble.
+            let sys = engine.sys.clone();
+            let m = Marcel::with_system(&sys);
+            let names: Vec<String> = (0..p.threads).map(|i| format!("stripe{i}")).collect();
+            let (root, threads) = m.bubbles_from_topology(&names);
+            for (&t, &r) in threads.iter().zip(regions.iter()) {
+                engine.set_program(t, program(r));
+            }
+            engine.wake(root);
+            threads
+        }
+    }
+}
+
+/// Sequential baseline: one thread computes all stripes, no barriers.
+pub fn build_sequential(engine: &mut SimEngine, p: &HeatParams) -> TaskId {
+    let regions: Vec<_> = (0..p.threads).map(|_| engine.alloc_region()).collect();
+    let mut prog = Program::new();
+    for _ in 0..p.cycles {
+        for &r in &regions {
+            prog = prog.compute(p.work, p.mem_fraction, Some(r));
+        }
+    }
+    let t = engine.add_thread("sequential", PRIO_THREAD, prog);
+    engine.wake(t);
+    t
+}
+
+/// Run one Table-2 row; returns the simulated makespan.
+pub fn run(topo: &crate::topology::Topology, mode: StructureMode, p: &HeatParams) -> SimReport {
+    let mut e = super::engine_for(topo, mode);
+    build(&mut e, mode, p);
+    e.run().expect("conduction run")
+}
+
+/// Run the sequential row.
+pub fn run_sequential(topo: &crate::topology::Topology, p: &HeatParams) -> SimReport {
+    // The scheduler is irrelevant for one thread; use Bound to pin it.
+    let mut e = super::engine_for(topo, StructureMode::Bound);
+    build_sequential(&mut e, p);
+    e.run().expect("sequential run")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::StructureMode::*;
+    use crate::topology::Topology;
+
+    fn small() -> HeatParams {
+        HeatParams { threads: 8, cycles: 6, work: 200_000, mem_fraction: 0.35 }
+    }
+
+    #[test]
+    fn all_modes_complete() {
+        let topo = Topology::numa(2, 4);
+        for mode in [Simple, Bound, Bubbles] {
+            let rep = run(&topo, mode, &small());
+            assert!(rep.total_time > 0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_beats_sequential() {
+        let topo = Topology::numa(2, 4);
+        let seq = run_sequential(&topo, &small()).total_time;
+        let par = run(&topo, Bound, &small()).total_time;
+        let speedup = seq as f64 / par as f64;
+        assert!(speedup > 4.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn bound_and_bubbles_beat_simple() {
+        // The Table-2 shape: affinity-preserving schedules win.
+        let topo = Topology::numa(4, 4);
+        let p = HeatParams { threads: 16, cycles: 10, work: 500_000, mem_fraction: 0.35 };
+        let simple = run(&topo, Simple, &p).total_time;
+        let bound = run(&topo, Bound, &p).total_time;
+        let bubbles = run(&topo, Bubbles, &p).total_time;
+        assert!(bound < simple, "bound {bound} vs simple {simple}");
+        assert!(bubbles < simple, "bubbles {bubbles} vs simple {simple}");
+        // Bubbles within 15% of handmade binding (paper: 15.84 vs 15.82 s).
+        let gap = bubbles as f64 / bound as f64;
+        assert!(gap < 1.15, "bubbles/bound = {gap}");
+    }
+
+    #[test]
+    fn bubbles_mode_keeps_accesses_local() {
+        let topo = Topology::numa(4, 4);
+        let p = small();
+        let mut e = crate::apps::engine_for(&topo, Bubbles);
+        build(&mut e, Bubbles, &p);
+        e.run().unwrap();
+        let ratio = e.sys.metrics.remote_ratio();
+        assert!(ratio < 0.2, "remote ratio {ratio} too high for bubbles");
+    }
+
+    #[test]
+    fn simple_mode_scatters_accesses() {
+        let topo = Topology::numa(4, 4);
+        let p = HeatParams { threads: 16, cycles: 10, work: 500_000, mem_fraction: 0.35 };
+        let mut e = crate::apps::engine_for(&topo, Simple);
+        build(&mut e, Simple, &p);
+        e.run().unwrap();
+        let ratio = e.sys.metrics.remote_ratio();
+        assert!(ratio > 0.3, "SS should scatter accesses, got {ratio}");
+    }
+}

@@ -1,0 +1,241 @@
+//! Divide-and-conquer fibonacci test-case (paper §5.1, Figure 5).
+//!
+//! "Test-case examples of recursive creation of threads, such as
+//! divide-and-conquer Fibonacci show that the cost of systematically
+//! adding bubbles that express the natural recursion of threads
+//! creations is quickly balanced by the localization that they bring."
+//!
+//! The *total* problem size is fixed; sweeping the thread count makes
+//! the per-thread granularity finer (a lower recursion cutoff in the
+//! paper's code), which is precisely what makes the classical
+//! opportunist scheduler bleed: more migrations, more remote/cache-cold
+//! accesses, while bubbles keep each sibling pair together.
+//!
+//! Each internal node spawns two children that both work on a *pair
+//! region* allocated by their parent (the shared sub-problem data).
+//! With bubbles, each pair is wrapped in a bubble bursting one level
+//! above the leaves (physical chip on the HT Xeon, NUMA node on the
+//! NovaScale) and the pair is declared SMT-*symbiotic* (§3.1) — the
+//! application expressing that the two threads can share a physical
+//! core without interfering. The classical baseline (AFS per-CPU lists
+//! + steal) receives no structure, as in the paper.
+//!
+//! Gain = `(t_classic − t_bubble) / t_classic`, plotted in Figure 5.
+
+use std::sync::Arc;
+
+use crate::marcel::Marcel;
+use crate::sched::{BubbleConfig, BubbleScheduler};
+use crate::sim::{Program, RegionId, SimConfig, SimEngine};
+use crate::task::{BurstLevel, TaskId, PRIO_THREAD};
+use crate::topology::Topology;
+
+/// Fibonacci workload parameters.
+#[derive(Debug, Clone)]
+pub struct FibParams {
+    /// Spawn-tree depth: `2^(depth+1) − 1` threads in total.
+    pub depth: usize,
+    /// Total compute cycles across all leaves (fixed problem size).
+    pub total_leaf_work: u64,
+    /// Total compute cycles across all internal nodes.
+    pub total_node_work: u64,
+    /// Memory-bound fraction (sibling-shared pair region).
+    pub mem_fraction: f64,
+    /// Lower bound on any single chunk (models the recursion cutoff).
+    pub min_chunk: u64,
+}
+
+impl Default for FibParams {
+    fn default() -> Self {
+        FibParams {
+            depth: 4,
+            total_leaf_work: 24_000_000,
+            total_node_work: 6_000_000,
+            mem_fraction: 0.5,
+            min_chunk: 10_000,
+        }
+    }
+}
+
+impl FibParams {
+    /// Threads produced by this tree.
+    pub fn n_threads(&self) -> usize {
+        (1 << (self.depth + 1)) - 1
+    }
+
+    /// Leaves in the tree.
+    pub fn n_leaves(&self) -> usize {
+        1 << self.depth
+    }
+
+    /// Per-leaf compute (total work split across leaves).
+    pub fn leaf_work(&self) -> u64 {
+        (self.total_leaf_work / self.n_leaves() as u64).max(self.min_chunk)
+    }
+
+    /// Per-internal-node compute.
+    pub fn node_work(&self) -> u64 {
+        let internal = (self.n_threads() - self.n_leaves()) as u64;
+        (self.total_node_work / internal.max(1)).max(self.min_chunk)
+    }
+
+    /// Smallest depth whose tree reaches `n` threads.
+    pub fn depth_for_threads(n: usize) -> usize {
+        let mut d = 0;
+        while ((1usize << (d + 1)) - 1) < n {
+            d += 1;
+        }
+        d
+    }
+}
+
+/// Build one node of the spawn tree (post-order: children first).
+/// Returns the node's thread id.
+fn build_node(
+    engine: &mut SimEngine,
+    marcel: Option<&Marcel>,
+    p: &FibParams,
+    level: usize,
+    pair_region: RegionId,
+    pair_burst: BurstLevel,
+) -> TaskId {
+    if level == p.depth {
+        // Leaf: pure compute on the pair region shared with the sibling.
+        return engine.add_thread(
+            format!("fib-leaf-{level}"),
+            PRIO_THREAD,
+            Program::new().compute(p.leaf_work(), p.mem_fraction, Some(pair_region)),
+        );
+    }
+    // Internal node: its children share a fresh pair region.
+    let child_region = engine.alloc_region();
+    let left = build_node(engine, marcel, p, level + 1, child_region, pair_burst);
+    let right = build_node(engine, marcel, p, level + 1, child_region, pair_burst);
+
+    // With bubbles, the pair is wrapped so the scheduler keeps it
+    // together and declared symbiotic (SMT relation, §3.1); the parent
+    // wakes the bubble instead of the threads.
+    let wake_target: Vec<TaskId> = match marcel {
+        Some(m) => {
+            let b = m.bubble_init_with(pair_burst, crate::task::PRIO_BUBBLE);
+            m.bubble_inserttask(b, left);
+            m.bubble_inserttask(b, right);
+            m.set_symbiotic(left, right);
+            vec![b]
+        }
+        None => vec![left, right],
+    };
+
+    let nw = p.node_work();
+    let mut prog = Program::new().compute(nw / 2, p.mem_fraction, Some(pair_region));
+    for &w in &wake_target {
+        prog = prog.wake(w);
+    }
+    prog = prog
+        .join(left)
+        .join(right)
+        .compute(nw / 2, p.mem_fraction, Some(pair_region));
+    engine.add_thread(format!("fib-node-{level}"), PRIO_THREAD, prog)
+}
+
+/// Build the whole tree into `engine`; returns the root thread.
+pub fn build(engine: &mut SimEngine, with_bubbles: bool, p: &FibParams) -> TaskId {
+    let root_region = engine.alloc_region();
+    let pair_burst = pair_burst_level(&engine.sys.topo);
+    let root = if with_bubbles {
+        let sys = engine.sys.clone();
+        let m = Marcel::with_system(&sys);
+        build_node(engine, Some(&m), p, 0, root_region, pair_burst)
+    } else {
+        build_node(engine, None, p, 0, root_region, pair_burst)
+    };
+    engine.wake(root);
+    root
+}
+
+/// Pair bubbles burst one level above the leaves: the smallest
+/// component still covering several CPUs (physical chip on the HT
+/// Xeon, NUMA node on the NovaScale).
+pub fn pair_burst_level(topo: &Topology) -> BurstLevel {
+    BurstLevel::Depth(topo.depth().saturating_sub(2))
+}
+
+/// Run fib on `topo`; `with_bubbles` picks bubble scheduler + bubbles
+/// vs AFS + loose threads. Returns the makespan.
+pub fn run(topo: &Topology, with_bubbles: bool, p: &FibParams) -> u64 {
+    let sched: Arc<dyn crate::sched::Scheduler> = if with_bubbles {
+        Arc::new(BubbleScheduler::new(BubbleConfig {
+            default_burst: pair_burst_level(topo),
+            ..BubbleConfig::default()
+        }))
+    } else {
+        crate::sched::baselines::make_default(crate::config::SchedKind::Afs)
+    };
+    let mut e = super::engine_with(topo, sched, SimConfig::default());
+    build(&mut e, with_bubbles, p);
+    e.run().expect("fib run").total_time
+}
+
+/// Figure-5 data point: gain (%) of bubbles over the classical
+/// scheduler for a given thread count (fixed total problem size).
+pub fn gain_percent(topo: &Topology, n_threads: usize, p_base: &FibParams) -> f64 {
+    let p = FibParams { depth: FibParams::depth_for_threads(n_threads), ..p_base.clone() };
+    let t_classic = run(topo, false, &p);
+    let t_bubble = run(topo, true, &p);
+    100.0 * (t_classic as f64 - t_bubble as f64) / t_classic as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_count_math() {
+        assert_eq!(FibParams { depth: 3, ..Default::default() }.n_threads(), 15);
+        assert_eq!(FibParams::depth_for_threads(2), 1);
+        assert_eq!(FibParams::depth_for_threads(16), 4);
+        assert_eq!(FibParams::depth_for_threads(512), 9);
+    }
+
+    #[test]
+    fn work_scales_down_with_depth() {
+        let shallow = FibParams { depth: 2, ..Default::default() };
+        let deep = FibParams { depth: 6, ..Default::default() };
+        assert!(deep.leaf_work() < shallow.leaf_work());
+        // Total stays roughly constant (up to the min-chunk floor).
+        let total = |p: &FibParams| p.leaf_work() * p.n_leaves() as u64;
+        let ratio = total(&deep) as f64 / total(&shallow) as f64;
+        assert!((0.8..1.2).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn both_modes_complete() {
+        let topo = Topology::numa(2, 2);
+        let p = FibParams { depth: 3, ..Default::default() };
+        assert!(run(&topo, false, &p) > 0);
+        assert!(run(&topo, true, &p) > 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let topo = Topology::numa(2, 2);
+        let p = FibParams { depth: 3, ..Default::default() };
+        assert_eq!(run(&topo, true, &p), run(&topo, true, &p));
+    }
+
+    #[test]
+    fn bubbles_gain_on_numa_with_enough_threads() {
+        // Figure 5(b): on the NUMA machine the gain is clearly positive
+        // once the tree is deep enough to cover the machine.
+        let topo = Topology::numa(4, 4);
+        let g = gain_percent(&topo, 64, &FibParams::default());
+        assert!(g > 5.0, "expected positive gain, got {g:.1}%");
+    }
+
+    #[test]
+    fn pair_burst_levels() {
+        assert_eq!(pair_burst_level(&Topology::xeon_2x_ht()), BurstLevel::Depth(1));
+        assert_eq!(pair_burst_level(&Topology::numa(4, 4)), BurstLevel::Depth(1));
+        assert_eq!(pair_burst_level(&Topology::deep()), BurstLevel::Depth(3));
+    }
+}

@@ -1,0 +1,67 @@
+//! Application workloads from the paper's evaluation (§5).
+//!
+//! * [`conduction`] / [`advection`] — Pérache's heat-conduction and
+//!   advection simulations (Table 2): parallel stripe compute +
+//!   global barrier cycles, run as *Simple* / *Bound* / *Bubbles*.
+//! * [`fib`] — the divide-and-conquer fibonacci test-case (Figure 5):
+//!   recursive thread creation with and without structure-mirroring
+//!   bubbles.
+//! * [`amr`] — the paper's stated future workload (§5.2): Adaptive Mesh
+//!   Refinement-like *imbalanced* stripes, exercising bubble
+//!   regeneration.
+
+pub mod advection;
+pub mod amr;
+pub mod conduction;
+pub mod fib;
+
+use std::sync::Arc;
+
+use crate::config::SchedKind;
+use crate::sched::baselines::make_default;
+use crate::sched::{BubbleConfig, BubbleScheduler, Scheduler, System};
+use crate::sim::{CostModel, SimConfig, SimEngine};
+use crate::topology::{DistanceModel, Topology};
+
+/// How the application presents itself to the execution environment
+/// (the three Table-2 rows besides Sequential).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StructureMode {
+    /// Loose threads on an opportunist scheduler ("Simple").
+    Simple,
+    /// Threads explicitly pinned round-robin ("Bound", non-portable).
+    Bound,
+    /// Topology-mirroring bubbles on the bubble scheduler ("Bubbles").
+    Bubbles,
+}
+
+impl StructureMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            StructureMode::Simple => "Simple",
+            StructureMode::Bound => "Bound",
+            StructureMode::Bubbles => "Bubbles",
+        }
+    }
+}
+
+/// Build a ready-to-run engine for a structure mode on a machine:
+/// Simple → SS, Bound → Bound, Bubbles → bubble scheduler.
+pub fn engine_for(topo: &Topology, mode: StructureMode) -> SimEngine {
+    engine_with(topo, scheduler_for(mode), SimConfig::default())
+}
+
+/// Scheduler used by each structure mode.
+pub fn scheduler_for(mode: StructureMode) -> Arc<dyn Scheduler> {
+    match mode {
+        StructureMode::Simple => make_default(SchedKind::Ss),
+        StructureMode::Bound => make_default(SchedKind::Bound),
+        StructureMode::Bubbles => Arc::new(BubbleScheduler::new(BubbleConfig::default())),
+    }
+}
+
+/// Engine over an explicit scheduler (ablations sweep these).
+pub fn engine_with(topo: &Topology, sched: Arc<dyn Scheduler>, cfg: SimConfig) -> SimEngine {
+    let sys = Arc::new(System::new(Arc::new(topo.clone())));
+    SimEngine::new(sys, sched, CostModel::new(DistanceModel::default()), cfg)
+}

@@ -1,0 +1,216 @@
+//! criterion-lite: a minimal benchmark harness (criterion is not
+//! vendored in this offline environment).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```no_run
+//! use bubbles::bench::Bench;
+//! let mut b = Bench::new("table1");
+//! b.bench("yield", || { /* measured body */ });
+//! b.report();
+//! ```
+//!
+//! Methodology: warmup iterations, then `samples` timed batches; each
+//! batch auto-sizes its iteration count so a batch lasts ≥ `min_batch`;
+//! Tukey outlier trimming; mean/median/σ/p95 in the report. Honors
+//! `BENCH_FAST=1` for smoke runs.
+
+use std::time::Instant;
+
+use crate::util::fmt::{ns, Table};
+use crate::util::stats::{trim_outliers, Summary};
+
+/// One benchmark's result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration time summary (nanoseconds).
+    pub summary: Summary,
+    pub iters_per_sample: u64,
+}
+
+/// A named group of benchmarks.
+pub struct Bench {
+    group: String,
+    warmup_batches: usize,
+    samples: usize,
+    /// Minimum batch duration, ns.
+    min_batch_ns: u128,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    /// Create a bench group with default methodology (fast mode via
+    /// env `BENCH_FAST=1` cuts samples for CI smoke runs).
+    pub fn new(group: impl Into<String>) -> Bench {
+        let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        Bench {
+            group: group.into(),
+            warmup_batches: if fast { 1 } else { 3 },
+            samples: if fast { 10 } else { 40 },
+            min_batch_ns: if fast { 200_000 } else { 2_000_000 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Override the sample count.
+    pub fn samples(mut self, n: usize) -> Bench {
+        self.samples = n;
+        self
+    }
+
+    /// Measure a closure. The closure is the *iteration body*; batching
+    /// is automatic.
+    pub fn bench(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &BenchResult {
+        // Determine batch size: grow until a batch exceeds min_batch.
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos();
+            if dt >= self.min_batch_ns || iters >= 1 << 24 {
+                break;
+            }
+            // Aim directly at the target with 2x headroom.
+            let scale = (self.min_batch_ns as f64 / dt.max(1) as f64 * 2.0).ceil();
+            iters = (iters as f64 * scale.clamp(2.0, 1024.0)) as u64;
+        }
+        for _ in 0..self.warmup_batches {
+            for _ in 0..iters {
+                f();
+            }
+        }
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let kept = trim_outliers(&per_iter, 3.0);
+        self.results.push(BenchResult {
+            name: name.into(),
+            summary: Summary::of(&kept),
+            iters_per_sample: iters,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Measure a closure that returns its own duration in ns (for
+    /// bodies that must exclude setup time).
+    pub fn bench_timed(
+        &mut self,
+        name: impl Into<String>,
+        mut f: impl FnMut() -> f64,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_batches {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            samples.push(f());
+        }
+        let kept = trim_outliers(&samples, 3.0);
+        self.results.push(BenchResult {
+            name: name.into(),
+            summary: Summary::of(&kept),
+            iters_per_sample: 1,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Access collected results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the group report.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        let mut t = Table::new(&["name", "mean", "median", "p95", "stddev", "iters"]);
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                ns(r.summary.mean),
+                ns(r.summary.median),
+                ns(r.summary.p95),
+                ns(r.summary.stddev),
+                r.iters_per_sample.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+}
+
+/// Prevent the optimizer from discarding a value (ptr-read black box,
+/// same trick std::hint::black_box uses; we avoid the std one only on
+/// MSRV grounds — it exists here, so delegate).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new("test");
+        let r = b
+            .bench("spin50", || {
+                let mut acc = 0u64;
+                for i in 0..50 {
+                    acc = acc.wrapping_add(black_box(i));
+                }
+                black_box(acc);
+            })
+            .clone();
+        assert!(r.summary.mean > 0.0);
+        assert!(r.summary.mean < 100_000.0, "50 adds should be fast: {}", r.summary.mean);
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn bench_timed_collects_samples() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new("test");
+        let mut k = 0.0;
+        let r = b.bench_timed("fixed", || {
+            k += 1.0;
+            100.0 + k
+        });
+        assert!(r.summary.mean > 100.0);
+    }
+
+    #[test]
+    fn ordering_of_magnitudes() {
+        // A 10x heavier body must measure meaningfully slower.
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new("test");
+        let light = b
+            .bench("light", || {
+                let mut a = 0u64;
+                for i in 0..20u64 {
+                    a = a.wrapping_add(black_box(i));
+                }
+                black_box(a);
+            })
+            .summary
+            .mean;
+        let heavy = b
+            .bench("heavy", || {
+                let mut a = 0u64;
+                for i in 0..2000u64 {
+                    a = a.wrapping_add(black_box(i));
+                }
+                black_box(a);
+            })
+            .summary
+            .mean;
+        assert!(heavy > light * 3.0, "heavy {heavy} vs light {light}");
+    }
+}

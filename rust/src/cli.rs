@@ -1,0 +1,379 @@
+//! Command-line launcher (`repro <command>`): regenerates every paper
+//! table and figure, renders topologies, and runs config-driven
+//! experiments. Arg parsing is hand-rolled (clap is not vendored).
+
+use std::collections::HashMap;
+
+use crate::apps::amr::{AmrParams, SkewParams};
+use crate::apps::conduction::HeatParams;
+use crate::apps::fib::FibParams;
+use crate::config::ExperimentConfig;
+use crate::error::{Error, Result};
+use crate::experiments::{ablations, fig5, table1, table2};
+use crate::topology::Topology;
+
+/// Parsed command line: positional command + `--key value` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter();
+        args.command = it.next().cloned().unwrap_or_else(|| "help".to_string());
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .ok_or_else(|| Error::config(format!("--{key} needs a value")))?;
+                args.options.insert(key.to_string(), val.clone());
+            } else {
+                return Err(Error::config(format!("unexpected argument `{a}`")));
+            }
+        }
+        Ok(args)
+    }
+
+    /// Option accessor with default.
+    pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    fn machine(&self) -> Result<Topology> {
+        let name = self.get("machine", "numa-4x4");
+        Topology::preset(name)
+            .ok_or_else(|| Error::config(format!("unknown machine `{name}`; presets: {:?}", Topology::preset_names())))
+    }
+
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.options.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// Top-level dispatch. Returns the text to print.
+pub fn run(argv: &[String]) -> Result<String> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => Ok(HELP.to_string()),
+        "topology" => cmd_topology(&args),
+        "table1" => cmd_table1(&args),
+        "table2" => cmd_table2(&args),
+        "fig5" => cmd_fig5(&args),
+        "ablations" => cmd_ablations(&args),
+        "run" => cmd_run(&args),
+        "analyze" => cmd_analyze(&args),
+        "evolve" => cmd_evolve(&args),
+        other => Err(Error::config(format!("unknown command `{other}`; try `repro help`"))),
+    }
+}
+
+const HELP: &str = "\
+repro — reproduction of 'A Flexible Thread Scheduler for Hierarchical
+Multiprocessor Machines' (Thibault, 2005)
+
+USAGE: repro <command> [--key value ...]
+
+COMMANDS
+  topology   render a machine tree (Figure 2)    [--machine numa-4x4]
+  table1     scheduler micro-costs (Table 1)
+  table2     conduction+advection rows (Table 2) [--machine, --scale 1.0]
+  fig5       fibonacci bubble gain (Figure 5)    [--machine xeon-2x-ht|numa-4x4]
+  ablations  design-choice sweeps                [--which burst|regen|zoo|all]
+  run        config-driven simulation            [--config file.toml]
+  analyze    traced run + scheduler analysis     [--machine, --app, --sched]
+  evolve     traced bubble evolution (Figure 3)  [--machine numa-4x4]
+  help       this text
+
+MACHINES: xeon-2x-ht, numa-4x4 (novascale), deep, smp-<n>, numa-<a>x<b>
+";
+
+fn cmd_topology(args: &Args) -> Result<String> {
+    let t = args.machine()?;
+    Ok(format!(
+        "machine `{}`: {} CPUs, {} NUMA nodes, {} lists, depth {}\n\n{}",
+        t.name(),
+        t.n_cpus(),
+        t.n_numa(),
+        t.n_components(),
+        t.depth(),
+        t.render()
+    ))
+}
+
+fn cmd_table1(_args: &Args) -> Result<String> {
+    let user_switch = table1::fiber_switch_ns();
+    let os_switch = table1::os_switch_ns();
+    let t = table1::run(user_switch, os_switch);
+    Ok(format!(
+        "Table 1 — scheduler micro-costs on this testbed\n\
+         (paper, 2.66 GHz Xeon: marcel 186/84 ns, bubbles 250/148 ns, NPTL 672/1488 ns)\n\n{}",
+        t.render()
+    ))
+}
+
+fn cmd_table2(args: &Args) -> Result<String> {
+    let topo = args.machine()?;
+    let scale = args.f64("scale", 1.0);
+    let t2 = table2::run(&topo, scale);
+    Ok(format!(
+        "Table 2 — conduction & advection on `{}` (scale {scale})\n\
+         (paper: Simple 10.58/9.11, Bound 15.82/12.40, Bubbles 15.80/12.40)\n\n{}",
+        topo.name(),
+        t2.render()
+    ))
+}
+
+fn cmd_fig5(args: &Args) -> Result<String> {
+    let topo = args.machine()?;
+    let counts: Vec<usize> = match args.options.get("threads") {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|_| Error::config(format!("bad thread count `{s}`"))))
+            .collect::<Result<_>>()?,
+        None => fig5::default_thread_counts(),
+    };
+    let series = fig5::run(&topo, &counts, &FibParams::default());
+    Ok(format!(
+        "Figure 5 — fibonacci gain from bubbles\n\
+         (paper: (a) HT Xeon 30-40% from 16 threads; (b) NUMA 40% @32 → 80% @512)\n\n{}",
+        series.render()
+    ))
+}
+
+fn cmd_ablations(args: &Args) -> Result<String> {
+    let topo = args.machine()?;
+    let which = args.get("which", "all");
+    let mut out = String::new();
+    if which == "burst" || which == "all" {
+        out.push_str(&ablations::burst_level(&topo, &HeatParams::conduction()).render());
+        out.push('\n');
+    }
+    if which == "regen" || which == "all" {
+        out.push_str(&ablations::regeneration_skewed(&topo, &SkewParams::default()).render());
+        out.push('\n');
+        out.push_str(
+            &ablations::regeneration(
+                &topo,
+                &AmrParams { cycles: 12, redraw_every: 3, ..Default::default() },
+            )
+            .render(),
+        );
+        out.push('\n');
+    }
+    if which == "zoo" || which == "all" {
+        out.push_str(&ablations::scheduler_zoo(&topo, &HeatParams::conduction()).render());
+        out.push('\n');
+    }
+    if which == "memory" || which == "all" {
+        out.push_str(&ablations::memory_policy(&topo, &HeatParams::conduction()).render());
+        out.push('\n');
+    }
+    if out.is_empty() {
+        return Err(Error::config(format!("unknown ablation `{which}`")));
+    }
+    Ok(out)
+}
+
+fn cmd_run(args: &Args) -> Result<String> {
+    let cfg = match args.options.get("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    let topo = cfg.machine.build_topology()?;
+    let sched = crate::sched::baselines::make(&cfg.sched);
+    let mut engine = crate::apps::engine_with(&topo, sched, crate::sim::SimConfig::default());
+    let w = &cfg.workload;
+    match w.app.as_str() {
+        "conduction" | "advection" => {
+            let p = HeatParams {
+                threads: w.threads,
+                cycles: w.cycles,
+                work: w.work,
+                mem_fraction: w.mem_fraction,
+            };
+            // Structure follows the scheduler choice: bubbles for the
+            // bubble scheduler, loose threads otherwise.
+            let mode = if cfg.sched.kind == crate::config::SchedKind::Bubble {
+                crate::apps::StructureMode::Bubbles
+            } else {
+                crate::apps::StructureMode::Simple
+            };
+            crate::apps::conduction::build(&mut engine, mode, &p);
+        }
+        "fib" => {
+            let p = FibParams {
+                depth: FibParams::depth_for_threads(w.threads),
+                ..FibParams::default()
+            };
+            crate::apps::fib::build(
+                &mut engine,
+                cfg.sched.kind == crate::config::SchedKind::Bubble,
+                &p,
+            );
+        }
+        "amr" => {
+            let p = AmrParams {
+                threads: w.threads,
+                cycles: w.cycles,
+                seed: w.seed,
+                mem_fraction: w.mem_fraction,
+                ..Default::default()
+            };
+            let mode = if cfg.sched.kind == crate::config::SchedKind::Bubble {
+                crate::apps::StructureMode::Bubbles
+            } else {
+                crate::apps::StructureMode::Simple
+            };
+            crate::apps::amr::build(&mut engine, mode, &p);
+        }
+        other => return Err(Error::config(format!("unknown app `{other}`"))),
+    }
+    let report = engine.run()?;
+    Ok(format!(
+        "app `{}` under `{}` on `{}`\nmakespan: {} cycles  utilisation: {:.3}\n\n{}",
+        w.app,
+        report.sched,
+        topo.name(),
+        crate::util::fmt::cycles(report.total_time),
+        report.utilisation(),
+        engine.sys.metrics.report()
+    ))
+}
+
+fn cmd_analyze(args: &Args) -> Result<String> {
+    // Traced run + the §6 analysis tools.
+    let topo = args.machine()?;
+    let sched_name = args.get("sched", "bubble");
+    let kind = crate::config::SchedKind::parse(sched_name)
+        .ok_or_else(|| Error::config(format!("unknown scheduler `{sched_name}`")))?;
+    let sched = crate::sched::baselines::make(&crate::config::SchedConfig {
+        kind,
+        ..Default::default()
+    });
+    let mut e = crate::apps::engine_with(&topo, sched, crate::sim::SimConfig::default());
+    e.sys.trace.set_enabled(true);
+    let mode = if kind == crate::config::SchedKind::Bubble {
+        crate::apps::StructureMode::Bubbles
+    } else {
+        crate::apps::StructureMode::Simple
+    };
+    let p = HeatParams {
+        threads: topo.n_cpus(),
+        cycles: 10,
+        ..HeatParams::conduction()
+    };
+    match args.get("app", "conduction") {
+        "conduction" => {
+            crate::apps::conduction::build(&mut e, mode, &p);
+        }
+        "amr" => {
+            crate::apps::amr::build(&mut e, mode, &AmrParams::default());
+        }
+        other => return Err(Error::config(format!("unknown app `{other}`"))),
+    }
+    let rep = e.run()?;
+    let analysis = crate::trace::analysis::analyse(&e.sys.trace.records());
+    Ok(format!(
+        "traced `{}` under `{}` on `{}`: makespan {} cycles\n\n{}",
+        args.get("app", "conduction"),
+        sched_name,
+        topo.name(),
+        crate::util::fmt::cycles(rep.total_time),
+        analysis.render(&topo)
+    ))
+}
+
+fn cmd_evolve(args: &Args) -> Result<String> {
+    // Figure 3 narrated: build a two-level bubble hierarchy, pick from
+    // CPU 0, dump the trace.
+    use crate::marcel::Marcel;
+    use crate::sched::Scheduler;
+    let topo = args.machine()?;
+    let m = Marcel::new(topo);
+    let sys = m.system().clone();
+    sys.trace.set_enabled(true);
+    let root = m.bubble_init();
+    for g in 0..2 {
+        let b = m.bubble_init();
+        for k in 0..2 {
+            let t = m.create_dontsched(format!("g{g}t{k}"));
+            m.bubble_inserttask(b, t);
+        }
+        m.bubble_insertbubble(root, b);
+    }
+    m.wake_up_bubble(root);
+    let sched = m.scheduler().clone();
+    let mut picked = Vec::new();
+    for c in 0..sys.topo.n_cpus() {
+        if let Some(t) = sched.pick(&sys, crate::topology::CpuId(c)) {
+            picked.push((c, sys.tasks.name(t)));
+        }
+    }
+    Ok(format!(
+        "Figure 3 — bubble evolution trace on `{}`\n\n{}\npicked: {:?}\n",
+        sys.topo.name(),
+        sys.trace.dump(),
+        picked
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_options() {
+        let a = Args::parse(&argv("fig5 --machine deep --threads 2,4")).unwrap();
+        assert_eq!(a.command, "fig5");
+        assert_eq!(a.get("machine", "x"), "deep");
+        assert!(Args::parse(&argv("x --flag")).is_err());
+        assert!(Args::parse(&argv("x stray")).is_err());
+    }
+
+    #[test]
+    fn help_and_errors() {
+        assert!(run(&argv("help")).unwrap().contains("table2"));
+        assert!(run(&argv("nope")).is_err());
+        assert!(run(&argv("topology --machine warp")).is_err());
+    }
+
+    #[test]
+    fn topology_command() {
+        let out = run(&argv("topology --machine deep")).unwrap();
+        assert!(out.contains("16 CPUs"));
+        assert!(out.contains("Smt"));
+    }
+
+    #[test]
+    fn evolve_traces_burst() {
+        let out = run(&argv("evolve --machine numa-2x2")).unwrap();
+        assert!(out.contains("Burst"), "{out}");
+        assert!(out.contains("picked"));
+    }
+
+    #[test]
+    fn run_with_default_config_small() {
+        // Use an inline config via a temp file.
+        let path = std::env::temp_dir().join("bubbles-cli-test.toml");
+        std::fs::write(
+            &path,
+            "[machine]\npreset = \"numa-2x2\"\n[workload]\napp = \"conduction\"\nthreads = 4\ncycles = 3\nwork = 100000\n",
+        )
+        .unwrap();
+        let out = run(&[
+            "run".to_string(),
+            "--config".to_string(),
+            path.to_string_lossy().to_string(),
+        ])
+        .unwrap();
+        assert!(out.contains("makespan"), "{out}");
+    }
+}

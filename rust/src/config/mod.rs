@@ -1,0 +1,13 @@
+//! Configuration system.
+//!
+//! The `toml`/`serde` crates are not vendored in this environment, so
+//! [`toml::parse`] implements the TOML subset the framework needs
+//! (sections, key = value with strings / ints / floats / bools / flat
+//! arrays, comments), and [`schema`] maps parsed values onto typed
+//! experiment configs.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{ExperimentConfig, MachineConfig, SchedConfig, SchedKind, WorkloadConfig};
+pub use toml::{parse, Value};

@@ -1,0 +1,427 @@
+//! Typed experiment configuration on top of the TOML-subset parser.
+
+use super::toml::{Doc, Value};
+use crate::error::{Error, Result};
+use crate::sched::BubbleConfig;
+use crate::task::BurstLevel;
+use crate::topology::{DistanceModel, LevelKind, TopoBuilder, Topology};
+
+/// Machine description: a preset name or explicit levels.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub preset: Option<String>,
+    /// Explicit `["numa:4", "core:4"]`-style level list.
+    pub levels: Vec<(LevelKind, usize)>,
+    pub numa_factor: f64,
+    pub migration_penalty: u64,
+    pub smt_contention: f64,
+    pub smt_symbiosis: f64,
+    pub cache_line_penalty: f64,
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        let d = DistanceModel::default();
+        MachineConfig {
+            preset: Some("numa-4x4".into()),
+            levels: Vec::new(),
+            numa_factor: d.numa_factor,
+            migration_penalty: d.migration_penalty_per_level,
+            smt_contention: d.smt_contention,
+            smt_symbiosis: d.smt_symbiosis,
+            cache_line_penalty: d.cache_line_penalty,
+        }
+    }
+}
+
+impl MachineConfig {
+    /// Instantiate the topology.
+    pub fn build_topology(&self) -> Result<Topology> {
+        if let Some(p) = &self.preset {
+            return Topology::preset(p)
+                .ok_or_else(|| Error::config(format!("unknown machine preset `{p}`")));
+        }
+        if self.levels.is_empty() {
+            return Err(Error::config("machine: no preset and no levels"));
+        }
+        let mut b = TopoBuilder::new("custom");
+        for &(kind, arity) in &self.levels {
+            b = b.split(kind, arity);
+        }
+        b.build()
+    }
+
+    /// Instantiate the cost distances.
+    pub fn distance_model(&self) -> DistanceModel {
+        DistanceModel {
+            numa_factor: self.numa_factor,
+            migration_penalty_per_level: self.migration_penalty,
+            smt_contention: self.smt_contention,
+            smt_symbiosis: self.smt_symbiosis,
+            cache_line_penalty: self.cache_line_penalty,
+        }
+    }
+}
+
+/// Which scheduler to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    Bubble,
+    /// Self-Scheduling: single global list (§2.2).
+    Ss,
+    /// Guided Self-Scheduling.
+    Gss,
+    /// Trapezoid Self-Scheduling.
+    Tss,
+    /// Affinity Scheduling: per-CPU lists + steal.
+    Afs,
+    /// Locality-based Dynamic Scheduling: locality-aware steal.
+    Lds,
+    /// Clustered AFS: √p groups aligned to NUMA nodes.
+    Cafs,
+    /// Hierarchical AFS: idle group steals from most loaded group.
+    Hafs,
+    /// Predetermined binding (§2.1) — the Table-2 "Bound" row.
+    Bound,
+    /// Ousterhout gang scheduling (§3.1).
+    Gang,
+}
+
+impl SchedKind {
+    pub fn parse(s: &str) -> Option<SchedKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "bubble" | "bubbles" => SchedKind::Bubble,
+            "ss" | "simple" => SchedKind::Ss,
+            "gss" => SchedKind::Gss,
+            "tss" => SchedKind::Tss,
+            "afs" => SchedKind::Afs,
+            "lds" => SchedKind::Lds,
+            "cafs" => SchedKind::Cafs,
+            "hafs" => SchedKind::Hafs,
+            "bound" => SchedKind::Bound,
+            "gang" => SchedKind::Gang,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [SchedKind] {
+        &[
+            SchedKind::Bubble,
+            SchedKind::Ss,
+            SchedKind::Gss,
+            SchedKind::Tss,
+            SchedKind::Afs,
+            SchedKind::Lds,
+            SchedKind::Cafs,
+            SchedKind::Hafs,
+            SchedKind::Bound,
+            SchedKind::Gang,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedKind::Bubble => "bubble",
+            SchedKind::Ss => "ss",
+            SchedKind::Gss => "gss",
+            SchedKind::Tss => "tss",
+            SchedKind::Afs => "afs",
+            SchedKind::Lds => "lds",
+            SchedKind::Cafs => "cafs",
+            SchedKind::Hafs => "hafs",
+            SchedKind::Bound => "bound",
+            SchedKind::Gang => "gang",
+        }
+    }
+}
+
+/// Scheduler tunables.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    pub kind: SchedKind,
+    pub burst: BurstLevel,
+    pub idle_regen: bool,
+    pub thread_steal: bool,
+    pub timeslice: Option<u64>,
+    pub regen_hysteresis: u64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        let b = BubbleConfig::default();
+        SchedConfig {
+            kind: SchedKind::Bubble,
+            burst: b.default_burst,
+            idle_regen: b.idle_regen,
+            thread_steal: b.thread_steal,
+            timeslice: b.default_timeslice,
+            regen_hysteresis: b.regen_hysteresis,
+        }
+    }
+}
+
+impl SchedConfig {
+    /// Bubble-scheduler tunables derived from this config.
+    pub fn bubble_config(&self) -> BubbleConfig {
+        BubbleConfig {
+            default_burst: self.burst,
+            idle_regen: self.idle_regen,
+            thread_steal: self.thread_steal,
+            default_timeslice: self.timeslice,
+            regen_hysteresis: self.regen_hysteresis,
+        }
+    }
+}
+
+/// Workload selection for `repro run`.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    /// "conduction", "advection", "fib", "amr".
+    pub app: String,
+    pub threads: usize,
+    pub cycles: usize,
+    /// Per-cycle compute cost in simulated cycles per thread.
+    pub work: u64,
+    /// Memory-bound fraction of the compute (NUMA-sensitive part).
+    pub mem_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            app: "conduction".into(),
+            threads: 16,
+            cycles: 100,
+            work: 1_000_000,
+            mem_fraction: 0.35,
+            seed: 1,
+        }
+    }
+}
+
+/// A full experiment file.
+#[derive(Debug, Clone, Default)]
+pub struct ExperimentConfig {
+    pub machine: MachineConfig,
+    pub sched: SchedConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl ExperimentConfig {
+    /// Load from TOML text.
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
+        let doc = super::toml::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.machine = machine_from(&doc)?;
+        cfg.sched = sched_from(&doc)?;
+        cfg.workload = workload_from(&doc)?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        ExperimentConfig::from_toml(&text)
+    }
+}
+
+fn get_str(doc: &Doc, key: &str) -> Option<String> {
+    doc.get(key).and_then(|v| v.as_str()).map(|s| s.to_string())
+}
+
+fn get_f64(doc: &Doc, key: &str) -> Option<f64> {
+    doc.get(key).and_then(|v| v.as_float())
+}
+
+fn get_u64(doc: &Doc, key: &str) -> Option<u64> {
+    doc.get(key).and_then(|v| v.as_int()).map(|i| i.max(0) as u64)
+}
+
+fn get_bool(doc: &Doc, key: &str) -> Option<bool> {
+    doc.get(key).and_then(|v| v.as_bool())
+}
+
+fn machine_from(doc: &Doc) -> Result<MachineConfig> {
+    let mut m = MachineConfig::default();
+    if let Some(p) = get_str(doc, "machine.preset") {
+        m.preset = Some(p);
+    }
+    if let Some(Value::Array(levels)) = doc.get("machine.levels") {
+        m.preset = None;
+        m.levels.clear();
+        for v in levels {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::config("machine.levels entries must be strings"))?;
+            let (kind, arity) = s
+                .split_once(':')
+                .ok_or_else(|| Error::config(format!("level `{s}` must be `kind:arity`")))?;
+            let kind = LevelKind::parse(kind)
+                .ok_or_else(|| Error::config(format!("unknown level kind `{kind}`")))?;
+            let arity: usize = arity
+                .parse()
+                .map_err(|_| Error::config(format!("bad arity in `{s}`")))?;
+            m.levels.push((kind, arity));
+        }
+    }
+    if let Some(f) = get_f64(doc, "machine.numa_factor") {
+        m.numa_factor = f;
+    }
+    if let Some(p) = get_u64(doc, "machine.migration_penalty") {
+        m.migration_penalty = p;
+    }
+    if let Some(f) = get_f64(doc, "machine.smt_contention") {
+        m.smt_contention = f;
+    }
+    if let Some(f) = get_f64(doc, "machine.smt_symbiosis") {
+        m.smt_symbiosis = f;
+    }
+    if let Some(f) = get_f64(doc, "machine.cache_line_penalty") {
+        m.cache_line_penalty = f;
+    }
+    Ok(m)
+}
+
+fn sched_from(doc: &Doc) -> Result<SchedConfig> {
+    let mut s = SchedConfig::default();
+    if let Some(kind) = get_str(doc, "sched.kind") {
+        s.kind = SchedKind::parse(&kind)
+            .ok_or_else(|| Error::config(format!("unknown scheduler `{kind}`")))?;
+    }
+    if let Some(b) = get_str(doc, "sched.burst") {
+        s.burst = match b.as_str() {
+            "leaf" => BurstLevel::Leaf,
+            "immediate" => BurstLevel::Immediate,
+            other => {
+                if let Some(d) = other.strip_prefix("depth:") {
+                    BurstLevel::Depth(
+                        d.parse().map_err(|_| Error::config("bad burst depth"))?,
+                    )
+                } else {
+                    BurstLevel::Kind(
+                        LevelKind::parse(other)
+                            .ok_or_else(|| Error::config(format!("bad burst level `{other}`")))?,
+                    )
+                }
+            }
+        };
+    }
+    if let Some(b) = get_bool(doc, "sched.idle_regen") {
+        s.idle_regen = b;
+    }
+    if let Some(b) = get_bool(doc, "sched.thread_steal") {
+        s.thread_steal = b;
+    }
+    if let Some(t) = get_u64(doc, "sched.timeslice") {
+        s.timeslice = if t == 0 { None } else { Some(t) };
+    }
+    if let Some(h) = get_u64(doc, "sched.regen_hysteresis") {
+        s.regen_hysteresis = h;
+    }
+    Ok(s)
+}
+
+fn workload_from(doc: &Doc) -> Result<WorkloadConfig> {
+    let mut w = WorkloadConfig::default();
+    if let Some(a) = get_str(doc, "workload.app") {
+        w.app = a;
+    }
+    if let Some(t) = get_u64(doc, "workload.threads") {
+        w.threads = t as usize;
+    }
+    if let Some(c) = get_u64(doc, "workload.cycles") {
+        w.cycles = c as usize;
+    }
+    if let Some(wk) = get_u64(doc, "workload.work") {
+        w.work = wk;
+    }
+    if let Some(f) = get_f64(doc, "workload.mem_fraction") {
+        w.mem_fraction = f;
+    }
+    if let Some(sd) = get_u64(doc, "workload.seed") {
+        w.seed = sd;
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        let cfg = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(cfg.sched.kind, SchedKind::Bubble);
+        let t = cfg.machine.build_topology().unwrap();
+        assert_eq!(t.n_cpus(), 16);
+    }
+
+    #[test]
+    fn full_file() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [machine]
+            preset = "deep"
+            numa_factor = 2.5
+            [sched]
+            kind = "hafs"
+            [workload]
+            app = "fib"
+            threads = 64
+            seed = 9
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.sched.kind, SchedKind::Hafs);
+        assert_eq!(cfg.machine.build_topology().unwrap().name(), "deep");
+        assert_eq!(cfg.workload.threads, 64);
+        assert_eq!(cfg.machine.distance_model().numa_factor, 2.5);
+    }
+
+    #[test]
+    fn explicit_levels() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [machine]
+            levels = ["numa:2", "die:2", "core:2"]
+            "#,
+        )
+        .unwrap();
+        let t = cfg.machine.build_topology().unwrap();
+        assert_eq!(t.n_cpus(), 8);
+        assert_eq!(t.depth(), 4);
+    }
+
+    #[test]
+    fn burst_level_forms() {
+        for (txt, want) in [
+            ("leaf", BurstLevel::Leaf),
+            ("immediate", BurstLevel::Immediate),
+            ("numa", BurstLevel::Kind(LevelKind::NumaNode)),
+            ("depth:2", BurstLevel::Depth(2)),
+        ] {
+            let cfg = ExperimentConfig::from_toml(&format!("[sched]\nburst = \"{txt}\""))
+                .unwrap();
+            assert_eq!(cfg.sched.burst, want);
+        }
+    }
+
+    #[test]
+    fn bad_values_error() {
+        assert!(ExperimentConfig::from_toml("[sched]\nkind = \"nope\"").is_err());
+        assert!(ExperimentConfig::from_toml("[machine]\npreset = \"nope\"")
+            .unwrap()
+            .machine
+            .build_topology()
+            .is_err());
+        assert!(ExperimentConfig::from_toml("[machine]\nlevels = [\"core\"]").is_err());
+    }
+
+    #[test]
+    fn sched_kind_parse_all() {
+        for k in SchedKind::all() {
+            assert_eq!(SchedKind::parse(k.label()), Some(*k));
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! A small TOML-subset parser.
+//!
+//! Supported: `[section]` headers (dotted names allowed), `key = value`
+//! with strings (`"..."`), integers, floats, booleans, and flat arrays
+//! of those; `#` comments; blank lines. Unsupported TOML (multi-line
+//! strings, inline tables, dates) is rejected with a line-numbered
+//! error.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: keys are `"section.key"` (top-level keys have no
+/// section prefix).
+pub type Doc = BTreeMap<String, Value>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| err(ln, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(ln, "empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| err(ln, "expected `key = value`"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(ln, "empty key"));
+        }
+        let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(ln, &m))?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if doc.insert(full.clone(), val).is_some() {
+            return Err(err(ln, &format!("duplicate key `{full}`")));
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("escaped quotes are not supported".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: std::result::Result<Vec<Value>, String> =
+            split_array(inner)?.iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Split a flat array body on commas (strings may contain commas).
+fn split_array(s: &str) -> std::result::Result<Vec<String>, String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(cur.trim().to_string());
+                cur.clear();
+            }
+            '[' | ']' if !in_str => return Err("nested arrays are not supported".into()),
+            _ => cur.push(c),
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur.trim().to_string());
+    }
+    Ok(parts)
+}
+
+fn err(line0: usize, msg: &str) -> Error {
+    Error::config(format!("line {}: {msg}", line0 + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+            # experiment
+            title = "table2"
+            [machine]
+            preset = "numa-4x4"
+            numa_factor = 3.0
+            [sched]
+            kind = "bubble"
+            idle_regen = true
+            slice = 1_000_000
+            levels = ["numa", "core"]
+            empty = []
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc["title"], Value::Str("table2".into()));
+        assert_eq!(doc["machine.preset"], Value::Str("numa-4x4".into()));
+        assert_eq!(doc["machine.numa_factor"], Value::Float(3.0));
+        assert_eq!(doc["sched.kind"], Value::Str("bubble".into()));
+        assert_eq!(doc["sched.idle_regen"], Value::Bool(true));
+        assert_eq!(doc["sched.slice"], Value::Int(1_000_000));
+        assert_eq!(
+            doc["sched.levels"],
+            Value::Array(vec![Value::Str("numa".into()), Value::Str("core".into())])
+        );
+        assert_eq!(doc["sched.empty"], Value::Array(vec![]));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let doc = parse("x = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc["x"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn negative_and_float_forms() {
+        let doc = parse("a = -3\nb = 2.5\nc = 1e3").unwrap();
+        assert_eq!(doc["a"], Value::Int(-3));
+        assert_eq!(doc["b"], Value::Float(2.5));
+        assert_eq!(doc["c"], Value::Float(1000.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nb = @").unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("= 3").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("x = [1, [2]]").is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Str("s".into()).as_int(), None);
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+    }
+}

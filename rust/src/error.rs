@@ -1,0 +1,55 @@
+//! Library error type.
+
+use thiserror::Error;
+
+/// Unified error for the bubbles library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Configuration file / value errors (config parser, schema).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Topology construction errors (empty machine, bad arity, ...).
+    #[error("topology error: {0}")]
+    Topology(String),
+
+    /// Scheduler state violations (task not found, bad transition, ...).
+    #[error("scheduler error: {0}")]
+    Sched(String),
+
+    /// Simulation engine errors.
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    /// PJRT runtime / artifact errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// XLA crate errors (compile/execute).
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O errors (artifact files, traces).
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Library result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand constructor for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    /// Shorthand constructor for scheduler errors.
+    pub fn sched(msg: impl Into<String>) -> Self {
+        Error::Sched(msg.into())
+    }
+}

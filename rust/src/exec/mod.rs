@@ -1,0 +1,14 @@
+//! Native two-level executor: MARCEL's architecture for real.
+//!
+//! One worker OS thread per virtual processor ("it binds one kernel
+//! thread on each processor", §4), user-level [`fiber::Fiber`]s on
+//! top, and the *same* [`Scheduler`] implementations that drive the
+//! simulator deciding who runs where. Green threads block on a native
+//! barrier; the compute payload can be anything, including PJRT
+//! executions through [`crate::runtime::service::PjrtHandle`].
+
+pub mod fiber;
+mod worker;
+
+pub use fiber::{fiber_yield, yield_now, Fiber, YieldAction};
+pub use worker::{ExecReport, Executor, GreenApi};

@@ -1,0 +1,335 @@
+//! Worker pool: virtual processors running green threads under a
+//! pluggable scheduler.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::fiber::{Fiber, YieldAction};
+use crate::sched::{Scheduler, StopReason, System};
+use crate::task::TaskId;
+use crate::topology::CpuId;
+
+/// Barrier state shared between workers.
+#[derive(Debug, Default)]
+struct BarrierState {
+    parties: usize,
+    arrived: usize,
+    waiting: Vec<TaskId>,
+}
+
+/// Shared executor state.
+struct Inner {
+    sys: Arc<System>,
+    sched: Arc<dyn Scheduler>,
+    fibers: Mutex<HashMap<TaskId, Fiber>>,
+    barriers: Mutex<Vec<BarrierState>>,
+    live: AtomicUsize,
+    stop: AtomicBool,
+    /// Idle workers park here until work may be available.
+    idle: Mutex<()>,
+    idle_cv: Condvar,
+}
+
+/// API handed to green-thread bodies (thin facade over fiber yields).
+#[derive(Clone)]
+pub struct GreenApi {
+    inner: Arc<Inner>,
+}
+
+impl GreenApi {
+    /// Voluntary reschedule point.
+    pub fn yield_now(&self) {
+        super::fiber::yield_now();
+    }
+
+    /// Arrive at barrier `id` and wait for all parties.
+    pub fn barrier(&self, id: usize) {
+        super::fiber::fiber_yield(YieldAction::Barrier(id));
+    }
+
+    /// The system (topology, metrics) for introspection.
+    pub fn system(&self) -> &Arc<System> {
+        &self.inner.sys
+    }
+}
+
+/// Run report.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    /// Wall time of the whole run.
+    pub elapsed: std::time::Duration,
+    /// Green threads executed.
+    pub threads: usize,
+}
+
+/// The native executor.
+pub struct Executor {
+    inner: Arc<Inner>,
+    threads: usize,
+}
+
+impl Executor {
+    /// Build over a system + scheduler. One worker OS thread will be
+    /// spawned per topology CPU at [`Executor::run`].
+    pub fn new(sys: Arc<System>, sched: Arc<dyn Scheduler>) -> Executor {
+        Executor {
+            inner: Arc::new(Inner {
+                sys,
+                sched,
+                fibers: Mutex::new(HashMap::new()),
+                barriers: Mutex::new(Vec::new()),
+                live: AtomicUsize::new(0),
+                stop: AtomicBool::new(false),
+                idle: Mutex::new(()),
+                idle_cv: Condvar::new(),
+            }),
+            threads: 0,
+        }
+    }
+
+    /// Allocate a native barrier.
+    pub fn alloc_barrier(&self, parties: usize) -> usize {
+        let mut b = self.inner.barriers.lock().unwrap();
+        b.push(BarrierState { parties, arrived: 0, waiting: Vec::new() });
+        b.len() - 1
+    }
+
+    /// Register a green thread (task must already exist in the system,
+    /// e.g. created through [`crate::marcel::Marcel`]).
+    pub fn register(&mut self, task: TaskId, body: impl FnOnce(GreenApi) + Send + 'static) {
+        let api = GreenApi { inner: self.inner.clone() };
+        let fiber = Fiber::new(move || body(api));
+        self.inner.fibers.lock().unwrap().insert(task, fiber);
+        self.inner.live.fetch_add(1, Ordering::SeqCst);
+        self.threads += 1;
+    }
+
+    /// Convenience: create + register + wake a loose green thread.
+    pub fn spawn(
+        &mut self,
+        name: impl Into<String>,
+        body: impl FnOnce(GreenApi) + Send + 'static,
+    ) -> TaskId {
+        let t = self.inner.sys.tasks.new_thread(name, crate::task::PRIO_THREAD);
+        self.register(t, body);
+        self.inner.sched.wake(&self.inner.sys, t);
+        t
+    }
+
+    /// Wake a task (thread or bubble) through the scheduler.
+    pub fn wake(&self, task: TaskId) {
+        self.inner.sched.wake(&self.inner.sys, task);
+    }
+
+    /// Run until every registered green thread has exited. Spawns one
+    /// worker per topology CPU.
+    pub fn run(&mut self) -> ExecReport {
+        let t0 = Instant::now();
+        let n = self.inner.sys.topo.n_cpus();
+        let mut joins = Vec::with_capacity(n);
+        for c in 0..n {
+            let inner = self.inner.clone();
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("vcpu{c}"))
+                    .spawn(move || worker_loop(inner, CpuId(c)))
+                    .expect("spawn worker"),
+            );
+        }
+        for j in joins {
+            j.join().expect("worker panicked");
+        }
+        ExecReport { elapsed: t0.elapsed(), threads: self.threads }
+    }
+
+    /// The underlying system.
+    pub fn system(&self) -> &Arc<System> {
+        &self.inner.sys
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
+    loop {
+        if inner.live.load(Ordering::SeqCst) == 0 || inner.stop.load(Ordering::SeqCst) {
+            inner.idle_cv.notify_all();
+            return;
+        }
+        let Some(task) = inner.sched.pick(&inner.sys, cpu) else {
+            // Park briefly; a finishing/blocking thread notifies.
+            let guard = inner.idle.lock().unwrap();
+            let _ = inner
+                .idle_cv
+                .wait_timeout(guard, std::time::Duration::from_micros(200))
+                .unwrap();
+            continue;
+        };
+        // Take exclusive ownership of the fiber while it runs.
+        let mut fiber = {
+            let mut fibers = inner.fibers.lock().unwrap();
+            match fibers.remove(&task) {
+                Some(f) => f,
+                None => {
+                    // A task without a fiber body (shouldn't happen):
+                    // terminate it defensively.
+                    inner.sched.stop(&inner.sys, cpu, task, StopReason::Terminate);
+                    continue;
+                }
+            }
+        };
+        let action = fiber.resume();
+        match action {
+            YieldAction::Yield => {
+                inner.fibers.lock().unwrap().insert(task, fiber);
+                inner.sched.stop(&inner.sys, cpu, task, StopReason::Yield);
+            }
+            YieldAction::Barrier(id) => {
+                inner.fibers.lock().unwrap().insert(task, fiber);
+                let released = {
+                    let mut bars = inner.barriers.lock().unwrap();
+                    let bar = &mut bars[id];
+                    bar.arrived += 1;
+                    if bar.arrived == bar.parties {
+                        bar.arrived = 0;
+                        Some(std::mem::take(&mut bar.waiting))
+                    } else {
+                        bar.waiting.push(task);
+                        None
+                    }
+                };
+                match released {
+                    Some(waiters) => {
+                        inner.sys.trace.emit(
+                            inner.sys.now(),
+                            crate::trace::Event::BarrierRelease {
+                                id,
+                                waiters: waiters.len() + 1,
+                            },
+                        );
+                        // Last arriver yields; the blocked ones wake.
+                        inner.sched.stop(&inner.sys, cpu, task, StopReason::Yield);
+                        for w in waiters {
+                            inner.sched.wake(&inner.sys, w);
+                        }
+                        inner.idle_cv.notify_all();
+                    }
+                    None => {
+                        inner.sched.stop(&inner.sys, cpu, task, StopReason::Block);
+                    }
+                }
+            }
+            YieldAction::Exited => {
+                drop(fiber);
+                inner.sched.stop(&inner.sys, cpu, task, StopReason::Terminate);
+                inner.live.fetch_sub(1, Ordering::SeqCst);
+                inner.idle_cv.notify_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marcel::Marcel;
+    use crate::sched::{BubbleConfig, BubbleScheduler};
+    use crate::task::TaskState;
+    use crate::topology::Topology;
+    use std::sync::atomic::AtomicU64;
+
+    fn executor(topo: Topology) -> Executor {
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+        Executor::new(sys, sched)
+    }
+
+    #[test]
+    fn runs_loose_threads_to_completion() {
+        let mut ex = executor(Topology::smp(4));
+        let count = Arc::new(AtomicU64::new(0));
+        for i in 0..16 {
+            let c = count.clone();
+            ex.spawn(format!("t{i}"), move |api| {
+                for _ in 0..3 {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    api.yield_now();
+                }
+            });
+        }
+        let rep = ex.run();
+        assert_eq!(rep.threads, 16);
+        assert_eq!(count.load(Ordering::SeqCst), 48);
+    }
+
+    #[test]
+    fn native_barrier_synchronises() {
+        let mut ex = executor(Topology::smp(4));
+        let bar = ex.alloc_barrier(4);
+        let phase = Arc::new(AtomicU64::new(0));
+        let after = Arc::new(AtomicU64::new(0));
+        for i in 0..4 {
+            let (p, a) = (phase.clone(), after.clone());
+            ex.spawn(format!("t{i}"), move |api| {
+                p.fetch_add(1, Ordering::SeqCst);
+                api.barrier(bar);
+                // Everyone must have finished phase 1 by now.
+                a.fetch_max(p.load(Ordering::SeqCst), Ordering::SeqCst);
+            });
+        }
+        ex.run();
+        assert_eq!(after.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn bubble_structured_green_threads() {
+        // Full stack: marcel bubbles + bubble scheduler + native
+        // fibers on a NUMA topology.
+        let sys = Arc::new(System::new(Arc::new(Topology::numa(2, 2))));
+        let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+        let m = Marcel::over(sys.clone(), sched.clone());
+        let mut ex = Executor::new(sys, sched);
+        let done = Arc::new(AtomicU64::new(0));
+        let b = m.bubble_init();
+        for i in 0..4 {
+            let t = m.create_dontsched(format!("w{i}"));
+            m.bubble_inserttask(b, t);
+            let d = done.clone();
+            ex.register(t, move |api| {
+                d.fetch_add(1, Ordering::SeqCst);
+                api.yield_now();
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        m.wake_up_bubble(b);
+        ex.run();
+        assert_eq!(done.load(Ordering::SeqCst), 8);
+        assert_eq!(ex.system().tasks.state(b), TaskState::Terminated);
+    }
+
+    #[test]
+    fn barrier_cycles_under_bubbles() {
+        // Conduction-shaped native run: stripes + repeated barriers.
+        let sys = Arc::new(System::new(Arc::new(Topology::numa(2, 2))));
+        let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+        let m = Marcel::over(sys.clone(), sched.clone());
+        let mut ex = Executor::new(sys, sched);
+        let bar = ex.alloc_barrier(4);
+        let sum = Arc::new(AtomicU64::new(0));
+        let b = m.bubble_init();
+        for i in 0..4 {
+            let t = m.create_dontsched(format!("stripe{i}"));
+            m.bubble_inserttask(b, t);
+            let s = sum.clone();
+            ex.register(t, move |api| {
+                for _ in 0..5 {
+                    s.fetch_add(1, Ordering::SeqCst);
+                    api.barrier(bar);
+                }
+            });
+        }
+        m.wake_up_bubble(b);
+        ex.run();
+        assert_eq!(sum.load(Ordering::SeqCst), 20);
+    }
+}

@@ -1,0 +1,253 @@
+//! Ablations over the design choices DESIGN.md calls out.
+//!
+//! * **Bursting level** (§3.3.1): deep bursting favours affinity at the
+//!   risk of imbalance; high bursting favours processor use.
+//! * **Regeneration policy** (§3.3.3): none / idle-triggered /
+//!   timeslice, on the AMR-like imbalanced workload.
+//! * **Scheduler zoo**: every baseline on the Table-2 conduction
+//!   workload (who sits where between Simple and Bound).
+
+use std::sync::Arc;
+
+use crate::apps::amr::{self, AmrParams};
+use crate::apps::conduction::{self, HeatParams};
+use crate::apps::{engine_with, StructureMode};
+use crate::config::SchedKind;
+use crate::sched::baselines::make_default;
+use crate::sched::{BubbleConfig, BubbleScheduler};
+use crate::sim::SimConfig;
+use crate::task::BurstLevel;
+use crate::topology::Topology;
+use crate::util::fmt::Table;
+
+/// (label, makespan) pair list.
+#[derive(Debug, Clone)]
+pub struct Ablation {
+    pub title: String,
+    pub rows: Vec<(String, u64)>,
+}
+
+impl Ablation {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["variant", "makespan (Mcycles)"]);
+        for (name, time) in &self.rows {
+            t.row(&[name.clone(), format!("{:.2}", *time as f64 / 1e6)]);
+        }
+        format!("== {} ==\n{}", self.title, t.render())
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.rows.iter().find(|(n, _)| n == name).expect("row").1
+    }
+}
+
+/// Bursting-level sweep on the balanced conduction workload.
+pub fn burst_level(topo: &Topology, p: &HeatParams) -> Ablation {
+    let mut rows = Vec::new();
+    for (name, burst) in [
+        ("immediate (machine list)", BurstLevel::Immediate),
+        ("numa node", BurstLevel::Kind(crate::topology::LevelKind::NumaNode)),
+        ("leaf (per-cpu)", BurstLevel::Leaf),
+    ] {
+        let sched = Arc::new(BubbleScheduler::new(BubbleConfig {
+            default_burst: burst,
+            ..BubbleConfig::default()
+        }));
+        let mut e = engine_with(topo, sched, SimConfig::default());
+        conduction::build(&mut e, StructureMode::Bubbles, p);
+        rows.push((name.to_string(), e.run().expect("run").total_time));
+    }
+    Ablation { title: "bursting level (conduction)".into(), rows }
+}
+
+/// Regeneration-policy sweep on the *terminal imbalance* workload
+/// (§3.3.3: a light group finishes early, leaving its node idle).
+pub fn regeneration_skewed(topo: &Topology, p: &amr::SkewParams) -> Ablation {
+    let variants = regen_variants();
+    let mut rows = Vec::new();
+    for (name, cfg) in variants {
+        let sched = Arc::new(BubbleScheduler::new(cfg));
+        let mut e = engine_with(topo, sched, SimConfig::default());
+        amr::build_skewed(&mut e, p);
+        rows.push((name.to_string(), e.run().expect("run").total_time));
+    }
+    Ablation { title: "regeneration policy (terminal imbalance)".into(), rows }
+}
+
+fn regen_variants() -> Vec<(&'static str, BubbleConfig)> {
+    vec![
+        (
+            "none (no rebalance)",
+            BubbleConfig { idle_regen: false, thread_steal: false, ..BubbleConfig::default() },
+        ),
+        (
+            "idle regeneration",
+            BubbleConfig {
+                idle_regen: true,
+                thread_steal: false,
+                regen_hysteresis: 200_000,
+                ..BubbleConfig::default()
+            },
+        ),
+        (
+            "thread steal only",
+            BubbleConfig {
+                idle_regen: false,
+                thread_steal: true,
+                ..BubbleConfig::default()
+            },
+        ),
+        (
+            "idle + thread steal",
+            BubbleConfig {
+                idle_regen: true,
+                thread_steal: true,
+                regen_hysteresis: 5_000_000,
+                ..BubbleConfig::default()
+            },
+        ),
+        (
+            "timeslice regeneration",
+            BubbleConfig {
+                idle_regen: false,
+                thread_steal: false,
+                default_timeslice: Some(3_000_000),
+                ..BubbleConfig::default()
+            },
+        ),
+    ]
+}
+
+/// Regeneration-policy sweep on the barrier-coupled AMR workload.
+/// NB: the paper itself warns (§3.4) that preventive rebalancing "may
+/// still have side effects and lead to pathological situations
+/// (ping-ponging between tasks...)" — this sweep *measures* that: with
+/// every cycle barrier-coupled, moving whole groups cannot beat the
+/// per-cycle critical stripe, and regen churn shows up as overhead.
+pub fn regeneration(topo: &Topology, p: &AmrParams) -> Ablation {
+    let mut rows = Vec::new();
+    for (name, cfg) in regen_variants() {
+        let sched = Arc::new(BubbleScheduler::new(cfg));
+        let mut e = engine_with(topo, sched, SimConfig::default());
+        amr::build(&mut e, StructureMode::Bubbles, p);
+        rows.push((name.to_string(), e.run().expect("run").total_time));
+    }
+    Ablation { title: "regeneration policy (AMR imbalance)".into(), rows }
+}
+
+/// Memory allocation policy (§2.3): first-touch is what lets the
+/// affinity-preserving schedulers win; round-robin placement flattens
+/// everyone towards the remote-access average.
+pub fn memory_policy(topo: &Topology, p: &HeatParams) -> Ablation {
+    use crate::sim::AllocPolicy;
+    let mut rows = Vec::new();
+    for (pname, policy) in
+        [("first-touch", AllocPolicy::FirstTouch), ("round-robin", AllocPolicy::RoundRobin)]
+    {
+        for mode in [StructureMode::Bound, StructureMode::Bubbles, StructureMode::Simple] {
+            let mut e = crate::apps::engine_for(topo, mode);
+            conduction::build_with_policy(&mut e, mode, p, policy);
+            let t = e.run().expect("run").total_time;
+            rows.push((format!("{pname} / {}", mode.label()), t));
+        }
+    }
+    Ablation { title: "memory allocation policy (conduction)".into(), rows }
+}
+
+/// Every scheduler on the conduction workload (full zoo).
+pub fn scheduler_zoo(topo: &Topology, p: &HeatParams) -> Ablation {
+    let mut rows = Vec::new();
+    for kind in SchedKind::all() {
+        if *kind == SchedKind::Gang {
+            continue; // gang scheduling needs gangs, not loose stripes
+        }
+        let mode = match kind {
+            SchedKind::Bubble => StructureMode::Bubbles,
+            _ => StructureMode::Simple, // loose threads for baselines
+        };
+        let sched = match kind {
+            SchedKind::Bubble => Arc::new(BubbleScheduler::new(BubbleConfig::default())) as _,
+            _ => make_default(*kind),
+        };
+        let mut e = engine_with(topo, sched, SimConfig::default());
+        conduction::build(&mut e, mode, p);
+        rows.push((kind.label().to_string(), e.run().expect("run").total_time));
+    }
+    Ablation { title: "scheduler zoo (conduction)".into(), rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_heat() -> HeatParams {
+        HeatParams { threads: 8, cycles: 5, work: 300_000, mem_fraction: 0.35 }
+    }
+
+    #[test]
+    fn burst_level_deep_beats_immediate_on_balanced_load() {
+        let topo = Topology::numa(2, 4);
+        let a = burst_level(&topo, &small_heat());
+        // Affinity (numa/leaf burst) must not lose to machine-level
+        // scattering on a balanced workload.
+        assert!(a.get("numa node") <= a.get("immediate (machine list)"));
+    }
+
+    #[test]
+    fn regeneration_helps_terminal_imbalance() {
+        // §3.3.3's own scenario: a heavy group outlives the others.
+        // Rebalancing must clearly shorten the makespan.
+        let topo = Topology::numa(4, 4);
+        let p = amr::SkewParams::default();
+        let a = regeneration_skewed(&topo, &p);
+        let none = a.get("none (no rebalance)");
+        let idle = a.get("idle + thread steal");
+        assert!(
+            (idle as f64) < none as f64 * 0.8,
+            "rebalancing should clearly help: idle {idle} vs none {none}"
+        );
+    }
+
+    #[test]
+    fn regeneration_churn_is_bounded_on_coupled_cycles() {
+        // The §3.4 caveat measured: on barrier-coupled AMR cycles,
+        // rebalancing cannot beat the per-cycle critical stripe; it
+        // must at worst cost bounded overhead, not collapse.
+        let topo = Topology::numa(2, 2);
+        let p = AmrParams { threads: 8, cycles: 8, redraw_every: 4, ..Default::default() };
+        let a = regeneration(&topo, &p);
+        let none = a.get("none (no rebalance)") as f64;
+        let idle = a.get("idle regeneration") as f64;
+        assert!(idle < none * 1.5, "regen churn exploded: {idle} vs {none}");
+    }
+
+    #[test]
+    fn first_touch_beats_round_robin_for_affinity_schedulers() {
+        let topo = Topology::numa(4, 4);
+        let p = HeatParams { threads: 16, cycles: 6, work: 400_000, mem_fraction: 0.35 };
+        let a = memory_policy(&topo, &p);
+        // Bound with first-touch is all-local; with round-robin 3/4 of
+        // its accesses are remote — it must get clearly slower.
+        let ft = a.get("first-touch / Bound") as f64;
+        let rr = a.get("round-robin / Bound") as f64;
+        assert!(rr > ft * 1.2, "round-robin should hurt Bound: {rr} vs {ft}");
+        // Simple barely cares: it was scattering anyway.
+        let ft_s = a.get("first-touch / Simple") as f64;
+        let rr_s = a.get("round-robin / Simple") as f64;
+        let simple_delta = rr_s / ft_s;
+        let bound_delta = rr / ft;
+        assert!(
+            simple_delta < bound_delta,
+            "policy must matter less for Simple: {simple_delta} vs {bound_delta}"
+        );
+    }
+
+    #[test]
+    fn zoo_runs_every_scheduler() {
+        let topo = Topology::numa(2, 2);
+        let p = HeatParams { threads: 4, cycles: 3, work: 200_000, mem_fraction: 0.35 };
+        let a = scheduler_zoo(&topo, &p);
+        assert_eq!(a.rows.len(), SchedKind::all().len() - 1);
+        assert!(a.rows.iter().all(|(_, t)| *t > 0));
+    }
+}

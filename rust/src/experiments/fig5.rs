@@ -1,0 +1,85 @@
+//! Figure 5: fibonacci gain (%) from adding bubbles, vs thread count.
+//!
+//! Paper shape:
+//! * (a) dual HT Pentium IV Xeon — performance *hurt* with only a few
+//!   threads (bubble overhead), gain stabilising around 30–40 % from
+//!   16 threads.
+//! * (b) NUMA 4×4 Itanium II — 40 % at 32 threads, rising to ~80 % at
+//!   512 threads.
+
+use crate::apps::fib::{gain_percent, FibParams};
+use crate::topology::Topology;
+use crate::util::fmt::Table;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub threads: usize,
+    pub gain_percent: f64,
+}
+
+/// A full Figure-5 series for one machine.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub machine: String,
+    pub points: Vec<Point>,
+}
+
+/// Default sweep (paper x-axis: 2 … 512 threads).
+pub fn default_thread_counts() -> Vec<usize> {
+    vec![2, 4, 8, 16, 32, 64, 128, 256, 512]
+}
+
+/// Run the sweep on one machine.
+pub fn run(topo: &Topology, thread_counts: &[usize], p: &FibParams) -> Series {
+    let points = thread_counts
+        .iter()
+        .map(|&n| Point { threads: n, gain_percent: gain_percent(topo, n, p) })
+        .collect();
+    Series { machine: topo.name().to_string(), points }
+}
+
+impl Series {
+    /// Paper-style rendering (one row per thread count).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["threads", "gain %"]);
+        for pt in &self.points {
+            t.row(&[pt.threads.to_string(), format!("{:+.1}", pt.gain_percent)]);
+        }
+        format!("machine: {}\n{}", self.machine, t.render())
+    }
+
+    /// Gain at (or nearest below) a thread count.
+    pub fn gain_at(&self, threads: usize) -> f64 {
+        self.points
+            .iter()
+            .filter(|p| p.threads <= threads)
+            .next_back()
+            .map(|p| p.gain_percent)
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numa_series_shape() {
+        // Figure 5(b) shape: gain grows with thread count and is
+        // solidly positive once the machine is covered.
+        let topo = Topology::numa(4, 4);
+        let s = run(&topo, &[8, 64], &FibParams::default());
+        assert!(s.gain_at(64) > s.gain_at(8) - 5.0, "gain should not collapse");
+        assert!(s.gain_at(64) > 5.0, "gain at 64 threads: {}", s.gain_at(64));
+    }
+
+    #[test]
+    fn render_lists_points() {
+        let topo = Topology::numa(2, 2);
+        let s = run(&topo, &[4, 8], &FibParams { total_leaf_work: 2_000_000, ..Default::default() });
+        let out = s.render();
+        assert!(out.contains("threads"));
+        assert!(out.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment drivers: one module per paper table/figure, shared by the
+//! CLI (`repro <experiment>`), the bench targets, and the integration
+//! tests. Each returns structured rows so tests can assert the *shape*
+//! of the result (who wins, by what factor) and the CLI/bench print the
+//! paper-style table.
+
+pub mod ablations;
+pub mod fig5;
+pub mod table1;
+pub mod table2;

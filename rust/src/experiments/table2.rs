@@ -1,0 +1,135 @@
+//! Table 2: conduction & advection — Sequential / Simple / Bound /
+//! Bubbles on the ccNUMA NovaScale stand-in.
+//!
+//! Paper numbers (16× Itanium II, 4 NUMA nodes):
+//!
+//! |            | Conduction time (s) | Speedup | Advection time (s) | Speedup |
+//! |------------|---------------------|---------|--------------------|---------|
+//! | Sequential | 250.2               |         | 16.13              |         |
+//! | Simple     | 23.65               | 10.58   | 1.77               | 9.11    |
+//! | Bound      | 15.82               | 15.82   | 1.30               | 12.40   |
+//! | Bubbles    | 15.84               | 15.80   | 1.30               | 12.40   |
+//!
+//! Shape to reproduce: speedup(bubbles) ≈ speedup(bound) ≫
+//! speedup(simple); advection speedups trail conduction's.
+
+use crate::apps::conduction::{self, HeatParams};
+use crate::apps::StructureMode;
+use crate::topology::Topology;
+use crate::util::fmt::Table;
+
+/// One result row.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: String,
+    /// Simulated makespan (cycles).
+    pub conduction: u64,
+    pub advection: u64,
+    pub conduction_speedup: f64,
+    pub advection_speedup: f64,
+}
+
+/// Full Table-2 reproduction.
+#[derive(Debug, Clone)]
+pub struct Table2 {
+    pub rows: Vec<Row>,
+}
+
+/// Run the experiment. `scale` shrinks cycle counts for fast CI runs
+/// (1.0 = full).
+pub fn run(topo: &Topology, scale: f64) -> Table2 {
+    let scaled = |p: HeatParams| HeatParams {
+        cycles: ((p.cycles as f64 * scale).round() as usize).max(2),
+        ..p
+    };
+    let pc = scaled(HeatParams::conduction());
+    let pa = scaled(HeatParams::advection());
+
+    let seq_c = conduction::run_sequential(topo, &pc).total_time;
+    let seq_a = conduction::run_sequential(topo, &pa).total_time;
+
+    let mut rows = vec![Row {
+        name: "Sequential".into(),
+        conduction: seq_c,
+        advection: seq_a,
+        conduction_speedup: 1.0,
+        advection_speedup: 1.0,
+    }];
+    for mode in [StructureMode::Simple, StructureMode::Bound, StructureMode::Bubbles] {
+        let c = conduction::run(topo, mode, &pc).total_time;
+        let a = conduction::run(topo, mode, &pa).total_time;
+        rows.push(Row {
+            name: mode.label().into(),
+            conduction: c,
+            advection: a,
+            conduction_speedup: seq_c as f64 / c as f64,
+            advection_speedup: seq_a as f64 / a as f64,
+        });
+    }
+    Table2 { rows }
+}
+
+impl Table2 {
+    /// Paper-style rendering.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "approach",
+            "conduction (Mcycles)",
+            "speedup",
+            "advection (Mcycles)",
+            "speedup",
+        ]);
+        for r in &self.rows {
+            t.row(&[
+                r.name.clone(),
+                format!("{:.1}", r.conduction as f64 / 1e6),
+                if r.name == "Sequential" { String::new() } else { format!("{:.2}", r.conduction_speedup) },
+                format!("{:.2}", r.advection as f64 / 1e6),
+                if r.name == "Sequential" { String::new() } else { format!("{:.2}", r.advection_speedup) },
+            ]);
+        }
+        t.render()
+    }
+
+    /// Row accessor by name.
+    pub fn row(&self, name: &str) -> &Row {
+        self.rows.iter().find(|r| r.name == name).expect("row")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        let topo = Topology::numa(4, 4);
+        let t2 = run(&topo, 0.2);
+        let simple = t2.row("Simple");
+        let bound = t2.row("Bound");
+        let bubbles = t2.row("Bubbles");
+
+        // Bound and Bubbles clearly beat Simple (paper: 15.8 vs 10.6).
+        assert!(bound.conduction_speedup > simple.conduction_speedup * 1.2);
+        assert!(bubbles.conduction_speedup > simple.conduction_speedup * 1.2);
+        // Bubbles ≈ Bound (paper: 15.80 vs 15.82).
+        let rel = (bubbles.conduction_speedup - bound.conduction_speedup).abs()
+            / bound.conduction_speedup;
+        assert!(rel < 0.12, "bubbles vs bound rel diff {rel}");
+        // Advection speedups trail conduction's.
+        assert!(bound.advection_speedup < bound.conduction_speedup);
+        // Real parallel speedups on 16 CPUs.
+        assert!(bound.conduction_speedup > 10.0);
+        assert!(simple.conduction_speedup > 4.0);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let topo = Topology::numa(2, 2);
+        let t2 = run(&topo, 0.05);
+        let s = t2.render();
+        for name in ["Sequential", "Simple", "Bound", "Bubbles"] {
+            assert!(s.contains(name), "{s}");
+        }
+    }
+}

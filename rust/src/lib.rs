@@ -1,0 +1,62 @@
+//! # bubbles — a flexible thread scheduler for hierarchical multiprocessor machines
+//!
+//! Reproduction of Thibault (2005): the MARCEL *bubble scheduler*.
+//!
+//! The library has three pillars:
+//!
+//! * **Models** — [`topology`] models the hierarchical machine as a tree of
+//!   levels (machine → NUMA node → die → chip → SMT), [`task`] models the
+//!   application as threads grouped into nested *bubbles*, and [`rq`] is the
+//!   hierarchy of task lists: one runqueue per component of every level.
+//! * **Schedulers** — [`sched`] contains the bubble scheduler (the paper's
+//!   contribution: bubbles descend the list hierarchy, burst at their
+//!   bursting level, and are regenerated on imbalance or timeslice expiry)
+//!   plus nine baseline schedulers from the paper's related-work section
+//!   (SS, GSS, TSS, AFS, LDS, CAFS, HAFS, bound, gang).
+//! * **Execution engines** — [`sim`] is a deterministic discrete-event
+//!   simulator with a NUMA/cache/SMT cost model (the evaluation substrate:
+//!   the paper's Bull NovaScale and Xeon testbeds are simulated per
+//!   DESIGN.md §Substitutions), and [`exec`] is a *native* two-level
+//!   executor in the image of MARCEL itself: one worker OS thread per
+//!   virtual processor running user-level fibers with real context
+//!   switches. Both engines drive the same [`sched::Scheduler`] trait.
+//!
+//! The compute payload of the end-to-end examples (heat conduction and
+//! advection, Table 2 of the paper) is AOT-compiled from JAX + Pallas to
+//! HLO text at build time and executed through [`runtime`] (PJRT CPU
+//! client); python never runs on the request path.
+//!
+//! Quickstart (mirrors Figure 4 of the paper):
+//!
+//! ```no_run
+//! use bubbles::marcel::Marcel;
+//! use bubbles::topology::Topology;
+//!
+//! let m = Marcel::new(Topology::numa(2, 2));
+//! let b = m.bubble_init();
+//! let t1 = m.create_dontsched("worker-1");
+//! let t2 = m.create_dontsched("worker-2");
+//! m.bubble_inserttask(b, t1);
+//! m.bubble_inserttask(b, t2);
+//! m.wake_up_bubble(b);
+//! ```
+
+pub mod apps;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod error;
+pub mod exec;
+pub mod experiments;
+pub mod marcel;
+pub mod metrics;
+pub mod rq;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod task;
+pub mod topology;
+pub mod trace;
+pub mod util;
+
+pub use error::{Error, Result};

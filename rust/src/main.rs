@@ -1,0 +1,12 @@
+//! `repro` — the launcher binary. See `repro help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match bubbles::cli::run(&argv) {
+        Ok(out) => println!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! MARCEL-style public API (paper §4, Figure 4).
+//!
+//! Mirrors the C interface of the paper's implementation:
+//!
+//! ```c
+//! marcel_bubble_init(&bubble);
+//! marcel_create_dontsched(&thread1, NULL, fun1, para1);
+//! marcel_bubble_inserttask(&bubble, thread1);
+//! marcel_wake_up_bubble(&bubble);
+//! marcel_bubble_inserttask(&bubble, thread2);   // late insertion works
+//! ```
+//!
+//! [`Marcel`] can own its [`System`] + [`BubbleScheduler`] (application
+//! use) or be constructed over an existing system (tests / engines that
+//! drive the scheduler themselves).
+
+use std::sync::Arc;
+
+use crate::sched::{BubbleConfig, BubbleScheduler, Scheduler, System};
+use crate::task::{BubblePhase, BurstLevel, Prio, TaskId, TaskState, PRIO_BUBBLE, PRIO_THREAD};
+use crate::topology::Topology;
+
+/// Handle to the thread/bubble construction API.
+pub struct Marcel {
+    sys: Arc<System>,
+    sched: Arc<BubbleScheduler>,
+}
+
+impl Marcel {
+    /// Create a fresh system over `topo` with a default bubble scheduler.
+    pub fn new(topo: Topology) -> Marcel {
+        Marcel::with_config(topo, BubbleConfig::default())
+    }
+
+    /// Create with explicit scheduler tunables.
+    pub fn with_config(topo: Topology, cfg: BubbleConfig) -> Marcel {
+        Marcel {
+            sys: Arc::new(System::new(Arc::new(topo))),
+            sched: Arc::new(BubbleScheduler::new(cfg)),
+        }
+    }
+
+    /// Borrow an existing system (the scheduler here is only used by
+    /// `wake_up_bubble`; engines usually drive their own).
+    pub fn with_system(sys: &Arc<System>) -> Marcel {
+        Marcel { sys: sys.clone(), sched: Arc::new(BubbleScheduler::new(BubbleConfig::default())) }
+    }
+
+    /// Wire an existing system to an existing scheduler.
+    pub fn over(sys: Arc<System>, sched: Arc<BubbleScheduler>) -> Marcel {
+        Marcel { sys, sched }
+    }
+
+    /// The underlying system.
+    pub fn system(&self) -> &Arc<System> {
+        &self.sys
+    }
+
+    /// The underlying scheduler.
+    pub fn scheduler(&self) -> &Arc<BubbleScheduler> {
+        &self.sched
+    }
+
+    // ------------------------------------------------------------- threads
+
+    /// `marcel_create_dontsched`: create a thread *without* starting it
+    /// (it runs only once released by a bubble or woken explicitly).
+    pub fn create_dontsched(&self, name: impl Into<String>) -> TaskId {
+        self.sys.tasks.new_thread(name, PRIO_THREAD)
+    }
+
+    /// Create a thread with an explicit priority (Figure 1's highly
+    /// prioritised communication thread).
+    pub fn create_dontsched_prio(&self, name: impl Into<String>, prio: Prio) -> TaskId {
+        self.sys.tasks.new_thread(name, prio)
+    }
+
+    // ------------------------------------------------------------- bubbles
+
+    /// `marcel_bubble_init`: a fresh, closed, empty bubble.
+    pub fn bubble_init(&self) -> TaskId {
+        self.sys.tasks.new_bubble("bubble", PRIO_BUBBLE)
+    }
+
+    /// A bubble with an explicit bursting level and priority.
+    pub fn bubble_init_with(&self, burst: BurstLevel, prio: Prio) -> TaskId {
+        let b = self.sys.tasks.new_bubble("bubble", prio);
+        self.sys.tasks.with(b, |t| t.bubble_data_mut().burst = Some(burst));
+        b
+    }
+
+    /// Set a bubble's time slice (preventive regeneration / gang
+    /// scheduling, §3.3.3).
+    pub fn bubble_settimeslice(&self, bubble: TaskId, slice: u64) {
+        self.sys.tasks.with(bubble, |t| t.bubble_data_mut().timeslice = Some(slice));
+    }
+
+    /// `marcel_bubble_inserttask`: put a thread (or anything schedulable)
+    /// into a bubble. Late insertion into an already-burst bubble
+    /// releases the task onto the bubble's home list (Figure 4 inserts
+    /// thread2 after `wake_up_bubble`).
+    pub fn bubble_inserttask(&self, bubble: TaskId, task: TaskId) {
+        let phase = self.sys.tasks.with(bubble, |b| {
+            let d = b.bubble_data_mut();
+            d.contents.push(task);
+            d.live += 1;
+            d.phase
+        });
+        self.sys.tasks.with(task, |t| {
+            debug_assert!(
+                t.parent.is_none(),
+                "{} already belongs to a bubble",
+                t.id
+            );
+            t.parent = Some(bubble);
+            if t.state == TaskState::New {
+                t.state = TaskState::InBubble;
+            }
+        });
+        if phase == BubblePhase::Burst {
+            // Late insertion: release immediately.
+            self.sched.wake(&self.sys, task);
+        }
+    }
+
+    /// Nest a sub-bubble inside a bubble (refining the affinity
+    /// relation, §3.1).
+    pub fn bubble_insertbubble(&self, outer: TaskId, inner: TaskId) {
+        debug_assert!(self.sys.tasks.is_bubble(inner));
+        self.bubble_inserttask(outer, inner);
+    }
+
+    /// `marcel_wake_up_bubble`: hand the bubble to the scheduler (it
+    /// starts descending from the machine root).
+    pub fn wake_up_bubble(&self, bubble: TaskId) {
+        self.sched.wake(&self.sys, bubble);
+    }
+
+    /// Wake a standalone thread (no bubble).
+    pub fn wake_thread(&self, task: TaskId) {
+        self.sched.wake(&self.sys, task);
+    }
+
+    /// Declare two threads SMT-symbiotic (§3.1: pairs that exploit the
+    /// logical processors of one physical core without interfering).
+    pub fn set_symbiotic(&self, a: TaskId, b: TaskId) {
+        self.sys.tasks.with(a, |t| t.thread_data_mut().symbiotic = Some(b));
+        self.sys.tasks.with(b, |t| t.thread_data_mut().symbiotic = Some(a));
+    }
+
+    /// Build a bubble hierarchy mirroring the machine: one bubble per
+    /// NUMA node holding `threads_per_node` threads (the Table-2
+    /// "Bubbles" row: "the application query MARCEL about the number of
+    /// NUMA nodes and processors and then automatically build bubbles
+    /// according to the hierarchy of the machine").
+    pub fn bubbles_from_topology(&self, names: &[String]) -> (TaskId, Vec<TaskId>) {
+        let n_nodes = self.sys.topo.n_numa().max(1);
+        let per = names.len().div_ceil(n_nodes);
+        // The root bubble must burst on the machine list so the
+        // per-node bubbles can fan out to *different* nodes.
+        let root = self.bubble_init_with(BurstLevel::Immediate, PRIO_BUBBLE);
+        let mut threads = Vec::with_capacity(names.len());
+        for chunk in names.chunks(per.max(1)) {
+            let node_bubble = self.bubble_init();
+            for name in chunk {
+                let t = self.create_dontsched(name.clone());
+                self.bubble_inserttask(node_bubble, t);
+                threads.push(t);
+            }
+            self.bubble_insertbubble(root, node_bubble);
+        }
+        (root, threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::CpuId;
+
+    #[test]
+    fn figure4_sequence() {
+        let m = Marcel::new(Topology::numa(2, 2));
+        let b = m.bubble_init();
+        let t1 = m.create_dontsched("t1");
+        let t2 = m.create_dontsched("t2");
+        m.bubble_inserttask(b, t1);
+        m.wake_up_bubble(b);
+        m.bubble_inserttask(b, t2); // after wake, as in Figure 4
+        let sys = m.system();
+        let s = m.scheduler();
+        let a = s.pick(sys, CpuId(0));
+        let c = s.pick(sys, CpuId(1));
+        let got: std::collections::BTreeSet<_> = [a, c].into_iter().flatten().collect();
+        assert_eq!(got, [t1, t2].into());
+    }
+
+    #[test]
+    fn topology_driven_bubbles() {
+        let m = Marcel::new(Topology::numa(4, 4));
+        let names: Vec<String> = (0..16).map(|i| format!("w{i}")).collect();
+        let (root, threads) = m.bubbles_from_topology(&names);
+        assert_eq!(threads.len(), 16);
+        let contents = m.system().tasks.with(root, |t| t.kind_contents_snapshot());
+        assert_eq!(contents.len(), 4, "one sub-bubble per NUMA node");
+        for b in contents {
+            let inner = m.system().tasks.with(b, |t| t.kind_contents_snapshot());
+            assert_eq!(inner.len(), 4);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn double_insert_panics_in_debug() {
+        let m = Marcel::new(Topology::smp(2));
+        let b1 = m.bubble_init();
+        let b2 = m.bubble_init();
+        let t = m.create_dontsched("t");
+        m.bubble_inserttask(b1, t);
+        m.bubble_inserttask(b2, t);
+    }
+
+    #[test]
+    fn symbiosis_is_mutual() {
+        let m = Marcel::new(Topology::xeon_2x_ht());
+        let a = m.create_dontsched("a");
+        let b = m.create_dontsched("b");
+        m.set_symbiotic(a, b);
+        assert_eq!(m.system().tasks.with(a, |t| t.thread_data().symbiotic), Some(b));
+        assert_eq!(m.system().tasks.with(b, |t| t.thread_data().symbiotic), Some(a));
+    }
+
+    #[test]
+    fn timeslice_setter() {
+        let m = Marcel::new(Topology::smp(2));
+        let b = m.bubble_init();
+        m.bubble_settimeslice(b, 500);
+        assert_eq!(m.system().tasks.with(b, |t| t.bubble_data().timeslice), Some(500));
+    }
+}

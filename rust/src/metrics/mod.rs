@@ -1,0 +1,125 @@
+//! Scheduler / engine counters.
+//!
+//! All counters are atomics so both engines (single-threaded simulator,
+//! multi-threaded native executor) share the type. The report is the
+//! basis of the evaluation tables: remote-access ratio and migrations
+//! are what separate *simple* from *bound*/*bubbles* in Table 2.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::fmt::Table;
+
+/// Monotonic counters describing one run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// pick() calls that returned a thread.
+    pub picks: AtomicU64,
+    /// pick() calls that found nothing (idle).
+    pub idle_picks: AtomicU64,
+    /// Thread resumed on a different CPU than its last one.
+    pub migrations: AtomicU64,
+    /// Compute work items touching memory on the local NUMA node.
+    pub local_accesses: AtomicU64,
+    /// Compute work items touching remote NUMA memory.
+    pub remote_accesses: AtomicU64,
+    /// Bubbles moved one level down.
+    pub bubble_descents: AtomicU64,
+    /// Bubble burst events.
+    pub bursts: AtomicU64,
+    /// Bubble regenerations (idle-triggered + timeslice).
+    pub regenerations: AtomicU64,
+    /// Tasks stolen across lists by opportunist baselines.
+    pub steals: AtomicU64,
+    /// Threads preempted by timeslice expiry.
+    pub preemptions: AtomicU64,
+    /// Busy engine-time units summed over CPUs.
+    pub busy_time: AtomicU64,
+    /// Idle engine-time units summed over CPUs.
+    pub idle_time: AtomicU64,
+    /// Two-pass search retries (pass-2 lost the race).
+    pub search_retries: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Increment helper.
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add helper.
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Fraction of memory touches that were remote (0 when none).
+    pub fn remote_ratio(&self) -> f64 {
+        let l = self.local_accesses.load(Ordering::Relaxed) as f64;
+        let r = self.remote_accesses.load(Ordering::Relaxed) as f64;
+        if l + r == 0.0 {
+            0.0
+        } else {
+            r / (l + r)
+        }
+    }
+
+    /// CPU utilisation = busy / (busy + idle) (0 when nothing ran).
+    pub fn utilisation(&self) -> f64 {
+        let b = self.busy_time.load(Ordering::Relaxed) as f64;
+        let i = self.idle_time.load(Ordering::Relaxed) as f64;
+        if b + i == 0.0 {
+            0.0
+        } else {
+            b / (b + i)
+        }
+    }
+
+    /// Render all counters as a two-column table.
+    pub fn report(&self) -> String {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed).to_string();
+        let mut t = Table::new(&["metric", "value"]);
+        t.row(&["picks".into(), g(&self.picks)]);
+        t.row(&["idle_picks".into(), g(&self.idle_picks)]);
+        t.row(&["migrations".into(), g(&self.migrations)]);
+        t.row(&["local_accesses".into(), g(&self.local_accesses)]);
+        t.row(&["remote_accesses".into(), g(&self.remote_accesses)]);
+        t.row(&["remote_ratio".into(), format!("{:.3}", self.remote_ratio())]);
+        t.row(&["bubble_descents".into(), g(&self.bubble_descents)]);
+        t.row(&["bursts".into(), g(&self.bursts)]);
+        t.row(&["regenerations".into(), g(&self.regenerations)]);
+        t.row(&["steals".into(), g(&self.steals)]);
+        t.row(&["preemptions".into(), g(&self.preemptions)]);
+        t.row(&["utilisation".into(), format!("{:.3}", self.utilisation())]);
+        t.row(&["search_retries".into(), g(&self.search_retries)]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios() {
+        let m = Metrics::new();
+        assert_eq!(m.remote_ratio(), 0.0);
+        Metrics::add(&m.local_accesses, 3);
+        Metrics::add(&m.remote_accesses, 1);
+        assert!((m.remote_ratio() - 0.25).abs() < 1e-12);
+        Metrics::add(&m.busy_time, 80);
+        Metrics::add(&m.idle_time, 20);
+        assert!((m.utilisation() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_contains_counters() {
+        let m = Metrics::new();
+        Metrics::inc(&m.bursts);
+        let r = m.report();
+        assert!(r.contains("bursts"));
+        assert!(r.contains("remote_ratio"));
+    }
+}

@@ -1,0 +1,222 @@
+//! A single priority task list with a lock-free max-priority hint.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicI32, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::task::{Prio, TaskId};
+use crate::topology::LevelId;
+
+/// Priority buckets: FIFO within a priority, highest priority first.
+#[derive(Debug, Default)]
+struct Buckets {
+    by_prio: BTreeMap<Prio, VecDeque<TaskId>>,
+}
+
+impl Buckets {
+    // Perf note (EXPERIMENTS.md §Perf): empty buckets are *kept* in the
+    // map. The yield hot path pushes and pops the same priority class
+    // every cycle; removing the bucket on empty caused a BTreeMap
+    // insert + VecDeque allocation per scheduling round.
+    fn push(&mut self, task: TaskId, prio: Prio) {
+        self.by_prio.entry(prio).or_default().push_back(task);
+    }
+
+    fn pop_max(&mut self) -> Option<(TaskId, Prio)> {
+        for (&prio, q) in self.by_prio.iter_mut().rev() {
+            if let Some(task) = q.pop_front() {
+                return Some((task, prio));
+            }
+        }
+        None
+    }
+
+    fn max_prio(&self) -> Prio {
+        self.by_prio
+            .iter()
+            .rev()
+            .find(|(_, q)| !q.is_empty())
+            .map(|(&p, _)| p)
+            .unwrap_or(i32::MIN)
+    }
+
+    fn remove(&mut self, task: TaskId) -> bool {
+        for q in self.by_prio.values_mut() {
+            if let Some(pos) = q.iter().position(|&t| t == task) {
+                q.remove(pos);
+                return true;
+            }
+        }
+        false
+    }
+
+    fn len(&self) -> usize {
+        self.by_prio.values().map(|q| q.len()).sum()
+    }
+}
+
+/// One task list (one topology component's runqueue).
+///
+/// `max_prio`/`count` are lock-free *hints* maintained under the lock:
+/// pass-1 scans may read slightly stale values; pass 2 re-checks under
+/// the lock, exactly as the paper's implementation does (§4).
+#[derive(Debug)]
+pub struct RunList {
+    level: LevelId,
+    inner: Mutex<Buckets>,
+    max_prio: AtomicI32,
+    count: AtomicUsize,
+}
+
+impl RunList {
+    pub fn new(level: LevelId) -> RunList {
+        RunList {
+            level,
+            inner: Mutex::new(Buckets::default()),
+            max_prio: AtomicI32::new(i32::MIN),
+            count: AtomicUsize::new(0),
+        }
+    }
+
+    /// Which component this list belongs to.
+    pub fn level(&self) -> LevelId {
+        self.level
+    }
+
+    /// Enqueue (FIFO within the priority class).
+    pub fn push(&self, task: TaskId, prio: Prio) {
+        let mut b = self.inner.lock().unwrap();
+        b.push(task, prio);
+        self.max_prio.store(b.max_prio(), Ordering::Release);
+        self.count.store(b.len(), Ordering::Release);
+    }
+
+    /// Dequeue the highest-priority task.
+    pub fn pop_max(&self) -> Option<(TaskId, Prio)> {
+        let mut b = self.inner.lock().unwrap();
+        let out = b.pop_max();
+        self.max_prio.store(b.max_prio(), Ordering::Release);
+        self.count.store(b.len(), Ordering::Release);
+        out
+    }
+
+    /// Lock-free max-priority hint; `i32::MIN` when (probably) empty.
+    pub fn peek_max(&self) -> Prio {
+        self.max_prio.load(Ordering::Acquire)
+    }
+
+    /// Lock-free length hint.
+    pub fn len(&self) -> usize {
+        self.count.load(Ordering::Acquire)
+    }
+
+    /// True when the hint says empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Remove a specific task. Returns whether it was found.
+    pub fn remove(&self, task: TaskId) -> bool {
+        let mut b = self.inner.lock().unwrap();
+        let hit = b.remove(task);
+        self.max_prio.store(b.max_prio(), Ordering::Release);
+        self.count.store(b.len(), Ordering::Release);
+        hit
+    }
+
+    /// Copy of the queue contents (tests / traces).
+    pub fn snapshot(&self) -> Vec<(TaskId, Prio)> {
+        let b = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        for (&p, q) in b.by_prio.iter().rev() {
+            for &t in q {
+                out.push((t, p));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn hint_is_consistent_after_each_op() {
+        let l = RunList::new(LevelId(0));
+        l.push(TaskId(0), 4);
+        assert_eq!(l.peek_max(), 4);
+        l.push(TaskId(1), 9);
+        assert_eq!(l.peek_max(), 9);
+        l.remove(TaskId(1));
+        assert_eq!(l.peek_max(), 4);
+        l.pop_max();
+        assert_eq!(l.peek_max(), i32::MIN);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn negative_priorities_work() {
+        let l = RunList::new(LevelId(0));
+        l.push(TaskId(0), -5);
+        l.push(TaskId(1), -1);
+        assert_eq!(l.pop_max(), Some((TaskId(1), -1)));
+    }
+
+    #[test]
+    fn remove_middle_of_bucket() {
+        let l = RunList::new(LevelId(0));
+        for i in 0..4 {
+            l.push(TaskId(i), 2);
+        }
+        assert!(l.remove(TaskId(2)));
+        let order: Vec<TaskId> = std::iter::from_fn(|| l.pop_max().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![TaskId(0), TaskId(1), TaskId(3)]);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_lose_nothing() {
+        let l = Arc::new(RunList::new(LevelId(0)));
+        let n_prod = 4;
+        let per = 500;
+        let mut joins = Vec::new();
+        for p in 0..n_prod {
+            let l = l.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    l.push(TaskId(p * per + i), (i % 3) as Prio);
+                }
+            }));
+        }
+        let popped = Arc::new(AtomicUsize::new(0));
+        let mut consumers = Vec::new();
+        for _ in 0..2 {
+            let l = l.clone();
+            let popped = popped.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = 0;
+                while popped.load(Ordering::SeqCst) + got < n_prod * per {
+                    if l.pop_max().is_some() {
+                        got += 1;
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                popped.fetch_add(got, Ordering::SeqCst);
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        for c in consumers {
+            c.join().unwrap();
+        }
+        // Drain leftovers (consumers race on the termination check).
+        let mut rest = 0;
+        while l.pop_max().is_some() {
+            rest += 1;
+        }
+        assert_eq!(popped.load(Ordering::SeqCst) + rest, n_prod * per);
+    }
+}

@@ -1,0 +1,167 @@
+//! Hierarchy of task lists (paper §3.2 & §4).
+//!
+//! "Each component of each level of the hierarchy of the machine has one
+//! and only one task list." A task on a component's list may be run by
+//! any CPU that component covers — the list expresses the *scheduling
+//! area*.
+//!
+//! The scheduler's two-pass search (§4) relies on each list publishing a
+//! lock-free `max_prio` hint: pass 1 scans the hints without locking;
+//! pass 2 locks only the selected list and re-checks, in case another
+//! processor took the task in the meantime.
+
+mod list;
+
+pub use list::RunList;
+
+use crate::task::{Prio, TaskId};
+use crate::topology::{LevelId, Topology};
+
+/// One [`RunList`] per topology component, indexed by [`LevelId`].
+#[derive(Debug)]
+pub struct RqHierarchy {
+    lists: Vec<RunList>,
+}
+
+impl RqHierarchy {
+    /// Build the list hierarchy for a machine.
+    pub fn new(topo: &Topology) -> RqHierarchy {
+        RqHierarchy {
+            lists: (0..topo.n_components()).map(|i| RunList::new(LevelId(i))).collect(),
+        }
+    }
+
+    /// The list of component `l`.
+    pub fn list(&self, l: LevelId) -> &RunList {
+        &self.lists[l.0]
+    }
+
+    /// Number of lists (== components).
+    pub fn len(&self) -> usize {
+        self.lists.len()
+    }
+
+    /// True for a zero-component hierarchy (never happens in practice).
+    pub fn is_empty(&self) -> bool {
+        self.lists.is_empty()
+    }
+
+    /// Push a task on a list.
+    pub fn push(&self, l: LevelId, task: TaskId, prio: Prio) {
+        self.lists[l.0].push(task, prio);
+    }
+
+    /// Push at the *end* of a priority class explicitly (regenerated
+    /// bubbles go to the end of their list, §3.3.3). Same as `push`;
+    /// alias for intent at call sites.
+    pub fn push_back(&self, l: LevelId, task: TaskId, prio: Prio) {
+        self.lists[l.0].push(task, prio);
+    }
+
+    /// Pop the highest-priority task of a list.
+    pub fn pop_max(&self, l: LevelId) -> Option<(TaskId, Prio)> {
+        self.lists[l.0].pop_max()
+    }
+
+    /// Lock-free max-priority hint (i32::MIN when empty).
+    pub fn peek_max(&self, l: LevelId) -> Prio {
+        self.lists[l.0].peek_max()
+    }
+
+    /// Remove a specific task (regeneration pulls threads back into
+    /// their bubble). Returns true if it was present.
+    pub fn remove(&self, l: LevelId, task: TaskId) -> bool {
+        self.lists[l.0].remove(task)
+    }
+
+    /// Lock-free length hint of one list.
+    pub fn len_of(&self, l: LevelId) -> usize {
+        self.lists[l.0].len()
+    }
+
+    /// Total queued tasks across all lists (lock-free hints; advisory).
+    pub fn total_queued(&self) -> usize {
+        self.lists.iter().map(|l| l.len()).sum()
+    }
+
+    /// Snapshot of all (list, task, prio) triples — test/trace support.
+    pub fn snapshot(&self) -> Vec<(LevelId, TaskId, Prio)> {
+        let mut out = Vec::new();
+        for list in &self.lists {
+            for (t, p) in list.snapshot() {
+                out.push((list.level(), t, p));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hierarchy() -> RqHierarchy {
+        RqHierarchy::new(&Topology::numa(2, 2))
+    }
+
+    #[test]
+    fn push_pop_priority_order() {
+        let rq = hierarchy();
+        let l = LevelId(0);
+        rq.push(l, TaskId(1), 1);
+        rq.push(l, TaskId(2), 3);
+        rq.push(l, TaskId(3), 2);
+        assert_eq!(rq.pop_max(l), Some((TaskId(2), 3)));
+        assert_eq!(rq.pop_max(l), Some((TaskId(3), 2)));
+        assert_eq!(rq.pop_max(l), Some((TaskId(1), 1)));
+        assert_eq!(rq.pop_max(l), None);
+    }
+
+    #[test]
+    fn fifo_within_priority() {
+        let rq = hierarchy();
+        let l = LevelId(0);
+        for i in 0..5 {
+            rq.push(l, TaskId(i), 7);
+        }
+        for i in 0..5 {
+            assert_eq!(rq.pop_max(l), Some((TaskId(i), 7)));
+        }
+    }
+
+    #[test]
+    fn peek_tracks_max() {
+        let rq = hierarchy();
+        let l = LevelId(3);
+        assert_eq!(rq.peek_max(l), i32::MIN);
+        rq.push(l, TaskId(0), 2);
+        rq.push(l, TaskId(1), 5);
+        assert_eq!(rq.peek_max(l), 5);
+        rq.pop_max(l);
+        assert_eq!(rq.peek_max(l), 2);
+        rq.pop_max(l);
+        assert_eq!(rq.peek_max(l), i32::MIN);
+    }
+
+    #[test]
+    fn remove_specific() {
+        let rq = hierarchy();
+        let l = LevelId(1);
+        rq.push(l, TaskId(0), 1);
+        rq.push(l, TaskId(1), 1);
+        assert!(rq.remove(l, TaskId(0)));
+        assert!(!rq.remove(l, TaskId(0)));
+        assert_eq!(rq.pop_max(l), Some((TaskId(1), 1)));
+    }
+
+    #[test]
+    fn total_and_snapshot() {
+        let rq = hierarchy();
+        rq.push(LevelId(0), TaskId(0), 1);
+        rq.push(LevelId(2), TaskId(1), 2);
+        assert_eq!(rq.total_queued(), 2);
+        let snap = rq.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap.contains(&(LevelId(2), TaskId(1), 2)));
+    }
+}

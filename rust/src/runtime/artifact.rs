@@ -1,0 +1,156 @@
+//! Artifact registry: the manifest emitted by `python/compile/aot.py`
+//! mapping (kernel kind, stripe shape) to HLO files, with compile
+//! caching.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use super::client::{Executable, Runtime};
+use crate::error::{Error, Result};
+
+/// One line of `artifacts/manifest.txt`:
+/// `<name> <kind> <rows> <cols> <dtype> <file>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub dtype: String,
+    pub file: String,
+}
+
+/// Parse a manifest file's text.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactEntry>> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 6 {
+            return Err(Error::Runtime(format!("manifest line {}: expected 6 fields", ln + 1)));
+        }
+        out.push(ArtifactEntry {
+            name: f[0].to_string(),
+            kind: f[1].to_string(),
+            rows: f[2].parse().map_err(|_| Error::Runtime(format!("bad rows line {}", ln + 1)))?,
+            cols: f[3].parse().map_err(|_| Error::Runtime(format!("bad cols line {}", ln + 1)))?,
+            dtype: f[4].to_string(),
+            file: f[5].to_string(),
+        });
+    }
+    Ok(out)
+}
+
+/// Registry over one artifacts directory. Not `Send` (the underlying
+/// PJRT handles are thread-pinned); see [`super::service`] for the
+/// multi-threaded front.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    runtime: Runtime,
+    entries: Vec<ArtifactEntry>,
+    cache: std::cell::RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry at `dir` (must contain `manifest.txt`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<ArtifactRegistry> {
+        let dir = dir.into();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Ok(ArtifactRegistry {
+            dir,
+            runtime: Runtime::cpu()?,
+            entries: parse_manifest(&manifest)?,
+            cache: std::cell::RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Open the default location (walks up for `artifacts/`).
+    pub fn open_default() -> Result<ArtifactRegistry> {
+        let dir = super::artifact_dir()
+            .ok_or_else(|| Error::Runtime("artifacts/ not found: run `make artifacts`".into()))?;
+        ArtifactRegistry::open(dir)
+    }
+
+    /// All manifest entries.
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Find the entry for a kernel kind and output-stripe shape.
+    pub fn find(&self, kind: &str, rows: usize, cols: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.kind == kind && e.rows == rows && e.cols == cols)
+    }
+
+    /// Load (compile) an artifact by name, with caching.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact `{name}`")))?;
+        let exe = Rc::new(self.runtime.load_hlo_text(self.dir.join(&entry.file))?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Load by (kind, shape).
+    pub fn load_kind(&self, kind: &str, rows: usize, cols: usize) -> Result<Rc<Executable>> {
+        let name = self
+            .find(kind, rows, cols)
+            .ok_or_else(|| {
+                Error::Runtime(format!("no artifact for {kind} r{rows} c{cols}"))
+            })?
+            .name
+            .clone();
+        self.load(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "# comment\n\
+                    conduction_r4_c32 conduction 4 32 f32 conduction_r4_c32.hlo.txt\n\
+                    \n\
+                    residual_r4_c32 residual 4 32 f32 residual_r4_c32.hlo.txt\n";
+        let entries = parse_manifest(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].kind, "conduction");
+        assert_eq!(entries[0].rows, 4);
+        assert_eq!(entries[1].file, "residual_r4_c32.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(parse_manifest("too few fields").is_err());
+        assert!(parse_manifest("a b notanumber 3 f32 f").is_err());
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let Some(dir) = crate::runtime::artifact_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let reg = ArtifactRegistry::open(dir).unwrap();
+        assert!(!reg.entries().is_empty());
+        let e = reg.find("conduction", 4, 32).expect("test artifact present");
+        assert_eq!(e.name, "conduction_r4_c32");
+        // Load twice: second hit must come from cache (same Rc).
+        let a = reg.load("conduction_r4_c32").unwrap();
+        let b = reg.load("conduction_r4_c32").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        assert!(reg.load("nope").is_err());
+        assert!(reg.load_kind("conduction", 999, 999).is_err());
+    }
+}

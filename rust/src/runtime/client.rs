@@ -1,0 +1,146 @@
+//! PJRT CPU client wrapper: HLO text → compiled executable → execute.
+//!
+//! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! python/compile/aot.py).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Start a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Platform name ("cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text file and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Runtime(format!("parse {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled HLO module, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f32 inputs given as `(data, shape)` pairs; returns
+    /// the flattened f32 output. The AOT pipeline lowers every function
+    /// with `return_tuple=True`, so the single result is unwrapped from
+    /// a 1-tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Runtime("empty execution result".into()))?;
+        let out = first.to_literal_sync()?.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact_dir;
+
+    /// Tests are skipped (not failed) when artifacts have not been
+    /// built: `make artifacts` is a separate build step.
+    fn registry_dir() -> Option<std::path::PathBuf> {
+        let d = artifact_dir();
+        if d.is_none() {
+            eprintln!("skipping: run `make artifacts` first");
+        }
+        d
+    }
+
+    #[test]
+    fn compile_and_run_conduction_small() {
+        let Some(dir) = registry_dir() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(dir.join("conduction_r4_c32.hlo.txt")).unwrap();
+        // Uniform field + alpha=0.2 must stay uniform (stencil identity).
+        let x = vec![1.5f32; 6 * 32];
+        let alpha = vec![0.2f32];
+        let out = exe.run_f32(&[(&x, &[6, 32]), (&alpha, &[1])]).unwrap();
+        assert_eq!(out.len(), 4 * 32);
+        for v in &out {
+            assert!((v - 1.5).abs() < 1e-6, "{v}");
+        }
+    }
+
+    #[test]
+    fn conduction_matches_reference_stencil() {
+        let Some(dir) = registry_dir() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(dir.join("conduction_r4_c32.hlo.txt")).unwrap();
+        // Deterministic pseudo-random stripe.
+        let mut x = vec![0f32; 6 * 32];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = ((i * 2654435761) % 1000) as f32 / 1000.0;
+        }
+        let alpha = 0.15f32;
+        let out = exe.run_f32(&[(&x, &[6, 32]), (&[alpha][..], &[1])]).unwrap();
+        // Rust-side oracle of the same stencil.
+        let idx = |r: usize, c: usize| r * 32 + c;
+        for r in 0..4 {
+            for c in 1..31 {
+                let center = x[idx(r + 1, c)];
+                let want = center
+                    + alpha
+                        * (x[idx(r, c)] + x[idx(r + 2, c)] + x[idx(r + 1, c - 1)]
+                            + x[idx(r + 1, c + 1)]
+                            - 4.0 * center);
+                let got = out[idx(r, c)];
+                assert!((got - want).abs() < 1e-5, "r{r} c{c}: {got} vs {want}");
+            }
+            // Dirichlet columns.
+            assert_eq!(out[idx(r, 0)], x[idx(r + 1, 0)]);
+            assert_eq!(out[idx(r, 31)], x[idx(r + 1, 31)]);
+        }
+    }
+
+    #[test]
+    fn residual_artifact_runs() {
+        let Some(dir) = registry_dir() else { return };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo_text(dir.join("residual_r4_c32.hlo.txt")).unwrap();
+        let a = vec![1.0f32; 4 * 32];
+        let mut b = a.clone();
+        b[37] = 3.5;
+        let out = exe.run_f32(&[(&a, &[4, 32]), (&b, &[4, 32])]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert!((out[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo_text("/nonexistent/x.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,42 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas
+//! artifacts from the rust request path.
+//!
+//! Layer split (DESIGN.md §2): python lowers the L2/L1 computation to
+//! HLO *text* once (`make artifacts`); this module compiles that text
+//! on the PJRT CPU client and executes it — python never runs on the
+//! request path.
+//!
+//! The `xla` crate's wrapper types hold raw C++ pointers and are not
+//! `Send`; [`service::PjrtService`] therefore pins the whole runtime to
+//! one OS thread and serves execute requests over channels — the shape
+//! a multi-worker coordinator needs.
+
+mod artifact;
+mod client;
+pub mod service;
+
+pub use artifact::{ArtifactEntry, ArtifactRegistry};
+pub use client::{Executable, Runtime};
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$BUBBLES_ARTIFACTS` or the
+/// default, walking up from the current directory so tests work from
+/// any cwd inside the repo.
+pub fn artifact_dir() -> Option<std::path::PathBuf> {
+    if let Ok(d) = std::env::var("BUBBLES_ARTIFACTS") {
+        let p = std::path::PathBuf::from(d);
+        return p.join("manifest.txt").exists().then_some(p);
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join(DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.txt").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Thread-pinned PJRT service.
+//!
+//! The `xla` wrapper types are not `Send`, so one dedicated OS thread
+//! owns the [`ArtifactRegistry`]; any worker thread submits
+//! [`ExecRequest`]s over an mpsc channel and blocks on its private
+//! response channel. This is the standard "pin the FFI world to a
+//! thread" coordinator shape.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::ArtifactRegistry;
+use crate::error::{Error, Result};
+
+/// One execution request: artifact name + f32 inputs with shapes.
+pub struct ExecRequest {
+    pub artifact: String,
+    pub inputs: Vec<(Vec<f32>, Vec<usize>)>,
+    respond: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    Shutdown,
+}
+
+/// Handle to the PJRT service thread. Clone [`PjrtHandle`]s to share
+/// across workers.
+pub struct PjrtService {
+    tx: mpsc::Sender<Msg>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Cloneable submission handle.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl PjrtService {
+    /// Spawn the service thread over the default artifact directory.
+    pub fn start_default() -> Result<PjrtService> {
+        let dir = super::artifact_dir()
+            .ok_or_else(|| Error::Runtime("artifacts/ not found: run `make artifacts`".into()))?;
+        PjrtService::start(dir)
+    }
+
+    /// Spawn the service thread over an explicit directory.
+    pub fn start(dir: std::path::PathBuf) -> Result<PjrtService> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let reg = match ArtifactRegistry::open(dir) {
+                    Ok(r) => {
+                        let _ = ready_tx.send(Ok(()));
+                        r
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Exec(req) => {
+                            let result = reg.load(&req.artifact).and_then(|exe| {
+                                let refs: Vec<(&[f32], &[usize])> = req
+                                    .inputs
+                                    .iter()
+                                    .map(|(d, s)| (d.as_slice(), s.as_slice()))
+                                    .collect();
+                                exe.run_f32(&refs)
+                            });
+                            let _ = req.respond.send(result);
+                        }
+                        Msg::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn pjrt thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt service died during startup".into()))??;
+        Ok(PjrtService { tx, join: Some(join) })
+    }
+
+    /// A cloneable handle for worker threads.
+    pub fn handle(&self) -> PjrtHandle {
+        PjrtHandle { tx: self.tx.clone() }
+    }
+}
+
+impl PjrtHandle {
+    /// Execute an artifact synchronously (blocks this worker only).
+    pub fn exec(&self, artifact: &str, inputs: Vec<(Vec<f32>, Vec<usize>)>) -> Result<Vec<f32>> {
+        let (respond, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Exec(ExecRequest { artifact: artifact.to_string(), inputs, respond }))
+            .map_err(|_| Error::Runtime("pjrt service is down".into()))?;
+        rx.recv().map_err(|_| Error::Runtime("pjrt service dropped the request".into()))?
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrent_workers_share_the_service() {
+        let Ok(svc) = PjrtService::start_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut joins = Vec::new();
+        for k in 0..4 {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                let x = vec![k as f32; 6 * 32];
+                let out = h
+                    .exec(
+                        "conduction_r4_c32",
+                        vec![(x, vec![6, 32]), (vec![0.2], vec![1])],
+                    )
+                    .unwrap();
+                assert_eq!(out.len(), 4 * 32);
+                // Uniform field stays uniform.
+                assert!(out.iter().all(|v| (v - k as f32).abs() < 1e-6));
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_errors_through_channel() {
+        let Ok(svc) = PjrtService::start_default() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let h = svc.handle();
+        assert!(h.exec("does-not-exist", vec![]).is_err());
+    }
+}

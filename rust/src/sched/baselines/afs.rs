@@ -1,0 +1,227 @@
+//! Affinity Scheduling (AFS, Markatos & LeBlanc) and Locality-based
+//! Dynamic Scheduling (LDS, Li et al.) — paper §2.2.
+//!
+//! Per-processor ready lists preserve cache affinity; idle processors
+//! steal. AFS picks the most loaded victim machine-wide (the
+//! "rebalance" structure of Linux 2.6 / FreeBSD 5 / IRIX the paper
+//! cites); LDS refines victim selection by *locality*: the closest
+//! loaded processor in the hierarchy wins, so stolen work stays as
+//! local as possible.
+
+use super::{default_stop, dispatch, enqueue, flatten_wake, least_loaded_leaf, most_loaded_leaf};
+use crate::metrics::Metrics;
+use crate::sched::{Scheduler, StopReason, System};
+use crate::task::TaskId;
+use crate::topology::CpuId;
+use crate::trace::Event;
+
+/// Victim selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Victim {
+    /// Most loaded CPU anywhere.
+    MostLoaded,
+    /// Closest loaded CPU (ties by load).
+    Closest,
+}
+
+#[derive(Debug)]
+struct PerCpuSched {
+    victim: Victim,
+}
+
+/// Affinity Scheduling.
+#[derive(Debug)]
+pub struct AfsScheduler(PerCpuSched);
+
+/// Locality-based Dynamic Scheduling.
+#[derive(Debug)]
+pub struct LdsScheduler(PerCpuSched);
+
+impl AfsScheduler {
+    pub fn new() -> AfsScheduler {
+        AfsScheduler(PerCpuSched { victim: Victim::MostLoaded })
+    }
+}
+
+impl Default for AfsScheduler {
+    fn default() -> Self {
+        AfsScheduler::new()
+    }
+}
+
+impl LdsScheduler {
+    pub fn new() -> LdsScheduler {
+        LdsScheduler(PerCpuSched { victim: Victim::Closest })
+    }
+}
+
+impl Default for LdsScheduler {
+    fn default() -> Self {
+        LdsScheduler::new()
+    }
+}
+
+impl PerCpuSched {
+    fn wake_impl(&self, sys: &System, task: TaskId) {
+        flatten_wake(sys, task, &mut |sys, t| {
+            // Affinity: a thread that ran before returns to its last
+            // CPU; new threads go to the least loaded list ("new
+            // processes are charged to the least loaded processor").
+            let list = sys
+                .tasks
+                .with(t, |x| x.last_cpu)
+                .map(|c| sys.topo.leaf_of(c))
+                .unwrap_or_else(|| {
+                    least_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId))
+                });
+            enqueue(sys, t, list);
+        });
+    }
+
+    fn steal_from(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let victim_list = match self.victim {
+            Victim::MostLoaded => {
+                most_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId).filter(|&c| c != cpu))?
+            }
+            Victim::Closest => {
+                let mut best: Option<(usize, usize, crate::topology::LevelId)> = None;
+                for c in (0..sys.topo.n_cpus()).map(CpuId).filter(|&c| c != cpu) {
+                    let l = sys.topo.leaf_of(c);
+                    let n = sys.rq.len_of(l);
+                    if n == 0 {
+                        continue;
+                    }
+                    let d = sys.topo.separation(cpu, c);
+                    // Minimise distance; break ties by higher load.
+                    let better = match best {
+                        None => true,
+                        Some((bd, bn, _)) => d < bd || (d == bd && n > bn),
+                    };
+                    if better {
+                        best = Some((d, n, l));
+                    }
+                }
+                best?.2
+            }
+        };
+        let (task, _) = sys.rq.pop_max(victim_list)?;
+        Metrics::inc(&sys.metrics.steals);
+        sys.trace.emit(sys.now(), Event::Steal { task, from: victim_list, by: cpu });
+        Some(task)
+    }
+
+    fn pick_impl(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let leaf = sys.topo.leaf_of(cpu);
+        if let Some((t, _)) = sys.rq.pop_max(leaf) {
+            dispatch(sys, cpu, t, leaf);
+            return Some(t);
+        }
+        let t = self.steal_from(sys, cpu)?;
+        dispatch(sys, cpu, t, leaf);
+        Some(t)
+    }
+}
+
+macro_rules! impl_percpu_sched {
+    ($ty:ty, $name:expr) => {
+        impl Scheduler for $ty {
+            fn name(&self) -> String {
+                $name.into()
+            }
+
+            fn wake(&self, sys: &System, task: TaskId) {
+                self.0.wake_impl(sys, task);
+            }
+
+            fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+                self.0.pick_impl(sys, cpu)
+            }
+
+            fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+                default_stop(sys, cpu, task, why, &mut |sys, t| {
+                    enqueue(sys, t, sys.topo.leaf_of(cpu))
+                });
+            }
+        }
+    };
+}
+
+impl_percpu_sched!(AfsScheduler, "afs");
+impl_percpu_sched!(LdsScheduler, "lds");
+
+#[cfg(test)]
+mod tests {
+    use super::super::testsupport;
+    use super::*;
+    use crate::sched::testutil::system;
+    use crate::task::PRIO_THREAD;
+    use crate::topology::Topology;
+
+    #[test]
+    fn behavioural_suite_afs() {
+        testsupport::drains_all_work(&AfsScheduler::new(), Topology::numa(2, 2), 40);
+        testsupport::flattens_bubbles(&AfsScheduler::new(), Topology::smp(2));
+        testsupport::block_wake_roundtrip(&AfsScheduler::new(), Topology::smp(2));
+    }
+
+    #[test]
+    fn behavioural_suite_lds() {
+        testsupport::drains_all_work(&LdsScheduler::new(), Topology::numa(2, 2), 40);
+        testsupport::flattens_bubbles(&LdsScheduler::new(), Topology::smp(2));
+        testsupport::block_wake_roundtrip(&LdsScheduler::new(), Topology::smp(2));
+    }
+
+    #[test]
+    fn afs_respects_affinity_on_requeue() {
+        let sys = system(Topology::smp(2));
+        let s = AfsScheduler::new();
+        let t = sys.tasks.new_thread("t", PRIO_THREAD);
+        s.wake(&sys, t);
+        let cpu = if s.pick(&sys, CpuId(0)).is_some() { CpuId(0) } else { CpuId(1) };
+        s.stop(&sys, cpu, t, StopReason::Yield);
+        // The thread must be back on the same CPU's list.
+        let list = sys.tasks.state(t).ready_list().unwrap();
+        assert_eq!(list, sys.topo.leaf_of(cpu));
+    }
+
+    #[test]
+    fn new_work_spreads_to_least_loaded() {
+        let sys = system(Topology::smp(4));
+        let s = AfsScheduler::new();
+        for i in 0..8 {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            s.wake(&sys, t);
+        }
+        // 8 tasks over 4 leaf lists → perfectly balanced 2/2/2/2.
+        for c in 0..4 {
+            assert_eq!(sys.rq.len_of(sys.topo.leaf_of(CpuId(c))), 2);
+        }
+    }
+
+    #[test]
+    fn lds_steals_from_closest_victim() {
+        let sys = system(Topology::numa(2, 2));
+        let s = LdsScheduler::new();
+        // Load cpu1 (same node as cpu0) and cpu2 (other node) equally.
+        for (i, c) in [(0, 1), (1, 1), (2, 2), (3, 2)] {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            sys.tasks.with(t, |x| x.last_cpu = Some(CpuId(c)));
+            s.wake(&sys, t);
+        }
+        sys.trace.set_enabled(true);
+        // cpu0 is idle: it must steal from cpu1 (separation 1), not
+        // cpu2 (separation 2).
+        let got = s.pick(&sys, CpuId(0)).unwrap();
+        let from = sys
+            .trace
+            .records()
+            .iter()
+            .find_map(|r| match r.event {
+                Event::Steal { from, .. } => Some(from),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(from, sys.topo.leaf_of(CpuId(1)));
+        let _ = got;
+    }
+}

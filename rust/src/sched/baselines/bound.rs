@@ -1,0 +1,111 @@
+//! Predetermined distribution (paper §2.1) — the Table-2 **Bound** row.
+//!
+//! "Provided that the machine is dedicated to the application, the
+//! thread scheduling can be fully controlled by binding exactly one
+//! thread to each processor." Threads are bound round-robin at first
+//! wake (or via an explicit `bound_cpu`); a CPU only ever runs its own
+//! threads — maximum affinity, zero flexibility, and non-portable in
+//! the paper's sense (the application must know the machine).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::{default_stop, dispatch, enqueue, flatten_wake};
+use crate::sched::{Scheduler, StopReason, System};
+use crate::task::TaskId;
+use crate::topology::CpuId;
+
+/// The binding scheduler.
+#[derive(Debug, Default)]
+pub struct BoundScheduler {
+    next: AtomicUsize,
+}
+
+impl BoundScheduler {
+    pub fn new() -> BoundScheduler {
+        BoundScheduler { next: AtomicUsize::new(0) }
+    }
+
+    fn binding(&self, sys: &System, task: TaskId) -> CpuId {
+        let explicit = sys.tasks.with(task, |t| t.thread_data().bound_cpu);
+        if let Some(c) = explicit {
+            return c;
+        }
+        let c = CpuId(self.next.fetch_add(1, Ordering::Relaxed) % sys.topo.n_cpus());
+        sys.tasks.with(task, |t| t.thread_data_mut().bound_cpu = Some(c));
+        c
+    }
+}
+
+impl Scheduler for BoundScheduler {
+    fn name(&self) -> String {
+        "bound".into()
+    }
+
+    fn wake(&self, sys: &System, task: TaskId) {
+        flatten_wake(sys, task, &mut |sys, t| {
+            let cpu = self.binding(sys, t);
+            enqueue(sys, t, sys.topo.leaf_of(cpu));
+        });
+    }
+
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let leaf = sys.topo.leaf_of(cpu);
+        let (t, _) = sys.rq.pop_max(leaf)?;
+        dispatch(sys, cpu, t, leaf);
+        Some(t)
+    }
+
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        default_stop(sys, cpu, task, why, &mut |sys, t| {
+            // Bound: always back to the binding, never elsewhere.
+            let c = sys.tasks.with(t, |x| x.thread_data().bound_cpu).unwrap_or(cpu);
+            enqueue(sys, t, sys.topo.leaf_of(c));
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testsupport;
+    use super::*;
+    use crate::sched::testutil::system;
+    use crate::task::{PRIO_THREAD, TaskState};
+    use crate::topology::Topology;
+
+    #[test]
+    fn behavioural_suite() {
+        testsupport::drains_all_work(&BoundScheduler::new(), Topology::numa(2, 2), 40);
+        testsupport::flattens_bubbles(&BoundScheduler::new(), Topology::smp(2));
+        testsupport::block_wake_roundtrip(&BoundScheduler::new(), Topology::smp(2));
+    }
+
+    #[test]
+    fn round_robin_binding() {
+        let sys = system(Topology::smp(4));
+        let s = BoundScheduler::new();
+        for i in 0..8 {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            s.wake(&sys, t);
+        }
+        for c in 0..4 {
+            assert_eq!(sys.rq.len_of(sys.topo.leaf_of(CpuId(c))), 2);
+        }
+    }
+
+    #[test]
+    fn never_migrates() {
+        let sys = system(Topology::smp(2));
+        let s = BoundScheduler::new();
+        let t = sys.tasks.new_thread("t", PRIO_THREAD);
+        sys.tasks.with(t, |x| x.thread_data_mut().bound_cpu = Some(CpuId(1)));
+        s.wake(&sys, t);
+        // cpu0 never sees it.
+        assert!(s.pick(&sys, CpuId(0)).is_none());
+        assert_eq!(s.pick(&sys, CpuId(1)), Some(t));
+        s.stop(&sys, CpuId(1), t, StopReason::Yield);
+        assert!(s.pick(&sys, CpuId(0)).is_none());
+        assert_eq!(s.pick(&sys, CpuId(1)), Some(t));
+        assert_eq!(sys.metrics.migrations.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert_eq!(sys.tasks.state(t), TaskState::Running { cpu: CpuId(1) });
+    }
+}

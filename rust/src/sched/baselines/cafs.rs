@@ -1,0 +1,231 @@
+//! Clustered and Hierarchical Affinity Scheduling (Wang et al.) —
+//! paper §2.2.
+//!
+//! CAFS "groups p processors in groups of √p. Whenever idle, rather
+//! than looking around the whole machine, processors steal work from
+//! the least loaded processor of their group ... by aligning groups to
+//! NUMA nodes, data distribution is also localized."
+//!
+//! HAFS "lets any idle group steal work from the most loaded group" —
+//! the structure Linux 2.6 / FreeBSD NUMA development was converging
+//! towards when the paper was written.
+//!
+//! Groups align to NUMA nodes when the machine has them; otherwise the
+//! CPUs are partitioned into ⌈√p⌉-sized clusters.
+
+use super::{default_stop, dispatch, enqueue, flatten_wake, least_loaded_leaf, most_loaded_leaf};
+use crate::metrics::Metrics;
+use crate::sched::{Scheduler, StopReason, System};
+use crate::task::TaskId;
+use crate::topology::{CpuId, Topology};
+use crate::trace::Event;
+
+/// Partition the machine into steal groups.
+fn groups_of(topo: &Topology) -> Vec<Vec<CpuId>> {
+    if topo.n_numa() > 1 {
+        let mut groups = vec![Vec::new(); topo.n_numa()];
+        for c in 0..topo.n_cpus() {
+            groups[topo.numa_of(CpuId(c))].push(CpuId(c));
+        }
+        groups
+    } else {
+        let p = topo.n_cpus();
+        let size = (p as f64).sqrt().ceil() as usize;
+        (0..p)
+            .map(CpuId)
+            .collect::<Vec<_>>()
+            .chunks(size.max(1))
+            .map(|c| c.to_vec())
+            .collect()
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Scope {
+    /// CAFS: steal only within the group.
+    GroupOnly,
+    /// HAFS: whole idle group may raid the most loaded group.
+    Hierarchical,
+}
+
+#[derive(Debug)]
+struct Clustered {
+    scope: Scope,
+}
+
+/// Clustered AFS.
+#[derive(Debug)]
+pub struct CafsScheduler(Clustered);
+
+/// Hierarchical AFS.
+#[derive(Debug)]
+pub struct HafsScheduler(Clustered);
+
+impl CafsScheduler {
+    pub fn new() -> CafsScheduler {
+        CafsScheduler(Clustered { scope: Scope::GroupOnly })
+    }
+}
+
+impl Default for CafsScheduler {
+    fn default() -> Self {
+        CafsScheduler::new()
+    }
+}
+
+impl HafsScheduler {
+    pub fn new() -> HafsScheduler {
+        HafsScheduler(Clustered { scope: Scope::Hierarchical })
+    }
+}
+
+impl Default for HafsScheduler {
+    fn default() -> Self {
+        HafsScheduler::new()
+    }
+}
+
+impl Clustered {
+    fn my_group(&self, topo: &Topology, cpu: CpuId) -> Vec<CpuId> {
+        groups_of(topo)
+            .into_iter()
+            .find(|g| g.contains(&cpu))
+            .expect("cpu in no group")
+    }
+
+    fn wake_impl(&self, sys: &System, task: TaskId) {
+        flatten_wake(sys, task, &mut |sys, t| {
+            let list = sys
+                .tasks
+                .with(t, |x| x.last_cpu)
+                .map(|c| sys.topo.leaf_of(c))
+                .unwrap_or_else(|| least_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId)));
+            enqueue(sys, t, list);
+        });
+    }
+
+    fn pick_impl(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let leaf = sys.topo.leaf_of(cpu);
+        if let Some((t, _)) = sys.rq.pop_max(leaf) {
+            dispatch(sys, cpu, t, leaf);
+            return Some(t);
+        }
+        // Steal within the group first.
+        let group = self.my_group(&sys.topo, cpu);
+        if let Some(v) = most_loaded_leaf(sys, group.iter().copied().filter(|&c| c != cpu)) {
+            if let Some((t, _)) = sys.rq.pop_max(v) {
+                Metrics::inc(&sys.metrics.steals);
+                sys.trace.emit(sys.now(), Event::Steal { task: t, from: v, by: cpu });
+                dispatch(sys, cpu, t, leaf);
+                return Some(t);
+            }
+        }
+        if self.scope == Scope::Hierarchical {
+            // The whole group ran dry: raid the most loaded group.
+            let groups = groups_of(&sys.topo);
+            let loaded = groups
+                .iter()
+                .filter(|g| !g.contains(&cpu))
+                .max_by_key(|g| {
+                    g.iter().map(|&c| sys.rq.len_of(sys.topo.leaf_of(c))).sum::<usize>()
+                })?;
+            let v = most_loaded_leaf(sys, loaded.iter().copied())?;
+            if let Some((t, _)) = sys.rq.pop_max(v) {
+                Metrics::inc(&sys.metrics.steals);
+                sys.trace.emit(sys.now(), Event::Steal { task: t, from: v, by: cpu });
+                dispatch(sys, cpu, t, leaf);
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+macro_rules! impl_clustered_sched {
+    ($ty:ty, $name:expr) => {
+        impl Scheduler for $ty {
+            fn name(&self) -> String {
+                $name.into()
+            }
+
+            fn wake(&self, sys: &System, task: TaskId) {
+                self.0.wake_impl(sys, task);
+            }
+
+            fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+                self.0.pick_impl(sys, cpu)
+            }
+
+            fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+                default_stop(sys, cpu, task, why, &mut |sys, t| {
+                    enqueue(sys, t, sys.topo.leaf_of(cpu))
+                });
+            }
+        }
+    };
+}
+
+impl_clustered_sched!(CafsScheduler, "cafs");
+impl_clustered_sched!(HafsScheduler, "hafs");
+
+#[cfg(test)]
+mod tests {
+    use super::super::testsupport;
+    use super::*;
+    use crate::sched::testutil::system;
+    use crate::task::PRIO_THREAD;
+    use crate::topology::Topology;
+
+    #[test]
+    fn behavioural_suite_hafs() {
+        testsupport::drains_all_work(&HafsScheduler::new(), Topology::numa(2, 2), 40);
+        testsupport::flattens_bubbles(&HafsScheduler::new(), Topology::smp(4));
+        testsupport::block_wake_roundtrip(&HafsScheduler::new(), Topology::smp(4));
+    }
+
+    #[test]
+    fn groups_align_to_numa() {
+        let g = groups_of(&Topology::numa(4, 4));
+        assert_eq!(g.len(), 4);
+        assert!(g.iter().all(|grp| grp.len() == 4));
+        // Group 2 holds cpus 8..12.
+        assert_eq!(g[2], (8..12).map(CpuId).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn groups_sqrt_p_without_numa() {
+        let g = groups_of(&Topology::smp(16));
+        assert_eq!(g.len(), 4);
+        assert!(g.iter().all(|grp| grp.len() == 4));
+    }
+
+    #[test]
+    fn cafs_steals_within_group_only() {
+        let sys = system(Topology::numa(2, 2));
+        let s = CafsScheduler::new();
+        // Work only on node 1 (cpus 2,3).
+        for i in 0..4 {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            sys.tasks.with(t, |x| x.last_cpu = Some(CpuId(2 + i % 2)));
+            s.wake(&sys, t);
+        }
+        // cpu0 (node 0) must NOT steal across groups under CAFS.
+        assert!(s.pick(&sys, CpuId(0)).is_none());
+        // cpu3 (node 1) happily takes from its sibling.
+        assert!(s.pick(&sys, CpuId(3)).is_some());
+    }
+
+    #[test]
+    fn hafs_raids_other_groups_when_dry() {
+        let sys = system(Topology::numa(2, 2));
+        let s = HafsScheduler::new();
+        for i in 0..4 {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            sys.tasks.with(t, |x| x.last_cpu = Some(CpuId(2 + i % 2)));
+            s.wake(&sys, t);
+        }
+        // cpu0's group is dry → hierarchical steal kicks in.
+        assert!(s.pick(&sys, CpuId(0)).is_some());
+        assert!(sys.metrics.steals.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    }
+}

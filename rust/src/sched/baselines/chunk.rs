@@ -1,0 +1,227 @@
+//! Guided and Trapezoid Self-Scheduling (paper §2.2).
+//!
+//! "To avoid such contention, GSS and TSS make each processor take a
+//! whole part of the total work when they are idle, raising the risk of
+//! imbalances." Idle processors transfer a *chunk* of the global list
+//! to their private leaf list:
+//!
+//! * GSS (Polychronopoulos & Kuck): chunk = ⌈remaining / p⌉.
+//! * TSS (Tzen & Ni): chunk decreases linearly from ⌈N/2p⌉ to 1.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{default_stop, dispatch, enqueue, flatten_wake};
+use crate::metrics::Metrics;
+use crate::sched::{Scheduler, StopReason, System};
+use crate::task::TaskId;
+use crate::topology::CpuId;
+
+/// Chunk policy discriminator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Policy {
+    Gss,
+    Tss,
+}
+
+/// Chunking self-scheduler (GSS/TSS).
+#[derive(Debug)]
+pub struct ChunkScheduler {
+    policy: Policy,
+    /// TSS state: the size of the next chunk (monotonically decreasing).
+    next_chunk: AtomicU64,
+    /// TSS decrement per allocation.
+    delta: AtomicU64,
+}
+
+/// Guided Self-Scheduling.
+#[derive(Debug)]
+pub struct GssScheduler(ChunkScheduler);
+
+/// Trapezoid Self-Scheduling.
+#[derive(Debug)]
+pub struct TssScheduler(ChunkScheduler);
+
+impl GssScheduler {
+    pub fn new() -> GssScheduler {
+        GssScheduler(ChunkScheduler {
+            policy: Policy::Gss,
+            next_chunk: AtomicU64::new(0),
+            delta: AtomicU64::new(0),
+        })
+    }
+}
+
+impl Default for GssScheduler {
+    fn default() -> Self {
+        GssScheduler::new()
+    }
+}
+
+impl TssScheduler {
+    pub fn new() -> TssScheduler {
+        TssScheduler(ChunkScheduler {
+            policy: Policy::Tss,
+            next_chunk: AtomicU64::new(0),
+            delta: AtomicU64::new(1),
+        })
+    }
+}
+
+impl Default for TssScheduler {
+    fn default() -> Self {
+        TssScheduler::new()
+    }
+}
+
+impl ChunkScheduler {
+    fn chunk_size(&self, sys: &System) -> usize {
+        let remaining = sys.rq.len_of(sys.topo.root()) as u64;
+        if remaining == 0 {
+            return 0;
+        }
+        let p = sys.topo.n_cpus() as u64;
+        match self.policy {
+            Policy::Gss => remaining.div_ceil(p).max(1) as usize,
+            Policy::Tss => {
+                // First allocation fixes the trapezoid: start at
+                // ceil(N/2p), decrease by delta so it reaches 1.
+                let mut cur = self.next_chunk.load(Ordering::Relaxed);
+                if cur == 0 {
+                    let first = remaining.div_ceil(2 * p).max(1);
+                    // ~N/(first+1) allocations; keep delta >= 1 step
+                    // towards 1 every allocation when possible.
+                    self.next_chunk.store(first, Ordering::Relaxed);
+                    self.delta.store(1, Ordering::Relaxed);
+                    cur = first;
+                }
+                let d = self.delta.load(Ordering::Relaxed);
+                let next = cur.saturating_sub(d).max(1);
+                self.next_chunk.store(next, Ordering::Relaxed);
+                cur.min(remaining).max(1) as usize
+            }
+        }
+    }
+
+    /// Move a chunk from the global list to `cpu`'s leaf.
+    fn grab_chunk(&self, sys: &System, cpu: CpuId) -> bool {
+        let n = self.chunk_size(sys);
+        if n == 0 {
+            return false;
+        }
+        let root = sys.topo.root();
+        let leaf = sys.topo.leaf_of(cpu);
+        let mut moved = 0;
+        for _ in 0..n {
+            match sys.rq.pop_max(root) {
+                Some((t, _)) => {
+                    enqueue(sys, t, leaf);
+                    moved += 1;
+                }
+                None => break,
+            }
+        }
+        if moved > 0 {
+            Metrics::add(&sys.metrics.steals, moved);
+        }
+        moved > 0
+    }
+
+    fn pick_impl(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let leaf = sys.topo.leaf_of(cpu);
+        loop {
+            if let Some((t, _)) = sys.rq.pop_max(leaf) {
+                dispatch(sys, cpu, t, leaf);
+                return Some(t);
+            }
+            if !self.grab_chunk(sys, cpu) {
+                return None;
+            }
+        }
+    }
+}
+
+macro_rules! impl_chunk_sched {
+    ($ty:ty, $name:expr) => {
+        impl Scheduler for $ty {
+            fn name(&self) -> String {
+                $name.into()
+            }
+
+            fn wake(&self, sys: &System, task: TaskId) {
+                // New work lands on the global list; chunks migrate it.
+                flatten_wake(sys, task, &mut |sys, t| enqueue(sys, t, sys.topo.root()));
+            }
+
+            fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+                self.0.pick_impl(sys, cpu)
+            }
+
+            fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+                // Requeue on the leaf it ran on (chunked work stays put).
+                default_stop(sys, cpu, task, why, &mut |sys, t| {
+                    enqueue(sys, t, sys.topo.leaf_of(cpu))
+                });
+            }
+        }
+    };
+}
+
+impl_chunk_sched!(GssScheduler, "gss");
+impl_chunk_sched!(TssScheduler, "tss");
+
+#[cfg(test)]
+mod tests {
+    use super::super::testsupport;
+    use super::*;
+    use crate::sched::testutil::system;
+    use crate::task::PRIO_THREAD;
+    use crate::topology::Topology;
+
+    #[test]
+    fn behavioural_suite_gss() {
+        testsupport::drains_all_work(&GssScheduler::new(), Topology::numa(2, 2), 40);
+        testsupport::flattens_bubbles(&GssScheduler::new(), Topology::smp(2));
+        testsupport::block_wake_roundtrip(&GssScheduler::new(), Topology::smp(2));
+    }
+
+    #[test]
+    fn behavioural_suite_tss() {
+        testsupport::drains_all_work(&TssScheduler::new(), Topology::numa(2, 2), 40);
+        testsupport::flattens_bubbles(&TssScheduler::new(), Topology::smp(2));
+        testsupport::block_wake_roundtrip(&TssScheduler::new(), Topology::smp(2));
+    }
+
+    #[test]
+    fn gss_takes_remaining_over_p() {
+        let sys = system(Topology::smp(4));
+        let s = GssScheduler::new();
+        for i in 0..16 {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            s.wake(&sys, t);
+        }
+        // First pick by cpu0 grabs ceil(16/4) = 4 tasks onto its leaf.
+        let t = s.pick(&sys, CpuId(0)).unwrap();
+        let leaf = sys.topo.leaf_of(CpuId(0));
+        assert_eq!(sys.rq.len_of(leaf), 3, "chunk of 4 minus the dispatched one");
+        let _ = t;
+        assert_eq!(sys.rq.len_of(sys.topo.root()), 12);
+    }
+
+    #[test]
+    fn tss_chunks_decrease() {
+        let sys = system(Topology::smp(2));
+        let s = TssScheduler::new();
+        for i in 0..20 {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            s.wake(&sys, t);
+        }
+        // First chunk = ceil(20/4) = 5; count what lands on the leaf.
+        s.pick(&sys, CpuId(0)).unwrap();
+        let first = sys.rq.len_of(sys.topo.leaf_of(CpuId(0))) + 1;
+        assert_eq!(first, 5);
+        // Grab again from the other cpu: must be <= first.
+        s.pick(&sys, CpuId(1)).unwrap();
+        let second = sys.rq.len_of(sys.topo.leaf_of(CpuId(1))) + 1;
+        assert!(second <= first, "{second} > {first}");
+    }
+}

@@ -1,0 +1,299 @@
+//! Ousterhout gang scheduling (paper §3.1).
+//!
+//! "Gangs hold a fixed number of threads which are to be launched at
+//! the same time on the same machine ... processors may be left idle
+//! because a single machine can only run one gang at a time, even if it
+//! is small." Exactly that pathology is reproduced here (and measured
+//! against the bubble scheduler's generalisation in
+//! `benches/ablation_priority.rs`): one gang owns the machine per time
+//! slice; idle CPUs stay idle rather than mixing gangs.
+//!
+//! Bubbles woken under this scheduler become gangs; loose threads form
+//! an implicit singleton gang each.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::{dispatch, enqueue};
+use crate::metrics::Metrics;
+use crate::sched::{Scheduler, StopReason, System};
+use crate::task::{TaskId, TaskState};
+use crate::topology::CpuId;
+use crate::trace::{Event, RegenWhy, StopWhy};
+
+#[derive(Debug, Default)]
+struct GangState {
+    /// Waiting gangs (bubble task ids or singleton thread ids).
+    queue: VecDeque<TaskId>,
+    /// The gang currently owning the machine.
+    active: Option<TaskId>,
+    /// Engine time consumed by the active gang.
+    used: u64,
+}
+
+/// Machine-wide gang scheduler.
+#[derive(Debug)]
+pub struct GangScheduler {
+    slice: u64,
+    st: Mutex<GangState>,
+}
+
+impl GangScheduler {
+    /// `slice` = engine time a gang owns the machine before rotating.
+    pub fn new(slice: u64) -> GangScheduler {
+        GangScheduler { slice, st: Mutex::new(GangState::default()) }
+    }
+
+    /// Release the gang's threads onto the root list.
+    fn activate(&self, sys: &System, gang: TaskId) {
+        if sys.tasks.is_bubble(gang) {
+            let contents = sys.tasks.with(gang, |t| t.kind_contents_snapshot());
+            for c in contents {
+                let state = sys.tasks.state(c);
+                if state == TaskState::InBubble || state.is_ready() {
+                    if let Some(l) = state.ready_list() {
+                        sys.rq.remove(l, c);
+                    }
+                    enqueue(sys, c, sys.topo.root());
+                }
+            }
+        } else {
+            enqueue(sys, gang, sys.topo.root());
+        }
+    }
+
+    /// True if the gang still has unfinished members.
+    fn gang_live(&self, sys: &System, gang: TaskId) -> bool {
+        if sys.tasks.is_bubble(gang) {
+            sys.tasks
+                .with(gang, |t| t.kind_contents_snapshot())
+                .into_iter()
+                .any(|c| sys.tasks.state(c) != TaskState::Terminated)
+        } else {
+            sys.tasks.state(gang) != TaskState::Terminated
+        }
+    }
+
+    /// Pull the active gang's ready threads off the lists (rotation).
+    fn deactivate(&self, sys: &System, gang: TaskId) {
+        if sys.tasks.is_bubble(gang) {
+            let contents = sys.tasks.with(gang, |t| t.kind_contents_snapshot());
+            for c in contents {
+                if let Some(l) = sys.tasks.state(c).ready_list() {
+                    if sys.rq.remove(l, c) {
+                        sys.tasks.set_state(c, TaskState::InBubble);
+                    }
+                }
+            }
+        }
+        sys.trace.emit(sys.now(), Event::Regen { bubble: gang, why: RegenWhy::Timeslice });
+    }
+
+    /// Ensure some gang is active; rotate if the current one is done.
+    fn ensure_active(&self, sys: &System, st: &mut GangState) {
+        loop {
+            match st.active {
+                Some(g) if self.gang_live(sys, g) => return,
+                Some(g) => {
+                    // Gang finished: drop it.
+                    let _ = g;
+                    st.active = None;
+                    st.used = 0;
+                }
+                None => match st.queue.pop_front() {
+                    Some(g) => {
+                        if !self.gang_live(sys, g) {
+                            continue;
+                        }
+                        st.active = Some(g);
+                        st.used = 0;
+                        self.activate(sys, g);
+                        return;
+                    }
+                    None => return,
+                },
+            }
+        }
+    }
+}
+
+impl Scheduler for GangScheduler {
+    fn name(&self) -> String {
+        "gang".into()
+    }
+
+    fn wake(&self, sys: &System, task: TaskId) {
+        let mut st = self.st.lock().unwrap();
+        let state = sys.tasks.state(task);
+        let is_member = sys.tasks.parent(task).is_some();
+        if is_member && state == TaskState::Blocked {
+            // An unblocked member of some gang: if its gang is active,
+            // rejoin the root list, else wait inside the gang.
+            let gang = sys.tasks.parent(task).unwrap();
+            if st.active == Some(gang) {
+                enqueue(sys, task, sys.topo.root());
+            } else {
+                sys.tasks.set_state(task, TaskState::InBubble);
+            }
+            return;
+        }
+        if sys.tasks.is_bubble(task) {
+            // Park the bubble itself; its members run via activation.
+            sys.tasks.with(task, |t| t.state = TaskState::Blocked);
+        }
+        st.queue.push_back(task);
+    }
+
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let mut st = self.st.lock().unwrap();
+        self.ensure_active(sys, &mut st);
+        st.active?;
+        let root = sys.topo.root();
+        let (t, _) = sys.rq.pop_max(root)?;
+        dispatch(sys, cpu, t, root);
+        Some(t)
+    }
+
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        match why {
+            StopReason::Yield | StopReason::Preempt => {
+                sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Yield });
+                let st = self.st.lock().unwrap();
+                let gang_of = sys.tasks.parent(task).unwrap_or(task);
+                if st.active == Some(gang_of) {
+                    enqueue(sys, task, sys.topo.root());
+                } else {
+                    // Rotated away while running: back into the gang.
+                    sys.tasks.set_state(
+                        task,
+                        if sys.tasks.parent(task).is_some() {
+                            TaskState::InBubble
+                        } else {
+                            TaskState::Blocked
+                        },
+                    );
+                    if sys.tasks.parent(task).is_none() {
+                        // Loose thread: it IS its own gang; requeue it.
+                        drop(st);
+                        let mut st = self.st.lock().unwrap();
+                        st.queue.push_back(task);
+                    }
+                }
+            }
+            StopReason::Block => {
+                sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Block });
+                sys.tasks.set_state(task, TaskState::Blocked);
+            }
+            StopReason::Terminate => {
+                sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Terminate });
+                sys.tasks.set_state(task, TaskState::Terminated);
+            }
+        }
+    }
+
+    fn tick(&self, sys: &System, _cpu: CpuId, _task: TaskId, elapsed: u64) -> bool {
+        let mut st = self.st.lock().unwrap();
+        st.used += elapsed;
+        if st.used >= self.slice && st.queue.iter().any(|&g| self.gang_live(sys, g)) {
+            // Rotate: collect the active gang and requeue it.
+            if let Some(g) = st.active.take() {
+                self.deactivate(sys, g);
+                st.queue.push_back(g);
+                Metrics::inc(&sys.metrics.regenerations);
+                st.used = 0;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marcel::Marcel;
+    use crate::sched::testutil::system;
+    use crate::task::PRIO_THREAD;
+    use crate::topology::Topology;
+
+    fn gang_of(sys: &std::sync::Arc<crate::sched::System>, m: &Marcel, n: usize, tag: &str) -> (TaskId, Vec<TaskId>) {
+        let b = m.bubble_init();
+        let ts: Vec<TaskId> =
+            (0..n).map(|i| m.create_dontsched(format!("{tag}{i}"))).collect();
+        for &t in &ts {
+            m.bubble_inserttask(b, t);
+        }
+        let _ = sys;
+        (b, ts)
+    }
+
+    #[test]
+    fn one_gang_at_a_time() {
+        let sys = system(Topology::smp(4));
+        let s = GangScheduler::new(1_000);
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&sys, &m, 2, "a");
+        let (g2, t2) = gang_of(&sys, &m, 2, "b");
+        s.wake(&sys, g1);
+        s.wake(&sys, g2);
+        // 4 CPUs but gang 1 has only 2 threads: 2 CPUs stay idle
+        // (Ousterhout's fragmentation).
+        let picked: Vec<Option<TaskId>> = (0..4).map(|c| s.pick(&sys, CpuId(c))).collect();
+        let got: Vec<TaskId> = picked.iter().flatten().copied().collect();
+        assert_eq!(got.len(), 2, "only the active gang runs: {picked:?}");
+        assert!(got.iter().all(|t| t1.contains(t)));
+        let _ = (g2, t2);
+    }
+
+    #[test]
+    fn rotation_on_slice_expiry() {
+        let sys = system(Topology::smp(2));
+        let s = GangScheduler::new(100);
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&sys, &m, 2, "a");
+        let (g2, t2) = gang_of(&sys, &m, 2, "b");
+        s.wake(&sys, g1);
+        s.wake(&sys, g2);
+        let x = s.pick(&sys, CpuId(0)).unwrap();
+        let y = s.pick(&sys, CpuId(1)).unwrap();
+        assert!(t1.contains(&x) && t1.contains(&y));
+        assert!(s.tick(&sys, CpuId(0), x, 150), "slice must expire");
+        s.stop(&sys, CpuId(0), x, StopReason::Preempt);
+        s.stop(&sys, CpuId(1), y, StopReason::Preempt);
+        let x2 = s.pick(&sys, CpuId(0)).unwrap();
+        assert!(t2.contains(&x2), "second gang's turn");
+    }
+
+    #[test]
+    fn finished_gang_gives_way() {
+        let sys = system(Topology::smp(2));
+        let s = GangScheduler::new(1_000_000);
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&sys, &m, 1, "a");
+        let (g2, t2) = gang_of(&sys, &m, 1, "b");
+        s.wake(&sys, g1);
+        s.wake(&sys, g2);
+        let x = s.pick(&sys, CpuId(0)).unwrap();
+        assert_eq!(x, t1[0]);
+        s.stop(&sys, CpuId(0), x, StopReason::Terminate);
+        let y = s.pick(&sys, CpuId(0)).unwrap();
+        assert_eq!(y, t2[0]);
+        let _ = (g1, g2);
+    }
+
+    #[test]
+    fn loose_threads_are_singleton_gangs() {
+        let sys = system(Topology::smp(2));
+        let s = GangScheduler::new(1_000);
+        let a = sys.tasks.new_thread("a", PRIO_THREAD);
+        let b = sys.tasks.new_thread("b", PRIO_THREAD);
+        s.wake(&sys, a);
+        s.wake(&sys, b);
+        let x = s.pick(&sys, CpuId(0)).unwrap();
+        assert_eq!(x, a);
+        // b is a different gang: cannot run concurrently.
+        assert!(s.pick(&sys, CpuId(1)).is_none());
+        s.stop(&sys, CpuId(0), x, StopReason::Terminate);
+        assert_eq!(s.pick(&sys, CpuId(1)), Some(b));
+    }
+}

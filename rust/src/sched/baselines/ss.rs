@@ -1,0 +1,82 @@
+//! Self-Scheduling (SS): one global ready list (paper §2.2).
+//!
+//! "They basically use a single list of ready tasks from which the
+//! scheduler just picks up the next thread to be scheduled." This is the
+//! Table-2 **Simple** row: the workload balances automatically but
+//! threads land on whichever processor is free first, so NUMA affinity
+//! is destroyed every reschedule — and the single list is a contention
+//! bottleneck as the CPU count grows (measured by `benches/rq_scaling`).
+
+use super::{default_stop, dispatch, enqueue, flatten_wake};
+use crate::sched::{Scheduler, StopReason, System};
+use crate::task::TaskId;
+use crate::topology::CpuId;
+
+/// The single-global-list scheduler.
+#[derive(Debug, Default)]
+pub struct SsScheduler;
+
+impl SsScheduler {
+    pub fn new() -> SsScheduler {
+        SsScheduler
+    }
+}
+
+impl Scheduler for SsScheduler {
+    fn name(&self) -> String {
+        "ss".into()
+    }
+
+    fn wake(&self, sys: &System, task: TaskId) {
+        flatten_wake(sys, task, &mut |sys, t| enqueue(sys, t, sys.topo.root()));
+    }
+
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let root = sys.topo.root();
+        let (task, _prio) = sys.rq.pop_max(root)?;
+        dispatch(sys, cpu, task, root);
+        Some(task)
+    }
+
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        default_stop(sys, cpu, task, why, &mut |sys, t| enqueue(sys, t, sys.topo.root()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testsupport;
+    use super::*;
+    use crate::sched::testutil::system;
+    use crate::task::PRIO_THREAD;
+    use crate::topology::Topology;
+
+    #[test]
+    fn behavioural_suite() {
+        testsupport::drains_all_work(&SsScheduler::new(), Topology::numa(2, 2), 20);
+        testsupport::flattens_bubbles(&SsScheduler::new(), Topology::smp(2));
+        testsupport::block_wake_roundtrip(&SsScheduler::new(), Topology::smp(2));
+    }
+
+    #[test]
+    fn any_cpu_serves_the_global_list() {
+        let sys = system(Topology::numa(2, 2));
+        let s = SsScheduler::new();
+        let t = sys.tasks.new_thread("t", PRIO_THREAD);
+        s.wake(&sys, t);
+        // The farthest CPU can take it straight away: no affinity.
+        assert_eq!(s.pick(&sys, CpuId(3)), Some(t));
+    }
+
+    #[test]
+    fn fifo_order() {
+        let sys = system(Topology::smp(2));
+        let s = SsScheduler::new();
+        let a = sys.tasks.new_thread("a", PRIO_THREAD);
+        let b = sys.tasks.new_thread("b", PRIO_THREAD);
+        s.wake(&sys, a);
+        s.wake(&sys, b);
+        assert_eq!(s.pick(&sys, CpuId(0)), Some(a));
+        assert_eq!(s.pick(&sys, CpuId(1)), Some(b));
+    }
+}

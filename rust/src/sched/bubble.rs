@@ -1,0 +1,1060 @@
+//! The bubble scheduler (paper §3.3 & §4) — the system contribution.
+//!
+//! Bubbles *descend* the list hierarchy towards the processors that pick
+//! them, *burst* at their bursting level (releasing held threads and
+//! sub-bubbles), and are *regenerated* — pulled closed again and moved
+//! up — either correctively (an idle processor rebalances work while
+//! keeping affinity intact) or preventively (per-bubble time slices,
+//! which combined with Figure-1 priorities yields gang scheduling).
+//!
+//! Scheduling is strictly per-processor: a CPU calls [`BubbleScheduler::pick`]
+//! when it needs work. The pick runs the paper's two-pass search:
+//! pass 1 scans the lock-free max-priority hints of the lists covering
+//! the CPU (most local first), pass 2 locks only the chosen list and
+//! re-checks, retrying if another processor raced us to the task.
+//!
+//! Accounting invariants (checked by the property tests):
+//! * `outside` = number of direct contents currently *on lists or
+//!   running* (blocked contents are not outside: they hold no list slot,
+//!   matching §4 — regeneration "removes all of them from the task
+//!   lists, except threads being executed").
+//! * A regenerating bubble closes and requeues when `outside` drops to
+//!   0 ("the last thread closes the bubble and moves it up").
+//! * `live` = non-terminated direct contents; 0 terminates the bubble.
+
+use std::sync::Mutex;
+
+use super::{Scheduler, StopReason, System};
+use crate::metrics::Metrics;
+use crate::task::{BubblePhase, BurstLevel, Task, TaskId, TaskKind, TaskState};
+use crate::topology::{CpuId, LevelId};
+use crate::trace::{Event, RegenWhy, StopWhy};
+
+/// Tunables for the bubble scheduler (the paper §3.3.1 deliberately
+/// exposes these: "more than a mere scheduling model, we propose a
+/// scheduling experimentation platform").
+#[derive(Debug, Clone)]
+pub struct BubbleConfig {
+    /// Bursting level used by bubbles that don't set their own.
+    pub default_burst: BurstLevel,
+    /// Corrective regeneration: idle processors may pull a remote
+    /// bubble closed and move it up to re-burst on their side (§3.3.3).
+    pub idle_regen: bool,
+    /// Allow idle processors to steal lone ready *threads* from
+    /// non-covering lists when no bubble rebalancing is possible.
+    pub thread_steal: bool,
+    /// Default per-bubble time slice (engine units); None = no
+    /// preventive regeneration.
+    pub default_timeslice: Option<u64>,
+    /// Minimum engine-time between two regenerations of the same bubble
+    /// (hysteresis against the §3.4 "ping-pong" pathology).
+    pub regen_hysteresis: u64,
+}
+
+impl Default for BubbleConfig {
+    fn default() -> Self {
+        BubbleConfig {
+            default_burst: BurstLevel::default(),
+            idle_regen: true,
+            thread_steal: true,
+            default_timeslice: None,
+            regen_hysteresis: 5_000_000,
+        }
+    }
+}
+
+/// Scheduler-private bubble bookkeeping (burst registry, last-regen
+/// stamps) kept outside the task table.
+#[derive(Debug, Default)]
+struct Evolution {
+    /// Bubbles currently burst (candidates for corrective regeneration).
+    burst_bubbles: Vec<TaskId>,
+    /// Engine time of each bubble's last regeneration.
+    last_regen: std::collections::HashMap<usize, u64>,
+}
+
+/// The bubble scheduler.
+#[derive(Debug)]
+pub struct BubbleScheduler {
+    cfg: BubbleConfig,
+    /// Serialises bubble structural evolution (burst, regeneration,
+    /// termination accounting). The thread-only fast path (Table 1
+    /// "Yield") never takes it.
+    evo: Mutex<Evolution>,
+}
+
+impl BubbleScheduler {
+    pub fn new(cfg: BubbleConfig) -> BubbleScheduler {
+        BubbleScheduler { cfg, evo: Mutex::new(Evolution::default()) }
+    }
+
+    /// Config accessor.
+    pub fn config(&self) -> &BubbleConfig {
+        &self.cfg
+    }
+
+    // ------------------------------------------------------------ queueing
+
+    /// Put a task on a list and fix its state.
+    fn enqueue(&self, sys: &System, task: TaskId, list: LevelId) {
+        let prio = sys.tasks.with(task, |t| {
+            t.state = TaskState::Ready { list };
+            t.last_list = Some(list);
+            t.prio
+        });
+        sys.rq.push(list, task, prio);
+        sys.trace.emit(sys.now(), Event::Enqueue { task, list });
+    }
+
+    // ------------------------------------------------------- two-pass pick
+
+    /// Pass 1: lock-free scan of the covering lists, most local first.
+    /// Returns the list holding the (apparently) highest-priority task;
+    /// ties go to the more local list.
+    fn pass1(&self, sys: &System, cpu: CpuId) -> Option<LevelId> {
+        let mut best: Option<(LevelId, i32)> = None;
+        for &l in sys.topo.covering(cpu) {
+            let p = sys.rq.peek_max(l);
+            if p == i32::MIN {
+                continue;
+            }
+            match best {
+                Some((_, bp)) if p <= bp => {}
+                _ => best = Some((l, p)),
+            }
+        }
+        best.map(|(l, _)| l)
+    }
+
+    /// Dispatch a popped thread on the CPU.
+    fn dispatch(&self, sys: &System, cpu: CpuId, task: TaskId, from: LevelId) {
+        sys.tasks.with(task, |t| {
+            debug_assert!(t.is_thread());
+            if let Some(last) = t.last_cpu {
+                if last != cpu {
+                    Metrics::inc(&sys.metrics.migrations);
+                }
+            }
+            t.state = TaskState::Running { cpu };
+            t.last_cpu = Some(cpu);
+            t.last_list = Some(from);
+        });
+        Metrics::inc(&sys.metrics.picks);
+        sys.trace.emit(sys.now(), Event::Dispatch { task, cpu });
+    }
+
+    // --------------------------------------------------- bubble evolution
+
+    /// A picked bubble takes one evolution step (Figure 3): go down one
+    /// level towards the picking CPU, or burst here.
+    fn bubble_step(&self, sys: &System, cpu: CpuId, bubble: TaskId, cur: LevelId) {
+        let mut evo = self.evo.lock().unwrap();
+        let (target_depth, phase) = sys.tasks.with(bubble, |t| {
+            let d = t.bubble_data();
+            (d.burst_depth(self.cfg.default_burst, &sys.topo), d.phase)
+        });
+        if phase != BubblePhase::Closed {
+            // Raced with a concurrent burst; nothing to do.
+            return;
+        }
+        let cur_depth = sys.topo.node(cur).depth;
+        if cur_depth < target_depth && sys.topo.node(cur).covers(cpu) {
+            if let Some(to) = sys.topo.child_towards(cur, cpu) {
+                // Figure 3 (b)-(c): ride down towards the CPU.
+                Metrics::inc(&sys.metrics.bubble_descents);
+                sys.trace.emit(sys.now(), Event::BubbleDown { bubble, from: cur, to });
+                self.enqueue(sys, bubble, to);
+                return;
+            }
+        }
+        // Figure 3 (d): burst here.
+        self.burst(sys, &mut evo, bubble, cur);
+    }
+
+    /// Release a bubble's contents onto `list` (§3.3.1: "held threads
+    /// and bubbles are released and can be executed (or go deeper)").
+    fn burst(&self, sys: &System, evo: &mut Evolution, bubble: TaskId, list: LevelId) {
+        let (contents, live) = sys.tasks.with(bubble, |t| {
+            let d = t.bubble_data_mut();
+            d.phase = BubblePhase::Burst;
+            d.home_list = Some(list);
+            // Burst bubbles live off-list; Blocked is the off-list state.
+            t.state = TaskState::Blocked;
+            (t.kind_contents_snapshot(), t.bubble_data().live)
+        });
+        let mut released = 0usize;
+        for c in contents {
+            if sys.tasks.state(c) == TaskState::InBubble {
+                self.enqueue(sys, c, list);
+                released += 1;
+            }
+        }
+        sys.tasks.with(bubble, |t| {
+            t.bubble_data_mut().outside = released;
+        });
+        evo.burst_bubbles.push(bubble);
+        Metrics::inc(&sys.metrics.bursts);
+        sys.trace.emit(sys.now(), Event::Burst { bubble, list, released });
+        if live == 0 {
+            // Empty (or fully-terminated) bubble: it is done.
+            self.terminate_bubble(sys, evo, bubble);
+        }
+    }
+
+    /// Begin regeneration: pull Ready contents back into the bubble;
+    /// Running ones will come back by themselves (§4). If everything is
+    /// already back, finish immediately.
+    fn start_regen(
+        &self,
+        sys: &System,
+        evo: &mut Evolution,
+        bubble: TaskId,
+        target: LevelId,
+        why: RegenWhy,
+    ) {
+        let contents = sys.tasks.with(bubble, |t| {
+            let d = t.bubble_data_mut();
+            d.regen_pending = true;
+            d.regen_target = Some(target);
+            d.slice_used = 0;
+            t.kind_contents_snapshot()
+        });
+        Metrics::inc(&sys.metrics.regenerations);
+        sys.trace.emit(sys.now(), Event::Regen { bubble, why });
+        evo.last_regen.insert(bubble.0, sys.now());
+        let mut returned = 0usize;
+        for c in contents {
+            let list = sys.tasks.with(c, |t| t.state.ready_list());
+            if let Some(l) = list {
+                if sys.rq.remove(l, c) {
+                    sys.tasks.set_state(c, TaskState::InBubble);
+                    returned += 1;
+                }
+            }
+        }
+        let outside_now = sys.tasks.with(bubble, |t| {
+            let d = t.bubble_data_mut();
+            d.outside = d.outside.saturating_sub(returned);
+            d.outside
+        });
+        if outside_now == 0 {
+            self.finish_regen(sys, evo, bubble);
+        }
+    }
+
+    /// Close the bubble and requeue it at the end of its target list
+    /// ("the last thread closes the bubble and moves it up", §4).
+    fn finish_regen(&self, sys: &System, evo: &mut Evolution, bubble: TaskId) {
+        let (target, prio, live) = sys.tasks.with(bubble, |t| {
+            let prio = t.prio;
+            let d = t.bubble_data_mut();
+            d.phase = BubblePhase::Closed;
+            d.regen_pending = false;
+            let target = d.regen_target.take().or(d.home_list).unwrap_or(LevelId(0));
+            d.home_list = None;
+            (target, prio, d.live)
+        });
+        evo.burst_bubbles.retain(|&b| b != bubble);
+        if live == 0 {
+            self.terminate_bubble(sys, evo, bubble);
+            return;
+        }
+        sys.tasks.with(bubble, |t| {
+            t.state = TaskState::Ready { list: target };
+            t.last_list = Some(target);
+        });
+        sys.rq.push_back(target, bubble, prio);
+        sys.trace.emit(sys.now(), Event::RegenDone { bubble, list: target });
+    }
+
+    /// Bubble termination: all contents terminated. Propagates to the
+    /// parent bubble like a terminated thread.
+    fn terminate_bubble(&self, sys: &System, evo: &mut Evolution, bubble: TaskId) {
+        let parent = sys.tasks.with(bubble, |t| {
+            // Remove from any list it might still be queued on.
+            if let TaskState::Ready { list } = t.state {
+                sys.rq.remove(list, t.id);
+            }
+            t.state = TaskState::Terminated;
+            t.parent
+        });
+        evo.burst_bubbles.retain(|&b| b != bubble);
+        if let Some(p) = parent {
+            self.child_done(sys, evo, p);
+        }
+    }
+
+    /// A direct child (thread or bubble) of bubble `p` terminated while
+    /// outside; decrement both counters and resolve consequences.
+    fn child_done(&self, sys: &System, evo: &mut Evolution, p: TaskId) {
+        let (live, outside, regen_pending, phase) = sys.tasks.with(p, |t| {
+            let d = t.bubble_data_mut();
+            d.live = d.live.saturating_sub(1);
+            d.outside = d.outside.saturating_sub(1);
+            (d.live, d.outside, d.regen_pending, d.phase)
+        });
+        if regen_pending && outside == 0 {
+            self.finish_regen(sys, evo, p);
+        } else if live == 0 && phase == BubblePhase::Burst {
+            self.terminate_bubble(sys, evo, p);
+        }
+    }
+
+    /// A content leaves the "outside" population without terminating
+    /// (it blocked, or re-entered the bubble).
+    fn leave_outside(&self, sys: &System, evo: &mut Evolution, p: TaskId) {
+        let (outside, regen_pending) = sys.tasks.with(p, |t| {
+            let d = t.bubble_data_mut();
+            d.outside = d.outside.saturating_sub(1);
+            (d.outside, d.regen_pending)
+        });
+        if regen_pending && outside == 0 {
+            self.finish_regen(sys, evo, p);
+        }
+    }
+
+    /// A running thread re-enters its regenerating bubble (§4). Returns
+    /// false if the regeneration already completed (caller requeues
+    /// normally instead).
+    fn try_return_to_bubble(&self, sys: &System, task: TaskId, parent: TaskId) -> bool {
+        let mut evo = self.evo.lock().unwrap();
+        let still_pending = sys.tasks.with(parent, |t| t.bubble_data().regen_pending);
+        if !still_pending {
+            return false;
+        }
+        sys.tasks.set_state(task, TaskState::InBubble);
+        sys.trace.emit(
+            sys.now(),
+            Event::Stop { task, cpu: CpuId(usize::MAX), why: StopWhy::BackInBubble },
+        );
+        self.leave_outside(sys, &mut evo, parent);
+        true
+    }
+
+    // ------------------------------------------------------ idle handling
+
+    /// Corrective rebalancing (§3.3.3): an idle CPU looks for a burst
+    /// bubble homed outside its own subtree that still has ready work,
+    /// regenerates it and moves it up to the closest list covering both
+    /// — from where this CPU will pull it down and re-burst it locally,
+    /// "getting a new distribution suited to the new workload while
+    /// keeping affinity intact".
+    fn idle_regen(&self, sys: &System, cpu: CpuId) -> bool {
+        let mut evo = self.evo.lock().unwrap();
+        let now = sys.now();
+        let candidates: Vec<TaskId> = evo.burst_bubbles.clone();
+        for bubble in candidates {
+            let home = sys.tasks.with(bubble, |t| {
+                let d = t.bubble_data();
+                if d.regen_pending || d.phase != BubblePhase::Burst {
+                    None
+                } else {
+                    d.home_list
+                }
+            });
+            let Some(home) = home else { continue };
+            if sys.topo.node(home).covers(cpu) {
+                continue; // our own work; nothing to rebalance
+            }
+            if let Some(&last) = evo.last_regen.get(&bubble.0) {
+                if now.saturating_sub(last) < self.cfg.regen_hysteresis {
+                    continue;
+                }
+            }
+            // Ready work left in that bubble? And is it recallable at
+            // all? A content that is itself a *burst* bubble cannot be
+            // pulled back in (its threads are loose beneath it), so
+            // regenerating its parent would stall on it — skip those.
+            // Moving a bubble for a single ready thread is pointless
+            // (plain stealing covers that); require a real group.
+            if self.ready_contents(sys, bubble) < 2 || !self.recallable(sys, bubble) {
+                continue;
+            }
+            // Move up to the lowest ancestor of `home` covering `cpu`.
+            let mut target = home;
+            while !sys.topo.node(target).covers(cpu) {
+                match sys.topo.node(target).parent {
+                    Some(p) => target = p,
+                    None => break,
+                }
+            }
+            self.start_regen(sys, &mut evo, bubble, target, RegenWhy::Idle);
+            return true;
+        }
+        false
+    }
+
+    fn ready_contents(&self, sys: &System, bubble: TaskId) -> usize {
+        let contents = sys.tasks.with(bubble, |t| t.kind_contents_snapshot());
+        contents.into_iter().filter(|&c| sys.tasks.state(c).is_ready()).count()
+    }
+
+    /// A bubble is recallable if none of its live contents is a burst
+    /// sub-bubble (those never "return by themselves").
+    fn recallable(&self, sys: &System, bubble: TaskId) -> bool {
+        let contents = sys.tasks.with(bubble, |t| t.kind_contents_snapshot());
+        contents.into_iter().all(|c| {
+            sys.tasks.with(c, |t| match &t.kind {
+                TaskKind::Bubble(d) => {
+                    d.phase != BubblePhase::Burst || t.state == TaskState::Terminated
+                }
+                TaskKind::Thread(_) => true,
+            })
+        })
+    }
+
+    /// Last resort: steal a ready task from the fullest non-covering
+    /// list.
+    fn steal(&self, sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
+        let mut victim: Option<(LevelId, usize)> = None;
+        for i in 0..sys.rq.len() {
+            let l = LevelId(i);
+            if sys.topo.node(l).covers(cpu) {
+                continue;
+            }
+            let len = sys.rq.len_of(l);
+            if len > victim.map_or(0, |(_, n)| n) {
+                victim = Some((l, len));
+            }
+        }
+        let (l, _) = victim?;
+        let (task, _prio) = sys.rq.pop_max(l)?;
+        Metrics::inc(&sys.metrics.steals);
+        sys.trace.emit(sys.now(), Event::Steal { task, from: l, by: cpu });
+        Some((task, l))
+    }
+}
+
+impl Scheduler for BubbleScheduler {
+    fn name(&self) -> String {
+        "bubble".into()
+    }
+
+    fn wake(&self, sys: &System, task: TaskId) {
+        let parent = sys.tasks.parent(task);
+        let state = sys.tasks.state(task);
+        match parent {
+            None => {
+                // Standalone task (or top-level bubble): requeue with
+                // affinity to its previous list, else the machine root.
+                let list = sys
+                    .tasks
+                    .with(task, |t| t.last_list)
+                    .unwrap_or_else(|| sys.topo.root());
+                self.enqueue(sys, task, list);
+            }
+            Some(p) => {
+                let (phase, regen_pending, home) = sys.tasks.with(p, |t| {
+                    let d = t.bubble_data();
+                    (d.phase, d.regen_pending, d.home_list)
+                });
+                match state {
+                    TaskState::Blocked if regen_pending => {
+                        // Woken into a regenerating bubble: go inside
+                        // (it was not "outside": blocked tasks hold no
+                        // list slot).
+                        let mut evo = self.evo.lock().unwrap();
+                        let _ = &mut evo;
+                        sys.tasks.set_state(task, TaskState::InBubble);
+                    }
+                    TaskState::Blocked | TaskState::InBubble
+                        if phase == BubblePhase::Burst =>
+                    {
+                        // Re-join the burst bubble on its home list
+                        // (covers Figure 4's insert-after-wake too).
+                        let mut evo = self.evo.lock().unwrap();
+                        let _ = &mut evo;
+                        sys.tasks.with(p, |t| t.bubble_data_mut().outside += 1);
+                        self.enqueue(sys, task, home.unwrap_or_else(|| sys.topo.root()));
+                    }
+                    _ => {
+                        // Held in a closed bubble: released at burst.
+                    }
+                }
+            }
+        }
+    }
+
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        // Bound the retry loop: every iteration either dispatches,
+        // performs an evolution step, or burns one retry credit.
+        let mut credits = 4 * sys.rq.len() + 16;
+        loop {
+            if credits == 0 {
+                Metrics::inc(&sys.metrics.idle_picks);
+                return None;
+            }
+            credits -= 1;
+            let Some(list) = self.pass1(sys, cpu) else {
+                // Nothing visible from this CPU: rebalance. Thread
+                // stealing goes first — it makes progress immediately
+                // and cannot stall anyone; whole-bubble regeneration is
+                // the last resort (it recalls ready threads and waits
+                // for running ones, §4, so it is the blunter tool —
+                // the §3.4 ping-pong caveat applies to it).
+                if self.cfg.thread_steal {
+                    if let Some((task, from)) = self.steal(sys, cpu) {
+                        if sys.tasks.is_bubble(task) {
+                            // Pull the whole bubble towards us: hoist it
+                            // to the lowest list covering both sides.
+                            let mut target = from;
+                            while !sys.topo.node(target).covers(cpu) {
+                                match sys.topo.node(target).parent {
+                                    Some(p) => target = p,
+                                    None => break,
+                                }
+                            }
+                            self.enqueue(sys, task, target);
+                            continue;
+                        }
+                        self.dispatch(sys, cpu, task, from);
+                        return Some(task);
+                    }
+                }
+                if self.cfg.idle_regen && self.idle_regen(sys, cpu) {
+                    continue;
+                }
+                Metrics::inc(&sys.metrics.idle_picks);
+                return None;
+            };
+            // Pass 2: lock the chosen list and re-check.
+            let Some((task, _prio)) = sys.rq.pop_max(list) else {
+                Metrics::inc(&sys.metrics.search_retries);
+                continue;
+            };
+            let (is_bubble, terminated) = sys
+                .tasks
+                .with(task, |t| (t.is_bubble(), t.state == TaskState::Terminated));
+            if terminated {
+                continue;
+            }
+            if is_bubble {
+                self.bubble_step(sys, cpu, task, list);
+                continue;
+            }
+            self.dispatch(sys, cpu, task, list);
+            return Some(task);
+        }
+    }
+
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        let parent = sys.tasks.parent(task);
+        match why {
+            StopReason::Yield | StopReason::Preempt => {
+                sys.trace.emit(
+                    sys.now(),
+                    Event::Stop {
+                        task,
+                        cpu,
+                        why: if why == StopReason::Yield {
+                            StopWhy::Yield
+                        } else {
+                            StopWhy::Preempt
+                        },
+                    },
+                );
+                if parent.is_none() {
+                    // Fast path (Table 1 "Yield"): a loose thread
+                    // requeues with a single task-lock round trip.
+                    let leaf = sys.topo.leaf_of(cpu);
+                    let (list, prio) = sys.tasks.with(task, |t| {
+                        let list = t.last_list.unwrap_or(leaf);
+                        t.state = TaskState::Ready { list };
+                        t.last_list = Some(list);
+                        (list, t.prio)
+                    });
+                    if why == StopReason::Preempt {
+                        Metrics::inc(&sys.metrics.preemptions);
+                    }
+                    sys.rq.push(list, task, prio);
+                    sys.trace.emit(sys.now(), Event::Enqueue { task, list });
+                    return;
+                }
+                let parent_regen = parent
+                    .map(|p| sys.tasks.with(p, |t| t.bubble_data().regen_pending))
+                    .unwrap_or(false);
+                if parent_regen {
+                    if self.try_return_to_bubble(sys, task, parent.unwrap()) {
+                        return;
+                    }
+                }
+                let list = sys
+                    .tasks
+                    .with(task, |t| t.last_list)
+                    .unwrap_or_else(|| sys.topo.leaf_of(cpu));
+                if why == StopReason::Preempt {
+                    Metrics::inc(&sys.metrics.preemptions);
+                }
+                self.enqueue(sys, task, list);
+            }
+            StopReason::Block => {
+                sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Block });
+                sys.tasks.set_state(task, TaskState::Blocked);
+                if let Some(p) = parent {
+                    // Blocked threads hold no list slot: they leave the
+                    // outside population until woken (§4 semantics).
+                    let mut evo = self.evo.lock().unwrap();
+                    self.leave_outside(sys, &mut evo, p);
+                }
+            }
+            StopReason::Terminate => {
+                sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Terminate });
+                sys.tasks.set_state(task, TaskState::Terminated);
+                if let Some(p) = parent {
+                    let mut evo = self.evo.lock().unwrap();
+                    self.child_done(sys, &mut evo, p);
+                }
+            }
+        }
+    }
+
+    fn tick(&self, sys: &System, _cpu: CpuId, task: TaskId, elapsed: u64) -> bool {
+        // Charge the nearest ancestor bubble that has a time slice.
+        let mut cur = sys.tasks.parent(task);
+        while let Some(b) = cur {
+            let (slice, parent) = sys.tasks.with(b, |t| {
+                let d = t.bubble_data();
+                (d.timeslice.or(self.cfg.default_timeslice), t.parent)
+            });
+            match slice {
+                Some(q) => {
+                    let expired = sys.tasks.with(b, |t| {
+                        let d = t.bubble_data_mut();
+                        d.slice_used += elapsed;
+                        d.slice_used >= q && !d.regen_pending
+                    });
+                    if expired {
+                        let home = sys.tasks.with(b, |t| t.bubble_data().home_list);
+                        if let Some(h) = home {
+                            // Preventive regeneration: back to the end
+                            // of its own list; another bubble bursts to
+                            // occupy the freed processors (§3.3.3).
+                            let mut evo = self.evo.lock().unwrap();
+                            self.start_regen(sys, &mut evo, b, h, RegenWhy::Timeslice);
+                            Metrics::inc(&sys.metrics.preemptions);
+                            return true;
+                        }
+                    }
+                    return false;
+                }
+                None => cur = parent,
+            }
+        }
+        false
+    }
+}
+
+// Helper on Task to snapshot bubble contents without exposing internals.
+impl Task {
+    /// Clone the contents list of a bubble task (empty for threads).
+    pub fn kind_contents_snapshot(&self) -> Vec<TaskId> {
+        match &self.kind {
+            TaskKind::Bubble(b) => b.contents.clone(),
+            TaskKind::Thread(_) => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marcel::Marcel;
+    use crate::sched::testutil::{drain_cpu, spawn_threads, system};
+    use crate::task::{PRIO_BUBBLE, PRIO_THREAD};
+    use crate::topology::Topology;
+
+    fn sched() -> BubbleScheduler {
+        BubbleScheduler::new(BubbleConfig::default())
+    }
+
+    #[test]
+    fn plain_threads_round_trip() {
+        let sys = system(Topology::smp(2));
+        let s = sched();
+        let ts = spawn_threads(&sys, &s, 3);
+        let order = drain_cpu(&sys, &s, CpuId(0));
+        assert_eq!(order, ts);
+        assert!(s.pick(&sys, CpuId(0)).is_none());
+    }
+
+    #[test]
+    fn yield_requeues_to_same_list() {
+        let sys = system(Topology::smp(2));
+        let s = sched();
+        let ts = spawn_threads(&sys, &s, 1);
+        let t = s.pick(&sys, CpuId(0)).unwrap();
+        assert_eq!(t, ts[0]);
+        s.stop(&sys, CpuId(0), t, StopReason::Yield);
+        assert!(sys.tasks.state(t).is_ready());
+        let t2 = s.pick(&sys, CpuId(0)).unwrap();
+        assert_eq!(t2, t);
+    }
+
+    #[test]
+    fn bubble_descends_and_bursts_at_numa_level() {
+        let sys = system(Topology::numa(2, 2));
+        let s = sched();
+        let m = Marcel::with_system(&sys);
+        let b = m.bubble_init();
+        let t1 = m.create_dontsched("a");
+        let t2 = m.create_dontsched("b");
+        m.bubble_inserttask(b, t1);
+        m.bubble_inserttask(b, t2);
+        sys.trace.set_enabled(true);
+        s.wake(&sys, b);
+        // cpu0 picks: bubble descends from root to numa0, bursts there,
+        // then cpu0 gets a thread.
+        let got = s.pick(&sys, CpuId(0)).unwrap();
+        assert!(got == t1 || got == t2);
+        // The burst must have happened on the NUMA-node list (depth 1).
+        let records = sys.trace.records();
+        let burst_list = records
+            .iter()
+            .find_map(|r| match r.event {
+                Event::Burst { list, .. } => Some(list),
+                _ => None,
+            })
+            .expect("no burst traced");
+        assert_eq!(sys.topo.node(burst_list).depth, 1);
+        assert_eq!(sys.topo.node(burst_list).kind, crate::topology::LevelKind::NumaNode);
+        // The second thread is visible to cpu1 (same node).
+        let got2 = s.pick(&sys, CpuId(1)).unwrap();
+        assert!(got2 == t1 || got2 == t2);
+        assert_ne!(got, got2);
+    }
+
+    #[test]
+    fn burst_level_leaf_rides_to_cpu_list() {
+        let sys = system(Topology::numa(2, 2));
+        let s = BubbleScheduler::new(BubbleConfig {
+            default_burst: BurstLevel::Leaf,
+            ..BubbleConfig::default()
+        });
+        let m = Marcel::with_system(&sys);
+        let b = m.bubble_init();
+        let t1 = m.create_dontsched("a");
+        m.bubble_inserttask(b, t1);
+        sys.trace.set_enabled(true);
+        s.wake(&sys, b);
+        let got = s.pick(&sys, CpuId(3)).unwrap();
+        assert_eq!(got, t1);
+        let burst_list = sys
+            .trace
+            .records()
+            .iter()
+            .find_map(|r| match r.event {
+                Event::Burst { list, .. } => Some(list),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(burst_list, sys.topo.leaf_of(CpuId(3)));
+    }
+
+    #[test]
+    fn higher_priority_task_wins_over_fifo_order() {
+        let sys = system(Topology::numa(2, 2));
+        let s = sched();
+        let lo = sys.tasks.new_thread("lo", PRIO_THREAD);
+        let hi = sys.tasks.new_thread("hi", crate::task::PRIO_HIGH);
+        s.wake(&sys, lo);
+        s.wake(&sys, hi);
+        let got = s.pick(&sys, CpuId(0)).unwrap();
+        assert_eq!(got, hi, "high priority wins despite FIFO order");
+    }
+
+    #[test]
+    fn local_list_wins_priority_ties() {
+        let sys = system(Topology::numa(2, 2));
+        let s = sched();
+        let global = sys.tasks.new_thread("global", PRIO_THREAD);
+        let local = sys.tasks.new_thread("local", PRIO_THREAD);
+        s.wake(&sys, global); // root list
+        // Place `local` directly on cpu0's leaf list.
+        sys.tasks.with(local, |t| t.last_list = Some(sys.topo.leaf_of(CpuId(0))));
+        s.wake(&sys, local);
+        let got = s.pick(&sys, CpuId(0)).unwrap();
+        assert_eq!(got, local, "ties must prefer the most local list");
+    }
+
+    #[test]
+    fn empty_bubble_terminates_on_burst() {
+        let sys = system(Topology::smp(2));
+        let s = sched();
+        let m = Marcel::with_system(&sys);
+        let b = m.bubble_init();
+        s.wake(&sys, b);
+        assert!(s.pick(&sys, CpuId(0)).is_none());
+        assert_eq!(sys.tasks.state(b), TaskState::Terminated);
+    }
+
+    #[test]
+    fn thread_terminations_terminate_bubble() {
+        let sys = system(Topology::smp(2));
+        let s = sched();
+        let m = Marcel::with_system(&sys);
+        let b = m.bubble_init();
+        let t1 = m.create_dontsched("a");
+        let t2 = m.create_dontsched("b");
+        m.bubble_inserttask(b, t1);
+        m.bubble_inserttask(b, t2);
+        s.wake(&sys, b);
+        let a = s.pick(&sys, CpuId(0)).unwrap();
+        let c = s.pick(&sys, CpuId(1)).unwrap();
+        s.stop(&sys, CpuId(0), a, StopReason::Terminate);
+        assert_ne!(sys.tasks.state(b), TaskState::Terminated);
+        s.stop(&sys, CpuId(1), c, StopReason::Terminate);
+        assert_eq!(sys.tasks.state(b), TaskState::Terminated);
+    }
+
+    #[test]
+    fn figure4_insert_after_wake() {
+        // Figure 4 inserts thread2 *after* wake_up_bubble: the late
+        // insertion must land on the burst bubble's home list.
+        let sys = system(Topology::smp(2));
+        let s = sched();
+        let m = Marcel::with_system(&sys);
+        let b = m.bubble_init();
+        let t1 = m.create_dontsched("t1");
+        m.bubble_inserttask(b, t1);
+        s.wake(&sys, b);
+        let got1 = s.pick(&sys, CpuId(0)).unwrap();
+        assert_eq!(got1, t1);
+        // Late insertion.
+        let t2 = m.create_dontsched("t2");
+        m.bubble_inserttask(b, t2);
+        s.wake(&sys, t2);
+        let got2 = s.pick(&sys, CpuId(1)).unwrap();
+        assert_eq!(got2, t2);
+        // Both must terminate the bubble.
+        s.stop(&sys, CpuId(0), t1, StopReason::Terminate);
+        s.stop(&sys, CpuId(1), t2, StopReason::Terminate);
+        assert_eq!(sys.tasks.state(b), TaskState::Terminated);
+    }
+
+    #[test]
+    fn gang_scheduling_via_priorities() {
+        // Figure 1: two pair-bubbles under a root bubble; threads
+        // prioritised over bubbles. With 2 CPUs, the first burst pair
+        // must fully occupy the machine before the second bubble bursts.
+        let sys = system(Topology::smp(2));
+        let s = BubbleScheduler::new(BubbleConfig {
+            default_burst: BurstLevel::Immediate,
+            ..BubbleConfig::default()
+        });
+        let m = Marcel::with_system(&sys);
+        let root = m.bubble_init();
+        let b1 = m.bubble_init();
+        let b2 = m.bubble_init();
+        let p1a = m.create_dontsched("p1a");
+        let p1b = m.create_dontsched("p1b");
+        let p2a = m.create_dontsched("p2a");
+        let p2b = m.create_dontsched("p2b");
+        m.bubble_inserttask(b1, p1a);
+        m.bubble_inserttask(b1, p1b);
+        m.bubble_inserttask(b2, p2a);
+        m.bubble_inserttask(b2, p2b);
+        m.bubble_insertbubble(root, b1);
+        m.bubble_insertbubble(root, b2);
+        s.wake(&sys, root);
+        let x = s.pick(&sys, CpuId(0)).unwrap();
+        let y = s.pick(&sys, CpuId(1)).unwrap();
+        let first: std::collections::BTreeSet<TaskId> = [x, y].into();
+        // Must both come from the same pair-bubble (gang!).
+        assert!(
+            first == [p1a, p1b].into() || first == [p2a, p2b].into(),
+            "first gang mixed: {first:?}"
+        );
+    }
+
+    #[test]
+    fn timeslice_regen_rotates_gangs() {
+        let sys = system(Topology::smp(2));
+        let s = BubbleScheduler::new(BubbleConfig {
+            default_burst: BurstLevel::Immediate,
+            default_timeslice: Some(100),
+            ..BubbleConfig::default()
+        });
+        let m = Marcel::with_system(&sys);
+        let root = m.bubble_init();
+        let mk_pair = |tag: &str| {
+            let b = m.bubble_init();
+            let x = m.create_dontsched(format!("{tag}a"));
+            let y = m.create_dontsched(format!("{tag}b"));
+            m.bubble_inserttask(b, x);
+            m.bubble_inserttask(b, y);
+            (b, x, y)
+        };
+        let (b1, _p1a, _p1b) = mk_pair("p1");
+        let (b2, _p2a, _p2b) = mk_pair("p2");
+        m.bubble_insertbubble(root, b1);
+        m.bubble_insertbubble(root, b2);
+        s.wake(&sys, root);
+        let x = s.pick(&sys, CpuId(0)).unwrap();
+        let y = s.pick(&sys, CpuId(1)).unwrap();
+        let gang1: std::collections::BTreeSet<TaskId> = [x, y].into();
+        // Burn the gang's timeslice.
+        let preempt_x = s.tick(&sys, CpuId(0), x, 60);
+        let preempt_y = s.tick(&sys, CpuId(1), y, 60);
+        assert!(preempt_x || preempt_y, "timeslice must trigger");
+        s.stop(&sys, CpuId(0), x, StopReason::Preempt);
+        s.stop(&sys, CpuId(1), y, StopReason::Preempt);
+        // Next picks must be the *other* gang.
+        let x2 = s.pick(&sys, CpuId(0)).unwrap();
+        let y2 = s.pick(&sys, CpuId(1)).unwrap();
+        let gang2: std::collections::BTreeSet<TaskId> = [x2, y2].into();
+        assert!(gang2.is_disjoint(&gang1), "gangs must rotate: {gang1:?} vs {gang2:?}");
+    }
+
+    #[test]
+    fn idle_regen_rebalances_across_nodes() {
+        let sys = system(Topology::numa(2, 1)); // 2 nodes, 1 cpu each
+        let s = BubbleScheduler::new(BubbleConfig {
+            regen_hysteresis: 0,
+            thread_steal: false,
+            ..BubbleConfig::default()
+        });
+        let m = Marcel::with_system(&sys);
+        let b = m.bubble_init();
+        let ts: Vec<TaskId> = (0..4).map(|i| m.create_dontsched(format!("w{i}"))).collect();
+        for &t in &ts {
+            m.bubble_inserttask(b, t);
+        }
+        s.wake(&sys, b);
+        // cpu0 pulls the bubble to node 0 and bursts it there.
+        let t0 = s.pick(&sys, CpuId(0)).unwrap();
+        // cpu1 (other node) sees nothing; its pick triggers a
+        // corrective regeneration, which per §4 must wait for the
+        // running thread before the bubble can move up.
+        assert!(s.pick(&sys, CpuId(1)).is_none());
+        assert!(sys.metrics.regenerations.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        // The running thread finishes — "the last thread closes the
+        // bubble and moves it up".
+        s.stop(&sys, CpuId(0), t0, StopReason::Terminate);
+        // Now cpu1 can pull the bubble down on its side and re-burst.
+        let t1 = s.pick(&sys, CpuId(1)).expect("rebalanced work");
+        assert_ne!(t0, t1);
+        assert_eq!(sys.tasks.state(t1), TaskState::Running { cpu: CpuId(1) });
+    }
+
+    #[test]
+    fn thread_steal_fallback() {
+        let sys = system(Topology::numa(2, 1));
+        let s = BubbleScheduler::new(BubbleConfig {
+            idle_regen: false,
+            thread_steal: true,
+            ..BubbleConfig::default()
+        });
+        // A loose thread stuck on cpu0's leaf list.
+        let t = sys.tasks.new_thread("lone", PRIO_THREAD);
+        sys.tasks.with(t, |x| x.last_list = Some(sys.topo.leaf_of(CpuId(0))));
+        s.wake(&sys, t);
+        // cpu1 can't see that list; stealing must save it.
+        let got = s.pick(&sys, CpuId(1)).unwrap();
+        assert_eq!(got, t);
+        assert_eq!(sys.metrics.steals.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn blocked_thread_wakes_back_to_home_list() {
+        let sys = system(Topology::numa(2, 2));
+        let s = sched();
+        let m = Marcel::with_system(&sys);
+        let b = m.bubble_init();
+        let t1 = m.create_dontsched("a");
+        let t2 = m.create_dontsched("b");
+        m.bubble_inserttask(b, t1);
+        m.bubble_inserttask(b, t2);
+        s.wake(&sys, b);
+        let x = s.pick(&sys, CpuId(0)).unwrap();
+        s.stop(&sys, CpuId(0), x, StopReason::Block);
+        assert_eq!(sys.tasks.state(x), TaskState::Blocked);
+        s.wake(&sys, x);
+        assert!(sys.tasks.state(x).is_ready());
+        // It must be back on the bubble's home list (numa node 0).
+        let list = sys.tasks.state(x).ready_list().unwrap();
+        assert_eq!(sys.topo.node(list).kind, crate::topology::LevelKind::NumaNode);
+    }
+
+    #[test]
+    fn no_task_lost_under_chaotic_schedule() {
+        // Property: every created thread is eventually picked and
+        // terminated; nothing vanishes.
+        use crate::util::proptest::check;
+        check(0xb0b, 25, |rng| {
+            let topo = match rng.below(3) {
+                0 => Topology::smp(4),
+                1 => Topology::numa(2, 2),
+                _ => Topology::deep(),
+            };
+            let n_cpus = topo.n_cpus();
+            let sys = system(topo);
+            let s = BubbleScheduler::new(BubbleConfig {
+                regen_hysteresis: 0,
+                ..Default::default()
+            });
+            let m = Marcel::with_system(&sys);
+            let mut all_threads = Vec::new();
+            for bi in 0..rng.range(1, 4) {
+                let b = m.bubble_init();
+                for ti in 0..rng.range(1, 5) {
+                    let t = m.create_dontsched(format!("b{bi}t{ti}"));
+                    m.bubble_inserttask(b, t);
+                    all_threads.push(t);
+                }
+                s.wake(&sys, b);
+            }
+            for i in 0..rng.range(0, 3) {
+                let t = sys.tasks.new_thread(format!("loose{i}"), PRIO_THREAD);
+                s.wake(&sys, t);
+                all_threads.push(t);
+            }
+            let mut remaining: std::collections::HashSet<TaskId> =
+                all_threads.iter().copied().collect();
+            let mut fuel = 10_000;
+            while !remaining.is_empty() && fuel > 0 {
+                fuel -= 1;
+                let cpu = CpuId(rng.range(0, n_cpus));
+                if let Some(t) = s.pick(&sys, cpu) {
+                    if rng.chance(0.3) {
+                        s.stop(&sys, cpu, t, StopReason::Yield);
+                    } else {
+                        s.stop(&sys, cpu, t, StopReason::Terminate);
+                        remaining.remove(&t);
+                    }
+                }
+            }
+            assert!(remaining.is_empty(), "lost tasks: {remaining:?}");
+        });
+    }
+
+    #[test]
+    fn bubble_priority_below_thread_keeps_machine_busy() {
+        // Paper Figure 1 rationale: a bubble bursts only when running
+        // threads can no longer occupy all processors.
+        let sys = system(Topology::smp(2));
+        let s = BubbleScheduler::new(BubbleConfig {
+            default_burst: BurstLevel::Immediate,
+            ..Default::default()
+        });
+        let m = Marcel::with_system(&sys);
+        let a = sys.tasks.new_thread("a", PRIO_THREAD);
+        let bt = sys.tasks.new_thread("b", PRIO_THREAD);
+        s.wake(&sys, a);
+        s.wake(&sys, bt);
+        let bub = m.bubble_init();
+        let c = m.create_dontsched("c");
+        let d = m.create_dontsched("d");
+        m.bubble_inserttask(bub, c);
+        m.bubble_inserttask(bub, d);
+        s.wake(&sys, bub);
+        let x = s.pick(&sys, CpuId(0)).unwrap();
+        let y = s.pick(&sys, CpuId(1)).unwrap();
+        assert_eq!(
+            std::collections::BTreeSet::from([x, y]),
+            std::collections::BTreeSet::from([a, bt]),
+            "threads must be scheduled before the bubble bursts"
+        );
+        assert_eq!(sys.tasks.with(bub, |t| t.bubble_data().phase), BubblePhase::Closed);
+        assert_eq!(sys.tasks.prio(bub), PRIO_BUBBLE);
+    }
+}

@@ -1,0 +1,93 @@
+//! Schedulers: the paper's bubble scheduler plus the related-work
+//! baselines it is evaluated against.
+//!
+//! Both execution engines ([`crate::sim`] and [`crate::exec`]) drive a
+//! scheduler exclusively through the [`Scheduler`] trait: there is *no
+//! global scheduling* — each processor calls the scheduler code itself
+//! whenever it preempts or terminates a thread (§4).
+
+pub mod baselines;
+mod bubble;
+mod system;
+
+pub use bubble::{BubbleConfig, BubbleScheduler};
+pub use system::System;
+
+use crate::task::TaskId;
+use crate::topology::CpuId;
+
+/// Why a thread left its CPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// Voluntary yield — should be requeued.
+    Yield,
+    /// Timeslice preemption — requeued at the end of its class.
+    Preempt,
+    /// Blocked on a synchronisation object — not requeued until `wake`.
+    Block,
+    /// Finished.
+    Terminate,
+}
+
+/// The scheduling policy interface (per-processor, no global decisions).
+pub trait Scheduler: Send + Sync {
+    /// Policy name for reports.
+    fn name(&self) -> String;
+
+    /// A task (thread, or closed bubble) becomes runnable: first wakeup,
+    /// unblocking, or explicit `marcel_wake_up_bubble`.
+    fn wake(&self, sys: &System, task: TaskId);
+
+    /// The processor asks for its next thread. Bubble evolution
+    /// (descend / burst / regenerate) happens inside. Returns a thread
+    /// in `Running{cpu}` state, or None if the processor must idle.
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId>;
+
+    /// The running thread stopped. `Yield`/`Preempt` requeue it,
+    /// `Block`/`Terminate` do not.
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason);
+
+    /// Timeslice accounting: `elapsed` engine-time has passed on `cpu`
+    /// running `task`. Returns true if the scheduler wants to preempt.
+    fn tick(&self, _sys: &System, _cpu: CpuId, _task: TaskId, _elapsed: u64) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Shared scheduler test helpers.
+
+    use super::*;
+    use crate::task::{TaskState, PRIO_THREAD};
+    use crate::topology::Topology;
+    use std::sync::Arc;
+
+    /// Build a shared System over a preset machine.
+    pub fn system(topo: Topology) -> Arc<System> {
+        Arc::new(System::new(Arc::new(topo)))
+    }
+
+    /// Create `n` woken threads.
+    pub fn spawn_threads(sys: &System, sched: &dyn Scheduler, n: usize) -> Vec<TaskId> {
+        (0..n)
+            .map(|i| {
+                let t = sys.tasks.new_thread(format!("w{i}"), PRIO_THREAD);
+                sched.wake(sys, t);
+                t
+            })
+            .collect()
+    }
+
+    /// Drain a CPU: pick then immediately terminate, until idle.
+    /// Returns the picked order.
+    pub fn drain_cpu(sys: &System, sched: &dyn Scheduler, cpu: CpuId) -> Vec<TaskId> {
+        let mut order = Vec::new();
+        while let Some(t) = sched.pick(sys, cpu) {
+            assert_eq!(sys.tasks.state(t), TaskState::Running { cpu });
+            order.push(t);
+            sched.stop(sys, cpu, t, StopReason::Terminate);
+        }
+        order
+    }
+}

@@ -1,0 +1,69 @@
+//! Shared scheduler state: topology + task table + list hierarchy +
+//! metrics + trace, bundled so engines and schedulers pass one handle.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::metrics::Metrics;
+use crate::rq::RqHierarchy;
+use crate::task::TaskTable;
+use crate::topology::Topology;
+use crate::trace::Trace;
+
+/// Everything a scheduler needs to see the machine and its tasks.
+#[derive(Debug)]
+pub struct System {
+    pub topo: Arc<Topology>,
+    pub tasks: TaskTable,
+    pub rq: RqHierarchy,
+    pub metrics: Metrics,
+    pub trace: Trace,
+    /// Engine clock (simulated cycles / native ns); engines advance it,
+    /// schedulers read it for trace timestamps.
+    clock: AtomicU64,
+}
+
+impl System {
+    /// Fresh system over a machine.
+    pub fn new(topo: Arc<Topology>) -> System {
+        let rq = RqHierarchy::new(&topo);
+        System {
+            topo,
+            tasks: TaskTable::new(),
+            rq,
+            metrics: Metrics::new(),
+            trace: Trace::default(),
+            clock: AtomicU64::new(0),
+        }
+    }
+
+    /// Current engine time.
+    pub fn now(&self) -> u64 {
+        self.clock.load(Ordering::Relaxed)
+    }
+
+    /// Advance the engine clock to `t` (monotonic max).
+    pub fn advance_clock(&self, t: u64) {
+        self.clock.fetch_max(t, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_is_monotonic() {
+        let s = System::new(Arc::new(Topology::smp(2)));
+        assert_eq!(s.now(), 0);
+        s.advance_clock(10);
+        s.advance_clock(5);
+        assert_eq!(s.now(), 10);
+    }
+
+    #[test]
+    fn rq_matches_topology() {
+        let s = System::new(Arc::new(Topology::numa(4, 4)));
+        assert_eq!(s.rq.len(), s.topo.n_components());
+    }
+}

@@ -1,0 +1,147 @@
+//! Simulation cost model: how long a compute chunk takes on a given CPU.
+//!
+//! Mechanisms modelled, each traceable to the paper:
+//! * **NUMA factor** (§5.2): memory-bound work on a remote node costs
+//!   `numa_factor`× ("accessing the memory of its own node is about 3
+//!   times faster").
+//! * **Migration / cache refill** (§2.2's rationale for affinity
+//!   scheduling): a one-time penalty when a thread resumes on a
+//!   different CPU, growing with the hierarchical separation.
+//! * **SMT contention / symbiosis** (§3.1): a busy sibling slows a CPU
+//!   unless the two threads were declared symbiotic.
+
+use crate::topology::{CpuId, DistanceModel, Topology};
+
+/// Inputs describing the state around one compute chunk.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkCtx {
+    /// Fraction of the chunk that is memory-bound (NUMA-sensitive).
+    pub mem_fraction: f64,
+    /// NUMA home of the region being touched (None = cache-resident).
+    pub region_home: Option<usize>,
+    /// CPU that last touched the region (cache-line ownership).
+    pub last_toucher: Option<CpuId>,
+    /// Is the SMT sibling of this CPU busy?
+    pub sibling_busy: bool,
+    /// Is the sibling's thread a declared symbiotic partner?
+    pub sibling_symbiotic: bool,
+}
+
+/// Stateless cost evaluator over a machine + distance model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub dist: DistanceModel,
+}
+
+impl CostModel {
+    pub fn new(dist: DistanceModel) -> CostModel {
+        CostModel { dist }
+    }
+
+    /// Wall-cycles needed to execute `cycles` of work on `cpu`.
+    pub fn chunk_cycles(&self, topo: &Topology, cpu: CpuId, cycles: u64, ctx: &ChunkCtx) -> u64 {
+        let numa_factor = match ctx.region_home {
+            Some(home) => self.dist.mem_factor(topo, cpu, home),
+            None => 1.0,
+        };
+        // Cache-line ownership: data last written by a distant CPU
+        // costs a transfer surcharge growing with the hierarchical
+        // separation (sibling SMT = cheap, other chip/die = expensive).
+        let cache_factor = match ctx.last_toucher {
+            Some(last) => 1.0 + self.dist.cache_line_penalty * topo.separation(cpu, last) as f64,
+            None => 1.0,
+        };
+        let mem_factor = numa_factor * cache_factor;
+        let compute = cycles as f64
+            * ((1.0 - ctx.mem_fraction) + ctx.mem_fraction * mem_factor);
+        let smt = if ctx.sibling_busy {
+            if ctx.sibling_symbiotic {
+                self.dist.smt_symbiosis
+            } else {
+                self.dist.smt_contention
+            }
+        } else {
+            1.0
+        };
+        (compute / smt).round() as u64
+    }
+
+    /// One-time cost of resuming `on` a CPU after last running on
+    /// `from` (cache refill across the hierarchy).
+    pub fn resume_cycles(&self, topo: &Topology, from: Option<CpuId>, on: CpuId) -> u64 {
+        match from {
+            Some(f) => self.dist.migration_cycles(topo, f, on),
+            None => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    fn ctx() -> ChunkCtx {
+        ChunkCtx { mem_fraction: 0.4, region_home: Some(0), last_toucher: None, sibling_busy: false, sibling_symbiotic: false }
+    }
+
+    #[test]
+    fn local_vs_remote_numa() {
+        let topo = Topology::numa(4, 4);
+        let m = CostModel::new(DistanceModel::default());
+        let local = m.chunk_cycles(&topo, CpuId(0), 1000, &ctx());
+        let remote = m.chunk_cycles(&topo, CpuId(15), 1000, &ctx());
+        assert_eq!(local, 1000);
+        // 0.6 + 0.4*3 = 1.8
+        assert_eq!(remote, 1800);
+    }
+
+    #[test]
+    fn pure_compute_ignores_numa() {
+        let topo = Topology::numa(2, 2);
+        let m = CostModel::new(DistanceModel::default());
+        let c = ChunkCtx { mem_fraction: 0.0, ..ctx() };
+        assert_eq!(m.chunk_cycles(&topo, CpuId(3), 1000, &c), 1000);
+    }
+
+    #[test]
+    fn no_region_means_local() {
+        let topo = Topology::numa(2, 2);
+        let m = CostModel::new(DistanceModel::default());
+        let c = ChunkCtx { region_home: None, ..ctx() };
+        assert_eq!(m.chunk_cycles(&topo, CpuId(3), 1000, &c), 1000);
+    }
+
+    #[test]
+    fn smt_contention_and_symbiosis() {
+        let topo = Topology::xeon_2x_ht();
+        let m = CostModel::new(DistanceModel::default());
+        let base = ChunkCtx { mem_fraction: 0.0, region_home: None, last_toucher: None, sibling_busy: false, sibling_symbiotic: false };
+        let alone = m.chunk_cycles(&topo, CpuId(0), 1000, &base);
+        let contended = m.chunk_cycles(
+            &topo,
+            CpuId(0),
+            1000,
+            &ChunkCtx { sibling_busy: true, ..base },
+        );
+        let symbiotic = m.chunk_cycles(
+            &topo,
+            CpuId(0),
+            1000,
+            &ChunkCtx { sibling_busy: true, sibling_symbiotic: true, ..base },
+        );
+        assert_eq!(alone, 1000);
+        assert!(contended > symbiotic && symbiotic > alone);
+    }
+
+    #[test]
+    fn resume_penalty_scales() {
+        let topo = Topology::numa(2, 2);
+        let m = CostModel::new(DistanceModel::default());
+        assert_eq!(m.resume_cycles(&topo, None, CpuId(0)), 0);
+        assert_eq!(m.resume_cycles(&topo, Some(CpuId(0)), CpuId(0)), 0);
+        let near = m.resume_cycles(&topo, Some(CpuId(0)), CpuId(1));
+        let far = m.resume_cycles(&topo, Some(CpuId(0)), CpuId(2));
+        assert!(far > near);
+    }
+}

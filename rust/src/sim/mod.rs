@@ -1,0 +1,714 @@
+//! Deterministic discrete-event simulator of a hierarchical machine.
+//!
+//! This is the evaluation substrate standing in for the paper's
+//! testbeds (Bull NovaScale ccNUMA 16× Itanium II, dual HT Xeon — see
+//! DESIGN.md §Substitutions): virtual CPUs execute thread *programs*
+//! ([`workload::Program`]) under a pluggable [`Scheduler`], with memory
+//! placement (first touch), the NUMA factor, cache-migration penalties
+//! and SMT sibling effects modelled by [`cost::CostModel`].
+//!
+//! The simulator calls the scheduler exactly like the paper's MARCEL:
+//! per-processor, on preemption / blocking / termination — never
+//! globally.
+
+pub mod cost;
+pub mod workload;
+
+pub use cost::{ChunkCtx, CostModel};
+pub use workload::{BarrierId, Cursor, Program, RegionId, WorkItem};
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::sched::{Scheduler, StopReason, System};
+use crate::task::{Prio, TaskId, TaskState};
+use crate::topology::CpuId;
+use crate::trace::Event as TraceEvent;
+use crate::util::Rng;
+
+/// Memory allocation policy for simulated regions (paper §2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Homed on the node of the first CPU that touches it (the OS
+    /// default the paper's applications rely on).
+    FirstTouch,
+    /// Spread across nodes in allocation order.
+    RoundRobin,
+    /// Explicitly placed on one node.
+    Fixed(usize),
+}
+
+/// Engine tunables.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Max compute cycles executed per scheduling segment (tick
+    /// granularity for timeslice accounting).
+    pub quantum: u64,
+    /// Idle CPUs re-poll the scheduler after this many cycles.
+    pub idle_repoll: u64,
+    /// Cost of a dispatch (user-level context switch), cycles.
+    pub ctx_switch: u64,
+    /// Hard wall on simulated time (deadlock/livelock safety net).
+    pub max_time: u64,
+    /// Relative timing noise on segment durations (cache effects,
+    /// interrupts, DRAM refresh...). Deterministic from `seed`.
+    /// Without it the simulator is unrealistically stable: a single
+    /// global list would keep a perfect thread→CPU mapping forever,
+    /// which no real machine does.
+    pub jitter: f64,
+    /// Seed for the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            quantum: 1_000_000,
+            idle_repoll: 10_000,
+            ctx_switch: 400,
+            max_time: u64::MAX / 4,
+            jitter: 0.05,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Final run report.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Simulated cycles until the last thread terminated.
+    pub total_time: u64,
+    /// Per-CPU busy cycles.
+    pub busy: Vec<u64>,
+    /// Scheduler name.
+    pub sched: String,
+}
+
+impl SimReport {
+    /// Utilisation across CPUs over the makespan.
+    pub fn utilisation(&self) -> f64 {
+        if self.total_time == 0 {
+            return 0.0;
+        }
+        let total_busy: u64 = self.busy.iter().sum();
+        total_busy as f64 / (self.total_time as f64 * self.busy.len() as f64)
+    }
+}
+
+#[derive(Debug)]
+struct BarrierState {
+    parties: usize,
+    arrived: usize,
+    waiting: Vec<TaskId>,
+}
+
+#[derive(Debug, Default)]
+struct RegionState {
+    home: Option<usize>,
+    /// CPU that last touched the region (cache-line ownership).
+    last_cpu: Option<CpuId>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Ev {
+    /// CPU is free: ask the scheduler for work.
+    CpuFree(CpuId),
+    /// The running segment on this CPU completed.
+    SegmentEnd(CpuId),
+}
+
+#[derive(Debug)]
+struct RunningState {
+    task: TaskId,
+    /// Wall cycles of the segment (post-cost-model), for tick charging.
+    seg_wall: u64,
+}
+
+/// The discrete-event engine.
+pub struct SimEngine {
+    pub sys: Arc<System>,
+    sched: Arc<dyn Scheduler>,
+    cost: CostModel,
+    cfg: SimConfig,
+    programs: HashMap<TaskId, (Program, Cursor)>,
+    regions: Vec<RegionState>,
+    barriers: Vec<BarrierState>,
+    /// join target -> waiters.
+    join_waiters: HashMap<TaskId, Vec<TaskId>>,
+    /// Engine-side record of each thread's previous CPU (the scheduler
+    /// updates Task::last_cpu before we can read it, so the cache
+    /// refill penalty is computed from this map).
+    prev_cpu: HashMap<TaskId, CpuId>,
+    running: Vec<Option<RunningState>>,
+    /// Event queue keyed by (time, seq) for determinism.
+    queue: BinaryHeap<Reverse<(u64, u64, CpuId, u8)>>,
+    seq: u64,
+    now: u64,
+    busy: Vec<u64>,
+    finished_at: u64,
+    rng: Rng,
+    /// Round-robin allocation cursor.
+    rr_next: usize,
+}
+
+impl SimEngine {
+    /// Build an engine over a fresh system.
+    pub fn new(sys: Arc<System>, sched: Arc<dyn Scheduler>, cost: CostModel, cfg: SimConfig) -> SimEngine {
+        let n = sys.topo.n_cpus();
+        let cfg_seed = cfg.seed;
+        SimEngine {
+            sys,
+            sched,
+            cost,
+            cfg,
+            programs: HashMap::new(),
+            regions: Vec::new(),
+            barriers: Vec::new(),
+            join_waiters: HashMap::new(),
+            prev_cpu: HashMap::new(),
+            running: (0..n).map(|_| None).collect(),
+            queue: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+            busy: vec![0; n],
+            finished_at: 0,
+            rng: Rng::new(cfg_seed),
+            rr_next: 0,
+        }
+    }
+
+    /// Allocate a memory region (first-touch homing).
+    pub fn alloc_region(&mut self) -> RegionId {
+        self.regions.push(RegionState::default());
+        self.regions.len() - 1
+    }
+
+    /// Allocate a region explicitly homed on a NUMA node.
+    pub fn alloc_region_on(&mut self, numa: usize) -> RegionId {
+        self.regions.push(RegionState { home: Some(numa), last_cpu: None });
+        self.regions.len() - 1
+    }
+
+    /// Allocate a region under a policy (paper §2.3: modern systems
+    /// "let the application choose the memory allocation policy
+    /// (specific memory node, first touch or round robin)").
+    pub fn alloc_region_policy(&mut self, policy: AllocPolicy) -> RegionId {
+        match policy {
+            AllocPolicy::FirstTouch => self.alloc_region(),
+            AllocPolicy::Fixed(node) => self.alloc_region_on(node),
+            AllocPolicy::RoundRobin => {
+                let n = self.sys.topo.n_numa().max(1);
+                let node = self.rr_next % n;
+                self.rr_next += 1;
+                self.alloc_region_on(node)
+            }
+        }
+    }
+
+    /// Create a barrier for `parties` participants.
+    pub fn alloc_barrier(&mut self, parties: usize) -> BarrierId {
+        self.barriers.push(BarrierState { parties, arrived: 0, waiting: Vec::new() });
+        self.barriers.len() - 1
+    }
+
+    /// Attach a program to a thread task.
+    pub fn set_program(&mut self, task: TaskId, program: Program) {
+        self.programs.insert(task, (program, Cursor::default()));
+    }
+
+    /// Create a thread with a program (not yet woken).
+    pub fn add_thread(&mut self, name: impl Into<String>, prio: Prio, program: Program) -> TaskId {
+        let t = self.sys.tasks.new_thread(name, prio);
+        self.set_program(t, program);
+        t
+    }
+
+    /// Wake a task at simulation start (or during setup).
+    pub fn wake(&mut self, task: TaskId) {
+        self.sched.wake(&self.sys, task);
+    }
+
+    /// NUMA home of a region (None before first touch).
+    pub fn region_home(&self, r: RegionId) -> Option<usize> {
+        self.regions[r].home
+    }
+
+    fn push_event(&mut self, at: u64, cpu: CpuId, kind: u8) {
+        self.seq += 1;
+        self.queue.push(Reverse((at, self.seq, cpu, kind)));
+    }
+
+    /// Run until every thread terminated (or error on deadlock /
+    /// max_time).
+    pub fn run(&mut self) -> Result<SimReport> {
+        for cpu in 0..self.sys.topo.n_cpus() {
+            self.push_event(0, CpuId(cpu), 0);
+        }
+        let mut idle_streak = 0usize;
+        while let Some(Reverse((at, _seq, cpu, kind))) = self.queue.pop() {
+            self.now = at;
+            self.sys.advance_clock(at);
+            if at > self.cfg.max_time {
+                return Err(Error::Sim(format!("exceeded max_time at {at}")));
+            }
+            let ev = if kind == 0 { Ev::CpuFree(cpu) } else { Ev::SegmentEnd(cpu) };
+            match ev {
+                Ev::CpuFree(cpu) => {
+                    if self.running[cpu.0].is_some() {
+                        continue; // stale event: already running (a
+                                  // poke raced the CPU's own free path)
+                    }
+                    if self.sys.tasks.live_threads() == 0 {
+                        continue; // drain
+                    }
+                    if self.dispatch_on(cpu) {
+                        idle_streak = 0;
+                    } else {
+                        idle_streak += 1;
+                        Metrics::add(&self.sys.metrics.idle_time, self.cfg.idle_repoll);
+                        // Deadlock heuristic: every CPU idling with no
+                        // segment in flight and nothing ready.
+                        if idle_streak > 4 * self.sys.topo.n_cpus()
+                            && self.running.iter().all(|r| r.is_none())
+                            && self.sys.rq.total_queued() == 0
+                        {
+                            return Err(Error::Sim(format!(
+                                "deadlock at t={}: all CPUs idle, {} live threads blocked",
+                                self.now,
+                                self.sys.tasks.live_threads()
+                            )));
+                        }
+                        let at = self.now + self.cfg.idle_repoll;
+                        self.push_event(at, cpu, 0);
+                    }
+                }
+                Ev::SegmentEnd(cpu) => {
+                    self.segment_end(cpu);
+                }
+            }
+            if self.sys.tasks.live_threads() == 0 && self.running.iter().all(|r| r.is_none()) {
+                self.finished_at = self.now;
+                break;
+            }
+        }
+        if self.sys.tasks.live_threads() > 0 {
+            return Err(Error::Sim(format!(
+                "simulation drained with {} live threads",
+                self.sys.tasks.live_threads()
+            )));
+        }
+        Ok(SimReport {
+            total_time: self.finished_at,
+            busy: self.busy.clone(),
+            sched: self.sched.name(),
+        })
+    }
+
+    /// Ask the scheduler for work; start a segment if any. Returns
+    /// whether the CPU got work.
+    fn dispatch_on(&mut self, cpu: CpuId) -> bool {
+        let Some(task) = self.sched.pick(&self.sys, cpu) else {
+            return false;
+        };
+        // Resume penalty: cache refill if the thread moved CPUs.
+        let prev = self.prev_cpu.get(&task).copied();
+        let refill = self.cost.resume_cycles(&self.sys.topo, prev, cpu);
+        self.prev_cpu.insert(task, cpu);
+        self.start_segment(cpu, task, self.cfg.ctx_switch + refill);
+        true
+    }
+
+    /// Execute program items from the cursor until a blocking point,
+    /// quantum expiry, or termination; schedule the SegmentEnd event.
+    /// `lead_in` = fixed cost before work (context switch, refill).
+    fn start_segment(&mut self, cpu: CpuId, task: TaskId, lead_in: u64) {
+        let mut wall: u64 = lead_in;
+        let mut work: u64 = 0;
+        let mut budget = self.cfg.quantum;
+
+        // Non-compute items are processed instantly (wake/first-touch),
+        // compute accumulates until the quantum; blocking items stop
+        // the segment (they are handled at segment end).
+        loop {
+            let (item, done_in_item) = {
+                let (prog, cur) = self.programs.get(&task).expect("thread without program");
+                if cur.pc >= prog.items.len() {
+                    break; // program over -> terminate at segment end
+                }
+                (prog.items[cur.pc].clone(), cur.done_in_item)
+            };
+            match item {
+                WorkItem::Compute { cycles, mem_fraction, region } => {
+                    let remaining = cycles - done_in_item;
+                    let slice = remaining.min(budget);
+                    if slice == 0 {
+                        break; // quantum exhausted
+                    }
+                    // First touch homes the region on this CPU's node.
+                    let (home, last_toucher) = match region {
+                        Some(r) => {
+                            if self.regions[r].home.is_none() {
+                                self.regions[r].home = Some(self.sys.topo.numa_of(cpu));
+                            }
+                            let h = self.regions[r].home;
+                            if h == Some(self.sys.topo.numa_of(cpu)) {
+                                Metrics::inc(&self.sys.metrics.local_accesses);
+                            } else {
+                                Metrics::inc(&self.sys.metrics.remote_accesses);
+                            }
+                            let last = self.regions[r].last_cpu;
+                            self.regions[r].last_cpu = Some(cpu);
+                            (h, last)
+                        }
+                        None => (None, None),
+                    };
+                    let (sib_busy, sib_symb) = self.sibling_state(cpu, task);
+                    let ctx = ChunkCtx {
+                        mem_fraction,
+                        region_home: home,
+                        last_toucher,
+                        sibling_busy: sib_busy,
+                        sibling_symbiotic: sib_symb,
+                    };
+                    wall += self.cost.chunk_cycles(&self.sys.topo, cpu, slice, &ctx);
+                    work += slice;
+                    budget -= slice;
+                    let cur = &mut self.programs.get_mut(&task).unwrap().1;
+                    cur.done_in_item += slice;
+                    if cur.done_in_item >= cycles {
+                        cur.pc += 1;
+                        cur.done_in_item = 0;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                WorkItem::Wake(target) => {
+                    self.sched.wake(&self.sys, target);
+                    // Freshly woken work may be picked by idle CPUs
+                    // immediately: poke them.
+                    self.poke_idle_cpus();
+                    let cur = &mut self.programs.get_mut(&task).unwrap().1;
+                    cur.pc += 1;
+                }
+                WorkItem::Barrier(_) | WorkItem::Join(_) => {
+                    // Blocking items end the segment; resolved in
+                    // segment_end so that time has advanced past the
+                    // compute preceding them.
+                    break;
+                }
+            }
+        }
+
+        // Timing noise (see SimConfig::jitter).
+        if self.cfg.jitter > 0.0 && wall > 0 {
+            let f = 1.0 + self.cfg.jitter * (2.0 * self.rng.f64() - 1.0);
+            wall = ((wall as f64) * f).round().max(1.0) as u64;
+        }
+        self.busy[cpu.0] += wall;
+        Metrics::add(&self.sys.metrics.busy_time, wall);
+        let _ = work; // raw work is folded into the cost model above
+        self.running[cpu.0] = Some(RunningState { task, seg_wall: wall });
+        let at = self.now + wall.max(1);
+        self.push_event(at, cpu, 1);
+    }
+
+    /// Segment completed: resolve what stopped it.
+    fn segment_end(&mut self, cpu: CpuId) {
+        let Some(run) = self.running[cpu.0].take() else { return };
+        let task = run.task;
+        debug_assert_eq!(self.sys.tasks.state(task), TaskState::Running { cpu });
+
+        // Timeslice accounting for the finished segment.
+        let preempt = self.sched.tick(&self.sys, cpu, task, run.seg_wall);
+
+        let (item, program_over) = {
+            let (prog, cur) = self.programs.get(&task).unwrap();
+            if cur.pc >= prog.items.len() {
+                (None, true)
+            } else {
+                (Some(prog.items[cur.pc].clone()), false)
+            }
+        };
+
+        if program_over {
+            self.sched.stop(&self.sys, cpu, task, StopReason::Terminate);
+            self.on_terminated(task);
+            self.push_event(self.now, cpu, 0);
+            return;
+        }
+        if preempt {
+            self.sched.stop(&self.sys, cpu, task, StopReason::Preempt);
+            self.push_event(self.now, cpu, 0);
+            return;
+        }
+        match item {
+            Some(WorkItem::Barrier(b)) => {
+                let released = {
+                    let bar = &mut self.barriers[b];
+                    bar.arrived += 1;
+                    if bar.arrived == bar.parties {
+                        bar.arrived = 0;
+                        let mut out = std::mem::take(&mut bar.waiting);
+                        out.push(task);
+                        Some(out)
+                    } else {
+                        bar.waiting.push(task);
+                        None
+                    }
+                };
+                // Advance everyone past the barrier item.
+                match released {
+                    Some(list) => {
+                        self.sys.trace.emit(
+                            self.now,
+                            TraceEvent::BarrierRelease { id: b, waiters: list.len() },
+                        );
+                        for t in list {
+                            let cur = &mut self.programs.get_mut(&t).unwrap().1;
+                            cur.pc += 1;
+                            if t == task {
+                                // Last arriver keeps its CPU: yield so
+                                // the scheduler can rebalance.
+                                self.sched.stop(&self.sys, cpu, t, StopReason::Yield);
+                            } else {
+                                self.sched.wake(&self.sys, t);
+                            }
+                        }
+                        self.poke_idle_cpus();
+                    }
+                    None => {
+                        self.sched.stop(&self.sys, cpu, task, StopReason::Block);
+                    }
+                }
+                self.push_event(self.now, cpu, 0);
+            }
+            Some(WorkItem::Join(target)) => {
+                if self.sys.tasks.state(target) == TaskState::Terminated {
+                    let cur = &mut self.programs.get_mut(&task).unwrap().1;
+                    cur.pc += 1;
+                    // Keep running: immediately continue with a fresh
+                    // segment (no scheduler round-trip on a satisfied
+                    // join).
+                    self.sched.stop(&self.sys, cpu, task, StopReason::Yield);
+                } else {
+                    self.join_waiters.entry(target).or_default().push(task);
+                    self.sched.stop(&self.sys, cpu, task, StopReason::Block);
+                }
+                self.push_event(self.now, cpu, 0);
+            }
+            Some(WorkItem::Compute { .. }) => {
+                // Quantum expired mid-compute: voluntary yield point.
+                self.sched.stop(&self.sys, cpu, task, StopReason::Yield);
+                self.push_event(self.now, cpu, 0);
+            }
+            Some(WorkItem::Wake(_)) | None => {
+                // Wakes are handled inline in start_segment; reaching
+                // here means the segment ended exactly at a Wake —
+                // continue.
+                self.sched.stop(&self.sys, cpu, task, StopReason::Yield);
+                self.push_event(self.now, cpu, 0);
+            }
+        }
+    }
+
+    /// A thread terminated: wake its joiners.
+    fn on_terminated(&mut self, task: TaskId) {
+        if let Some(waiters) = self.join_waiters.remove(&task) {
+            for w in waiters {
+                let cur = &mut self.programs.get_mut(&w).unwrap().1;
+                cur.pc += 1; // step past the Join item
+                self.sched.wake(&self.sys, w);
+            }
+            self.poke_idle_cpus();
+        }
+    }
+
+    /// Schedule immediate CpuFree events for idle CPUs (new work may
+    /// have appeared). Idle CPUs otherwise wake at their next re-poll.
+    fn poke_idle_cpus(&mut self) {
+        for cpu in 0..self.running.len() {
+            if self.running[cpu].is_none() {
+                self.push_event(self.now, CpuId(cpu), 0);
+            }
+        }
+    }
+
+    /// SMT sibling state for the cost model.
+    fn sibling_state(&self, cpu: CpuId, task: TaskId) -> (bool, bool) {
+        let Some(sib) = self.sys.topo.smt_sibling(cpu) else {
+            return (false, false);
+        };
+        let Some(run) = &self.running[sib.0] else {
+            return (false, false);
+        };
+        let partner = self.sys.tasks.with(task, |t| match &t.kind {
+            crate::task::TaskKind::Thread(d) => d.symbiotic,
+            _ => None,
+        });
+        (true, partner == Some(run.task))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{BubbleConfig, BubbleScheduler};
+    use crate::topology::{DistanceModel, Topology};
+
+    fn engine(topo: Topology) -> SimEngine {
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+        SimEngine::new(sys, sched, CostModel::new(DistanceModel::default()), SimConfig::default())
+    }
+
+    /// Engine whose scheduler never migrates work (pin-respecting).
+    fn engine_pinned(topo: Topology) -> SimEngine {
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        let sched = Arc::new(BubbleScheduler::new(BubbleConfig {
+            thread_steal: false,
+            idle_regen: false,
+            ..BubbleConfig::default()
+        }));
+        SimEngine::new(sys, sched, CostModel::new(DistanceModel::default()), SimConfig::default())
+    }
+
+    #[test]
+    fn single_thread_runs_to_completion() {
+        let mut e = engine(Topology::smp(1));
+        let t = e.add_thread("solo", 2, Program::new().compute(50_000, 0.0, None));
+        e.wake(t);
+        let rep = e.run().unwrap();
+        assert!(rep.total_time >= 50_000);
+        assert_eq!(e.sys.tasks.state(t), TaskState::Terminated);
+    }
+
+    #[test]
+    fn parallel_speedup_on_smp() {
+        // 4 independent threads on 4 CPUs ≈ 1 thread's time.
+        let work = 400_000u64;
+        let mut seq = engine(Topology::smp(1));
+        let t = seq.add_thread("t", 2, Program::new().compute(work, 0.0, None));
+        seq.wake(t);
+        let t_seq = seq.run().unwrap().total_time;
+
+        let mut par = engine(Topology::smp(4));
+        for i in 0..4 {
+            let t = par.add_thread(format!("t{i}"), 2, Program::new().compute(work, 0.0, None));
+            par.wake(t);
+        }
+        let t_par = par.run().unwrap().total_time;
+        let ratio = t_par as f64 / t_seq as f64;
+        assert!(ratio < 1.25, "parallel ratio {ratio}");
+    }
+
+    #[test]
+    fn barrier_synchronises() {
+        let mut e = engine(Topology::smp(2));
+        let b = e.alloc_barrier(2);
+        // Fast thread + slow thread: both must pass the barrier, and
+        // the fast one's post-barrier work happens after the slow one
+        // arrives.
+        let fast =
+            e.add_thread("fast", 2, Program::new().compute(10_000, 0.0, None).barrier(b).compute(10_000, 0.0, None));
+        let slow =
+            e.add_thread("slow", 2, Program::new().compute(200_000, 0.0, None).barrier(b).compute(10_000, 0.0, None));
+        e.wake(fast);
+        e.wake(slow);
+        let rep = e.run().unwrap();
+        assert!(rep.total_time >= 210_000, "{}", rep.total_time);
+    }
+
+    #[test]
+    fn join_waits_for_child() {
+        let mut e = engine(Topology::smp(2));
+        let child = e.add_thread("child", 2, Program::new().compute(100_000, 0.0, None));
+        let parent = e.add_thread(
+            "parent",
+            2,
+            Program::new().compute(1_000, 0.0, None).wake(child).join(child).compute(1_000, 0.0, None),
+        );
+        e.wake(parent);
+        let rep = e.run().unwrap();
+        assert!(rep.total_time >= 101_000);
+        assert_eq!(e.sys.tasks.state(child), TaskState::Terminated);
+        assert_eq!(e.sys.tasks.state(parent), TaskState::Terminated);
+    }
+
+    #[test]
+    fn first_touch_homes_region() {
+        let mut e = engine_pinned(Topology::numa(2, 2));
+        let r = e.alloc_region();
+        assert_eq!(e.region_home(r), None);
+        let t = e.add_thread("t", 2, Program::new().compute(10_000, 0.5, Some(r)));
+        // Force placement towards node 1 by binding the thread's list.
+        e.sys.tasks.with(t, |x| x.last_list = Some(e.sys.topo.leaf_of(CpuId(3))));
+        e.wake(t);
+        e.run().unwrap();
+        assert_eq!(e.region_home(r), Some(1));
+    }
+
+    #[test]
+    fn numa_remote_work_is_slower() {
+        // One thread, region pre-homed on node 0; pin thread to node 1.
+        let run = |pin_cpu: usize| {
+            let mut e = engine_pinned(Topology::numa(2, 1));
+            let r = e.alloc_region_on(0);
+            let t = e.add_thread("t", 2, Program::new().compute(1_000_000, 0.5, Some(r)));
+            e.sys.tasks.with(t, |x| x.last_list = Some(e.sys.topo.leaf_of(CpuId(pin_cpu))));
+            e.wake(t);
+            e.run().unwrap().total_time
+        };
+        let local = run(0);
+        let remote = run(1);
+        let ratio = remote as f64 / local as f64;
+        assert!(ratio > 1.5, "NUMA factor not visible: {ratio}");
+    }
+
+    #[test]
+    fn deadlock_is_detected() {
+        let mut e = engine(Topology::smp(2));
+        let b = e.alloc_barrier(2); // only one thread will arrive
+        let t = e.add_thread("stuck", 2, Program::new().barrier(b));
+        e.wake(t);
+        let err = e.run().unwrap_err().to_string();
+        assert!(err.contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let mk = || {
+            let mut e = engine(Topology::numa(2, 2));
+            let bar = e.alloc_barrier(4);
+            for i in 0..4 {
+                let r = e.alloc_region();
+                let t = e.add_thread(
+                    format!("t{i}"),
+                    2,
+                    Program::new()
+                        .compute(50_000 + i as u64 * 7_000, 0.3, Some(r))
+                        .barrier(bar)
+                        .compute(30_000, 0.3, Some(r)),
+                );
+                e.wake(t);
+            }
+            e.run().unwrap().total_time
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn report_utilisation_bounds() {
+        let mut e = engine(Topology::smp(2));
+        for i in 0..2 {
+            let t = e.add_thread(format!("t{i}"), 2, Program::new().compute(100_000, 0.0, None));
+            e.wake(t);
+        }
+        let rep = e.run().unwrap();
+        let u = rep.utilisation();
+        assert!(u > 0.5 && u <= 1.2, "utilisation {u}");
+    }
+}

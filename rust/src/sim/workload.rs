@@ -1,0 +1,100 @@
+//! Thread programs for the simulator: what a simulated thread *does*.
+
+use crate::task::TaskId;
+
+/// Memory region handle (simulator-level). Regions are homed on a NUMA
+/// node at first touch (the OS policy the paper's applications rely
+/// on), or explicitly.
+pub type RegionId = usize;
+
+/// Barrier handle.
+pub type BarrierId = usize;
+
+/// One step of a thread's life.
+#[derive(Debug, Clone)]
+pub enum WorkItem {
+    /// Burn `cycles` of compute, of which `mem_fraction` is
+    /// memory-bound on `region` (NUMA-sensitive). `region: None` means
+    /// purely local/cache-resident work.
+    Compute { cycles: u64, mem_fraction: f64, region: Option<RegionId> },
+    /// Arrive at a barrier; blocks until all parties arrive.
+    Barrier(BarrierId),
+    /// Wake another task (thread or bubble) — models spawning.
+    Wake(TaskId),
+    /// Block until `task` terminates.
+    Join(TaskId),
+}
+
+/// A thread's full program (executed once; the thread terminates at the
+/// end).
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub items: Vec<WorkItem>,
+}
+
+impl Program {
+    pub fn new() -> Program {
+        Program::default()
+    }
+
+    /// Builder: compute step.
+    pub fn compute(mut self, cycles: u64, mem_fraction: f64, region: Option<RegionId>) -> Self {
+        self.items.push(WorkItem::Compute { cycles, mem_fraction, region });
+        self
+    }
+
+    /// Builder: barrier arrival.
+    pub fn barrier(mut self, b: BarrierId) -> Self {
+        self.items.push(WorkItem::Barrier(b));
+        self
+    }
+
+    /// Builder: wake a task.
+    pub fn wake(mut self, t: TaskId) -> Self {
+        self.items.push(WorkItem::Wake(t));
+        self
+    }
+
+    /// Builder: join a task.
+    pub fn join(mut self, t: TaskId) -> Self {
+        self.items.push(WorkItem::Join(t));
+        self
+    }
+
+    /// Total raw compute cycles in the program (cost-model-independent).
+    pub fn total_cycles(&self) -> u64 {
+        self.items
+            .iter()
+            .map(|i| match i {
+                WorkItem::Compute { cycles, .. } => *cycles,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Execution cursor over a program.
+#[derive(Debug, Clone, Default)]
+pub struct Cursor {
+    /// Next item index.
+    pub pc: usize,
+    /// Cycles already burned inside items[pc] (when it is a Compute).
+    pub done_in_item: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let p = Program::new()
+            .compute(100, 0.5, Some(0))
+            .barrier(0)
+            .wake(TaskId(3))
+            .join(TaskId(3))
+            .compute(50, 0.0, None);
+        assert_eq!(p.items.len(), 5);
+        assert_eq!(p.total_cycles(), 150);
+    }
+}

@@ -1,0 +1,145 @@
+//! Bubble-specific task data (paper §3.3).
+
+use super::TaskId;
+use crate::topology::{LevelId, LevelKind};
+
+/// Where a bubble should burst (paper §3.3.1: "The main issue is how to
+/// specify the right bursting level of a bubble"). Deep levels favour
+/// affinity at the risk of imbalance; high levels favour processor use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BurstLevel {
+    /// Burst when reaching a component of this kind (e.g. NUMA node).
+    Kind(LevelKind),
+    /// Burst at an absolute tree depth (root = 0).
+    Depth(usize),
+    /// Ride all the way down to a single logical CPU's list.
+    Leaf,
+    /// Burst immediately wherever the bubble is first scheduled.
+    Immediate,
+}
+
+impl Default for BurstLevel {
+    fn default() -> Self {
+        // Group per NUMA node by default: the affinity relation most
+        // paper workloads express is data sharing within a node.
+        BurstLevel::Kind(LevelKind::NumaNode)
+    }
+}
+
+/// Lifecycle of a bubble.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BubblePhase {
+    /// Holding its tasks; may be queued on a list, descending.
+    Closed,
+    /// Has released its tasks (Figure 3 (d)); records where, for
+    /// regeneration.
+    Burst,
+}
+
+/// Bubble payload inside a [`super::Task`].
+#[derive(Debug, Clone)]
+pub struct BubbleData {
+    /// Directly held tasks (threads and sub-bubbles), insertion order.
+    pub contents: Vec<TaskId>,
+    /// Bursting level (None → scheduler default).
+    pub burst: Option<BurstLevel>,
+    /// Closed or burst.
+    pub phase: BubblePhase,
+    /// The list on which this bubble burst / was released — the place a
+    /// regenerated bubble is "moved up" to and re-queued on (§3.3.3, §4).
+    pub home_list: Option<LevelId>,
+    /// Time slice in engine time units; when the bubble's threads have
+    /// consumed it, the bubble is regenerated and requeued at the end of
+    /// its list ("extended to Gang Scheduling", §3.3.3).
+    pub timeslice: Option<u64>,
+    /// Time consumed against `timeslice` since last regeneration.
+    pub slice_used: u64,
+    /// Regeneration requested: Ready contents have been pulled back in;
+    /// Running ones will re-enter the bubble at their next scheduler
+    /// call ("those threads go back in the bubble by themselves", §4).
+    pub regen_pending: bool,
+    /// Where the regenerated bubble re-queues once closed: its home
+    /// list for timeslice regeneration, an ancestor covering the idle
+    /// CPU for corrective regeneration.
+    pub regen_target: Option<LevelId>,
+    /// Contents that are currently *outside* the bubble (released and
+    /// not yet returned / terminated). The last one back closes the
+    /// bubble (§4).
+    pub outside: usize,
+    /// Contents not yet terminated; 0 ⇒ the bubble itself terminates.
+    pub live: usize,
+}
+
+impl Default for BubbleData {
+    fn default() -> Self {
+        BubbleData {
+            contents: Vec::new(),
+            burst: None,
+            phase: BubblePhase::Closed,
+            home_list: None,
+            timeslice: None,
+            slice_used: 0,
+            regen_pending: false,
+            regen_target: None,
+            outside: 0,
+            live: 0,
+        }
+    }
+}
+
+impl BubbleData {
+    /// Resolve the burst depth against a concrete machine: the depth on
+    /// the covering chain at which the bubble bursts.
+    pub fn burst_depth(
+        &self,
+        default: BurstLevel,
+        topo: &crate::topology::Topology,
+    ) -> usize {
+        let level = self.burst.unwrap_or(default);
+        let max_depth = topo.depth() - 1;
+        match level {
+            BurstLevel::Immediate => 0,
+            BurstLevel::Leaf => max_depth,
+            BurstLevel::Depth(d) => d.min(max_depth),
+            BurstLevel::Kind(kind) => {
+                // Depth of the first component of this kind; if the
+                // machine lacks the level, fall back to the deepest
+                // level above it that exists (clamp to root).
+                topo.components()
+                    .find(|(_, n)| n.kind == kind)
+                    .map(|(_, n)| n.depth)
+                    .unwrap_or(0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn burst_depth_resolution() {
+        let numa = Topology::numa(4, 4); // depths: 0 machine, 1 numa, 2 cpu
+        let d = BubbleData::default();
+        assert_eq!(d.burst_depth(BurstLevel::default(), &numa), 1);
+        assert_eq!(d.burst_depth(BurstLevel::Immediate, &numa), 0);
+        assert_eq!(d.burst_depth(BurstLevel::Leaf, &numa), 2);
+        assert_eq!(d.burst_depth(BurstLevel::Depth(99), &numa), 2);
+    }
+
+    #[test]
+    fn missing_level_falls_back_to_root() {
+        let smp = Topology::smp(4); // no NUMA level
+        let d = BubbleData::default();
+        assert_eq!(d.burst_depth(BurstLevel::Kind(LevelKind::NumaNode), &smp), 0);
+    }
+
+    #[test]
+    fn per_bubble_override_wins() {
+        let numa = Topology::numa(2, 2);
+        let d = BubbleData { burst: Some(BurstLevel::Leaf), ..Default::default() };
+        assert_eq!(d.burst_depth(BurstLevel::Immediate, &numa), 2);
+    }
+}

@@ -1,0 +1,179 @@
+//! Task model: threads and *bubbles* (paper §3.1, Figures 1 & 4).
+//!
+//! Threads and bubbles are both "tasks" the execution environment
+//! distributes on the machine. A bubble is a nested set of tasks
+//! expressing an affinity relation (data sharing, collective operations,
+//! SMT symbiosis); bubble nesting expresses refinement of one relation
+//! by another.
+
+mod bubble;
+mod state;
+mod table;
+
+pub use bubble::{BubbleData, BubblePhase, BurstLevel};
+pub use state::TaskState;
+pub use table::TaskTable;
+
+use crate::topology::{CpuId, LevelId};
+
+/// Task identifier: index into the [`TaskTable`] arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub usize);
+
+impl std::fmt::Display for TaskId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "t{}", self.0)
+    }
+}
+
+/// Integer priority (paper §3.3.2): when a processor looks for work it
+/// scans the lists covering it from most local to most global and runs
+/// the *highest-priority* task found, even if less-prioritised tasks sit
+/// on more local lists.
+pub type Prio = i32;
+
+/// Default thread priority (Figure 1 gives threads higher priority than
+/// the bubbles that held them, producing gang scheduling).
+pub const PRIO_THREAD: Prio = 2;
+/// Default bubble priority.
+pub const PRIO_BUBBLE: Prio = 1;
+/// A highly-prioritised (e.g. communication) thread, Figure 1.
+pub const PRIO_HIGH: Prio = 3;
+
+/// Thread-specific data.
+#[derive(Debug, Clone, Default)]
+pub struct ThreadData {
+    /// Another thread this one runs in SMT *symbiosis* with (§3.1): the
+    /// pair can share a physical core without interfering.
+    pub symbiotic: Option<TaskId>,
+    /// Predetermined binding (used by the `bound` baseline, §2.1).
+    pub bound_cpu: Option<CpuId>,
+}
+
+/// What a task is.
+#[derive(Debug, Clone)]
+pub enum TaskKind {
+    Thread(ThreadData),
+    Bubble(BubbleData),
+}
+
+/// A schedulable entity: thread or bubble.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    pub name: String,
+    pub prio: Prio,
+    pub state: TaskState,
+    pub kind: TaskKind,
+    /// The bubble holding this task, if any.
+    pub parent: Option<TaskId>,
+    /// Last CPU this task ran on (affinity hint + migration accounting).
+    pub last_cpu: Option<CpuId>,
+    /// The list this task was last queued on (requeue affinity).
+    pub last_list: Option<LevelId>,
+}
+
+impl Task {
+    /// Create a thread task (unqueued; `InBubble` state is set when
+    /// inserted into a bubble, `Ready` when woken standalone).
+    pub fn thread(id: TaskId, name: impl Into<String>, prio: Prio) -> Task {
+        Task {
+            id,
+            name: name.into(),
+            prio,
+            state: TaskState::New,
+            kind: TaskKind::Thread(ThreadData::default()),
+            parent: None,
+            last_cpu: None,
+            last_list: None,
+        }
+    }
+
+    /// Create an (empty, closed) bubble task.
+    pub fn bubble(id: TaskId, name: impl Into<String>, prio: Prio) -> Task {
+        Task {
+            id,
+            name: name.into(),
+            prio,
+            state: TaskState::New,
+            kind: TaskKind::Bubble(BubbleData::default()),
+            parent: None,
+            last_cpu: None,
+            last_list: None,
+        }
+    }
+
+    /// Is this a bubble?
+    pub fn is_bubble(&self) -> bool {
+        matches!(self.kind, TaskKind::Bubble(_))
+    }
+
+    /// Is this a thread?
+    pub fn is_thread(&self) -> bool {
+        matches!(self.kind, TaskKind::Thread(_))
+    }
+
+    /// Bubble data accessor (panics on threads — internal misuse bug).
+    pub fn bubble_data(&self) -> &BubbleData {
+        match &self.kind {
+            TaskKind::Bubble(b) => b,
+            TaskKind::Thread(_) => panic!("{} is not a bubble", self.id),
+        }
+    }
+
+    /// Mutable bubble data accessor.
+    pub fn bubble_data_mut(&mut self) -> &mut BubbleData {
+        match &mut self.kind {
+            TaskKind::Bubble(b) => b,
+            TaskKind::Thread(_) => panic!("{} is not a bubble", self.id),
+        }
+    }
+
+    /// Thread data accessor (panics on bubbles).
+    pub fn thread_data(&self) -> &ThreadData {
+        match &self.kind {
+            TaskKind::Thread(t) => t,
+            TaskKind::Bubble(_) => panic!("{} is not a thread", self.id),
+        }
+    }
+
+    /// Mutable thread data accessor.
+    pub fn thread_data_mut(&mut self) -> &mut ThreadData {
+        match &mut self.kind {
+            TaskKind::Thread(t) => t,
+            TaskKind::Bubble(_) => panic!("{} is not a thread", self.id),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let t = Task::thread(TaskId(0), "worker", PRIO_THREAD);
+        assert!(t.is_thread() && !t.is_bubble());
+        assert_eq!(t.state, TaskState::New);
+        let b = Task::bubble(TaskId(1), "group", PRIO_BUBBLE);
+        assert!(b.is_bubble());
+        assert!(b.bubble_data().contents.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn thread_is_not_a_bubble() {
+        Task::thread(TaskId(0), "t", 0).bubble_data();
+    }
+
+    #[test]
+    fn priorities_order_gang() {
+        // Figure 1's configuration must order: bubbles < threads < high.
+        assert!(PRIO_BUBBLE < PRIO_THREAD && PRIO_THREAD < PRIO_HIGH);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(TaskId(7).to_string(), "t7");
+    }
+}

@@ -1,0 +1,110 @@
+//! Task lifecycle states and legal transitions.
+
+use crate::topology::{CpuId, LevelId};
+
+/// Where a task currently is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// Created, not yet inserted anywhere (Figure 4:
+    /// `marcel_create_dontsched` creates without starting).
+    New,
+    /// Held inside a closed bubble, not independently schedulable.
+    InBubble,
+    /// On the runqueue of `list`, runnable.
+    Ready { list: LevelId },
+    /// Executing on `cpu`.
+    Running { cpu: CpuId },
+    /// Blocked on a synchronisation object (barrier, join).
+    Blocked,
+    /// Finished. Terminal.
+    Terminated,
+}
+
+impl TaskState {
+    /// Whether the transition `self → next` is legal. The schedulers
+    /// debug-assert this on every state write; the property tests drive
+    /// random schedules through it.
+    pub fn can_become(&self, next: &TaskState) -> bool {
+        use TaskState::*;
+        match (self, next) {
+            // New tasks can be adopted by a bubble or woken directly.
+            (New, InBubble) | (New, Ready { .. }) => true,
+            // A bubble releases its content onto a list; regeneration
+            // pulls Ready tasks back in.
+            (InBubble, Ready { .. }) => true,
+            (Ready { .. }, InBubble) => true,
+            // Dispatch and requeue.
+            (Ready { .. }, Running { .. }) => true,
+            (Running { .. }, Ready { .. }) => true,
+            // Running threads may re-enter their regenerating bubble
+            // "by themselves" at the next scheduler call (§4).
+            (Running { .. }, InBubble) => true,
+            (Running { .. }, Blocked) => true,
+            (Running { .. }, Terminated) => true,
+            // Wakeups.
+            (Blocked, Ready { .. }) => true,
+            (Blocked, InBubble) => true,
+            // Bubbles terminate from wherever they are once empty.
+            (Ready { .. }, Terminated) | (InBubble, Terminated) | (Blocked, Terminated) => true,
+            // Requeue to a different list (move down/up) is a Ready→Ready.
+            (Ready { .. }, Ready { .. }) => true,
+            _ => false,
+        }
+    }
+
+    /// Runnable = sitting on some list.
+    pub fn is_ready(&self) -> bool {
+        matches!(self, TaskState::Ready { .. })
+    }
+
+    /// Executing right now.
+    pub fn is_running(&self) -> bool {
+        matches!(self, TaskState::Running { .. })
+    }
+
+    /// The list this task is queued on, if Ready.
+    pub fn ready_list(&self) -> Option<LevelId> {
+        match self {
+            TaskState::Ready { list } => Some(*list),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legal_paths() {
+        use TaskState::*;
+        let l = LevelId(0);
+        let c = CpuId(0);
+        assert!(New.can_become(&InBubble));
+        assert!(InBubble.can_become(&Ready { list: l }));
+        assert!(Ready { list: l }.can_become(&Running { cpu: c }));
+        assert!(Running { cpu: c }.can_become(&Blocked));
+        assert!(Blocked.can_become(&Ready { list: l }));
+        assert!(Running { cpu: c }.can_become(&Terminated));
+    }
+
+    #[test]
+    fn illegal_paths() {
+        use TaskState::*;
+        let l = LevelId(0);
+        let c = CpuId(0);
+        assert!(!Terminated.can_become(&Ready { list: l }));
+        assert!(!New.can_become(&Running { cpu: c }));
+        assert!(!Blocked.can_become(&Running { cpu: c }));
+        assert!(!New.can_become(&Blocked));
+    }
+
+    #[test]
+    fn accessors() {
+        let s = TaskState::Ready { list: LevelId(4) };
+        assert!(s.is_ready());
+        assert_eq!(s.ready_list(), Some(LevelId(4)));
+        assert!(!s.is_running());
+        assert_eq!(TaskState::Blocked.ready_list(), None);
+    }
+}

@@ -1,0 +1,145 @@
+//! Arity-based construction of machine trees.
+
+use super::{LevelKind, TopoNode, Topology};
+use crate::error::{Error, Result};
+use crate::topology::level::LevelId;
+
+/// Builds a [`Topology`] from a per-level arity description: e.g.
+/// `machine → 4 NUMA nodes → 4 cores` is
+/// `TopoBuilder::new("numa-4x4").split(NumaNode, 4).split(Core, 4)`.
+///
+/// Leaves (the last level) each cover exactly one logical CPU.
+#[derive(Debug, Clone)]
+pub struct TopoBuilder {
+    name: String,
+    levels: Vec<(LevelKind, usize)>,
+}
+
+impl TopoBuilder {
+    /// Start a machine description. The root machine level is implicit.
+    pub fn new(name: impl Into<String>) -> TopoBuilder {
+        TopoBuilder { name: name.into(), levels: Vec::new() }
+    }
+
+    /// Append a level: every component of the previous level gets
+    /// `arity` children of `kind`.
+    pub fn split(mut self, kind: LevelKind, arity: usize) -> TopoBuilder {
+        self.levels.push((kind, arity));
+        self
+    }
+
+    /// Build the topology tree (BFS component ids, root = 0).
+    pub fn build(self) -> Result<Topology> {
+        if self.levels.is_empty() {
+            return Err(Error::Topology(format!(
+                "machine '{}' has no levels below the root",
+                self.name
+            )));
+        }
+        for &(kind, arity) in &self.levels {
+            if arity == 0 {
+                return Err(Error::Topology(format!("level {kind:?} has arity 0")));
+            }
+            if kind == LevelKind::Machine {
+                return Err(Error::Topology("Machine kind is reserved for the root".into()));
+            }
+        }
+        let total_cpus: usize = self.levels.iter().map(|&(_, a)| a).product();
+
+        let mut nodes: Vec<TopoNode> = vec![TopoNode {
+            kind: LevelKind::Machine,
+            parent: None,
+            children: Vec::new(),
+            depth: 0,
+            cpu_first: 0,
+            cpu_count: total_cpus,
+        }];
+        // BFS level by level.
+        let mut frontier = vec![0usize]; // node indices of previous level
+        let mut span = total_cpus; // cpus per component at previous level
+        for (depth, &(kind, arity)) in self.levels.iter().enumerate() {
+            let child_span = span / arity;
+            debug_assert!(span % arity == 0);
+            let mut next = Vec::with_capacity(frontier.len() * arity);
+            for &p in &frontier {
+                let base = nodes[p].cpu_first;
+                for k in 0..arity {
+                    let id = nodes.len();
+                    nodes.push(TopoNode {
+                        kind,
+                        parent: Some(LevelId(p)),
+                        children: Vec::new(),
+                        depth: depth + 1,
+                        cpu_first: base + k * child_span,
+                        cpu_count: child_span,
+                    });
+                    nodes[p].children.push(LevelId(id));
+                    next.push(id);
+                }
+            }
+            frontier = next;
+            span = child_span;
+        }
+        Topology::from_parts(self.name, nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::CpuId;
+
+    #[test]
+    fn builder_counts() {
+        let t = TopoBuilder::new("t")
+            .split(LevelKind::NumaNode, 2)
+            .split(LevelKind::Core, 3)
+            .build()
+            .unwrap();
+        assert_eq!(t.n_cpus(), 6);
+        assert_eq!(t.n_components(), 1 + 2 + 6);
+    }
+
+    #[test]
+    fn cpu_ranges_partition() {
+        let t = TopoBuilder::new("t")
+            .split(LevelKind::NumaNode, 2)
+            .split(LevelKind::Die, 2)
+            .split(LevelKind::Core, 2)
+            .build()
+            .unwrap();
+        // Children of any node partition the parent's range.
+        for (_, n) in t.components() {
+            if n.children.is_empty() {
+                continue;
+            }
+            let mut covered = vec![false; n.cpu_count];
+            for &c in &n.children {
+                let cn = t.node(c);
+                for cpu in cn.cpus() {
+                    let idx = cpu.0 - n.cpu_first;
+                    assert!(!covered[idx], "overlap at {cpu}");
+                    covered[idx] = true;
+                }
+            }
+            assert!(covered.iter().all(|&b| b), "gap under component");
+        }
+    }
+
+    #[test]
+    fn rejects_zero_arity() {
+        assert!(TopoBuilder::new("z").split(LevelKind::Core, 0).build().is_err());
+    }
+
+    #[test]
+    fn rejects_machine_below_root() {
+        assert!(TopoBuilder::new("m").split(LevelKind::Machine, 2).build().is_err());
+    }
+
+    #[test]
+    fn single_cpu_machine() {
+        let t = TopoBuilder::new("uni").split(LevelKind::Core, 1).build().unwrap();
+        assert_eq!(t.n_cpus(), 1);
+        assert_eq!(t.covering(CpuId(0)).len(), 2);
+    }
+}

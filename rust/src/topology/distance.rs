@@ -1,0 +1,84 @@
+//! NUMA distance / memory-access cost factors.
+//!
+//! The paper's testbed: "For a given processor, accessing the memory of
+//! its own node is about 3 times faster than accessing the memory of
+//! another node" (§5.2) — the *NUMA factor*.
+
+use super::{CpuId, Topology};
+
+/// Memory-access cost factors for a machine.
+#[derive(Debug, Clone)]
+pub struct DistanceModel {
+    /// Multiplier on memory access time for remote-node access
+    /// (1.0 = local). The paper's NovaScale: 3.0.
+    pub numa_factor: f64,
+    /// One-time cache-refill penalty (cycles) when a thread resumes on a
+    /// different core than it last ran on, per level of separation.
+    pub migration_penalty_per_level: u64,
+    /// Throughput factor for a CPU whose SMT sibling is busy with an
+    /// unrelated task (paper §3.1: "Disable HyperThreading!" — naive
+    /// co-scheduling can hurt; Bulpin & Pratt measured losses).
+    pub smt_contention: f64,
+    /// Throughput factor for a CPU whose SMT sibling runs a *symbiotic*
+    /// partner thread (paper §3.1 SMT relation: pairs that exploit the
+    /// logical processors without interfering).
+    pub smt_symbiosis: f64,
+    /// Per-level cache-line transfer surcharge on the memory-bound
+    /// fraction when data was last touched by a hierarchically distant
+    /// CPU (§3.1 "Data sharing": grouping threads that work on the same
+    /// data benefits from cache effects even without NUMA).
+    pub cache_line_penalty: f64,
+}
+
+impl Default for DistanceModel {
+    fn default() -> Self {
+        DistanceModel {
+            numa_factor: 3.0,
+            migration_penalty_per_level: 20_000,
+            smt_contention: 0.65,
+            smt_symbiosis: 0.95,
+            cache_line_penalty: 0.3,
+        }
+    }
+}
+
+impl DistanceModel {
+    /// Memory cost factor for `cpu` touching data homed on `numa_node`.
+    pub fn mem_factor(&self, topo: &Topology, cpu: CpuId, numa_node: usize) -> f64 {
+        if topo.numa_of(cpu) == numa_node {
+            1.0
+        } else {
+            self.numa_factor
+        }
+    }
+
+    /// Migration penalty in cycles for moving a thread from `from` to
+    /// `to` (0 when resuming in place).
+    pub fn migration_cycles(&self, topo: &Topology, from: CpuId, to: CpuId) -> u64 {
+        self.migration_penalty_per_level * topo.separation(from, to) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_is_unit_remote_is_factor() {
+        let t = Topology::numa(4, 4);
+        let d = DistanceModel::default();
+        assert_eq!(d.mem_factor(&t, CpuId(0), 0), 1.0);
+        assert_eq!(d.mem_factor(&t, CpuId(0), 3), 3.0);
+        assert_eq!(d.mem_factor(&t, CpuId(15), 3), 1.0);
+    }
+
+    #[test]
+    fn migration_scales_with_separation() {
+        let t = Topology::numa(2, 2);
+        let d = DistanceModel::default();
+        assert_eq!(d.migration_cycles(&t, CpuId(0), CpuId(0)), 0);
+        let near = d.migration_cycles(&t, CpuId(0), CpuId(1));
+        let far = d.migration_cycles(&t, CpuId(0), CpuId(3));
+        assert!(far > near && near > 0);
+    }
+}

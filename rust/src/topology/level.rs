@@ -1,0 +1,84 @@
+//! Identifier types and level kinds for the machine tree.
+
+/// A logical CPU (the paper's "logical SMT processor" — the unit that
+/// actually executes threads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CpuId(pub usize);
+
+/// A component of a hierarchical level (and its task list). The machine
+/// root is always `LevelId(0)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LevelId(pub usize);
+
+/// The hierarchical levels of a machine (paper Figure 2): Russian-doll
+/// nesting from the whole machine down to logical SMT processors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LevelKind {
+    /// The whole machine (root; its list holds machine-wide tasks).
+    Machine,
+    /// A NUMA node: CPUs sharing a local memory bank.
+    NumaNode,
+    /// A die / multicore chip: cores sharing cache.
+    Die,
+    /// A physical processor (possibly SMT-capable).
+    Core,
+    /// A logical SMT processor.
+    Smt,
+}
+
+impl LevelKind {
+    /// Parse from config text.
+    pub fn parse(s: &str) -> Option<LevelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "machine" => Some(LevelKind::Machine),
+            "numa" | "numanode" | "node" => Some(LevelKind::NumaNode),
+            "die" | "chip" => Some(LevelKind::Die),
+            "core" | "cpu" | "processor" => Some(LevelKind::Core),
+            "smt" | "logical" | "ht" => Some(LevelKind::Smt),
+            _ => None,
+        }
+    }
+
+    /// Short label used in traces and rendered topologies.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LevelKind::Machine => "machine",
+            LevelKind::NumaNode => "numa",
+            LevelKind::Die => "die",
+            LevelKind::Core => "core",
+            LevelKind::Smt => "smt",
+        }
+    }
+}
+
+impl std::fmt::Display for CpuId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cpu{}", self.0)
+    }
+}
+
+impl std::fmt::Display for LevelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [LevelKind::Machine, LevelKind::NumaNode, LevelKind::Die, LevelKind::Core, LevelKind::Smt] {
+            assert_eq!(LevelKind::parse(k.label()), Some(k));
+        }
+        assert_eq!(LevelKind::parse("bogus"), None);
+        assert_eq!(LevelKind::parse("NUMA"), Some(LevelKind::NumaNode));
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(CpuId(3).to_string(), "cpu3");
+        assert_eq!(LevelId(0).to_string(), "L0");
+    }
+}

@@ -1,0 +1,362 @@
+//! Hierarchical machine model (paper §3.2, Figure 2).
+//!
+//! A machine is a tree of *levels*: the whole machine, NUMA nodes, dies
+//! (multicore chips), cores (physical SMT processors) and logical SMT
+//! processors. Every component of every level owns exactly one task list
+//! (see [`crate::rq`]); a task placed on a component's list may run on any
+//! CPU *covered* by that component.
+
+mod builder;
+mod distance;
+mod level;
+mod presets;
+
+pub use builder::TopoBuilder;
+pub use distance::DistanceModel;
+pub use level::{CpuId, LevelId, LevelKind};
+
+use crate::error::{Error, Result};
+
+/// One component of one hierarchical level (a node of the machine tree).
+#[derive(Debug, Clone)]
+pub struct TopoNode {
+    /// Which hierarchical level this component belongs to.
+    pub kind: LevelKind,
+    /// Parent component (None for the machine root).
+    pub parent: Option<LevelId>,
+    /// Child components (empty for leaves).
+    pub children: Vec<LevelId>,
+    /// Depth in the tree; the machine root is 0.
+    pub depth: usize,
+    /// First CPU covered by this component.
+    pub cpu_first: usize,
+    /// Number of CPUs covered (contiguous range).
+    pub cpu_count: usize,
+}
+
+impl TopoNode {
+    /// Iterate over the CPUs this component covers.
+    pub fn cpus(&self) -> impl Iterator<Item = CpuId> + '_ {
+        (self.cpu_first..self.cpu_first + self.cpu_count).map(CpuId)
+    }
+
+    /// Whether the component covers the CPU.
+    pub fn covers(&self, cpu: CpuId) -> bool {
+        cpu.0 >= self.cpu_first && cpu.0 < self.cpu_first + self.cpu_count
+    }
+}
+
+/// The hierarchical machine: a tree of [`TopoNode`]s plus precomputed
+/// lookup tables for the scheduler hot path.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    name: String,
+    nodes: Vec<TopoNode>,
+    /// Leaf component of each CPU.
+    cpu_leaf: Vec<LevelId>,
+    /// Per CPU: the chain of components covering it, ordered leaf → root.
+    covering: Vec<Vec<LevelId>>,
+    /// NUMA domain index of each CPU (0 everywhere if no NUMA level).
+    numa_of_cpu: Vec<usize>,
+    numa_count: usize,
+    /// The *other* logical CPU sharing this CPU's core, if SMT.
+    smt_sibling: Vec<Option<CpuId>>,
+}
+
+impl Topology {
+    pub(crate) fn from_parts(name: String, nodes: Vec<TopoNode>) -> Result<Topology> {
+        if nodes.is_empty() {
+            return Err(Error::Topology("empty machine".into()));
+        }
+        let n_cpus = nodes[0].cpu_count;
+        if n_cpus == 0 {
+            return Err(Error::Topology("machine with zero CPUs".into()));
+        }
+        // Leaf of each cpu.
+        let mut cpu_leaf = vec![LevelId(usize::MAX); n_cpus];
+        for (i, n) in nodes.iter().enumerate() {
+            if n.children.is_empty() {
+                if n.cpu_count != 1 {
+                    return Err(Error::Topology(format!(
+                        "leaf component {i} covers {} CPUs; leaves must cover exactly 1",
+                        n.cpu_count
+                    )));
+                }
+                cpu_leaf[n.cpu_first] = LevelId(i);
+            }
+        }
+        if cpu_leaf.iter().any(|l| l.0 == usize::MAX) {
+            return Err(Error::Topology("some CPU has no leaf component".into()));
+        }
+        // Covering chains.
+        let mut covering = Vec::with_capacity(n_cpus);
+        for cpu in 0..n_cpus {
+            let mut chain = Vec::new();
+            let mut cur = Some(cpu_leaf[cpu]);
+            while let Some(l) = cur {
+                chain.push(l);
+                cur = nodes[l.0].parent;
+            }
+            covering.push(chain);
+        }
+        // NUMA domains: components of kind NumaNode, numbered in order.
+        let mut numa_of_cpu = vec![0usize; n_cpus];
+        let mut numa_count = 0usize;
+        for n in &nodes {
+            if n.kind == LevelKind::NumaNode {
+                for cpu in n.cpus() {
+                    numa_of_cpu[cpu.0] = numa_count;
+                }
+                numa_count += 1;
+            }
+        }
+        if numa_count == 0 {
+            numa_count = 1;
+        }
+        // SMT siblings: CPUs sharing a parent of kind Core with >1 child,
+        // or whose leaf kind is Smt.
+        let mut smt_sibling = vec![None; n_cpus];
+        for n in &nodes {
+            let is_smt_parent = n.children.len() > 1
+                && n.children.iter().all(|c| nodes[c.0].kind == LevelKind::Smt);
+            if is_smt_parent && n.cpu_count == 2 {
+                let a = CpuId(n.cpu_first);
+                let b = CpuId(n.cpu_first + 1);
+                smt_sibling[a.0] = Some(b);
+                smt_sibling[b.0] = Some(a);
+            }
+        }
+        Ok(Topology { name, nodes, cpu_leaf, covering, numa_of_cpu, numa_count, smt_sibling })
+    }
+
+    /// Human-readable machine name (preset name or "custom").
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of logical CPUs.
+    pub fn n_cpus(&self) -> usize {
+        self.cpu_leaf.len()
+    }
+
+    /// Number of components (== number of task lists).
+    pub fn n_components(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Number of NUMA domains (1 if the machine has no NUMA level).
+    pub fn n_numa(&self) -> usize {
+        self.numa_count
+    }
+
+    /// The machine root component.
+    pub fn root(&self) -> LevelId {
+        LevelId(0)
+    }
+
+    /// Depth of the tree (number of levels).
+    pub fn depth(&self) -> usize {
+        self.nodes.iter().map(|n| n.depth).max().unwrap_or(0) + 1
+    }
+
+    /// Component accessor.
+    pub fn node(&self, l: LevelId) -> &TopoNode {
+        &self.nodes[l.0]
+    }
+
+    /// All components, root first (construction order is BFS-ish).
+    pub fn components(&self) -> impl Iterator<Item = (LevelId, &TopoNode)> {
+        self.nodes.iter().enumerate().map(|(i, n)| (LevelId(i), n))
+    }
+
+    /// Leaf component of a CPU.
+    pub fn leaf_of(&self, cpu: CpuId) -> LevelId {
+        self.cpu_leaf[cpu.0]
+    }
+
+    /// Chain of components covering `cpu`, ordered leaf → root.
+    /// This is the list-search order of the scheduler (local → global).
+    pub fn covering(&self, cpu: CpuId) -> &[LevelId] {
+        &self.covering[cpu.0]
+    }
+
+    /// NUMA domain of a CPU.
+    pub fn numa_of(&self, cpu: CpuId) -> usize {
+        self.numa_of_cpu[cpu.0]
+    }
+
+    /// SMT sibling of a CPU (the other logical processor on its core).
+    pub fn smt_sibling(&self, cpu: CpuId) -> Option<CpuId> {
+        self.smt_sibling[cpu.0]
+    }
+
+    /// The child of `ancestor` that lies on the path towards `cpu`.
+    /// Returns None if `ancestor` is the CPU's leaf (nothing deeper).
+    pub fn child_towards(&self, ancestor: LevelId, cpu: CpuId) -> Option<LevelId> {
+        let chain = self.covering(cpu);
+        let pos = chain.iter().position(|&l| l == ancestor)?;
+        if pos == 0 {
+            None
+        } else {
+            Some(chain[pos - 1])
+        }
+    }
+
+    /// Lowest common ancestor of two CPUs.
+    pub fn lca(&self, a: CpuId, b: CpuId) -> LevelId {
+        let ca = self.covering(a);
+        for &l in ca {
+            if self.nodes[l.0].covers(b) {
+                return l;
+            }
+        }
+        self.root()
+    }
+
+    /// Hierarchical separation of two CPUs: 0 for the same CPU, else the
+    /// number of levels between a leaf and the lowest common ancestor.
+    /// Used by the cost model (cache affinity) and locality-aware steals.
+    pub fn separation(&self, a: CpuId, b: CpuId) -> usize {
+        if a == b {
+            return 0;
+        }
+        let lca = self.lca(a, b);
+        self.nodes[self.cpu_leaf[a.0].0].depth - self.nodes[lca.0].depth
+    }
+
+    /// Components of a given kind, in id order.
+    pub fn components_of_kind(&self, kind: LevelKind) -> Vec<LevelId> {
+        self.components()
+            .filter(|(_, n)| n.kind == kind)
+            .map(|(l, _)| l)
+            .collect()
+    }
+
+    /// The deepest level id chain member of `cpu` whose component kind
+    /// matches, if any (e.g. the NUMA node component covering a CPU).
+    pub fn ancestor_of_kind(&self, cpu: CpuId, kind: LevelKind) -> Option<LevelId> {
+        self.covering(cpu).iter().copied().find(|&l| self.nodes[l.0].kind == kind)
+    }
+
+    /// Render the tree as an indented diagram (Figure 2 of the paper).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_node(self.root(), &mut out);
+        out
+    }
+
+    fn render_node(&self, l: LevelId, out: &mut String) {
+        let n = self.node(l);
+        out.push_str(&"  ".repeat(n.depth));
+        out.push_str(&format!(
+            "{:?}[{}] cpus {}..{}\n",
+            n.kind,
+            l.0,
+            n.cpu_first,
+            n.cpu_first + n.cpu_count - 1
+        ));
+        for &c in &n.children {
+            self.render_node(c, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numa_4x4_shape() {
+        let t = Topology::numa(4, 4);
+        assert_eq!(t.n_cpus(), 16);
+        assert_eq!(t.n_numa(), 4);
+        // 1 machine + 4 nodes + 16 cpu leaves.
+        assert_eq!(t.n_components(), 21);
+        assert_eq!(t.depth(), 3);
+        assert_eq!(t.numa_of(CpuId(0)), 0);
+        assert_eq!(t.numa_of(CpuId(15)), 3);
+    }
+
+    #[test]
+    fn covering_is_leaf_to_root() {
+        let t = Topology::numa(2, 2);
+        let chain = t.covering(CpuId(3));
+        assert_eq!(chain.len(), 3);
+        assert_eq!(chain[chain.len() - 1], t.root());
+        assert_eq!(t.node(chain[0]).cpu_count, 1);
+        // Monotone: each step covers at least as many CPUs.
+        for w in chain.windows(2) {
+            assert!(t.node(w[1]).cpu_count >= t.node(w[0]).cpu_count);
+        }
+    }
+
+    #[test]
+    fn xeon_has_smt_siblings() {
+        let t = Topology::xeon_2x_ht();
+        assert_eq!(t.n_cpus(), 4);
+        assert_eq!(t.smt_sibling(CpuId(0)), Some(CpuId(1)));
+        assert_eq!(t.smt_sibling(CpuId(1)), Some(CpuId(0)));
+        assert_eq!(t.smt_sibling(CpuId(2)), Some(CpuId(3)));
+    }
+
+    #[test]
+    fn numa_machine_has_no_smt() {
+        let t = Topology::numa(4, 4);
+        assert!((0..16).all(|c| t.smt_sibling(CpuId(c)).is_none()));
+    }
+
+    #[test]
+    fn deep_machine_matches_figure_2() {
+        let t = Topology::deep();
+        assert_eq!(t.n_cpus(), 16);
+        assert_eq!(t.depth(), 5); // machine, numa, die, core, smt
+        assert_eq!(t.n_numa(), 2);
+        assert!(t.smt_sibling(CpuId(0)).is_some());
+    }
+
+    #[test]
+    fn lca_and_separation() {
+        let t = Topology::numa(2, 2);
+        assert_eq!(t.lca(CpuId(0), CpuId(1)), t.ancestor_of_kind(CpuId(0), LevelKind::NumaNode).unwrap());
+        assert_eq!(t.lca(CpuId(0), CpuId(2)), t.root());
+        assert_eq!(t.separation(CpuId(0), CpuId(0)), 0);
+        assert_eq!(t.separation(CpuId(0), CpuId(1)), 1);
+        assert_eq!(t.separation(CpuId(0), CpuId(3)), 2);
+    }
+
+    #[test]
+    fn child_towards_descends_correctly() {
+        let t = Topology::numa(2, 2);
+        let root = t.root();
+        let step = t.child_towards(root, CpuId(3)).unwrap();
+        assert!(t.node(step).covers(CpuId(3)));
+        assert_eq!(t.node(step).kind, LevelKind::NumaNode);
+        let leaf = t.leaf_of(CpuId(3));
+        assert_eq!(t.child_towards(leaf, CpuId(3)), None);
+    }
+
+    #[test]
+    fn smp_is_two_levels() {
+        let t = Topology::smp(8);
+        assert_eq!(t.n_cpus(), 8);
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.n_numa(), 1);
+        assert_eq!(t.n_components(), 9);
+    }
+
+    #[test]
+    fn render_mentions_all_levels() {
+        let t = Topology::deep();
+        let r = t.render();
+        assert!(r.contains("Machine"));
+        assert!(r.contains("NumaNode"));
+        assert!(r.contains("Die"));
+        assert!(r.contains("Core"));
+        assert!(r.contains("Smt"));
+    }
+
+    #[test]
+    fn rejects_zero_cpus() {
+        assert!(TopoBuilder::new("bad").build().is_err());
+    }
+}

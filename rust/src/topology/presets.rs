@@ -1,0 +1,95 @@
+//! Machine presets matching the paper's testbeds.
+
+use super::{LevelKind, TopoBuilder, Topology};
+
+impl Topology {
+    /// Flat SMP with `n` identical processors (paper §2.2 setting).
+    pub fn smp(n: usize) -> Topology {
+        TopoBuilder::new(format!("smp-{n}"))
+            .split(LevelKind::Core, n)
+            .build()
+            .expect("smp preset")
+    }
+
+    /// ccNUMA with `nodes` NUMA nodes of `cpus_per_node` processors.
+    /// `numa(4, 4)` is the paper's Bull NovaScale (16× Itanium II over
+    /// 4 NUMA nodes, §5.2 Table 2).
+    pub fn numa(nodes: usize, cpus_per_node: usize) -> Topology {
+        TopoBuilder::new(format!("numa-{nodes}x{cpus_per_node}"))
+            .split(LevelKind::NumaNode, nodes)
+            .split(LevelKind::Core, cpus_per_node)
+            .build()
+            .expect("numa preset")
+    }
+
+    /// The paper's Figure-5(a) testbed: a dual Pentium IV Xeon with
+    /// HyperThreading — 2 physical chips × 2 logical processors.
+    pub fn xeon_2x_ht() -> Topology {
+        TopoBuilder::new("xeon-2x-ht")
+            .split(LevelKind::Core, 2)
+            .split(LevelKind::Smt, 2)
+            .build()
+            .expect("xeon preset")
+    }
+
+    /// The paper's Figure-2 high-depth machine: NUMA nodes of multicore
+    /// dies of SMT cores — every level populated.
+    /// 2 nodes × 2 dies × 2 cores × 2 SMT = 16 logical CPUs.
+    pub fn deep() -> Topology {
+        TopoBuilder::new("deep")
+            .split(LevelKind::NumaNode, 2)
+            .split(LevelKind::Die, 2)
+            .split(LevelKind::Core, 2)
+            .split(LevelKind::Smt, 2)
+            .build()
+            .expect("deep preset")
+    }
+
+    /// Look a preset up by name (CLI `--machine`).
+    pub fn preset(name: &str) -> Option<Topology> {
+        match name {
+            "xeon-2x-ht" | "xeon" => Some(Topology::xeon_2x_ht()),
+            "numa-4x4" | "novascale" => Some(Topology::numa(4, 4)),
+            "deep" => Some(Topology::deep()),
+            _ => {
+                if let Some(n) = name.strip_prefix("smp-") {
+                    n.parse().ok().map(Topology::smp)
+                } else if let Some(spec) = name.strip_prefix("numa-") {
+                    let mut it = spec.split('x');
+                    let a = it.next()?.parse().ok()?;
+                    let b = it.next()?.parse().ok()?;
+                    Some(Topology::numa(a, b))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Names of the named presets (for CLI help).
+    pub fn preset_names() -> &'static [&'static str] {
+        &["xeon-2x-ht", "numa-4x4", "deep", "smp-<n>", "numa-<a>x<b>"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_lookup() {
+        assert_eq!(Topology::preset("xeon-2x-ht").unwrap().n_cpus(), 4);
+        assert_eq!(Topology::preset("numa-4x4").unwrap().n_cpus(), 16);
+        assert_eq!(Topology::preset("deep").unwrap().n_cpus(), 16);
+        assert_eq!(Topology::preset("smp-12").unwrap().n_cpus(), 12);
+        assert_eq!(Topology::preset("numa-2x8").unwrap().n_cpus(), 16);
+        assert!(Topology::preset("warp-drive").is_none());
+    }
+
+    #[test]
+    fn novascale_alias() {
+        let t = Topology::preset("novascale").unwrap();
+        assert_eq!(t.n_numa(), 4);
+        assert_eq!(t.n_cpus(), 16);
+    }
+}

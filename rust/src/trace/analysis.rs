@@ -1,0 +1,235 @@
+//! Trace analysis (the paper's §6 future work made concrete: "develop
+//! analysis tools based on tracing the scheduler at runtime, so as to
+//! check and refine scheduling strategies").
+//!
+//! Consumes a [`super::Trace`] and produces:
+//! * per-CPU dispatch/steal counts and a migration matrix,
+//! * per-bubble lifecycle summaries (descents, bursts, regenerations),
+//! * a list-occupancy profile (which levels actually hold work).
+
+use std::collections::HashMap;
+
+use super::{Event, Record, RegenWhy};
+use crate::task::TaskId;
+use crate::topology::{CpuId, LevelId, Topology};
+use crate::util::fmt::Table;
+
+/// Per-bubble lifecycle counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BubbleStats {
+    pub descents: usize,
+    pub bursts: usize,
+    pub regen_idle: usize,
+    pub regen_timeslice: usize,
+    pub released_total: usize,
+}
+
+/// Aggregated view of one trace.
+#[derive(Debug, Clone, Default)]
+pub struct Analysis {
+    /// Dispatches per CPU.
+    pub dispatches: HashMap<usize, usize>,
+    /// task -> last cpu seen, used to derive migrations.
+    pub migrations: usize,
+    /// (from_cpu, to_cpu) -> count.
+    pub migration_matrix: HashMap<(usize, usize), usize>,
+    /// Steals per thief CPU.
+    pub steals: HashMap<usize, usize>,
+    /// Enqueues per list.
+    pub list_occupancy: HashMap<usize, usize>,
+    /// Lifecycle per bubble.
+    pub bubbles: HashMap<usize, BubbleStats>,
+    /// Barrier releases observed.
+    pub barrier_releases: usize,
+}
+
+/// Analyse a recorded trace.
+pub fn analyse(records: &[Record]) -> Analysis {
+    let mut a = Analysis::default();
+    let mut last_cpu: HashMap<TaskId, CpuId> = HashMap::new();
+    for r in records {
+        match &r.event {
+            Event::Dispatch { task, cpu } => {
+                *a.dispatches.entry(cpu.0).or_default() += 1;
+                if let Some(prev) = last_cpu.insert(*task, *cpu) {
+                    if prev != *cpu {
+                        a.migrations += 1;
+                        *a.migration_matrix.entry((prev.0, cpu.0)).or_default() += 1;
+                    }
+                }
+            }
+            Event::Steal { by, .. } => {
+                *a.steals.entry(by.0).or_default() += 1;
+            }
+            Event::Enqueue { list, .. } => {
+                *a.list_occupancy.entry(list.0).or_default() += 1;
+            }
+            Event::BubbleDown { bubble, .. } => {
+                a.bubbles.entry(bubble.0).or_default().descents += 1;
+            }
+            Event::Burst { bubble, released, .. } => {
+                let b = a.bubbles.entry(bubble.0).or_default();
+                b.bursts += 1;
+                b.released_total += released;
+            }
+            Event::Regen { bubble, why } => {
+                let b = a.bubbles.entry(bubble.0).or_default();
+                match why {
+                    RegenWhy::Idle => b.regen_idle += 1,
+                    RegenWhy::Timeslice => b.regen_timeslice += 1,
+                }
+            }
+            Event::BarrierRelease { .. } => a.barrier_releases += 1,
+            Event::Stop { .. } | Event::RegenDone { .. } => {}
+        }
+    }
+    a
+}
+
+impl Analysis {
+    /// Load-balance coefficient: stddev/mean of per-CPU dispatch counts
+    /// (0 = perfectly even).
+    pub fn dispatch_imbalance(&self) -> f64 {
+        if self.dispatches.is_empty() {
+            return 0.0;
+        }
+        let xs: Vec<f64> = self.dispatches.values().map(|&v| v as f64).collect();
+        crate::util::Summary::of(&xs).cv()
+    }
+
+    /// Migration-locality histogram keyed by hierarchical separation:
+    /// how far did threads move when they moved?
+    pub fn migration_separations(&self, topo: &Topology) -> HashMap<usize, usize> {
+        let mut out = HashMap::new();
+        for (&(from, to), &n) in &self.migration_matrix {
+            let sep = topo.separation(CpuId(from), CpuId(to));
+            *out.entry(sep).or_default() += n;
+        }
+        out
+    }
+
+    /// Fraction of enqueues that landed on lists of the given depth.
+    pub fn occupancy_by_depth(&self, topo: &Topology) -> HashMap<usize, usize> {
+        let mut out = HashMap::new();
+        for (&list, &n) in &self.list_occupancy {
+            let d = topo.node(LevelId(list)).depth;
+            *out.entry(d).or_default() += n;
+        }
+        out
+    }
+
+    /// Human-readable report.
+    pub fn render(&self, topo: &Topology) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "dispatches: {} total, imbalance cv {:.3}\n",
+            self.dispatches.values().sum::<usize>(),
+            self.dispatch_imbalance()
+        ));
+        out.push_str(&format!(
+            "migrations: {}, steals: {}, barrier releases: {}\n",
+            self.migrations,
+            self.steals.values().sum::<usize>(),
+            self.barrier_releases
+        ));
+        let mut seps: Vec<_> = self.migration_separations(topo).into_iter().collect();
+        seps.sort();
+        if !seps.is_empty() {
+            out.push_str("migration distance histogram (levels crossed -> count):\n");
+            for (d, n) in seps {
+                out.push_str(&format!("  {d}: {n}\n"));
+            }
+        }
+        let mut depths: Vec<_> = self.occupancy_by_depth(topo).into_iter().collect();
+        depths.sort();
+        if !depths.is_empty() {
+            out.push_str("enqueues by list depth:\n");
+            for (d, n) in depths {
+                out.push_str(&format!("  depth {d}: {n}\n"));
+            }
+        }
+        if !self.bubbles.is_empty() {
+            let mut t = Table::new(&["bubble", "descents", "bursts", "regen(idle)", "regen(slice)", "released"]);
+            let mut ids: Vec<_> = self.bubbles.keys().copied().collect();
+            ids.sort();
+            for id in ids {
+                let b = &self.bubbles[&id];
+                t.row(&[
+                    format!("t{id}"),
+                    b.descents.to_string(),
+                    b.bursts.to_string(),
+                    b.regen_idle.to_string(),
+                    b.regen_timeslice.to_string(),
+                    b.released_total.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::conduction::{self, HeatParams};
+    use crate::apps::StructureMode;
+    use crate::topology::Topology;
+
+    fn traced_run(mode: StructureMode) -> (Analysis, Topology) {
+        let topo = Topology::numa(2, 2);
+        let mut e = crate::apps::engine_for(&topo, mode);
+        e.sys.trace.set_enabled(true);
+        conduction::build(
+            &mut e,
+            mode,
+            &HeatParams { threads: 4, cycles: 4, work: 200_000, mem_fraction: 0.3 },
+        );
+        e.run().unwrap();
+        (analyse(&e.sys.trace.records()), topo)
+    }
+
+    #[test]
+    fn bubbles_run_shows_lifecycle() {
+        let (a, topo) = traced_run(StructureMode::Bubbles);
+        assert!(a.bubbles.values().any(|b| b.bursts >= 1), "{a:?}");
+        assert!(a.dispatches.values().sum::<usize>() >= 16);
+        assert!(a.barrier_releases >= 3);
+        let rendered = a.render(&topo);
+        assert!(rendered.contains("bursts"));
+        assert!(rendered.contains("dispatches"));
+    }
+
+    #[test]
+    fn bound_run_has_no_migrations() {
+        let (a, _) = traced_run(StructureMode::Bound);
+        assert_eq!(a.migrations, 0, "{:?}", a.migration_matrix);
+        assert_eq!(a.dispatch_imbalance(), 0.0);
+    }
+
+    #[test]
+    fn simple_run_migrates_more_than_bubbles() {
+        let (simple, _) = traced_run(StructureMode::Simple);
+        let (bound, _) = traced_run(StructureMode::Bound);
+        assert!(simple.migrations > bound.migrations);
+    }
+
+    #[test]
+    fn occupancy_depths_match_structure() {
+        // Bubbles enqueue on the NUMA level (depth 1); SS only on the
+        // machine root (depth 0).
+        let (bub, topo) = traced_run(StructureMode::Bubbles);
+        let occ = bub.occupancy_by_depth(&topo);
+        assert!(occ.get(&1).copied().unwrap_or(0) > 0, "{occ:?}");
+        let (ss, topo2) = traced_run(StructureMode::Simple);
+        let occ_ss = ss.occupancy_by_depth(&topo2);
+        assert_eq!(occ_ss.keys().copied().max(), Some(0), "{occ_ss:?}");
+    }
+
+    #[test]
+    fn empty_trace_analyses_cleanly() {
+        let a = analyse(&[]);
+        assert_eq!(a.migrations, 0);
+        assert_eq!(a.dispatch_imbalance(), 0.0);
+    }
+}

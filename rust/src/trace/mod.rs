@@ -1,0 +1,174 @@
+//! Scheduler event tracing (the paper's §6 future work: "analysis tools
+//! based on tracing the scheduler at runtime, so as to check and refine
+//! scheduling strategies").
+//!
+//! A bounded in-memory ring of timestamped events, cheap enough to leave
+//! compiled in; recording is off unless enabled. Tests use traces to
+//! assert *behavioural* properties (e.g. "every burst happens at the
+//! bubble's bursting depth"), the CLI dumps them for humans.
+
+pub mod analysis;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::task::TaskId;
+use crate::topology::{CpuId, LevelId};
+
+/// What happened.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// Task enqueued on a list.
+    Enqueue { task: TaskId, list: LevelId },
+    /// Thread dispatched on a CPU.
+    Dispatch { task: TaskId, cpu: CpuId },
+    /// Thread stopped running (yield/block/terminate).
+    Stop { task: TaskId, cpu: CpuId, why: StopWhy },
+    /// Bubble moved one level down towards a CPU (Figure 3 (b)-(c)).
+    BubbleDown { bubble: TaskId, from: LevelId, to: LevelId },
+    /// Bubble burst on a list (Figure 3 (d)).
+    Burst { bubble: TaskId, list: LevelId, released: usize },
+    /// Bubble regeneration began (§3.3.3).
+    Regen { bubble: TaskId, why: RegenWhy },
+    /// Regenerated bubble re-queued (closed again, moved up).
+    RegenDone { bubble: TaskId, list: LevelId },
+    /// A task was stolen from a list by a remote CPU's scheduler.
+    Steal { task: TaskId, from: LevelId, by: CpuId },
+    /// Barrier crossed by all participants.
+    BarrierRelease { id: usize, waiters: usize },
+}
+
+/// Why a thread stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopWhy {
+    Yield,
+    Preempt,
+    Block,
+    Terminate,
+    /// Re-entered its regenerating bubble (§4).
+    BackInBubble,
+}
+
+/// Why a bubble regenerated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RegenWhy {
+    /// An idle processor pulled it up to rebalance.
+    Idle,
+    /// Its time slice expired (gang scheduling).
+    Timeslice,
+}
+
+/// A timestamped trace record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Record {
+    /// Engine time (simulated cycles, or ns for the native executor).
+    pub at: u64,
+    pub event: Event,
+}
+
+/// Bounded trace buffer.
+#[derive(Debug)]
+pub struct Trace {
+    enabled: AtomicBool,
+    cap: usize,
+    buf: Mutex<Vec<Record>>,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Trace::new(1 << 16)
+    }
+}
+
+impl Trace {
+    /// Create with the given capacity (oldest records dropped beyond it).
+    pub fn new(cap: usize) -> Trace {
+        Trace { enabled: AtomicBool::new(false), cap, buf: Mutex::new(Vec::new()) }
+    }
+
+    /// Turn recording on/off.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Release);
+    }
+
+    /// Is recording on?
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Acquire)
+    }
+
+    /// Record an event (no-op when disabled).
+    pub fn emit(&self, at: u64, event: Event) {
+        if !self.enabled() {
+            return;
+        }
+        let mut buf = self.buf.lock().unwrap();
+        if buf.len() == self.cap {
+            buf.remove(0); // ring behaviour; cap is large, this is rare
+        }
+        buf.push(Record { at, event });
+    }
+
+    /// Copy of the recorded events.
+    pub fn records(&self) -> Vec<Record> {
+        self.buf.lock().unwrap().clone()
+    }
+
+    /// Number of recorded events.
+    pub fn len(&self) -> usize {
+        self.buf.lock().unwrap().len()
+    }
+
+    /// No events recorded?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all records.
+    pub fn clear(&self) {
+        self.buf.lock().unwrap().clear();
+    }
+
+    /// Human-readable dump.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        for r in self.records() {
+            out.push_str(&format!("{:>12}  {:?}\n", r.at, r.event));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_by_default() {
+        let t = Trace::default();
+        t.emit(0, Event::Dispatch { task: TaskId(0), cpu: CpuId(0) });
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn records_when_enabled() {
+        let t = Trace::default();
+        t.set_enabled(true);
+        t.emit(5, Event::Burst { bubble: TaskId(1), list: LevelId(0), released: 4 });
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.records()[0].at, 5);
+        assert!(t.dump().contains("Burst"));
+    }
+
+    #[test]
+    fn ring_drops_oldest() {
+        let t = Trace::new(3);
+        t.set_enabled(true);
+        for i in 0..5 {
+            t.emit(i, Event::Dispatch { task: TaskId(i as usize), cpu: CpuId(0) });
+        }
+        let r = t.records();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r[0].at, 2);
+        assert_eq!(r[2].at, 4);
+    }
+}

@@ -1,0 +1,121 @@
+//! Plain-text table / duration formatting for reports and benches.
+
+/// Format a duration in nanoseconds with an adaptive unit.
+pub fn ns(v: f64) -> String {
+    if v < 1e3 {
+        format!("{v:.0} ns")
+    } else if v < 1e6 {
+        format!("{:.2} µs", v / 1e3)
+    } else if v < 1e9 {
+        format!("{:.2} ms", v / 1e6)
+    } else {
+        format!("{:.3} s", v / 1e9)
+    }
+}
+
+/// Format simulated cycles with thousands separators.
+pub fn cycles(v: u64) -> String {
+    let s = v.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push('_');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+/// Fixed-width left-padded cell.
+pub fn pad(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{}{}", " ".repeat(w - s.len()), s)
+    }
+}
+
+/// A minimal monospace table builder (markdown-ish output).
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Start a table with the given column headers.
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    /// Render with column widths fitted to content.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let body: Vec<String> =
+                cells.iter().zip(w).map(|(c, &wi)| format!("{c:<wi$}")).collect();
+            format!("| {} |", body.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push('\n');
+        let seps: Vec<String> = w.iter().map(|&wi| "-".repeat(wi)).collect();
+        out.push_str(&fmt_row(&seps, &w));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &w));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ns_units() {
+        assert_eq!(ns(250.0), "250 ns");
+        assert_eq!(ns(3_700.0), "3.70 µs");
+        assert_eq!(ns(15_840_000_000.0), "15.840 s");
+    }
+
+    #[test]
+    fn cycles_separators() {
+        assert_eq!(cycles(1_234_567), "1_234_567");
+        assert_eq!(cycles(12), "12");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "time"]);
+        t.row(&["simple".into(), "23.65".into()]);
+        t.row(&["bubbles".into(), "15.84".into()]);
+        let r = t.render();
+        assert!(r.contains("| name    | time  |"), "{r}");
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        Table::new(&["a", "b"]).row(&["x".into()]);
+    }
+}

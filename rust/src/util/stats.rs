@@ -1,0 +1,132 @@
+//! Descriptive statistics for benchmark samples and metric reports.
+
+/// Summary statistics over a sample set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute a summary. Panics on an empty slice.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of(empty)");
+        let n = samples.len();
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Summary {
+            n,
+            mean,
+            median: percentile_sorted(&sorted, 50.0),
+            min: sorted[0],
+            max: sorted[n - 1],
+            stddev: var.sqrt(),
+            p95: percentile_sorted(&sorted, 95.0),
+        }
+    }
+
+    /// Relative stddev (coefficient of variation), 0 when mean is 0.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev / self.mean.abs()
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Trim outliers beyond `k` interquartile ranges (Tukey fences).
+/// Returns the retained samples; never returns an empty vec.
+pub fn trim_outliers(samples: &[f64], k: f64) -> Vec<f64> {
+    if samples.len() < 4 {
+        return samples.to_vec();
+    }
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q1 = percentile_sorted(&sorted, 25.0);
+    let q3 = percentile_sorted(&sorted, 75.0);
+    let iqr = q3 - q1;
+    let (lo, hi) = (q1 - k * iqr, q3 + k * iqr);
+    let kept: Vec<f64> = samples.iter().copied().filter(|&x| x >= lo && x <= hi).collect();
+    if kept.is_empty() {
+        samples.to_vec()
+    } else {
+        kept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.mean, 7.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.p95, 7.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let sorted = [0.0, 10.0];
+        assert!((percentile_sorted(&sorted, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&sorted, 95.0) - 9.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trim_removes_spike() {
+        let mut xs = vec![10.0; 20];
+        xs.push(1000.0);
+        let kept = trim_outliers(&xs, 1.5);
+        assert_eq!(kept.len(), 20);
+        assert!(kept.iter().all(|&x| x == 10.0));
+    }
+
+    #[test]
+    fn trim_keeps_small_samples_whole() {
+        let xs = vec![1.0, 100.0, 1000.0];
+        assert_eq!(trim_outliers(&xs, 1.5), xs);
+    }
+
+    #[test]
+    fn cv_zero_mean() {
+        let s = Summary::of(&[0.0, 0.0]);
+        assert_eq!(s.cv(), 0.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Integration: the full three-layer stack — marcel bubbles + bubble
+//! scheduler + native fibers + **PJRT-executed Pallas kernels** — on a
+//! small striped conduction mesh, validated against the sequential
+//! whole-mesh result.
+//!
+//! Skipped (with a notice) when `make artifacts` has not been run.
+
+use std::sync::{Arc, Mutex};
+
+use bubbles::exec::Executor;
+use bubbles::marcel::Marcel;
+use bubbles::runtime::service::PjrtService;
+use bubbles::sched::{BubbleConfig, BubbleScheduler, System};
+use bubbles::topology::Topology;
+
+const ROWS: usize = 8; // artifact conduction_r4_c32 serves 2 stripes of 4
+const COLS: usize = 32;
+const STRIPES: usize = 2;
+const STRIPE_H: usize = ROWS / STRIPES;
+const ALPHA: f32 = 0.2;
+const ITERS: usize = 12;
+
+fn initial() -> Vec<f32> {
+    (0..ROWS * COLS).map(|i| ((i * 37) % 100) as f32 / 10.0).collect()
+}
+
+fn stripe_with_halo(mesh: &[f32], s: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    let top = if s == 0 { 0 } else { s * STRIPE_H - 1 };
+    out.extend_from_slice(&mesh[top * COLS..(top + 1) * COLS]);
+    out.extend_from_slice(&mesh[s * STRIPE_H * COLS..(s + 1) * STRIPE_H * COLS]);
+    let bot = if s == STRIPES - 1 { ROWS - 1 } else { (s + 1) * STRIPE_H };
+    out.extend_from_slice(&mesh[bot * COLS..(bot + 1) * COLS]);
+    out
+}
+
+/// Pure-rust oracle of one whole-mesh step (same scheme as ref.py).
+fn step_reference(mesh: &[f32]) -> Vec<f32> {
+    let idx = |r: usize, c: usize| r * COLS + c;
+    let mut out = vec![0.0; ROWS * COLS];
+    for r in 0..ROWS {
+        for c in 0..COLS {
+            if c == 0 || c == COLS - 1 {
+                out[idx(r, c)] = mesh[idx(r, c)];
+                continue;
+            }
+            let up = mesh[idx(r.saturating_sub(1), c)];
+            let down = mesh[idx((r + 1).min(ROWS - 1), c)];
+            let center = mesh[idx(r, c)];
+            out[idx(r, c)] =
+                center + ALPHA * (up + down + mesh[idx(r, c - 1)] + mesh[idx(r, c + 1)] - 4.0 * center);
+        }
+    }
+    out
+}
+
+#[test]
+fn striped_pjrt_run_matches_rust_oracle() {
+    let Ok(svc) = PjrtService::start_default() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    // Full stack on a 2-node machine.
+    let sys = Arc::new(System::new(Arc::new(Topology::numa(2, 1))));
+    let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+    let m = Marcel::over(sys.clone(), sched.clone());
+    let mut ex = Executor::new(sys, sched);
+    let bufs: Arc<[Mutex<Vec<f32>>; 2]> =
+        Arc::new([Mutex::new(initial()), Mutex::new(initial())]);
+    let bar = ex.alloc_barrier(STRIPES);
+
+    let bubble = m.bubble_init();
+    for s in 0..STRIPES {
+        let t = m.create_dontsched(format!("stripe{s}"));
+        m.bubble_inserttask(bubble, t);
+        let h = svc.handle();
+        let bufs = bufs.clone();
+        ex.register(t, move |api| {
+            for it in 0..ITERS {
+                let input = {
+                    let cur = bufs[it % 2].lock().unwrap();
+                    stripe_with_halo(&cur, s)
+                };
+                let out = h
+                    .exec(
+                        "conduction_r4_c32",
+                        vec![(input, vec![STRIPE_H + 2, COLS]), (vec![ALPHA], vec![1])],
+                    )
+                    .expect("stencil");
+                {
+                    let mut next = bufs[(it + 1) % 2].lock().unwrap();
+                    next[s * STRIPE_H * COLS..(s + 1) * STRIPE_H * COLS]
+                        .copy_from_slice(&out);
+                }
+                api.barrier(bar);
+            }
+        });
+    }
+    m.wake_up_bubble(bubble);
+    ex.run();
+
+    // Oracle: ITERS whole-mesh steps in pure rust.
+    let mut want = initial();
+    for _ in 0..ITERS {
+        want = step_reference(&want);
+    }
+    let got = bufs[ITERS % 2].lock().unwrap().clone();
+    let max_diff = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "striped PJRT run diverged: {max_diff}");
+}
+
+#[test]
+fn residual_kernel_agrees_with_rust() {
+    let Ok(svc) = PjrtService::start_default() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let h = svc.handle();
+    let a: Vec<f32> = (0..4 * 32).map(|i| i as f32).collect();
+    let mut b = a.clone();
+    b[77] += 4.25;
+    let out = h
+        .exec("residual_r4_c32", vec![(a, vec![4, 32]), (b, vec![4, 32])])
+        .unwrap();
+    assert!((out[0] - 4.25).abs() < 1e-6);
+}

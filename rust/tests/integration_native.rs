@@ -1,0 +1,142 @@
+//! Integration: native executor (fibers + workers) under every
+//! scheduler, including stress and failure-order cases.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use bubbles::config::SchedKind;
+use bubbles::exec::Executor;
+use bubbles::marcel::Marcel;
+use bubbles::sched::baselines::make_default;
+use bubbles::sched::{BubbleConfig, BubbleScheduler, System};
+use bubbles::topology::Topology;
+
+fn system(topo: Topology) -> Arc<System> {
+    Arc::new(System::new(Arc::new(topo)))
+}
+
+#[test]
+fn native_run_under_each_baseline() {
+    for kind in [SchedKind::Ss, SchedKind::Afs, SchedKind::Hafs, SchedKind::Bound] {
+        let sys = system(Topology::smp(4));
+        let sched = make_default(kind);
+        let mut ex = Executor::new(sys, sched);
+        let count = Arc::new(AtomicU64::new(0));
+        for i in 0..12 {
+            let c = count.clone();
+            ex.spawn(format!("t{i}"), move |api| {
+                c.fetch_add(1, Ordering::SeqCst);
+                api.yield_now();
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        ex.run();
+        assert_eq!(count.load(Ordering::SeqCst), 24, "{kind:?}");
+    }
+}
+
+#[test]
+fn native_stress_many_fibers() {
+    let sys = system(Topology::smp(8));
+    let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+    let mut ex = Executor::new(sys, sched);
+    let count = Arc::new(AtomicU64::new(0));
+    for i in 0..200 {
+        let c = count.clone();
+        ex.spawn(format!("t{i}"), move |api| {
+            for _ in 0..10 {
+                c.fetch_add(1, Ordering::SeqCst);
+                api.yield_now();
+            }
+        });
+    }
+    let rep = ex.run();
+    assert_eq!(rep.threads, 200);
+    assert_eq!(count.load(Ordering::SeqCst), 2000);
+}
+
+#[test]
+fn native_nested_bubble_hierarchy() {
+    let sys = system(Topology::numa(2, 2));
+    let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+    let m = Marcel::over(sys.clone(), sched.clone());
+    let mut ex = Executor::new(sys.clone(), sched);
+    let count = Arc::new(AtomicU64::new(0));
+    let root = m.bubble_init();
+    for g in 0..2 {
+        let b = m.bubble_init();
+        for k in 0..4 {
+            let t = m.create_dontsched(format!("g{g}k{k}"));
+            m.bubble_inserttask(b, t);
+            let c = count.clone();
+            ex.register(t, move |api| {
+                c.fetch_add(1, Ordering::SeqCst);
+                api.yield_now();
+            });
+        }
+        m.bubble_insertbubble(root, b);
+    }
+    m.wake_up_bubble(root);
+    ex.run();
+    assert_eq!(count.load(Ordering::SeqCst), 8);
+    assert_eq!(
+        sys.tasks.state(root),
+        bubbles::task::TaskState::Terminated,
+        "root bubble must terminate with its threads"
+    );
+}
+
+#[test]
+fn native_repeated_barriers_with_uneven_work() {
+    let sys = system(Topology::smp(4));
+    let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+    let mut ex = Executor::new(sys, sched);
+    let bar = ex.alloc_barrier(6);
+    let max_phase_gap = Arc::new(AtomicU64::new(0));
+    let phase = Arc::new(AtomicU64::new(0));
+    for i in 0..6 {
+        let p = phase.clone();
+        let gap = max_phase_gap.clone();
+        ex.spawn(format!("t{i}"), move |api| {
+            for round in 0..8u64 {
+                // Uneven spin to shuffle arrival order.
+                for _ in 0..(i * 1000) {
+                    std::hint::black_box(round);
+                }
+                let before = p.fetch_add(1, Ordering::SeqCst) + 1;
+                // All arrivals of round r land in (6r, 6(r+1)].
+                let lo = 6 * round;
+                assert!(before > lo, "barrier round bled: {before} <= {lo}");
+                gap.fetch_max(before - lo, Ordering::SeqCst);
+                api.barrier(bar);
+            }
+        });
+    }
+    ex.run();
+    assert_eq!(phase.load(Ordering::SeqCst), 48);
+    assert!(max_phase_gap.load(Ordering::SeqCst) <= 6);
+}
+
+#[test]
+fn native_gang_scheduler_runs_gangs() {
+    let sys = system(Topology::smp(4));
+    let sched = make_default(SchedKind::Gang);
+    let m = Marcel::with_system(&sys);
+    let mut ex = Executor::new(sys.clone(), sched.clone());
+    let count = Arc::new(AtomicU64::new(0));
+    for g in 0..3 {
+        let b = m.bubble_init();
+        for k in 0..2 {
+            let t = m.create_dontsched(format!("g{g}k{k}"));
+            m.bubble_inserttask(b, t);
+            let c = count.clone();
+            ex.register(t, move |api| {
+                c.fetch_add(1, Ordering::SeqCst);
+                api.yield_now();
+            });
+        }
+        sched.wake(&sys, b);
+    }
+    ex.run();
+    assert_eq!(count.load(Ordering::SeqCst), 6);
+}

@@ -1,0 +1,219 @@
+//! Cross-module property tests: scheduler invariants under randomized
+//! workloads, topologies and policies (our proptest-lite harness).
+
+use std::sync::Arc;
+
+use bubbles::config::SchedKind;
+use bubbles::marcel::Marcel;
+use bubbles::sched::baselines::make_default;
+use bubbles::sched::{BubbleConfig, BubbleScheduler, Scheduler, StopReason, System};
+use bubbles::task::{BurstLevel, TaskId, TaskState, PRIO_THREAD};
+use bubbles::topology::{CpuId, Topology};
+use bubbles::util::proptest::check;
+use bubbles::util::Rng;
+
+fn random_topo(rng: &mut Rng) -> Topology {
+    match rng.below(4) {
+        0 => Topology::smp(rng.range(1, 9)),
+        1 => Topology::numa(rng.range(2, 5), rng.range(1, 5)),
+        2 => Topology::xeon_2x_ht(),
+        _ => Topology::deep(),
+    }
+}
+
+/// No task is ever lost and no task is ever dispatched twice
+/// concurrently, for any scheduler, topology, and chaotic schedule.
+#[test]
+fn no_loss_no_double_dispatch_any_scheduler() {
+    check(0xabc1, 40, |rng| {
+        let topo = random_topo(rng);
+        let n_cpus = topo.n_cpus();
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        let kind = *rng.choose(&[
+            SchedKind::Bubble,
+            SchedKind::Ss,
+            SchedKind::Gss,
+            SchedKind::Tss,
+            SchedKind::Afs,
+            SchedKind::Lds,
+            SchedKind::Cafs,
+            SchedKind::Hafs,
+            SchedKind::Bound,
+        ]);
+        let sched = make_default(kind);
+        let n = rng.range(1, 30);
+        let mut remaining = std::collections::HashSet::new();
+        for i in 0..n {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            sched.wake(&sys, t);
+            remaining.insert(t);
+        }
+        let mut running: Vec<Option<TaskId>> = vec![None; n_cpus];
+        let mut fuel = 50 * n * n_cpus + 200;
+        while !remaining.is_empty() && fuel > 0 {
+            fuel -= 1;
+            let cpu = rng.range(0, n_cpus);
+            match running[cpu] {
+                Some(t) => {
+                    let why = if rng.chance(0.4) { StopReason::Yield } else { StopReason::Terminate };
+                    sched.stop(&sys, CpuId(cpu), t, why);
+                    if why == StopReason::Terminate {
+                        remaining.remove(&t);
+                    }
+                    running[cpu] = None;
+                }
+                None => {
+                    if let Some(t) = sched.pick(&sys, CpuId(cpu)) {
+                        // Double-dispatch check: nobody else may hold t.
+                        assert!(
+                            !running.iter().flatten().any(|&r| r == t),
+                            "{kind:?}: double dispatch of {t}"
+                        );
+                        assert_eq!(sys.tasks.state(t), TaskState::Running { cpu: CpuId(cpu) });
+                        running[cpu] = Some(t);
+                    }
+                }
+            }
+        }
+        // Drain leftovers.
+        for (cpu, slot) in running.iter().enumerate() {
+            if let Some(t) = slot {
+                sched.stop(&sys, CpuId(cpu), *t, StopReason::Terminate);
+                remaining.remove(t);
+            }
+        }
+        let mut extra_fuel = 50 * n * n_cpus + 200;
+        while !remaining.is_empty() && extra_fuel > 0 {
+            extra_fuel -= 1;
+            let cpu = rng.range(0, n_cpus);
+            if let Some(t) = sched.pick(&sys, CpuId(cpu)) {
+                sched.stop(&sys, CpuId(cpu), t, StopReason::Terminate);
+                remaining.remove(&t);
+            }
+        }
+        assert!(remaining.is_empty(), "{kind:?} lost {} tasks", remaining.len());
+    });
+}
+
+/// Bubble scheduler: bursts always happen at a depth <= the bursting
+/// level, and every released thread lands on a list covering the
+/// releasing area.
+#[test]
+fn bursts_respect_bursting_level() {
+    check(0xabc2, 30, |rng| {
+        let topo = random_topo(rng);
+        let n_cpus = topo.n_cpus();
+        let max_depth = topo.depth() - 1;
+        let burst_depth = rng.range(0, max_depth + 1);
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        sys.trace.set_enabled(true);
+        let sched = BubbleScheduler::new(BubbleConfig {
+            default_burst: BurstLevel::Depth(burst_depth),
+            ..BubbleConfig::default()
+        });
+        let m = Marcel::with_system(&sys);
+        let b = m.bubble_init();
+        for i in 0..rng.range(1, 6) {
+            let t = m.create_dontsched(format!("t{i}"));
+            m.bubble_inserttask(b, t);
+        }
+        sched.wake(&sys, b);
+        // Drain from random CPUs.
+        let mut fuel = 200;
+        while fuel > 0 {
+            fuel -= 1;
+            let cpu = CpuId(rng.range(0, n_cpus));
+            match sched.pick(&sys, cpu) {
+                Some(t) => sched.stop(&sys, cpu, t, StopReason::Terminate),
+                None => break,
+            }
+        }
+        for r in sys.trace.records() {
+            if let bubbles::trace::Event::Burst { list, .. } = r.event {
+                let d = sys.topo.node(list).depth;
+                assert!(
+                    d <= burst_depth,
+                    "burst at depth {d} exceeds bursting level {burst_depth}"
+                );
+            }
+        }
+    });
+}
+
+/// After any run, every thread is Terminated and every list is empty —
+/// nothing leaks onto runqueues.
+#[test]
+fn runqueues_drain_clean() {
+    check(0xabc3, 30, |rng| {
+        let topo = random_topo(rng);
+        let n_cpus = topo.n_cpus();
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        let sched = BubbleScheduler::new(BubbleConfig {
+            regen_hysteresis: rng.range(0, 2) as u64 * 1_000_000,
+            ..BubbleConfig::default()
+        });
+        let m = Marcel::with_system(&sys);
+        // Random forest.
+        for g in 0..rng.range(1, 4) {
+            let b = m.bubble_init();
+            for k in 0..rng.range(1, 4) {
+                let t = m.create_dontsched(format!("g{g}k{k}"));
+                m.bubble_inserttask(b, t);
+            }
+            sched.wake(&sys, b);
+        }
+        let mut fuel = 2000;
+        loop {
+            fuel -= 1;
+            assert!(fuel > 0, "did not drain");
+            let cpu = CpuId(rng.range(0, n_cpus));
+            match sched.pick(&sys, cpu) {
+                Some(t) => {
+                    if rng.chance(0.25) {
+                        sched.stop(&sys, cpu, t, StopReason::Yield);
+                    } else {
+                        sched.stop(&sys, cpu, t, StopReason::Terminate);
+                    }
+                }
+                None => {
+                    if sys.tasks.live_threads() == 0 {
+                        break;
+                    }
+                }
+            }
+        }
+        assert_eq!(sys.rq.total_queued(), 0, "runqueues must be empty");
+        let snap = sys.rq.snapshot();
+        assert!(snap.is_empty(), "leaked: {snap:?}");
+    });
+}
+
+/// Priorities are never inverted by the pick: the dispatched thread's
+/// priority is >= every ready thread visible from that CPU at pick
+/// time (single-threaded check).
+#[test]
+fn no_priority_inversion_single_threaded() {
+    check(0xabc4, 30, |rng| {
+        let topo = random_topo(rng);
+        let n_cpus = topo.n_cpus();
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        let sched = BubbleScheduler::new(BubbleConfig::default());
+        let n = rng.range(2, 12);
+        for i in 0..n {
+            let t = sys.tasks.new_thread(format!("t{i}"), rng.range(0, 5) as i32);
+            sched.wake(&sys, t);
+        }
+        let cpu = CpuId(rng.range(0, n_cpus));
+        if let Some(t) = sched.pick(&sys, cpu) {
+            let got = sys.tasks.prio(t);
+            // Any remaining ready task visible from this cpu must not
+            // outrank the dispatched one.
+            for &l in sys.topo.covering(cpu) {
+                let max = sys.rq.peek_max(l);
+                if max != i32::MIN {
+                    assert!(max <= got, "inversion: left prio {max} > got {got}");
+                }
+            }
+        }
+    });
+}

@@ -1,0 +1,124 @@
+//! Integration: config → scheduler → workload → simulator → report,
+//! across every scheduler and machine preset.
+
+use std::sync::Arc;
+
+use bubbles::apps::conduction::{self, HeatParams};
+use bubbles::apps::{engine_with, StructureMode};
+use bubbles::config::{ExperimentConfig, SchedKind};
+use bubbles::sched::baselines::make_default;
+use bubbles::sim::SimConfig;
+use bubbles::topology::Topology;
+
+fn small() -> HeatParams {
+    HeatParams { threads: 8, cycles: 4, work: 150_000, mem_fraction: 0.3 }
+}
+
+#[test]
+fn every_scheduler_completes_conduction() {
+    let topo = Topology::numa(2, 2);
+    for kind in SchedKind::all() {
+        if *kind == SchedKind::Gang {
+            continue; // gang scheduling wants gang-structured work
+        }
+        let sched = make_default(*kind);
+        let mut e = engine_with(&topo, sched, SimConfig::default());
+        conduction::build(&mut e, StructureMode::Simple, &small());
+        let rep = e.run().unwrap_or_else(|err| panic!("{kind:?}: {err}"));
+        assert!(rep.total_time > 0, "{kind:?}");
+    }
+}
+
+#[test]
+fn every_machine_preset_runs_bubbles() {
+    for preset in ["xeon-2x-ht", "numa-4x4", "deep", "smp-4", "numa-2x8"] {
+        let topo = Topology::preset(preset).unwrap();
+        let p = HeatParams { threads: topo.n_cpus(), ..small() };
+        let rep = conduction::run(&topo, StructureMode::Bubbles, &p);
+        assert!(rep.total_time > 0, "{preset}");
+        assert!(rep.utilisation() > 0.1, "{preset}: {}", rep.utilisation());
+    }
+}
+
+#[test]
+fn config_file_end_to_end() {
+    let toml = r#"
+        [machine]
+        levels = ["numa:2", "core:2"]
+        numa_factor = 2.0
+        [sched]
+        kind = "bubble"
+        burst = "numa"
+        [workload]
+        app = "conduction"
+        threads = 4
+        cycles = 3
+        work = 100000
+    "#;
+    let cfg = ExperimentConfig::from_toml(toml).unwrap();
+    let topo = cfg.machine.build_topology().unwrap();
+    assert_eq!(topo.n_cpus(), 4);
+    let sched = bubbles::sched::baselines::make(&cfg.sched);
+    let mut e = engine_with(&topo, sched, SimConfig::default());
+    conduction::build(
+        &mut e,
+        StructureMode::Bubbles,
+        &HeatParams {
+            threads: cfg.workload.threads,
+            cycles: cfg.workload.cycles,
+            work: cfg.workload.work,
+            mem_fraction: cfg.workload.mem_fraction,
+        },
+    );
+    assert!(e.run().unwrap().total_time > 0);
+}
+
+#[test]
+fn simulation_is_deterministic_across_schedulers() {
+    let topo = Topology::numa(2, 2);
+    for kind in [SchedKind::Bubble, SchedKind::Ss, SchedKind::Afs] {
+        let run_once = || {
+            let sched = make_default(kind);
+            let mut e = engine_with(&topo, sched, SimConfig::default());
+            conduction::build(
+                &mut e,
+                if kind == SchedKind::Bubble { StructureMode::Bubbles } else { StructureMode::Simple },
+                &small(),
+            );
+            e.run().unwrap().total_time
+        };
+        assert_eq!(run_once(), run_once(), "{kind:?} not deterministic");
+    }
+}
+
+#[test]
+fn jitter_seed_changes_timings_but_not_correctness() {
+    let topo = Topology::numa(2, 2);
+    let run_seed = |seed: u64| {
+        let sched = make_default(SchedKind::Ss);
+        let cfg = SimConfig { seed, ..SimConfig::default() };
+        let mut e = engine_with(&topo, sched, cfg);
+        conduction::build(&mut e, StructureMode::Simple, &small());
+        e.run().unwrap().total_time
+    };
+    let a = run_seed(1);
+    let b = run_seed(2);
+    assert_ne!(a, b, "different seeds should perturb timings");
+    let rel = (a as f64 - b as f64).abs() / a as f64;
+    assert!(rel < 0.25, "seeds should not change the outcome scale: {rel}");
+}
+
+#[test]
+fn metrics_are_coherent_after_a_run() {
+    let topo = Topology::numa(2, 2);
+    let sched = Arc::new(bubbles::sched::BubbleScheduler::new(Default::default()));
+    let mut e = engine_with(&topo, sched, SimConfig::default());
+    conduction::build(&mut e, StructureMode::Bubbles, &small());
+    e.run().unwrap();
+    let m = &e.sys.metrics;
+    let picks = m.picks.load(std::sync::atomic::Ordering::Relaxed);
+    // 8 threads × 4 cycles: at least one pick per thread per cycle.
+    assert!(picks >= 32, "picks {picks}");
+    assert!(m.bursts.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    assert!(m.utilisation() > 0.0);
+}
