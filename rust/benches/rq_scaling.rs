@@ -1,15 +1,67 @@
-//! §2.2's contention claim, measured: "a unique thread list for the
-//! whole machine is a bottleneck, particularly when the machine has
-//! many processors" (Dandamudi & Cheng). We hammer a single global
-//! RunList vs per-CPU lists from N OS threads and report throughput.
+//! Runqueue scaling, two measurements:
+//!
+//! 1. **Contention** — §2.2's claim, measured: "a unique thread list
+//!    for the whole machine is a bottleneck, particularly when the
+//!    machine has many processors" (Dandamudi & Cheng). We hammer a
+//!    single global list vs per-CPU lists from N OS threads.
+//! 2. **Pick path** — the paper's two-pass search (pass-1 lock-free
+//!    hint scan over a covering chain + pass-2 locked pop) under
+//!    contention, comparing the bucket-array `RunList` against the
+//!    previous BTreeMap layout (`BtreeRunList`) on a numa-4x4 machine.
+//!
+//! Results are printed as tables *and* written machine-readably to
+//! `BENCH_rq.json`, so the perf trajectory is tracked across PRs.
+//! Acceptance shape: the bucket layout is no slower single-threaded
+//! and faster at ≥16 contended threads.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use bubbles::rq::RunList;
-use bubbles::task::TaskId;
-use bubbles::topology::LevelId;
+use bubbles::rq::{BtreeRunList, RunList};
+use bubbles::task::{Prio, TaskId};
+use bubbles::topology::{CpuId, LevelId, Topology};
 use bubbles::util::fmt::Table;
+
+/// The list surface both layouts share, so the same driver measures
+/// either.
+trait PrioQueue: Send + Sync + 'static {
+    fn make(level: LevelId) -> Self;
+    fn push(&self, t: TaskId, p: Prio);
+    fn pop_max(&self) -> Option<(TaskId, Prio)>;
+    fn peek_max(&self) -> Prio;
+}
+
+impl PrioQueue for RunList {
+    fn make(level: LevelId) -> Self {
+        RunList::new(level)
+    }
+    fn push(&self, t: TaskId, p: Prio) {
+        RunList::push(self, t, p)
+    }
+    fn pop_max(&self) -> Option<(TaskId, Prio)> {
+        RunList::pop_max(self)
+    }
+    fn peek_max(&self) -> Prio {
+        RunList::peek_max(self)
+    }
+}
+
+impl PrioQueue for BtreeRunList {
+    fn make(level: LevelId) -> Self {
+        BtreeRunList::new(level)
+    }
+    fn push(&self, t: TaskId, p: Prio) {
+        BtreeRunList::push(self, t, p)
+    }
+    fn pop_max(&self) -> Option<(TaskId, Prio)> {
+        BtreeRunList::pop_max(self)
+    }
+    fn peek_max(&self) -> Prio {
+        BtreeRunList::peek_max(self)
+    }
+}
+
+// ---------------------------------------------------------- contention
 
 /// Ops/sec with `threads` workers over `lists` (each worker uses
 /// list[worker % lists]).
@@ -38,10 +90,75 @@ fn throughput(threads: usize, lists: usize, dur_ms: u64) -> f64 {
     total as f64 / (dur_ms as f64 / 1e3)
 }
 
+// ----------------------------------------------------------- pick path
+
+/// Average ns per pick cycle (push + pass-1 hint scan over the CPU's
+/// covering chain + pass-2 locked pop) with `threads` workers hammering
+/// a shared numa-4x4 list hierarchy. Workers map onto CPUs round-robin,
+/// so ≥16 threads means every chain is contended and the shared node /
+/// root lists see cross-CPU traffic.
+fn pick_path_ns<Q: PrioQueue>(topo: &Topology, threads: usize, dur_ms: u64) -> f64 {
+    let lists: Arc<Vec<Q>> =
+        Arc::new((0..topo.n_components()).map(|i| Q::make(LevelId(i))).collect());
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for w in 0..threads {
+        let lists = lists.clone();
+        let stop = stop.clone();
+        let cpu = CpuId(w % topo.n_cpus());
+        let chain: Vec<usize> = topo.covering(cpu).iter().map(|l| l.0).collect();
+        joins.push(std::thread::spawn(move || {
+            let leaf = chain[0];
+            let root = *chain.last().unwrap();
+            let mut ops = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                // Mostly-local traffic plus a slice of global traffic,
+                // like a yield loop with occasional machine-wide work.
+                let target = if ops % 8 == 0 { root } else { leaf };
+                lists[target].push(TaskId(w), 2);
+                // Pass 1: scan the covering chain's hints, pick best.
+                let mut best: Option<usize> = None;
+                let mut best_p = i32::MIN;
+                for &l in &chain {
+                    let p = lists[l].peek_max();
+                    if p > best_p {
+                        best_p = p;
+                        best = Some(l);
+                    }
+                }
+                // Pass 2: locked pop (retry once on a lost race).
+                if let Some(l) = best {
+                    if lists[l].pop_max().is_none() {
+                        let _ = lists[leaf].pop_max();
+                    }
+                }
+                ops += 1;
+            }
+            ops
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(dur_ms));
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    (dur_ms as f64 * 1e6) * threads as f64 / total.max(1) as f64
+}
+
+// ---------------------------------------------------------------- main
+
+fn json_escape_free(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.2}")
+    } else {
+        "null".to_string()
+    }
+}
+
 fn main() {
     let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
     let dur = if fast { 50 } else { 300 };
+
     println!("runqueue contention: single global list vs per-CPU lists\n");
+    let mut contention_rows = Vec::new();
     let mut t = Table::new(&["threads", "global Mops/s", "per-cpu Mops/s", "hierarchy win"]);
     for threads in [1usize, 2, 4, 8] {
         let global = throughput(threads, 1, dur);
@@ -52,7 +169,47 @@ fn main() {
             format!("{:.2}", percpu / 1e6),
             format!("{:.2}x", percpu / global),
         ]);
+        contention_rows.push(format!(
+            "{{\"threads\":{threads},\"global_mops\":{},\"percpu_mops\":{}}}",
+            json_escape_free(global / 1e6),
+            json_escape_free(percpu / 1e6)
+        ));
     }
     println!("{}", t.render());
-    println!("expected shape: the win grows with the thread count (§2.2).");
+    println!("expected shape: the win grows with the thread count (§2.2).\n");
+
+    println!("pick path (two-pass over numa-4x4 chains): bucket array vs BTreeMap\n");
+    let topo = Topology::numa(4, 4);
+    let mut pick_rows = Vec::new();
+    let mut t2 = Table::new(&["threads", "bucket ns/op", "btree ns/op", "bucket speedup"]);
+    for threads in [1usize, 4, 16, 32] {
+        let bucket = pick_path_ns::<RunList>(&topo, threads, dur);
+        let btree = pick_path_ns::<BtreeRunList>(&topo, threads, dur);
+        t2.row(&[
+            threads.to_string(),
+            format!("{bucket:.1}"),
+            format!("{btree:.1}"),
+            format!("{:.2}x", btree / bucket),
+        ]);
+        pick_rows.push(format!(
+            "{{\"threads\":{threads},\"bucket_ns\":{},\"btree_ns\":{},\"speedup\":{}}}",
+            json_escape_free(bucket),
+            json_escape_free(btree),
+            json_escape_free(btree / bucket)
+        ));
+    }
+    println!("{}", t2.render());
+    println!("acceptance shape: >= 1.00x at 1 thread, > 1.00x at >= 16 threads.");
+
+    let json = format!(
+        "{{\n  \"bench\": \"rq_scaling\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"contention\": [{}],\n  \"pick_path\": [{}]\n}}\n",
+        if fast { "fast" } else { "full" },
+        topo.name(),
+        contention_rows.join(","),
+        pick_rows.join(",")
+    );
+    match std::fs::write("BENCH_rq.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_rq.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_rq.json: {e}"),
+    }
 }

@@ -169,7 +169,7 @@ pub fn run(topo: &Topology, with_bubbles: bool, p: &FibParams) -> u64 {
             ..BubbleConfig::default()
         }))
     } else {
-        crate::sched::baselines::make_default(crate::config::SchedKind::Afs)
+        crate::sched::factory::make_default(crate::config::SchedKind::Afs)
     };
     let mut e = super::engine_with(topo, sched, SimConfig::default());
     build(&mut e, with_bubbles, p);

@@ -18,7 +18,7 @@ pub mod fib;
 use std::sync::Arc;
 
 use crate::config::SchedKind;
-use crate::sched::baselines::make_default;
+use crate::sched::factory::make_default;
 use crate::sched::{BubbleConfig, BubbleScheduler, Scheduler, System};
 use crate::sim::{CostModel, SimConfig, SimEngine};
 use crate::topology::{DistanceModel, Topology};

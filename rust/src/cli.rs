@@ -67,6 +67,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         "run" => cmd_run(&args),
         "analyze" => cmd_analyze(&args),
         "evolve" => cmd_evolve(&args),
+        "schedulers" => Ok(crate::sched::factory::render_list()),
         other => Err(Error::config(format!("unknown command `{other}`; try `repro help`"))),
     }
 }
@@ -86,9 +87,11 @@ COMMANDS
   run        config-driven simulation            [--config file.toml]
   analyze    traced run + scheduler analysis     [--machine, --app, --sched]
   evolve     traced bubble evolution (Figure 3)  [--machine numa-4x4]
+  schedulers list registered scheduling policies (also: --sched list)
   help       this text
 
-MACHINES: xeon-2x-ht, numa-4x4 (novascale), deep, smp-<n>, numa-<a>x<b>
+MACHINES: xeon-2x-ht, numa-4x4 (novascale), deep, asym, smp-<n>, numa-<a>x<b>
+SCHEDULERS: see `repro schedulers`
 ";
 
 fn cmd_topology(args: &Args) -> Result<String> {
@@ -184,7 +187,7 @@ fn cmd_run(args: &Args) -> Result<String> {
         None => ExperimentConfig::default(),
     };
     let topo = cfg.machine.build_topology()?;
-    let sched = crate::sched::baselines::make(&cfg.sched);
+    let sched = crate::sched::factory::make(&cfg.sched);
     let mut engine = crate::apps::engine_with(&topo, sched, crate::sim::SimConfig::default());
     let w = &cfg.workload;
     match w.app.as_str() {
@@ -248,9 +251,16 @@ fn cmd_analyze(args: &Args) -> Result<String> {
     // Traced run + the §6 analysis tools.
     let topo = args.machine()?;
     let sched_name = args.get("sched", "bubble");
-    let kind = crate::config::SchedKind::parse(sched_name)
-        .ok_or_else(|| Error::config(format!("unknown scheduler `{sched_name}`")))?;
-    let sched = crate::sched::baselines::make(&crate::config::SchedConfig {
+    if sched_name == "list" || sched_name == "help" {
+        // `--sched list` enumerates the registry instead of running.
+        return Ok(crate::sched::factory::render_list());
+    }
+    let kind = crate::config::SchedKind::parse(sched_name).ok_or_else(|| {
+        Error::config(format!(
+            "unknown scheduler `{sched_name}`; try `repro schedulers`"
+        ))
+    })?;
+    let sched = crate::sched::factory::make(&crate::config::SchedConfig {
         kind,
         ..Default::default()
     });
@@ -343,6 +353,19 @@ mod tests {
         assert!(run(&argv("help")).unwrap().contains("table2"));
         assert!(run(&argv("nope")).is_err());
         assert!(run(&argv("topology --machine warp")).is_err());
+    }
+
+    #[test]
+    fn schedulers_command_lists_registry() {
+        let out = run(&argv("schedulers")).unwrap();
+        assert!(out.contains("bubble"), "{out}");
+        assert!(out.contains("gang"), "{out}");
+        // `--sched list` is the in-command spelling of the same thing.
+        let out2 = run(&argv("analyze --sched list")).unwrap();
+        assert_eq!(out, out2);
+        // Unknown schedulers point at the listing.
+        let err = run(&argv("analyze --sched warp")).unwrap_err();
+        assert!(err.to_string().contains("repro schedulers"), "{err}");
     }
 
     #[test]

@@ -88,20 +88,10 @@ pub enum SchedKind {
 }
 
 impl SchedKind {
+    /// Parse a policy name or alias via the registry
+    /// ([`crate::sched::factory`]) — no hardcoded name matches.
     pub fn parse(s: &str) -> Option<SchedKind> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "bubble" | "bubbles" => SchedKind::Bubble,
-            "ss" | "simple" => SchedKind::Ss,
-            "gss" => SchedKind::Gss,
-            "tss" => SchedKind::Tss,
-            "afs" => SchedKind::Afs,
-            "lds" => SchedKind::Lds,
-            "cafs" => SchedKind::Cafs,
-            "hafs" => SchedKind::Hafs,
-            "bound" => SchedKind::Bound,
-            "gang" => SchedKind::Gang,
-            _ => return None,
-        })
+        crate::sched::factory::lookup(s).map(|e| e.kind)
     }
 
     pub fn all() -> &'static [SchedKind] {
@@ -119,19 +109,14 @@ impl SchedKind {
         ]
     }
 
+    /// Canonical policy name, from the registry.
     pub fn label(&self) -> &'static str {
-        match self {
-            SchedKind::Bubble => "bubble",
-            SchedKind::Ss => "ss",
-            SchedKind::Gss => "gss",
-            SchedKind::Tss => "tss",
-            SchedKind::Afs => "afs",
-            SchedKind::Lds => "lds",
-            SchedKind::Cafs => "cafs",
-            SchedKind::Hafs => "hafs",
-            SchedKind::Bound => "bound",
-            SchedKind::Gang => "gang",
-        }
+        crate::sched::factory::info(*self).name
+    }
+
+    /// One-line policy description, from the registry.
+    pub fn summary(&self) -> &'static str {
+        crate::sched::factory::info(*self).summary
     }
 }
 

@@ -13,7 +13,7 @@ use crate::apps::amr::{self, AmrParams};
 use crate::apps::conduction::{self, HeatParams};
 use crate::apps::{engine_with, StructureMode};
 use crate::config::SchedKind;
-use crate::sched::baselines::make_default;
+use crate::sched::factory::make_default;
 use crate::sched::{BubbleConfig, BubbleScheduler};
 use crate::sim::SimConfig;
 use crate::task::BurstLevel;

@@ -1,0 +1,180 @@
+//! The previous `BTreeMap`-based task-list layout, kept verbatim as the
+//! comparison baseline for `benches/rq_scaling.rs` (old vs. new bucket
+//! layout on the pick path). Not used by any scheduler.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicI32, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::task::{Prio, TaskId};
+use crate::topology::LevelId;
+
+/// Priority buckets: FIFO within a priority, highest priority first.
+#[derive(Debug, Default)]
+struct Buckets {
+    by_prio: BTreeMap<Prio, VecDeque<TaskId>>,
+}
+
+impl Buckets {
+    // Empty buckets are *kept* in the map: the yield hot path pushes
+    // and pops the same priority class every cycle, and removing the
+    // bucket on empty costs a BTreeMap insert + VecDeque allocation
+    // per scheduling round.
+    fn push(&mut self, task: TaskId, prio: Prio) {
+        self.by_prio.entry(prio).or_default().push_back(task);
+    }
+
+    fn pop_max(&mut self) -> Option<(TaskId, Prio)> {
+        for (&prio, q) in self.by_prio.iter_mut().rev() {
+            if let Some(task) = q.pop_front() {
+                return Some((task, prio));
+            }
+        }
+        None
+    }
+
+    fn max_prio(&self) -> Prio {
+        self.by_prio
+            .iter()
+            .rev()
+            .find(|(_, q)| !q.is_empty())
+            .map(|(&p, _)| p)
+            .unwrap_or(i32::MIN)
+    }
+
+    fn remove(&mut self, task: TaskId) -> bool {
+        for q in self.by_prio.values_mut() {
+            if let Some(pos) = q.iter().position(|&t| t == task) {
+                q.remove(pos);
+                return true;
+            }
+        }
+        false
+    }
+
+    fn len(&self) -> usize {
+        self.by_prio.values().map(|q| q.len()).sum()
+    }
+}
+
+/// The legacy list layout. Same surface as [`super::RunList`] (modulo
+/// `remove` not needing the priority), so benchmarks can swap them.
+#[derive(Debug)]
+pub struct BtreeRunList {
+    level: LevelId,
+    inner: Mutex<Buckets>,
+    max_prio: AtomicI32,
+    count: AtomicUsize,
+}
+
+impl BtreeRunList {
+    pub fn new(level: LevelId) -> BtreeRunList {
+        BtreeRunList {
+            level,
+            inner: Mutex::new(Buckets::default()),
+            max_prio: AtomicI32::new(i32::MIN),
+            count: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn level(&self) -> LevelId {
+        self.level
+    }
+
+    pub fn push(&self, task: TaskId, prio: Prio) {
+        let mut b = self.inner.lock().unwrap();
+        b.push(task, prio);
+        self.max_prio.store(b.max_prio(), Ordering::Release);
+        self.count.store(b.len(), Ordering::Release);
+    }
+
+    pub fn pop_max(&self) -> Option<(TaskId, Prio)> {
+        let mut b = self.inner.lock().unwrap();
+        let out = b.pop_max();
+        self.max_prio.store(b.max_prio(), Ordering::Release);
+        self.count.store(b.len(), Ordering::Release);
+        out
+    }
+
+    pub fn peek_max(&self) -> Prio {
+        self.max_prio.load(Ordering::Acquire)
+    }
+
+    pub fn len(&self) -> usize {
+        self.count.load(Ordering::Acquire)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn remove(&self, task: TaskId) -> bool {
+        let mut b = self.inner.lock().unwrap();
+        let hit = b.remove(task);
+        self.max_prio.store(b.max_prio(), Ordering::Release);
+        self.count.store(b.len(), Ordering::Release);
+        hit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rq::RunList;
+    use crate::util::Rng;
+
+    /// Differential check: the bucket-array layout must behave exactly
+    /// like the legacy BTreeMap layout — including priorities outside
+    /// the bucket range, which saturate into sorted end buckets.
+    #[test]
+    fn bucket_layout_matches_btree_layout() {
+        let mut rng = Rng::new(0x5eed);
+        for _ in 0..200 {
+            let new = RunList::new(LevelId(0));
+            let old = BtreeRunList::new(LevelId(0));
+            let mut live: Vec<(TaskId, Prio)> = Vec::new();
+            let mut next_id = 0usize;
+            for _ in 0..rng.range(1, 60) {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let t = TaskId(next_id);
+                        next_id += 1;
+                        // Deliberately exceeds the bucket range on both
+                        // ends: the layouts must agree even for
+                        // saturated priorities.
+                        let p = rng.range(0, 300) as Prio - 150;
+                        new.push(t, p);
+                        old.push(t, p);
+                        live.push((t, p));
+                    }
+                    2 => {
+                        let a = new.pop_max();
+                        let b = old.pop_max();
+                        assert_eq!(a, b);
+                        if let Some((t, _)) = a {
+                            live.retain(|&(x, _)| x != t);
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let (t, p) = live[rng.range(0, live.len())];
+                            assert_eq!(new.remove(t, p), old.remove(t));
+                            live.retain(|&(x, _)| x != t);
+                        }
+                    }
+                }
+                assert_eq!(new.peek_max(), old.peek_max());
+                assert_eq!(new.len(), old.len());
+            }
+            // Drain both and compare total order.
+            loop {
+                let a = new.pop_max();
+                let b = old.pop_max();
+                assert_eq!(a, b);
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+}

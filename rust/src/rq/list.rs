@@ -1,57 +1,145 @@
 //! A single priority task list with a lock-free max-priority hint.
+//!
+//! The hot-path layout is a **fixed-size priority-bucket array with an
+//! occupancy bitmask**: `pop_max` and `max_prio` are constant-time word
+//! scans (find-highest-set-bit over two `u64`s) instead of the previous
+//! `BTreeMap` walk, and `remove` indexes the task's bucket directly
+//! instead of scanning every priority class. The previous BTreeMap
+//! layout is kept in [`super::BtreeRunList`] as the comparison baseline
+//! for `benches/rq_scaling.rs`.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicI32, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::task::{Prio, TaskId};
 use crate::topology::LevelId;
 
+/// Lowest priority with its own bucket; anything below saturates here.
+pub const PRIO_FLOOR: Prio = -64;
+/// Highest priority with its own bucket; anything above saturates here.
+pub const PRIO_CEIL: Prio = 63;
+
+const N_BUCKETS: usize = (PRIO_CEIL - PRIO_FLOOR + 1) as usize;
+const WORDS: usize = N_BUCKETS / 64;
+
+/// Bucket index of a priority. Out-of-range priorities saturate into
+/// the end buckets, which are kept *sorted* (see [`Buckets::push`]) so
+/// priority ordering stays exact for every `Prio` value — only the
+/// rare overflow entries pay an O(bucket-len) insertion.
+fn bucket_of(prio: Prio) -> usize {
+    (prio.clamp(PRIO_FLOOR, PRIO_CEIL) - PRIO_FLOOR) as usize
+}
+
+fn prio_of_bucket(b: usize) -> Prio {
+    b as Prio + PRIO_FLOOR
+}
+
 /// Priority buckets: FIFO within a priority, highest priority first.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct Buckets {
-    by_prio: BTreeMap<Prio, VecDeque<TaskId>>,
+    /// One FIFO per bucket. Empty `VecDeque`s hold no heap allocation;
+    /// the yield hot path reuses the same bucket's buffer every cycle.
+    queues: Vec<VecDeque<(TaskId, Prio)>>,
+    /// Bit `b` of word `b / 64` set ⇔ bucket `b` is non-empty.
+    occupied: [u64; WORDS],
+    len: usize,
+}
+
+impl Default for Buckets {
+    fn default() -> Buckets {
+        Buckets {
+            queues: (0..N_BUCKETS).map(|_| VecDeque::new()).collect(),
+            occupied: [0; WORDS],
+            len: 0,
+        }
+    }
 }
 
 impl Buckets {
-    // Perf note (EXPERIMENTS.md §Perf): empty buckets are *kept* in the
-    // map. The yield hot path pushes and pops the same priority class
-    // every cycle; removing the bucket on empty caused a BTreeMap
-    // insert + VecDeque allocation per scheduling round.
     fn push(&mut self, task: TaskId, prio: Prio) {
-        self.by_prio.entry(prio).or_default().push_back(task);
+        let b = bucket_of(prio);
+        let q = &mut self.queues[b];
+        if b == 0 || b == N_BUCKETS - 1 {
+            // End buckets may hold *saturated* (out-of-range)
+            // priorities: keep them sorted descending, FIFO within a
+            // priority, so `pop_front` is still the global max.
+            let pos = q.iter().position(|&(_, p)| p < prio).unwrap_or(q.len());
+            q.insert(pos, (task, prio));
+        } else {
+            // Middle buckets hold exactly one priority: plain FIFO.
+            q.push_back((task, prio));
+        }
+        self.occupied[b / 64] |= 1 << (b % 64);
+        self.len += 1;
     }
 
-    fn pop_max(&mut self) -> Option<(TaskId, Prio)> {
-        for (&prio, q) in self.by_prio.iter_mut().rev() {
-            if let Some(task) = q.pop_front() {
-                return Some((task, prio));
+    /// Highest occupied bucket, if any: a constant-time word scan.
+    fn max_bucket(&self) -> Option<usize> {
+        for w in (0..WORDS).rev() {
+            let word = self.occupied[w];
+            if word != 0 {
+                return Some(w * 64 + 63 - word.leading_zeros() as usize);
             }
         }
         None
     }
 
-    fn max_prio(&self) -> Prio {
-        self.by_prio
-            .iter()
-            .rev()
-            .find(|(_, q)| !q.is_empty())
-            .map(|(&p, _)| p)
-            .unwrap_or(i32::MIN)
+    fn pop_max(&mut self) -> Option<(TaskId, Prio)> {
+        let b = self.max_bucket()?;
+        let out = self.queues[b].pop_front().expect("occupancy bit lied");
+        if self.queues[b].is_empty() {
+            self.occupied[b / 64] &= !(1 << (b % 64));
+        }
+        self.len -= 1;
+        Some(out)
     }
 
-    fn remove(&mut self, task: TaskId) -> bool {
-        for q in self.by_prio.values_mut() {
-            if let Some(pos) = q.iter().position(|&t| t == task) {
-                q.remove(pos);
+    fn max_prio(&self) -> Prio {
+        match self.max_bucket() {
+            // End buckets are sorted: the front carries the exact
+            // (possibly out-of-range) maximum. Middle buckets hold a
+            // single priority, so the bucket index is exact.
+            Some(b) if b == 0 || b == N_BUCKETS - 1 => self.queues[b][0].1,
+            Some(b) => prio_of_bucket(b),
+            None => i32::MIN,
+        }
+    }
+
+    /// Remove `task`, whose push priority was `prio`: only that bucket
+    /// is scanned. A full sweep remains as a defensive fallback in case
+    /// a caller passes a stale priority.
+    fn remove(&mut self, task: TaskId, prio: Prio) -> bool {
+        let b = bucket_of(prio);
+        if self.remove_from_bucket(b, task) {
+            return true;
+        }
+        for other in 0..N_BUCKETS {
+            if other != b
+                && self.occupied[other / 64] & (1 << (other % 64)) != 0
+                && self.remove_from_bucket(other, task)
+            {
                 return true;
             }
         }
         false
     }
 
+    fn remove_from_bucket(&mut self, b: usize, task: TaskId) -> bool {
+        let q = &mut self.queues[b];
+        if let Some(pos) = q.iter().position(|&(t, _)| t == task) {
+            q.remove(pos);
+            if q.is_empty() {
+                self.occupied[b / 64] &= !(1 << (b % 64));
+            }
+            self.len -= 1;
+            return true;
+        }
+        false
+    }
+
     fn len(&self) -> usize {
-        self.by_prio.values().map(|q| q.len()).sum()
+        self.len
     }
 }
 
@@ -101,6 +189,9 @@ impl RunList {
     }
 
     /// Lock-free max-priority hint; `i32::MIN` when (probably) empty.
+    /// Exact for every priority, including values outside
+    /// [`PRIO_FLOOR`, `PRIO_CEIL`] (those live sorted in the end
+    /// buckets).
     pub fn peek_max(&self) -> Prio {
         self.max_prio.load(Ordering::Acquire)
     }
@@ -115,21 +206,23 @@ impl RunList {
         self.len() == 0
     }
 
-    /// Remove a specific task. Returns whether it was found.
-    pub fn remove(&self, task: TaskId) -> bool {
+    /// Remove a specific task, given the priority it was pushed with
+    /// (tasks carry a fixed `prio`, so callers always know it). Returns
+    /// whether it was found.
+    pub fn remove(&self, task: TaskId, prio: Prio) -> bool {
         let mut b = self.inner.lock().unwrap();
-        let hit = b.remove(task);
+        let hit = b.remove(task, prio);
         self.max_prio.store(b.max_prio(), Ordering::Release);
         self.count.store(b.len(), Ordering::Release);
         hit
     }
 
-    /// Copy of the queue contents (tests / traces).
+    /// Copy of the queue contents (tests / traces), highest first.
     pub fn snapshot(&self) -> Vec<(TaskId, Prio)> {
         let b = self.inner.lock().unwrap();
         let mut out = Vec::new();
-        for (&p, q) in b.by_prio.iter().rev() {
-            for &t in q {
+        for bk in (0..N_BUCKETS).rev() {
+            for &(t, p) in &b.queues[bk] {
                 out.push((t, p));
             }
         }
@@ -149,7 +242,7 @@ mod tests {
         assert_eq!(l.peek_max(), 4);
         l.push(TaskId(1), 9);
         assert_eq!(l.peek_max(), 9);
-        l.remove(TaskId(1));
+        l.remove(TaskId(1), 9);
         assert_eq!(l.peek_max(), 4);
         l.pop_max();
         assert_eq!(l.peek_max(), i32::MIN);
@@ -170,9 +263,51 @@ mod tests {
         for i in 0..4 {
             l.push(TaskId(i), 2);
         }
-        assert!(l.remove(TaskId(2)));
+        assert!(l.remove(TaskId(2), 2));
         let order: Vec<TaskId> = std::iter::from_fn(|| l.pop_max().map(|(t, _)| t)).collect();
         assert_eq!(order, vec![TaskId(0), TaskId(1), TaskId(3)]);
+    }
+
+    #[test]
+    fn remove_with_stale_prio_still_finds_task() {
+        let l = RunList::new(LevelId(0));
+        l.push(TaskId(7), 3);
+        // Wrong priority: the defensive sweep must still find it.
+        assert!(l.remove(TaskId(7), 1));
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn out_of_range_priorities_keep_exact_order() {
+        let l = RunList::new(LevelId(0));
+        // All of these saturate into the top bucket, which must stay
+        // priority-ordered (FIFO within equal priorities).
+        l.push(TaskId(0), 100);
+        l.push(TaskId(1), 1_000);
+        l.push(TaskId(2), 70);
+        l.push(TaskId(3), 100);
+        l.push(TaskId(4), -1_000);
+        assert_eq!(l.peek_max(), 1_000, "hint must be exact beyond the bucket range");
+        assert_eq!(l.pop_max(), Some((TaskId(1), 1_000)));
+        assert_eq!(l.pop_max(), Some((TaskId(0), 100)));
+        assert_eq!(l.pop_max(), Some((TaskId(3), 100)), "FIFO within equal priority");
+        assert_eq!(l.pop_max(), Some((TaskId(2), 70)));
+        assert_eq!(l.peek_max(), -1_000);
+        assert_eq!(l.pop_max(), Some((TaskId(4), -1_000)));
+    }
+
+    #[test]
+    fn bitmask_spans_both_words() {
+        // Priorities in both halves of the [-64, 63] range exercise
+        // both occupancy words.
+        let l = RunList::new(LevelId(0));
+        l.push(TaskId(0), -60);
+        l.push(TaskId(1), 50);
+        l.push(TaskId(2), -10);
+        assert_eq!(l.pop_max(), Some((TaskId(1), 50)));
+        assert_eq!(l.pop_max(), Some((TaskId(2), -10)));
+        assert_eq!(l.pop_max(), Some((TaskId(0), -60)));
+        assert_eq!(l.pop_max(), None);
     }
 
     #[test]

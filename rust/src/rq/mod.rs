@@ -9,10 +9,21 @@
 //! lock-free `max_prio` hint: pass 1 scans the hints without locking;
 //! pass 2 locks only the selected list and re-checks, in case another
 //! processor took the task in the meantime.
+//!
+//! Besides the per-list hints, the hierarchy maintains **incremental
+//! subtree occupancy counters**: `queued_subtree(l)` is the number of
+//! tasks queued anywhere in `l`'s subtree, updated in O(depth) on every
+//! push/pop/remove. Policies consult these instead of rescanning lists
+//! (e.g. an idle CPU bails out of a steal attempt in O(1) when the
+//! whole machine is empty).
 
+mod btree;
 mod list;
 
-pub use list::RunList;
+pub use btree::BtreeRunList;
+pub use list::{RunList, PRIO_CEIL, PRIO_FLOOR};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::task::{Prio, TaskId};
 use crate::topology::{LevelId, Topology};
@@ -21,13 +32,23 @@ use crate::topology::{LevelId, Topology};
 #[derive(Debug)]
 pub struct RqHierarchy {
     lists: Vec<RunList>,
+    /// Parent component of each list (None for the root).
+    parent: Vec<Option<LevelId>>,
+    /// Tasks queued in each component's subtree (self + descendants).
+    /// Incremented *before* a task becomes poppable and decremented
+    /// *after* it is popped, so the counter never undershoots; reads
+    /// are advisory (may transiently overshoot under concurrency).
+    subtree: Vec<AtomicUsize>,
 }
 
 impl RqHierarchy {
     /// Build the list hierarchy for a machine.
     pub fn new(topo: &Topology) -> RqHierarchy {
+        let n = topo.n_components();
         RqHierarchy {
-            lists: (0..topo.n_components()).map(|i| RunList::new(LevelId(i))).collect(),
+            lists: (0..n).map(|i| RunList::new(LevelId(i))).collect(),
+            parent: (0..n).map(|i| topo.node(LevelId(i)).parent).collect(),
+            subtree: (0..n).map(|_| AtomicUsize::new(0)).collect(),
         }
     }
 
@@ -46,21 +67,37 @@ impl RqHierarchy {
         self.lists.is_empty()
     }
 
-    /// Push a task on a list.
-    pub fn push(&self, l: LevelId, task: TaskId, prio: Prio) {
-        self.lists[l.0].push(task, prio);
+    fn subtree_add(&self, l: LevelId) {
+        let mut cur = Some(l);
+        while let Some(c) = cur {
+            self.subtree[c.0].fetch_add(1, Ordering::Relaxed);
+            cur = self.parent[c.0];
+        }
     }
 
-    /// Push at the *end* of a priority class explicitly (regenerated
-    /// bubbles go to the end of their list, §3.3.3). Same as `push`;
-    /// alias for intent at call sites.
-    pub fn push_back(&self, l: LevelId, task: TaskId, prio: Prio) {
+    fn subtree_sub(&self, l: LevelId) {
+        let mut cur = Some(l);
+        while let Some(c) = cur {
+            self.subtree[c.0].fetch_sub(1, Ordering::Relaxed);
+            cur = self.parent[c.0];
+        }
+    }
+
+    /// Push a task on a list. FIFO within its priority class, which is
+    /// also what the paper's §3.3.3 "requeue at the end of the class"
+    /// regeneration semantics needs — there is no separate `push_back`.
+    pub fn push(&self, l: LevelId, task: TaskId, prio: Prio) {
+        self.subtree_add(l);
         self.lists[l.0].push(task, prio);
     }
 
     /// Pop the highest-priority task of a list.
     pub fn pop_max(&self, l: LevelId) -> Option<(TaskId, Prio)> {
-        self.lists[l.0].pop_max()
+        let out = self.lists[l.0].pop_max();
+        if out.is_some() {
+            self.subtree_sub(l);
+        }
+        out
     }
 
     /// Lock-free max-priority hint (i32::MIN when empty).
@@ -68,10 +105,14 @@ impl RqHierarchy {
         self.lists[l.0].peek_max()
     }
 
-    /// Remove a specific task (regeneration pulls threads back into
-    /// their bubble). Returns true if it was present.
-    pub fn remove(&self, l: LevelId, task: TaskId) -> bool {
-        self.lists[l.0].remove(task)
+    /// Remove a specific task pushed with `prio` (regeneration pulls
+    /// threads back into their bubble). Returns true if it was present.
+    pub fn remove(&self, l: LevelId, task: TaskId, prio: Prio) -> bool {
+        let hit = self.lists[l.0].remove(task, prio);
+        if hit {
+            self.subtree_sub(l);
+        }
+        hit
     }
 
     /// Lock-free length hint of one list.
@@ -79,9 +120,15 @@ impl RqHierarchy {
         self.lists[l.0].len()
     }
 
-    /// Total queued tasks across all lists (lock-free hints; advisory).
+    /// Tasks queued anywhere in `l`'s subtree (advisory, O(1)).
+    pub fn queued_subtree(&self, l: LevelId) -> usize {
+        self.subtree[l.0].load(Ordering::Relaxed)
+    }
+
+    /// Total queued tasks across all lists (advisory, O(1): the root's
+    /// subtree counter).
     pub fn total_queued(&self) -> usize {
-        self.lists.iter().map(|l| l.len()).sum()
+        self.subtree[0].load(Ordering::Relaxed)
     }
 
     /// Snapshot of all (list, task, prio) triples — test/trace support.
@@ -149,8 +196,8 @@ mod tests {
         let l = LevelId(1);
         rq.push(l, TaskId(0), 1);
         rq.push(l, TaskId(1), 1);
-        assert!(rq.remove(l, TaskId(0)));
-        assert!(!rq.remove(l, TaskId(0)));
+        assert!(rq.remove(l, TaskId(0), 1));
+        assert!(!rq.remove(l, TaskId(0), 1));
         assert_eq!(rq.pop_max(l), Some((TaskId(1), 1)));
     }
 
@@ -163,5 +210,24 @@ mod tests {
         let snap = rq.snapshot();
         assert_eq!(snap.len(), 2);
         assert!(snap.contains(&(LevelId(2), TaskId(1), 2)));
+    }
+
+    #[test]
+    fn subtree_counters_track_descendants() {
+        // numa(2,2): root 0, nodes 1-2, leaves 3-6 (BFS order).
+        let topo = Topology::numa(2, 2);
+        let rq = RqHierarchy::new(&topo);
+        let node0 = topo.node(topo.root()).children[0];
+        let leaf0 = topo.node(node0).children[0];
+        rq.push(leaf0, TaskId(0), 1);
+        rq.push(node0, TaskId(1), 1);
+        assert_eq!(rq.queued_subtree(leaf0), 1);
+        assert_eq!(rq.queued_subtree(node0), 2);
+        assert_eq!(rq.queued_subtree(topo.root()), 2);
+        assert_eq!(rq.total_queued(), 2);
+        assert!(rq.remove(leaf0, TaskId(0), 1));
+        assert_eq!(rq.queued_subtree(node0), 1);
+        rq.pop_max(node0);
+        assert_eq!(rq.total_queued(), 0);
     }
 }

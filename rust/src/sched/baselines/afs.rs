@@ -7,13 +7,15 @@
 //! cites); LDS refines victim selection by *locality*: the closest
 //! loaded processor in the hierarchy wins, so stolen work stays as
 //! local as possible.
+//!
+//! Policy glue only: pick = two-pass over `[my leaf]`, fallback = one of
+//! the core steal primitives ([`ops::steal_most_loaded`] for AFS,
+//! [`ops::steal_closest`] for LDS).
 
-use super::{default_stop, dispatch, enqueue, flatten_wake, least_loaded_leaf, most_loaded_leaf};
-use crate::metrics::Metrics;
+use crate::sched::core::{ops, pick};
 use crate::sched::{Scheduler, StopReason, System};
 use crate::task::TaskId;
 use crate::topology::CpuId;
-use crate::trace::Event;
 
 /// Victim selection policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,7 +65,7 @@ impl Default for LdsScheduler {
 
 impl PerCpuSched {
     fn wake_impl(&self, sys: &System, task: TaskId) {
-        flatten_wake(sys, task, &mut |sys, t| {
+        ops::flatten_wake(sys, task, &mut |sys, t| {
             // Affinity: a thread that ran before returns to its last
             // CPU; new threads go to the least loaded list ("new
             // processes are charged to the least loaded processor").
@@ -72,52 +74,22 @@ impl PerCpuSched {
                 .with(t, |x| x.last_cpu)
                 .map(|c| sys.topo.leaf_of(c))
                 .unwrap_or_else(|| {
-                    least_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId))
+                    ops::least_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId))
                 });
-            enqueue(sys, t, list);
+            ops::enqueue(sys, t, list);
         });
-    }
-
-    fn steal_from(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
-        let victim_list = match self.victim {
-            Victim::MostLoaded => {
-                most_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId).filter(|&c| c != cpu))?
-            }
-            Victim::Closest => {
-                let mut best: Option<(usize, usize, crate::topology::LevelId)> = None;
-                for c in (0..sys.topo.n_cpus()).map(CpuId).filter(|&c| c != cpu) {
-                    let l = sys.topo.leaf_of(c);
-                    let n = sys.rq.len_of(l);
-                    if n == 0 {
-                        continue;
-                    }
-                    let d = sys.topo.separation(cpu, c);
-                    // Minimise distance; break ties by higher load.
-                    let better = match best {
-                        None => true,
-                        Some((bd, bn, _)) => d < bd || (d == bd && n > bn),
-                    };
-                    if better {
-                        best = Some((d, n, l));
-                    }
-                }
-                best?.2
-            }
-        };
-        let (task, _) = sys.rq.pop_max(victim_list)?;
-        Metrics::inc(&sys.metrics.steals);
-        sys.trace.emit(sys.now(), Event::Steal { task, from: victim_list, by: cpu });
-        Some(task)
     }
 
     fn pick_impl(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
         let leaf = sys.topo.leaf_of(cpu);
-        if let Some((t, _)) = sys.rq.pop_max(leaf) {
-            dispatch(sys, cpu, t, leaf);
+        if let Some(t) = pick::pick_thread(sys, cpu, &[leaf]) {
             return Some(t);
         }
-        let t = self.steal_from(sys, cpu)?;
-        dispatch(sys, cpu, t, leaf);
+        let (t, _from) = match self.victim {
+            Victim::MostLoaded => ops::steal_most_loaded(sys, cpu)?,
+            Victim::Closest => ops::steal_closest(sys, cpu)?,
+        };
+        ops::dispatch(sys, cpu, t, leaf);
         Some(t)
     }
 }
@@ -138,8 +110,8 @@ macro_rules! impl_percpu_sched {
             }
 
             fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
-                default_stop(sys, cpu, task, why, &mut |sys, t| {
-                    enqueue(sys, t, sys.topo.leaf_of(cpu))
+                ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
+                    ops::enqueue(sys, t, sys.topo.leaf_of(cpu))
                 });
             }
         }
@@ -156,6 +128,7 @@ mod tests {
     use crate::sched::testutil::system;
     use crate::task::PRIO_THREAD;
     use crate::topology::Topology;
+    use crate::trace::Event;
 
     #[test]
     fn behavioural_suite_afs() {

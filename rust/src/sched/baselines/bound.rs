@@ -6,10 +6,12 @@
 //! wake (or via an explicit `bound_cpu`); a CPU only ever runs its own
 //! threads — maximum affinity, zero flexibility, and non-portable in
 //! the paper's sense (the application must know the machine).
+//!
+//! Policy glue only: the scan order is `[my leaf]`, no fallback.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use super::{default_stop, dispatch, enqueue, flatten_wake};
+use crate::sched::core::{ops, pick};
 use crate::sched::{Scheduler, StopReason, System};
 use crate::task::TaskId;
 use crate::topology::CpuId;
@@ -42,24 +44,21 @@ impl Scheduler for BoundScheduler {
     }
 
     fn wake(&self, sys: &System, task: TaskId) {
-        flatten_wake(sys, task, &mut |sys, t| {
+        ops::flatten_wake(sys, task, &mut |sys, t| {
             let cpu = self.binding(sys, t);
-            enqueue(sys, t, sys.topo.leaf_of(cpu));
+            ops::enqueue(sys, t, sys.topo.leaf_of(cpu));
         });
     }
 
     fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
-        let leaf = sys.topo.leaf_of(cpu);
-        let (t, _) = sys.rq.pop_max(leaf)?;
-        dispatch(sys, cpu, t, leaf);
-        Some(t)
+        pick::pick_thread(sys, cpu, &[sys.topo.leaf_of(cpu)])
     }
 
     fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
-        default_stop(sys, cpu, task, why, &mut |sys, t| {
+        ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
             // Bound: always back to the binding, never elsewhere.
             let c = sys.tasks.with(t, |x| x.thread_data().bound_cpu).unwrap_or(cpu);
-            enqueue(sys, t, sys.topo.leaf_of(c));
+            ops::enqueue(sys, t, sys.topo.leaf_of(c));
         });
     }
 }

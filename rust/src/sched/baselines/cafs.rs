@@ -12,13 +12,14 @@
 //!
 //! Groups align to NUMA nodes when the machine has them; otherwise the
 //! CPUs are partitioned into ⌈√p⌉-sized clusters.
+//!
+//! Policy glue only: group partitioning is the policy; picking and
+//! stealing are [`crate::sched::core`] primitives.
 
-use super::{default_stop, dispatch, enqueue, flatten_wake, least_loaded_leaf, most_loaded_leaf};
-use crate::metrics::Metrics;
+use crate::sched::core::{ops, pick};
 use crate::sched::{Scheduler, StopReason, System};
 use crate::task::TaskId;
 use crate::topology::{CpuId, Topology};
-use crate::trace::Event;
 
 /// Partition the machine into steal groups.
 fn groups_of(topo: &Topology) -> Vec<Vec<CpuId>> {
@@ -94,29 +95,29 @@ impl Clustered {
     }
 
     fn wake_impl(&self, sys: &System, task: TaskId) {
-        flatten_wake(sys, task, &mut |sys, t| {
+        ops::flatten_wake(sys, task, &mut |sys, t| {
             let list = sys
                 .tasks
                 .with(t, |x| x.last_cpu)
                 .map(|c| sys.topo.leaf_of(c))
-                .unwrap_or_else(|| least_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId)));
-            enqueue(sys, t, list);
+                .unwrap_or_else(|| {
+                    ops::least_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId))
+                });
+            ops::enqueue(sys, t, list);
         });
     }
 
     fn pick_impl(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
         let leaf = sys.topo.leaf_of(cpu);
-        if let Some((t, _)) = sys.rq.pop_max(leaf) {
-            dispatch(sys, cpu, t, leaf);
+        if let Some(t) = pick::pick_thread(sys, cpu, &[leaf]) {
             return Some(t);
         }
         // Steal within the group first.
         let group = self.my_group(&sys.topo, cpu);
-        if let Some(v) = most_loaded_leaf(sys, group.iter().copied().filter(|&c| c != cpu)) {
-            if let Some((t, _)) = sys.rq.pop_max(v) {
-                Metrics::inc(&sys.metrics.steals);
-                sys.trace.emit(sys.now(), Event::Steal { task: t, from: v, by: cpu });
-                dispatch(sys, cpu, t, leaf);
+        if let Some(v) = ops::most_loaded_leaf(sys, group.iter().copied().filter(|&c| c != cpu))
+        {
+            if let Some((t, _)) = ops::pop_steal(sys, cpu, v) {
+                ops::dispatch(sys, cpu, t, leaf);
                 return Some(t);
             }
         }
@@ -129,11 +130,9 @@ impl Clustered {
                 .max_by_key(|g| {
                     g.iter().map(|&c| sys.rq.len_of(sys.topo.leaf_of(c))).sum::<usize>()
                 })?;
-            let v = most_loaded_leaf(sys, loaded.iter().copied())?;
-            if let Some((t, _)) = sys.rq.pop_max(v) {
-                Metrics::inc(&sys.metrics.steals);
-                sys.trace.emit(sys.now(), Event::Steal { task: t, from: v, by: cpu });
-                dispatch(sys, cpu, t, leaf);
+            let v = ops::most_loaded_leaf(sys, loaded.iter().copied())?;
+            if let Some((t, _)) = ops::pop_steal(sys, cpu, v) {
+                ops::dispatch(sys, cpu, t, leaf);
                 return Some(t);
             }
         }
@@ -157,8 +156,8 @@ macro_rules! impl_clustered_sched {
             }
 
             fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
-                default_stop(sys, cpu, task, why, &mut |sys, t| {
-                    enqueue(sys, t, sys.topo.leaf_of(cpu))
+                ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
+                    ops::enqueue(sys, t, sys.topo.leaf_of(cpu))
                 });
             }
         }

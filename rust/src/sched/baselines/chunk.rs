@@ -7,11 +7,14 @@
 //!
 //! * GSS (Polychronopoulos & Kuck): chunk = ⌈remaining / p⌉.
 //! * TSS (Tzen & Ni): chunk decreases linearly from ⌈N/2p⌉ to 1.
+//!
+//! Policy glue only: the chunk-size law is the policy; queueing,
+//! dispatch and the leaf pick path are [`crate::sched::core`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::{default_stop, dispatch, enqueue, flatten_wake};
 use crate::metrics::Metrics;
+use crate::sched::core::{ops, pick};
 use crate::sched::{Scheduler, StopReason, System};
 use crate::task::TaskId;
 use crate::topology::CpuId;
@@ -114,7 +117,7 @@ impl ChunkScheduler {
         for _ in 0..n {
             match sys.rq.pop_max(root) {
                 Some((t, _)) => {
-                    enqueue(sys, t, leaf);
+                    ops::enqueue(sys, t, leaf);
                     moved += 1;
                 }
                 None => break,
@@ -129,8 +132,7 @@ impl ChunkScheduler {
     fn pick_impl(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
         let leaf = sys.topo.leaf_of(cpu);
         loop {
-            if let Some((t, _)) = sys.rq.pop_max(leaf) {
-                dispatch(sys, cpu, t, leaf);
+            if let Some(t) = pick::pick_thread(sys, cpu, &[leaf]) {
                 return Some(t);
             }
             if !self.grab_chunk(sys, cpu) {
@@ -149,7 +151,9 @@ macro_rules! impl_chunk_sched {
 
             fn wake(&self, sys: &System, task: TaskId) {
                 // New work lands on the global list; chunks migrate it.
-                flatten_wake(sys, task, &mut |sys, t| enqueue(sys, t, sys.topo.root()));
+                ops::flatten_wake(sys, task, &mut |sys, t| {
+                    ops::enqueue(sys, t, sys.topo.root())
+                });
             }
 
             fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
@@ -158,8 +162,8 @@ macro_rules! impl_chunk_sched {
 
             fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
                 // Requeue on the leaf it ran on (chunked work stays put).
-                default_stop(sys, cpu, task, why, &mut |sys, t| {
-                    enqueue(sys, t, sys.topo.leaf_of(cpu))
+                ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
+                    ops::enqueue(sys, t, sys.topo.leaf_of(cpu))
                 });
             }
         }

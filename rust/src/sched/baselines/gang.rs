@@ -10,12 +10,15 @@
 //!
 //! Bubbles woken under this scheduler become gangs; loose threads form
 //! an implicit singleton gang each.
+//!
+//! Policy glue over [`crate::sched::core`]: the gang rotation is the
+//! policy; queueing, the root pick path and stop accounting are shared.
 
 use std::collections::VecDeque;
 use std::sync::Mutex;
 
-use super::{dispatch, enqueue};
 use crate::metrics::Metrics;
+use crate::sched::core::{ops, pick};
 use crate::sched::{Scheduler, StopReason, System};
 use crate::task::{TaskId, TaskState};
 use crate::topology::CpuId;
@@ -52,13 +55,13 @@ impl GangScheduler {
                 let state = sys.tasks.state(c);
                 if state == TaskState::InBubble || state.is_ready() {
                     if let Some(l) = state.ready_list() {
-                        sys.rq.remove(l, c);
+                        sys.rq.remove(l, c, sys.tasks.prio(c));
                     }
-                    enqueue(sys, c, sys.topo.root());
+                    ops::enqueue(sys, c, sys.topo.root());
                 }
             }
         } else {
-            enqueue(sys, gang, sys.topo.root());
+            ops::enqueue(sys, gang, sys.topo.root());
         }
     }
 
@@ -80,7 +83,7 @@ impl GangScheduler {
             let contents = sys.tasks.with(gang, |t| t.kind_contents_snapshot());
             for c in contents {
                 if let Some(l) = sys.tasks.state(c).ready_list() {
-                    if sys.rq.remove(l, c) {
+                    if sys.rq.remove(l, c, sys.tasks.prio(c)) {
                         sys.tasks.set_state(c, TaskState::InBubble);
                     }
                 }
@@ -131,7 +134,7 @@ impl Scheduler for GangScheduler {
             // rejoin the root list, else wait inside the gang.
             let gang = sys.tasks.parent(task).unwrap();
             if st.active == Some(gang) {
-                enqueue(sys, task, sys.topo.root());
+                ops::enqueue(sys, task, sys.topo.root());
             } else {
                 sys.tasks.set_state(task, TaskState::InBubble);
             }
@@ -148,20 +151,18 @@ impl Scheduler for GangScheduler {
         let mut st = self.st.lock().unwrap();
         self.ensure_active(sys, &mut st);
         st.active?;
-        let root = sys.topo.root();
-        let (t, _) = sys.rq.pop_max(root)?;
-        dispatch(sys, cpu, t, root);
-        Some(t)
+        pick::pick_thread(sys, cpu, &[sys.topo.root()])
     }
 
     fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        ops::note_stop(sys, cpu);
         match why {
             StopReason::Yield | StopReason::Preempt => {
                 sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Yield });
                 let st = self.st.lock().unwrap();
                 let gang_of = sys.tasks.parent(task).unwrap_or(task);
                 if st.active == Some(gang_of) {
-                    enqueue(sys, task, sys.topo.root());
+                    ops::enqueue(sys, task, sys.topo.root());
                 } else {
                     // Rotated away while running: back into the gang.
                     sys.tasks.set_state(
@@ -216,7 +217,12 @@ mod tests {
     use crate::task::PRIO_THREAD;
     use crate::topology::Topology;
 
-    fn gang_of(sys: &std::sync::Arc<crate::sched::System>, m: &Marcel, n: usize, tag: &str) -> (TaskId, Vec<TaskId>) {
+    fn gang_of(
+        sys: &std::sync::Arc<crate::sched::System>,
+        m: &Marcel,
+        n: usize,
+        tag: &str,
+    ) -> (TaskId, Vec<TaskId>) {
         let b = m.bubble_init();
         let ts: Vec<TaskId> =
             (0..n).map(|i| m.create_dontsched(format!("{tag}{i}"))).collect();

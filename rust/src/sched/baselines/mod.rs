@@ -17,6 +17,11 @@
 //!
 //! All baselines flatten bubbles on wake: opportunist schedulers ignore
 //! application structure (that is precisely the paper's criticism).
+//!
+//! Every baseline is thin policy glue over the shared primitives in
+//! [`crate::sched::core`] — scan orders, the two-pass pick, and the
+//! queueing/steal/stop building blocks. Instantiation goes through the
+//! policy registry in [`crate::sched::factory`].
 
 pub mod afs;
 pub mod bound;
@@ -32,161 +37,17 @@ pub use chunk::{GssScheduler, TssScheduler};
 pub use gang::GangScheduler;
 pub use ss::SsScheduler;
 
-use std::sync::Arc;
-
-use super::{BubbleScheduler, Scheduler, System};
-use crate::config::{SchedConfig, SchedKind};
-use crate::metrics::Metrics;
-use crate::task::{TaskId, TaskState};
-use crate::topology::{CpuId, LevelId};
-use crate::trace::Event;
-
-/// Instantiate any scheduler by kind.
-pub fn make(cfg: &SchedConfig) -> Arc<dyn Scheduler> {
-    match cfg.kind {
-        SchedKind::Bubble => Arc::new(BubbleScheduler::new(cfg.bubble_config())),
-        SchedKind::Ss => Arc::new(SsScheduler::new()),
-        SchedKind::Gss => Arc::new(GssScheduler::new()),
-        SchedKind::Tss => Arc::new(TssScheduler::new()),
-        SchedKind::Afs => Arc::new(AfsScheduler::new()),
-        SchedKind::Lds => Arc::new(LdsScheduler::new()),
-        SchedKind::Cafs => Arc::new(CafsScheduler::new()),
-        SchedKind::Hafs => Arc::new(HafsScheduler::new()),
-        SchedKind::Bound => Arc::new(BoundScheduler::new()),
-        SchedKind::Gang => Arc::new(GangScheduler::new(cfg.timeslice.unwrap_or(1_000_000))),
-    }
-}
-
-/// Instantiate with defaults for a kind.
-pub fn make_default(kind: SchedKind) -> Arc<dyn Scheduler> {
-    make(&SchedConfig { kind, ..SchedConfig::default() })
-}
-
-// ------------------------------------------------------- shared helpers
-
-/// Enqueue `task` on `list`, fixing state (shared by all baselines).
-pub(crate) fn enqueue(sys: &System, task: TaskId, list: LevelId) {
-    let prio = sys.tasks.with(task, |t| {
-        t.state = TaskState::Ready { list };
-        t.last_list = Some(list);
-        t.prio
-    });
-    sys.rq.push(list, task, prio);
-    sys.trace.emit(sys.now(), Event::Enqueue { task, list });
-}
-
-/// Mark a popped thread Running on `cpu` (shared by all baselines).
-pub(crate) fn dispatch(sys: &System, cpu: CpuId, task: TaskId, from: LevelId) {
-    sys.tasks.with(task, |t| {
-        if let Some(last) = t.last_cpu {
-            if last != cpu {
-                Metrics::inc(&sys.metrics.migrations);
-            }
-        }
-        t.state = TaskState::Running { cpu };
-        t.last_cpu = Some(cpu);
-        t.last_list = Some(from);
-    });
-    Metrics::inc(&sys.metrics.picks);
-    sys.trace.emit(sys.now(), Event::Dispatch { task, cpu });
-}
-
-/// Flatten-wake: threads go through `push`; bubbles recursively release
-/// their contents (opportunist schedulers ignore structure).
-pub(crate) fn flatten_wake(sys: &System, task: TaskId, push: &mut dyn FnMut(&System, TaskId)) {
-    if sys.tasks.is_bubble(task) {
-        let contents = sys.tasks.with(task, |t| t.kind_contents_snapshot());
-        // The bubble itself is inert for baselines: park it off-list.
-        sys.tasks.with(task, |t| t.state = TaskState::Blocked);
-        for c in contents {
-            flatten_wake(sys, c, push);
-        }
-    } else {
-        push(sys, task);
-    }
-}
-
-/// Default `stop` behaviour shared by the list baselines: requeue on
-/// yield/preempt via `requeue`, Block/Terminate adjust state only.
-pub(crate) fn default_stop(
-    sys: &System,
-    cpu: CpuId,
-    task: TaskId,
-    why: super::StopReason,
-    requeue: &mut dyn FnMut(&System, TaskId),
-) {
-    use super::StopReason::*;
-    use crate::trace::StopWhy;
-    match why {
-        Yield | Preempt => {
-            sys.trace.emit(
-                sys.now(),
-                Event::Stop {
-                    task,
-                    cpu,
-                    why: if why == Yield { StopWhy::Yield } else { StopWhy::Preempt },
-                },
-            );
-            if why == Preempt {
-                Metrics::inc(&sys.metrics.preemptions);
-            }
-            requeue(sys, task);
-        }
-        Block => {
-            sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Block });
-            sys.tasks.set_state(task, TaskState::Blocked);
-        }
-        Terminate => {
-            sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Terminate });
-            sys.tasks.set_state(task, TaskState::Terminated);
-        }
-    }
-}
-
-/// Most loaded leaf list among `cpus`, if any is non-empty.
-pub(crate) fn most_loaded_leaf(sys: &System, cpus: impl Iterator<Item = CpuId>) -> Option<LevelId> {
-    let mut best: Option<(LevelId, usize)> = None;
-    for cpu in cpus {
-        let l = sys.topo.leaf_of(cpu);
-        let n = sys.rq.len_of(l);
-        if n > best.map_or(0, |(_, b)| b) {
-            best = Some((l, n));
-        }
-    }
-    best.map(|(l, _)| l)
-}
-
-/// Least loaded leaf among `cpus` (for initial placement). Ties are
-/// broken by a rotating offset: real wake-placement is effectively
-/// arbitrary among equally loaded CPUs, and a fixed tie-break would
-/// give the opportunist baselines accidental (unrealistic) locality —
-/// all new threads piling onto cpu0's node.
-pub(crate) fn least_loaded_leaf(sys: &System, cpus: impl Iterator<Item = CpuId>) -> LevelId {
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    static ROT: AtomicUsize = AtomicUsize::new(0);
-    let all: Vec<CpuId> = cpus.collect();
-    let off = ROT.fetch_add(1, Ordering::Relaxed) % all.len().max(1);
-    let mut best: Option<(LevelId, usize)> = None;
-    for i in 0..all.len() {
-        let cpu = all[(i + off) % all.len()];
-        let l = sys.topo.leaf_of(cpu);
-        let n = sys.rq.len_of(l);
-        if best.map_or(true, |(_, b)| n < b) {
-            best = Some((l, n));
-        }
-    }
-    best.expect("no cpus").0
-}
+// Kept here for compatibility: instantiation lives in the factory.
+pub use crate::sched::factory::{make, make_default};
 
 #[cfg(test)]
 pub(crate) mod testsupport {
     //! Behavioural checks every baseline must pass.
 
-    use super::*;
     use crate::sched::testutil::system;
     use crate::sched::{Scheduler, StopReason};
-    use crate::task::PRIO_THREAD;
-    use crate::topology::Topology;
+    use crate::task::{TaskState, PRIO_THREAD};
+    use crate::topology::{CpuId, Topology};
 
     /// All threads woken are eventually picked and terminated when all
     /// CPUs poll round-robin.

@@ -6,8 +6,11 @@
 //! threads land on whichever processor is free first, so NUMA affinity
 //! is destroyed every reschedule — and the single list is a contention
 //! bottleneck as the CPU count grows (measured by `benches/rq_scaling`).
+//!
+//! Policy glue only: the scan order is `[root]`, everything else is
+//! [`crate::sched::core`].
 
-use super::{default_stop, dispatch, enqueue, flatten_wake};
+use crate::sched::core::{ops, pick};
 use crate::sched::{Scheduler, StopReason, System};
 use crate::task::TaskId;
 use crate::topology::CpuId;
@@ -28,18 +31,17 @@ impl Scheduler for SsScheduler {
     }
 
     fn wake(&self, sys: &System, task: TaskId) {
-        flatten_wake(sys, task, &mut |sys, t| enqueue(sys, t, sys.topo.root()));
+        ops::flatten_wake(sys, task, &mut |sys, t| ops::enqueue(sys, t, sys.topo.root()));
     }
 
     fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
-        let root = sys.topo.root();
-        let (task, _prio) = sys.rq.pop_max(root)?;
-        dispatch(sys, cpu, task, root);
-        Some(task)
+        pick::pick_thread(sys, cpu, &[sys.topo.root()])
     }
 
     fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
-        default_stop(sys, cpu, task, why, &mut |sys, t| enqueue(sys, t, sys.topo.root()));
+        ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
+            ops::enqueue(sys, t, sys.topo.root())
+        });
     }
 }
 

@@ -8,10 +8,11 @@
 //! which combined with Figure-1 priorities yields gang scheduling).
 //!
 //! Scheduling is strictly per-processor: a CPU calls [`BubbleScheduler::pick`]
-//! when it needs work. The pick runs the paper's two-pass search:
-//! pass 1 scans the lock-free max-priority hints of the lists covering
-//! the CPU (most local first), pass 2 locks only the chosen list and
-//! re-checks, retrying if another processor raced us to the task.
+//! when it needs work. The mechanics — two-pass list search, queueing
+//! and dispatch accounting, hierarchy walks, steal fallbacks — live in
+//! [`super::core`]; this file is *policy*: what a picked bubble does
+//! (descend or burst), when regeneration fires, and how idle processors
+//! rebalance.
 //!
 //! Accounting invariants (checked by the property tests):
 //! * `outside` = number of direct contents currently *on lists or
@@ -21,12 +22,15 @@
 //! * A regenerating bubble closes and requeues when `outside` drops to
 //!   0 ("the last thread closes the bubble and moves it up").
 //! * `live` = non-terminated direct contents; 0 terminates the bubble.
+//!
+//! Behavioural tests live in `rust/tests/bubble_behaviour.rs`.
 
 use std::sync::Mutex;
 
+use super::core::{ops, pick, traversal};
 use super::{Scheduler, StopReason, System};
 use crate::metrics::Metrics;
-use crate::task::{BubblePhase, BurstLevel, Task, TaskId, TaskKind, TaskState};
+use crate::task::{BubblePhase, BurstLevel, TaskId, TaskKind, TaskState};
 use crate::topology::{CpuId, LevelId};
 use crate::trace::{Event, RegenWhy, StopWhy};
 
@@ -93,56 +97,6 @@ impl BubbleScheduler {
         &self.cfg
     }
 
-    // ------------------------------------------------------------ queueing
-
-    /// Put a task on a list and fix its state.
-    fn enqueue(&self, sys: &System, task: TaskId, list: LevelId) {
-        let prio = sys.tasks.with(task, |t| {
-            t.state = TaskState::Ready { list };
-            t.last_list = Some(list);
-            t.prio
-        });
-        sys.rq.push(list, task, prio);
-        sys.trace.emit(sys.now(), Event::Enqueue { task, list });
-    }
-
-    // ------------------------------------------------------- two-pass pick
-
-    /// Pass 1: lock-free scan of the covering lists, most local first.
-    /// Returns the list holding the (apparently) highest-priority task;
-    /// ties go to the more local list.
-    fn pass1(&self, sys: &System, cpu: CpuId) -> Option<LevelId> {
-        let mut best: Option<(LevelId, i32)> = None;
-        for &l in sys.topo.covering(cpu) {
-            let p = sys.rq.peek_max(l);
-            if p == i32::MIN {
-                continue;
-            }
-            match best {
-                Some((_, bp)) if p <= bp => {}
-                _ => best = Some((l, p)),
-            }
-        }
-        best.map(|(l, _)| l)
-    }
-
-    /// Dispatch a popped thread on the CPU.
-    fn dispatch(&self, sys: &System, cpu: CpuId, task: TaskId, from: LevelId) {
-        sys.tasks.with(task, |t| {
-            debug_assert!(t.is_thread());
-            if let Some(last) = t.last_cpu {
-                if last != cpu {
-                    Metrics::inc(&sys.metrics.migrations);
-                }
-            }
-            t.state = TaskState::Running { cpu };
-            t.last_cpu = Some(cpu);
-            t.last_list = Some(from);
-        });
-        Metrics::inc(&sys.metrics.picks);
-        sys.trace.emit(sys.now(), Event::Dispatch { task, cpu });
-    }
-
     // --------------------------------------------------- bubble evolution
 
     /// A picked bubble takes one evolution step (Figure 3): go down one
@@ -159,11 +113,11 @@ impl BubbleScheduler {
         }
         let cur_depth = sys.topo.node(cur).depth;
         if cur_depth < target_depth && sys.topo.node(cur).covers(cpu) {
-            if let Some(to) = sys.topo.child_towards(cur, cpu) {
+            if let Some(to) = traversal::descend_towards(&sys.topo, cur, cpu) {
                 // Figure 3 (b)-(c): ride down towards the CPU.
                 Metrics::inc(&sys.metrics.bubble_descents);
                 sys.trace.emit(sys.now(), Event::BubbleDown { bubble, from: cur, to });
-                self.enqueue(sys, bubble, to);
+                ops::enqueue(sys, bubble, to);
                 return;
             }
         }
@@ -185,7 +139,7 @@ impl BubbleScheduler {
         let mut released = 0usize;
         for c in contents {
             if sys.tasks.state(c) == TaskState::InBubble {
-                self.enqueue(sys, c, list);
+                ops::enqueue(sys, c, list);
                 released += 1;
             }
         }
@@ -224,9 +178,9 @@ impl BubbleScheduler {
         evo.last_regen.insert(bubble.0, sys.now());
         let mut returned = 0usize;
         for c in contents {
-            let list = sys.tasks.with(c, |t| t.state.ready_list());
+            let (list, prio) = sys.tasks.with(c, |t| (t.state.ready_list(), t.prio));
             if let Some(l) = list {
-                if sys.rq.remove(l, c) {
+                if sys.rq.remove(l, c, prio) {
                     sys.tasks.set_state(c, TaskState::InBubble);
                     returned += 1;
                 }
@@ -242,28 +196,25 @@ impl BubbleScheduler {
         }
     }
 
-    /// Close the bubble and requeue it at the end of its target list
-    /// ("the last thread closes the bubble and moves it up", §4).
+    /// Close the bubble and requeue it at the end of its priority class
+    /// on the target list ("the last thread closes the bubble and moves
+    /// it up", §4; FIFO-within-class push *is* the §3.3.3 end-of-class
+    /// requeue).
     fn finish_regen(&self, sys: &System, evo: &mut Evolution, bubble: TaskId) {
-        let (target, prio, live) = sys.tasks.with(bubble, |t| {
-            let prio = t.prio;
+        let (target, live) = sys.tasks.with(bubble, |t| {
             let d = t.bubble_data_mut();
             d.phase = BubblePhase::Closed;
             d.regen_pending = false;
             let target = d.regen_target.take().or(d.home_list).unwrap_or(LevelId(0));
             d.home_list = None;
-            (target, prio, d.live)
+            (target, d.live)
         });
         evo.burst_bubbles.retain(|&b| b != bubble);
         if live == 0 {
             self.terminate_bubble(sys, evo, bubble);
             return;
         }
-        sys.tasks.with(bubble, |t| {
-            t.state = TaskState::Ready { list: target };
-            t.last_list = Some(target);
-        });
-        sys.rq.push_back(target, bubble, prio);
+        ops::enqueue(sys, bubble, target);
         sys.trace.emit(sys.now(), Event::RegenDone { bubble, list: target });
     }
 
@@ -273,7 +224,7 @@ impl BubbleScheduler {
         let parent = sys.tasks.with(bubble, |t| {
             // Remove from any list it might still be queued on.
             if let TaskState::Ready { list } = t.state {
-                sys.rq.remove(list, t.id);
+                sys.rq.remove(list, t.id, t.prio);
             }
             t.state = TaskState::Terminated;
             t.parent
@@ -371,13 +322,7 @@ impl BubbleScheduler {
                 continue;
             }
             // Move up to the lowest ancestor of `home` covering `cpu`.
-            let mut target = home;
-            while !sys.topo.node(target).covers(cpu) {
-                match sys.topo.node(target).parent {
-                    Some(p) => target = p,
-                    None => break,
-                }
-            }
+            let target = traversal::hoist_towards(&sys.topo, home, cpu);
             self.start_regen(sys, &mut evo, bubble, target, RegenWhy::Idle);
             return true;
         }
@@ -402,27 +347,6 @@ impl BubbleScheduler {
             })
         })
     }
-
-    /// Last resort: steal a ready task from the fullest non-covering
-    /// list.
-    fn steal(&self, sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
-        let mut victim: Option<(LevelId, usize)> = None;
-        for i in 0..sys.rq.len() {
-            let l = LevelId(i);
-            if sys.topo.node(l).covers(cpu) {
-                continue;
-            }
-            let len = sys.rq.len_of(l);
-            if len > victim.map_or(0, |(_, n)| n) {
-                victim = Some((l, len));
-            }
-        }
-        let (l, _) = victim?;
-        let (task, _prio) = sys.rq.pop_max(l)?;
-        Metrics::inc(&sys.metrics.steals);
-        sys.trace.emit(sys.now(), Event::Steal { task, from: l, by: cpu });
-        Some((task, l))
-    }
 }
 
 impl Scheduler for BubbleScheduler {
@@ -441,7 +365,7 @@ impl Scheduler for BubbleScheduler {
                     .tasks
                     .with(task, |t| t.last_list)
                     .unwrap_or_else(|| sys.topo.root());
-                self.enqueue(sys, task, list);
+                ops::enqueue(sys, task, list);
             }
             Some(p) => {
                 let (phase, regen_pending, home) = sys.tasks.with(p, |t| {
@@ -465,10 +389,20 @@ impl Scheduler for BubbleScheduler {
                         let mut evo = self.evo.lock().unwrap();
                         let _ = &mut evo;
                         sys.tasks.with(p, |t| t.bubble_data_mut().outside += 1);
-                        self.enqueue(sys, task, home.unwrap_or_else(|| sys.topo.root()));
+                        ops::enqueue(sys, task, home.unwrap_or_else(|| sys.topo.root()));
+                    }
+                    TaskState::Blocked => {
+                        // Woken into a *closed*, non-regenerating
+                        // bubble: return to the held population so the
+                        // next burst releases it. (Leaving it Blocked
+                        // would drop the wake-up: bursts only release
+                        // InBubble contents — found by the conservation
+                        // property test.)
+                        sys.tasks.set_state(task, TaskState::InBubble);
                     }
                     _ => {
-                        // Held in a closed bubble: released at burst.
+                        // New / InBubble in a closed bubble: already
+                        // held; released at burst.
                     }
                 }
             }
@@ -478,6 +412,7 @@ impl Scheduler for BubbleScheduler {
     fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
         // Bound the retry loop: every iteration either dispatches,
         // performs an evolution step, or burns one retry credit.
+        let order = traversal::covering(&sys.topo, cpu);
         let mut credits = 4 * sys.rq.len() + 16;
         loop {
             if credits == 0 {
@@ -485,7 +420,7 @@ impl Scheduler for BubbleScheduler {
                 return None;
             }
             credits -= 1;
-            let Some(list) = self.pass1(sys, cpu) else {
+            let Some(list) = pick::pass1(sys, order) else {
                 // Nothing visible from this CPU: rebalance. Thread
                 // stealing goes first — it makes progress immediately
                 // and cannot stall anyone; whole-bubble regeneration is
@@ -493,21 +428,15 @@ impl Scheduler for BubbleScheduler {
                 // for running ones, §4, so it is the blunter tool —
                 // the §3.4 ping-pong caveat applies to it).
                 if self.cfg.thread_steal {
-                    if let Some((task, from)) = self.steal(sys, cpu) {
+                    if let Some((task, from)) = ops::steal_fullest(sys, cpu) {
                         if sys.tasks.is_bubble(task) {
                             // Pull the whole bubble towards us: hoist it
                             // to the lowest list covering both sides.
-                            let mut target = from;
-                            while !sys.topo.node(target).covers(cpu) {
-                                match sys.topo.node(target).parent {
-                                    Some(p) => target = p,
-                                    None => break,
-                                }
-                            }
-                            self.enqueue(sys, task, target);
+                            let target = traversal::hoist_towards(&sys.topo, from, cpu);
+                            ops::enqueue(sys, task, target);
                             continue;
                         }
-                        self.dispatch(sys, cpu, task, from);
+                        ops::dispatch(sys, cpu, task, from);
                         return Some(task);
                     }
                 }
@@ -532,12 +461,13 @@ impl Scheduler for BubbleScheduler {
                 self.bubble_step(sys, cpu, task, list);
                 continue;
             }
-            self.dispatch(sys, cpu, task, list);
+            ops::dispatch(sys, cpu, task, list);
             return Some(task);
         }
     }
 
     fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        ops::note_stop(sys, cpu);
         let parent = sys.tasks.parent(task);
         match why {
             StopReason::Yield | StopReason::Preempt => {
@@ -573,10 +503,8 @@ impl Scheduler for BubbleScheduler {
                 let parent_regen = parent
                     .map(|p| sys.tasks.with(p, |t| t.bubble_data().regen_pending))
                     .unwrap_or(false);
-                if parent_regen {
-                    if self.try_return_to_bubble(sys, task, parent.unwrap()) {
-                        return;
-                    }
+                if parent_regen && self.try_return_to_bubble(sys, task, parent.unwrap()) {
+                    return;
                 }
                 let list = sys
                     .tasks
@@ -585,7 +513,7 @@ impl Scheduler for BubbleScheduler {
                 if why == StopReason::Preempt {
                     Metrics::inc(&sys.metrics.preemptions);
                 }
-                self.enqueue(sys, task, list);
+                ops::enqueue(sys, task, list);
             }
             StopReason::Block => {
                 sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Block });
@@ -641,420 +569,5 @@ impl Scheduler for BubbleScheduler {
             }
         }
         false
-    }
-}
-
-// Helper on Task to snapshot bubble contents without exposing internals.
-impl Task {
-    /// Clone the contents list of a bubble task (empty for threads).
-    pub fn kind_contents_snapshot(&self) -> Vec<TaskId> {
-        match &self.kind {
-            TaskKind::Bubble(b) => b.contents.clone(),
-            TaskKind::Thread(_) => Vec::new(),
-        }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::marcel::Marcel;
-    use crate::sched::testutil::{drain_cpu, spawn_threads, system};
-    use crate::task::{PRIO_BUBBLE, PRIO_THREAD};
-    use crate::topology::Topology;
-
-    fn sched() -> BubbleScheduler {
-        BubbleScheduler::new(BubbleConfig::default())
-    }
-
-    #[test]
-    fn plain_threads_round_trip() {
-        let sys = system(Topology::smp(2));
-        let s = sched();
-        let ts = spawn_threads(&sys, &s, 3);
-        let order = drain_cpu(&sys, &s, CpuId(0));
-        assert_eq!(order, ts);
-        assert!(s.pick(&sys, CpuId(0)).is_none());
-    }
-
-    #[test]
-    fn yield_requeues_to_same_list() {
-        let sys = system(Topology::smp(2));
-        let s = sched();
-        let ts = spawn_threads(&sys, &s, 1);
-        let t = s.pick(&sys, CpuId(0)).unwrap();
-        assert_eq!(t, ts[0]);
-        s.stop(&sys, CpuId(0), t, StopReason::Yield);
-        assert!(sys.tasks.state(t).is_ready());
-        let t2 = s.pick(&sys, CpuId(0)).unwrap();
-        assert_eq!(t2, t);
-    }
-
-    #[test]
-    fn bubble_descends_and_bursts_at_numa_level() {
-        let sys = system(Topology::numa(2, 2));
-        let s = sched();
-        let m = Marcel::with_system(&sys);
-        let b = m.bubble_init();
-        let t1 = m.create_dontsched("a");
-        let t2 = m.create_dontsched("b");
-        m.bubble_inserttask(b, t1);
-        m.bubble_inserttask(b, t2);
-        sys.trace.set_enabled(true);
-        s.wake(&sys, b);
-        // cpu0 picks: bubble descends from root to numa0, bursts there,
-        // then cpu0 gets a thread.
-        let got = s.pick(&sys, CpuId(0)).unwrap();
-        assert!(got == t1 || got == t2);
-        // The burst must have happened on the NUMA-node list (depth 1).
-        let records = sys.trace.records();
-        let burst_list = records
-            .iter()
-            .find_map(|r| match r.event {
-                Event::Burst { list, .. } => Some(list),
-                _ => None,
-            })
-            .expect("no burst traced");
-        assert_eq!(sys.topo.node(burst_list).depth, 1);
-        assert_eq!(sys.topo.node(burst_list).kind, crate::topology::LevelKind::NumaNode);
-        // The second thread is visible to cpu1 (same node).
-        let got2 = s.pick(&sys, CpuId(1)).unwrap();
-        assert!(got2 == t1 || got2 == t2);
-        assert_ne!(got, got2);
-    }
-
-    #[test]
-    fn burst_level_leaf_rides_to_cpu_list() {
-        let sys = system(Topology::numa(2, 2));
-        let s = BubbleScheduler::new(BubbleConfig {
-            default_burst: BurstLevel::Leaf,
-            ..BubbleConfig::default()
-        });
-        let m = Marcel::with_system(&sys);
-        let b = m.bubble_init();
-        let t1 = m.create_dontsched("a");
-        m.bubble_inserttask(b, t1);
-        sys.trace.set_enabled(true);
-        s.wake(&sys, b);
-        let got = s.pick(&sys, CpuId(3)).unwrap();
-        assert_eq!(got, t1);
-        let burst_list = sys
-            .trace
-            .records()
-            .iter()
-            .find_map(|r| match r.event {
-                Event::Burst { list, .. } => Some(list),
-                _ => None,
-            })
-            .unwrap();
-        assert_eq!(burst_list, sys.topo.leaf_of(CpuId(3)));
-    }
-
-    #[test]
-    fn higher_priority_task_wins_over_fifo_order() {
-        let sys = system(Topology::numa(2, 2));
-        let s = sched();
-        let lo = sys.tasks.new_thread("lo", PRIO_THREAD);
-        let hi = sys.tasks.new_thread("hi", crate::task::PRIO_HIGH);
-        s.wake(&sys, lo);
-        s.wake(&sys, hi);
-        let got = s.pick(&sys, CpuId(0)).unwrap();
-        assert_eq!(got, hi, "high priority wins despite FIFO order");
-    }
-
-    #[test]
-    fn local_list_wins_priority_ties() {
-        let sys = system(Topology::numa(2, 2));
-        let s = sched();
-        let global = sys.tasks.new_thread("global", PRIO_THREAD);
-        let local = sys.tasks.new_thread("local", PRIO_THREAD);
-        s.wake(&sys, global); // root list
-        // Place `local` directly on cpu0's leaf list.
-        sys.tasks.with(local, |t| t.last_list = Some(sys.topo.leaf_of(CpuId(0))));
-        s.wake(&sys, local);
-        let got = s.pick(&sys, CpuId(0)).unwrap();
-        assert_eq!(got, local, "ties must prefer the most local list");
-    }
-
-    #[test]
-    fn empty_bubble_terminates_on_burst() {
-        let sys = system(Topology::smp(2));
-        let s = sched();
-        let m = Marcel::with_system(&sys);
-        let b = m.bubble_init();
-        s.wake(&sys, b);
-        assert!(s.pick(&sys, CpuId(0)).is_none());
-        assert_eq!(sys.tasks.state(b), TaskState::Terminated);
-    }
-
-    #[test]
-    fn thread_terminations_terminate_bubble() {
-        let sys = system(Topology::smp(2));
-        let s = sched();
-        let m = Marcel::with_system(&sys);
-        let b = m.bubble_init();
-        let t1 = m.create_dontsched("a");
-        let t2 = m.create_dontsched("b");
-        m.bubble_inserttask(b, t1);
-        m.bubble_inserttask(b, t2);
-        s.wake(&sys, b);
-        let a = s.pick(&sys, CpuId(0)).unwrap();
-        let c = s.pick(&sys, CpuId(1)).unwrap();
-        s.stop(&sys, CpuId(0), a, StopReason::Terminate);
-        assert_ne!(sys.tasks.state(b), TaskState::Terminated);
-        s.stop(&sys, CpuId(1), c, StopReason::Terminate);
-        assert_eq!(sys.tasks.state(b), TaskState::Terminated);
-    }
-
-    #[test]
-    fn figure4_insert_after_wake() {
-        // Figure 4 inserts thread2 *after* wake_up_bubble: the late
-        // insertion must land on the burst bubble's home list.
-        let sys = system(Topology::smp(2));
-        let s = sched();
-        let m = Marcel::with_system(&sys);
-        let b = m.bubble_init();
-        let t1 = m.create_dontsched("t1");
-        m.bubble_inserttask(b, t1);
-        s.wake(&sys, b);
-        let got1 = s.pick(&sys, CpuId(0)).unwrap();
-        assert_eq!(got1, t1);
-        // Late insertion.
-        let t2 = m.create_dontsched("t2");
-        m.bubble_inserttask(b, t2);
-        s.wake(&sys, t2);
-        let got2 = s.pick(&sys, CpuId(1)).unwrap();
-        assert_eq!(got2, t2);
-        // Both must terminate the bubble.
-        s.stop(&sys, CpuId(0), t1, StopReason::Terminate);
-        s.stop(&sys, CpuId(1), t2, StopReason::Terminate);
-        assert_eq!(sys.tasks.state(b), TaskState::Terminated);
-    }
-
-    #[test]
-    fn gang_scheduling_via_priorities() {
-        // Figure 1: two pair-bubbles under a root bubble; threads
-        // prioritised over bubbles. With 2 CPUs, the first burst pair
-        // must fully occupy the machine before the second bubble bursts.
-        let sys = system(Topology::smp(2));
-        let s = BubbleScheduler::new(BubbleConfig {
-            default_burst: BurstLevel::Immediate,
-            ..BubbleConfig::default()
-        });
-        let m = Marcel::with_system(&sys);
-        let root = m.bubble_init();
-        let b1 = m.bubble_init();
-        let b2 = m.bubble_init();
-        let p1a = m.create_dontsched("p1a");
-        let p1b = m.create_dontsched("p1b");
-        let p2a = m.create_dontsched("p2a");
-        let p2b = m.create_dontsched("p2b");
-        m.bubble_inserttask(b1, p1a);
-        m.bubble_inserttask(b1, p1b);
-        m.bubble_inserttask(b2, p2a);
-        m.bubble_inserttask(b2, p2b);
-        m.bubble_insertbubble(root, b1);
-        m.bubble_insertbubble(root, b2);
-        s.wake(&sys, root);
-        let x = s.pick(&sys, CpuId(0)).unwrap();
-        let y = s.pick(&sys, CpuId(1)).unwrap();
-        let first: std::collections::BTreeSet<TaskId> = [x, y].into();
-        // Must both come from the same pair-bubble (gang!).
-        assert!(
-            first == [p1a, p1b].into() || first == [p2a, p2b].into(),
-            "first gang mixed: {first:?}"
-        );
-    }
-
-    #[test]
-    fn timeslice_regen_rotates_gangs() {
-        let sys = system(Topology::smp(2));
-        let s = BubbleScheduler::new(BubbleConfig {
-            default_burst: BurstLevel::Immediate,
-            default_timeslice: Some(100),
-            ..BubbleConfig::default()
-        });
-        let m = Marcel::with_system(&sys);
-        let root = m.bubble_init();
-        let mk_pair = |tag: &str| {
-            let b = m.bubble_init();
-            let x = m.create_dontsched(format!("{tag}a"));
-            let y = m.create_dontsched(format!("{tag}b"));
-            m.bubble_inserttask(b, x);
-            m.bubble_inserttask(b, y);
-            (b, x, y)
-        };
-        let (b1, _p1a, _p1b) = mk_pair("p1");
-        let (b2, _p2a, _p2b) = mk_pair("p2");
-        m.bubble_insertbubble(root, b1);
-        m.bubble_insertbubble(root, b2);
-        s.wake(&sys, root);
-        let x = s.pick(&sys, CpuId(0)).unwrap();
-        let y = s.pick(&sys, CpuId(1)).unwrap();
-        let gang1: std::collections::BTreeSet<TaskId> = [x, y].into();
-        // Burn the gang's timeslice.
-        let preempt_x = s.tick(&sys, CpuId(0), x, 60);
-        let preempt_y = s.tick(&sys, CpuId(1), y, 60);
-        assert!(preempt_x || preempt_y, "timeslice must trigger");
-        s.stop(&sys, CpuId(0), x, StopReason::Preempt);
-        s.stop(&sys, CpuId(1), y, StopReason::Preempt);
-        // Next picks must be the *other* gang.
-        let x2 = s.pick(&sys, CpuId(0)).unwrap();
-        let y2 = s.pick(&sys, CpuId(1)).unwrap();
-        let gang2: std::collections::BTreeSet<TaskId> = [x2, y2].into();
-        assert!(gang2.is_disjoint(&gang1), "gangs must rotate: {gang1:?} vs {gang2:?}");
-    }
-
-    #[test]
-    fn idle_regen_rebalances_across_nodes() {
-        let sys = system(Topology::numa(2, 1)); // 2 nodes, 1 cpu each
-        let s = BubbleScheduler::new(BubbleConfig {
-            regen_hysteresis: 0,
-            thread_steal: false,
-            ..BubbleConfig::default()
-        });
-        let m = Marcel::with_system(&sys);
-        let b = m.bubble_init();
-        let ts: Vec<TaskId> = (0..4).map(|i| m.create_dontsched(format!("w{i}"))).collect();
-        for &t in &ts {
-            m.bubble_inserttask(b, t);
-        }
-        s.wake(&sys, b);
-        // cpu0 pulls the bubble to node 0 and bursts it there.
-        let t0 = s.pick(&sys, CpuId(0)).unwrap();
-        // cpu1 (other node) sees nothing; its pick triggers a
-        // corrective regeneration, which per §4 must wait for the
-        // running thread before the bubble can move up.
-        assert!(s.pick(&sys, CpuId(1)).is_none());
-        assert!(sys.metrics.regenerations.load(std::sync::atomic::Ordering::Relaxed) >= 1);
-        // The running thread finishes — "the last thread closes the
-        // bubble and moves it up".
-        s.stop(&sys, CpuId(0), t0, StopReason::Terminate);
-        // Now cpu1 can pull the bubble down on its side and re-burst.
-        let t1 = s.pick(&sys, CpuId(1)).expect("rebalanced work");
-        assert_ne!(t0, t1);
-        assert_eq!(sys.tasks.state(t1), TaskState::Running { cpu: CpuId(1) });
-    }
-
-    #[test]
-    fn thread_steal_fallback() {
-        let sys = system(Topology::numa(2, 1));
-        let s = BubbleScheduler::new(BubbleConfig {
-            idle_regen: false,
-            thread_steal: true,
-            ..BubbleConfig::default()
-        });
-        // A loose thread stuck on cpu0's leaf list.
-        let t = sys.tasks.new_thread("lone", PRIO_THREAD);
-        sys.tasks.with(t, |x| x.last_list = Some(sys.topo.leaf_of(CpuId(0))));
-        s.wake(&sys, t);
-        // cpu1 can't see that list; stealing must save it.
-        let got = s.pick(&sys, CpuId(1)).unwrap();
-        assert_eq!(got, t);
-        assert_eq!(sys.metrics.steals.load(std::sync::atomic::Ordering::Relaxed), 1);
-    }
-
-    #[test]
-    fn blocked_thread_wakes_back_to_home_list() {
-        let sys = system(Topology::numa(2, 2));
-        let s = sched();
-        let m = Marcel::with_system(&sys);
-        let b = m.bubble_init();
-        let t1 = m.create_dontsched("a");
-        let t2 = m.create_dontsched("b");
-        m.bubble_inserttask(b, t1);
-        m.bubble_inserttask(b, t2);
-        s.wake(&sys, b);
-        let x = s.pick(&sys, CpuId(0)).unwrap();
-        s.stop(&sys, CpuId(0), x, StopReason::Block);
-        assert_eq!(sys.tasks.state(x), TaskState::Blocked);
-        s.wake(&sys, x);
-        assert!(sys.tasks.state(x).is_ready());
-        // It must be back on the bubble's home list (numa node 0).
-        let list = sys.tasks.state(x).ready_list().unwrap();
-        assert_eq!(sys.topo.node(list).kind, crate::topology::LevelKind::NumaNode);
-    }
-
-    #[test]
-    fn no_task_lost_under_chaotic_schedule() {
-        // Property: every created thread is eventually picked and
-        // terminated; nothing vanishes.
-        use crate::util::proptest::check;
-        check(0xb0b, 25, |rng| {
-            let topo = match rng.below(3) {
-                0 => Topology::smp(4),
-                1 => Topology::numa(2, 2),
-                _ => Topology::deep(),
-            };
-            let n_cpus = topo.n_cpus();
-            let sys = system(topo);
-            let s = BubbleScheduler::new(BubbleConfig {
-                regen_hysteresis: 0,
-                ..Default::default()
-            });
-            let m = Marcel::with_system(&sys);
-            let mut all_threads = Vec::new();
-            for bi in 0..rng.range(1, 4) {
-                let b = m.bubble_init();
-                for ti in 0..rng.range(1, 5) {
-                    let t = m.create_dontsched(format!("b{bi}t{ti}"));
-                    m.bubble_inserttask(b, t);
-                    all_threads.push(t);
-                }
-                s.wake(&sys, b);
-            }
-            for i in 0..rng.range(0, 3) {
-                let t = sys.tasks.new_thread(format!("loose{i}"), PRIO_THREAD);
-                s.wake(&sys, t);
-                all_threads.push(t);
-            }
-            let mut remaining: std::collections::HashSet<TaskId> =
-                all_threads.iter().copied().collect();
-            let mut fuel = 10_000;
-            while !remaining.is_empty() && fuel > 0 {
-                fuel -= 1;
-                let cpu = CpuId(rng.range(0, n_cpus));
-                if let Some(t) = s.pick(&sys, cpu) {
-                    if rng.chance(0.3) {
-                        s.stop(&sys, cpu, t, StopReason::Yield);
-                    } else {
-                        s.stop(&sys, cpu, t, StopReason::Terminate);
-                        remaining.remove(&t);
-                    }
-                }
-            }
-            assert!(remaining.is_empty(), "lost tasks: {remaining:?}");
-        });
-    }
-
-    #[test]
-    fn bubble_priority_below_thread_keeps_machine_busy() {
-        // Paper Figure 1 rationale: a bubble bursts only when running
-        // threads can no longer occupy all processors.
-        let sys = system(Topology::smp(2));
-        let s = BubbleScheduler::new(BubbleConfig {
-            default_burst: BurstLevel::Immediate,
-            ..Default::default()
-        });
-        let m = Marcel::with_system(&sys);
-        let a = sys.tasks.new_thread("a", PRIO_THREAD);
-        let bt = sys.tasks.new_thread("b", PRIO_THREAD);
-        s.wake(&sys, a);
-        s.wake(&sys, bt);
-        let bub = m.bubble_init();
-        let c = m.create_dontsched("c");
-        let d = m.create_dontsched("d");
-        m.bubble_inserttask(bub, c);
-        m.bubble_inserttask(bub, d);
-        s.wake(&sys, bub);
-        let x = s.pick(&sys, CpuId(0)).unwrap();
-        let y = s.pick(&sys, CpuId(1)).unwrap();
-        assert_eq!(
-            std::collections::BTreeSet::from([x, y]),
-            std::collections::BTreeSet::from([a, bt]),
-            "threads must be scheduled before the bubble bursts"
-        );
-        assert_eq!(sys.tasks.with(bub, |t| t.bubble_data().phase), BubblePhase::Closed);
-        assert_eq!(sys.tasks.prio(bub), PRIO_BUBBLE);
     }
 }

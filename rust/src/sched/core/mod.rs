@@ -1,0 +1,113 @@
+//! # The scheduling-primitives core
+//!
+//! The paper pitches its contribution as "more than a mere scheduling
+//! model … a scheduling experimentation platform" (§3.3.1), and its
+//! follow-up (the BubbleSched framework, arXiv 0706.2069) makes the
+//! consequence explicit: portable schedulers should be *composed from
+//! reusable hierarchy primitives*, not hand-written monoliths. This
+//! module is that primitive layer. The bubble scheduler and every
+//! baseline under [`crate::sched::baselines`] are thin policy glue over
+//! it; new policies (memory-aware, adaptive, moldable — see ROADMAP
+//! "Open items") should be too.
+//!
+//! ## Architecture
+//!
+//! The core is split along the three axes a hierarchical scheduler
+//! varies on:
+//!
+//! * [`traversal`] — **where to look**. Named walks over the machine
+//!   tree, all precomputed once per [`crate::topology::Topology`]
+//!   (`topology::scan`): the covering chain leaf→root, its reverse
+//!   (descent), the all-components most-local-first order, the
+//!   closest-victim-first steal order, and O(1) hoist targets.
+//! * [`pick`] — **how to take**. The paper's generic two-pass search
+//!   (§4): pass 1 scans lock-free max-priority hints along *any* scan
+//!   order (ties go to the more local list), pass 2 locks only the
+//!   chosen list and re-checks, retrying on races. Parameterise it with
+//!   a traversal and you have a pick path.
+//! * [`ops`] — **what to do with it**. Reusable state-transition
+//!   building blocks: enqueue/dispatch with trace+metrics accounting,
+//!   the default stop protocol, bubble flattening for opportunist
+//!   policies, and the steal family (fullest victim, closest victim,
+//!   most-loaded victim).
+//! * [`stats`] — **what the machine looks like**. Incrementally
+//!   maintained per-level load statistics. Together with the runqueue
+//!   hints ([`crate::rq`]: per-list task count + max-priority, per-level
+//!   subtree occupancy) they let policies consult O(1) counters instead
+//!   of rescanning lists: `rq.len_of(l)`, `rq.peek_max(l)`,
+//!   `rq.queued_subtree(l)`, `stats.running(l)`.
+//!
+//! ## Writing a new policy in ~50 lines
+//!
+//! A policy implements [`crate::sched::Scheduler`] by choosing a scan
+//! order and a fallback. For example, a NUMA-local policy that keeps
+//! work inside the waking thread's node and steals closest-first:
+//!
+//! ```ignore
+//! use crate::sched::core::{ops, pick, traversal};
+//! use crate::sched::{Scheduler, StopReason, System};
+//! use crate::task::TaskId;
+//! use crate::topology::{CpuId, LevelKind};
+//!
+//! #[derive(Debug, Default)]
+//! pub struct NumaLocalScheduler;
+//!
+//! impl Scheduler for NumaLocalScheduler {
+//!     fn name(&self) -> String {
+//!         "numa-local".into()
+//!     }
+//!
+//!     fn wake(&self, sys: &System, task: TaskId) {
+//!         // Opportunist: ignore bubble structure, place on the least
+//!         // loaded leaf of the task's last NUMA node (or anywhere).
+//!         ops::flatten_wake(sys, task, &mut |sys, t| {
+//!             let cpus = match sys.tasks.with(t, |x| x.last_cpu) {
+//!                 Some(c) => {
+//!                     let node = sys.topo.ancestor_of_kind(c, LevelKind::NumaNode);
+//!                     node.map(|n| sys.topo.node(n).cpus().collect::<Vec<_>>())
+//!                 }
+//!                 None => None,
+//!             };
+//!             let cpus = cpus.unwrap_or_else(|| (0..sys.topo.n_cpus()).map(CpuId).collect());
+//!             let list = ops::least_loaded_leaf(sys, cpus.into_iter());
+//!             ops::enqueue(sys, t, list);
+//!         });
+//!     }
+//!
+//!     fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+//!         // Two-pass over my covering chain, then steal closest-first.
+//!         let order = traversal::covering(&sys.topo, cpu);
+//!         if let Some(t) = pick::pick_thread(sys, cpu, order) {
+//!             return Some(t);
+//!         }
+//!         let (t, _from) = ops::steal_closest(sys, cpu)?;
+//!         ops::dispatch(sys, cpu, t, sys.topo.leaf_of(cpu));
+//!         Some(t)
+//!     }
+//!
+//!     fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+//!         ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
+//!             ops::enqueue(sys, t, sys.topo.leaf_of(cpu))
+//!         });
+//!     }
+//! }
+//! ```
+//!
+//! Register it in [`crate::sched::factory`] (one table entry: name,
+//! summary, build function) and it is reachable from the config file,
+//! the CLI (`repro schedulers` lists it) and every experiment harness.
+//!
+//! ## Invariants the core maintains for you
+//!
+//! * `ops::enqueue`/`ops::dispatch` keep `TaskState`, `last_list`,
+//!   `last_cpu`, migration/pick metrics and the trace consistent.
+//! * `ops::dispatch`/`ops::note_stop` keep [`stats::LoadStats`] running
+//!   counters balanced (every `Scheduler::stop` implementation must go
+//!   through `default_stop` or call `note_stop` once).
+//! * `pick::two_pass` accounts `search_retries` and bounds the retry
+//!   loop, so a policy cannot spin forever on hint races.
+
+pub mod ops;
+pub mod pick;
+pub mod stats;
+pub mod traversal;

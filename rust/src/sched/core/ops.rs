@@ -1,0 +1,262 @@
+//! Reusable state-transition building blocks: queueing, dispatch, the
+//! default stop protocol, bubble flattening, and the steal family.
+//!
+//! Every function keeps task state, trace events, metrics and
+//! [`super::stats::LoadStats`] consistent, so policies compose them
+//! without re-implementing the accounting.
+
+use crate::metrics::Metrics;
+use crate::sched::{StopReason, System};
+use crate::task::{Prio, TaskId, TaskState};
+use crate::topology::{CpuId, LevelId};
+use crate::trace::{Event, StopWhy};
+
+/// Enqueue `task` on `list`, fixing its state and affinity hint.
+pub fn enqueue(sys: &System, task: TaskId, list: LevelId) {
+    let prio = sys.tasks.with(task, |t| {
+        t.state = TaskState::Ready { list };
+        t.last_list = Some(list);
+        t.prio
+    });
+    sys.rq.push(list, task, prio);
+    sys.trace.emit(sys.now(), Event::Enqueue { task, list });
+}
+
+/// Mark a popped task Running on `cpu`, accounting migrations, picks,
+/// per-level running counters and the trace.
+pub fn dispatch(sys: &System, cpu: CpuId, task: TaskId, from: LevelId) {
+    sys.tasks.with(task, |t| {
+        if let Some(last) = t.last_cpu {
+            if last != cpu {
+                Metrics::inc(&sys.metrics.migrations);
+            }
+        }
+        t.state = TaskState::Running { cpu };
+        t.last_cpu = Some(cpu);
+        t.last_list = Some(from);
+    });
+    sys.stats.on_dispatch(&sys.topo, cpu);
+    Metrics::inc(&sys.metrics.picks);
+    sys.trace.emit(sys.now(), Event::Dispatch { task, cpu });
+}
+
+/// Account that the task running on `cpu` stopped (whatever the
+/// reason). Every [`crate::sched::Scheduler::stop`] implementation must
+/// call this exactly once per stop — [`default_stop`] does it for you.
+pub fn note_stop(sys: &System, cpu: CpuId) {
+    sys.stats.on_stop(&sys.topo, cpu);
+}
+
+/// Flatten-wake: threads go through `push`; bubbles recursively release
+/// their contents (opportunist schedulers ignore structure — that is
+/// precisely the paper's criticism of them).
+pub fn flatten_wake(sys: &System, task: TaskId, push: &mut dyn FnMut(&System, TaskId)) {
+    if sys.tasks.is_bubble(task) {
+        let contents = sys.tasks.with(task, |t| t.kind_contents_snapshot());
+        // The bubble itself is inert for baselines: park it off-list.
+        sys.tasks.with(task, |t| t.state = TaskState::Blocked);
+        for c in contents {
+            flatten_wake(sys, c, push);
+        }
+    } else {
+        push(sys, task);
+    }
+}
+
+/// Default `stop` behaviour shared by the list baselines: requeue on
+/// yield/preempt via `requeue`, Block/Terminate adjust state only.
+pub fn default_stop(
+    sys: &System,
+    cpu: CpuId,
+    task: TaskId,
+    why: StopReason,
+    requeue: &mut dyn FnMut(&System, TaskId),
+) {
+    use StopReason::*;
+    note_stop(sys, cpu);
+    match why {
+        Yield | Preempt => {
+            sys.trace.emit(
+                sys.now(),
+                Event::Stop {
+                    task,
+                    cpu,
+                    why: if why == Yield { StopWhy::Yield } else { StopWhy::Preempt },
+                },
+            );
+            if why == Preempt {
+                Metrics::inc(&sys.metrics.preemptions);
+            }
+            requeue(sys, task);
+        }
+        Block => {
+            sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Block });
+            sys.tasks.set_state(task, TaskState::Blocked);
+        }
+        Terminate => {
+            sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Terminate });
+            sys.tasks.set_state(task, TaskState::Terminated);
+        }
+    }
+}
+
+// ----------------------------------------------------------- placement
+
+/// Most loaded leaf list among `cpus`, if any is non-empty (O(1) per
+/// list: lock-free count hints).
+pub fn most_loaded_leaf(sys: &System, cpus: impl Iterator<Item = CpuId>) -> Option<LevelId> {
+    let mut best: Option<(LevelId, usize)> = None;
+    for cpu in cpus {
+        let l = sys.topo.leaf_of(cpu);
+        let n = sys.rq.len_of(l);
+        if n > best.map_or(0, |(_, b)| b) {
+            best = Some((l, n));
+        }
+    }
+    best.map(|(l, _)| l)
+}
+
+/// Least loaded leaf among `cpus` (for initial placement). Load counts
+/// both queued *and* currently-running work (the [`super::stats`]
+/// counters), so a CPU that is busy but has an empty queue is not
+/// mistaken for an idle one. Ties are broken by a rotating offset:
+/// real wake-placement is effectively arbitrary among equally loaded
+/// CPUs, and a fixed tie-break would give the opportunist baselines
+/// accidental (unrealistic) locality — all new threads piling onto
+/// cpu0's node.
+pub fn least_loaded_leaf(sys: &System, cpus: impl Iterator<Item = CpuId>) -> LevelId {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static ROT: AtomicUsize = AtomicUsize::new(0);
+    let all: Vec<CpuId> = cpus.collect();
+    let off = ROT.fetch_add(1, Ordering::Relaxed) % all.len().max(1);
+    let mut best: Option<(LevelId, usize)> = None;
+    for i in 0..all.len() {
+        let cpu = all[(i + off) % all.len()];
+        let l = sys.topo.leaf_of(cpu);
+        let n = sys.rq.len_of(l) + sys.stats.running(l);
+        if best.map_or(true, |(_, b)| n < b) {
+            best = Some((l, n));
+        }
+    }
+    best.expect("no cpus").0
+}
+
+// --------------------------------------------------------------- steal
+
+/// Pop the best task of `victim` on behalf of `cpu`, accounting the
+/// steal (metric + trace) on success.
+pub fn pop_steal(sys: &System, cpu: CpuId, victim: LevelId) -> Option<(TaskId, Prio)> {
+    let (task, prio) = sys.rq.pop_max(victim)?;
+    Metrics::inc(&sys.metrics.steals);
+    sys.trace.emit(sys.now(), Event::Steal { task, from: victim, by: cpu });
+    Some((task, prio))
+}
+
+/// Steal from the fullest list that does *not* cover `cpu` (the bubble
+/// scheduler's last-resort rebalancing). O(1) bail-out when the whole
+/// machine is empty (root subtree counter).
+pub fn steal_fullest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
+    if sys.rq.total_queued() == 0 {
+        return None;
+    }
+    let mut victim: Option<(LevelId, usize)> = None;
+    for i in 0..sys.rq.len() {
+        let l = LevelId(i);
+        if sys.topo.node(l).covers(cpu) {
+            continue;
+        }
+        let len = sys.rq.len_of(l);
+        if len > victim.map_or(0, |(_, n)| n) {
+            victim = Some((l, len));
+        }
+    }
+    let (l, _) = victim?;
+    let (task, _prio) = pop_steal(sys, cpu, l)?;
+    Some((task, l))
+}
+
+/// Steal from the closest loaded CPU (LDS, §2.2): walk the precomputed
+/// closest-first victim order; within a tie group of equal hierarchical
+/// distance the fullest victim wins.
+pub fn steal_closest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
+    let order = sys.topo.steal_order(cpu);
+    let sep = |l: LevelId| sys.topo.separation(cpu, CpuId(sys.topo.node(l).cpu_first));
+    let mut i = 0;
+    while i < order.len() {
+        let d = sep(order[i]);
+        let mut j = i;
+        let mut best: Option<(usize, LevelId)> = None;
+        while j < order.len() && sep(order[j]) == d {
+            let n = sys.rq.len_of(order[j]);
+            if n > 0 && best.map_or(true, |(bn, _)| n > bn) {
+                best = Some((n, order[j]));
+            }
+            j += 1;
+        }
+        if let Some((_, v)) = best {
+            if let Some((task, _)) = pop_steal(sys, cpu, v) {
+                return Some((task, v));
+            }
+        }
+        i = j;
+    }
+    None
+}
+
+/// Steal from the most loaded CPU machine-wide (AFS, §2.2: the Linux
+/// 2.6 / FreeBSD 5 "rebalance" structure).
+pub fn steal_most_loaded(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
+    let v = most_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId).filter(|&c| c != cpu))?;
+    let (task, _prio) = pop_steal(sys, cpu, v)?;
+    Some((task, v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::system;
+    use crate::task::PRIO_THREAD;
+    use crate::topology::Topology;
+
+    #[test]
+    fn enqueue_dispatch_roundtrip_keeps_stats() {
+        let sys = system(Topology::numa(2, 2));
+        let t = sys.tasks.new_thread("t", PRIO_THREAD);
+        enqueue(&sys, t, sys.topo.root());
+        assert!(sys.tasks.state(t).is_ready());
+        dispatch(&sys, CpuId(1), t, sys.topo.root());
+        assert_eq!(sys.stats.running(sys.topo.root()), 1);
+        assert_eq!(sys.stats.running(sys.topo.leaf_of(CpuId(1))), 1);
+        assert_eq!(sys.stats.running(sys.topo.leaf_of(CpuId(0))), 0);
+        note_stop(&sys, CpuId(1));
+        assert_eq!(sys.stats.running(sys.topo.root()), 0);
+    }
+
+    #[test]
+    fn steal_fullest_skips_covering_lists() {
+        let sys = system(Topology::numa(2, 1));
+        let my_leaf = sys.topo.leaf_of(CpuId(0));
+        let other_leaf = sys.topo.leaf_of(CpuId(1));
+        let a = sys.tasks.new_thread("a", PRIO_THREAD);
+        let b = sys.tasks.new_thread("b", PRIO_THREAD);
+        enqueue(&sys, a, my_leaf);
+        enqueue(&sys, b, other_leaf);
+        let (task, from) = steal_fullest(&sys, CpuId(0)).unwrap();
+        assert_eq!((task, from), (b, other_leaf));
+        // Machine-empty fast path.
+        sys.rq.pop_max(my_leaf);
+        assert!(steal_fullest(&sys, CpuId(0)).is_none());
+    }
+
+    #[test]
+    fn steal_closest_prefers_near_victims() {
+        let sys = system(Topology::numa(2, 2));
+        let near = sys.tasks.new_thread("near", PRIO_THREAD);
+        let far = sys.tasks.new_thread("far", PRIO_THREAD);
+        enqueue(&sys, near, sys.topo.leaf_of(CpuId(1)));
+        enqueue(&sys, far, sys.topo.leaf_of(CpuId(2)));
+        let (task, from) = steal_closest(&sys, CpuId(0)).unwrap();
+        assert_eq!(task, near);
+        assert_eq!(from, sys.topo.leaf_of(CpuId(1)));
+    }
+}

@@ -1,0 +1,102 @@
+//! The generic two-pass pick (paper §4), parameterised by a scan order.
+//!
+//! Pass 1 reads the lock-free max-priority hints of the lists in the
+//! order — earlier positions are "more local", so on priority ties the
+//! earlier list wins. Pass 2 locks only the chosen list and re-pops; if
+//! another processor raced us to the task, the search retries (bounded,
+//! accounted in `metrics.search_retries`).
+
+use super::ops;
+use crate::metrics::Metrics;
+use crate::sched::System;
+use crate::task::{Prio, TaskId};
+use crate::topology::{CpuId, LevelId};
+
+/// Pass 1: lock-free scan of `order`, most local first. Returns the
+/// list holding the (apparently) highest-priority task; ties go to the
+/// earlier (more local) list.
+pub fn pass1(sys: &System, order: &[LevelId]) -> Option<LevelId> {
+    let mut best: Option<(LevelId, Prio)> = None;
+    for &l in order {
+        let p = sys.rq.peek_max(l);
+        if p == i32::MIN {
+            continue;
+        }
+        match best {
+            Some((_, bp)) if p <= bp => {}
+            _ => best = Some((l, p)),
+        }
+    }
+    best.map(|(l, _)| l)
+}
+
+/// Both passes: scan, lock, re-check, retry on race. Returns the popped
+/// task, its priority, and the list it came from; None when every list
+/// in the order is (or raced to) empty.
+pub fn two_pass(sys: &System, order: &[LevelId]) -> Option<(TaskId, Prio, LevelId)> {
+    let mut credits = 2 * order.len() + 8;
+    while credits > 0 {
+        credits -= 1;
+        let list = pass1(sys, order)?;
+        match sys.rq.pop_max(list) {
+            Some((task, prio)) => return Some((task, prio, list)),
+            None => Metrics::inc(&sys.metrics.search_retries),
+        }
+    }
+    None
+}
+
+/// The whole thread pick path for policies whose lists only ever hold
+/// threads (every baseline): two-pass search + dispatch accounting.
+pub fn pick_thread(sys: &System, cpu: CpuId, order: &[LevelId]) -> Option<TaskId> {
+    let (task, _prio, from) = two_pass(sys, order)?;
+    ops::dispatch(sys, cpu, task, from);
+    Some(task)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::system;
+    use crate::task::{TaskState, PRIO_HIGH, PRIO_THREAD};
+    use crate::topology::Topology;
+
+    #[test]
+    fn pass1_prefers_local_on_ties() {
+        let sys = system(Topology::numa(2, 2));
+        let leaf = sys.topo.leaf_of(CpuId(0));
+        let root = sys.topo.root();
+        sys.rq.push(root, TaskId(0), PRIO_THREAD);
+        sys.rq.push(leaf, TaskId(1), PRIO_THREAD);
+        let order = sys.topo.covering(CpuId(0));
+        assert_eq!(pass1(&sys, order), Some(leaf));
+    }
+
+    #[test]
+    fn pass1_prefers_priority_over_locality() {
+        let sys = system(Topology::numa(2, 2));
+        let leaf = sys.topo.leaf_of(CpuId(0));
+        let root = sys.topo.root();
+        sys.rq.push(leaf, TaskId(0), PRIO_THREAD);
+        sys.rq.push(root, TaskId(1), PRIO_HIGH);
+        assert_eq!(pass1(&sys, sys.topo.covering(CpuId(0))), Some(root));
+    }
+
+    #[test]
+    fn pick_thread_dispatches_and_accounts() {
+        let sys = system(Topology::smp(2));
+        let t = sys.tasks.new_thread("t", PRIO_THREAD);
+        sys.tasks.set_state(t, TaskState::Ready { list: sys.topo.root() });
+        sys.rq.push(sys.topo.root(), t, PRIO_THREAD);
+        let got = pick_thread(&sys, CpuId(1), sys.topo.covering(CpuId(1)));
+        assert_eq!(got, Some(t));
+        assert_eq!(sys.tasks.state(t), TaskState::Running { cpu: CpuId(1) });
+        assert_eq!(sys.metrics.picks.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn empty_order_is_none() {
+        let sys = system(Topology::smp(2));
+        assert_eq!(two_pass(&sys, sys.topo.covering(CpuId(0))), None);
+    }
+}

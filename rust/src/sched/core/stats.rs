@@ -1,0 +1,74 @@
+//! Incrementally-maintained per-level load statistics.
+//!
+//! The three load surfaces a policy can consult in O(1), instead of
+//! rescanning lists:
+//!
+//! * **task count** — `sys.rq.len_of(l)` (per-list lock-free hint) and
+//!   `sys.rq.queued_subtree(l)` (per-level subtree occupancy);
+//! * **max priority** — `sys.rq.peek_max(l)` (per-list lock-free hint);
+//! * **running count** — [`LoadStats::running`], maintained here: how
+//!   many threads are currently executing on CPUs covered by component
+//!   `l`. Updated along the covering chain (O(depth)) on every
+//!   dispatch/stop by [`super::ops::dispatch`]/[`super::ops::note_stop`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::topology::{CpuId, LevelId, Topology};
+
+/// Per-component running-thread counters.
+#[derive(Debug)]
+pub struct LoadStats {
+    running: Vec<AtomicUsize>,
+}
+
+impl LoadStats {
+    /// Zeroed counters for a machine.
+    pub fn new(topo: &Topology) -> LoadStats {
+        LoadStats {
+            running: (0..topo.n_components()).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    /// A thread was dispatched on `cpu`: bump every covering component.
+    pub fn on_dispatch(&self, topo: &Topology, cpu: CpuId) {
+        for &l in topo.covering(cpu) {
+            self.running[l.0].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The thread running on `cpu` stopped (any reason). Saturating so
+    /// an unbalanced call cannot wrap the counters.
+    pub fn on_stop(&self, topo: &Topology, cpu: CpuId) {
+        for &l in topo.covering(cpu) {
+            let _ = self.running[l.0]
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+        }
+    }
+
+    /// Threads currently running on CPUs covered by `l` (advisory).
+    pub fn running(&self, l: LevelId) -> usize {
+        self.running[l.0].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_stop_balance_along_chain() {
+        let topo = Topology::deep();
+        let stats = LoadStats::new(&topo);
+        stats.on_dispatch(&topo, CpuId(0));
+        stats.on_dispatch(&topo, CpuId(15));
+        assert_eq!(stats.running(topo.root()), 2);
+        assert_eq!(stats.running(topo.leaf_of(CpuId(0))), 1);
+        assert_eq!(stats.running(topo.leaf_of(CpuId(1))), 0);
+        stats.on_stop(&topo, CpuId(0));
+        assert_eq!(stats.running(topo.root()), 1);
+        assert_eq!(stats.running(topo.leaf_of(CpuId(0))), 0);
+        // Saturating: an extra stop cannot wrap.
+        stats.on_stop(&topo, CpuId(0));
+        assert_eq!(stats.running(topo.leaf_of(CpuId(0))), 0);
+    }
+}

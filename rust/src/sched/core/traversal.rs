@@ -1,0 +1,76 @@
+//! Named walks over the machine tree (all O(1) on the hot path: the
+//! orders are precomputed per CPU at topology construction, see
+//! `crate::topology::scan`).
+//!
+//! Policies pick a traversal and feed it to [`super::pick`]; nothing
+//! here allocates or re-walks the tree.
+
+use crate::topology::{CpuId, LevelId, Topology};
+
+/// The covering chain of `cpu`, leaf → root: the paper's §3.3.2 list
+/// search order ("from most local to most global").
+pub fn covering(topo: &Topology, cpu: CpuId) -> &[LevelId] {
+    topo.covering(cpu)
+}
+
+/// The covering chain root → leaf: the descent path a bubble rides
+/// towards `cpu` (Figure 3).
+pub fn descent(topo: &Topology, cpu: CpuId) -> &[LevelId] {
+    topo.descent_order(cpu)
+}
+
+/// Every component, most local to `cpu` first; the covering chain is
+/// the prefix, then non-covering components by hierarchical distance.
+pub fn locality(topo: &Topology, cpu: CpuId) -> &[LevelId] {
+    topo.locality_order(cpu)
+}
+
+/// The other CPUs' leaf lists, closest first ("sibling-by-distance"):
+/// the natural steal-victim order.
+pub fn steal_leaves(topo: &Topology, cpu: CpuId) -> &[LevelId] {
+    topo.steal_order(cpu)
+}
+
+/// Lowest ancestor-or-self of `from` covering `cpu`: where work pulled
+/// from `from` towards `cpu` is hoisted so both sides can see it.
+pub fn hoist_towards(topo: &Topology, from: LevelId, cpu: CpuId) -> LevelId {
+    topo.hoist_towards(from, cpu)
+}
+
+/// One step down from `from` towards `cpu` (None when `from` is already
+/// the leaf): the bubble-descent step.
+pub fn descend_towards(topo: &Topology, from: LevelId, cpu: CpuId) -> Option<LevelId> {
+    topo.child_towards(from, cpu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn walks_agree_with_topology() {
+        let t = Topology::deep();
+        for c in 0..t.n_cpus() {
+            let cpu = CpuId(c);
+            assert_eq!(covering(&t, cpu), t.covering(cpu));
+            assert_eq!(descent(&t, cpu).last(), Some(&t.leaf_of(cpu)));
+            assert_eq!(descent(&t, cpu).first(), Some(&t.root()));
+            assert_eq!(locality(&t, cpu).len(), t.n_components());
+            assert_eq!(steal_leaves(&t, cpu).len(), t.n_cpus() - 1);
+        }
+    }
+
+    #[test]
+    fn descend_follows_hoist_back_down() {
+        let t = Topology::numa(2, 2);
+        let cpu = CpuId(3);
+        let mut cur = t.root();
+        while let Some(next) = descend_towards(&t, cur, cpu) {
+            assert!(t.node(next).covers(cpu));
+            cur = next;
+        }
+        assert_eq!(cur, t.leaf_of(cpu));
+        assert_eq!(hoist_towards(&t, t.leaf_of(CpuId(0)), cpu), t.root());
+    }
+}

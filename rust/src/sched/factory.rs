@@ -1,0 +1,179 @@
+//! Policy registry: every scheduler is registered here once — name,
+//! aliases, a one-line summary, and a build function — and `config`,
+//! `cli` and the experiment harnesses instantiate and enumerate
+//! policies through it instead of hardcoding matches.
+//!
+//! Adding a policy is one [`REGISTRY`] entry; it is then reachable from
+//! config files (`[sched] kind = "..."`), the CLI (`repro schedulers`
+//! lists it, `--sched <name>` selects it) and the scheduler-generic
+//! property tests.
+
+use std::sync::Arc;
+
+use super::baselines::{
+    AfsScheduler, BoundScheduler, CafsScheduler, GangScheduler, GssScheduler, HafsScheduler,
+    LdsScheduler, SsScheduler, TssScheduler,
+};
+use super::{BubbleScheduler, Scheduler};
+use crate::config::{SchedConfig, SchedKind};
+use crate::util::fmt::Table;
+
+/// One registered scheduling policy.
+pub struct PolicyInfo {
+    pub kind: SchedKind,
+    /// Canonical name (what `name()` reports and configs should use).
+    pub name: &'static str,
+    /// Accepted alternative spellings.
+    pub aliases: &'static [&'static str],
+    /// One-line description for `repro schedulers`.
+    pub summary: &'static str,
+    build: fn(&SchedConfig) -> Arc<dyn Scheduler>,
+}
+
+static REGISTRY: [PolicyInfo; 10] = [
+    PolicyInfo {
+        kind: SchedKind::Bubble,
+        name: "bubble",
+        aliases: &["bubbles"],
+        summary: "the paper's bubble scheduler: descend, burst, regenerate (§3.3)",
+        build: |cfg| Arc::new(BubbleScheduler::new(cfg.bubble_config())),
+    },
+    PolicyInfo {
+        kind: SchedKind::Ss,
+        name: "ss",
+        aliases: &["simple"],
+        summary: "self-scheduling: one global ready list (Table-2 'Simple')",
+        build: |_| Arc::new(SsScheduler::new()),
+    },
+    PolicyInfo {
+        kind: SchedKind::Gss,
+        name: "gss",
+        aliases: &[],
+        summary: "guided self-scheduling: idle CPUs grab ceil(remaining/p) chunks",
+        build: |_| Arc::new(GssScheduler::new()),
+    },
+    PolicyInfo {
+        kind: SchedKind::Tss,
+        name: "tss",
+        aliases: &[],
+        summary: "trapezoid self-scheduling: linearly decreasing chunks",
+        build: |_| Arc::new(TssScheduler::new()),
+    },
+    PolicyInfo {
+        kind: SchedKind::Afs,
+        name: "afs",
+        aliases: &[],
+        summary: "affinity scheduling: per-CPU lists, steal from the most loaded CPU",
+        build: |_| Arc::new(AfsScheduler::new()),
+    },
+    PolicyInfo {
+        kind: SchedKind::Lds,
+        name: "lds",
+        aliases: &[],
+        summary: "locality-based dynamic scheduling: steal from the closest loaded CPU",
+        build: |_| Arc::new(LdsScheduler::new()),
+    },
+    PolicyInfo {
+        kind: SchedKind::Cafs,
+        name: "cafs",
+        aliases: &[],
+        summary: "clustered AFS: steal only within the (NUMA-aligned) group",
+        build: |_| Arc::new(CafsScheduler::new()),
+    },
+    PolicyInfo {
+        kind: SchedKind::Hafs,
+        name: "hafs",
+        aliases: &[],
+        summary: "hierarchical AFS: dry groups raid the most loaded group",
+        build: |_| Arc::new(HafsScheduler::new()),
+    },
+    PolicyInfo {
+        kind: SchedKind::Bound,
+        name: "bound",
+        aliases: &[],
+        summary: "predetermined thread-to-CPU binding (Table-2 'Bound')",
+        build: |_| Arc::new(BoundScheduler::new()),
+    },
+    PolicyInfo {
+        kind: SchedKind::Gang,
+        name: "gang",
+        aliases: &[],
+        summary: "Ousterhout gang scheduling: one gang owns the whole machine",
+        build: |cfg| Arc::new(GangScheduler::new(cfg.timeslice.unwrap_or(1_000_000))),
+    },
+];
+
+/// All registered policies, in presentation order.
+pub fn registry() -> &'static [PolicyInfo] {
+    &REGISTRY
+}
+
+/// Look a policy up by canonical name or alias (ASCII case-insensitive).
+pub fn lookup(name: &str) -> Option<&'static PolicyInfo> {
+    REGISTRY.iter().find(|e| {
+        e.name.eq_ignore_ascii_case(name)
+            || e.aliases.iter().any(|a| a.eq_ignore_ascii_case(name))
+    })
+}
+
+/// Registry entry of a kind (every kind is registered).
+pub fn info(kind: SchedKind) -> &'static PolicyInfo {
+    REGISTRY
+        .iter()
+        .find(|e| e.kind == kind)
+        .expect("unregistered scheduler kind")
+}
+
+/// Instantiate any scheduler by config.
+pub fn make(cfg: &SchedConfig) -> Arc<dyn Scheduler> {
+    (info(cfg.kind).build)(cfg)
+}
+
+/// Instantiate with defaults for a kind.
+pub fn make_default(kind: SchedKind) -> Arc<dyn Scheduler> {
+    make(&SchedConfig { kind, ..SchedConfig::default() })
+}
+
+/// Human-readable listing for `repro schedulers` / `--sched list`.
+pub fn render_list() -> String {
+    let mut t = Table::new(&["name", "aliases", "description"]);
+    for e in registry() {
+        t.row(&[e.name.to_string(), e.aliases.join(", "), e.summary.to_string()]);
+    }
+    format!(
+        "registered scheduling policies ({}):\n\n{}",
+        registry().len(),
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_kind_is_registered_and_buildable() {
+        for &kind in SchedKind::all() {
+            let e = info(kind);
+            assert_eq!(e.kind, kind);
+            let s = make_default(kind);
+            assert_eq!(s.name(), e.name, "name() must match the registry");
+        }
+    }
+
+    #[test]
+    fn lookup_accepts_aliases_case_insensitively() {
+        assert_eq!(lookup("bubbles").unwrap().kind, SchedKind::Bubble);
+        assert_eq!(lookup("SIMPLE").unwrap().kind, SchedKind::Ss);
+        assert_eq!(lookup("Hafs").unwrap().kind, SchedKind::Hafs);
+        assert!(lookup("nope").is_none());
+    }
+
+    #[test]
+    fn render_list_mentions_every_policy() {
+        let out = render_list();
+        for e in registry() {
+            assert!(out.contains(e.name), "{} missing from listing", e.name);
+        }
+    }
+}

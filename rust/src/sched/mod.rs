@@ -8,6 +8,8 @@
 
 pub mod baselines;
 mod bubble;
+pub mod core;
+pub mod factory;
 mod system;
 
 pub use bubble::{BubbleConfig, BubbleScheduler};

@@ -4,6 +4,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use super::core::stats::LoadStats;
 use crate::metrics::Metrics;
 use crate::rq::RqHierarchy;
 use crate::task::TaskTable;
@@ -16,6 +17,9 @@ pub struct System {
     pub topo: Arc<Topology>,
     pub tasks: TaskTable,
     pub rq: RqHierarchy,
+    /// Incremental per-level load statistics (see [`LoadStats`]),
+    /// maintained by the `sched::core::ops` building blocks.
+    pub stats: LoadStats,
     pub metrics: Metrics,
     pub trace: Trace,
     /// Engine clock (simulated cycles / native ns); engines advance it,
@@ -27,10 +31,12 @@ impl System {
     /// Fresh system over a machine.
     pub fn new(topo: Arc<Topology>) -> System {
         let rq = RqHierarchy::new(&topo);
+        let stats = LoadStats::new(&topo);
         System {
             topo,
             tasks: TaskTable::new(),
             rq,
+            stats,
             metrics: Metrics::new(),
             trace: Trace::default(),
             clock: AtomicU64::new(0),

@@ -144,6 +144,14 @@ impl Task {
             TaskKind::Bubble(_) => panic!("{} is not a thread", self.id),
         }
     }
+
+    /// Clone the contents list of a bubble task (empty for threads).
+    pub fn kind_contents_snapshot(&self) -> Vec<TaskId> {
+        match &self.kind {
+            TaskKind::Bubble(b) => b.contents.clone(),
+            TaskKind::Thread(_) => Vec::new(),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -10,10 +10,12 @@ mod builder;
 mod distance;
 mod level;
 mod presets;
+mod scan;
 
 pub use builder::TopoBuilder;
 pub use distance::DistanceModel;
 pub use level::{CpuId, LevelId, LevelKind};
+pub use scan::ScanOrder;
 
 use crate::error::{Error, Result};
 
@@ -61,6 +63,9 @@ pub struct Topology {
     numa_count: usize,
     /// The *other* logical CPU sharing this CPU's core, if SMT.
     smt_sibling: Vec<Option<CpuId>>,
+    /// Per-CPU precomputed scan orders (see [`scan`]): the scheduler
+    /// hot path reads slices, it never re-walks the tree.
+    scan: Vec<ScanOrder>,
 }
 
 impl Topology {
@@ -126,7 +131,18 @@ impl Topology {
                 smt_sibling[b.0] = Some(a);
             }
         }
-        Ok(Topology { name, nodes, cpu_leaf, covering, numa_of_cpu, numa_count, smt_sibling })
+        let mut topo = Topology {
+            name,
+            nodes,
+            cpu_leaf,
+            covering,
+            numa_of_cpu,
+            numa_count,
+            smt_sibling,
+            scan: Vec::new(),
+        };
+        topo.scan = scan::build_orders(&topo);
+        Ok(topo)
     }
 
     /// Human-readable machine name (preset name or "custom").
@@ -178,6 +194,29 @@ impl Topology {
     /// This is the list-search order of the scheduler (local → global).
     pub fn covering(&self, cpu: CpuId) -> &[LevelId] {
         &self.covering[cpu.0]
+    }
+
+    /// Covering chain of `cpu`, root → leaf (the bubble descent path).
+    pub fn descent_order(&self, cpu: CpuId) -> &[LevelId] {
+        &self.scan[cpu.0].descent
+    }
+
+    /// Every component ordered most-local-first for `cpu`: the covering
+    /// chain is the prefix, then non-covering components by distance.
+    pub fn locality_order(&self, cpu: CpuId) -> &[LevelId] {
+        &self.scan[cpu.0].locality
+    }
+
+    /// The other CPUs' leaf components ordered closest-first (steal
+    /// victim order, "sibling-by-distance").
+    pub fn steal_order(&self, cpu: CpuId) -> &[LevelId] {
+        &self.scan[cpu.0].steal
+    }
+
+    /// Lowest ancestor-or-self of `from` that covers `cpu` (where work
+    /// pulled from `from` towards `cpu` is hoisted to). Precomputed.
+    pub fn hoist_towards(&self, from: LevelId, cpu: CpuId) -> LevelId {
+        self.scan[cpu.0].hoist[from.0]
     }
 
     /// NUMA domain of a CPU.

@@ -1,6 +1,6 @@
 //! Machine presets matching the paper's testbeds.
 
-use super::{LevelKind, TopoBuilder, Topology};
+use super::{LevelId, LevelKind, TopoBuilder, TopoNode, Topology};
 
 impl Topology {
     /// Flat SMP with `n` identical processors (paper §2.2 setting).
@@ -45,12 +45,48 @@ impl Topology {
             .expect("deep preset")
     }
 
+    /// An *asymmetric* machine (real deployments are rarely uniform:
+    /// think a big.LITTLE-style part or a partially-populated NUMA
+    /// board). Node 0 holds four plain cores; node 1 holds a single
+    /// SMT-capable core with two logical CPUs — 6 CPUs total, covering
+    /// chains of different lengths. Exercises scan-order precomputation
+    /// on non-uniform trees.
+    pub fn asym() -> Topology {
+        let node = |kind, parent, children, depth, cpu_first, cpu_count| TopoNode {
+            kind,
+            parent,
+            children,
+            depth,
+            cpu_first,
+            cpu_count,
+        };
+        let l = |i: usize| LevelId(i);
+        let nodes = vec![
+            // 0: machine root over cpus 0..6
+            node(LevelKind::Machine, None, vec![l(1), l(2)], 0, 0, 6),
+            // 1: numa node with four single-CPU cores
+            node(LevelKind::NumaNode, Some(l(0)), vec![l(3), l(4), l(5), l(6)], 1, 0, 4),
+            // 2: numa node with one SMT core
+            node(LevelKind::NumaNode, Some(l(0)), vec![l(7)], 1, 4, 2),
+            node(LevelKind::Core, Some(l(1)), vec![], 2, 0, 1),
+            node(LevelKind::Core, Some(l(1)), vec![], 2, 1, 1),
+            node(LevelKind::Core, Some(l(1)), vec![], 2, 2, 1),
+            node(LevelKind::Core, Some(l(1)), vec![], 2, 3, 1),
+            // 7: SMT-capable core on node 1
+            node(LevelKind::Core, Some(l(2)), vec![l(8), l(9)], 2, 4, 2),
+            node(LevelKind::Smt, Some(l(7)), vec![], 3, 4, 1),
+            node(LevelKind::Smt, Some(l(7)), vec![], 3, 5, 1),
+        ];
+        Topology::from_parts("asym".into(), nodes).expect("asym preset")
+    }
+
     /// Look a preset up by name (CLI `--machine`).
     pub fn preset(name: &str) -> Option<Topology> {
         match name {
             "xeon-2x-ht" | "xeon" => Some(Topology::xeon_2x_ht()),
             "numa-4x4" | "novascale" => Some(Topology::numa(4, 4)),
             "deep" => Some(Topology::deep()),
+            "asym" => Some(Topology::asym()),
             _ => {
                 if let Some(n) = name.strip_prefix("smp-") {
                     n.parse().ok().map(Topology::smp)
@@ -68,7 +104,7 @@ impl Topology {
 
     /// Names of the named presets (for CLI help).
     pub fn preset_names() -> &'static [&'static str] {
-        &["xeon-2x-ht", "numa-4x4", "deep", "smp-<n>", "numa-<a>x<b>"]
+        &["xeon-2x-ht", "numa-4x4", "deep", "asym", "smp-<n>", "numa-<a>x<b>"]
     }
 }
 
@@ -84,6 +120,20 @@ mod tests {
         assert_eq!(Topology::preset("smp-12").unwrap().n_cpus(), 12);
         assert_eq!(Topology::preset("numa-2x8").unwrap().n_cpus(), 16);
         assert!(Topology::preset("warp-drive").is_none());
+    }
+
+    #[test]
+    fn asym_preset_shape() {
+        use crate::topology::CpuId;
+        let t = Topology::asym();
+        assert_eq!(t.n_cpus(), 6);
+        assert_eq!(t.n_numa(), 2);
+        assert_eq!(t.n_components(), 10);
+        // Covering chains have different lengths on the two nodes.
+        assert_eq!(t.covering(CpuId(0)).len(), 3);
+        assert_eq!(t.covering(CpuId(5)).len(), 4);
+        assert!(t.smt_sibling(CpuId(4)).is_some());
+        assert!(t.smt_sibling(CpuId(0)).is_none());
     }
 
     #[test]

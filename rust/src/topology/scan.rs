@@ -1,0 +1,137 @@
+//! Precomputed per-CPU scan orders (the traversal substrate of the
+//! scheduling-primitives core, `crate::sched::core`).
+//!
+//! The scheduler hot path never walks the component tree: every order a
+//! policy might scan is computed **once** at topology construction and
+//! served as a slice afterwards.
+//!
+//! Per CPU we precompute:
+//!
+//! * `descent` — the covering chain root → leaf (the path a bubble rides
+//!   down towards the CPU, Figure 3 of the paper);
+//! * `locality` — *every* component, most local first: the covering
+//!   chain (leaf → root) followed by all non-covering components
+//!   ordered by hierarchical distance (how far up the chain one must go
+//!   before covering this CPU), ties broken by component id (BFS order,
+//!   so shallower siblings come before their descendants);
+//! * `steal` — the other CPUs' leaf components ordered by hierarchical
+//!   separation (closest victims first, "sibling-by-distance");
+//! * `hoist` — for every component `c`, the lowest ancestor-or-self of
+//!   `c` that covers this CPU (where a task is hoisted to when this CPU
+//!   pulls remote work towards itself).
+
+use super::{CpuId, LevelId, Topology};
+
+/// All precomputed scan orders of one CPU.
+#[derive(Debug, Clone)]
+pub struct ScanOrder {
+    /// Covering chain, root → leaf.
+    pub descent: Vec<LevelId>,
+    /// Every component, most local first (covering chain is the prefix).
+    pub locality: Vec<LevelId>,
+    /// Other CPUs' leaf components, closest first.
+    pub steal: Vec<LevelId>,
+    /// `hoist[c]` = lowest ancestor-or-self of component `c` covering
+    /// this CPU (the root always qualifies).
+    pub hoist: Vec<LevelId>,
+}
+
+/// Build the scan orders for every CPU. Called once from
+/// [`Topology::from_parts`]; `topo.scan` itself is not read here.
+pub(crate) fn build_orders(topo: &Topology) -> Vec<ScanOrder> {
+    (0..topo.n_cpus()).map(|c| build_one(topo, CpuId(c))).collect()
+}
+
+fn build_one(topo: &Topology, cpu: CpuId) -> ScanOrder {
+    let covering: Vec<LevelId> = topo.covering(cpu).to_vec();
+    let descent: Vec<LevelId> = covering.iter().rev().copied().collect();
+
+    // Hoist targets: walk parents until a component covers the CPU.
+    let n_comp = topo.n_components();
+    let mut hoist = Vec::with_capacity(n_comp);
+    for i in 0..n_comp {
+        let mut cur = LevelId(i);
+        while !topo.node(cur).covers(cpu) {
+            match topo.node(cur).parent {
+                Some(p) => cur = p,
+                None => break,
+            }
+        }
+        hoist.push(cur);
+    }
+
+    // Locality: covering chain first, then the rest by (distance, id).
+    let leaf_depth = topo.node(topo.leaf_of(cpu)).depth;
+    let mut rest: Vec<(usize, usize)> = topo
+        .components()
+        .filter(|(_, n)| !n.covers(cpu))
+        .map(|(l, _)| {
+            let anchor = hoist[l.0];
+            (leaf_depth - topo.node(anchor).depth, l.0)
+        })
+        .collect();
+    rest.sort_unstable();
+    let mut locality = covering;
+    locality.extend(rest.into_iter().map(|(_, id)| LevelId(id)));
+
+    // Steal order: other CPUs' leaves, closest (then lowest id) first.
+    let mut victims: Vec<(usize, usize)> = (0..topo.n_cpus())
+        .filter(|&c| c != cpu.0)
+        .map(|c| (topo.separation(cpu, CpuId(c)), c))
+        .collect();
+    victims.sort_unstable();
+    let steal = victims.into_iter().map(|(_, c)| topo.leaf_of(CpuId(c))).collect();
+
+    ScanOrder { descent, locality, steal, hoist }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locality_prefix_is_covering_chain() {
+        let t = Topology::deep();
+        for c in 0..t.n_cpus() {
+            let cpu = CpuId(c);
+            let chain = t.covering(cpu);
+            let loc = t.locality_order(cpu);
+            assert_eq!(&loc[..chain.len()], chain);
+            assert_eq!(loc.len(), t.n_components());
+        }
+    }
+
+    #[test]
+    fn descent_is_reverse_covering() {
+        let t = Topology::numa(2, 2);
+        for c in 0..t.n_cpus() {
+            let cpu = CpuId(c);
+            let mut rev: Vec<LevelId> = t.covering(cpu).to_vec();
+            rev.reverse();
+            assert_eq!(t.descent_order(cpu), &rev[..]);
+        }
+    }
+
+    #[test]
+    fn steal_order_is_distance_sorted() {
+        let t = Topology::numa(2, 2);
+        let order = t.steal_order(CpuId(0));
+        assert_eq!(order.len(), 3);
+        // cpu1 (same node) before cpus 2 and 3 (other node).
+        assert_eq!(order[0], t.leaf_of(CpuId(1)));
+        assert_eq!(order[1], t.leaf_of(CpuId(2)));
+        assert_eq!(order[2], t.leaf_of(CpuId(3)));
+    }
+
+    #[test]
+    fn hoist_reaches_lowest_covering_ancestor() {
+        let t = Topology::numa(2, 2);
+        let cpu = CpuId(0);
+        // Hoisting cpu3's leaf towards cpu0 lands on the root.
+        assert_eq!(t.hoist_towards(t.leaf_of(CpuId(3)), cpu), t.root());
+        // Hoisting cpu1's leaf towards cpu0 lands on the shared node.
+        assert_eq!(t.hoist_towards(t.leaf_of(CpuId(1)), cpu), t.lca(CpuId(0), CpuId(1)));
+        // A component already covering the CPU hoists to itself.
+        assert_eq!(t.hoist_towards(t.leaf_of(cpu), cpu), t.leaf_of(cpu));
+    }
+}

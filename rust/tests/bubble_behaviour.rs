@@ -1,0 +1,475 @@
+//! Behavioural suite of the bubble scheduler (moved out of
+//! `src/sched/bubble.rs` when its mechanics were extracted into
+//! `sched::core`): Figure-1 gang priorities, Figure-3 evolution,
+//! Figure-4 late insertion, §3.3.3 regeneration, §4 accounting.
+
+use std::sync::Arc;
+
+use bubbles::marcel::Marcel;
+use bubbles::sched::{BubbleConfig, BubbleScheduler, Scheduler, StopReason, System};
+use bubbles::task::{BubblePhase, BurstLevel, TaskId, TaskState, PRIO_BUBBLE, PRIO_THREAD};
+use bubbles::topology::{CpuId, LevelKind, Topology};
+use bubbles::trace::Event;
+
+fn system(topo: Topology) -> Arc<System> {
+    Arc::new(System::new(Arc::new(topo)))
+}
+
+fn spawn_threads(sys: &System, sched: &dyn Scheduler, n: usize) -> Vec<TaskId> {
+    (0..n)
+        .map(|i| {
+            let t = sys.tasks.new_thread(format!("w{i}"), PRIO_THREAD);
+            sched.wake(sys, t);
+            t
+        })
+        .collect()
+}
+
+fn drain_cpu(sys: &System, sched: &dyn Scheduler, cpu: CpuId) -> Vec<TaskId> {
+    let mut order = Vec::new();
+    while let Some(t) = sched.pick(sys, cpu) {
+        assert_eq!(sys.tasks.state(t), TaskState::Running { cpu });
+        order.push(t);
+        sched.stop(sys, cpu, t, StopReason::Terminate);
+    }
+    order
+}
+
+fn sched() -> BubbleScheduler {
+    BubbleScheduler::new(BubbleConfig::default())
+}
+
+#[test]
+fn plain_threads_round_trip() {
+    let sys = system(Topology::smp(2));
+    let s = sched();
+    let ts = spawn_threads(&sys, &s, 3);
+    let order = drain_cpu(&sys, &s, CpuId(0));
+    assert_eq!(order, ts);
+    assert!(s.pick(&sys, CpuId(0)).is_none());
+}
+
+#[test]
+fn yield_requeues_to_same_list() {
+    let sys = system(Topology::smp(2));
+    let s = sched();
+    let ts = spawn_threads(&sys, &s, 1);
+    let t = s.pick(&sys, CpuId(0)).unwrap();
+    assert_eq!(t, ts[0]);
+    s.stop(&sys, CpuId(0), t, StopReason::Yield);
+    assert!(sys.tasks.state(t).is_ready());
+    let t2 = s.pick(&sys, CpuId(0)).unwrap();
+    assert_eq!(t2, t);
+}
+
+#[test]
+fn bubble_descends_and_bursts_at_numa_level() {
+    let sys = system(Topology::numa(2, 2));
+    let s = sched();
+    let m = Marcel::with_system(&sys);
+    let b = m.bubble_init();
+    let t1 = m.create_dontsched("a");
+    let t2 = m.create_dontsched("b");
+    m.bubble_inserttask(b, t1);
+    m.bubble_inserttask(b, t2);
+    sys.trace.set_enabled(true);
+    s.wake(&sys, b);
+    // cpu0 picks: bubble descends from root to numa0, bursts there,
+    // then cpu0 gets a thread.
+    let got = s.pick(&sys, CpuId(0)).unwrap();
+    assert!(got == t1 || got == t2);
+    // The burst must have happened on the NUMA-node list (depth 1).
+    let records = sys.trace.records();
+    let burst_list = records
+        .iter()
+        .find_map(|r| match r.event {
+            Event::Burst { list, .. } => Some(list),
+            _ => None,
+        })
+        .expect("no burst traced");
+    assert_eq!(sys.topo.node(burst_list).depth, 1);
+    assert_eq!(sys.topo.node(burst_list).kind, LevelKind::NumaNode);
+    // The second thread is visible to cpu1 (same node).
+    let got2 = s.pick(&sys, CpuId(1)).unwrap();
+    assert!(got2 == t1 || got2 == t2);
+    assert_ne!(got, got2);
+}
+
+#[test]
+fn burst_level_leaf_rides_to_cpu_list() {
+    let sys = system(Topology::numa(2, 2));
+    let s = BubbleScheduler::new(BubbleConfig {
+        default_burst: BurstLevel::Leaf,
+        ..BubbleConfig::default()
+    });
+    let m = Marcel::with_system(&sys);
+    let b = m.bubble_init();
+    let t1 = m.create_dontsched("a");
+    m.bubble_inserttask(b, t1);
+    sys.trace.set_enabled(true);
+    s.wake(&sys, b);
+    let got = s.pick(&sys, CpuId(3)).unwrap();
+    assert_eq!(got, t1);
+    let burst_list = sys
+        .trace
+        .records()
+        .iter()
+        .find_map(|r| match r.event {
+            Event::Burst { list, .. } => Some(list),
+            _ => None,
+        })
+        .unwrap();
+    assert_eq!(burst_list, sys.topo.leaf_of(CpuId(3)));
+}
+
+#[test]
+fn higher_priority_task_wins_over_fifo_order() {
+    let sys = system(Topology::numa(2, 2));
+    let s = sched();
+    let lo = sys.tasks.new_thread("lo", PRIO_THREAD);
+    let hi = sys.tasks.new_thread("hi", bubbles::task::PRIO_HIGH);
+    s.wake(&sys, lo);
+    s.wake(&sys, hi);
+    let got = s.pick(&sys, CpuId(0)).unwrap();
+    assert_eq!(got, hi, "high priority wins despite FIFO order");
+}
+
+#[test]
+fn local_list_wins_priority_ties() {
+    let sys = system(Topology::numa(2, 2));
+    let s = sched();
+    let global = sys.tasks.new_thread("global", PRIO_THREAD);
+    let local = sys.tasks.new_thread("local", PRIO_THREAD);
+    s.wake(&sys, global); // root list
+    // Place `local` directly on cpu0's leaf list.
+    sys.tasks.with(local, |t| t.last_list = Some(sys.topo.leaf_of(CpuId(0))));
+    s.wake(&sys, local);
+    let got = s.pick(&sys, CpuId(0)).unwrap();
+    assert_eq!(got, local, "ties must prefer the most local list");
+}
+
+#[test]
+fn empty_bubble_terminates_on_burst() {
+    let sys = system(Topology::smp(2));
+    let s = sched();
+    let m = Marcel::with_system(&sys);
+    let b = m.bubble_init();
+    s.wake(&sys, b);
+    assert!(s.pick(&sys, CpuId(0)).is_none());
+    assert_eq!(sys.tasks.state(b), TaskState::Terminated);
+}
+
+#[test]
+fn thread_terminations_terminate_bubble() {
+    let sys = system(Topology::smp(2));
+    let s = sched();
+    let m = Marcel::with_system(&sys);
+    let b = m.bubble_init();
+    let t1 = m.create_dontsched("a");
+    let t2 = m.create_dontsched("b");
+    m.bubble_inserttask(b, t1);
+    m.bubble_inserttask(b, t2);
+    s.wake(&sys, b);
+    let a = s.pick(&sys, CpuId(0)).unwrap();
+    let c = s.pick(&sys, CpuId(1)).unwrap();
+    s.stop(&sys, CpuId(0), a, StopReason::Terminate);
+    assert_ne!(sys.tasks.state(b), TaskState::Terminated);
+    s.stop(&sys, CpuId(1), c, StopReason::Terminate);
+    assert_eq!(sys.tasks.state(b), TaskState::Terminated);
+}
+
+#[test]
+fn figure4_insert_after_wake() {
+    // Figure 4 inserts thread2 *after* wake_up_bubble: the late
+    // insertion must land on the burst bubble's home list.
+    let sys = system(Topology::smp(2));
+    let s = sched();
+    let m = Marcel::with_system(&sys);
+    let b = m.bubble_init();
+    let t1 = m.create_dontsched("t1");
+    m.bubble_inserttask(b, t1);
+    s.wake(&sys, b);
+    let got1 = s.pick(&sys, CpuId(0)).unwrap();
+    assert_eq!(got1, t1);
+    // Late insertion.
+    let t2 = m.create_dontsched("t2");
+    m.bubble_inserttask(b, t2);
+    s.wake(&sys, t2);
+    let got2 = s.pick(&sys, CpuId(1)).unwrap();
+    assert_eq!(got2, t2);
+    // Both must terminate the bubble.
+    s.stop(&sys, CpuId(0), t1, StopReason::Terminate);
+    s.stop(&sys, CpuId(1), t2, StopReason::Terminate);
+    assert_eq!(sys.tasks.state(b), TaskState::Terminated);
+}
+
+#[test]
+fn gang_scheduling_via_priorities() {
+    // Figure 1: two pair-bubbles under a root bubble; threads
+    // prioritised over bubbles. With 2 CPUs, the first burst pair
+    // must fully occupy the machine before the second bubble bursts.
+    let sys = system(Topology::smp(2));
+    let s = BubbleScheduler::new(BubbleConfig {
+        default_burst: BurstLevel::Immediate,
+        ..BubbleConfig::default()
+    });
+    let m = Marcel::with_system(&sys);
+    let root = m.bubble_init();
+    let b1 = m.bubble_init();
+    let b2 = m.bubble_init();
+    let p1a = m.create_dontsched("p1a");
+    let p1b = m.create_dontsched("p1b");
+    let p2a = m.create_dontsched("p2a");
+    let p2b = m.create_dontsched("p2b");
+    m.bubble_inserttask(b1, p1a);
+    m.bubble_inserttask(b1, p1b);
+    m.bubble_inserttask(b2, p2a);
+    m.bubble_inserttask(b2, p2b);
+    m.bubble_insertbubble(root, b1);
+    m.bubble_insertbubble(root, b2);
+    s.wake(&sys, root);
+    let x = s.pick(&sys, CpuId(0)).unwrap();
+    let y = s.pick(&sys, CpuId(1)).unwrap();
+    let first: std::collections::BTreeSet<TaskId> = [x, y].into();
+    // Must both come from the same pair-bubble (gang!).
+    assert!(
+        first == [p1a, p1b].into() || first == [p2a, p2b].into(),
+        "first gang mixed: {first:?}"
+    );
+}
+
+#[test]
+fn timeslice_regen_rotates_gangs() {
+    let sys = system(Topology::smp(2));
+    let s = BubbleScheduler::new(BubbleConfig {
+        default_burst: BurstLevel::Immediate,
+        default_timeslice: Some(100),
+        ..BubbleConfig::default()
+    });
+    let m = Marcel::with_system(&sys);
+    let root = m.bubble_init();
+    let mk_pair = |tag: &str| {
+        let b = m.bubble_init();
+        let x = m.create_dontsched(format!("{tag}a"));
+        let y = m.create_dontsched(format!("{tag}b"));
+        m.bubble_inserttask(b, x);
+        m.bubble_inserttask(b, y);
+        (b, x, y)
+    };
+    let (b1, _p1a, _p1b) = mk_pair("p1");
+    let (b2, _p2a, _p2b) = mk_pair("p2");
+    m.bubble_insertbubble(root, b1);
+    m.bubble_insertbubble(root, b2);
+    s.wake(&sys, root);
+    let x = s.pick(&sys, CpuId(0)).unwrap();
+    let y = s.pick(&sys, CpuId(1)).unwrap();
+    let gang1: std::collections::BTreeSet<TaskId> = [x, y].into();
+    // Burn the gang's timeslice.
+    let preempt_x = s.tick(&sys, CpuId(0), x, 60);
+    let preempt_y = s.tick(&sys, CpuId(1), y, 60);
+    assert!(preempt_x || preempt_y, "timeslice must trigger");
+    s.stop(&sys, CpuId(0), x, StopReason::Preempt);
+    s.stop(&sys, CpuId(1), y, StopReason::Preempt);
+    // Next picks must be the *other* gang.
+    let x2 = s.pick(&sys, CpuId(0)).unwrap();
+    let y2 = s.pick(&sys, CpuId(1)).unwrap();
+    let gang2: std::collections::BTreeSet<TaskId> = [x2, y2].into();
+    assert!(gang2.is_disjoint(&gang1), "gangs must rotate: {gang1:?} vs {gang2:?}");
+}
+
+#[test]
+fn idle_regen_rebalances_across_nodes() {
+    let sys = system(Topology::numa(2, 1)); // 2 nodes, 1 cpu each
+    let s = BubbleScheduler::new(BubbleConfig {
+        regen_hysteresis: 0,
+        thread_steal: false,
+        ..BubbleConfig::default()
+    });
+    let m = Marcel::with_system(&sys);
+    let b = m.bubble_init();
+    let ts: Vec<TaskId> = (0..4).map(|i| m.create_dontsched(format!("w{i}"))).collect();
+    for &t in &ts {
+        m.bubble_inserttask(b, t);
+    }
+    s.wake(&sys, b);
+    // cpu0 pulls the bubble to node 0 and bursts it there.
+    let t0 = s.pick(&sys, CpuId(0)).unwrap();
+    // cpu1 (other node) sees nothing; its pick triggers a
+    // corrective regeneration, which per §4 must wait for the
+    // running thread before the bubble can move up.
+    assert!(s.pick(&sys, CpuId(1)).is_none());
+    assert!(sys.metrics.regenerations.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+    // The running thread finishes — "the last thread closes the
+    // bubble and moves it up".
+    s.stop(&sys, CpuId(0), t0, StopReason::Terminate);
+    // Now cpu1 can pull the bubble down on its side and re-burst.
+    let t1 = s.pick(&sys, CpuId(1)).expect("rebalanced work");
+    assert_ne!(t0, t1);
+    assert_eq!(sys.tasks.state(t1), TaskState::Running { cpu: CpuId(1) });
+}
+
+#[test]
+fn thread_steal_fallback() {
+    let sys = system(Topology::numa(2, 1));
+    let s = BubbleScheduler::new(BubbleConfig {
+        idle_regen: false,
+        thread_steal: true,
+        ..BubbleConfig::default()
+    });
+    // A loose thread stuck on cpu0's leaf list.
+    let t = sys.tasks.new_thread("lone", PRIO_THREAD);
+    sys.tasks.with(t, |x| x.last_list = Some(sys.topo.leaf_of(CpuId(0))));
+    s.wake(&sys, t);
+    // cpu1 can't see that list; stealing must save it.
+    let got = s.pick(&sys, CpuId(1)).unwrap();
+    assert_eq!(got, t);
+    assert_eq!(sys.metrics.steals.load(std::sync::atomic::Ordering::Relaxed), 1);
+}
+
+#[test]
+fn blocked_thread_wakes_back_to_home_list() {
+    let sys = system(Topology::numa(2, 2));
+    let s = sched();
+    let m = Marcel::with_system(&sys);
+    let b = m.bubble_init();
+    let t1 = m.create_dontsched("a");
+    let t2 = m.create_dontsched("b");
+    m.bubble_inserttask(b, t1);
+    m.bubble_inserttask(b, t2);
+    s.wake(&sys, b);
+    let x = s.pick(&sys, CpuId(0)).unwrap();
+    s.stop(&sys, CpuId(0), x, StopReason::Block);
+    assert_eq!(sys.tasks.state(x), TaskState::Blocked);
+    s.wake(&sys, x);
+    assert!(sys.tasks.state(x).is_ready());
+    // It must be back on the bubble's home list (numa node 0).
+    let list = sys.tasks.state(x).ready_list().unwrap();
+    assert_eq!(sys.topo.node(list).kind, LevelKind::NumaNode);
+}
+
+#[test]
+fn wake_into_closed_bubble_is_not_dropped() {
+    // Regression: a member blocks, its bubble regenerates and *closes*,
+    // then the member wakes. The wake must return it to the held
+    // population (InBubble) so the next burst releases it — leaving it
+    // Blocked would lose the thread forever.
+    let sys = system(Topology::smp(2));
+    let s = BubbleScheduler::new(BubbleConfig {
+        default_burst: BurstLevel::Immediate,
+        default_timeslice: Some(100),
+        ..BubbleConfig::default()
+    });
+    let m = Marcel::with_system(&sys);
+    let b = m.bubble_init();
+    let t1 = m.create_dontsched("t1");
+    let t2 = m.create_dontsched("t2");
+    m.bubble_inserttask(b, t1);
+    m.bubble_inserttask(b, t2);
+    s.wake(&sys, b);
+    let x = s.pick(&sys, CpuId(0)).unwrap();
+    let y = s.pick(&sys, CpuId(1)).unwrap();
+    // One member blocks…
+    s.stop(&sys, CpuId(0), x, StopReason::Block);
+    // …the bubble's timeslice expires: preventive regeneration closes
+    // it once the remaining runner returns.
+    assert!(s.tick(&sys, CpuId(1), y, 150));
+    s.stop(&sys, CpuId(1), y, StopReason::Preempt);
+    assert_eq!(sys.tasks.with(b, |t| t.bubble_data().phase), BubblePhase::Closed);
+    // Now the blocked member wakes into the closed bubble.
+    s.wake(&sys, x);
+    assert_eq!(sys.tasks.state(x), TaskState::InBubble, "wake must not be dropped");
+    // The next bursts must release *both* members; drain everything.
+    let mut seen = std::collections::BTreeSet::new();
+    for round in 0..20 {
+        let cpu = CpuId(round % 2);
+        if let Some(t) = s.pick(&sys, cpu) {
+            seen.insert(t);
+            s.stop(&sys, cpu, t, StopReason::Terminate);
+        }
+    }
+    assert_eq!(seen, [t1, t2].into(), "both members must run to completion");
+    assert_eq!(sys.tasks.state(b), TaskState::Terminated);
+}
+
+#[test]
+fn no_task_lost_under_chaotic_schedule() {
+    // Property: every created thread is eventually picked and
+    // terminated; nothing vanishes.
+    use bubbles::util::proptest::check;
+    check(0xb0b, 25, |rng| {
+        let topo = match rng.below(3) {
+            0 => Topology::smp(4),
+            1 => Topology::numa(2, 2),
+            _ => Topology::deep(),
+        };
+        let n_cpus = topo.n_cpus();
+        let sys = system(topo);
+        let s = BubbleScheduler::new(BubbleConfig {
+            regen_hysteresis: 0,
+            ..Default::default()
+        });
+        let m = Marcel::with_system(&sys);
+        let mut all_threads = Vec::new();
+        for bi in 0..rng.range(1, 4) {
+            let b = m.bubble_init();
+            for ti in 0..rng.range(1, 5) {
+                let t = m.create_dontsched(format!("b{bi}t{ti}"));
+                m.bubble_inserttask(b, t);
+                all_threads.push(t);
+            }
+            s.wake(&sys, b);
+        }
+        for i in 0..rng.range(0, 3) {
+            let t = sys.tasks.new_thread(format!("loose{i}"), PRIO_THREAD);
+            s.wake(&sys, t);
+            all_threads.push(t);
+        }
+        let mut remaining: std::collections::HashSet<TaskId> =
+            all_threads.iter().copied().collect();
+        let mut fuel = 10_000;
+        while !remaining.is_empty() && fuel > 0 {
+            fuel -= 1;
+            let cpu = CpuId(rng.range(0, n_cpus));
+            if let Some(t) = s.pick(&sys, cpu) {
+                if rng.chance(0.3) {
+                    s.stop(&sys, cpu, t, StopReason::Yield);
+                } else {
+                    s.stop(&sys, cpu, t, StopReason::Terminate);
+                    remaining.remove(&t);
+                }
+            }
+        }
+        assert!(remaining.is_empty(), "lost tasks: {remaining:?}");
+    });
+}
+
+#[test]
+fn bubble_priority_below_thread_keeps_machine_busy() {
+    // Paper Figure 1 rationale: a bubble bursts only when running
+    // threads can no longer occupy all processors.
+    let sys = system(Topology::smp(2));
+    let s = BubbleScheduler::new(BubbleConfig {
+        default_burst: BurstLevel::Immediate,
+        ..Default::default()
+    });
+    let m = Marcel::with_system(&sys);
+    let a = sys.tasks.new_thread("a", PRIO_THREAD);
+    let bt = sys.tasks.new_thread("b", PRIO_THREAD);
+    s.wake(&sys, a);
+    s.wake(&sys, bt);
+    let bub = m.bubble_init();
+    let c = m.create_dontsched("c");
+    let d = m.create_dontsched("d");
+    m.bubble_inserttask(bub, c);
+    m.bubble_inserttask(bub, d);
+    s.wake(&sys, bub);
+    let x = s.pick(&sys, CpuId(0)).unwrap();
+    let y = s.pick(&sys, CpuId(1)).unwrap();
+    assert_eq!(
+        std::collections::BTreeSet::from([x, y]),
+        std::collections::BTreeSet::from([a, bt]),
+        "threads must be scheduled before the bubble bursts"
+    );
+    assert_eq!(sys.tasks.with(bub, |t| t.bubble_data().phase), BubblePhase::Closed);
+    assert_eq!(sys.tasks.prio(bub), PRIO_BUBBLE);
+}

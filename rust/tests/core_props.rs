@@ -1,0 +1,322 @@
+//! Property tests over the scheduling-primitives core
+//! (`bubbles::sched::core`): scan-order correctness on asymmetric and
+//! deep machines, and task conservation (no lost or duplicated TaskId
+//! across wake/pick/stop/steal) for the bubble scheduler *and* every
+//! baseline, driven through the shared `Scheduler` trait.
+
+use std::sync::Arc;
+
+use bubbles::config::SchedKind;
+use bubbles::sched::factory;
+use bubbles::sched::{Scheduler, StopReason, System};
+use bubbles::task::{TaskId, TaskState, PRIO_THREAD};
+use bubbles::topology::{CpuId, LevelId, Topology};
+use bubbles::util::proptest::check;
+use bubbles::util::Rng;
+
+fn zoo() -> Vec<Topology> {
+    vec![
+        Topology::smp(1),
+        Topology::smp(5),
+        Topology::numa(2, 2),
+        Topology::numa(3, 2),
+        Topology::xeon_2x_ht(),
+        Topology::deep(),
+        Topology::asym(),
+    ]
+}
+
+// ------------------------------------------------------ scan orders
+
+#[test]
+fn scan_orders_cover_exactly_the_machine() {
+    for topo in zoo() {
+        for c in 0..topo.n_cpus() {
+            let cpu = CpuId(c);
+            let chain = topo.covering(cpu);
+            let loc = topo.locality_order(cpu);
+
+            // The covering chain is exactly the most-local prefix…
+            assert_eq!(&loc[..chain.len()], chain, "{}: cpu{c} prefix", topo.name());
+            // …and the covering/non-covering split is exact.
+            for (i, &l) in loc.iter().enumerate() {
+                assert_eq!(
+                    topo.node(l).covers(cpu),
+                    i < chain.len(),
+                    "{}: cpu{c} position {i}",
+                    topo.name()
+                );
+            }
+            // Every component appears exactly once.
+            let mut ids: Vec<usize> = loc.iter().map(|l| l.0).collect();
+            ids.sort_unstable();
+            assert_eq!(ids, (0..topo.n_components()).collect::<Vec<_>>());
+
+            // Beyond the prefix, hierarchical distance never decreases.
+            let leaf_depth = topo.node(topo.leaf_of(cpu)).depth;
+            let dist = |l: LevelId| leaf_depth - topo.node(topo.hoist_towards(l, cpu)).depth;
+            for w in loc[chain.len()..].windows(2) {
+                assert!(
+                    dist(w[0]) <= dist(w[1]),
+                    "{}: cpu{c} locality not distance-sorted",
+                    topo.name()
+                );
+            }
+
+            // Descent is the reversed covering chain.
+            let mut rev: Vec<LevelId> = chain.to_vec();
+            rev.reverse();
+            assert_eq!(topo.descent_order(cpu), &rev[..]);
+
+            // Steal order: every other CPU's leaf exactly once,
+            // separation non-decreasing (closest victims first).
+            let steal = topo.steal_order(cpu);
+            assert_eq!(steal.len(), topo.n_cpus() - 1);
+            let mut leaves: Vec<usize> = steal.iter().map(|l| l.0).collect();
+            leaves.sort_unstable();
+            let mut expect: Vec<usize> = (0..topo.n_cpus())
+                .filter(|&o| o != c)
+                .map(|o| topo.leaf_of(CpuId(o)).0)
+                .collect();
+            expect.sort_unstable();
+            assert_eq!(leaves, expect);
+            let sep = |l: &LevelId| topo.separation(cpu, CpuId(topo.node(*l).cpu_first));
+            for w in steal.windows(2) {
+                assert!(sep(&w[0]) <= sep(&w[1]), "{}: steal order", topo.name());
+            }
+
+            // Hoist targets always cover the CPU and are ancestors.
+            for i in 0..topo.n_components() {
+                let l = LevelId(i);
+                let h = topo.hoist_towards(l, cpu);
+                assert!(topo.node(h).covers(cpu), "{}: hoist covers", topo.name());
+                let mut cur = Some(l);
+                let mut ok = false;
+                while let Some(x) = cur {
+                    if x == h {
+                        ok = true;
+                        break;
+                    }
+                    cur = topo.node(x).parent;
+                }
+                assert!(ok, "{}: hoist target not an ancestor-or-self", topo.name());
+            }
+        }
+    }
+}
+
+// ------------------------------------------------- task conservation
+
+fn conservation_for(kind: SchedKind, rng: &mut Rng) {
+    let topo = {
+        let z = zoo();
+        z[rng.range(0, z.len())].clone()
+    };
+    let n_cpus = topo.n_cpus();
+    let sys = Arc::new(System::new(Arc::new(topo)));
+    let sched = factory::make_default(kind);
+
+    // A forest of bubbles plus loose threads. Opportunist baselines
+    // flatten the bubbles; the bubble scheduler evolves them; gang
+    // treats them as gangs — conservation must hold regardless.
+    let m = bubbles::marcel::Marcel::with_system(&sys);
+    let mut threads = Vec::new();
+    for bi in 0..rng.range(0, 3) {
+        let b = m.bubble_init();
+        for ti in 0..rng.range(1, 4) {
+            let t = m.create_dontsched(format!("b{bi}t{ti}"));
+            m.bubble_inserttask(b, t);
+            threads.push(t);
+        }
+        sched.wake(&sys, b);
+    }
+    for i in 0..rng.range(1, 8) {
+        let t = sys.tasks.new_thread(format!("loose{i}"), PRIO_THREAD);
+        sched.wake(&sys, t);
+        threads.push(t);
+    }
+
+    // Gang wedges on blocked *loose* threads unless a tick rotates the
+    // machine; the chaotic harness runs tickless, so it only blocks
+    // under schedulers with per-CPU progress.
+    let may_block = kind != SchedKind::Gang;
+
+    let mut remaining: std::collections::HashSet<TaskId> = threads.iter().copied().collect();
+    let mut running: Vec<Option<TaskId>> = vec![None; n_cpus];
+    let mut blocked: Vec<TaskId> = Vec::new();
+    let mut fuel = 300 * threads.len().max(1) * n_cpus + 500;
+    while !remaining.is_empty() && fuel > 0 {
+        fuel -= 1;
+        // Occasionally wake a blocked thread.
+        if !blocked.is_empty() && rng.chance(0.3) {
+            let t = blocked.swap_remove(rng.range(0, blocked.len()));
+            sched.wake(&sys, t);
+            continue;
+        }
+        let cpu = rng.range(0, n_cpus);
+        match running[cpu] {
+            Some(t) => {
+                let why = match rng.below(10) {
+                    0..=3 => StopReason::Yield,
+                    4 if may_block => StopReason::Block,
+                    _ => StopReason::Terminate,
+                };
+                sched.stop(&sys, CpuId(cpu), t, why);
+                match why {
+                    StopReason::Terminate => {
+                        remaining.remove(&t);
+                    }
+                    StopReason::Block => blocked.push(t),
+                    _ => {}
+                }
+                running[cpu] = None;
+            }
+            None => {
+                if let Some(t) = sched.pick(&sys, CpuId(cpu)) {
+                    // No duplication: nobody else may hold t.
+                    assert!(
+                        !running.iter().flatten().any(|&r| r == t),
+                        "{kind:?}: double dispatch of {t}"
+                    );
+                    assert_eq!(
+                        sys.tasks.state(t),
+                        TaskState::Running { cpu: CpuId(cpu) },
+                        "{kind:?}: dispatched task not Running"
+                    );
+                    running[cpu] = Some(t);
+                }
+            }
+        }
+        // Drain the blocked pool when it is the only work left.
+        if remaining.iter().all(|t| blocked.contains(t))
+            && running.iter().all(|r| r.is_none())
+        {
+            while let Some(t) = blocked.pop() {
+                sched.wake(&sys, t);
+            }
+        }
+    }
+    // Terminate whatever is still on a CPU, then drain to empty.
+    for (cpu, slot) in running.iter().enumerate() {
+        if let Some(t) = slot {
+            sched.stop(&sys, CpuId(cpu), *t, StopReason::Terminate);
+            remaining.remove(t);
+        }
+    }
+    while let Some(t) = blocked.pop() {
+        sched.wake(&sys, t);
+    }
+    let mut extra = 300 * threads.len().max(1) * n_cpus + 500;
+    while !remaining.is_empty() && extra > 0 {
+        extra -= 1;
+        let cpu = rng.range(0, n_cpus);
+        if let Some(t) = sched.pick(&sys, CpuId(cpu)) {
+            sched.stop(&sys, CpuId(cpu), t, StopReason::Terminate);
+            remaining.remove(&t);
+        }
+    }
+    assert!(
+        remaining.is_empty(),
+        "{kind:?} lost {} of {} tasks on {}",
+        remaining.len(),
+        threads.len(),
+        sys.topo.name()
+    );
+    // Nothing leaks onto the runqueues: all threads terminated.
+    assert_eq!(sys.rq.total_queued(), 0, "{kind:?}: runqueues not drained");
+    for &t in &threads {
+        assert_eq!(sys.tasks.state(t), TaskState::Terminated, "{kind:?}: {t} not terminated");
+    }
+}
+
+#[test]
+fn conservation_bubble() {
+    check(0xc0de01, 25, |rng| conservation_for(SchedKind::Bubble, rng));
+}
+
+#[test]
+fn conservation_ss() {
+    check(0xc0de02, 20, |rng| conservation_for(SchedKind::Ss, rng));
+}
+
+#[test]
+fn conservation_gss() {
+    check(0xc0de03, 20, |rng| conservation_for(SchedKind::Gss, rng));
+}
+
+#[test]
+fn conservation_tss() {
+    check(0xc0de04, 20, |rng| conservation_for(SchedKind::Tss, rng));
+}
+
+#[test]
+fn conservation_afs() {
+    check(0xc0de05, 20, |rng| conservation_for(SchedKind::Afs, rng));
+}
+
+#[test]
+fn conservation_lds() {
+    check(0xc0de06, 20, |rng| conservation_for(SchedKind::Lds, rng));
+}
+
+#[test]
+fn conservation_cafs() {
+    check(0xc0de07, 20, |rng| conservation_for(SchedKind::Cafs, rng));
+}
+
+#[test]
+fn conservation_hafs() {
+    check(0xc0de08, 20, |rng| conservation_for(SchedKind::Hafs, rng));
+}
+
+#[test]
+fn conservation_bound() {
+    check(0xc0de09, 20, |rng| conservation_for(SchedKind::Bound, rng));
+}
+
+#[test]
+fn conservation_gang() {
+    check(0xc0de0a, 20, |rng| conservation_for(SchedKind::Gang, rng));
+}
+
+// ----------------------------------------------- running-count stats
+
+/// The incremental running counters agree with ground truth under a
+/// chaotic schedule.
+#[test]
+fn load_stats_running_counts_stay_consistent() {
+    check(0x57a75, 25, |rng| {
+        let topo = {
+            let z = zoo();
+            z[rng.range(0, z.len())].clone()
+        };
+        let n_cpus = topo.n_cpus();
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        let sched = factory::make_default(SchedKind::Afs);
+        for i in 0..rng.range(1, 12) {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            sched.wake(&sys, t);
+        }
+        let mut running: Vec<Option<TaskId>> = vec![None; n_cpus];
+        for _ in 0..400 {
+            let cpu = rng.range(0, n_cpus);
+            match running[cpu] {
+                Some(t) => {
+                    let why =
+                        if rng.chance(0.5) { StopReason::Yield } else { StopReason::Terminate };
+                    sched.stop(&sys, CpuId(cpu), t, why);
+                    running[cpu] = None;
+                }
+                None => running[cpu] = sched.pick(&sys, CpuId(cpu)),
+            }
+            // Ground truth at every step, for every component.
+            let truth = running.iter().flatten().count();
+            assert_eq!(sys.stats.running(sys.topo.root()), truth);
+            for c in 0..n_cpus {
+                let leaf = sys.topo.leaf_of(CpuId(c));
+                let expect = usize::from(running[c].is_some());
+                assert_eq!(sys.stats.running(leaf), expect, "leaf of cpu{c}");
+            }
+        }
+    });
+}

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use bubbles::config::SchedKind;
 use bubbles::marcel::Marcel;
-use bubbles::sched::baselines::make_default;
+use bubbles::sched::factory::make_default;
 use bubbles::sched::{BubbleConfig, BubbleScheduler, Scheduler, StopReason, System};
 use bubbles::task::{BurstLevel, TaskId, TaskState, PRIO_THREAD};
 use bubbles::topology::{CpuId, Topology};
