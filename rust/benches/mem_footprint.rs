@@ -1,0 +1,96 @@
+//! Memory-subsystem microbench: the registry/footprint hot paths a
+//! memory-aware policy leans on.
+//!
+//! * `touch_homed` — the per-compute-chunk registry touch (stable home,
+//!   no migration): the hottest mem/ path in the simulator.
+//! * `touch_next_touch_pingpong` — worst-case next-touch migration:
+//!   every touch re-homes the region across nodes.
+//! * `attach_depth4` — footprint attribution up a 4-deep bubble chain.
+//! * `dominant_node` — the policy-side placement query.
+//!
+//! Results print as a table *and* land in `BENCH_mem.json` (same shape
+//! as `BENCH_rq.json`), so CI accumulates the perf trajectory. Honors
+//! `BENCH_FAST=1` for smoke runs.
+
+use std::sync::Arc;
+
+use bubbles::bench::{black_box, Bench};
+use bubbles::marcel::Marcel;
+use bubbles::mem::AllocPolicy;
+use bubbles::sched::System;
+use bubbles::topology::{CpuId, Topology};
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let sys = Arc::new(System::new(Arc::new(Topology::numa(4, 4))));
+    let m = Marcel::with_system(&sys);
+
+    // A 4-deep bubble chain: root > mid > leafb > thread.
+    let root = m.bubble_init();
+    let mid = m.bubble_init();
+    let leafb = m.bubble_init();
+    let t = m.create_dontsched("worker");
+    let t2 = m.create_dontsched("worker2");
+    m.bubble_insertbubble(root, mid);
+    m.bubble_insertbubble(mid, leafb);
+    m.bubble_inserttask(leafb, t);
+    m.bubble_inserttask(leafb, t2);
+
+    let homed = m.region_alloc(1 << 20, AllocPolicy::Fixed(0));
+    m.attach_region(t, homed);
+    let pingpong = m.region_alloc(1 << 20, AllocPolicy::Fixed(0));
+    m.attach_region(t, pingpong);
+
+    let mut b = Bench::new("mem_footprint");
+
+    b.bench("touch_homed", || {
+        // cpu0 is on node 0 == the region's home: stable-state touch.
+        black_box(sys.mem.touch(&sys.tasks, &sys.topo, homed, CpuId(0)));
+    });
+
+    let mut flip = false;
+    b.bench("touch_next_touch_pingpong", || {
+        // Alternate nodes with the mark always set: every touch
+        // migrates and re-attributes the footprint up the chain.
+        sys.mem.mark_next_touch(pingpong);
+        let cpu = if flip { CpuId(0) } else { CpuId(15) };
+        flip = !flip;
+        black_box(sys.mem.touch(&sys.tasks, &sys.topo, pingpong, cpu));
+    });
+
+    let mut who = false;
+    b.bench("attach_depth4", || {
+        // Bounce ownership between two deep threads: one sub + one add
+        // walk of the 4-deep bubble chain per call.
+        let owner = if who { t } else { t2 };
+        who = !who;
+        sys.mem.attach(&sys.tasks, owner, homed);
+    });
+
+    b.bench("dominant_node", || {
+        black_box(sys.mem.dominant_node(root));
+    });
+
+    b.report();
+
+    let rows: Vec<String> = b
+        .results()
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"name\":\"{}\",\"mean_ns\":{:.1},\"median_ns\":{:.1},\"p95_ns\":{:.1}}}",
+                r.name, r.summary.mean, r.summary.median, r.summary.p95
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"mem_footprint\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"results\": [{}]\n}}\n",
+        if fast { "fast" } else { "full" },
+        sys.topo.name(),
+        rows.join(",")
+    );
+    match std::fs::write("BENCH_mem.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_mem.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_mem.json: {e}"),
+    }
+}

@@ -64,4 +64,21 @@ mod tests {
         );
         assert!(su_light > 6.0, "still a real speedup: {su_light}");
     }
+
+    #[test]
+    fn advection_runs_under_memaware_with_conserved_footprint() {
+        use crate::config::SchedKind;
+        use crate::sched::factory::make_default;
+        let topo = crate::topology::Topology::numa(2, 2);
+        let p = HeatParams { threads: 8, cycles: 6, ..HeatParams::advection() };
+        let mut e = crate::apps::engine_with(
+            &topo,
+            make_default(SchedKind::Memaware),
+            crate::sim::SimConfig::default(),
+        );
+        build(&mut e, Simple, &p);
+        let rep = e.run().unwrap();
+        assert!(rep.total_time > 0);
+        assert!(e.sys.mem.conserved(&e.sys.tasks));
+    }
 }

@@ -84,7 +84,11 @@ pub fn work_table(p: &AmrParams) -> Vec<Vec<u64>> {
 pub fn build(engine: &mut SimEngine, mode: StructureMode, p: &AmrParams) -> Vec<TaskId> {
     let table = work_table(p);
     let barrier = engine.alloc_barrier(p.threads);
-    let regions: Vec<_> = (0..p.threads).map(|_| engine.alloc_region()).collect();
+    // AMR refinement data is small relative to the arithmetic on it:
+    // declare a modest region per stripe.
+    let regions: Vec<_> = (0..p.threads)
+        .map(|_| engine.alloc_region_sized(1 << 20, crate::sim::AllocPolicy::FirstTouch))
+        .collect();
     let program = |i: usize, r| {
         let mut prog = Program::new();
         for c in 0..p.cycles {
@@ -97,6 +101,7 @@ pub fn build(engine: &mut SimEngine, mode: StructureMode, p: &AmrParams) -> Vec<
             let mut out = Vec::new();
             for (i, &r) in regions.iter().enumerate() {
                 let t = engine.add_thread(format!("amr{i}"), PRIO_THREAD, program(i, r));
+                engine.attach_region(t, r);
                 engine.wake(t);
                 out.push(t);
             }
@@ -109,6 +114,7 @@ pub fn build(engine: &mut SimEngine, mode: StructureMode, p: &AmrParams) -> Vec<
             let (root, threads) = m.bubbles_from_topology(&names);
             for (i, (&t, &r)) in threads.iter().zip(regions.iter()).enumerate() {
                 engine.set_program(t, program(i, r));
+                m.attach_region(t, r);
             }
             engine.wake(root);
             threads
@@ -197,6 +203,7 @@ pub fn build_skewed(engine: &mut SimEngine, p: &SkewParams) -> Vec<TaskId> {
                 let t = m.create_dontsched(format!("skew-n{node}-b{b}-t{k}"));
                 m.bubble_inserttask(bubble, t);
                 let r = engine.alloc_region();
+                m.attach_region(t, r);
                 let mut prog = Program::new();
                 for _ in 0..p.chunks {
                     prog = prog.compute(

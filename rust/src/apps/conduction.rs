@@ -15,6 +15,11 @@ use crate::task::{TaskId, PRIO_THREAD};
 
 use super::StructureMode;
 
+/// Bytes of mesh data per stripe, declared to the region registry so
+/// footprint accounting (and the `memaware` policy) can see the data
+/// each thread works on.
+pub const STRIPE_BYTES: u64 = 4 << 20;
+
 /// Stripe-cycle workload parameters.
 #[derive(Debug, Clone)]
 pub struct HeatParams {
@@ -55,8 +60,9 @@ pub fn build_with_policy(
     policy: crate::sim::AllocPolicy,
 ) -> Vec<TaskId> {
     let barrier = engine.alloc_barrier(p.threads);
-    let regions: Vec<_> =
-        (0..p.threads).map(|_| engine.alloc_region_policy(policy)).collect();
+    let regions: Vec<_> = (0..p.threads)
+        .map(|_| engine.alloc_region_sized(STRIPE_BYTES, policy))
+        .collect();
     let program = |r| {
         let mut prog = Program::new();
         for _ in 0..p.cycles {
@@ -66,10 +72,13 @@ pub fn build_with_policy(
     };
     match mode {
         StructureMode::Simple | StructureMode::Bound => {
-            // Loose threads; the scheduler decides everything.
+            // Loose threads; the scheduler decides everything. Each
+            // stripe is declared as the thread's region so the
+            // footprint accounting knows whose data it is.
             let mut out = Vec::with_capacity(p.threads);
             for (i, &r) in regions.iter().enumerate() {
                 let t = engine.add_thread(format!("stripe{i}"), PRIO_THREAD, program(r));
+                engine.attach_region(t, r);
                 engine.wake(t);
                 out.push(t);
             }
@@ -84,6 +93,7 @@ pub fn build_with_policy(
             let (root, threads) = m.bubbles_from_topology(&names);
             for (&t, &r) in threads.iter().zip(regions.iter()) {
                 engine.set_program(t, program(r));
+                m.attach_region(t, r);
             }
             engine.wake(root);
             threads
@@ -93,7 +103,9 @@ pub fn build_with_policy(
 
 /// Sequential baseline: one thread computes all stripes, no barriers.
 pub fn build_sequential(engine: &mut SimEngine, p: &HeatParams) -> TaskId {
-    let regions: Vec<_> = (0..p.threads).map(|_| engine.alloc_region()).collect();
+    let regions: Vec<_> = (0..p.threads)
+        .map(|_| engine.alloc_region_sized(STRIPE_BYTES, crate::sim::AllocPolicy::FirstTouch))
+        .collect();
     let mut prog = Program::new();
     for _ in 0..p.cycles {
         for &r in &regions {
@@ -101,6 +113,9 @@ pub fn build_sequential(engine: &mut SimEngine, p: &HeatParams) -> TaskId {
         }
     }
     let t = engine.add_thread("sequential", PRIO_THREAD, prog);
+    for &r in &regions {
+        engine.attach_region(t, r);
+    }
     engine.wake(t);
     t
 }
@@ -172,6 +187,21 @@ mod tests {
         e.run().unwrap();
         let ratio = e.sys.metrics.remote_ratio();
         assert!(ratio < 0.2, "remote ratio {ratio} too high for bubbles");
+    }
+
+    #[test]
+    fn stripes_are_attached_and_conserved() {
+        let topo = Topology::numa(2, 2);
+        let p = small();
+        let mut e = crate::apps::engine_for(&topo, Bubbles);
+        let threads = build(&mut e, Bubbles, &p);
+        e.run().unwrap();
+        // Every stripe homed + attached: footprint conservation holds
+        // and each thread knows where its data lives.
+        assert!(e.sys.mem.conserved(&e.sys.tasks));
+        for t in threads {
+            assert!(e.sys.mem.dominant_node(t).is_some(), "{t} has no footprint");
+        }
     }
 
     #[test]

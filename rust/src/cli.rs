@@ -9,7 +9,7 @@ use crate::apps::conduction::HeatParams;
 use crate::apps::fib::FibParams;
 use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
-use crate::experiments::{ablations, fig5, table1, table2};
+use crate::experiments::{ablations, fig5, memcmp, table1, table2};
 use crate::topology::Topology;
 
 /// Parsed command line: positional command + `--key value` options.
@@ -64,6 +64,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         "table2" => cmd_table2(&args),
         "fig5" => cmd_fig5(&args),
         "ablations" => cmd_ablations(&args),
+        "memcmp" => cmd_memcmp(&args),
         "run" => cmd_run(&args),
         "analyze" => cmd_analyze(&args),
         "evolve" => cmd_evolve(&args),
@@ -84,6 +85,7 @@ COMMANDS
   table2     conduction+advection rows (Table 2) [--machine, --scale 1.0]
   fig5       fibonacci bubble gain (Figure 5)    [--machine xeon-2x-ht|numa-4x4]
   ablations  design-choice sweeps                [--which burst|regen|zoo|all]
+  memcmp     local vs remote access ratio per policy [--machine, --scheds a,b,c]
   run        config-driven simulation            [--config file.toml]
   analyze    traced run + scheduler analysis     [--machine, --app, --sched]
   evolve     traced bubble evolution (Figure 3)  [--machine numa-4x4]
@@ -179,6 +181,36 @@ fn cmd_ablations(args: &Args) -> Result<String> {
         return Err(Error::config(format!("unknown ablation `{which}`")));
     }
     Ok(out)
+}
+
+fn cmd_memcmp(args: &Args) -> Result<String> {
+    let topo = args.machine()?;
+    let kinds = match args.options.get("scheds") {
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                crate::config::SchedKind::parse(s.trim()).ok_or_else(|| {
+                    Error::config(format!("unknown scheduler `{s}`; try `repro schedulers`"))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => memcmp::default_kinds(),
+    };
+    // Oversubscribe the machine so rebalancing pressure is real: that
+    // is where memory-blind policies scatter accesses.
+    let p = HeatParams {
+        threads: topo.n_cpus() + topo.n_cpus() / 2,
+        cycles: 20,
+        ..HeatParams::conduction()
+    };
+    let c = memcmp::run(&topo, &p, &kinds);
+    Ok(format!(
+        "memory locality comparison on `{}` ({} stripes, {} cycles)\n\n{}",
+        topo.name(),
+        p.threads,
+        p.cycles,
+        c.render()
+    ))
 }
 
 fn cmd_run(args: &Args) -> Result<String> {
@@ -380,6 +412,16 @@ mod tests {
         let out = run(&argv("evolve --machine numa-2x2")).unwrap();
         assert!(out.contains("Burst"), "{out}");
         assert!(out.contains("picked"));
+    }
+
+    #[test]
+    fn memcmp_command_reports_ratios() {
+        let out = run(&argv("memcmp --machine numa-2x2 --scheds memaware,afs")).unwrap();
+        assert!(out.contains("memaware"), "{out}");
+        assert!(out.contains("afs"), "{out}");
+        assert!(out.contains("local ratio"), "{out}");
+        let err = run(&argv("memcmp --machine numa-2x2 --scheds warp")).unwrap_err();
+        assert!(err.to_string().contains("unknown scheduler"), "{err}");
     }
 
     #[test]

@@ -83,6 +83,9 @@ pub enum SchedKind {
     Hafs,
     /// Predetermined binding (§2.1) — the Table-2 "Bound" row.
     Bound,
+    /// Memory-aware: place by NUMA footprint ([`crate::mem`]), refuse
+    /// costly remote steals (the ForestGOMP direction).
+    Memaware,
     /// Ousterhout gang scheduling (§3.1).
     Gang,
 }
@@ -105,6 +108,7 @@ impl SchedKind {
             SchedKind::Cafs,
             SchedKind::Hafs,
             SchedKind::Bound,
+            SchedKind::Memaware,
             SchedKind::Gang,
         ]
     }

@@ -19,6 +19,23 @@ struct BarrierState {
     waiting: Vec<TaskId>,
 }
 
+/// Parking lot for idle workers. Split out of [`Inner`] so the
+/// enqueue-notification hook installed on the [`System`] can capture it
+/// without creating an `Inner → System → Inner` reference cycle.
+#[derive(Default)]
+struct Park {
+    lock: Mutex<()>,
+    cv: Condvar,
+    /// Workers currently parked (or about to park) on `cv`; lets the
+    /// enqueue hook skip the lock entirely when nobody is waiting.
+    parked: AtomicUsize,
+    /// Wake generation, bumped on every notification. Workers compare
+    /// it against a pre-pick snapshot before sleeping, so a wake from a
+    /// scheduler whose work is *not* visible in `sys.rq` (gang's
+    /// internal queue) still prevents the sleep.
+    seq: AtomicUsize,
+}
+
 /// Shared executor state.
 struct Inner {
     sys: Arc<System>,
@@ -27,9 +44,9 @@ struct Inner {
     barriers: Mutex<Vec<BarrierState>>,
     live: AtomicUsize,
     stop: AtomicBool,
-    /// Idle workers park here until work may be available.
-    idle: Mutex<()>,
-    idle_cv: Condvar,
+    /// Idle workers park here; `ops::enqueue` notifies via the system's
+    /// enqueue hook, so they wake on work arrival instead of timing out.
+    park: Arc<Park>,
 }
 
 /// API handed to green-thread bodies (thin facade over fiber yields).
@@ -74,6 +91,31 @@ impl Executor {
     /// Build over a system + scheduler. One worker OS thread will be
     /// spawned per topology CPU at [`Executor::run`].
     pub fn new(sys: Arc<System>, sched: Arc<dyn Scheduler>) -> Executor {
+        let park = Arc::new(Park::default());
+        // Wake parked workers whenever any path enqueues a runnable
+        // task (ops::enqueue fires this hook). Protocol: a worker
+        // raises `parked` *under the lock and before* its queue-empty
+        // check; the hook reads `parked` *after* the push. So either
+        // the hook sees parked > 0 (and its locked notify cannot slip
+        // into the worker's check→wait window — the worker holds the
+        // lock until the wait atomically releases it), or the worker's
+        // queue check sees the push and it does not sleep. The common
+        // nobody-parked case costs one atomic read, no lock.
+        let p = park.clone();
+        sys.set_enqueue_hook(Arc::new(move || {
+            // Bump the wake generation first: a worker that raced past
+            // this notify re-checks `seq` before sleeping. The SeqCst
+            // RMW also orders the (Relaxed) runqueue counter increment
+            // the caller just performed before our `parked` read;
+            // paired with the worker-side fence this closes the
+            // handshake on weakly-ordered hardware.
+            p.seq.fetch_add(1, Ordering::SeqCst);
+            if p.parked.load(Ordering::SeqCst) == 0 {
+                return;
+            }
+            let _guard = p.lock.lock().unwrap();
+            p.cv.notify_all();
+        }));
         Executor {
             inner: Arc::new(Inner {
                 sys,
@@ -82,8 +124,7 @@ impl Executor {
                 barriers: Mutex::new(Vec::new()),
                 live: AtomicUsize::new(0),
                 stop: AtomicBool::new(false),
-                idle: Mutex::new(()),
-                idle_cv: Condvar::new(),
+                park,
             }),
             threads: 0,
         }
@@ -153,16 +194,46 @@ impl Executor {
 fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
     loop {
         if inner.live.load(Ordering::SeqCst) == 0 || inner.stop.load(Ordering::SeqCst) {
-            inner.idle_cv.notify_all();
+            inner.park.cv.notify_all();
             return;
         }
+        let seq_before = inner.park.seq.load(Ordering::SeqCst);
         let Some(task) = inner.sched.pick(&inner.sys, cpu) else {
-            // Park briefly; a finishing/blocking thread notifies.
-            let guard = inner.idle.lock().unwrap();
-            let _ = inner
-                .idle_cv
-                .wait_timeout(guard, std::time::Duration::from_micros(200))
-                .unwrap();
+            // Nothing pickable. Park until the enqueue hook notifies
+            // (see Executor::new for the missed-wakeup protocol; the
+            // timeout backstops exit-path notifies, which fire
+            // unlocked) — unless a wake already raced the failed pick
+            // (generation changed), or work is queued that this CPU
+            // cannot take right now (a policy refused the steal), in
+            // which case back off briefly instead of busy-spinning.
+            let guard = inner.park.lock.lock().unwrap();
+            if inner.live.load(Ordering::SeqCst) == 0 {
+                continue; // loop top exits
+            }
+            inner.park.parked.fetch_add(1, Ordering::SeqCst);
+            // Pairs with the SeqCst RMW in the enqueue hook: after it,
+            // this thread's raised `parked` and the enqueuer's
+            // (Relaxed) queue counters are mutually visible — one side
+            // always sees the other.
+            std::sync::atomic::fence(Ordering::SeqCst);
+            let raced = inner.park.seq.load(Ordering::SeqCst) != seq_before;
+            if !raced && inner.sys.rq.total_queued() == 0 {
+                let _ = inner
+                    .park
+                    .cv
+                    .wait_timeout(guard, std::time::Duration::from_millis(2))
+                    .unwrap();
+                inner.park.parked.fetch_sub(1, Ordering::SeqCst);
+            } else {
+                inner.park.parked.fetch_sub(1, Ordering::SeqCst);
+                drop(guard);
+                if !raced {
+                    // Queued but unpickable for this CPU: brief backoff.
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+                // raced: re-pick immediately — the wake may be for work
+                // invisible to sys.rq (gang's internal queue).
+            }
             continue;
         };
         // Take exclusive ownership of the fiber while it runs.
@@ -212,7 +283,6 @@ fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
                         for w in waiters {
                             inner.sched.wake(&inner.sys, w);
                         }
-                        inner.idle_cv.notify_all();
                     }
                     None => {
                         inner.sched.stop(&inner.sys, cpu, task, StopReason::Block);
@@ -223,7 +293,9 @@ fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
                 drop(fiber);
                 inner.sched.stop(&inner.sys, cpu, task, StopReason::Terminate);
                 inner.live.fetch_sub(1, Ordering::SeqCst);
-                inner.idle_cv.notify_all();
+                // Unpark everyone so workers observe live==0 and exit
+                // (enqueue-driven wakes do not cover termination).
+                inner.park.cv.notify_all();
             }
         }
     }
@@ -279,6 +351,34 @@ mod tests {
         }
         ex.run();
         assert_eq!(after.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn idle_workers_wake_on_late_enqueue() {
+        // All workers go idle (nothing runnable), then a task is woken
+        // from outside: the enqueue hook must unpark them promptly and
+        // the run must complete.
+        let sys = Arc::new(System::new(Arc::new(Topology::smp(2))));
+        let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+        let mut ex = Executor::new(sys.clone(), sched.clone());
+        let done = Arc::new(AtomicU64::new(0));
+        let t = sys.tasks.new_thread("late", crate::task::PRIO_THREAD);
+        let d = done.clone();
+        ex.register(t, move |_| {
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        let waker = {
+            let sys = sys.clone();
+            let sched = sched.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                sched.wake(&sys, t);
+            })
+        };
+        ex.run();
+        waker.join().unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+        assert_eq!(sys.tasks.state(t), TaskState::Terminated);
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Local-vs-remote memory-access comparison harness.
+//!
+//! The paper's locality claims — and the `memaware` policy's reason to
+//! exist — become a *reported number* here: run a memory-bound app
+//! under several policies on the same machine and compare the
+//! local-access ratio, steals, and next-touch migration traffic
+//! (`repro memcmp` prints the table; the tests pin the ordering).
+
+use std::sync::atomic::Ordering;
+
+use crate::apps::conduction::{self, HeatParams};
+use crate::apps::{engine_with, StructureMode};
+use crate::config::SchedKind;
+use crate::sched::factory::make_default;
+use crate::sim::SimConfig;
+use crate::topology::Topology;
+use crate::util::fmt::Table;
+
+/// One policy's memory behaviour on the workload.
+#[derive(Debug, Clone)]
+pub struct MemRow {
+    pub sched: String,
+    pub makespan: u64,
+    /// Fraction of memory touches on the local node (higher = better).
+    pub local_ratio: f64,
+    pub steals: u64,
+    pub mem_migrations: u64,
+    pub migrated_bytes: u64,
+}
+
+/// The comparison result.
+#[derive(Debug, Clone)]
+pub struct MemCmp {
+    pub title: String,
+    pub rows: Vec<MemRow>,
+}
+
+impl MemCmp {
+    /// Row accessor by policy name (panics on unknown name — harness
+    /// misuse).
+    pub fn get(&self, sched: &str) -> &MemRow {
+        self.rows.iter().find(|r| r.sched == sched).expect("unknown policy row")
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "policy",
+            "makespan (Mcycles)",
+            "local ratio",
+            "steals",
+            "mem migrations",
+            "migrated MiB",
+        ]);
+        for r in &self.rows {
+            t.row(&[
+                r.sched.clone(),
+                format!("{:.2}", r.makespan as f64 / 1e6),
+                format!("{:.3}", r.local_ratio),
+                r.steals.to_string(),
+                r.mem_migrations.to_string(),
+                format!("{:.1}", r.migrated_bytes as f64 / (1u64 << 20) as f64),
+            ]);
+        }
+        format!("== {} ==\n{}", self.title, t.render())
+    }
+}
+
+/// Policies compared by default: the memory-aware policy against the
+/// paper's bubble scheduler and the strongest opportunist baselines.
+pub fn default_kinds() -> Vec<SchedKind> {
+    vec![SchedKind::Memaware, SchedKind::Bubble, SchedKind::Afs, SchedKind::Lds, SchedKind::Ss]
+}
+
+/// Run the conduction workload under each policy and collect the
+/// memory behaviour.
+pub fn run(topo: &Topology, p: &HeatParams, kinds: &[SchedKind]) -> MemCmp {
+    let mut rows = Vec::with_capacity(kinds.len());
+    for &kind in kinds {
+        let mode = if kind == SchedKind::Bubble {
+            StructureMode::Bubbles
+        } else {
+            StructureMode::Simple
+        };
+        let mut e = engine_with(topo, make_default(kind), SimConfig::default());
+        conduction::build(&mut e, mode, p);
+        let rep = e.run().expect("memcmp run");
+        debug_assert!(e.sys.mem.conserved(&e.sys.tasks), "footprint leak under {kind:?}");
+        let m = &e.sys.metrics;
+        rows.push(MemRow {
+            sched: kind.label().to_string(),
+            makespan: rep.total_time,
+            local_ratio: m.local_ratio(),
+            steals: m.steals.load(Ordering::Relaxed),
+            mem_migrations: m.mem_migrations.load(Ordering::Relaxed),
+            migrated_bytes: m.migrated_bytes.load(Ordering::Relaxed),
+        });
+    }
+    MemCmp { title: format!("local vs remote accesses (conduction, {})", topo.name()), rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Oversubscribed stripes force rebalancing every cycle, which is
+    /// exactly where memory-blind stealing scatters accesses.
+    fn contended() -> HeatParams {
+        HeatParams { threads: 24, cycles: 8, work: 400_000, mem_fraction: 0.35 }
+    }
+
+    #[test]
+    fn memaware_beats_afs_on_locality() {
+        // ISSUE-2 acceptance: strictly higher local-access ratio than
+        // the AFS baseline on the numa(4,4) preset.
+        let topo = Topology::numa(4, 4);
+        let c = run(&topo, &contended(), &[SchedKind::Memaware, SchedKind::Afs]);
+        let ma = c.get("memaware");
+        let afs = c.get("afs");
+        assert!(ma.makespan > 0 && afs.makespan > 0);
+        assert!(
+            ma.local_ratio > afs.local_ratio,
+            "memaware {:.3} must beat afs {:.3} on locality",
+            ma.local_ratio,
+            afs.local_ratio
+        );
+    }
+
+    #[test]
+    fn memaware_keeps_most_accesses_local() {
+        let topo = Topology::numa(4, 4);
+        let c = run(&topo, &contended(), &[SchedKind::Memaware]);
+        let ma = c.get("memaware");
+        assert!(ma.local_ratio > 0.6, "local ratio {:.3} too low", ma.local_ratio);
+    }
+
+    #[test]
+    fn render_lists_every_policy() {
+        let topo = Topology::numa(2, 2);
+        let p = HeatParams { threads: 4, cycles: 3, work: 200_000, mem_fraction: 0.35 };
+        let c = run(&topo, &p, &default_kinds());
+        let out = c.render();
+        for k in default_kinds() {
+            assert!(out.contains(k.label()), "{} missing:\n{out}", k.label());
+        }
+    }
+}

@@ -6,5 +6,6 @@
 
 pub mod ablations;
 pub mod fig5;
+pub mod memcmp;
 pub mod table1;
 pub mod table2;

@@ -6,8 +6,11 @@
 //!
 //! * **Models** — [`topology`] models the hierarchical machine as a tree of
 //!   levels (machine → NUMA node → die → chip → SMT), [`task`] models the
-//!   application as threads grouped into nested *bubbles*, and [`rq`] is the
-//!   hierarchy of task lists: one runqueue per component of every level.
+//!   application as threads grouped into nested *bubbles*, [`rq`] is the
+//!   hierarchy of task lists (one runqueue per component of every level),
+//!   and [`mem`] models *where the data lives*: a NUMA region registry
+//!   plus per-task/per-bubble footprint accounting that memory-aware
+//!   policies consult for placement.
 //! * **Schedulers** — [`sched`] contains the bubble scheduler (the paper's
 //!   contribution: bubbles descend the list hierarchy, burst at their
 //!   bursting level, and are regenerated on imbalance or timeslice expiry)
@@ -49,6 +52,7 @@ pub mod error;
 pub mod exec;
 pub mod experiments;
 pub mod marcel;
+pub mod mem;
 pub mod metrics;
 pub mod rq;
 pub mod runtime;

@@ -16,6 +16,7 @@
 
 use std::sync::Arc;
 
+use crate::mem::{AllocPolicy, RegionId};
 use crate::sched::{BubbleConfig, BubbleScheduler, Scheduler, System};
 use crate::task::{BubblePhase, BurstLevel, Prio, TaskId, TaskState, PRIO_BUBBLE, PRIO_THREAD};
 use crate::topology::Topology;
@@ -117,6 +118,9 @@ impl Marcel {
                 t.state = TaskState::InBubble;
             }
         });
+        // Regions attached before the insertion now count towards the
+        // enclosing bubbles too (attach/insert order must not matter).
+        self.sys.mem.note_insert(&self.sys.tasks, task);
         if phase == BubblePhase::Burst {
             // Late insertion: release immediately.
             self.sched.wake(&self.sys, task);
@@ -139,6 +143,23 @@ impl Marcel {
     /// Wake a standalone thread (no bubble).
     pub fn wake_thread(&self, task: TaskId) {
         self.sched.wake(&self.sys, task);
+    }
+
+    // ------------------------------------------------------------- memory
+
+    /// `marcel_region_alloc`: register a block of application memory
+    /// with the system registry ([`crate::mem`]). The region is homed
+    /// per `policy` (first touch by default, as in the paper §2.3).
+    pub fn region_alloc(&self, bytes: u64, policy: AllocPolicy) -> RegionId {
+        self.sys.mem.alloc(bytes, policy)
+    }
+
+    /// `marcel_attach_region`: declare that `task` (thread or bubble)
+    /// works on `region`. Its bytes then count towards the task's — and
+    /// every enclosing bubble's — NUMA footprint, which memory-aware
+    /// policies consult for placement.
+    pub fn attach_region(&self, task: TaskId, region: RegionId) {
+        self.sys.mem.attach(&self.sys.tasks, task, region);
     }
 
     /// Declare two threads SMT-symbiotic (§3.1: pairs that exploit the
@@ -229,6 +250,35 @@ mod tests {
         m.set_symbiotic(a, b);
         assert_eq!(m.system().tasks.with(a, |t| t.thread_data().symbiotic), Some(b));
         assert_eq!(m.system().tasks.with(b, |t| t.thread_data().symbiotic), Some(a));
+    }
+
+    #[test]
+    fn attach_before_insert_still_aggregates() {
+        // Regression: regions attached while the thread was loose must
+        // surface in the bubble's footprint after insertion.
+        let m = Marcel::new(Topology::numa(2, 2));
+        let t = m.create_dontsched("t");
+        let r = m.region_alloc(4096, AllocPolicy::Fixed(1));
+        m.attach_region(t, r);
+        let b = m.bubble_init();
+        m.bubble_inserttask(b, t);
+        let sys = m.system();
+        assert_eq!(sys.mem.dominant_node(b), Some(1), "bubble must see pre-attached bytes");
+        assert!(sys.mem.conserved(&sys.tasks));
+    }
+
+    #[test]
+    fn region_attach_feeds_bubble_footprint() {
+        let m = Marcel::new(Topology::numa(2, 2));
+        let b = m.bubble_init();
+        let t = m.create_dontsched("t");
+        m.bubble_inserttask(b, t);
+        let r = m.region_alloc(4096, AllocPolicy::Fixed(1));
+        m.attach_region(t, r);
+        let sys = m.system();
+        assert_eq!(sys.mem.dominant_node(t), Some(1));
+        assert_eq!(sys.mem.dominant_node(b), Some(1), "bubbles aggregate members");
+        assert!(sys.mem.conserved(&sys.tasks));
     }
 
     #[test]

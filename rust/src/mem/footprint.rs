@@ -1,0 +1,219 @@
+//! Per-task / per-bubble memory footprint accounting.
+//!
+//! Incrementally-maintained per-NUMA-node byte counters, aggregated up
+//! the *bubble* hierarchy exactly like [`crate::sched::core::stats::LoadStats`]
+//! aggregates running counts up the *machine* hierarchy: when a region
+//! homed on node `n` is attached to (or re-homed under) a task, `n`'s
+//! byte counter is bumped for that task **and every enclosing bubble**
+//! (O(nesting depth)). A policy can then ask "where does this bubble's
+//! memory live?" in O(nodes) without walking its contents.
+
+use std::sync::Mutex;
+
+use crate::task::{TaskId, TaskTable};
+
+/// Per-task per-node footprint byte counters (subtree-aggregated).
+#[derive(Debug)]
+pub struct Footprint {
+    n_nodes: usize,
+    /// `foot[task.0][node]` = bytes of attached regions homed on `node`
+    /// owned by the task or anything nested under it (for bubbles).
+    foot: Mutex<Vec<Vec<u64>>>,
+}
+
+/// The bubble chain of a task: itself, then every enclosing bubble.
+fn chain(tasks: &TaskTable, task: TaskId) -> Vec<TaskId> {
+    let mut out = vec![task];
+    let mut cur = task;
+    while let Some(p) = tasks.parent(cur) {
+        out.push(p);
+        cur = p;
+    }
+    out
+}
+
+impl Footprint {
+    /// Zeroed counters for a machine with `n_nodes` NUMA nodes.
+    pub fn new(n_nodes: usize) -> Footprint {
+        Footprint { n_nodes: n_nodes.max(1), foot: Mutex::new(Vec::new()) }
+    }
+
+    /// Number of NUMA nodes accounted.
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    fn slot<'a>(v: &'a mut Vec<Vec<u64>>, t: TaskId, n_nodes: usize) -> &'a mut Vec<u64> {
+        if v.len() <= t.0 {
+            v.resize_with(t.0 + 1, || vec![0; n_nodes]);
+        }
+        &mut v[t.0]
+    }
+
+    /// `bytes` homed on `node` now belong to `task`: bump the task and
+    /// every enclosing bubble.
+    pub fn add(&self, tasks: &TaskTable, task: TaskId, node: usize, bytes: u64) {
+        let chain = chain(tasks, task);
+        let mut foot = self.foot.lock().unwrap();
+        for t in chain {
+            Self::slot(&mut foot, t, self.n_nodes)[node] += bytes;
+        }
+    }
+
+    /// `bytes` on `node` no longer belong to `task` (detach or re-home).
+    /// Saturating, so an unbalanced call cannot wrap the counters.
+    pub fn sub(&self, tasks: &TaskTable, task: TaskId, node: usize, bytes: u64) {
+        let chain = chain(tasks, task);
+        let mut foot = self.foot.lock().unwrap();
+        for t in chain {
+            let slot = Self::slot(&mut foot, t, self.n_nodes);
+            slot[node] = slot[node].saturating_sub(bytes);
+        }
+    }
+
+    /// A region owned by `task` migrated from node `from` to node `to`.
+    pub fn rehome(&self, tasks: &TaskTable, task: TaskId, from: usize, to: usize, bytes: u64) {
+        if from == to {
+            return;
+        }
+        let chain = chain(tasks, task);
+        let mut foot = self.foot.lock().unwrap();
+        for t in chain {
+            let slot = Self::slot(&mut foot, t, self.n_nodes);
+            slot[from] = slot[from].saturating_sub(bytes);
+            slot[to] += bytes;
+        }
+    }
+
+    /// `task` (with its whole subtree footprint) was just inserted into
+    /// a bubble: fold its existing bytes into every *new* enclosing
+    /// bubble, so attach-before-insert and insert-before-attach agree.
+    /// Call after the parent link is set, once per insertion.
+    pub fn on_insert(&self, tasks: &TaskTable, task: TaskId) {
+        let mut ancestors = chain(tasks, task);
+        ancestors.remove(0); // the task itself is already charged
+        if ancestors.is_empty() {
+            return;
+        }
+        let mut foot = self.foot.lock().unwrap();
+        let own = match foot.get(task.0) {
+            Some(v) => v.clone(),
+            None => return,
+        };
+        if own.iter().all(|&b| b == 0) {
+            return;
+        }
+        for t in ancestors {
+            let slot = Self::slot(&mut foot, t, self.n_nodes);
+            for (node, &bytes) in own.iter().enumerate() {
+                slot[node] += bytes;
+            }
+        }
+    }
+
+    /// Per-node byte vector of a task's (subtree) footprint.
+    pub fn of(&self, task: TaskId) -> Vec<u64> {
+        let foot = self.foot.lock().unwrap();
+        match foot.get(task.0) {
+            Some(v) => v.clone(),
+            None => vec![0; self.n_nodes],
+        }
+    }
+
+    /// Bytes of `task`'s footprint homed on `node`.
+    pub fn node_bytes(&self, task: TaskId, node: usize) -> u64 {
+        let foot = self.foot.lock().unwrap();
+        foot.get(task.0).map_or(0, |v| v[node])
+    }
+
+    /// Total attached bytes of a task's footprint.
+    pub fn total(&self, task: TaskId) -> u64 {
+        let foot = self.foot.lock().unwrap();
+        foot.get(task.0).map_or(0, |v| v.iter().sum())
+    }
+
+    /// The node holding the plurality of `task`'s footprint (lowest
+    /// index on ties; None when the footprint is empty).
+    pub fn dominant_node(&self, task: TaskId) -> Option<usize> {
+        let foot = self.foot.lock().unwrap();
+        let v = foot.get(task.0)?;
+        let (best, bytes) = v
+            .iter()
+            .enumerate()
+            .max_by_key(|(i, b)| (**b, std::cmp::Reverse(*i)))?;
+        if *bytes == 0 {
+            None
+        } else {
+            Some(best)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{PRIO_BUBBLE, PRIO_THREAD};
+
+    fn table_with_bubble() -> (TaskTable, TaskId, TaskId, TaskId) {
+        // root bubble > inner bubble > thread
+        let tasks = TaskTable::new();
+        let root = tasks.new_bubble("root", PRIO_BUBBLE);
+        let inner = tasks.new_bubble("inner", PRIO_BUBBLE);
+        let t = tasks.new_thread("t", PRIO_THREAD);
+        tasks.with(inner, |x| x.parent = Some(root));
+        tasks.with(t, |x| x.parent = Some(inner));
+        (tasks, root, inner, t)
+    }
+
+    #[test]
+    fn add_aggregates_up_the_bubble_chain() {
+        let (tasks, root, inner, t) = table_with_bubble();
+        let f = Footprint::new(4);
+        f.add(&tasks, t, 1, 100);
+        f.add(&tasks, t, 3, 50);
+        assert_eq!(f.of(t), vec![0, 100, 0, 50]);
+        assert_eq!(f.of(inner), vec![0, 100, 0, 50]);
+        assert_eq!(f.of(root), vec![0, 100, 0, 50]);
+        assert_eq!(f.total(root), 150);
+        assert_eq!(f.dominant_node(root), Some(1));
+    }
+
+    #[test]
+    fn rehome_moves_bytes_along_the_chain() {
+        let (tasks, root, _inner, t) = table_with_bubble();
+        let f = Footprint::new(4);
+        f.add(&tasks, t, 0, 100);
+        f.rehome(&tasks, t, 0, 2, 100);
+        assert_eq!(f.of(root), vec![0, 0, 100, 0]);
+        assert_eq!(f.dominant_node(t), Some(2));
+    }
+
+    #[test]
+    fn sub_saturates() {
+        let (tasks, root, _inner, t) = table_with_bubble();
+        let f = Footprint::new(2);
+        f.add(&tasks, t, 0, 10);
+        f.sub(&tasks, t, 0, 100);
+        assert_eq!(f.of(root), vec![0, 0]);
+    }
+
+    #[test]
+    fn empty_footprint_has_no_dominant_node() {
+        let tasks = TaskTable::new();
+        let t = tasks.new_thread("t", PRIO_THREAD);
+        let f = Footprint::new(4);
+        assert_eq!(f.dominant_node(t), None);
+        assert_eq!(f.total(t), 0);
+        assert_eq!(f.of(t), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn dominant_node_breaks_ties_low() {
+        let tasks = TaskTable::new();
+        let t = tasks.new_thread("t", PRIO_THREAD);
+        let f = Footprint::new(3);
+        f.add(&tasks, t, 2, 100);
+        f.add(&tasks, t, 1, 100);
+        assert_eq!(f.dominant_node(t), Some(1));
+    }
+}

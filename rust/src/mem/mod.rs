@@ -1,0 +1,239 @@
+//! # NUMA memory subsystem: where data lives, and whose it is.
+//!
+//! The paper's argument is that hierarchical scheduling pays off only
+//! when threads run *near their data* ("accessing the memory of its own
+//! node is about 3 times faster", §5.2) — and its follow-up work makes
+//! joint thread+memory affinity the point (ForestGOMP, arXiv 0706.2073).
+//! This module gives the scheduler that missing notion of data:
+//!
+//! * [`registry::RegionRegistry`] — the **region registry**: every
+//!   application memory block is a [`RegionId`] with a size, a home
+//!   NUMA node (first-touch, round-robin or explicit, §2.3), touch
+//!   statistics, and an optional owning task.
+//! * [`footprint::Footprint`] — **per-task and per-bubble footprint
+//!   accounting**: incremental per-node byte counters aggregated up the
+//!   bubble hierarchy like `LoadStats` aggregates running counts up the
+//!   machine hierarchy, so "where does this bubble's memory live?" is
+//!   O(nodes), not O(regions).
+//! * **Next-touch migration**: a region marked next-touch re-homes onto
+//!   the node of the next CPU touching it, letting memory follow a
+//!   migrated thread; migrated bytes surface in
+//!   [`crate::metrics::Metrics`].
+//!
+//! [`MemState`] bundles the two and keeps them consistent: every
+//! operation that changes a region's home or owner applies the matching
+//! footprint delta. It hangs off [`crate::sched::System`] so policies
+//! (e.g. `memaware`, see [`crate::sched::MemAwareScheduler`]) can
+//! consult it on the wake/pick/steal paths.
+//!
+//! **Conservation invariant** (checked by [`MemState::conserved`] and
+//! the `mem_props` integration suite): at every step, the sum of
+//! per-node bytes over root tasks equals the total size of attached,
+//! homed regions.
+
+pub mod footprint;
+pub mod registry;
+
+pub use footprint::Footprint;
+pub use registry::{
+    AllocPolicy, HomeChange, RegionId, RegionInfo, RegionRegistry, Touch, DEFAULT_REGION_BYTES,
+};
+
+use std::sync::Mutex;
+
+use crate::task::{TaskId, TaskTable};
+use crate::topology::{CpuId, Topology};
+
+/// Registry + footprint, kept mutually consistent.
+#[derive(Debug)]
+pub struct MemState {
+    pub regions: RegionRegistry,
+    pub footprint: Footprint,
+    /// Serialises the registry-delta → footprint-update pairs in
+    /// [`MemState::attach`]/[`MemState::touch`]/[`MemState::note_insert`]:
+    /// without it, a concurrent attach and first touch of one region
+    /// could interleave their deltas and double-charge bytes, breaking
+    /// the conservation invariant for good.
+    sync: Mutex<()>,
+}
+
+impl MemState {
+    /// Fresh memory state for a machine.
+    pub fn new(topo: &Topology) -> MemState {
+        let n = topo.n_numa().max(1);
+        MemState {
+            regions: RegionRegistry::new(n),
+            footprint: Footprint::new(n),
+            sync: Mutex::new(()),
+        }
+    }
+
+    /// Allocate a region of `size` bytes under `policy`.
+    pub fn alloc(&self, size: u64, policy: AllocPolicy) -> RegionId {
+        self.regions.alloc(size, policy)
+    }
+
+    /// Attach a region to `task`: its bytes count towards the task's
+    /// (and every enclosing bubble's) footprint once the region is
+    /// homed. Re-attaching moves the bytes to the new owner.
+    pub fn attach(&self, tasks: &TaskTable, task: TaskId, r: RegionId) {
+        let _sync = self.sync.lock().unwrap();
+        let (prev, delta) = self.regions.attach(r, task);
+        if let Some(HomeChange::Homed { node, size, .. }) = delta {
+            if let Some(old) = prev {
+                if old != task {
+                    self.footprint.sub(tasks, old, node, size);
+                }
+            }
+            if prev != Some(task) {
+                self.footprint.add(tasks, task, node, size);
+            }
+        }
+    }
+
+    /// Record a touch by `cpu`: resolves the home (first touch homes,
+    /// next-touch migrates) and keeps the footprint in sync.
+    pub fn touch(&self, tasks: &TaskTable, topo: &Topology, r: RegionId, cpu: CpuId) -> Touch {
+        let _sync = self.sync.lock().unwrap();
+        let node = topo.numa_of(cpu);
+        let (touch, delta) = self.regions.touch(r, cpu, node);
+        match delta {
+            Some(HomeChange::Homed { owner: Some(owner), node, size }) => {
+                self.footprint.add(tasks, owner, node, size);
+            }
+            Some(HomeChange::Moved { owner: Some(owner), from, to, size }) => {
+                self.footprint.rehome(tasks, owner, from, to, size);
+            }
+            _ => {}
+        }
+        touch
+    }
+
+    /// Home node of a region (None before first touch).
+    pub fn home(&self, r: RegionId) -> Option<usize> {
+        self.regions.home(r)
+    }
+
+    /// Snapshot of one region.
+    pub fn info(&self, r: RegionId) -> RegionInfo {
+        self.regions.info(r)
+    }
+
+    /// Mark one region for next-touch migration.
+    pub fn mark_next_touch(&self, r: RegionId) {
+        self.regions.mark_next_touch(r);
+    }
+
+    /// Mark every region attached to `task` for next-touch migration;
+    /// returns the bytes marked.
+    pub fn mark_task_regions_next_touch(&self, task: TaskId) -> u64 {
+        self.regions.mark_owner_next_touch(task)
+    }
+
+    /// Node holding the plurality of `task`'s footprint (bubbles
+    /// aggregate their contents).
+    pub fn dominant_node(&self, task: TaskId) -> Option<usize> {
+        self.footprint.dominant_node(task)
+    }
+
+    /// `task` was inserted into a bubble *after* regions were already
+    /// attached to it: fold its footprint into the new enclosing
+    /// bubbles ([`crate::marcel::Marcel::bubble_inserttask`] calls
+    /// this, so attach/insert order does not matter).
+    pub fn note_insert(&self, tasks: &TaskTable, task: TaskId) {
+        let _sync = self.sync.lock().unwrap();
+        self.footprint.on_insert(tasks, task);
+    }
+
+    /// Conservation check: per-node bytes summed over *root* tasks
+    /// (tasks without an enclosing bubble) must equal the total size of
+    /// attached, homed regions. O(tasks × nodes) — test/debug use.
+    pub fn conserved(&self, tasks: &TaskTable) -> bool {
+        let mut accounted = 0u64;
+        for id in tasks.ids() {
+            if tasks.parent(id).is_none() {
+                accounted += self.footprint.total(id);
+            }
+        }
+        accounted == self.regions.attached_homed_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::{PRIO_BUBBLE, PRIO_THREAD};
+
+    fn numa22() -> Topology {
+        Topology::numa(2, 2)
+    }
+
+    #[test]
+    fn attach_then_first_touch_accounts_once() {
+        let topo = numa22();
+        let mem = MemState::new(&topo);
+        let tasks = TaskTable::new();
+        let t = tasks.new_thread("t", PRIO_THREAD);
+        let r = mem.alloc(100, AllocPolicy::FirstTouch);
+        mem.attach(&tasks, t, r);
+        assert!(mem.conserved(&tasks), "unhomed region needs no accounting");
+        assert_eq!(mem.dominant_node(t), None);
+        // First touch on cpu2 (node 1) homes the region and charges it.
+        mem.touch(&tasks, &topo, r, CpuId(2));
+        assert_eq!(mem.home(r), Some(1));
+        assert_eq!(mem.dominant_node(t), Some(1));
+        assert!(mem.conserved(&tasks));
+    }
+
+    #[test]
+    fn bubble_footprint_aggregates_members() {
+        let topo = numa22();
+        let mem = MemState::new(&topo);
+        let tasks = TaskTable::new();
+        let b = tasks.new_bubble("b", PRIO_BUBBLE);
+        let t0 = tasks.new_thread("t0", PRIO_THREAD);
+        let t1 = tasks.new_thread("t1", PRIO_THREAD);
+        tasks.with(t0, |x| x.parent = Some(b));
+        tasks.with(t1, |x| x.parent = Some(b));
+        let r0 = mem.alloc(300, AllocPolicy::Fixed(0));
+        let r1 = mem.alloc(100, AllocPolicy::Fixed(1));
+        mem.attach(&tasks, t0, r0);
+        mem.attach(&tasks, t1, r1);
+        assert_eq!(mem.dominant_node(b), Some(0));
+        assert_eq!(mem.footprint.of(b), vec![300, 100]);
+        assert!(mem.conserved(&tasks));
+    }
+
+    #[test]
+    fn next_touch_migration_rebalances_footprint() {
+        let topo = numa22();
+        let mem = MemState::new(&topo);
+        let tasks = TaskTable::new();
+        let t = tasks.new_thread("t", PRIO_THREAD);
+        let r = mem.alloc(200, AllocPolicy::Fixed(0));
+        mem.attach(&tasks, t, r);
+        assert_eq!(mem.dominant_node(t), Some(0));
+        mem.mark_task_regions_next_touch(t);
+        let touch = mem.touch(&tasks, &topo, r, CpuId(3)); // node 1
+        assert_eq!(touch.migrated, 200);
+        assert_eq!(mem.home(r), Some(1));
+        assert_eq!(mem.dominant_node(t), Some(1));
+        assert!(mem.conserved(&tasks));
+    }
+
+    #[test]
+    fn reattach_moves_bytes_between_owners() {
+        let topo = numa22();
+        let mem = MemState::new(&topo);
+        let tasks = TaskTable::new();
+        let a = tasks.new_thread("a", PRIO_THREAD);
+        let b = tasks.new_thread("b", PRIO_THREAD);
+        let r = mem.alloc(64, AllocPolicy::Fixed(1));
+        mem.attach(&tasks, a, r);
+        assert_eq!(mem.footprint.total(a), 64);
+        mem.attach(&tasks, b, r);
+        assert_eq!(mem.footprint.total(a), 0);
+        assert_eq!(mem.footprint.total(b), 64);
+        assert!(mem.conserved(&tasks));
+    }
+}

@@ -1,0 +1,315 @@
+//! Memory-region registry: where data lives.
+//!
+//! A *region* is a block of application memory with a size, a home NUMA
+//! node and touch statistics. Regions are homed by **first touch** (the
+//! OS default the paper's applications rely on, §2.3), **round robin**
+//! or **explicit placement**, and may be *attached* to a task so the
+//! [`super::Footprint`] accounting can attribute their bytes to the
+//! bubble hierarchy.
+//!
+//! **Next-touch migration** (the ForestGOMP direction, arXiv 0706.2073):
+//! a region marked next-touch re-homes onto the node of the *next* CPU
+//! that touches it, so memory can follow a migrated thread. Migrated
+//! bytes are reported to the caller for metrics accounting.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::task::TaskId;
+use crate::topology::CpuId;
+
+/// Region handle: index into the registry.
+pub type RegionId = usize;
+
+/// Default region size when the caller does not say (1 MiB).
+pub const DEFAULT_REGION_BYTES: u64 = 1 << 20;
+
+/// Memory allocation policy for regions (paper §2.3: modern systems
+/// "let the application choose the memory allocation policy (specific
+/// memory node, first touch or round robin)").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocPolicy {
+    /// Homed on the node of the first CPU that touches it.
+    FirstTouch,
+    /// Spread across nodes in allocation order.
+    RoundRobin,
+    /// Explicitly placed on one node.
+    Fixed(usize),
+}
+
+/// One region's full state (also the snapshot returned by `info`).
+#[derive(Debug, Clone)]
+pub struct RegionInfo {
+    /// Size in bytes.
+    pub size: u64,
+    /// Home NUMA node (None until first touch under `FirstTouch`).
+    pub home: Option<usize>,
+    /// CPU that last touched the region (cache-line ownership).
+    pub last_toucher: Option<CpuId>,
+    /// Task the region is attached to (footprint attribution).
+    pub owner: Option<TaskId>,
+    /// Number of touches recorded.
+    pub touches: u64,
+    /// Re-home onto the next toucher's node (next-touch migration).
+    pub next_touch: bool,
+}
+
+/// Outcome of one touch, resolved against the registry.
+#[derive(Debug, Clone, Copy)]
+pub struct Touch {
+    /// Home node after the touch (first touch homes the region).
+    pub home: usize,
+    /// CPU that touched the region *before* this touch.
+    pub last_toucher: Option<CpuId>,
+    /// Bytes moved by next-touch migration (0 = none).
+    pub migrated: u64,
+}
+
+/// How a touch or attach changed footprint attribution (consumed by
+/// [`super::MemState`] to keep [`super::Footprint`] in sync).
+#[derive(Debug, Clone, Copy)]
+pub enum HomeChange {
+    /// The region gained a home (first touch or late attach).
+    Homed { owner: Option<TaskId>, node: usize, size: u64 },
+    /// The region migrated between nodes (next-touch).
+    Moved { owner: Option<TaskId>, from: usize, to: usize, size: u64 },
+}
+
+/// The registry proper: an append-only arena of regions.
+#[derive(Debug)]
+pub struct RegionRegistry {
+    slots: Mutex<Vec<RegionInfo>>,
+    /// Round-robin placement cursor.
+    rr_next: AtomicUsize,
+    /// NUMA node count for round-robin wrapping.
+    n_nodes: usize,
+}
+
+impl RegionRegistry {
+    /// Empty registry for a machine with `n_nodes` NUMA nodes.
+    pub fn new(n_nodes: usize) -> RegionRegistry {
+        RegionRegistry {
+            slots: Mutex::new(Vec::new()),
+            rr_next: AtomicUsize::new(0),
+            n_nodes: n_nodes.max(1),
+        }
+    }
+
+    /// Allocate a region of `size` bytes under `policy`.
+    ///
+    /// Panics when `Fixed(node)` names a node the machine does not have
+    /// — catching the caller's mistake here instead of as an opaque
+    /// index error deep in the footprint accounting.
+    pub fn alloc(&self, size: u64, policy: AllocPolicy) -> RegionId {
+        let home = match policy {
+            AllocPolicy::FirstTouch => None,
+            AllocPolicy::Fixed(node) => {
+                assert!(
+                    node < self.n_nodes,
+                    "AllocPolicy::Fixed({node}) on a machine with {} NUMA nodes",
+                    self.n_nodes
+                );
+                Some(node)
+            }
+            AllocPolicy::RoundRobin => {
+                Some(self.rr_next.fetch_add(1, Ordering::Relaxed) % self.n_nodes)
+            }
+        };
+        let mut slots = self.slots.lock().unwrap();
+        slots.push(RegionInfo {
+            size,
+            home,
+            last_toucher: None,
+            owner: None,
+            touches: 0,
+            next_touch: false,
+        });
+        slots.len() - 1
+    }
+
+    /// Number of regions allocated.
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    /// True when no region was allocated.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of one region.
+    pub fn info(&self, r: RegionId) -> RegionInfo {
+        self.slots.lock().unwrap()[r].clone()
+    }
+
+    /// Home node of a region (None before first touch).
+    pub fn home(&self, r: RegionId) -> Option<usize> {
+        self.slots.lock().unwrap()[r].home
+    }
+
+    /// Attach a region to `task`, replacing any previous owner. Returns
+    /// the previous owner and, when the region is already homed, the
+    /// footprint delta the caller must apply.
+    pub fn attach(&self, r: RegionId, task: TaskId) -> (Option<TaskId>, Option<HomeChange>) {
+        let mut slots = self.slots.lock().unwrap();
+        let slot = &mut slots[r];
+        let prev = slot.owner.replace(task);
+        let delta = slot.home.map(|node| HomeChange::Homed {
+            owner: Some(task),
+            node,
+            size: slot.size,
+        });
+        (prev, delta)
+    }
+
+    /// Record a touch by a CPU on NUMA node `node`: first touch homes
+    /// the region, next-touch migrates it. Returns the resolved touch
+    /// and any footprint delta.
+    pub fn touch(&self, r: RegionId, cpu: CpuId, node: usize) -> (Touch, Option<HomeChange>) {
+        let mut slots = self.slots.lock().unwrap();
+        let slot = &mut slots[r];
+        slot.touches += 1;
+        let prev_toucher = slot.last_toucher;
+        slot.last_toucher = Some(cpu);
+        let (home, delta, migrated) = match slot.home {
+            None => {
+                slot.home = Some(node);
+                (node, Some(HomeChange::Homed { owner: slot.owner, node, size: slot.size }), 0)
+            }
+            Some(old) if slot.next_touch && old != node => {
+                slot.home = Some(node);
+                slot.next_touch = false;
+                (
+                    node,
+                    Some(HomeChange::Moved {
+                        owner: slot.owner,
+                        from: old,
+                        to: node,
+                        size: slot.size,
+                    }),
+                    slot.size,
+                )
+            }
+            Some(old) => {
+                // A same-node touch also consumes the next-touch mark:
+                // the data already is where the toucher runs.
+                slot.next_touch = false;
+                (old, None, 0)
+            }
+        };
+        (Touch { home, last_toucher: prev_toucher, migrated }, delta)
+    }
+
+    /// Mark one region for next-touch migration.
+    pub fn mark_next_touch(&self, r: RegionId) {
+        self.slots.lock().unwrap()[r].next_touch = true;
+    }
+
+    /// Mark every region attached to `task` for next-touch migration
+    /// (a migrated thread asks its memory to follow it). Returns the
+    /// bytes marked.
+    pub fn mark_owner_next_touch(&self, task: TaskId) -> u64 {
+        let mut slots = self.slots.lock().unwrap();
+        let mut bytes = 0;
+        for slot in slots.iter_mut() {
+            if slot.owner == Some(task) {
+                slot.next_touch = true;
+                bytes += slot.size;
+            }
+        }
+        bytes
+    }
+
+    /// Total bytes of regions that are both attached and homed — the
+    /// amount the footprint counters must account for (conservation).
+    pub fn attached_homed_bytes(&self) -> u64 {
+        let slots = self.slots.lock().unwrap();
+        slots
+            .iter()
+            .filter(|s| s.owner.is_some() && s.home.is_some())
+            .map(|s| s.size)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_policies_place_homes() {
+        let reg = RegionRegistry::new(4);
+        let ft = reg.alloc(100, AllocPolicy::FirstTouch);
+        let fx = reg.alloc(100, AllocPolicy::Fixed(2));
+        let r0 = reg.alloc(100, AllocPolicy::RoundRobin);
+        let r1 = reg.alloc(100, AllocPolicy::RoundRobin);
+        assert_eq!(reg.home(ft), None);
+        assert_eq!(reg.home(fx), Some(2));
+        assert_eq!(reg.home(r0), Some(0));
+        assert_eq!(reg.home(r1), Some(1));
+        assert_eq!(reg.len(), 4);
+    }
+
+    #[test]
+    fn first_touch_homes_and_reports() {
+        let reg = RegionRegistry::new(2);
+        let r = reg.alloc(64, AllocPolicy::FirstTouch);
+        let (t, delta) = reg.touch(r, CpuId(3), 1);
+        assert_eq!(t.home, 1);
+        assert_eq!(t.last_toucher, None);
+        assert_eq!(t.migrated, 0);
+        assert!(matches!(delta, Some(HomeChange::Homed { node: 1, size: 64, .. })));
+        // Second touch: stable home, last toucher reported.
+        let (t2, delta2) = reg.touch(r, CpuId(0), 0);
+        assert_eq!(t2.home, 1);
+        assert_eq!(t2.last_toucher, Some(CpuId(3)));
+        assert!(delta2.is_none());
+        assert_eq!(reg.info(r).touches, 2);
+    }
+
+    #[test]
+    fn next_touch_migrates_once() {
+        let reg = RegionRegistry::new(2);
+        let r = reg.alloc(128, AllocPolicy::Fixed(0));
+        reg.mark_next_touch(r);
+        let (t, delta) = reg.touch(r, CpuId(2), 1);
+        assert_eq!(t.home, 1);
+        assert_eq!(t.migrated, 128);
+        assert!(matches!(
+            delta,
+            Some(HomeChange::Moved { from: 0, to: 1, size: 128, .. })
+        ));
+        // Mark consumed: a further remote touch does not migrate.
+        let (t2, delta2) = reg.touch(r, CpuId(0), 0);
+        assert_eq!(t2.home, 1);
+        assert_eq!(t2.migrated, 0);
+        assert!(delta2.is_none());
+    }
+
+    #[test]
+    fn same_node_touch_consumes_the_mark() {
+        let reg = RegionRegistry::new(2);
+        let r = reg.alloc(128, AllocPolicy::Fixed(1));
+        reg.mark_next_touch(r);
+        let (t, _) = reg.touch(r, CpuId(2), 1);
+        assert_eq!((t.home, t.migrated), (1, 0));
+        assert!(!reg.info(r).next_touch);
+    }
+
+    #[test]
+    fn owner_marking_and_conservation_sum() {
+        let reg = RegionRegistry::new(2);
+        let a = reg.alloc(100, AllocPolicy::Fixed(0));
+        let b = reg.alloc(50, AllocPolicy::FirstTouch);
+        let (prev, delta) = reg.attach(a, TaskId(7));
+        assert_eq!(prev, None);
+        assert!(matches!(delta, Some(HomeChange::Homed { node: 0, size: 100, .. })));
+        let (_, delta_b) = reg.attach(b, TaskId(7));
+        assert!(delta_b.is_none(), "unhomed region has no footprint yet");
+        assert_eq!(reg.attached_homed_bytes(), 100);
+        reg.touch(b, CpuId(0), 0);
+        assert_eq!(reg.attached_homed_bytes(), 150);
+        assert_eq!(reg.mark_owner_next_touch(TaskId(7)), 150);
+        assert!(reg.info(a).next_touch && reg.info(b).next_touch);
+    }
+}

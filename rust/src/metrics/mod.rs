@@ -22,6 +22,11 @@ pub struct Metrics {
     pub local_accesses: AtomicU64,
     /// Compute work items touching remote NUMA memory.
     pub remote_accesses: AtomicU64,
+    /// Regions re-homed by next-touch migration (memory followed a
+    /// thread, see [`crate::mem`]).
+    pub mem_migrations: AtomicU64,
+    /// Bytes moved by next-touch migrations.
+    pub migrated_bytes: AtomicU64,
     /// Bubbles moved one level down.
     pub bubble_descents: AtomicU64,
     /// Bubble burst events.
@@ -66,6 +71,19 @@ impl Metrics {
         }
     }
 
+    /// Fraction of memory touches that hit the local node (0 when
+    /// nothing touched memory) — the headline number of the
+    /// memory-aware comparison harness.
+    pub fn local_ratio(&self) -> f64 {
+        let l = self.local_accesses.load(Ordering::Relaxed) as f64;
+        let r = self.remote_accesses.load(Ordering::Relaxed) as f64;
+        if l + r == 0.0 {
+            0.0
+        } else {
+            l / (l + r)
+        }
+    }
+
     /// CPU utilisation = busy / (busy + idle) (0 when nothing ran).
     pub fn utilisation(&self) -> f64 {
         let b = self.busy_time.load(Ordering::Relaxed) as f64;
@@ -87,6 +105,8 @@ impl Metrics {
         t.row(&["local_accesses".into(), g(&self.local_accesses)]);
         t.row(&["remote_accesses".into(), g(&self.remote_accesses)]);
         t.row(&["remote_ratio".into(), format!("{:.3}", self.remote_ratio())]);
+        t.row(&["mem_migrations".into(), g(&self.mem_migrations)]);
+        t.row(&["migrated_bytes".into(), g(&self.migrated_bytes)]);
         t.row(&["bubble_descents".into(), g(&self.bubble_descents)]);
         t.row(&["bursts".into(), g(&self.bursts)]);
         t.row(&["regenerations".into(), g(&self.regenerations)]);
@@ -106,9 +126,11 @@ mod tests {
     fn ratios() {
         let m = Metrics::new();
         assert_eq!(m.remote_ratio(), 0.0);
+        assert_eq!(m.local_ratio(), 0.0);
         Metrics::add(&m.local_accesses, 3);
         Metrics::add(&m.remote_accesses, 1);
         assert!((m.remote_ratio() - 0.25).abs() < 1e-12);
+        assert!((m.local_ratio() - 0.75).abs() < 1e-12);
         Metrics::add(&m.busy_time, 80);
         Metrics::add(&m.idle_time, 20);
         assert!((m.utilisation() - 0.8).abs() < 1e-12);

@@ -145,6 +145,10 @@ impl Scheduler for GangScheduler {
             sys.tasks.with(task, |t| t.state = TaskState::Blocked);
         }
         st.queue.push_back(task);
+        // The gang queue is internal (no rq push), so parked native
+        // workers would otherwise only notice on their safety-net
+        // timeout: signal them explicitly.
+        sys.notify_enqueue();
     }
 
     fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {

@@ -498,6 +498,9 @@ impl Scheduler for BubbleScheduler {
                     }
                     sys.rq.push(list, task, prio);
                     sys.trace.emit(sys.now(), Event::Enqueue { task, list });
+                    // Keep the every-enqueue-notifies invariant the
+                    // native executor's parked workers rely on.
+                    sys.notify_enqueue();
                     return;
                 }
                 let parent_regen = parent

@@ -37,6 +37,12 @@
 //!   of rescanning lists: `rq.len_of(l)`, `rq.peek_max(l)`,
 //!   `rq.queued_subtree(l)`, `stats.running(l)`.
 //!
+//! A fourth surface lives outside this module but is consulted the same
+//! way: `sys.mem` ([`crate::mem::MemState`]) — **where the data
+//! lives**. The region registry plus per-task/per-bubble NUMA footprint
+//! counters, aggregated up the bubble hierarchy like `stats` aggregates
+//! up the machine hierarchy.
+//!
 //! ## Writing a new policy in ~50 lines
 //!
 //! A policy implements [`crate::sched::Scheduler`] by choosing a scan
@@ -96,6 +102,40 @@
 //! Register it in [`crate::sched::factory`] (one table entry: name,
 //! summary, build function) and it is reachable from the config file,
 //! the CLI (`repro schedulers` lists it) and every experiment harness.
+//!
+//! ## Consulting the memory footprint from a policy
+//!
+//! The paper's locality argument (§5.2: local node access is ~3×
+//! faster) only becomes actionable once the policy can ask *where a
+//! task's data lives*. That is one call against `sys.mem`
+//! ([`crate::mem::Footprint`] aggregates region bytes up the bubble
+//! hierarchy, so it works for bubbles and threads alike):
+//!
+//! ```ignore
+//! // wake: place the task on the node holding most of its data.
+//! let list = match sys.mem.dominant_node(task) {
+//!     Some(node) => {
+//!         let cpus = (0..sys.topo.n_cpus())
+//!             .map(CpuId)
+//!             .filter(|&c| sys.topo.numa_of(c) == node);
+//!         ops::least_loaded_leaf(sys, cpus)
+//!     }
+//!     None => ops::least_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId)),
+//! };
+//! ops::enqueue(sys, task, list);
+//!
+//! // steal: price the candidate victim before popping it.
+//! let vnode = sys.topo.numa_of(CpuId(sys.topo.node(victim).cpu_first));
+//! if dist.mem_factor(&sys.topo, cpu, vnode) > max_factor {
+//!     // remote-access surcharge exceeds the idle-CPU gain: refuse,
+//!     // or steal anyway and mark the thread's regions next-touch so
+//!     // its memory follows it:
+//!     sys.mem.mark_task_regions_next_touch(task);
+//! }
+//! ```
+//!
+//! [`crate::sched::MemAwareScheduler`] is the worked example: ~100
+//! lines of glue over these primitives, registered as `memaware`.
 //!
 //! ## Invariants the core maintains for you
 //!

@@ -20,6 +20,9 @@ pub fn enqueue(sys: &System, task: TaskId, list: LevelId) {
     });
     sys.rq.push(list, task, prio);
     sys.trace.emit(sys.now(), Event::Enqueue { task, list });
+    // Wake parked idle workers (native executor); no-op under the
+    // polling simulator.
+    sys.notify_enqueue();
 }
 
 /// Mark a popped task Running on `cpu`, accounting migrations, picks,

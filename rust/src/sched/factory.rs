@@ -14,7 +14,7 @@ use super::baselines::{
     AfsScheduler, BoundScheduler, CafsScheduler, GangScheduler, GssScheduler, HafsScheduler,
     LdsScheduler, SsScheduler, TssScheduler,
 };
-use super::{BubbleScheduler, Scheduler};
+use super::{BubbleScheduler, MemAwareScheduler, Scheduler};
 use crate::config::{SchedConfig, SchedKind};
 use crate::util::fmt::Table;
 
@@ -30,7 +30,7 @@ pub struct PolicyInfo {
     build: fn(&SchedConfig) -> Arc<dyn Scheduler>,
 }
 
-static REGISTRY: [PolicyInfo; 10] = [
+static REGISTRY: [PolicyInfo; 11] = [
     PolicyInfo {
         kind: SchedKind::Bubble,
         name: "bubble",
@@ -93,6 +93,13 @@ static REGISTRY: [PolicyInfo; 10] = [
         aliases: &[],
         summary: "predetermined thread-to-CPU binding (Table-2 'Bound')",
         build: |_| Arc::new(BoundScheduler::new()),
+    },
+    PolicyInfo {
+        kind: SchedKind::Memaware,
+        name: "memaware",
+        aliases: &["mem", "memory-aware"],
+        summary: "memory-aware: place by NUMA footprint, refuse costly remote steals",
+        build: |_| Arc::new(MemAwareScheduler::default()),
     },
     PolicyInfo {
         kind: SchedKind::Gang,

@@ -1,0 +1,250 @@
+//! The memory-aware policy: place threads where their data lives.
+//!
+//! ROADMAP's first follow-on to the `sched/core` extraction, in the
+//! direction of the paper's successors (BubbleSched, arXiv 0706.2069;
+//! ForestGOMP, arXiv 0706.2073): scheduling pays off only when threads
+//! run *near their data* (§5.2's 3× NUMA factor), so this policy makes
+//! the [`crate::mem`] footprint a first-class placement input:
+//!
+//! * **wake** — a woken task (bubble or thread) goes to the least
+//!   loaded leaf of the NUMA node holding the plurality of its
+//!   footprint; bubbles pass their aggregated footprint down to members
+//!   with no data of their own. Footprint-less tasks fall back to
+//!   last-CPU affinity, then to machine-wide least-loaded.
+//! * **pick** — the paper's two-pass search over the covering chain;
+//!   ties go to the more local list, which under this wake policy means
+//!   the more footprint-local list.
+//! * **steal** — closest-victim-first, but a steal whose remote-access
+//!   surcharge ([`DistanceModel::mem_factor`]) exceeds
+//!   `max_steal_factor` is *refused* unless the victim queue is at
+//!   least `desperate_queue` deep (only then does the idle-CPU gain
+//!   clearly outweigh the NUMA penalty). A cross-node steal marks the
+//!   stolen thread's regions **next-touch** so its memory follows it
+//!   (migrated bytes surface in `metrics.migrated_bytes`).
+//! * **stop** — yielded/preempted threads requeue towards their
+//!   footprint's node, snapping back to their data after a forced
+//!   remote excursion (unless next-touch migration already moved the
+//!   data to them).
+//!
+//! Pure policy glue over [`super::core`] + [`crate::mem`]: no state of
+//! its own beyond tunables.
+
+use super::core::{ops, pick, traversal};
+use super::{Scheduler, StopReason, System};
+use crate::task::TaskId;
+use crate::topology::{CpuId, DistanceModel};
+
+/// Tunables for the memory-aware policy.
+#[derive(Debug, Clone)]
+pub struct MemAwareConfig {
+    /// Distance model used to price candidate steals (defaults to the
+    /// paper's NovaScale factors; configure to match the machine).
+    pub dist: DistanceModel,
+    /// Refuse steals whose `mem_factor` exceeds this…
+    pub max_steal_factor: f64,
+    /// …unless the victim list holds at least this many tasks (then an
+    /// extra CPU wins even at remote-access cost).
+    pub desperate_queue: usize,
+}
+
+impl Default for MemAwareConfig {
+    fn default() -> Self {
+        MemAwareConfig {
+            dist: DistanceModel::default(),
+            max_steal_factor: 2.0,
+            desperate_queue: 3,
+        }
+    }
+}
+
+/// Memory-aware scheduler (registry name: `memaware`).
+#[derive(Debug)]
+pub struct MemAwareScheduler {
+    cfg: MemAwareConfig,
+}
+
+impl MemAwareScheduler {
+    pub fn new(cfg: MemAwareConfig) -> MemAwareScheduler {
+        MemAwareScheduler { cfg }
+    }
+
+    /// Memory-aware steal: closest victims first, remote ones only when
+    /// cheap enough or desperate. Cross-node steals ask the thread's
+    /// memory to follow it (next-touch).
+    fn steal(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        if sys.rq.total_queued() == 0 {
+            return None;
+        }
+        let topo = &sys.topo;
+        let here = topo.numa_of(cpu);
+        for &v in topo.steal_order(cpu) {
+            let qlen = sys.rq.len_of(v);
+            if qlen == 0 {
+                continue;
+            }
+            let vnode = topo.numa_of(CpuId(topo.node(v).cpu_first));
+            let factor = self.cfg.dist.mem_factor(topo, cpu, vnode);
+            if factor > self.cfg.max_steal_factor && qlen < self.cfg.desperate_queue {
+                continue; // remote-access cost exceeds the idle-CPU gain
+            }
+            if let Some((t, _prio)) = ops::pop_steal(sys, cpu, v) {
+                if vnode != here {
+                    sys.mem.mark_task_regions_next_touch(t);
+                }
+                ops::dispatch(sys, cpu, t, topo.leaf_of(cpu));
+                return Some(t);
+            }
+        }
+        None
+    }
+}
+
+impl Default for MemAwareScheduler {
+    fn default() -> Self {
+        MemAwareScheduler::new(MemAwareConfig::default())
+    }
+}
+
+/// Least loaded leaf among the CPUs of one NUMA node.
+fn node_leaf(sys: &System, node: usize) -> crate::topology::LevelId {
+    ops::least_loaded_leaf(
+        sys,
+        (0..sys.topo.n_cpus()).map(CpuId).filter(|&c| sys.topo.numa_of(c) == node),
+    )
+}
+
+impl Scheduler for MemAwareScheduler {
+    fn name(&self) -> String {
+        "memaware".into()
+    }
+
+    fn wake(&self, sys: &System, task: TaskId) {
+        // The bubble's aggregated footprint is the group's home; read it
+        // before flattening parks the bubble.
+        let group = sys.mem.dominant_node(task);
+        ops::flatten_wake(sys, task, &mut |sys, t| {
+            let list = match sys.mem.dominant_node(t).or(group) {
+                Some(node) => node_leaf(sys, node),
+                None => sys
+                    .tasks
+                    .with(t, |x| x.last_cpu)
+                    .map(|c| sys.topo.leaf_of(c))
+                    .unwrap_or_else(|| {
+                        ops::least_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId))
+                    }),
+            };
+            ops::enqueue(sys, t, list);
+        });
+    }
+
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let order = traversal::covering(&sys.topo, cpu);
+        if let Some(t) = pick::pick_thread(sys, cpu, order) {
+            return Some(t);
+        }
+        self.steal(sys, cpu)
+    }
+
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
+            let here = sys.topo.numa_of(cpu);
+            let list = match sys.mem.dominant_node(t) {
+                // Requeue towards the data when we drifted off its node.
+                Some(node) if node != here => node_leaf(sys, node),
+                _ => sys.topo.leaf_of(cpu),
+            };
+            ops::enqueue(sys, t, list)
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::AllocPolicy;
+    use crate::sched::baselines::testsupport;
+    use crate::sched::testutil::system;
+    use crate::task::PRIO_THREAD;
+    use crate::topology::Topology;
+
+    #[test]
+    fn behavioural_suite() {
+        testsupport::drains_all_work(&MemAwareScheduler::default(), Topology::numa(2, 2), 40);
+        testsupport::flattens_bubbles(&MemAwareScheduler::default(), Topology::smp(2));
+        testsupport::block_wake_roundtrip(&MemAwareScheduler::default(), Topology::smp(2));
+    }
+
+    #[test]
+    fn wake_places_on_footprint_node() {
+        let sys = system(Topology::numa(2, 2));
+        let s = MemAwareScheduler::default();
+        let t = sys.tasks.new_thread("t", PRIO_THREAD);
+        let r = sys.mem.alloc(1 << 20, AllocPolicy::Fixed(1));
+        sys.mem.attach(&sys.tasks, t, r);
+        s.wake(&sys, t);
+        let list = sys.tasks.with(t, |x| x.last_list).unwrap();
+        let leaf_cpu = CpuId(sys.topo.node(list).cpu_first);
+        assert_eq!(sys.topo.numa_of(leaf_cpu), 1, "thread must land on its data's node");
+    }
+
+    #[test]
+    fn bubble_footprint_guides_members_without_own_data() {
+        let sys = system(Topology::numa(2, 2));
+        let s = MemAwareScheduler::default();
+        let m = crate::marcel::Marcel::with_system(&sys);
+        let b = m.bubble_init();
+        let owner = m.create_dontsched("owner");
+        let tagalong = m.create_dontsched("tagalong");
+        m.bubble_inserttask(b, owner);
+        m.bubble_inserttask(b, tagalong);
+        let r = m.region_alloc(1 << 20, AllocPolicy::Fixed(1));
+        m.attach_region(owner, r);
+        s.wake(&sys, b);
+        for t in [owner, tagalong] {
+            let list = sys.tasks.with(t, |x| x.last_list).unwrap();
+            let leaf_cpu = CpuId(sys.topo.node(list).cpu_first);
+            assert_eq!(sys.topo.numa_of(leaf_cpu), 1, "{}", sys.tasks.name(t));
+        }
+    }
+
+    #[test]
+    fn shallow_remote_steal_is_refused_deep_one_allowed() {
+        let sys = system(Topology::numa(2, 2));
+        let s = MemAwareScheduler::default();
+        let victim = sys.topo.leaf_of(CpuId(2)); // other node than cpu0
+        let t0 = sys.tasks.new_thread("t0", PRIO_THREAD);
+        ops::enqueue(&sys, t0, victim);
+        // One queued remote task: factor 3.0 > cap 2.0, queue 1 < 3.
+        assert_eq!(s.pick(&sys, CpuId(0)), None, "shallow remote steal must be refused");
+        // Same-node CPUs still take it.
+        assert_eq!(s.pick(&sys, CpuId(3)), Some(t0));
+        s.stop(&sys, CpuId(3), t0, StopReason::Terminate);
+        // Deep remote queue: desperation wins.
+        let mut ts = Vec::new();
+        for i in 0..3 {
+            let t = sys.tasks.new_thread(format!("d{i}"), PRIO_THREAD);
+            ops::enqueue(&sys, t, victim);
+            ts.push(t);
+        }
+        let got = s.pick(&sys, CpuId(0));
+        assert!(got.is_some(), "deep remote queue must be stolen from");
+    }
+
+    #[test]
+    fn cross_node_steal_marks_regions_next_touch() {
+        let sys = system(Topology::numa(2, 2));
+        let s = MemAwareScheduler::default();
+        let victim = sys.topo.leaf_of(CpuId(2));
+        let mut ts = Vec::new();
+        for i in 0..3 {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            let r = sys.mem.alloc(4096, AllocPolicy::Fixed(1));
+            sys.mem.attach(&sys.tasks, t, r);
+            ops::enqueue(&sys, t, victim);
+            ts.push((t, r));
+        }
+        let got = s.pick(&sys, CpuId(0)).expect("desperate steal");
+        let (_, r) = ts.iter().find(|(t, _)| *t == got).unwrap();
+        assert!(sys.mem.info(*r).next_touch, "stolen thread's memory must follow it");
+    }
+}

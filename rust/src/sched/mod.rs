@@ -10,9 +10,11 @@ pub mod baselines;
 mod bubble;
 pub mod core;
 pub mod factory;
+mod memaware;
 mod system;
 
 pub use bubble::{BubbleConfig, BubbleScheduler};
+pub use memaware::{MemAwareConfig, MemAwareScheduler};
 pub use system::System;
 
 use crate::task::TaskId;

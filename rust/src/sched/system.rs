@@ -1,15 +1,39 @@
 //! Shared scheduler state: topology + task table + list hierarchy +
 //! metrics + trace, bundled so engines and schedulers pass one handle.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use super::core::stats::LoadStats;
+use crate::mem::MemState;
 use crate::metrics::Metrics;
 use crate::rq::RqHierarchy;
 use crate::task::TaskTable;
 use crate::topology::Topology;
 use crate::trace::Trace;
+
+/// Optional callback fired after every `ops::enqueue` (installed by the
+/// native executor so idle workers wake on work arrival instead of
+/// timing out; engines that poll never set it). Replaceable, so a
+/// second executor over the same system takes over wakeups instead of
+/// silently notifying a dead parking lot. The atomic flag keeps the
+/// hookless (simulator) enqueue hot path at one relaxed load — no lock,
+/// no Arc churn.
+#[derive(Default)]
+struct EnqueueHook {
+    set: AtomicBool,
+    hook: RwLock<Option<Arc<dyn Fn() + Send + Sync>>>,
+}
+
+impl std::fmt::Debug for EnqueueHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.set.load(Ordering::Relaxed) {
+            "EnqueueHook(set)"
+        } else {
+            "EnqueueHook(unset)"
+        })
+    }
+}
 
 /// Everything a scheduler needs to see the machine and its tasks.
 #[derive(Debug)]
@@ -20,11 +44,15 @@ pub struct System {
     /// Incremental per-level load statistics (see [`LoadStats`]),
     /// maintained by the `sched::core::ops` building blocks.
     pub stats: LoadStats,
+    /// Memory state: region registry + per-task/bubble NUMA footprint
+    /// (see [`crate::mem`]). Policies consult it on wake/pick/steal.
+    pub mem: MemState,
     pub metrics: Metrics,
     pub trace: Trace,
     /// Engine clock (simulated cycles / native ns); engines advance it,
     /// schedulers read it for trace timestamps.
     clock: AtomicU64,
+    enqueue_hook: EnqueueHook,
 }
 
 impl System {
@@ -32,14 +60,39 @@ impl System {
     pub fn new(topo: Arc<Topology>) -> System {
         let rq = RqHierarchy::new(&topo);
         let stats = LoadStats::new(&topo);
+        let mem = MemState::new(&topo);
         System {
             topo,
             tasks: TaskTable::new(),
             rq,
             stats,
+            mem,
             metrics: Metrics::new(),
             trace: Trace::default(),
             clock: AtomicU64::new(0),
+            enqueue_hook: EnqueueHook::default(),
+        }
+    }
+
+    /// Install the enqueue notification hook, replacing any previous
+    /// one. Called by engines that park idle workers.
+    pub fn set_enqueue_hook(&self, hook: Arc<dyn Fn() + Send + Sync>) {
+        *self.enqueue_hook.hook.write().unwrap() = Some(hook);
+        self.enqueue_hook.set.store(true, Ordering::Release);
+    }
+
+    /// Fire the enqueue hook, if any ([`crate::sched::core::ops::enqueue`]
+    /// calls this after pushing a task). Hookless engines pay one
+    /// relaxed atomic load; with a hook the Arc is cloned out of the
+    /// read lock before the call so a slow hook cannot block
+    /// `set_enqueue_hook`.
+    pub fn notify_enqueue(&self) {
+        if !self.enqueue_hook.set.load(Ordering::Acquire) {
+            return;
+        }
+        let hook = self.enqueue_hook.hook.read().unwrap().clone();
+        if let Some(h) = hook {
+            h();
         }
     }
 
@@ -71,5 +124,34 @@ mod tests {
     fn rq_matches_topology() {
         let s = System::new(Arc::new(Topology::numa(4, 4)));
         assert_eq!(s.rq.len(), s.topo.n_components());
+    }
+
+    #[test]
+    fn mem_state_matches_numa_count() {
+        let s = System::new(Arc::new(Topology::numa(4, 4)));
+        assert_eq!(s.mem.footprint.n_nodes(), 4);
+    }
+
+    #[test]
+    fn enqueue_hook_fires_and_is_replaceable() {
+        use std::sync::atomic::AtomicUsize;
+        let s = System::new(Arc::new(Topology::smp(2)));
+        s.notify_enqueue(); // unset: no-op
+        let first = Arc::new(AtomicUsize::new(0));
+        let h = first.clone();
+        s.set_enqueue_hook(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        s.notify_enqueue();
+        assert_eq!(first.load(Ordering::SeqCst), 1);
+        // A later engine over the same system takes over the wakeups.
+        let second = Arc::new(AtomicUsize::new(0));
+        let h = second.clone();
+        s.set_enqueue_hook(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        s.notify_enqueue();
+        assert_eq!(first.load(Ordering::SeqCst), 1, "old hook must be replaced");
+        assert_eq!(second.load(Ordering::SeqCst), 1);
     }
 }

@@ -12,7 +12,10 @@
 
 use crate::topology::{CpuId, DistanceModel, Topology};
 
-/// Inputs describing the state around one compute chunk.
+/// Inputs describing the state around one compute chunk. The memory
+/// side (`region_home`, `last_toucher`) is resolved from the region
+/// registry via [`ChunkCtx::from_touch`]; only region-less chunks are
+/// built by hand.
 #[derive(Debug, Clone, Copy)]
 pub struct ChunkCtx {
     /// Fraction of the chunk that is memory-bound (NUMA-sensitive).
@@ -25,6 +28,26 @@ pub struct ChunkCtx {
     pub sibling_busy: bool,
     /// Is the sibling's thread a declared symbiotic partner?
     pub sibling_symbiotic: bool,
+}
+
+impl ChunkCtx {
+    /// Build a chunk context from a registry-resolved touch (see
+    /// [`crate::mem::MemState::touch`]): the region's home and previous
+    /// toucher come from the registry, not caller-supplied fields.
+    pub fn from_touch(
+        touch: &crate::mem::Touch,
+        mem_fraction: f64,
+        sibling_busy: bool,
+        sibling_symbiotic: bool,
+    ) -> ChunkCtx {
+        ChunkCtx {
+            mem_fraction,
+            region_home: Some(touch.home),
+            last_toucher: touch.last_toucher,
+            sibling_busy,
+            sibling_symbiotic,
+        }
+    }
 }
 
 /// Stateless cost evaluator over a machine + distance model.
@@ -132,6 +155,15 @@ mod tests {
         );
         assert_eq!(alone, 1000);
         assert!(contended > symbiotic && symbiotic > alone);
+    }
+
+    #[test]
+    fn from_touch_mirrors_registry_state() {
+        let t = crate::mem::Touch { home: 2, last_toucher: Some(CpuId(5)), migrated: 0 };
+        let ctx = ChunkCtx::from_touch(&t, 0.4, true, false);
+        assert_eq!(ctx.region_home, Some(2));
+        assert_eq!(ctx.last_toucher, Some(CpuId(5)));
+        assert!(ctx.sibling_busy && !ctx.sibling_symbiotic);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
+use crate::mem::DEFAULT_REGION_BYTES;
 use crate::metrics::Metrics;
 use crate::sched::{Scheduler, StopReason, System};
 use crate::task::{Prio, TaskId, TaskState};
@@ -29,17 +30,10 @@ use crate::topology::CpuId;
 use crate::trace::Event as TraceEvent;
 use crate::util::Rng;
 
-/// Memory allocation policy for simulated regions (paper §2.3).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum AllocPolicy {
-    /// Homed on the node of the first CPU that touches it (the OS
-    /// default the paper's applications rely on).
-    FirstTouch,
-    /// Spread across nodes in allocation order.
-    RoundRobin,
-    /// Explicitly placed on one node.
-    Fixed(usize),
-}
+// Region state lives in the system-wide registry ([`crate::mem`]) so
+// schedulers can consult it; the engine-local copy this module used to
+// keep is gone. The policy type is re-exported for compatibility.
+pub use crate::mem::AllocPolicy;
 
 /// Engine tunables.
 #[derive(Debug, Clone)]
@@ -105,13 +99,6 @@ struct BarrierState {
     waiting: Vec<TaskId>,
 }
 
-#[derive(Debug, Default)]
-struct RegionState {
-    home: Option<usize>,
-    /// CPU that last touched the region (cache-line ownership).
-    last_cpu: Option<CpuId>,
-}
-
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Ev {
     /// CPU is free: ask the scheduler for work.
@@ -134,7 +121,6 @@ pub struct SimEngine {
     cost: CostModel,
     cfg: SimConfig,
     programs: HashMap<TaskId, (Program, Cursor)>,
-    regions: Vec<RegionState>,
     barriers: Vec<BarrierState>,
     /// join target -> waiters.
     join_waiters: HashMap<TaskId, Vec<TaskId>>,
@@ -150,8 +136,6 @@ pub struct SimEngine {
     busy: Vec<u64>,
     finished_at: u64,
     rng: Rng,
-    /// Round-robin allocation cursor.
-    rr_next: usize,
 }
 
 impl SimEngine {
@@ -165,7 +149,6 @@ impl SimEngine {
             cost,
             cfg,
             programs: HashMap::new(),
-            regions: Vec::new(),
             barriers: Vec::new(),
             join_waiters: HashMap::new(),
             prev_cpu: HashMap::new(),
@@ -176,36 +159,35 @@ impl SimEngine {
             busy: vec![0; n],
             finished_at: 0,
             rng: Rng::new(cfg_seed),
-            rr_next: 0,
         }
     }
 
-    /// Allocate a memory region (first-touch homing).
+    /// Allocate a memory region (first-touch homing, default size).
     pub fn alloc_region(&mut self) -> RegionId {
-        self.regions.push(RegionState::default());
-        self.regions.len() - 1
+        self.sys.mem.alloc(DEFAULT_REGION_BYTES, AllocPolicy::FirstTouch)
     }
 
     /// Allocate a region explicitly homed on a NUMA node.
     pub fn alloc_region_on(&mut self, numa: usize) -> RegionId {
-        self.regions.push(RegionState { home: Some(numa), last_cpu: None });
-        self.regions.len() - 1
+        self.sys.mem.alloc(DEFAULT_REGION_BYTES, AllocPolicy::Fixed(numa))
     }
 
     /// Allocate a region under a policy (paper §2.3: modern systems
     /// "let the application choose the memory allocation policy
     /// (specific memory node, first touch or round robin)").
     pub fn alloc_region_policy(&mut self, policy: AllocPolicy) -> RegionId {
-        match policy {
-            AllocPolicy::FirstTouch => self.alloc_region(),
-            AllocPolicy::Fixed(node) => self.alloc_region_on(node),
-            AllocPolicy::RoundRobin => {
-                let n = self.sys.topo.n_numa().max(1);
-                let node = self.rr_next % n;
-                self.rr_next += 1;
-                self.alloc_region_on(node)
-            }
-        }
+        self.sys.mem.alloc(DEFAULT_REGION_BYTES, policy)
+    }
+
+    /// Allocate a region of `bytes` under a policy (footprint-weighted).
+    pub fn alloc_region_sized(&mut self, bytes: u64, policy: AllocPolicy) -> RegionId {
+        self.sys.mem.alloc(bytes, policy)
+    }
+
+    /// Attach a region to a task: its bytes count towards the task's
+    /// (and its bubbles') NUMA footprint (see [`crate::mem`]).
+    pub fn attach_region(&mut self, task: TaskId, region: RegionId) {
+        self.sys.mem.attach(&self.sys.tasks, task, region);
     }
 
     /// Create a barrier for `parties` participants.
@@ -233,7 +215,7 @@ impl SimEngine {
 
     /// NUMA home of a region (None before first touch).
     pub fn region_home(&self, r: RegionId) -> Option<usize> {
-        self.regions[r].home
+        self.sys.mem.home(r)
     }
 
     fn push_event(&mut self, at: u64, cpu: CpuId, kind: u8) {
@@ -347,31 +329,32 @@ impl SimEngine {
                     if slice == 0 {
                         break; // quantum exhausted
                     }
-                    // First touch homes the region on this CPU's node.
-                    let (home, last_toucher) = match region {
-                        Some(r) => {
-                            if self.regions[r].home.is_none() {
-                                self.regions[r].home = Some(self.sys.topo.numa_of(cpu));
-                            }
-                            let h = self.regions[r].home;
-                            if h == Some(self.sys.topo.numa_of(cpu)) {
-                                Metrics::inc(&self.sys.metrics.local_accesses);
-                            } else {
-                                Metrics::inc(&self.sys.metrics.remote_accesses);
-                            }
-                            let last = self.regions[r].last_cpu;
-                            self.regions[r].last_cpu = Some(cpu);
-                            (h, last)
+                    // The registry resolves the touch: first touch
+                    // homes the region, next-touch migrates it, and
+                    // the footprint accounting follows.
+                    let touch = region
+                        .map(|r| self.sys.mem.touch(&self.sys.tasks, &self.sys.topo, r, cpu));
+                    if let Some(t) = &touch {
+                        if t.home == self.sys.topo.numa_of(cpu) {
+                            Metrics::inc(&self.sys.metrics.local_accesses);
+                        } else {
+                            Metrics::inc(&self.sys.metrics.remote_accesses);
                         }
-                        None => (None, None),
-                    };
+                        if t.migrated > 0 {
+                            Metrics::inc(&self.sys.metrics.mem_migrations);
+                            Metrics::add(&self.sys.metrics.migrated_bytes, t.migrated);
+                        }
+                    }
                     let (sib_busy, sib_symb) = self.sibling_state(cpu, task);
-                    let ctx = ChunkCtx {
-                        mem_fraction,
-                        region_home: home,
-                        last_toucher,
-                        sibling_busy: sib_busy,
-                        sibling_symbiotic: sib_symb,
+                    let ctx = match &touch {
+                        Some(t) => ChunkCtx::from_touch(t, mem_fraction, sib_busy, sib_symb),
+                        None => ChunkCtx {
+                            mem_fraction,
+                            region_home: None,
+                            last_toucher: None,
+                            sibling_busy: sib_busy,
+                            sibling_symbiotic: sib_symb,
+                        },
                     };
                     wall += self.cost.chunk_cycles(&self.sys.topo, cpu, slice, &ctx);
                     work += slice;

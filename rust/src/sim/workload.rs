@@ -2,10 +2,10 @@
 
 use crate::task::TaskId;
 
-/// Memory region handle (simulator-level). Regions are homed on a NUMA
-/// node at first touch (the OS policy the paper's applications rely
-/// on), or explicitly.
-pub type RegionId = usize;
+/// Memory region handle: programs reference regions registered in the
+/// system-wide registry ([`crate::mem`]), which resolves homing
+/// (first-touch / explicit / round-robin) and next-touch migration.
+pub use crate::mem::RegionId;
 
 /// Barrier handle.
 pub type BarrierId = usize;

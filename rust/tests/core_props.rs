@@ -279,6 +279,11 @@ fn conservation_gang() {
     check(0xc0de0a, 20, |rng| conservation_for(SchedKind::Gang, rng));
 }
 
+#[test]
+fn conservation_memaware() {
+    check(0xc0de0b, 20, |rng| conservation_for(SchedKind::Memaware, rng));
+}
+
 // ----------------------------------------------- running-count stats
 
 /// The incremental running counters agree with ground truth under a

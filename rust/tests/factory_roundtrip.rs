@@ -1,0 +1,76 @@
+//! Policy-registry round trips: every registered policy must be
+//! reachable from every entry point — config TOML, the CLI `--sched`
+//! path, and the `repro schedulers` listing — and the listing must stay
+//! in sync with the registry (names, aliases, count).
+
+use bubbles::cli;
+use bubbles::config::{ExperimentConfig, SchedKind};
+use bubbles::sched::factory;
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(|x| x.to_string()).collect()
+}
+
+#[test]
+fn every_policy_constructible_from_config_toml() {
+    for e in factory::registry() {
+        for name in std::iter::once(&e.name).chain(e.aliases.iter()) {
+            let toml = format!("[sched]\nkind = \"{name}\"");
+            let cfg = ExperimentConfig::from_toml(&toml)
+                .unwrap_or_else(|err| panic!("`{name}` rejected by config: {err}"));
+            assert_eq!(cfg.sched.kind, e.kind, "`{name}` resolved to the wrong kind");
+            let sched = factory::make(&cfg.sched);
+            assert_eq!(sched.name(), e.name, "name() must match the registry");
+        }
+    }
+}
+
+#[test]
+fn cli_sched_flag_parses_every_policy_and_alias() {
+    // `--sched <name>` goes through SchedKind::parse, which must accept
+    // every canonical name and alias, case-insensitively.
+    for e in factory::registry() {
+        assert_eq!(SchedKind::parse(e.name), Some(e.kind), "{}", e.name);
+        assert_eq!(SchedKind::parse(&e.name.to_uppercase()), Some(e.kind), "{}", e.name);
+        for a in e.aliases {
+            assert_eq!(SchedKind::parse(a), Some(e.kind), "alias {a}");
+        }
+    }
+    assert_eq!(SchedKind::parse("definitely-not-a-policy"), None);
+}
+
+#[test]
+fn cli_analyze_runs_registry_policies_end_to_end() {
+    // Full `--sched` path on a small machine for a paper policy and the
+    // memory-aware one (the zoo covers the rest in-sim).
+    for sched in ["afs", "memaware"] {
+        let out = cli::run(&argv(&format!("analyze --machine numa-2x2 --sched {sched}")))
+            .unwrap_or_else(|err| panic!("analyze --sched {sched}: {err}"));
+        assert!(out.contains(sched), "{out}");
+        assert!(out.contains("makespan"), "{out}");
+    }
+}
+
+#[test]
+fn schedulers_listing_stays_in_sync_with_registry() {
+    let out = cli::run(&argv("schedulers")).unwrap();
+    assert!(
+        out.contains(&format!("({})", factory::registry().len())),
+        "listing must report the registry size:\n{out}"
+    );
+    for e in factory::registry() {
+        assert!(out.contains(e.name), "{} missing from listing:\n{out}", e.name);
+        assert!(out.contains(e.summary), "summary of {} missing", e.name);
+        for a in e.aliases {
+            assert!(out.contains(a), "alias {a} missing from listing");
+        }
+    }
+    // SchedKind::all and the registry must cover each other 1:1.
+    assert_eq!(SchedKind::all().len(), factory::registry().len());
+    for kind in SchedKind::all() {
+        assert!(
+            factory::registry().iter().any(|e| e.kind == *kind),
+            "{kind:?} unregistered"
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Memory-subsystem properties (ISSUE-2 acceptance): footprint
+//! conservation — at every step, the per-node bytes summed over root
+//! tasks equal the total size of attached, homed regions — plus
+//! dominant-node consistency, under randomised op sequences and under a
+//! real memory-bound run.
+
+use std::sync::Arc;
+
+use bubbles::config::SchedKind;
+use bubbles::marcel::Marcel;
+use bubbles::mem::AllocPolicy;
+use bubbles::sched::factory::make_default;
+use bubbles::sched::System;
+use bubbles::sim::{CostModel, SimConfig, SimEngine};
+use bubbles::topology::{CpuId, DistanceModel, Topology};
+use bubbles::util::proptest;
+
+#[test]
+fn footprint_conservation_under_random_ops() {
+    proptest::check(0x6d656d, 30, |rng| {
+        let topo = Topology::numa(4, 4);
+        let n_cpus = topo.n_cpus();
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        let m = Marcel::with_system(&sys);
+        // A little bubble forest to aggregate into.
+        let mut tasks = Vec::new();
+        for b in 0..3 {
+            let bubble = m.bubble_init();
+            for k in 0..3 {
+                let t = m.create_dontsched(format!("b{b}t{k}"));
+                m.bubble_inserttask(bubble, t);
+                tasks.push(t);
+            }
+        }
+        for k in 0..3 {
+            tasks.push(m.create_dontsched(format!("loose{k}")));
+        }
+        let mut regions = Vec::new();
+        for step in 0..200 {
+            match rng.below(5) {
+                0 => {
+                    let policy = match rng.below(3) {
+                        0 => AllocPolicy::FirstTouch,
+                        1 => AllocPolicy::RoundRobin,
+                        _ => AllocPolicy::Fixed(rng.below(4) as usize),
+                    };
+                    let size = 1 + rng.below(1 << 20);
+                    regions.push(sys.mem.alloc(size, policy));
+                }
+                1 if !regions.is_empty() => {
+                    let r = *rng.choose(&regions);
+                    let t = *rng.choose(&tasks);
+                    sys.mem.attach(&sys.tasks, t, r);
+                }
+                2 if !regions.is_empty() => {
+                    let r = *rng.choose(&regions);
+                    let cpu = CpuId(rng.below(n_cpus as u64) as usize);
+                    sys.mem.touch(&sys.tasks, &sys.topo, r, cpu);
+                }
+                3 if !regions.is_empty() => {
+                    let r = *rng.choose(&regions);
+                    sys.mem.mark_next_touch(r);
+                }
+                4 => {
+                    let t = *rng.choose(&tasks);
+                    sys.mem.mark_task_regions_next_touch(t);
+                }
+                _ => {}
+            }
+            assert!(
+                sys.mem.conserved(&sys.tasks),
+                "conservation broken at step {step}"
+            );
+            // Dominant node must agree with the raw counters.
+            for &t in &tasks {
+                let v = sys.mem.footprint.of(t);
+                match sys.mem.dominant_node(t) {
+                    None => assert!(v.iter().all(|&b| b == 0)),
+                    Some(n) => {
+                        let max = *v.iter().max().unwrap();
+                        assert!(v[n] == max && max > 0, "dominant {n} of {v:?}");
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn memaware_run_conserves_footprint_and_counts_migrations() {
+    let topo = Topology::numa(4, 4);
+    let sys = Arc::new(System::new(Arc::new(topo)));
+    let sched = make_default(SchedKind::Memaware);
+    let mut e = SimEngine::new(
+        sys,
+        sched,
+        CostModel::new(DistanceModel::default()),
+        SimConfig::default(),
+    );
+    let p = bubbles::apps::conduction::HeatParams {
+        threads: 24,
+        cycles: 8,
+        work: 400_000,
+        mem_fraction: 0.35,
+    };
+    bubbles::apps::conduction::build(&mut e, bubbles::apps::StructureMode::Simple, &p);
+    e.run().expect("memaware conduction");
+    assert!(e.sys.mem.conserved(&e.sys.tasks), "footprint leaked during the run");
+    // Migration counters must agree: bytes move only when regions do.
+    use std::sync::atomic::Ordering;
+    let migs = e.sys.metrics.mem_migrations.load(Ordering::Relaxed);
+    let bytes = e.sys.metrics.migrated_bytes.load(Ordering::Relaxed);
+    assert_eq!(migs == 0, bytes == 0, "migrations {migs} vs bytes {bytes}");
+}

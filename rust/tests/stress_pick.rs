@@ -1,0 +1,99 @@
+//! Multi-worker stress: N OS threads hammering one `System` through the
+//! real scheduler pick/stop paths (ROADMAP open item — exercises the
+//! `core::pick` two-pass retry accounting under genuine contention).
+//!
+//! Properties pinned:
+//! * **task conservation** — every woken thread is picked exactly once
+//!   and ends Terminated (the two-pass search may retry, but a task can
+//!   never be lost or handed to two CPUs);
+//! * **retry accounting** — `metrics.search_retries` is reported for
+//!   each policy (the single-list `ss` policy maximises hint races).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use bubbles::config::SchedKind;
+use bubbles::sched::factory::make_default;
+use bubbles::sched::{StopReason, System};
+use bubbles::task::{TaskId, TaskState, PRIO_THREAD};
+use bubbles::topology::{CpuId, Topology};
+
+/// Wake `n_tasks` threads, then let one OS worker per CPU pick+terminate
+/// until everything drained. Returns the search_retries counter.
+fn hammer(kind: SchedKind, n_tasks: usize) -> u64 {
+    let sys = Arc::new(System::new(Arc::new(Topology::numa(4, 4))));
+    let sched = make_default(kind);
+    for i in 0..n_tasks {
+        let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+        sched.wake(&sys, t);
+    }
+    let picked: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..n_tasks).map(|_| AtomicUsize::new(0)).collect());
+    let done = Arc::new(AtomicUsize::new(0));
+    let n_cpus = sys.topo.n_cpus();
+    let mut joins = Vec::with_capacity(n_cpus);
+    for w in 0..n_cpus {
+        let sys = sys.clone();
+        let sched = sched.clone();
+        let picked = picked.clone();
+        let done = done.clone();
+        joins.push(std::thread::spawn(move || {
+            let cpu = CpuId(w);
+            while done.load(Ordering::SeqCst) < n_tasks {
+                match sched.pick(&sys, cpu) {
+                    Some(t) => {
+                        picked[t.0].fetch_add(1, Ordering::SeqCst);
+                        sched.stop(&sys, cpu, t, StopReason::Terminate);
+                        done.fetch_add(1, Ordering::SeqCst);
+                    }
+                    None => std::thread::yield_now(),
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("worker panicked");
+    }
+    for (i, c) in picked.iter().enumerate() {
+        assert_eq!(
+            c.load(Ordering::SeqCst),
+            1,
+            "task t{i} picked {} times under {}",
+            c.load(Ordering::SeqCst),
+            kind.label()
+        );
+    }
+    for i in 0..n_tasks {
+        assert_eq!(sys.tasks.state(TaskId(i)), TaskState::Terminated, "t{i}");
+    }
+    let retries = sys.metrics.search_retries.load(Ordering::Relaxed);
+    println!(
+        "{}: {} tasks over {} workers, search_retries = {}",
+        kind.label(),
+        n_tasks,
+        n_cpus,
+        retries
+    );
+    retries
+}
+
+#[test]
+fn ss_conserves_tasks_under_contention() {
+    // One global list: the worst case for pass-2 races.
+    hammer(SchedKind::Ss, 2000);
+}
+
+#[test]
+fn afs_conserves_tasks_under_contention() {
+    hammer(SchedKind::Afs, 2000);
+}
+
+#[test]
+fn lds_conserves_tasks_under_contention() {
+    hammer(SchedKind::Lds, 2000);
+}
+
+#[test]
+fn memaware_conserves_tasks_under_contention() {
+    hammer(SchedKind::Memaware, 2000);
+}
