@@ -62,6 +62,18 @@ pub fn scheduler_for(mode: StructureMode) -> Arc<dyn Scheduler> {
 
 /// Engine over an explicit scheduler (ablations sweep these).
 pub fn engine_with(topo: &Topology, sched: Arc<dyn Scheduler>, cfg: SimConfig) -> SimEngine {
+    engine_with_model(topo, sched, cfg, DistanceModel::default())
+}
+
+/// Engine over an explicit scheduler *and* distance model (config-driven
+/// runs price memory accesses with the machine's own model, asymmetric
+/// matrices included).
+pub fn engine_with_model(
+    topo: &Topology,
+    sched: Arc<dyn Scheduler>,
+    cfg: SimConfig,
+    dist: DistanceModel,
+) -> SimEngine {
     let sys = Arc::new(System::new(Arc::new(topo.clone())));
-    SimEngine::new(sys, sched, CostModel::new(DistanceModel::default()), cfg)
+    SimEngine::new(sys, sched, CostModel::new(dist), cfg)
 }

@@ -9,7 +9,7 @@ use crate::apps::conduction::HeatParams;
 use crate::apps::fib::FibParams;
 use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
-use crate::experiments::{ablations, fig5, memcmp, table1, table2};
+use crate::experiments::{ablations, adaptcmp, fig5, memcmp, table1, table2};
 use crate::topology::Topology;
 
 /// Parsed command line: positional command + `--key value` options.
@@ -20,17 +20,28 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse `argv[1..]`.
+    /// Parse `argv[1..]`. A `--key` consumes the next argument as its
+    /// value; the known boolean flags may stand bare
+    /// (`repro adaptcmp --smoke`) and default to `"true"`. Any other
+    /// `--key` without a value is still an error, so a forgotten value
+    /// (`--config` with no path) fails loudly instead of becoming the
+    /// literal value `true`.
     pub fn parse(argv: &[String]) -> Result<Args> {
+        const BOOL_FLAGS: &[&str] = &["smoke"];
         let mut args = Args::default();
-        let mut it = argv.iter();
+        let mut it = argv.iter().peekable();
         args.command = it.next().cloned().unwrap_or_else(|| "help".to_string());
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
-                let val = it
-                    .next()
-                    .ok_or_else(|| Error::config(format!("--{key} needs a value")))?;
-                args.options.insert(key.to_string(), val.clone());
+                let next_is_value = it.peek().map(|v| !v.starts_with("--")).unwrap_or(false);
+                let val = if next_is_value {
+                    it.next().cloned().unwrap()
+                } else if BOOL_FLAGS.contains(&key) {
+                    "true".to_string()
+                } else {
+                    return Err(Error::config(format!("--{key} needs a value")));
+                };
+                args.options.insert(key.to_string(), val);
             } else {
                 return Err(Error::config(format!("unexpected argument `{a}`")));
             }
@@ -41,6 +52,11 @@ impl Args {
     /// Option accessor with default.
     pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.options.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    /// Boolean flag: present and not explicitly disabled.
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.get(key).map(|v| v != "false" && v != "0").unwrap_or(false)
     }
 
     fn machine(&self) -> Result<Topology> {
@@ -65,6 +81,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         "fig5" => cmd_fig5(&args),
         "ablations" => cmd_ablations(&args),
         "memcmp" => cmd_memcmp(&args),
+        "adaptcmp" => cmd_adaptcmp(&args),
         "run" => cmd_run(&args),
         "analyze" => cmd_analyze(&args),
         "evolve" => cmd_evolve(&args),
@@ -86,6 +103,8 @@ COMMANDS
   fig5       fibonacci bubble gain (Figure 5)    [--machine xeon-2x-ht|numa-4x4]
   ablations  design-choice sweeps                [--which burst|regen|zoo|all]
   memcmp     local vs remote access ratio per policy [--machine, --scheds a,b,c]
+  adaptcmp   adaptive steal-scope vs fixed scopes on bursty/phase-change load
+             [--machine, --scheds a,b,c, --smoke] (writes BENCH_adaptive.json)
   run        config-driven simulation            [--config file.toml]
   analyze    traced run + scheduler analysis     [--machine, --app, --sched]
   evolve     traced bubble evolution (Figure 3)  [--machine numa-4x4]
@@ -213,6 +232,49 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
     ))
 }
 
+fn cmd_adaptcmp(args: &Args) -> Result<String> {
+    let topo = args.machine()?;
+    let kinds = match args.options.get("scheds") {
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                crate::config::SchedKind::parse(s.trim()).ok_or_else(|| {
+                    Error::config(format!("unknown scheduler `{s}`; try `repro schedulers`"))
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => adaptcmp::default_kinds(),
+    };
+    let smoke = args.flag("smoke");
+    let (pp, bp) = if smoke {
+        (adaptcmp::PhaseParams::smoke(&topo), adaptcmp::BurstParams::smoke(&topo))
+    } else {
+        (adaptcmp::PhaseParams::for_machine(&topo), adaptcmp::BurstParams::for_machine(&topo))
+    };
+    let phase = adaptcmp::run_phase(&topo, &pp, &kinds);
+    let bursty = adaptcmp::run_bursty(&topo, &bp, &kinds);
+    let mut rows = phase.json_rows("phase");
+    rows.extend(bursty.json_rows("bursty"));
+    let json = format!(
+        "{{\n  \"bench\": \"adaptcmp\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"results\": [{}]\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        topo.name(),
+        rows.join(",")
+    );
+    let note = match std::fs::write("BENCH_adaptive.json", &json) {
+        Ok(()) => "wrote BENCH_adaptive.json".to_string(),
+        Err(e) => format!("could not write BENCH_adaptive.json: {e}"),
+    };
+    Ok(format!(
+        "adaptive steal-scope comparison on `{}`{}\n\n{}\n{}\n{}",
+        topo.name(),
+        if smoke { " (smoke)" } else { "" },
+        phase.render(),
+        bursty.render(),
+        note
+    ))
+}
+
 fn cmd_run(args: &Args) -> Result<String> {
     let cfg = match args.options.get("config") {
         Some(path) => ExperimentConfig::from_file(path)?,
@@ -220,7 +282,12 @@ fn cmd_run(args: &Args) -> Result<String> {
     };
     let topo = cfg.machine.build_topology()?;
     let sched = crate::sched::factory::make(&cfg.sched);
-    let mut engine = crate::apps::engine_with(&topo, sched, crate::sim::SimConfig::default());
+    let mut engine = crate::apps::engine_with_model(
+        &topo,
+        sched,
+        crate::sim::SimConfig::default(),
+        cfg.machine.distance_model(),
+    );
     let w = &cfg.workload;
     match w.app.as_str() {
         "conduction" | "advection" => {
@@ -376,8 +443,20 @@ mod tests {
         let a = Args::parse(&argv("fig5 --machine deep --threads 2,4")).unwrap();
         assert_eq!(a.command, "fig5");
         assert_eq!(a.get("machine", "x"), "deep");
-        assert!(Args::parse(&argv("x --flag")).is_err());
         assert!(Args::parse(&argv("x stray")).is_err());
+        // Value-taking options still fail loudly without a value.
+        assert!(Args::parse(&argv("x --flag")).is_err());
+        assert!(Args::parse(&argv("run --config")).is_err());
+        // Known boolean flags may stand bare, before another option or
+        // at the end.
+        let f = Args::parse(&argv("adaptcmp --smoke --machine deep")).unwrap();
+        assert!(f.flag("smoke"));
+        assert_eq!(f.get("machine", "x"), "deep");
+        let g = Args::parse(&argv("adaptcmp --smoke")).unwrap();
+        assert!(g.flag("smoke"));
+        assert!(!g.flag("json"));
+        let h = Args::parse(&argv("adaptcmp --smoke false")).unwrap();
+        assert!(!h.flag("smoke"));
     }
 
     #[test]
@@ -421,6 +500,18 @@ mod tests {
         assert!(out.contains("afs"), "{out}");
         assert!(out.contains("local ratio"), "{out}");
         let err = run(&argv("memcmp --machine numa-2x2 --scheds warp")).unwrap_err();
+        assert!(err.to_string().contains("unknown scheduler"), "{err}");
+    }
+
+    #[test]
+    fn adaptcmp_command_reports_both_workloads() {
+        let out = run(&argv("adaptcmp --machine numa-2x2 --scheds adaptive,afs --smoke")).unwrap();
+        assert!(out.contains("adaptive"), "{out}");
+        assert!(out.contains("afs"), "{out}");
+        assert!(out.contains("phase-changing"), "{out}");
+        assert!(out.contains("bursty"), "{out}");
+        assert!(out.contains("BENCH_adaptive.json"), "{out}");
+        let err = run(&argv("adaptcmp --machine numa-2x2 --scheds warp")).unwrap_err();
         assert!(err.to_string().contains("unknown scheduler"), "{err}");
     }
 

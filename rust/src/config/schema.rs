@@ -17,6 +17,10 @@ pub struct MachineConfig {
     pub smt_contention: f64,
     pub smt_symbiosis: f64,
     pub cache_line_penalty: f64,
+    /// Asymmetric per-node-pair access factors: `machine.numa_matrix`
+    /// is an array of `"1.0,1.5,6.0"`-style row strings (one row per
+    /// NUMA node, diagonal 1.0). Overrides `numa_factor` where set.
+    pub numa_matrix: Option<Vec<Vec<f64>>>,
 }
 
 impl Default for MachineConfig {
@@ -30,25 +34,42 @@ impl Default for MachineConfig {
             smt_contention: d.smt_contention,
             smt_symbiosis: d.smt_symbiosis,
             cache_line_penalty: d.cache_line_penalty,
+            numa_matrix: None,
         }
     }
 }
 
 impl MachineConfig {
-    /// Instantiate the topology.
+    /// Instantiate the topology. Also the point where the distance
+    /// matrix is checked against the machine: a matrix sized for a
+    /// different node count would silently half-apply (in-range pairs
+    /// priced by the matrix, the rest by the scalar fallback).
     pub fn build_topology(&self) -> Result<Topology> {
-        if let Some(p) = &self.preset {
-            return Topology::preset(p)
-                .ok_or_else(|| Error::config(format!("unknown machine preset `{p}`")));
+        let topo = if let Some(p) = &self.preset {
+            Topology::preset(p)
+                .ok_or_else(|| Error::config(format!("unknown machine preset `{p}`")))?
+        } else {
+            if self.levels.is_empty() {
+                return Err(Error::config("machine: no preset and no levels"));
+            }
+            let mut b = TopoBuilder::new("custom");
+            for &(kind, arity) in &self.levels {
+                b = b.split(kind, arity);
+            }
+            b.build()?
+        };
+        if let Some(m) = &self.numa_matrix {
+            if m.len() != topo.n_numa() {
+                return Err(Error::config(format!(
+                    "numa_matrix is {}x{} but machine `{}` has {} NUMA nodes",
+                    m.len(),
+                    m.len(),
+                    topo.name(),
+                    topo.n_numa()
+                )));
+            }
         }
-        if self.levels.is_empty() {
-            return Err(Error::config("machine: no preset and no levels"));
-        }
-        let mut b = TopoBuilder::new("custom");
-        for &(kind, arity) in &self.levels {
-            b = b.split(kind, arity);
-        }
-        b.build()
+        Ok(topo)
     }
 
     /// Instantiate the cost distances.
@@ -59,6 +80,7 @@ impl MachineConfig {
             smt_contention: self.smt_contention,
             smt_symbiosis: self.smt_symbiosis,
             cache_line_penalty: self.cache_line_penalty,
+            numa_matrix: self.numa_matrix.clone(),
         }
     }
 }
@@ -88,6 +110,12 @@ pub enum SchedKind {
     Memaware,
     /// Ousterhout gang scheduling (§3.1).
     Gang,
+    /// Adaptive steal scope (ARMS direction): per-CPU scope widens on
+    /// steal failures, narrows with hysteresis on calm epochs.
+    Adaptive,
+    /// Moldable gangs: gang scheduling that shrinks a gang's CPU set
+    /// instead of idling processors (malleable-job direction).
+    MoldableGang,
 }
 
 impl SchedKind {
@@ -110,6 +138,8 @@ impl SchedKind {
             SchedKind::Bound,
             SchedKind::Memaware,
             SchedKind::Gang,
+            SchedKind::Adaptive,
+            SchedKind::MoldableGang,
         ]
     }
 
@@ -133,11 +163,30 @@ pub struct SchedConfig {
     pub thread_steal: bool,
     pub timeslice: Option<u64>,
     pub regen_hysteresis: u64,
+    /// `adaptive`: consecutive empty picks before a CPU widens its
+    /// steal scope one level (`sched.adapt_widen_after`).
+    pub adapt_widen_after: u32,
+    /// `adaptive`: pick events per narrow-rate decision epoch
+    /// (`sched.adapt_epoch`).
+    pub adapt_epoch: u32,
+    /// `adaptive`: consecutive calm epochs before the scope narrows
+    /// one level (`sched.adapt_hysteresis`).
+    pub adapt_hysteresis: u32,
+    /// `moldable-gang`: consecutive agreeing resize evaluations before
+    /// a gang's CPU set shrinks or expands (`sched.resize_hysteresis`).
+    pub resize_hysteresis: u32,
+    /// The machine's distance model, resolved from the `[machine]`
+    /// section by [`ExperimentConfig::from_toml`]; distance-pricing
+    /// policies (`memaware`) read it from here instead of assuming the
+    /// NovaScale default.
+    pub dist: DistanceModel,
 }
 
 impl Default for SchedConfig {
     fn default() -> Self {
         let b = BubbleConfig::default();
+        let a = crate::sched::AdaptiveConfig::default();
+        let m = crate::sched::MoldableConfig::default();
         SchedConfig {
             kind: SchedKind::Bubble,
             burst: b.default_burst,
@@ -145,6 +194,11 @@ impl Default for SchedConfig {
             thread_steal: b.thread_steal,
             timeslice: b.default_timeslice,
             regen_hysteresis: b.regen_hysteresis,
+            adapt_widen_after: a.widen_after,
+            adapt_epoch: a.epoch,
+            adapt_hysteresis: a.hysteresis,
+            resize_hysteresis: m.resize_hysteresis,
+            dist: DistanceModel::default(),
         }
     }
 }
@@ -204,6 +258,10 @@ impl ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
         cfg.machine = machine_from(&doc)?;
         cfg.sched = sched_from(&doc)?;
+        // Distance-pricing policies see the *machine's* model, not the
+        // built-in default (ROADMAP follow-on: memaware reads the real
+        // DistanceModel from config).
+        cfg.sched.dist = cfg.machine.distance_model();
         cfg.workload = workload_from(&doc)?;
         Ok(cfg)
     }
@@ -269,6 +327,40 @@ fn machine_from(doc: &Doc) -> Result<MachineConfig> {
     if let Some(f) = get_f64(doc, "machine.cache_line_penalty") {
         m.cache_line_penalty = f;
     }
+    if let Some(Value::Array(rows)) = doc.get("machine.numa_matrix") {
+        let mut matrix = Vec::with_capacity(rows.len());
+        for row in rows {
+            let s = row
+                .as_str()
+                .ok_or_else(|| Error::config("machine.numa_matrix rows must be strings"))?;
+            let parsed: std::result::Result<Vec<f64>, _> =
+                s.split(',').map(|x| x.trim().parse::<f64>()).collect();
+            matrix.push(parsed.map_err(|_| {
+                Error::config(format!("bad numa_matrix row `{s}` (want `1.0,3.0,…`)"))
+            })?);
+        }
+        let n = matrix.len();
+        if matrix.iter().any(|r| r.len() != n) {
+            return Err(Error::config("machine.numa_matrix must be square"));
+        }
+        for (i, row) in matrix.iter().enumerate() {
+            for (j, &f) in row.iter().enumerate() {
+                // Factors are relative to local access: nothing may be
+                // cheaper than local, and the diagonal *is* local.
+                if !f.is_finite() || f < 1.0 {
+                    return Err(Error::config(format!(
+                        "numa_matrix[{i}][{j}] = {f}: factors must be finite and >= 1.0"
+                    )));
+                }
+                if i == j && f != 1.0 {
+                    return Err(Error::config(format!(
+                        "numa_matrix[{i}][{i}] = {f}: the diagonal (local access) must be 1.0"
+                    )));
+                }
+            }
+        }
+        m.numa_matrix = Some(matrix);
+    }
     Ok(m)
 }
 
@@ -307,6 +399,18 @@ fn sched_from(doc: &Doc) -> Result<SchedConfig> {
     }
     if let Some(h) = get_u64(doc, "sched.regen_hysteresis") {
         s.regen_hysteresis = h;
+    }
+    if let Some(v) = get_u64(doc, "sched.adapt_widen_after") {
+        s.adapt_widen_after = (v.max(1)).min(u32::MAX as u64) as u32;
+    }
+    if let Some(v) = get_u64(doc, "sched.adapt_epoch") {
+        s.adapt_epoch = (v.max(1)).min(u32::MAX as u64) as u32;
+    }
+    if let Some(v) = get_u64(doc, "sched.adapt_hysteresis") {
+        s.adapt_hysteresis = (v.max(1)).min(u32::MAX as u64) as u32;
+    }
+    if let Some(v) = get_u64(doc, "sched.resize_hysteresis") {
+        s.resize_hysteresis = (v.max(1)).min(u32::MAX as u64) as u32;
     }
     Ok(s)
 }
@@ -412,5 +516,69 @@ mod tests {
         for k in SchedKind::all() {
             assert_eq!(SchedKind::parse(k.label()), Some(*k));
         }
+    }
+
+    #[test]
+    fn adaptive_and_moldable_knobs_parse() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [sched]
+            kind = "adaptive"
+            adapt_widen_after = 4
+            adapt_epoch = 16
+            adapt_hysteresis = 3
+            resize_hysteresis = 2
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.sched.kind, SchedKind::Adaptive);
+        assert_eq!(cfg.sched.adapt_widen_after, 4);
+        assert_eq!(cfg.sched.adapt_epoch, 16);
+        assert_eq!(cfg.sched.adapt_hysteresis, 3);
+        assert_eq!(cfg.sched.resize_hysteresis, 2);
+        assert_eq!(SchedKind::parse("moldable-gang"), Some(SchedKind::MoldableGang));
+        assert_eq!(SchedKind::parse("moldable"), Some(SchedKind::MoldableGang));
+    }
+
+    #[test]
+    fn machine_distance_model_reaches_sched_config() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [machine]
+            preset = "numa-3x1"
+            numa_factor = 1.8
+            numa_matrix = ["1.0, 1.5, 6.0", "1.5, 1.0, 2.0", "6.0, 2.0, 1.0"]
+            [sched]
+            kind = "memaware"
+            "#,
+        )
+        .unwrap();
+        // The sched section carries the machine's resolved model…
+        assert_eq!(cfg.sched.dist.numa_factor, 1.8);
+        let m = cfg.sched.dist.numa_matrix.as_ref().expect("matrix parsed");
+        assert_eq!(m.len(), 3);
+        assert_eq!(m[0][2], 6.0);
+        // …and bad matrices are rejected.
+        assert!(ExperimentConfig::from_toml(
+            "[machine]\nnuma_matrix = [\"1.0, 2.0\"]"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml("[machine]\nnuma_matrix = [\"x\"]").is_err());
+        // Sub-local, non-finite and non-unit-diagonal factors error.
+        for bad in [
+            "[machine]\nnuma_matrix = [\"1.0, -2.0\", \"0.0, 1.0\"]",
+            "[machine]\nnuma_matrix = [\"1.0, 0.5\", \"0.5, 1.0\"]",
+            "[machine]\nnuma_matrix = [\"2.0, 3.0\", \"3.0, 2.0\"]",
+        ] {
+            assert!(ExperimentConfig::from_toml(bad).is_err(), "{bad}");
+        }
+        // A matrix sized for a different machine is caught at topology
+        // build time (parsing cannot know the machine yet).
+        let mismatched = ExperimentConfig::from_toml(
+            "[machine]\npreset = \"numa-4x4\"\nnuma_matrix = [\"1.0, 2.0\", \"2.0, 1.0\"]",
+        )
+        .unwrap();
+        let err = mismatched.machine.build_topology().unwrap_err();
+        assert!(err.to_string().contains("NUMA nodes"), "{err}");
     }
 }

@@ -199,6 +199,8 @@ fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
         }
         let seq_before = inner.park.seq.load(Ordering::SeqCst);
         let Some(task) = inner.sched.pick(&inner.sys, cpu) else {
+            crate::metrics::Metrics::inc(&inner.sys.metrics.idle_picks);
+            inner.sys.rates.on_idle(&inner.sys.topo, cpu);
             // Nothing pickable. Park until the enqueue hook notifies
             // (see Executor::new for the missed-wakeup protocol; the
             // timeout backstops exit-path notifies, which fire

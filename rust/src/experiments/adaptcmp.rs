@@ -1,0 +1,342 @@
+//! Adaptive-policy comparison harness: bursty and phase-changing load.
+//!
+//! The `adaptive` policy's claim is conditional: a *fixed* steal scope
+//! only loses when the load shifts — machine-wide stealing (AFS)
+//! scatters threads away from their data on every transient dip, while
+//! scope-confined stealing idles CPUs when imbalance crosses the
+//! boundary. So the harness measures exactly the shifting-load cases:
+//!
+//! * **phase-changing** ([`build_phases`]): barrier-coupled stripes
+//!   whose heavy group rotates every phase (an AMR-style refinement
+//!   front hopping around the mesh);
+//! * **bursty** ([`build_bursts`]): a driver wakes waves of short
+//!   threads with quiet gaps between, so the machine oscillates
+//!   between oversubscribed and starved.
+//!
+//! `repro adaptcmp` prints the tables and drops `BENCH_adaptive.json`;
+//! the tests pin the headline result (adaptive beats AFS on makespan
+//! *and* locality on the phase-changing workload on numa(4,4)).
+
+use std::sync::atomic::Ordering;
+
+use crate::apps::engine_with;
+use crate::config::SchedKind;
+use crate::sched::factory::make_default;
+use crate::sim::{Program, SimConfig, SimEngine};
+use crate::task::{TaskId, PRIO_THREAD};
+use crate::topology::Topology;
+use crate::util::fmt::Table;
+
+/// Stripe bytes per thread (large enough that locality dominates).
+const REGION_BYTES: u64 = 4 << 20;
+
+/// Phase-changing workload parameters.
+#[derive(Debug, Clone)]
+pub struct PhaseParams {
+    /// Stripes (oversubscribe the machine so rebalancing is real).
+    pub threads: usize,
+    /// Barrier phases; the hot group rotates every phase.
+    pub phases: usize,
+    /// Base compute per stripe per phase.
+    pub work: u64,
+    /// Hot-group multiplier.
+    pub hot_factor: u64,
+    /// Memory-bound fraction (the NUMA-sensitive part).
+    pub mem_fraction: f64,
+}
+
+impl PhaseParams {
+    /// The pinned comparison configuration for a machine.
+    pub fn for_machine(topo: &Topology) -> PhaseParams {
+        PhaseParams {
+            threads: topo.n_cpus() + topo.n_cpus() / 2,
+            phases: 12,
+            work: 500_000,
+            hot_factor: 3,
+            mem_fraction: 0.5,
+        }
+    }
+
+    /// CI smoke variant: same shape, far less work.
+    pub fn smoke(topo: &Topology) -> PhaseParams {
+        PhaseParams { phases: 4, work: 150_000, ..PhaseParams::for_machine(topo) }
+    }
+}
+
+/// Bursty workload parameters.
+#[derive(Debug, Clone)]
+pub struct BurstParams {
+    /// Waves of thread arrivals.
+    pub waves: usize,
+    /// Threads per wave.
+    pub per_wave: usize,
+    /// Compute per thread (split into `chunks` yield points).
+    pub work: u64,
+    pub chunks: usize,
+    /// Driver compute between waves (the quiet gap).
+    pub gap: u64,
+    pub mem_fraction: f64,
+}
+
+impl BurstParams {
+    pub fn for_machine(topo: &Topology) -> BurstParams {
+        BurstParams {
+            waves: 6,
+            per_wave: topo.n_cpus(),
+            work: 400_000,
+            chunks: 4,
+            gap: 600_000,
+            mem_fraction: 0.4,
+        }
+    }
+
+    pub fn smoke(topo: &Topology) -> BurstParams {
+        BurstParams { waves: 3, work: 120_000, gap: 200_000, ..BurstParams::for_machine(topo) }
+    }
+}
+
+/// Build the phase-changing stripes into an engine. Thread `i` belongs
+/// to group `i % n_numa`; in phase `p` the group `p % n_numa` computes
+/// `hot_factor`× the base work. Stripe data is first-touch homed.
+pub fn build_phases(engine: &mut SimEngine, p: &PhaseParams) -> Vec<TaskId> {
+    let n_groups = engine.sys.topo.n_numa().max(2);
+    let barrier = engine.alloc_barrier(p.threads);
+    let mut out = Vec::with_capacity(p.threads);
+    for i in 0..p.threads {
+        let r = engine.alloc_region_sized(REGION_BYTES, crate::sim::AllocPolicy::FirstTouch);
+        let g = i % n_groups;
+        let mut prog = Program::new();
+        for ph in 0..p.phases {
+            let w = if ph % n_groups == g { p.work * p.hot_factor } else { p.work };
+            prog = prog.compute(w, p.mem_fraction, Some(r)).barrier(barrier);
+        }
+        let t = engine.add_thread(format!("phase{i}"), PRIO_THREAD, prog);
+        engine.attach_region(t, r);
+        engine.wake(t);
+        out.push(t);
+    }
+    out
+}
+
+/// Build the bursty workload: a driver thread wakes `waves` batches of
+/// workers with a compute gap between arrivals.
+pub fn build_bursts(engine: &mut SimEngine, p: &BurstParams) -> Vec<TaskId> {
+    let mut workers = Vec::with_capacity(p.waves * p.per_wave);
+    for w in 0..p.waves {
+        for i in 0..p.per_wave {
+            let r =
+                engine.alloc_region_sized(REGION_BYTES, crate::sim::AllocPolicy::FirstTouch);
+            let mut prog = Program::new();
+            let chunk = (p.work / p.chunks.max(1) as u64).max(1);
+            for _ in 0..p.chunks.max(1) {
+                prog = prog.compute(chunk, p.mem_fraction, Some(r));
+            }
+            let t = engine.add_thread(format!("w{w}b{i}"), PRIO_THREAD, prog);
+            engine.attach_region(t, r);
+            workers.push(t);
+        }
+    }
+    let mut driver = Program::new();
+    for w in 0..p.waves {
+        driver = driver.compute(p.gap, 0.0, None);
+        for i in 0..p.per_wave {
+            driver = driver.wake(workers[w * p.per_wave + i]);
+        }
+    }
+    let d = engine.add_thread("driver", PRIO_THREAD, driver);
+    engine.wake(d);
+    workers
+}
+
+/// One policy's behaviour on one workload.
+#[derive(Debug, Clone)]
+pub struct AdaptRow {
+    pub sched: String,
+    pub makespan: u64,
+    pub local_ratio: f64,
+    pub migrations: u64,
+    pub cross_node: u64,
+    pub steals: u64,
+    pub scope_widens: u64,
+    pub scope_narrows: u64,
+}
+
+/// The comparison result.
+#[derive(Debug, Clone)]
+pub struct AdaptCmp {
+    pub title: String,
+    pub rows: Vec<AdaptRow>,
+}
+
+impl AdaptCmp {
+    /// Row accessor by policy name (panics on unknown name — harness
+    /// misuse).
+    pub fn get(&self, sched: &str) -> &AdaptRow {
+        self.rows.iter().find(|r| r.sched == sched).expect("unknown policy row")
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "policy",
+            "makespan (Mcycles)",
+            "local ratio",
+            "migrations",
+            "cross-node",
+            "steals",
+            "widens",
+            "narrows",
+        ]);
+        for r in &self.rows {
+            t.row(&[
+                r.sched.clone(),
+                format!("{:.2}", r.makespan as f64 / 1e6),
+                format!("{:.3}", r.local_ratio),
+                r.migrations.to_string(),
+                r.cross_node.to_string(),
+                r.steals.to_string(),
+                r.scope_widens.to_string(),
+                r.scope_narrows.to_string(),
+            ]);
+        }
+        format!("== {} ==\n{}", self.title, t.render())
+    }
+
+    /// Minimal JSON for the CI artifact trail (`BENCH_adaptive.json`).
+    pub fn json_rows(&self, workload: &str) -> Vec<String> {
+        self.rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"workload\":\"{}\",\"policy\":\"{}\",\"makespan\":{},\"local_ratio\":{:.4},\"migrations\":{},\"cross_node\":{}}}",
+                    workload, r.sched, r.makespan, r.local_ratio, r.migrations, r.cross_node
+                )
+            })
+            .collect()
+    }
+}
+
+/// Policies compared by default: the adaptive policy against the
+/// strongest fixed-scope opportunists and the memory-aware policy.
+pub fn default_kinds() -> Vec<SchedKind> {
+    vec![SchedKind::Adaptive, SchedKind::Afs, SchedKind::Lds, SchedKind::Cafs, SchedKind::Memaware]
+}
+
+fn collect(title: String, runs: Vec<(SchedKind, SimEngine, u64)>) -> AdaptCmp {
+    let rows = runs
+        .into_iter()
+        .map(|(kind, e, makespan)| {
+            let m = &e.sys.metrics;
+            AdaptRow {
+                sched: kind.label().to_string(),
+                makespan,
+                local_ratio: m.local_ratio(),
+                migrations: m.migrations.load(Ordering::Relaxed),
+                cross_node: m.cross_node_migrations.load(Ordering::Relaxed),
+                steals: m.steals.load(Ordering::Relaxed),
+                scope_widens: m.scope_widens.load(Ordering::Relaxed),
+                scope_narrows: m.scope_narrows.load(Ordering::Relaxed),
+            }
+        })
+        .collect();
+    AdaptCmp { title, rows }
+}
+
+/// Run the phase-changing workload under each policy.
+pub fn run_phase(topo: &Topology, p: &PhaseParams, kinds: &[SchedKind]) -> AdaptCmp {
+    let mut runs = Vec::with_capacity(kinds.len());
+    for &kind in kinds {
+        let mut e = engine_with(topo, make_default(kind), SimConfig::default());
+        build_phases(&mut e, p);
+        let rep = e.run().expect("adaptcmp phase run");
+        runs.push((kind, e, rep.total_time));
+    }
+    collect(
+        format!(
+            "phase-changing load ({} stripes, {} phases, {})",
+            p.threads,
+            p.phases,
+            topo.name()
+        ),
+        runs,
+    )
+}
+
+/// Run the bursty workload under each policy.
+pub fn run_bursty(topo: &Topology, p: &BurstParams, kinds: &[SchedKind]) -> AdaptCmp {
+    let mut runs = Vec::with_capacity(kinds.len());
+    for &kind in kinds {
+        let mut e = engine_with(topo, make_default(kind), SimConfig::default());
+        build_bursts(&mut e, p);
+        let rep = e.run().expect("adaptcmp bursty run");
+        runs.push((kind, e, rep.total_time));
+    }
+    collect(
+        format!("bursty load ({}×{} arrivals, {})", p.waves, p.per_wave, topo.name()),
+        runs,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_beats_afs_on_phase_change() {
+        // ISSUE-3 acceptance: on the phase-changing workload on the
+        // numa(4,4) preset, the adaptive scope must beat fixed
+        // machine-wide stealing on makespan *and* locality.
+        let topo = Topology::numa(4, 4);
+        let p = PhaseParams::for_machine(&topo);
+        let c = run_phase(&topo, &p, &[SchedKind::Adaptive, SchedKind::Afs]);
+        let ad = c.get("adaptive");
+        let afs = c.get("afs");
+        assert!(ad.makespan > 0 && afs.makespan > 0);
+        assert!(
+            ad.local_ratio > afs.local_ratio,
+            "adaptive {:.3} must beat afs {:.3} on locality",
+            ad.local_ratio,
+            afs.local_ratio
+        );
+        assert!(
+            ad.makespan < afs.makespan,
+            "adaptive {} must beat afs {} on makespan",
+            ad.makespan,
+            afs.makespan
+        );
+    }
+
+    #[test]
+    fn adaptive_keeps_cross_node_traffic_below_afs_on_bursts() {
+        let topo = Topology::numa(4, 4);
+        let p = BurstParams::smoke(&topo);
+        let c = run_bursty(&topo, &p, &[SchedKind::Adaptive, SchedKind::Afs]);
+        let ad = c.get("adaptive");
+        let afs = c.get("afs");
+        assert!(ad.makespan > 0 && afs.makespan > 0);
+        assert!(
+            ad.cross_node <= afs.cross_node,
+            "adaptive cross-node {} must not exceed afs {}",
+            ad.cross_node,
+            afs.cross_node
+        );
+    }
+
+    #[test]
+    fn render_lists_every_policy_and_scope_switches() {
+        let topo = Topology::numa(2, 2);
+        let p = PhaseParams {
+            threads: 6,
+            phases: 3,
+            work: 150_000,
+            hot_factor: 2,
+            mem_fraction: 0.4,
+        };
+        let c = run_phase(&topo, &p, &default_kinds());
+        let out = c.render();
+        for k in default_kinds() {
+            assert!(out.contains(k.label()), "{} missing:\n{out}", k.label());
+        }
+        assert!(out.contains("widens"));
+        assert_eq!(c.json_rows("phase").len(), default_kinds().len());
+    }
+}

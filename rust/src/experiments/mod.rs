@@ -5,6 +5,7 @@
 //! paper-style table.
 
 pub mod ablations;
+pub mod adaptcmp;
 pub mod fig5;
 pub mod memcmp;
 pub mod table1;

@@ -13,9 +13,14 @@
 //!   policies consult for placement.
 //! * **Schedulers** — [`sched`] contains the bubble scheduler (the paper's
 //!   contribution: bubbles descend the list hierarchy, burst at their
-//!   bursting level, and are regenerated on imbalance or timeslice expiry)
-//!   plus nine baseline schedulers from the paper's related-work section
-//!   (SS, GSS, TSS, AFS, LDS, CAFS, HAFS, bound, gang).
+//!   bursting level, and are regenerated on imbalance or timeslice expiry),
+//!   nine baseline schedulers from the paper's related-work section
+//!   (SS, GSS, TSS, AFS, LDS, CAFS, HAFS, bound, gang), and the
+//!   follow-on policies built on the `sched::core` primitives: the
+//!   memory-aware placer (`memaware`), the feedback-driven adaptive
+//!   steal scope (`adaptive`), and moldable gangs (`moldable-gang`).
+//!   Every policy registers in `sched::factory` and is gated by the
+//!   factory-enumerated conformance suite.
 //! * **Execution engines** — [`sim`] is a deterministic discrete-event
 //!   simulator with a NUMA/cache/SMT cost model (the evaluation substrate:
 //!   the paper's Bull NovaScale and Xeon testbeds are simulated per

@@ -18,6 +18,9 @@ pub struct Metrics {
     pub idle_picks: AtomicU64,
     /// Thread resumed on a different CPU than its last one.
     pub migrations: AtomicU64,
+    /// Subset of `migrations` that crossed a NUMA-node boundary (the
+    /// expensive kind: the thread leaves its memory behind).
+    pub cross_node_migrations: AtomicU64,
     /// Compute work items touching memory on the local NUMA node.
     pub local_accesses: AtomicU64,
     /// Compute work items touching remote NUMA memory.
@@ -35,6 +38,17 @@ pub struct Metrics {
     pub regenerations: AtomicU64,
     /// Tasks stolen across lists by opportunist baselines.
     pub steals: AtomicU64,
+    /// Steal searches that found no victim (the signal the adaptive
+    /// policy widens its scope on).
+    pub steal_fails: AtomicU64,
+    /// Adaptive policy: a CPU widened its steal scope one level.
+    pub scope_widens: AtomicU64,
+    /// Adaptive policy: a CPU narrowed its steal scope one level.
+    pub scope_narrows: AtomicU64,
+    /// Moldable gangs: a gang's CPU set shrank to a child component.
+    pub gang_shrinks: AtomicU64,
+    /// Moldable gangs: a gang's CPU set expanded to its parent.
+    pub gang_expands: AtomicU64,
     /// Threads preempted by timeslice expiry.
     pub preemptions: AtomicU64,
     /// Busy engine-time units summed over CPUs.
@@ -102,6 +116,7 @@ impl Metrics {
         t.row(&["picks".into(), g(&self.picks)]);
         t.row(&["idle_picks".into(), g(&self.idle_picks)]);
         t.row(&["migrations".into(), g(&self.migrations)]);
+        t.row(&["cross_node_migrations".into(), g(&self.cross_node_migrations)]);
         t.row(&["local_accesses".into(), g(&self.local_accesses)]);
         t.row(&["remote_accesses".into(), g(&self.remote_accesses)]);
         t.row(&["remote_ratio".into(), format!("{:.3}", self.remote_ratio())]);
@@ -111,6 +126,11 @@ impl Metrics {
         t.row(&["bursts".into(), g(&self.bursts)]);
         t.row(&["regenerations".into(), g(&self.regenerations)]);
         t.row(&["steals".into(), g(&self.steals)]);
+        t.row(&["steal_fails".into(), g(&self.steal_fails)]);
+        t.row(&["scope_widens".into(), g(&self.scope_widens)]);
+        t.row(&["scope_narrows".into(), g(&self.scope_narrows)]);
+        t.row(&["gang_shrinks".into(), g(&self.gang_shrinks)]);
+        t.row(&["gang_expands".into(), g(&self.gang_expands)]);
         t.row(&["preemptions".into(), g(&self.preemptions)]);
         t.row(&["utilisation".into(), format!("{:.3}", self.utilisation())]);
         t.row(&["search_retries".into(), g(&self.search_retries)]);

@@ -1,0 +1,387 @@
+//! The adaptive steal-scope policy: per-CPU feedback control over *how
+//! far* work may be pulled from.
+//!
+//! ROADMAP's ARMS-direction follow-on (arXiv 2112.09509: adaptive
+//! multi-scope work stealing): a fixed steal scope is always wrong
+//! somewhere — machine-wide stealing (AFS) scatters threads away from
+//! their data on every load dip, while node-confined stealing (CAFS)
+//! idles processors whenever the imbalance is *between* nodes. This
+//! policy picks the scope online, per CPU, from the feedback counters
+//! the core maintains ([`super::core::stats::RateStats`]):
+//!
+//! * **scope** — each CPU holds a current scope: a prefix of its
+//!   covering chain (core → package → node → machine on a deep
+//!   machine). Picks search lists inside the scope; steals only take
+//!   victims the scope component covers. A leaf scope steals nothing.
+//! * **widen** — [`AdaptiveConfig::widen_after`] consecutive empty
+//!   picks widen the scope one level (work exists *somewhere*: the
+//!   fail streak is the evidence the current scope cannot see it).
+//!   Widening is deliberately cheap to trigger — it is the liveness
+//!   direction; a starved CPU always reaches machine scope.
+//! * **narrow** — every [`AdaptiveConfig::epoch`] pick events the CPU
+//!   diffs its scope component's rate counters; when the epoch's
+//!   steal-failure ratio is at or below
+//!   [`AdaptiveConfig::narrow_fail_ratio`] for
+//!   [`AdaptiveConfig::hysteresis`] consecutive epochs, the scope
+//!   narrows one level. Narrowing is the affinity direction and is
+//!   deliberately slow (hysteresis) so bursty load cannot make the
+//!   scope ping-pong.
+//! * **steal** — within the scope, victims are taken closest-first
+//!   (the precomputed steal order filtered by the scope component), so
+//!   even a machine-wide scope prefers same-node victims; a steal that
+//!   does cross a NUMA boundary marks the thread's regions next-touch
+//!   so its memory follows it (as `memaware` does).
+//!
+//! Scope switches surface in `metrics.scope_widens` /
+//! `metrics.scope_narrows`; [`AdaptiveScheduler::scope_switches`]
+//! totals them for tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use super::core::stats::RateSnap;
+use super::core::{ops, pick, traversal};
+use super::{Scheduler, StopReason, System};
+use crate::metrics::Metrics;
+use crate::task::TaskId;
+use crate::topology::CpuId;
+
+/// Feedback-loop tunables (config keys `sched.adapt_*`).
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Consecutive empty picks on a CPU before its scope widens one
+    /// level (the liveness direction — keep it small).
+    pub widen_after: u32,
+    /// Pick events on a CPU between narrow-rate decisions.
+    pub epoch: u32,
+    /// Consecutive calm epochs required before the scope narrows one
+    /// level (the hysteresis that prevents scope ping-pong).
+    pub hysteresis: u32,
+    /// An epoch is *calm* when its steal-failure ratio over the scope
+    /// component is at or below this.
+    pub narrow_fail_ratio: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            // Widening is the liveness direction and must be cheap: at
+            // the simulator's idle-repoll cadence 4 empty picks cost
+            // ~40k cycles, well under one remote-access chunk penalty.
+            widen_after: 4,
+            epoch: 32,
+            hysteresis: 2,
+            narrow_fail_ratio: 0.05,
+        }
+    }
+}
+
+/// Per-CPU controller state.
+#[derive(Debug, Clone, Default)]
+struct CpuState {
+    /// Index into the CPU's covering chain: 0 = leaf … len-1 = machine.
+    scope: usize,
+    /// Consecutive picks that found nothing within the scope.
+    consec_fails: u32,
+    /// Pick events since the last rate decision.
+    epoch_events: u32,
+    /// Scope component's rate counters at the last decision.
+    last: RateSnap,
+    /// Consecutive calm epochs (towards a narrow).
+    narrow_streak: u32,
+}
+
+/// Adaptive steal-scope scheduler (registry name: `adaptive`).
+#[derive(Debug)]
+pub struct AdaptiveScheduler {
+    cfg: AdaptiveConfig,
+    /// Per-CPU controller state behind per-CPU locks: a CPU's pick path
+    /// only ever touches its own entry, so the hot path takes one
+    /// uncontended read lock plus its own mutex. The outer `RwLock` is
+    /// written only to grow the vector on first sight of a machine
+    /// (schedulers are built before they see a [`System`]).
+    cpus: RwLock<Vec<Mutex<CpuState>>>,
+    switches: AtomicU64,
+}
+
+impl AdaptiveScheduler {
+    pub fn new(cfg: AdaptiveConfig) -> AdaptiveScheduler {
+        AdaptiveScheduler { cfg, cpus: RwLock::new(Vec::new()), switches: AtomicU64::new(0) }
+    }
+
+    /// Total scope switches (widen + narrow) so far — test/report hook.
+    pub fn scope_switches(&self) -> u64 {
+        self.switches.load(Ordering::Relaxed)
+    }
+
+    /// Current scope depth of a CPU (0 = leaf), for tests.
+    pub fn scope_of(&self, cpu: CpuId) -> usize {
+        let v = self.cpus.read().unwrap();
+        v.get(cpu.0).map(|m| m.lock().unwrap().scope).unwrap_or(0)
+    }
+
+    fn with_state<R>(&self, sys: &System, cpu: CpuId, f: impl FnOnce(&mut CpuState) -> R) -> R {
+        let n = sys.topo.n_cpus();
+        if self.cpus.read().unwrap().len() < n {
+            let mut v = self.cpus.write().unwrap();
+            while v.len() < n {
+                v.push(Mutex::new(CpuState::default()));
+            }
+        }
+        let v = self.cpus.read().unwrap();
+        let mut st = v[cpu.0].lock().unwrap();
+        // Defensive clamp: the same instance may be reused over a
+        // shallower machine by generic harnesses.
+        let depth = sys.topo.covering(cpu).len();
+        if st.scope >= depth {
+            st.scope = depth - 1;
+        }
+        f(&mut st)
+    }
+
+    /// A pick succeeded within the scope: advance the epoch and run the
+    /// narrow decision when it completes.
+    fn note_success(&self, sys: &System, cpu: CpuId) {
+        self.with_state(sys, cpu, |st| {
+            st.consec_fails = 0;
+            st.epoch_events += 1;
+            if st.epoch_events >= self.cfg.epoch {
+                self.decide(sys, cpu, st);
+            }
+        });
+    }
+
+    /// The scope search failed: widen on a long-enough streak, and keep
+    /// the epoch clock ticking so droughts still produce decisions.
+    fn note_fail(&self, sys: &System, cpu: CpuId) {
+        self.with_state(sys, cpu, |st| {
+            st.consec_fails = st.consec_fails.saturating_add(1);
+            st.epoch_events += 1;
+            let depth = sys.topo.covering(cpu).len();
+            if st.consec_fails >= self.cfg.widen_after && st.scope + 1 < depth {
+                st.scope += 1;
+                st.consec_fails = 0;
+                st.narrow_streak = 0;
+                st.epoch_events = 0;
+                st.last = sys.rates.snap(sys.topo.covering(cpu)[st.scope]);
+                Metrics::inc(&sys.metrics.scope_widens);
+                self.switches.fetch_add(1, Ordering::Relaxed);
+            } else if st.epoch_events >= self.cfg.epoch {
+                self.decide(sys, cpu, st);
+            }
+        });
+    }
+
+    /// End-of-epoch rate decision over the scope component.
+    fn decide(&self, sys: &System, cpu: CpuId, st: &mut CpuState) {
+        let scope = sys.topo.covering(cpu)[st.scope];
+        let now = sys.rates.snap(scope);
+        let delta = now.since(&st.last);
+        st.last = now;
+        st.epoch_events = 0;
+        if st.scope > 0 && delta.fail_ratio() <= self.cfg.narrow_fail_ratio {
+            st.narrow_streak += 1;
+            if st.narrow_streak >= self.cfg.hysteresis {
+                st.scope -= 1;
+                st.narrow_streak = 0;
+                st.consec_fails = 0;
+                st.last = sys.rates.snap(sys.topo.covering(cpu)[st.scope]);
+                Metrics::inc(&sys.metrics.scope_narrows);
+                self.switches.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            st.narrow_streak = 0;
+        }
+    }
+
+    /// Steal closest-first among victims the scope component covers.
+    fn steal_scoped(&self, sys: &System, cpu: CpuId, scope_idx: usize) -> Option<TaskId> {
+        if scope_idx == 0 {
+            return None; // leaf scope: no stealing at all
+        }
+        let topo = &sys.topo;
+        let scope = topo.covering(cpu)[scope_idx];
+        sys.rates.on_steal_attempt(topo, cpu);
+        if sys.rq.queued_subtree(scope) == 0 {
+            ops::note_steal_fail(sys, cpu);
+            return None;
+        }
+        let here = topo.numa_of(cpu);
+        for &v in traversal::steal_leaves(topo, cpu) {
+            let victim_cpu = CpuId(topo.node(v).cpu_first);
+            if !topo.node(scope).covers(victim_cpu) {
+                continue;
+            }
+            if sys.rq.len_of(v) == 0 {
+                continue;
+            }
+            if let Some((t, _prio)) = ops::pop_steal(sys, cpu, v) {
+                if topo.numa_of(victim_cpu) != here {
+                    // Cross-node steal: ask the thread's memory to
+                    // follow it rather than paying the NUMA factor on
+                    // every later touch.
+                    sys.mem.mark_task_regions_next_touch(t);
+                }
+                ops::dispatch(sys, cpu, t, topo.leaf_of(cpu));
+                return Some(t);
+            }
+        }
+        ops::note_steal_fail(sys, cpu);
+        None
+    }
+}
+
+impl Default for AdaptiveScheduler {
+    fn default() -> Self {
+        AdaptiveScheduler::new(AdaptiveConfig::default())
+    }
+}
+
+impl Scheduler for AdaptiveScheduler {
+    fn name(&self) -> String {
+        "adaptive".into()
+    }
+
+    fn wake(&self, sys: &System, task: TaskId) {
+        // Opportunist wake (the adaptation lives on the pick path):
+        // last-CPU affinity, new threads to the least loaded leaf.
+        ops::flatten_wake(sys, task, &mut |sys, t| {
+            let list = sys
+                .tasks
+                .with(t, |x| x.last_cpu)
+                .map(|c| sys.topo.leaf_of(c))
+                .unwrap_or_else(|| {
+                    ops::least_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId))
+                });
+            ops::enqueue(sys, t, list);
+        });
+    }
+
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let chain = traversal::covering(&sys.topo, cpu);
+        let scope_idx = self.with_state(sys, cpu, |st| st.scope);
+        if let Some(t) = pick::pick_thread(sys, cpu, &chain[..=scope_idx]) {
+            self.note_success(sys, cpu);
+            return Some(t);
+        }
+        match self.steal_scoped(sys, cpu, scope_idx) {
+            Some(t) => {
+                self.note_success(sys, cpu);
+                Some(t)
+            }
+            None => {
+                self.note_fail(sys, cpu);
+                None
+            }
+        }
+    }
+
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
+            ops::enqueue(sys, t, sys.topo.leaf_of(cpu))
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::baselines::testsupport;
+    use crate::sched::testutil::system;
+    use crate::task::PRIO_THREAD;
+    use crate::topology::Topology;
+
+    #[test]
+    fn behavioural_suite() {
+        testsupport::drains_all_work(&AdaptiveScheduler::default(), Topology::numa(2, 2), 40);
+        testsupport::flattens_bubbles(&AdaptiveScheduler::default(), Topology::smp(2));
+        testsupport::block_wake_roundtrip(&AdaptiveScheduler::default(), Topology::smp(2));
+    }
+
+    #[test]
+    fn leaf_scope_refuses_remote_work_then_widens() {
+        let sys = system(Topology::numa(2, 2));
+        let s = AdaptiveScheduler::new(AdaptiveConfig { widen_after: 3, ..Default::default() });
+        // Work queued on the other node only.
+        let t = sys.tasks.new_thread("t", PRIO_THREAD);
+        ops::enqueue(&sys, t, sys.topo.leaf_of(CpuId(3)));
+        // Leaf scope: cpu0 sees nothing and steals nothing…
+        assert_eq!(s.pick(&sys, CpuId(0)), None);
+        assert_eq!(s.scope_of(CpuId(0)), 0);
+        // …until the fail streak widens it to node, then machine scope,
+        // where the steal finally lands.
+        let mut got = None;
+        for _ in 0..20 {
+            if let Some(x) = s.pick(&sys, CpuId(0)) {
+                got = Some(x);
+                break;
+            }
+        }
+        assert_eq!(got, Some(t), "widening must eventually reach the remote task");
+        assert!(s.scope_of(CpuId(0)) >= 2, "scope must have widened to machine");
+        assert!(s.scope_switches() >= 2);
+    }
+
+    #[test]
+    fn calm_epochs_narrow_the_scope_back() {
+        let sys = system(Topology::numa(2, 2));
+        let cfg = AdaptiveConfig {
+            widen_after: 2,
+            epoch: 4,
+            hysteresis: 2,
+            ..Default::default()
+        };
+        let s = AdaptiveScheduler::new(cfg);
+        // Force cpu0 wide: fail until machine scope.
+        for _ in 0..6 {
+            assert_eq!(s.pick(&sys, CpuId(0)), None);
+        }
+        assert_eq!(s.scope_of(CpuId(0)), 2);
+        // Now feed it a steady local diet: every pick succeeds from its
+        // own leaf, so epochs are calm and the scope narrows back.
+        for i in 0..40 {
+            let t = sys.tasks.new_thread(format!("t{i}"), PRIO_THREAD);
+            ops::enqueue(&sys, t, sys.topo.leaf_of(CpuId(0)));
+            let got = s.pick(&sys, CpuId(0)).expect("local work");
+            s.stop(&sys, CpuId(0), got, StopReason::Terminate);
+        }
+        assert_eq!(s.scope_of(CpuId(0)), 0, "calm epochs must narrow back to the leaf");
+        assert!(sys.metrics.scope_narrows.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn scoped_steal_stays_inside_the_scope_component() {
+        let sys = system(Topology::numa(2, 2));
+        let s = AdaptiveScheduler::new(AdaptiveConfig { widen_after: 1, ..Default::default() });
+        // Near victim (same node) and far victim (other node).
+        let near = sys.tasks.new_thread("near", PRIO_THREAD);
+        let far = sys.tasks.new_thread("far", PRIO_THREAD);
+        ops::enqueue(&sys, near, sys.topo.leaf_of(CpuId(1)));
+        ops::enqueue(&sys, far, sys.topo.leaf_of(CpuId(2)));
+        // First pick fails (leaf scope) and widens to node.
+        assert_eq!(s.pick(&sys, CpuId(0)), None);
+        assert_eq!(s.scope_of(CpuId(0)), 1);
+        // Node scope: only the same-node victim is eligible.
+        assert_eq!(s.pick(&sys, CpuId(0)), Some(near));
+        // The far task is still where it was.
+        assert_eq!(sys.rq.len_of(sys.topo.leaf_of(CpuId(2))), 1);
+        let _ = far;
+    }
+
+    #[test]
+    fn cross_node_steal_marks_memory_next_touch() {
+        use crate::mem::AllocPolicy;
+        let sys = system(Topology::numa(2, 2));
+        let s = AdaptiveScheduler::new(AdaptiveConfig { widen_after: 1, ..Default::default() });
+        let t = sys.tasks.new_thread("t", PRIO_THREAD);
+        let r = sys.mem.alloc(4096, AllocPolicy::Fixed(1));
+        sys.mem.attach(&sys.tasks, t, r);
+        ops::enqueue(&sys, t, sys.topo.leaf_of(CpuId(2)));
+        // Widen leaf → node → machine, then steal across nodes.
+        assert_eq!(s.pick(&sys, CpuId(0)), None);
+        assert_eq!(s.pick(&sys, CpuId(0)), None);
+        let got = s.pick(&sys, CpuId(0));
+        assert_eq!(got, Some(t));
+        assert!(sys.mem.info(r).next_touch, "stolen thread's memory must follow it");
+    }
+}

@@ -416,7 +416,9 @@ impl Scheduler for BubbleScheduler {
         let mut credits = 4 * sys.rq.len() + 16;
         loop {
             if credits == 0 {
-                Metrics::inc(&sys.metrics.idle_picks);
+                // Idle accounting lives in the engines (sim idle path /
+                // executor park path), not here: pick() has no way to
+                // know whether the caller will retry immediately.
                 return None;
             }
             credits -= 1;
@@ -443,7 +445,6 @@ impl Scheduler for BubbleScheduler {
                 if self.cfg.idle_regen && self.idle_regen(sys, cpu) {
                     continue;
                 }
-                Metrics::inc(&sys.metrics.idle_picks);
                 return None;
             };
             // Pass 2: lock the chosen list and re-check.

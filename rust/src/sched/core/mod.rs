@@ -35,7 +35,11 @@
 //!   hints ([`crate::rq`]: per-list task count + max-priority, per-level
 //!   subtree occupancy) they let policies consult O(1) counters instead
 //!   of rescanning lists: `rq.len_of(l)`, `rq.peek_max(l)`,
-//!   `rq.queued_subtree(l)`, `stats.running(l)`.
+//!   `rq.queued_subtree(l)`, `stats.running(l)`. The same module also
+//!   keeps **what has been happening** ([`stats::RateStats`],
+//!   `sys.rates`): per-level steal-attempt/failure, cross-node
+//!   migration and idle-poll counters that feedback policies (the
+//!   `adaptive` scheduler) snapshot and diff to steer themselves.
 //!
 //! A fourth surface lives outside this module but is consulted the same
 //! way: `sys.mem` ([`crate::mem::MemState`]) — **where the data

@@ -32,6 +32,10 @@ pub fn dispatch(sys: &System, cpu: CpuId, task: TaskId, from: LevelId) {
         if let Some(last) = t.last_cpu {
             if last != cpu {
                 Metrics::inc(&sys.metrics.migrations);
+                if sys.topo.numa_of(last) != sys.topo.numa_of(cpu) {
+                    Metrics::inc(&sys.metrics.cross_node_migrations);
+                    sys.rates.on_cross_node(&sys.topo, cpu);
+                }
             }
         }
         t.state = TaskState::Running { cpu };
@@ -155,11 +159,22 @@ pub fn pop_steal(sys: &System, cpu: CpuId, victim: LevelId) -> Option<(TaskId, P
     Some((task, prio))
 }
 
+/// Account one steal search that came up empty (metric + per-level
+/// rate counters, the adaptive policy's widen signal). Every steal
+/// helper here calls it on its `None` path; hand-rolled policy steals
+/// should too.
+pub fn note_steal_fail(sys: &System, cpu: CpuId) {
+    Metrics::inc(&sys.metrics.steal_fails);
+    sys.rates.on_steal_fail(&sys.topo, cpu);
+}
+
 /// Steal from the fullest list that does *not* cover `cpu` (the bubble
 /// scheduler's last-resort rebalancing). O(1) bail-out when the whole
 /// machine is empty (root subtree counter).
 pub fn steal_fullest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
+    sys.rates.on_steal_attempt(&sys.topo, cpu);
     if sys.rq.total_queued() == 0 {
+        note_steal_fail(sys, cpu);
         return None;
     }
     let mut victim: Option<(LevelId, usize)> = None;
@@ -173,15 +188,19 @@ pub fn steal_fullest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
             victim = Some((l, len));
         }
     }
-    let (l, _) = victim?;
-    let (task, _prio) = pop_steal(sys, cpu, l)?;
-    Some((task, l))
+    let out =
+        victim.and_then(|(l, _)| pop_steal(sys, cpu, l).map(|(task, _prio)| (task, l)));
+    if out.is_none() {
+        note_steal_fail(sys, cpu);
+    }
+    out
 }
 
 /// Steal from the closest loaded CPU (LDS, §2.2): walk the precomputed
 /// closest-first victim order; within a tie group of equal hierarchical
 /// distance the fullest victim wins.
 pub fn steal_closest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
+    sys.rates.on_steal_attempt(&sys.topo, cpu);
     let order = sys.topo.steal_order(cpu);
     let sep = |l: LevelId| sys.topo.separation(cpu, CpuId(sys.topo.node(l).cpu_first));
     let mut i = 0;
@@ -203,15 +222,20 @@ pub fn steal_closest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
         }
         i = j;
     }
+    note_steal_fail(sys, cpu);
     None
 }
 
 /// Steal from the most loaded CPU machine-wide (AFS, §2.2: the Linux
 /// 2.6 / FreeBSD 5 "rebalance" structure).
 pub fn steal_most_loaded(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
-    let v = most_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId).filter(|&c| c != cpu))?;
-    let (task, _prio) = pop_steal(sys, cpu, v)?;
-    Some((task, v))
+    sys.rates.on_steal_attempt(&sys.topo, cpu);
+    let out = most_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId).filter(|&c| c != cpu))
+        .and_then(|v| pop_steal(sys, cpu, v).map(|(task, _prio)| (task, v)));
+    if out.is_none() {
+        note_steal_fail(sys, cpu);
+    }
+    out
 }
 
 #[cfg(test)]

@@ -1,6 +1,6 @@
 //! Incrementally-maintained per-level load statistics.
 //!
-//! The three load surfaces a policy can consult in O(1), instead of
+//! The load surfaces a policy can consult in O(1), instead of
 //! rescanning lists:
 //!
 //! * **task count** — `sys.rq.len_of(l)` (per-list lock-free hint) and
@@ -10,8 +10,16 @@
 //!   many threads are currently executing on CPUs covered by component
 //!   `l`. Updated along the covering chain (O(depth)) on every
 //!   dispatch/stop by [`super::ops::dispatch`]/[`super::ops::note_stop`].
+//! * **event rates** — [`RateStats`]: monotonic per-component counters
+//!   of the *feedback* signals an online policy adapts on — steal
+//!   attempts and failures, cross-node migrations, idle polls —
+//!   attributed along the acting CPU's covering chain like the running
+//!   counts. A feedback policy (the ARMS-style `adaptive` scheduler)
+//!   snapshots a component with [`RateStats::snap`] and diffs two
+//!   snapshots to get the rate over its own decision epoch; nothing
+//!   here decays or windows, so readers choose their own horizon.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::topology::{CpuId, LevelId, Topology};
 
@@ -51,6 +59,106 @@ impl LoadStats {
     }
 }
 
+/// One component's cumulative event counts at a point in time (diff two
+/// of these for a rate over an interval).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RateSnap {
+    /// Steal searches started by CPUs this component covers.
+    pub steal_attempts: u64,
+    /// Steal searches that found no victim.
+    pub steal_fails: u64,
+    /// Dispatches that moved a thread across a NUMA-node boundary onto
+    /// a CPU this component covers.
+    pub cross_node: u64,
+    /// Picks that returned nothing (the covered CPU went idle).
+    pub idles: u64,
+}
+
+impl RateSnap {
+    /// Event-wise difference against an earlier snapshot (saturating,
+    /// so a racing reader cannot produce a wrap).
+    pub fn since(&self, earlier: &RateSnap) -> RateSnap {
+        RateSnap {
+            steal_attempts: self.steal_attempts.saturating_sub(earlier.steal_attempts),
+            steal_fails: self.steal_fails.saturating_sub(earlier.steal_fails),
+            cross_node: self.cross_node.saturating_sub(earlier.cross_node),
+            idles: self.idles.saturating_sub(earlier.idles),
+        }
+    }
+
+    /// Fraction of steal searches that failed in this interval (0 when
+    /// none were attempted).
+    pub fn fail_ratio(&self) -> f64 {
+        if self.steal_attempts == 0 {
+            0.0
+        } else {
+            self.steal_fails as f64 / self.steal_attempts as f64
+        }
+    }
+}
+
+/// Per-component feedback-event counters (see module docs). All
+/// counters are monotonic and advisory; writers bump every component
+/// covering the acting CPU, so a component's counts aggregate its
+/// whole subtree.
+#[derive(Debug)]
+pub struct RateStats {
+    steal_attempts: Vec<AtomicU64>,
+    steal_fails: Vec<AtomicU64>,
+    cross_node: Vec<AtomicU64>,
+    idles: Vec<AtomicU64>,
+}
+
+impl RateStats {
+    /// Zeroed counters for a machine.
+    pub fn new(topo: &Topology) -> RateStats {
+        let n = topo.n_components();
+        let zeroed = || (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        RateStats {
+            steal_attempts: zeroed(),
+            steal_fails: zeroed(),
+            cross_node: zeroed(),
+            idles: zeroed(),
+        }
+    }
+
+    fn bump(field: &[AtomicU64], topo: &Topology, cpu: CpuId) {
+        for &l in topo.covering(cpu) {
+            field[l.0].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// `cpu` started a steal search.
+    pub fn on_steal_attempt(&self, topo: &Topology, cpu: CpuId) {
+        Self::bump(&self.steal_attempts, topo, cpu);
+    }
+
+    /// `cpu`'s steal search found no victim.
+    pub fn on_steal_fail(&self, topo: &Topology, cpu: CpuId) {
+        Self::bump(&self.steal_fails, topo, cpu);
+    }
+
+    /// A thread crossed a NUMA boundary to resume on `cpu`.
+    pub fn on_cross_node(&self, topo: &Topology, cpu: CpuId) {
+        Self::bump(&self.cross_node, topo, cpu);
+    }
+
+    /// `cpu` polled for work and found none.
+    pub fn on_idle(&self, topo: &Topology, cpu: CpuId) {
+        Self::bump(&self.idles, topo, cpu);
+    }
+
+    /// Cumulative counts for one component.
+    pub fn snap(&self, l: LevelId) -> RateSnap {
+        RateSnap {
+            steal_attempts: self.steal_attempts[l.0].load(Ordering::Relaxed),
+            steal_fails: self.steal_fails[l.0].load(Ordering::Relaxed),
+            cross_node: self.cross_node[l.0].load(Ordering::Relaxed),
+            idles: self.idles[l.0].load(Ordering::Relaxed),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,5 +178,36 @@ mod tests {
         // Saturating: an extra stop cannot wrap.
         stats.on_stop(&topo, CpuId(0));
         assert_eq!(stats.running(topo.leaf_of(CpuId(0))), 0);
+    }
+
+    #[test]
+    fn rates_aggregate_along_chain_and_diff() {
+        let topo = Topology::numa(2, 2);
+        let rates = RateStats::new(&topo);
+        let before = rates.snap(topo.root());
+        rates.on_steal_attempt(&topo, CpuId(0));
+        rates.on_steal_attempt(&topo, CpuId(0));
+        rates.on_steal_fail(&topo, CpuId(0));
+        rates.on_cross_node(&topo, CpuId(3));
+        rates.on_idle(&topo, CpuId(3));
+        // Root covers everything; leaves only their own CPU's events.
+        let root = rates.snap(topo.root()).since(&before);
+        assert_eq!(root.steal_attempts, 2);
+        assert_eq!(root.steal_fails, 1);
+        assert_eq!(root.cross_node, 1);
+        assert_eq!(root.idles, 1);
+        assert!((root.fail_ratio() - 0.5).abs() < 1e-12);
+        let leaf0 = rates.snap(topo.leaf_of(CpuId(0)));
+        assert_eq!((leaf0.steal_attempts, leaf0.cross_node), (2, 0));
+        let leaf3 = rates.snap(topo.leaf_of(CpuId(3)));
+        assert_eq!((leaf3.steal_attempts, leaf3.cross_node, leaf3.idles), (0, 1, 1));
+        // The node above cpu3 aggregates cpu2+cpu3 events.
+        let node1 = rates.snap(topo.covering(CpuId(3))[1]);
+        assert_eq!(node1.cross_node, 1);
+        // Empty interval: zero ratio, no wrap.
+        let now = rates.snap(topo.root());
+        let empty = now.since(&now);
+        assert_eq!(empty, RateSnap::default());
+        assert_eq!(empty.fail_ratio(), 0.0);
     }
 }

@@ -14,7 +14,10 @@ use super::baselines::{
     AfsScheduler, BoundScheduler, CafsScheduler, GangScheduler, GssScheduler, HafsScheduler,
     LdsScheduler, SsScheduler, TssScheduler,
 };
-use super::{BubbleScheduler, MemAwareScheduler, Scheduler};
+use super::{
+    AdaptiveConfig, AdaptiveScheduler, BubbleScheduler, MemAwareConfig, MemAwareScheduler,
+    MoldableConfig, MoldableGangScheduler, Scheduler,
+};
 use crate::config::{SchedConfig, SchedKind};
 use crate::util::fmt::Table;
 
@@ -30,7 +33,7 @@ pub struct PolicyInfo {
     build: fn(&SchedConfig) -> Arc<dyn Scheduler>,
 }
 
-static REGISTRY: [PolicyInfo; 11] = [
+static REGISTRY: [PolicyInfo; 13] = [
     PolicyInfo {
         kind: SchedKind::Bubble,
         name: "bubble",
@@ -99,7 +102,15 @@ static REGISTRY: [PolicyInfo; 11] = [
         name: "memaware",
         aliases: &["mem", "memory-aware"],
         summary: "memory-aware: place by NUMA footprint, refuse costly remote steals",
-        build: |_| Arc::new(MemAwareScheduler::default()),
+        build: |cfg| {
+            Arc::new(MemAwareScheduler::new(MemAwareConfig {
+                // The machine section's distance model (asymmetric
+                // matrices included) prices the steals, not the
+                // built-in NovaScale default.
+                dist: cfg.dist.clone(),
+                ..MemAwareConfig::default()
+            }))
+        },
     },
     PolicyInfo {
         kind: SchedKind::Gang,
@@ -107,6 +118,33 @@ static REGISTRY: [PolicyInfo; 11] = [
         aliases: &[],
         summary: "Ousterhout gang scheduling: one gang owns the whole machine",
         build: |cfg| Arc::new(GangScheduler::new(cfg.timeslice.unwrap_or(1_000_000))),
+    },
+    PolicyInfo {
+        kind: SchedKind::Adaptive,
+        name: "adaptive",
+        aliases: &["arms", "adaptive-scope"],
+        summary: "adaptive steal scope: widen on steal failures, narrow with hysteresis \
+                  (knobs: sched.adapt_widen_after / adapt_epoch / adapt_hysteresis)",
+        build: |cfg| {
+            Arc::new(AdaptiveScheduler::new(AdaptiveConfig {
+                widen_after: cfg.adapt_widen_after,
+                epoch: cfg.adapt_epoch,
+                hysteresis: cfg.adapt_hysteresis,
+                ..AdaptiveConfig::default()
+            }))
+        },
+    },
+    PolicyInfo {
+        kind: SchedKind::MoldableGang,
+        name: "moldable-gang",
+        aliases: &["moldable", "mgang"],
+        summary: "moldable gangs: shrink a gang's CPU set instead of idling processors \
+                  (knob: sched.resize_hysteresis)",
+        build: |cfg| {
+            Arc::new(MoldableGangScheduler::new(MoldableConfig {
+                resize_hysteresis: cfg.resize_hysteresis,
+            }))
+        },
     },
 ];
 

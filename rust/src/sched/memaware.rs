@@ -37,8 +37,10 @@ use crate::topology::{CpuId, DistanceModel};
 /// Tunables for the memory-aware policy.
 #[derive(Debug, Clone)]
 pub struct MemAwareConfig {
-    /// Distance model used to price candidate steals (defaults to the
-    /// paper's NovaScale factors; configure to match the machine).
+    /// Distance model used to price candidate steals. The factory
+    /// fills this from the `[machine]` config section (including an
+    /// asymmetric `numa_matrix`), so the policy prices steals with the
+    /// *configured* machine, not the built-in NovaScale default.
     pub dist: DistanceModel,
     /// Refuse steals whose `mem_factor` exceeds this…
     pub max_steal_factor: f64,
@@ -72,7 +74,9 @@ impl MemAwareScheduler {
     /// cheap enough or desperate. Cross-node steals ask the thread's
     /// memory to follow it (next-touch).
     fn steal(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        sys.rates.on_steal_attempt(&sys.topo, cpu);
         if sys.rq.total_queued() == 0 {
+            ops::note_steal_fail(sys, cpu);
             return None;
         }
         let topo = &sys.topo;
@@ -95,6 +99,7 @@ impl MemAwareScheduler {
                 return Some(t);
             }
         }
+        ops::note_steal_fail(sys, cpu);
         None
     }
 }
@@ -228,6 +233,47 @@ mod tests {
         }
         let got = s.pick(&sys, CpuId(0));
         assert!(got.is_some(), "deep remote queue must be stolen from");
+    }
+
+    #[test]
+    fn steal_pricing_uses_the_configured_distance_matrix() {
+        // Regression (ROADMAP follow-on): memaware must price steals
+        // with the machine's real DistanceModel from config, not its
+        // built-in default. On an asymmetric interconnect, node 1 is a
+        // cheap neighbour of node 0 (1.5 < cap 2.0) while node 2 is an
+        // expensive far hop (6.0): a shallow steal from node 1 must be
+        // accepted and the same steal from node 2 refused — under the
+        // default uniform 3.0 both would be refused.
+        use crate::config::ExperimentConfig;
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [machine]
+            preset = "numa-3x2"
+            numa_matrix = ["1.0, 1.5, 6.0", "1.5, 1.0, 2.0", "6.0, 2.0, 1.0"]
+            [sched]
+            kind = "memaware"
+            "#,
+        )
+        .unwrap();
+        let topo = cfg.machine.build_topology().unwrap();
+        let sys = system(topo);
+        let s = crate::sched::factory::make(&cfg.sched);
+
+        // One shallow task on the far node (node 2): refused.
+        let far = sys.tasks.new_thread("far", PRIO_THREAD);
+        ops::enqueue(&sys, far, sys.topo.leaf_of(CpuId(4)));
+        assert_eq!(s.pick(&sys, CpuId(0)), None, "6.0-factor steal must be refused");
+        // Same depth on the cheap neighbour (node 1): accepted.
+        let near = sys.tasks.new_thread("near", PRIO_THREAD);
+        ops::enqueue(&sys, near, sys.topo.leaf_of(CpuId(2)));
+        assert_eq!(s.pick(&sys, CpuId(0)), Some(near), "1.5-factor steal must be taken");
+
+        // Control: the built-in default refuses both shallow steals.
+        let sys2 = system(crate::topology::Topology::numa(3, 2));
+        let s2 = MemAwareScheduler::default();
+        let t = sys2.tasks.new_thread("t", PRIO_THREAD);
+        ops::enqueue(&sys2, t, sys2.topo.leaf_of(CpuId(2)));
+        assert_eq!(s2.pick(&sys2, CpuId(0)), None);
     }
 
     #[test]

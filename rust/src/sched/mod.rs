@@ -6,15 +6,19 @@
 //! global scheduling* — each processor calls the scheduler code itself
 //! whenever it preempts or terminates a thread (§4).
 
+mod adaptive;
 pub mod baselines;
 mod bubble;
 pub mod core;
 pub mod factory;
 mod memaware;
+mod moldable;
 mod system;
 
+pub use adaptive::{AdaptiveConfig, AdaptiveScheduler};
 pub use bubble::{BubbleConfig, BubbleScheduler};
 pub use memaware::{MemAwareConfig, MemAwareScheduler};
+pub use moldable::{MoldableConfig, MoldableGangScheduler};
 pub use system::System;
 
 use crate::task::TaskId;

@@ -1,0 +1,630 @@
+//! Moldable gang scheduling: gangs that resize instead of idling
+//! processors.
+//!
+//! The paper's gang baseline (§3.1, [`super::baselines::GangScheduler`])
+//! reproduces Ousterhout's pathology on purpose: one gang owns the
+//! whole machine per time slice, so a small gang leaves most CPUs
+//! idle. The malleable-job literature (arXiv 1412.4213 direction)
+//! fixes exactly that: treat the gang's CPU set as *moldable* — shrink
+//! it when the gang's occupancy drops, hand the freed processors to a
+//! waiting gang, re-expand when load returns. This policy implements
+//! that on the hierarchy: a gang's CPU set is always one topology
+//! *component*, so resizing is a walk up or down the machine tree and
+//! co-scheduled gangs always occupy hierarchy-aligned (cache/NUMA
+//! coherent) CPU sets.
+//!
+//! * **placement** — active gangs own pairwise-disjoint components;
+//!   waiting gangs are placed FIFO on the largest free component (BFS
+//!   order: ancestors first). The first gang gets the machine root,
+//!   exactly like classic gang scheduling — until someone shrinks.
+//! * **shrink** — when a gang's *demand* (members that are runnable or
+//!   running) fits in one child of its component for
+//!   [`MoldableConfig::resize_hysteresis`] consecutive evaluations, it
+//!   shrinks to the child where most of its members last ran. Queued
+//!   members migrate to the new component's list.
+//! * **expand** — when demand exceeds the component and the parent's
+//!   subtree is otherwise free for the same number of evaluations, the
+//!   gang expands to the parent.
+//! * **park** — a gang whose demand hits zero (every member blocked)
+//!   is taken off the machine entirely; the first member wakeup
+//!   re-queues it. This is what lets barrier-coupled gangs make
+//!   progress without a timeslice: blocking hands the CPUs over.
+//!
+//! Bubbles woken under this scheduler become gangs (nested bubbles are
+//! flattened into one gang); loose threads form singleton gangs.
+//! Resizes surface in `metrics.gang_shrinks` / `metrics.gang_expands`;
+//! [`MoldableGangScheduler::assignments`], [`force_shrink`] and
+//! [`force_expand`] exist for the property tests.
+//!
+//! [`force_shrink`]: MoldableGangScheduler::force_shrink
+//! [`force_expand`]: MoldableGangScheduler::force_expand
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::core::{ops, pick};
+use super::{Scheduler, StopReason, System};
+use crate::metrics::Metrics;
+use crate::task::{TaskId, TaskState};
+use crate::topology::{CpuId, LevelId, Topology};
+use crate::trace::{Event, RegenWhy};
+
+/// Tunables (config key `sched.resize_hysteresis`).
+#[derive(Debug, Clone)]
+pub struct MoldableConfig {
+    /// Consecutive resize evaluations that must agree before a
+    /// shrink/expand commits (damps resize thrash under bursty load).
+    pub resize_hysteresis: u32,
+}
+
+impl Default for MoldableConfig {
+    fn default() -> Self {
+        MoldableConfig { resize_hysteresis: 4 }
+    }
+}
+
+/// One active gang and the component it owns.
+#[derive(Debug, Clone)]
+struct GangSlot {
+    gang: TaskId,
+    comp: LevelId,
+    shrink_streak: u32,
+    expand_streak: u32,
+}
+
+#[derive(Debug, Default)]
+struct MoldState {
+    /// Gangs currently owning (pairwise-disjoint) components.
+    active: Vec<GangSlot>,
+    /// Gangs waiting for a free component, FIFO.
+    queue: VecDeque<TaskId>,
+    /// Gangs off the machine because every member is blocked.
+    parked: Vec<TaskId>,
+}
+
+/// Moldable gang scheduler (registry name: `moldable-gang`).
+#[derive(Debug)]
+pub struct MoldableGangScheduler {
+    cfg: MoldableConfig,
+    st: Mutex<MoldState>,
+}
+
+/// Two components' CPU ranges intersect (on a tree this means one
+/// contains the other).
+fn overlaps(topo: &Topology, a: LevelId, b: LevelId) -> bool {
+    let na = topo.node(a);
+    let nb = topo.node(b);
+    na.cpu_first < nb.cpu_first + nb.cpu_count && nb.cpu_first < na.cpu_first + na.cpu_count
+}
+
+/// The top-level gang a task belongs to (itself when loose).
+fn root_gang(sys: &System, task: TaskId) -> TaskId {
+    let mut cur = task;
+    while let Some(p) = sys.tasks.parent(cur) {
+        cur = p;
+    }
+    cur
+}
+
+/// All thread members of a gang, nested bubbles flattened (a loose
+/// thread is its own single member).
+fn thread_members(sys: &System, gang: TaskId, out: &mut Vec<TaskId>) {
+    if sys.tasks.is_bubble(gang) {
+        let contents = sys.tasks.with(gang, |t| t.kind_contents_snapshot());
+        for c in contents {
+            thread_members(sys, c, out);
+        }
+    } else {
+        out.push(gang);
+    }
+}
+
+/// Members (of `members(sys, gang)`) that want a CPU now or will once
+/// activated (not blocked, not finished).
+fn demand_of(sys: &System, ms: &[TaskId]) -> usize {
+    ms.iter()
+        .filter(|&&m| {
+            matches!(
+                sys.tasks.state(m),
+                TaskState::New
+                    | TaskState::InBubble
+                    | TaskState::Ready { .. }
+                    | TaskState::Running { .. }
+            )
+        })
+        .count()
+}
+
+/// Collected thread members of a gang (one traversal; callers reuse
+/// the list across demand / shrink-target / migration passes).
+fn members(sys: &System, gang: TaskId) -> Vec<TaskId> {
+    let mut ms = Vec::new();
+    thread_members(sys, gang, &mut ms);
+    ms
+}
+
+/// True while any member has not terminated.
+fn gang_live(sys: &System, gang: TaskId) -> bool {
+    let mut ms = Vec::new();
+    thread_members(sys, gang, &mut ms);
+    ms.iter().any(|&m| sys.tasks.state(m) != TaskState::Terminated)
+}
+
+impl MoldableGangScheduler {
+    pub fn new(cfg: MoldableConfig) -> MoldableGangScheduler {
+        MoldableGangScheduler { cfg, st: Mutex::new(MoldState::default()) }
+    }
+
+    /// Snapshot of (gang, owned component) pairs — test hook.
+    pub fn assignments(&self) -> Vec<(TaskId, LevelId)> {
+        let st = self.st.lock().unwrap();
+        st.active.iter().map(|s| (s.gang, s.comp)).collect()
+    }
+
+    /// Apply one shrink step immediately (no hysteresis). Returns true
+    /// if the gang's component changed — property-test hook.
+    pub fn force_shrink(&self, sys: &System, gang: TaskId) -> bool {
+        let mut st = self.st.lock().unwrap();
+        let Some(i) = st.active.iter().position(|s| s.gang == gang) else {
+            return false;
+        };
+        let ms = members(sys, gang);
+        let d = demand_of(sys, &ms);
+        match self.shrink_target(sys, st.active[i].comp, &ms, d) {
+            Some(child) => {
+                self.apply_resize(sys, &mut st, i, &ms, child, true);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Apply one expand step immediately (no hysteresis, no demand
+    /// check). Returns true if the component changed — property-test
+    /// hook. Disjointness is still enforced: expansion is refused when
+    /// the parent overlaps another active gang.
+    pub fn force_expand(&self, sys: &System, gang: TaskId) -> bool {
+        let mut st = self.st.lock().unwrap();
+        let Some(i) = st.active.iter().position(|s| s.gang == gang) else {
+            return false;
+        };
+        let comp = st.active[i].comp;
+        let Some(parent) = sys.topo.node(comp).parent else {
+            return false;
+        };
+        let blocked = st
+            .active
+            .iter()
+            .enumerate()
+            .any(|(j, s)| j != i && overlaps(&sys.topo, parent, s.comp));
+        if blocked {
+            return false;
+        }
+        let ms = members(sys, gang);
+        self.apply_resize(sys, &mut st, i, &ms, parent, false);
+        true
+    }
+
+    /// The child of `comp` the gang should shrink into: big enough for
+    /// the demand, holding the most members by last-run CPU.
+    fn shrink_target(
+        &self,
+        sys: &System,
+        comp: LevelId,
+        ms: &[TaskId],
+        d: usize,
+    ) -> Option<LevelId> {
+        let node = sys.topo.node(comp);
+        if node.children.is_empty() || d == 0 || d >= node.cpu_count {
+            return None;
+        }
+        let mut best: Option<(usize, LevelId)> = None;
+        for &c in &node.children {
+            let cn = sys.topo.node(c);
+            if cn.cpu_count < d {
+                continue; // this child cannot hold the gang
+            }
+            let count = ms
+                .iter()
+                .filter(|&&m| {
+                    sys.tasks
+                        .with(m, |t| t.last_cpu)
+                        .map(|cpu| cn.covers(cpu))
+                        .unwrap_or(false)
+                })
+                .count();
+            if best.map_or(true, |(bc, _)| count > bc) {
+                best = Some((count, c));
+            }
+        }
+        best.map(|(_, c)| c)
+    }
+
+    /// Commit a resize: move the slot to `to` and migrate every queued
+    /// member onto the new component's list (members keep running where
+    /// they are; their stop path requeues them onto the new set).
+    fn apply_resize(
+        &self,
+        sys: &System,
+        st: &mut MoldState,
+        i: usize,
+        ms: &[TaskId],
+        to: LevelId,
+        shrink: bool,
+    ) {
+        let gang = st.active[i].gang;
+        st.active[i].comp = to;
+        st.active[i].shrink_streak = 0;
+        st.active[i].expand_streak = 0;
+        for &m in ms {
+            if let Some(list) = sys.tasks.state(m).ready_list() {
+                if list != to && sys.rq.remove(list, m, sys.tasks.prio(m)) {
+                    ops::enqueue(sys, m, to);
+                }
+            }
+        }
+        Metrics::inc(if shrink {
+            &sys.metrics.gang_shrinks
+        } else {
+            &sys.metrics.gang_expands
+        });
+        sys.trace.emit(sys.now(), Event::RegenDone { bubble: gang, list: to });
+    }
+
+    /// Release a gang's runnable members onto its component's list.
+    fn activate(&self, sys: &System, gang: TaskId, comp: LevelId) {
+        if sys.tasks.is_bubble(gang) {
+            // The gang bubble (and any nested bubbles) stay parked;
+            // only threads run.
+            sys.tasks.with(gang, |t| t.state = TaskState::Blocked);
+        }
+        let mut ms = Vec::new();
+        thread_members(sys, gang, &mut ms);
+        for m in ms {
+            // Park intermediate bubbles encountered on the way.
+            if let Some(p) = sys.tasks.parent(m) {
+                if p != gang && sys.tasks.is_bubble(p) {
+                    sys.tasks.with(p, |t| t.state = TaskState::Blocked);
+                }
+            }
+            match sys.tasks.state(m) {
+                TaskState::New | TaskState::InBubble => ops::enqueue(sys, m, comp),
+                TaskState::Ready { list } => {
+                    if list != comp && sys.rq.remove(list, m, sys.tasks.prio(m)) {
+                        ops::enqueue(sys, m, comp);
+                    }
+                }
+                // Blocked members rejoin on wake; Terminated are done.
+                // A loose gang re-queued after blocking is Blocked here
+                // and runs again via the enqueue below.
+                TaskState::Blocked if m == gang => ops::enqueue(sys, m, comp),
+                _ => {}
+            }
+        }
+    }
+
+    /// Place waiting gangs (FIFO) on free components while any exist.
+    fn place_waiting(&self, sys: &System, st: &mut MoldState) {
+        loop {
+            // Drop finished gangs from the head of the queue.
+            while let Some(&g) = st.queue.front() {
+                if gang_live(sys, g) {
+                    break;
+                }
+                st.queue.pop_front();
+            }
+            let Some(&g) = st.queue.front() else { return };
+            let Some(comp) = self.find_free(sys, st) else { return };
+            st.queue.pop_front();
+            st.active.push(GangSlot { gang: g, comp, shrink_streak: 0, expand_streak: 0 });
+            self.activate(sys, g, comp);
+        }
+    }
+
+    /// Largest free component: first in BFS id order (ancestors come
+    /// before descendants) that overlaps no active gang's set.
+    fn find_free(&self, sys: &System, st: &MoldState) -> Option<LevelId> {
+        (0..sys.topo.n_components()).map(LevelId).find(|&l| {
+            st.active.iter().all(|s| !overlaps(&sys.topo, l, s.comp))
+        })
+    }
+
+    /// Hysteresis-damped resize evaluation for one active gang. The
+    /// caller's single membership traversal (`ms`) feeds the demand
+    /// count, the shrink-target search and (on commit) the
+    /// queued-member migration.
+    fn maybe_resize(&self, sys: &System, st: &mut MoldState, i: usize, ms: &[TaskId]) {
+        let comp = st.active[i].comp;
+        let d = demand_of(sys, ms);
+        if let Some(child) = self.shrink_target(sys, comp, ms, d) {
+            st.active[i].expand_streak = 0;
+            st.active[i].shrink_streak += 1;
+            if st.active[i].shrink_streak >= self.cfg.resize_hysteresis {
+                self.apply_resize(sys, st, i, ms, child, true);
+            }
+            return;
+        }
+        st.active[i].shrink_streak = 0;
+        let parent = sys.topo.node(comp).parent;
+        if d > sys.topo.node(comp).cpu_count {
+            if let Some(parent) = parent {
+                let blocked = st
+                    .active
+                    .iter()
+                    .enumerate()
+                    .any(|(j, s)| j != i && overlaps(&sys.topo, parent, s.comp));
+                if !blocked {
+                    st.active[i].expand_streak += 1;
+                    if st.active[i].expand_streak >= self.cfg.resize_hysteresis {
+                        self.apply_resize(sys, st, i, ms, parent, false);
+                    }
+                    return;
+                }
+            }
+        }
+        st.active[i].expand_streak = 0;
+    }
+}
+
+impl Default for MoldableGangScheduler {
+    fn default() -> Self {
+        MoldableGangScheduler::new(MoldableConfig::default())
+    }
+}
+
+impl Scheduler for MoldableGangScheduler {
+    fn name(&self) -> String {
+        "moldable-gang".into()
+    }
+
+    fn wake(&self, sys: &System, task: TaskId) {
+        let mut st = self.st.lock().unwrap();
+        if sys.tasks.parent(task).is_some() {
+            // A member of some gang woke (barrier release, join, …).
+            // Only a genuinely blocked member needs action: a spurious
+            // wake of a Ready/Running member must not double-queue it.
+            let gang = root_gang(sys, task);
+            if sys.tasks.state(task) == TaskState::Blocked {
+                if let Some(slot) = st.active.iter().find(|s| s.gang == gang) {
+                    ops::enqueue(sys, task, slot.comp);
+                } else {
+                    // Hold it inside the gang; (re)queue a parked gang.
+                    sys.tasks.set_state(task, TaskState::InBubble);
+                    if let Some(p) = st.parked.iter().position(|&g| g == gang) {
+                        st.parked.remove(p);
+                        st.queue.push_back(gang);
+                        self.place_waiting(sys, &mut st);
+                    }
+                }
+            }
+            sys.notify_enqueue();
+            return;
+        }
+        // The task IS a gang: a bubble, or a loose (singleton) thread.
+        if sys.tasks.is_bubble(task) {
+            sys.tasks.with(task, |t| t.state = TaskState::Blocked);
+        }
+        if let Some(slot) = st.active.iter().find(|s| s.gang == task) {
+            if !sys.tasks.is_bubble(task) && sys.tasks.state(task) == TaskState::Blocked {
+                // An active loose gang woken again (unblock): rejoin.
+                ops::enqueue(sys, task, slot.comp);
+            }
+        } else {
+            if let Some(p) = st.parked.iter().position(|&g| g == task) {
+                st.parked.remove(p);
+            }
+            if !st.queue.contains(&task) {
+                st.queue.push_back(task);
+            }
+            self.place_waiting(sys, &mut st);
+        }
+        // Gang bookkeeping is internal (no rq push on some paths), so
+        // parked native workers are signalled explicitly.
+        sys.notify_enqueue();
+    }
+
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let mut st = self.st.lock().unwrap();
+        self.place_waiting(sys, &mut st);
+        let Some(i) = st.active.iter().position(|s| sys.topo.node(s.comp).covers(cpu)) else {
+            return None;
+        };
+        let comp = st.active[i].comp;
+        let gang = st.active[i].gang;
+        if let Some(t) = pick::pick_thread(sys, cpu, &[comp]) {
+            let ms = members(sys, gang);
+            self.maybe_resize(sys, &mut st, i, &ms);
+            return Some(t);
+        }
+        let ms = members(sys, gang);
+        if demand_of(sys, &ms) == 0 {
+            // Nothing in this gang can run: give the CPUs back.
+            st.active.swap_remove(i);
+            if gang_live(sys, gang) {
+                st.parked.push(gang);
+                sys.trace.emit(sys.now(), Event::Regen { bubble: gang, why: RegenWhy::Idle });
+            }
+            self.place_waiting(sys, &mut st);
+            // Retry once: a freshly placed gang may cover this CPU.
+            if let Some(j) =
+                st.active.iter().position(|s| sys.topo.node(s.comp).covers(cpu))
+            {
+                let comp = st.active[j].comp;
+                return pick::pick_thread(sys, cpu, &[comp]);
+            }
+            return None;
+        }
+        self.maybe_resize(sys, &mut st, i, &ms);
+        None
+    }
+
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
+            let gang = root_gang(sys, t);
+            let mut st = self.st.lock().unwrap();
+            if let Some(slot) = st.active.iter().find(|s| s.gang == gang) {
+                ops::enqueue(sys, t, slot.comp);
+            } else if sys.tasks.parent(t).is_some() {
+                // Gang no longer on the machine: wait inside it.
+                sys.tasks.set_state(t, TaskState::InBubble);
+            } else {
+                // A loose gang with no slot: back to the queue.
+                sys.tasks.set_state(t, TaskState::Blocked);
+                if !st.queue.contains(&t) {
+                    st.queue.push_back(t);
+                }
+                self.place_waiting(sys, &mut st);
+            }
+        });
+        if why == StopReason::Terminate {
+            let gang = root_gang(sys, task);
+            let mut st = self.st.lock().unwrap();
+            if let Some(i) = st.active.iter().position(|s| s.gang == gang) {
+                if !gang_live(sys, gang) {
+                    // The whole gang finished: free its component.
+                    st.active.swap_remove(i);
+                    self.place_waiting(sys, &mut st);
+                    sys.notify_enqueue();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marcel::Marcel;
+    use crate::sched::baselines::testsupport;
+    use crate::sched::testutil::system;
+    use crate::task::PRIO_THREAD;
+    use crate::topology::Topology;
+
+    fn gang_of(m: &Marcel, n: usize, tag: &str) -> (TaskId, Vec<TaskId>) {
+        let b = m.bubble_init();
+        let ts: Vec<TaskId> = (0..n).map(|i| m.create_dontsched(format!("{tag}{i}"))).collect();
+        for &t in &ts {
+            m.bubble_inserttask(b, t);
+        }
+        (b, ts)
+    }
+
+    #[test]
+    fn behavioural_suite() {
+        testsupport::drains_all_work(
+            &MoldableGangScheduler::default(),
+            Topology::numa(2, 2),
+            40,
+        );
+        testsupport::flattens_bubbles(&MoldableGangScheduler::default(), Topology::smp(2));
+        testsupport::block_wake_roundtrip(&MoldableGangScheduler::default(), Topology::smp(2));
+    }
+
+    #[test]
+    fn first_gang_owns_the_machine() {
+        let sys = system(Topology::smp(4));
+        let s = MoldableGangScheduler::default();
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&m, 2, "a");
+        let (g2, t2) = gang_of(&m, 2, "b");
+        s.wake(&sys, g1);
+        s.wake(&sys, g2);
+        let picked: Vec<TaskId> = (0..4).filter_map(|c| s.pick(&sys, CpuId(c))).collect();
+        assert_eq!(picked.len(), 2, "only gang 1 runs before any shrink");
+        assert!(picked.iter().all(|t| t1.contains(t)));
+        assert_eq!(s.assignments(), vec![(g1, sys.topo.root())]);
+        let _ = (g2, t2);
+    }
+
+    #[test]
+    fn shrink_frees_cpus_for_the_waiting_gang() {
+        let sys = system(Topology::numa(2, 2));
+        let s = MoldableGangScheduler::new(MoldableConfig { resize_hysteresis: 1 });
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&m, 2, "a");
+        let (g2, t2) = gang_of(&m, 2, "b");
+        s.wake(&sys, g1);
+        s.wake(&sys, g2);
+        // Gang 1 owns the root; two picks dispatch its two threads onto
+        // node 0's CPUs, and the resize evaluation (demand 2 fits one
+        // node) shrinks it with hysteresis 1.
+        let x = s.pick(&sys, CpuId(0)).expect("gang1 thread");
+        let y = s.pick(&sys, CpuId(1)).expect("gang1 thread");
+        assert!(t1.contains(&x) && t1.contains(&y));
+        // The shrink happened on a pick above; gang 2 now fits node 1.
+        let z = s.pick(&sys, CpuId(2)).expect("gang2 thread after shrink");
+        assert!(t2.contains(&z), "gang 2 must run on the freed node");
+        let a = s.assignments();
+        assert_eq!(a.len(), 2, "both gangs co-scheduled: {a:?}");
+        assert!(sys.metrics.gang_shrinks.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        let _ = g2;
+    }
+
+    #[test]
+    fn blocked_gang_parks_and_returns_on_wake() {
+        let sys = system(Topology::smp(2));
+        let s = MoldableGangScheduler::default();
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&m, 1, "a");
+        let (g2, t2) = gang_of(&m, 1, "b");
+        s.wake(&sys, g1);
+        s.wake(&sys, g2);
+        let x = s.pick(&sys, CpuId(0)).unwrap();
+        assert_eq!(x, t1[0]);
+        s.stop(&sys, CpuId(0), x, StopReason::Block);
+        // Gang 1 has zero demand: the next pick parks it and activates
+        // gang 2 in its place.
+        let y = s.pick(&sys, CpuId(0)).expect("gang2 after park");
+        assert_eq!(y, t2[0]);
+        // Waking the blocked member brings gang 1 back.
+        s.wake(&sys, t1[0]);
+        s.stop(&sys, CpuId(0), y, StopReason::Terminate);
+        let z = s.pick(&sys, CpuId(0)).expect("gang1 reactivated");
+        assert_eq!(z, t1[0]);
+        let _ = (g1, g2);
+    }
+
+    #[test]
+    fn force_resize_roundtrip_preserves_members() {
+        let sys = system(Topology::numa(2, 2));
+        let s = MoldableGangScheduler::default();
+        let m = Marcel::with_system(&sys);
+        let (g, ts) = gang_of(&m, 2, "a");
+        s.wake(&sys, g);
+        assert_eq!(s.assignments(), vec![(g, sys.topo.root())]);
+        assert!(s.force_shrink(&sys, g), "demand 2 fits a node");
+        let (_, comp) = s.assignments()[0];
+        assert_ne!(comp, sys.topo.root());
+        // Queued members moved with the gang.
+        assert_eq!(sys.rq.len_of(comp), 2);
+        assert!(s.force_expand(&sys, g), "parent is free again");
+        assert_eq!(s.assignments(), vec![(g, sys.topo.root())]);
+        assert_eq!(sys.rq.len_of(sys.topo.root()), 2);
+        // Nothing lost or duplicated.
+        let mut seen = Vec::new();
+        for (l, t, _p) in sys.rq.snapshot() {
+            assert_eq!(l, sys.topo.root());
+            seen.push(t);
+        }
+        seen.sort();
+        let mut want = ts.clone();
+        want.sort();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn loose_threads_are_singleton_gangs() {
+        let sys = system(Topology::smp(2));
+        let s = MoldableGangScheduler::new(MoldableConfig { resize_hysteresis: 1 });
+        let a = sys.tasks.new_thread("a", PRIO_THREAD);
+        let b = sys.tasks.new_thread("b", PRIO_THREAD);
+        s.wake(&sys, a);
+        s.wake(&sys, b);
+        let x = s.pick(&sys, CpuId(0)).unwrap();
+        assert_eq!(x, a);
+        // Unlike strict gang scheduling, the singleton shrinks (demand
+        // 1 fits a leaf) and b gets the other CPU.
+        let y = s.pick(&sys, CpuId(1)).or_else(|| s.pick(&sys, CpuId(1)));
+        assert_eq!(y, Some(b), "moldable gangs must not idle the second CPU");
+    }
+}

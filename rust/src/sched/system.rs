@@ -4,7 +4,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use super::core::stats::LoadStats;
+use super::core::stats::{LoadStats, RateStats};
 use crate::mem::MemState;
 use crate::metrics::Metrics;
 use crate::rq::RqHierarchy;
@@ -44,6 +44,10 @@ pub struct System {
     /// Incremental per-level load statistics (see [`LoadStats`]),
     /// maintained by the `sched::core::ops` building blocks.
     pub stats: LoadStats,
+    /// Per-level feedback-event rates (steal fails, cross-node
+    /// migrations, idle polls — see [`RateStats`]); the input signal of
+    /// online policies such as `adaptive`.
+    pub rates: RateStats,
     /// Memory state: region registry + per-task/bubble NUMA footprint
     /// (see [`crate::mem`]). Policies consult it on wake/pick/steal.
     pub mem: MemState,
@@ -60,12 +64,14 @@ impl System {
     pub fn new(topo: Arc<Topology>) -> System {
         let rq = RqHierarchy::new(&topo);
         let stats = LoadStats::new(&topo);
+        let rates = RateStats::new(&topo);
         let mem = MemState::new(&topo);
         System {
             topo,
             tasks: TaskTable::new(),
             rq,
             stats,
+            rates,
             mem,
             metrics: Metrics::new(),
             trace: Trace::default(),

@@ -250,6 +250,8 @@ impl SimEngine {
                         idle_streak = 0;
                     } else {
                         idle_streak += 1;
+                        Metrics::inc(&self.sys.metrics.idle_picks);
+                        self.sys.rates.on_idle(&self.sys.topo, cpu);
                         Metrics::add(&self.sys.metrics.idle_time, self.cfg.idle_repoll);
                         // Deadlock heuristic: every CPU idling with no
                         // segment in flight and nothing ready.

@@ -28,6 +28,13 @@ pub struct DistanceModel {
     /// CPU (§3.1 "Data sharing": grouping threads that work on the same
     /// data benefits from cache effects even without NUMA).
     pub cache_line_penalty: f64,
+    /// Full per-node-pair access-cost matrix (`numa_matrix[from][to]`,
+    /// diagonal 1.0): real interconnects are rarely uniform — a
+    /// NovaScale-style board has cheap neighbour links and expensive
+    /// far hops. When set it overrides the scalar `numa_factor` in
+    /// [`DistanceModel::mem_factor`]; `None` keeps the paper's uniform
+    /// "~3× remote" model.
+    pub numa_matrix: Option<Vec<Vec<f64>>>,
 }
 
 impl Default for DistanceModel {
@@ -38,14 +45,24 @@ impl Default for DistanceModel {
             smt_contention: 0.65,
             smt_symbiosis: 0.95,
             cache_line_penalty: 0.3,
+            numa_matrix: None,
         }
     }
 }
 
 impl DistanceModel {
     /// Memory cost factor for `cpu` touching data homed on `numa_node`.
+    /// Uses the asymmetric matrix when configured, else the scalar
+    /// NUMA factor; out-of-range nodes (a matrix smaller than the
+    /// machine) fall back to the scalar.
     pub fn mem_factor(&self, topo: &Topology, cpu: CpuId, numa_node: usize) -> f64 {
-        if topo.numa_of(cpu) == numa_node {
+        let here = topo.numa_of(cpu);
+        if let Some(m) = &self.numa_matrix {
+            if let Some(f) = m.get(here).and_then(|row| row.get(numa_node)) {
+                return *f;
+            }
+        }
+        if here == numa_node {
             1.0
         } else {
             self.numa_factor
@@ -80,5 +97,28 @@ mod tests {
         let near = d.migration_cycles(&t, CpuId(0), CpuId(1));
         let far = d.migration_cycles(&t, CpuId(0), CpuId(3));
         assert!(far > near && near > 0);
+    }
+
+    #[test]
+    fn asymmetric_matrix_overrides_scalar_factor() {
+        let t = Topology::numa(3, 1);
+        let d = DistanceModel {
+            numa_matrix: Some(vec![
+                vec![1.0, 1.5, 6.0],
+                vec![1.5, 1.0, 2.0],
+                vec![6.0, 2.0, 1.0],
+            ]),
+            ..DistanceModel::default()
+        };
+        assert_eq!(d.mem_factor(&t, CpuId(0), 0), 1.0);
+        assert_eq!(d.mem_factor(&t, CpuId(0), 1), 1.5, "cheap neighbour link");
+        assert_eq!(d.mem_factor(&t, CpuId(0), 2), 6.0, "expensive far hop");
+        assert_eq!(d.mem_factor(&t, CpuId(2), 0), 6.0);
+        // A matrix smaller than the machine falls back to the scalar.
+        let short = DistanceModel {
+            numa_matrix: Some(vec![vec![1.0]]),
+            ..DistanceModel::default()
+        };
+        assert_eq!(short.mem_factor(&t, CpuId(0), 2), 3.0);
     }
 }

@@ -1,0 +1,242 @@
+//! Property tests for moldable gang scheduling: random shrink/expand
+//! sequences interleaved with scheduling traffic must never lose or
+//! duplicate a gang member, never break the disjointness of the active
+//! CPU sets, and never leave a runnable gang without CPUs.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use bubbles::marcel::Marcel;
+use bubbles::sched::{MoldableConfig, MoldableGangScheduler, Scheduler, StopReason, System};
+use bubbles::task::{TaskId, TaskState};
+use bubbles::topology::{CpuId, Topology};
+use bubbles::util::proptest::check;
+use bubbles::util::Rng;
+
+fn machines() -> Vec<Topology> {
+    vec![Topology::smp(4), Topology::numa(2, 2), Topology::numa(4, 4), Topology::asym()]
+}
+
+/// Where each member of each gang currently is, for conservation
+/// checks: a member must be in exactly one place.
+fn member_census(sys: &System, gangs: &BTreeMap<TaskId, Vec<TaskId>>) {
+    // No member may appear on more than one runqueue (or twice on one).
+    let mut queued: BTreeMap<TaskId, usize> = BTreeMap::new();
+    for (_list, task, _prio) in sys.rq.snapshot() {
+        *queued.entry(task).or_insert(0) += 1;
+    }
+    for (&gang, members) in gangs {
+        for &m in members {
+            let state = sys.tasks.state(m);
+            let on_queue = queued.get(&m).copied().unwrap_or(0);
+            match state {
+                TaskState::Ready { .. } => {
+                    assert_eq!(on_queue, 1, "gang {gang}: member {m} Ready but queued {on_queue}×")
+                }
+                _ => assert_eq!(
+                    on_queue, 0,
+                    "gang {gang}: member {m} is {state:?} but sits on a runqueue"
+                ),
+            }
+        }
+    }
+}
+
+/// Active components are pairwise disjoint and every runnable gang is
+/// somewhere it can make progress (owns CPUs, or is queued/running
+/// towards them).
+fn placement_invariants(
+    sys: &System,
+    s: &MoldableGangScheduler,
+    gangs: &BTreeMap<TaskId, Vec<TaskId>>,
+) {
+    let assignments = s.assignments();
+    for (i, &(ga, ca)) in assignments.iter().enumerate() {
+        let na = sys.topo.node(ca);
+        assert!(na.cpu_count >= 1, "gang {ga} assigned an empty component");
+        for &(gb, cb) in assignments.iter().skip(i + 1) {
+            let nb = sys.topo.node(cb);
+            let overlap = na.cpu_first < nb.cpu_first + nb.cpu_count
+                && nb.cpu_first < na.cpu_first + na.cpu_count;
+            assert!(!overlap, "gangs {ga} and {gb} own overlapping CPU sets {ca:?}/{cb:?}");
+        }
+    }
+    // A gang with runnable members must never be dropped: if it is not
+    // active, its runnable members must all be waiting inside it (so a
+    // future placement releases them), not lost in limbo.
+    for (&gang, members) in gangs {
+        let active = assignments.iter().any(|&(g, _)| g == gang);
+        if !active {
+            for &m in members {
+                let st = sys.tasks.state(m);
+                assert!(
+                    !st.is_ready() && !st.is_running(),
+                    "gang {gang} owns no CPUs but member {m} is {st:?}"
+                );
+            }
+        }
+    }
+}
+
+fn random_mold_run(rng: &mut Rng) {
+    let topo = {
+        let z = machines();
+        z[rng.range(0, z.len())].clone()
+    };
+    let n_cpus = topo.n_cpus();
+    let sys = Arc::new(System::new(Arc::new(topo)));
+    let s = MoldableGangScheduler::new(MoldableConfig {
+        resize_hysteresis: 1 + rng.range(0, 4) as u32,
+    });
+    let m = Marcel::with_system(&sys);
+
+    // 2-4 gangs of 1-4 threads each.
+    let mut gangs: BTreeMap<TaskId, Vec<TaskId>> = BTreeMap::new();
+    let n_gangs = rng.range(2, 5);
+    for gi in 0..n_gangs {
+        let b = m.bubble_init();
+        let mut members = Vec::new();
+        for ti in 0..rng.range(1, 5) {
+            let t = m.create_dontsched(format!("g{gi}t{ti}"));
+            m.bubble_inserttask(b, t);
+            members.push(t);
+        }
+        gangs.insert(b, members);
+        s.wake(&sys, b);
+    }
+    let gang_ids: Vec<TaskId> = gangs.keys().copied().collect();
+    let all_members: Vec<TaskId> = gangs.values().flatten().copied().collect();
+
+    let mut running: Vec<Option<TaskId>> = vec![None; n_cpus];
+    let mut remaining: std::collections::HashSet<TaskId> = all_members.iter().copied().collect();
+    let mut blocked: Vec<TaskId> = Vec::new();
+    let mut fuel = 400 * all_members.len() * n_cpus + 800;
+    while !remaining.is_empty() && fuel > 0 {
+        fuel -= 1;
+        match rng.below(10) {
+            // Random resize pressure, any gang, any time.
+            0 => {
+                let g = gang_ids[rng.range(0, gang_ids.len())];
+                s.force_shrink(&sys, g);
+            }
+            1 => {
+                let g = gang_ids[rng.range(0, gang_ids.len())];
+                s.force_expand(&sys, g);
+            }
+            // Wake a blocked member.
+            2 if !blocked.is_empty() => {
+                let t = blocked.swap_remove(rng.range(0, blocked.len()));
+                s.wake(&sys, t);
+            }
+            // Scheduling traffic.
+            _ => {
+                let cpu = rng.range(0, n_cpus);
+                match running[cpu] {
+                    Some(t) => {
+                        let why = match rng.below(10) {
+                            0..=2 => StopReason::Yield,
+                            3 => StopReason::Block,
+                            _ => StopReason::Terminate,
+                        };
+                        s.stop(&sys, CpuId(cpu), t, why);
+                        match why {
+                            StopReason::Terminate => {
+                                remaining.remove(&t);
+                            }
+                            StopReason::Block => blocked.push(t),
+                            _ => {}
+                        }
+                        running[cpu] = None;
+                    }
+                    None => {
+                        if let Some(t) = s.pick(&sys, CpuId(cpu)) {
+                            assert!(
+                                !running.iter().flatten().any(|&r| r == t),
+                                "double dispatch of {t}"
+                            );
+                            running[cpu] = Some(t);
+                        }
+                    }
+                }
+            }
+        }
+        member_census(&sys, &gangs);
+        placement_invariants(&sys, &s, &gangs);
+        // Drain the blocked pool when it is the only work left.
+        if remaining.iter().all(|t| blocked.contains(t)) && running.iter().all(|r| r.is_none())
+        {
+            while let Some(t) = blocked.pop() {
+                s.wake(&sys, t);
+            }
+        }
+    }
+    // Wind down: terminate what runs, re-wake what blocks, drain.
+    for (cpu, slot) in running.iter().enumerate() {
+        if let Some(t) = slot {
+            s.stop(&sys, CpuId(cpu), *t, StopReason::Terminate);
+            remaining.remove(t);
+        }
+    }
+    while let Some(t) = blocked.pop() {
+        s.wake(&sys, t);
+    }
+    let mut extra = 400 * all_members.len() * n_cpus + 800;
+    while !remaining.is_empty() && extra > 0 {
+        extra -= 1;
+        let cpu = rng.range(0, n_cpus);
+        if let Some(t) = s.pick(&sys, CpuId(cpu)) {
+            s.stop(&sys, CpuId(cpu), t, StopReason::Terminate);
+            remaining.remove(&t);
+        }
+    }
+    assert!(
+        remaining.is_empty(),
+        "moldable lost {} of {} members on {}",
+        remaining.len(),
+        all_members.len(),
+        sys.topo.name()
+    );
+    assert_eq!(sys.rq.total_queued(), 0, "runqueues not drained");
+    for &t in &all_members {
+        assert_eq!(sys.tasks.state(t), TaskState::Terminated, "{t} not terminated");
+    }
+}
+
+#[test]
+fn random_shrink_expand_never_loses_members() {
+    check(0x301dab1e, 30, random_mold_run);
+}
+
+#[test]
+fn moldable_beats_strict_gang_on_small_gangs() {
+    // The policy's reason to exist (and the paper's §3.1 criticism of
+    // Ousterhout fragmentation, measured): two 2-thread gangs on a
+    // 4-CPU NUMA box run serially under strict gang scheduling but
+    // side-by-side once the first gang's set shrinks to one node.
+    use bubbles::config::SchedKind;
+    use bubbles::sched::factory::make_default;
+    use bubbles::sim::{Program, SimConfig};
+
+    let run = |kind: SchedKind| -> u64 {
+        let topo = Topology::numa(2, 2);
+        let mut e = bubbles::apps::engine_with(&topo, make_default(kind), SimConfig::default());
+        let sys = e.sys.clone();
+        let m = Marcel::with_system(&sys);
+        for gi in 0..2 {
+            let b = m.bubble_init();
+            for ti in 0..2 {
+                let t = m.create_dontsched(format!("g{gi}t{ti}"));
+                m.bubble_inserttask(b, t);
+                e.set_program(t, Program::new().compute(2_000_000, 0.0, None));
+            }
+            e.wake(b);
+        }
+        e.run().expect("gang comparison run").total_time
+    };
+    let strict = run(SchedKind::Gang);
+    let moldable = run(SchedKind::MoldableGang);
+    assert!(
+        (moldable as f64) < 0.75 * strict as f64,
+        "moldable {moldable} must clearly beat strict gang {strict}"
+    );
+}

@@ -1,0 +1,234 @@
+//! Factory-wide conformance suite: every policy the registry
+//! enumerates — including any future entry, which is covered here
+//! automatically — must be well-behaved on a fixed workload matrix
+//! (flat SMP, the paper's numa(4,4), and the asymmetric machine):
+//!
+//! * **termination** — the simulated run completes (no deadlock, no
+//!   lost wakeups), for loose threads and for bubble-structured work;
+//! * **task conservation** — every spawned thread ends `Terminated`,
+//!   and nothing but inert bubble tasks may remain on the runqueues;
+//! * **no permanent starvation** — under fair round-robin polling,
+//!   every woken task is eventually picked within a fuel budget;
+//! * **stats consistency** — the incremental `LoadStats` running
+//!   counters return to zero on every component, and the pick/steal
+//!   metrics add up.
+//!
+//! Workloads are deliberately free of *inter-gang* coupling (no global
+//! barrier across independent gangs) so strict space/time-sharing
+//! policies (`gang`) can pass them too; barrier-coupled behaviour is
+//! exercised by the scheduler-specific suites.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use bubbles::apps::engine_with;
+use bubbles::marcel::Marcel;
+use bubbles::sched::factory;
+use bubbles::sched::{Scheduler, StopReason, System};
+use bubbles::sim::{Program, SimConfig, SimEngine};
+use bubbles::task::{TaskId, TaskState, PRIO_THREAD};
+use bubbles::topology::{CpuId, LevelId, Topology};
+
+fn machines() -> Vec<Topology> {
+    vec![Topology::smp(4), Topology::numa(4, 4), Topology::asym()]
+}
+
+fn engine(topo: &Topology, sched: Arc<dyn Scheduler>) -> SimEngine {
+    engine_with(topo, sched, SimConfig::default())
+}
+
+/// Post-run invariants shared by every workload.
+fn assert_consistent(name: &str, machine: &str, sys: &System, threads: &[TaskId]) {
+    for &t in threads {
+        assert_eq!(
+            sys.tasks.state(t),
+            TaskState::Terminated,
+            "{name} on {machine}: {t} not terminated"
+        );
+    }
+    // LoadStats: every per-component running counter back to zero.
+    for i in 0..sys.topo.n_components() {
+        assert_eq!(
+            sys.stats.running(LevelId(i)),
+            0,
+            "{name} on {machine}: running counter leaked on component {i}"
+        );
+    }
+    // Only inert bubble tasks may remain queued.
+    for (list, task, _prio) in sys.rq.snapshot() {
+        assert!(
+            sys.tasks.is_bubble(task),
+            "{name} on {machine}: thread {task} leaked on list {list:?}"
+        );
+    }
+    // Footprint conservation (regions were declared in every workload).
+    assert!(sys.mem.conserved(&sys.tasks), "{name} on {machine}: footprint leak");
+    // Metrics add up: every thread was dispatched at least once, and
+    // steals never exceed picks.
+    let picks = sys.metrics.picks.load(Ordering::Relaxed);
+    let steals = sys.metrics.steals.load(Ordering::Relaxed);
+    assert!(
+        picks >= threads.len() as u64,
+        "{name} on {machine}: {picks} picks for {} threads",
+        threads.len()
+    );
+    assert!(steals <= picks, "{name} on {machine}: steals {steals} > picks {picks}");
+}
+
+/// Independent loose compute threads (no coupling at all): every
+/// policy, including strict gang time-sharing, must drain this.
+fn flat_workload(name: &str, topo: &Topology) {
+    let sched = factory::lookup(name).map(|e| {
+        factory::make(&bubbles::config::SchedConfig {
+            kind: e.kind,
+            ..Default::default()
+        })
+    });
+    let sched = sched.expect("registered policy");
+    let mut e = engine(topo, sched);
+    let n = topo.n_cpus() + 2;
+    let mut threads = Vec::with_capacity(n);
+    for i in 0..n {
+        let r = e.alloc_region_sized(1 << 20, bubbles::sim::AllocPolicy::FirstTouch);
+        let prog = Program::new()
+            .compute(120_000, 0.3, Some(r))
+            .compute(120_000, 0.3, Some(r))
+            .compute(120_000, 0.3, Some(r));
+        let t = e.add_thread(format!("flat{i}"), PRIO_THREAD, prog);
+        e.attach_region(t, r);
+        e.wake(t);
+        threads.push(t);
+    }
+    let rep = e
+        .run()
+        .unwrap_or_else(|err| panic!("{name} on {}: flat run failed: {err}", topo.name()));
+    assert!(rep.total_time > 0);
+    assert_consistent(name, topo.name(), &e.sys, &threads);
+}
+
+/// Bubble-structured work: one flat bubble per NUMA node (no nesting,
+/// no inter-bubble coupling), woken separately — gangs for the gang
+/// family, burstable groups for the bubble scheduler, flattened by the
+/// opportunists.
+fn bubbled_workload(name: &str, topo: &Topology) {
+    let sched = factory::make(&bubbles::config::SchedConfig {
+        kind: factory::lookup(name).expect("registered policy").kind,
+        ..Default::default()
+    });
+    let mut e = engine(topo, sched);
+    let sys = e.sys.clone();
+    let m = Marcel::with_system(&sys);
+    let groups = sys.topo.n_numa().max(2);
+    let per = sys.topo.n_cpus().div_ceil(groups).max(1);
+    let mut threads = Vec::new();
+    let mut bubbles_list = Vec::new();
+    for g in 0..groups {
+        let b = m.bubble_init();
+        for k in 0..per {
+            let t = m.create_dontsched(format!("g{g}t{k}"));
+            m.bubble_inserttask(b, t);
+            let r = e.alloc_region_sized(1 << 20, bubbles::sim::AllocPolicy::FirstTouch);
+            m.attach_region(t, r);
+            e.set_program(
+                t,
+                Program::new().compute(100_000, 0.3, Some(r)).compute(100_000, 0.3, Some(r)),
+            );
+            threads.push(t);
+        }
+        bubbles_list.push(b);
+    }
+    for &b in &bubbles_list {
+        e.wake(b);
+    }
+    let rep = e
+        .run()
+        .unwrap_or_else(|err| panic!("{name} on {}: bubbled run failed: {err}", topo.name()));
+    assert!(rep.total_time > 0);
+    assert_consistent(name, topo.name(), &e.sys, &threads);
+}
+
+/// Fair round-robin polling drains every woken task within a fuel
+/// budget: no policy may starve a task forever.
+fn starvation_freedom(name: &str, topo: &Topology) {
+    let sys = Arc::new(System::new(Arc::new(topo.clone())));
+    let sched = factory::make(&bubbles::config::SchedConfig {
+        kind: factory::lookup(name).expect("registered policy").kind,
+        ..Default::default()
+    });
+    let n_cpus = sys.topo.n_cpus();
+    let n = 3 * n_cpus;
+    let mut remaining = std::collections::HashSet::new();
+    for i in 0..n {
+        let t = sys.tasks.new_thread(format!("s{i}"), PRIO_THREAD);
+        sched.wake(&sys, t);
+        remaining.insert(t);
+    }
+    let mut fuel = 60 * n * n_cpus + 400;
+    let mut cpu = 0;
+    while !remaining.is_empty() && fuel > 0 {
+        fuel -= 1;
+        if let Some(t) = sched.pick(&sys, CpuId(cpu)) {
+            assert!(
+                remaining.contains(&t),
+                "{name} on {}: {t} picked twice",
+                sys.topo.name()
+            );
+            sched.stop(&sys, CpuId(cpu), t, StopReason::Terminate);
+            remaining.remove(&t);
+        }
+        cpu = (cpu + 1) % n_cpus;
+    }
+    assert!(
+        remaining.is_empty(),
+        "{name} on {}: {} tasks starved under fair polling",
+        sys.topo.name(),
+        remaining.len()
+    );
+    assert_eq!(sys.rq.total_queued(), 0, "{name}: runqueues not drained");
+    for i in 0..sys.topo.n_components() {
+        assert_eq!(sys.stats.running(LevelId(i)), 0, "{name}: running counter leaked");
+    }
+}
+
+#[test]
+fn every_registered_policy_completes_the_flat_matrix() {
+    for entry in factory::registry() {
+        for topo in machines() {
+            flat_workload(entry.name, &topo);
+        }
+    }
+}
+
+#[test]
+fn every_registered_policy_completes_the_bubbled_matrix() {
+    for entry in factory::registry() {
+        for topo in machines() {
+            bubbled_workload(entry.name, &topo);
+        }
+    }
+}
+
+#[test]
+fn no_registered_policy_starves_tasks() {
+    for entry in factory::registry() {
+        for topo in machines() {
+            starvation_freedom(entry.name, &topo);
+        }
+    }
+}
+
+#[test]
+fn registry_is_complete_and_buildable() {
+    // The conformance matrix above runs whatever the registry lists;
+    // this pins that the listing itself covers every SchedKind and
+    // that names round-trip, so a future policy cannot dodge the suite
+    // by registering half-way.
+    use bubbles::config::SchedKind;
+    assert_eq!(factory::registry().len(), SchedKind::all().len());
+    for kind in SchedKind::all() {
+        let e = factory::info(*kind);
+        let s = factory::make_default(*kind);
+        assert_eq!(s.name(), e.name, "{:?}", kind);
+        assert_eq!(SchedKind::parse(e.name), Some(*kind));
+    }
+}

@@ -7,14 +7,17 @@
 //!   and ends Terminated (the two-pass search may retry, but a task can
 //!   never be lost or handed to two CPUs);
 //! * **retry accounting** — `metrics.search_retries` is reported for
-//!   each policy (the single-list `ss` policy maximises hint races).
+//!   each policy (the single-list `ss` policy maximises hint races);
+//! * **scope stability** — the adaptive policy under a bursty
+//!   native-executor workload records its scope-switch count and keeps
+//!   migrations bounded (no ping-pong between scopes).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use bubbles::config::SchedKind;
 use bubbles::sched::factory::make_default;
-use bubbles::sched::{StopReason, System};
+use bubbles::sched::{AdaptiveConfig, AdaptiveScheduler, Scheduler, StopReason, System};
 use bubbles::task::{TaskId, TaskState, PRIO_THREAD};
 use bubbles::topology::{CpuId, Topology};
 
@@ -96,4 +99,100 @@ fn lds_conserves_tasks_under_contention() {
 #[test]
 fn memaware_conserves_tasks_under_contention() {
     hammer(SchedKind::Memaware, 2000);
+}
+
+#[test]
+fn adaptive_conserves_tasks_under_contention() {
+    hammer(SchedKind::Adaptive, 2000);
+}
+
+/// Bursty arrival under real OS workers: a producer wakes waves of
+/// tasks with quiet gaps between; per-CPU adaptive controllers widen
+/// during the droughts and narrow during the bursts. Conservation must
+/// hold, the scope-switch count is recorded, and both migrations and
+/// scope switches stay bounded — a controller ping-ponging between
+/// scopes would blow the switch budget.
+#[test]
+fn adaptive_bursty_scope_switches_bounded() {
+    const BURSTS: usize = 20;
+    const PER_BURST: usize = 100;
+    let total = BURSTS * PER_BURST;
+
+    let sys = Arc::new(System::new(Arc::new(Topology::numa(4, 4))));
+    let sched_impl = Arc::new(AdaptiveScheduler::new(AdaptiveConfig::default()));
+    let sched: Arc<dyn Scheduler> = sched_impl.clone();
+    let n_cpus = sys.topo.n_cpus();
+    let depth = sys.topo.covering(CpuId(0)).len();
+
+    let picked: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..total).map(|_| AtomicUsize::new(0)).collect());
+    let done = Arc::new(AtomicUsize::new(0));
+
+    let producer = {
+        let sys = sys.clone();
+        let sched = sched.clone();
+        std::thread::spawn(move || {
+            for b in 0..BURSTS {
+                for i in 0..PER_BURST {
+                    let t = sys.tasks.new_thread(format!("b{b}t{i}"), PRIO_THREAD);
+                    sched.wake(&sys, t);
+                }
+                // The drought between bursts: workers spin dry and the
+                // controllers widen towards machine scope.
+                std::thread::sleep(std::time::Duration::from_micros(300));
+            }
+        })
+    };
+    let mut joins = Vec::with_capacity(n_cpus);
+    for w in 0..n_cpus {
+        let sys = sys.clone();
+        let sched = sched.clone();
+        let picked = picked.clone();
+        let done = done.clone();
+        joins.push(std::thread::spawn(move || {
+            let cpu = CpuId(w);
+            while done.load(Ordering::SeqCst) < total {
+                match sched.pick(&sys, cpu) {
+                    Some(t) => {
+                        picked[t.0].fetch_add(1, Ordering::SeqCst);
+                        sched.stop(&sys, cpu, t, StopReason::Terminate);
+                        done.fetch_add(1, Ordering::SeqCst);
+                    }
+                    None => std::thread::yield_now(),
+                }
+            }
+        }));
+    }
+    producer.join().expect("producer panicked");
+    for j in joins {
+        j.join().expect("worker panicked");
+    }
+
+    // Conservation: picked exactly once, all terminated.
+    for (i, c) in picked.iter().enumerate() {
+        let n = c.load(Ordering::SeqCst);
+        assert_eq!(n, 1, "task t{i} picked {n} times");
+    }
+    for i in 0..total {
+        assert_eq!(sys.tasks.state(TaskId(i)), TaskState::Terminated, "t{i}");
+    }
+
+    // A terminated-on-first-pick task migrates at most once, so the
+    // migration count is bounded by the task count; cross-node moves
+    // are a subset.
+    let migrations = sys.metrics.migrations.load(Ordering::Relaxed);
+    let cross = sys.metrics.cross_node_migrations.load(Ordering::Relaxed);
+    assert!(migrations <= total as u64, "migrations {migrations} > tasks {total}");
+    assert!(cross <= migrations, "cross-node {cross} > migrations {migrations}");
+
+    // Scope stability: per drought a CPU can widen at most depth-1
+    // levels and per burst narrow at most depth-1 back; anything far
+    // beyond that budget means the controller is ping-ponging.
+    let switches = sched_impl.scope_switches();
+    let budget = (BURSTS * n_cpus * 2 * (depth - 1)) as u64;
+    println!(
+        "adaptive bursty: {total} tasks, scope_switches = {switches} (budget {budget}), \
+         migrations = {migrations}, cross_node = {cross}"
+    );
+    assert!(switches <= budget, "scope ping-pong: {switches} switches > budget {budget}");
 }
