@@ -28,6 +28,17 @@ pub fn build(
     conduction::build(engine, mode, p)
 }
 
+/// Build with the shared striped mesh frame (advection advects *one*
+/// global field: see [`conduction::build_with_shared_mesh`]).
+pub fn build_with_shared_mesh(
+    engine: &mut crate::sim::SimEngine,
+    mode: StructureMode,
+    p: &HeatParams,
+    mesh_bytes: u64,
+) -> (Vec<TaskId>, crate::mem::RegionId) {
+    conduction::build_with_shared_mesh(engine, mode, p, mesh_bytes)
+}
+
 /// Run one row.
 pub fn run(topo: &Topology, mode: StructureMode, p: &HeatParams) -> SimReport {
     conduction::run(topo, mode, p)

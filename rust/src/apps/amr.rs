@@ -82,6 +82,29 @@ pub fn work_table(p: &AmrParams) -> Vec<Vec<u64>> {
 
 /// Build the AMR workload under a structure mode.
 pub fn build(engine: &mut SimEngine, mode: StructureMode, p: &AmrParams) -> Vec<TaskId> {
+    build_inner(engine, mode, p, None)
+}
+
+/// Build like [`build`], plus the *coarse* mesh every refinement level
+/// hangs off — one **striped** region spread over all NUMA nodes that
+/// each thread touches every cycle. Returns the threads and the mesh
+/// region (left unattached: shared data is nobody's footprint).
+pub fn build_with_shared_mesh(
+    engine: &mut SimEngine,
+    mode: StructureMode,
+    p: &AmrParams,
+    mesh_bytes: u64,
+) -> (Vec<TaskId>, crate::mem::RegionId) {
+    let mesh = super::conduction::alloc_all_node_striped(engine, mesh_bytes);
+    (build_inner(engine, mode, p, Some(mesh)), mesh)
+}
+
+fn build_inner(
+    engine: &mut SimEngine,
+    mode: StructureMode,
+    p: &AmrParams,
+    mesh: Option<crate::mem::RegionId>,
+) -> Vec<TaskId> {
     let table = work_table(p);
     let barrier = engine.alloc_barrier(p.threads);
     // AMR refinement data is small relative to the arithmetic on it:
@@ -92,7 +115,12 @@ pub fn build(engine: &mut SimEngine, mode: StructureMode, p: &AmrParams) -> Vec<
     let program = |i: usize, r| {
         let mut prog = Program::new();
         for c in 0..p.cycles {
-            prog = prog.compute(table[i][c], p.mem_fraction, Some(r)).barrier(barrier);
+            prog = prog.compute(table[i][c], p.mem_fraction, Some(r));
+            if let Some(mesh) = mesh {
+                let slice = (table[i][c] / super::conduction::MESH_SLICE_DIV).max(1);
+                prog = prog.compute(slice, p.mem_fraction, Some(mesh));
+            }
+            prog = prog.barrier(barrier);
         }
         prog
     };
@@ -256,6 +284,21 @@ mod tests {
         for mode in [Simple, Bound, Bubbles] {
             assert!(run(&topo, mode, &p).total_time > 0, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn shared_coarse_mesh_is_striped_and_conserved() {
+        let topo = Topology::numa(2, 2);
+        let p = AmrParams { threads: 4, cycles: 6, redraw_every: 3, ..Default::default() };
+        let mut e = crate::apps::engine_for(&topo, Bubbles);
+        let (threads, mesh) = build_with_shared_mesh(&mut e, Bubbles, &p, 4 << 20);
+        e.run().unwrap();
+        let info = e.sys.mem.info(mesh);
+        assert_eq!(info.stripes.len(), 2, "one stripe per NUMA node");
+        assert!(info.touches >= (p.threads * p.cycles) as u64);
+        assert!(e.sys.mem.conserved(&e.sys.tasks));
+        assert!(e.sys.mem.hierarchy_consistent(&e.sys.tasks));
+        assert_eq!(threads.len(), p.threads);
     }
 
     #[test]

@@ -46,6 +46,25 @@ impl HeatParams {
     }
 }
 
+/// Bytes of the globally shared mesh frame (halo cells, global index
+/// tables) declared as one *striped* region over every NUMA node by
+/// [`build_with_shared_mesh`].
+pub const SHARED_MESH_BYTES: u64 = 8 << 20;
+
+/// Consulting the shared mesh costs `work / MESH_SLICE_DIV` of each
+/// cycle's compute (shared by conduction and the AMR coarse mesh).
+pub const MESH_SLICE_DIV: u64 = 8;
+
+/// Declare one striped region spanning every NUMA node of the engine's
+/// machine — the shared-mesh layout conduction and amr both use.
+pub(crate) fn alloc_all_node_striped(
+    engine: &mut SimEngine,
+    bytes: u64,
+) -> crate::mem::RegionId {
+    let nodes: Vec<usize> = (0..engine.sys.topo.n_numa().max(1)).collect();
+    engine.alloc_region_striped(bytes, &nodes)
+}
+
 /// Build the striped workload into `engine` under the given structure
 /// mode. Returns the thread ids.
 pub fn build(engine: &mut SimEngine, mode: StructureMode, p: &HeatParams) -> Vec<TaskId> {
@@ -59,6 +78,34 @@ pub fn build_with_policy(
     p: &HeatParams,
     policy: crate::sim::AllocPolicy,
 ) -> Vec<TaskId> {
+    build_inner(engine, mode, p, policy, None)
+}
+
+/// Build like [`build`], plus one **striped** region spread over every
+/// NUMA node — the globally shared mesh frame no single stripe owns —
+/// that every thread touches each cycle (a small slice of the cycle's
+/// work). Returns the thread ids and the mesh region. The mesh is left
+/// unattached: shared data belongs to no one thread's footprint, but
+/// its touches still rotate over the stripes and count in the
+/// local/remote metrics.
+pub fn build_with_shared_mesh(
+    engine: &mut SimEngine,
+    mode: StructureMode,
+    p: &HeatParams,
+    mesh_bytes: u64,
+) -> (Vec<TaskId>, crate::mem::RegionId) {
+    let mesh = alloc_all_node_striped(engine, mesh_bytes);
+    let threads = build_inner(engine, mode, p, crate::sim::AllocPolicy::FirstTouch, Some(mesh));
+    (threads, mesh)
+}
+
+fn build_inner(
+    engine: &mut SimEngine,
+    mode: StructureMode,
+    p: &HeatParams,
+    policy: crate::sim::AllocPolicy,
+    mesh: Option<crate::mem::RegionId>,
+) -> Vec<TaskId> {
     let barrier = engine.alloc_barrier(p.threads);
     let regions: Vec<_> = (0..p.threads)
         .map(|_| engine.alloc_region_sized(STRIPE_BYTES, policy))
@@ -66,7 +113,12 @@ pub fn build_with_policy(
     let program = |r| {
         let mut prog = Program::new();
         for _ in 0..p.cycles {
-            prog = prog.compute(p.work, p.mem_fraction, Some(r)).barrier(barrier);
+            prog = prog.compute(p.work, p.mem_fraction, Some(r));
+            if let Some(mesh) = mesh {
+                let slice = (p.work / MESH_SLICE_DIV).max(1);
+                prog = prog.compute(slice, p.mem_fraction, Some(mesh));
+            }
+            prog = prog.barrier(barrier);
         }
         prog
     };
@@ -99,6 +151,45 @@ pub fn build_with_policy(
             threads
         }
     }
+}
+
+/// Build the striped workload as real green threads on the native
+/// executor (the `Simple` shape: loose threads, attached stripe
+/// regions, a barrier per cycle). Each cycle every thread records
+/// `touches` region touches through [`crate::exec::GreenApi`] with a
+/// yield between them, so scheduling decisions — and their memory
+/// consequences — happen mid-cycle exactly as in the simulator.
+/// Threads are registered and woken; the caller runs the executor.
+pub fn build_native(
+    ex: &mut crate::exec::Executor,
+    p: &HeatParams,
+    policy: crate::mem::AllocPolicy,
+    touches: usize,
+) -> Vec<TaskId> {
+    let sys = ex.system().clone();
+    let bar = ex.alloc_barrier(p.threads);
+    let cycles = p.cycles;
+    let touches = touches.max(1);
+    let mut out = Vec::with_capacity(p.threads);
+    for i in 0..p.threads {
+        let r = sys.mem.alloc(STRIPE_BYTES, policy);
+        let t = sys.tasks.new_thread(format!("stripe{i}"), PRIO_THREAD);
+        sys.mem.attach(&sys.tasks, t, r);
+        ex.register(t, move |api| {
+            for _ in 0..cycles {
+                for _ in 0..touches {
+                    api.touch_region(r);
+                    api.yield_now();
+                }
+                api.barrier(bar);
+            }
+        });
+        out.push(t);
+    }
+    for &t in &out {
+        ex.wake(t);
+    }
+    out
 }
 
 /// Sequential baseline: one thread computes all stripes, no barriers.
@@ -202,6 +293,23 @@ mod tests {
         for t in threads {
             assert!(e.sys.mem.dominant_node(t).is_some(), "{t} has no footprint");
         }
+    }
+
+    #[test]
+    fn shared_mesh_is_striped_over_every_node_and_conserved() {
+        let topo = Topology::numa(2, 2);
+        let p = small();
+        let mut e = crate::apps::engine_for(&topo, Bubbles);
+        let (threads, mesh) = build_with_shared_mesh(&mut e, Bubbles, &p, SHARED_MESH_BYTES);
+        e.run().unwrap();
+        let info = e.sys.mem.info(mesh);
+        assert_eq!(info.stripes.len(), 2, "one stripe per NUMA node");
+        assert_eq!(info.stripes.iter().map(|s| s.size).sum::<u64>(), SHARED_MESH_BYTES);
+        // Every thread touched the shared frame once per cycle.
+        assert!(info.touches >= (p.threads * p.cycles) as u64);
+        assert!(e.sys.mem.conserved(&e.sys.tasks));
+        assert!(e.sys.mem.hierarchy_consistent(&e.sys.tasks));
+        assert_eq!(threads.len(), p.threads);
     }
 
     #[test]

@@ -68,6 +68,10 @@ impl Args {
     fn f64(&self, key: &str, default: f64) -> f64 {
         self.options.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+
+    fn u64(&self, key: &str, default: u64) -> u64 {
+        self.options.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
 }
 
 /// Top-level dispatch. Returns the text to print.
@@ -102,9 +106,12 @@ COMMANDS
   table2     conduction+advection rows (Table 2) [--machine, --scale 1.0]
   fig5       fibonacci bubble gain (Figure 5)    [--machine xeon-2x-ht|numa-4x4]
   ablations  design-choice sweeps                [--which burst|regen|zoo|all]
-  memcmp     local vs remote access ratio per policy [--machine, --scheds a,b,c]
+  memcmp     local vs remote access ratio per policy [--machine, --scheds a,b,c,
+             --engine sim|native, --seed N (sim), --smoke]
+             (--engine native runs real green threads, writes BENCH_mem_native.json)
   adaptcmp   adaptive steal-scope vs fixed scopes on bursty/phase-change load
-             [--machine, --scheds a,b,c, --smoke] (writes BENCH_adaptive.json)
+             [--machine, --scheds a,b,c, --seed N, --smoke]
+             (writes BENCH_adaptive.json)
   run        config-driven simulation            [--config file.toml]
   analyze    traced run + scheduler analysis     [--machine, --app, --sched]
   evolve     traced bubble evolution (Figure 3)  [--machine numa-4x4]
@@ -202,6 +209,15 @@ fn cmd_ablations(args: &Args) -> Result<String> {
     Ok(out)
 }
 
+/// Write a `BENCH_*.json` artifact; returns the note line for the
+/// command output (shared by the memcmp/adaptcmp harness commands).
+fn write_bench_artifact(path: &str, json: &str) -> String {
+    match std::fs::write(path, json) {
+        Ok(()) => format!("wrote {path}"),
+        Err(e) => format!("could not write {path}: {e}"),
+    }
+}
+
 fn cmd_memcmp(args: &Args) -> Result<String> {
     let topo = args.machine()?;
     let kinds = match args.options.get("scheds") {
@@ -215,21 +231,62 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
             .collect::<Result<Vec<_>>>()?,
         None => memcmp::default_kinds(),
     };
+    let smoke = args.flag("smoke");
+    let seed = args.u64("seed", crate::sim::SimConfig::default().seed);
     // Oversubscribe the machine so rebalancing pressure is real: that
     // is where memory-blind policies scatter accesses.
     let p = HeatParams {
         threads: topo.n_cpus() + topo.n_cpus() / 2,
-        cycles: 20,
+        cycles: if smoke { 4 } else { 20 },
         ..HeatParams::conduction()
     };
-    let c = memcmp::run(&topo, &p, &kinds);
-    Ok(format!(
-        "memory locality comparison on `{}` ({} stripes, {} cycles)\n\n{}",
-        topo.name(),
-        p.threads,
-        p.cycles,
-        c.render()
-    ))
+    match args.get("engine", "sim") {
+        "sim" => {
+            let c = memcmp::run(&topo, &p, &kinds, seed);
+            Ok(format!(
+                "memory locality comparison on `{}` ({} stripes, {} cycles, seed {seed})\n\n{}",
+                topo.name(),
+                p.threads,
+                p.cycles,
+                c.render()
+            ))
+        }
+        "native" => {
+            let touches = if smoke { 2 } else { 4 };
+            let c = memcmp::run_native(
+                &topo,
+                &p,
+                &kinds,
+                touches,
+                crate::mem::AllocPolicy::FirstTouch,
+            );
+            // No seed in the native artifact: native makespans are wall
+            // clock and OS scheduling makes them run-to-run noisy — a
+            // seed field would falsely promise reproducibility.
+            let json = format!(
+                "{{\n  \"bench\": \"memcmp\",\n  \"engine\": \"native\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"results\": [{}]\n}}\n",
+                if smoke { "smoke" } else { "full" },
+                topo.name(),
+                c.json_rows("native").join(",")
+            );
+            let note = write_bench_artifact("BENCH_mem_native.json", &json);
+            let seed_note = if args.options.contains_key("seed") {
+                "\nnote: --seed applies to the sim engine only; native makespans are wall-clock"
+            } else {
+                ""
+            };
+            Ok(format!(
+                "memory locality comparison on `{}` (native engine, {} green threads, {} cycles)\n\n{}\n{}{}",
+                topo.name(),
+                p.threads,
+                p.cycles,
+                c.render(),
+                note,
+                seed_note
+            ))
+        }
+        other => Err(Error::config(format!("unknown engine `{other}` (want sim|native)"))),
+    }
 }
 
 fn cmd_adaptcmp(args: &Args) -> Result<String> {
@@ -246,25 +303,24 @@ fn cmd_adaptcmp(args: &Args) -> Result<String> {
         None => adaptcmp::default_kinds(),
     };
     let smoke = args.flag("smoke");
+    let seed = args.u64("seed", crate::sim::SimConfig::default().seed);
     let (pp, bp) = if smoke {
         (adaptcmp::PhaseParams::smoke(&topo), adaptcmp::BurstParams::smoke(&topo))
     } else {
         (adaptcmp::PhaseParams::for_machine(&topo), adaptcmp::BurstParams::for_machine(&topo))
     };
-    let phase = adaptcmp::run_phase(&topo, &pp, &kinds);
-    let bursty = adaptcmp::run_bursty(&topo, &bp, &kinds);
+    let phase = adaptcmp::run_phase(&topo, &pp, &kinds, seed);
+    let bursty = adaptcmp::run_bursty(&topo, &bp, &kinds, seed);
     let mut rows = phase.json_rows("phase");
     rows.extend(bursty.json_rows("bursty"));
     let json = format!(
-        "{{\n  \"bench\": \"adaptcmp\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"results\": [{}]\n}}\n",
+        "{{\n  \"bench\": \"adaptcmp\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"seed\": {},\n  \"results\": [{}]\n}}\n",
         if smoke { "smoke" } else { "full" },
         topo.name(),
+        seed,
         rows.join(",")
     );
-    let note = match std::fs::write("BENCH_adaptive.json", &json) {
-        Ok(()) => "wrote BENCH_adaptive.json".to_string(),
-        Err(e) => format!("could not write BENCH_adaptive.json: {e}"),
-    };
+    let note = write_bench_artifact("BENCH_adaptive.json", &json);
     Ok(format!(
         "adaptive steal-scope comparison on `{}`{}\n\n{}\n{}\n{}",
         topo.name(),
@@ -495,12 +551,26 @@ mod tests {
 
     #[test]
     fn memcmp_command_reports_ratios() {
-        let out = run(&argv("memcmp --machine numa-2x2 --scheds memaware,afs")).unwrap();
+        let out = run(&argv("memcmp --machine numa-2x2 --scheds memaware,afs --smoke")).unwrap();
         assert!(out.contains("memaware"), "{out}");
         assert!(out.contains("afs"), "{out}");
         assert!(out.contains("local ratio"), "{out}");
+        assert!(out.contains("seed"), "{out}");
         let err = run(&argv("memcmp --machine numa-2x2 --scheds warp")).unwrap_err();
         assert!(err.to_string().contains("unknown scheduler"), "{err}");
+        let err = run(&argv("memcmp --machine numa-2x2 --engine warp")).unwrap_err();
+        assert!(err.to_string().contains("unknown engine"), "{err}");
+    }
+
+    #[test]
+    fn memcmp_native_engine_runs_green_threads() {
+        // Writes BENCH_mem_native.json into the cwd, like the adaptcmp
+        // smoke artifact.
+        let cmd = "memcmp --machine numa-2x2 --scheds memaware,afs --engine native --smoke";
+        let out = run(&argv(cmd)).unwrap();
+        assert!(out.contains("native"), "{out}");
+        assert!(out.contains("memaware"), "{out}");
+        assert!(out.contains("BENCH_mem_native.json"), "{out}");
     }
 
     #[test]

@@ -6,6 +6,16 @@
 //! simulator deciding who runs where. Green threads block on a native
 //! barrier; the compute payload can be anything, including PJRT
 //! executions through [`crate::runtime::service::PjrtHandle`].
+//!
+//! **Native memory path**: a green thread records its data accesses
+//! with [`GreenApi::touch_region`]; the touch is attributed to
+//! the worker CPU the fiber is *currently* running on, so footprints,
+//! next-touch migration and the local/remote access metrics are live
+//! on real OS workers — not just in the simulator. Both engines share
+//! [`crate::sched::System::touch_region`], which is what makes
+//! `repro memcmp --engine native` comparable with the sim numbers and
+//! lets the conformance suite enforce the same memory invariants on
+//! either engine.
 
 pub mod fiber;
 mod worker;

@@ -1,15 +1,33 @@
 //! Worker pool: virtual processors running green threads under a
 //! pluggable scheduler.
+//!
+//! Green threads see the memory subsystem through [`GreenApi`]: a body
+//! calls [`GreenApi::touch_region`] as it works through its data, and
+//! the touch is attributed to the *worker CPU actually running the
+//! fiber* (a thread-local set by the worker loop). That makes
+//! footprints, next-touch migration and the local/remote access
+//! metrics live on real OS workers exactly as on the simulator — both
+//! engines share [`System::touch_region`].
 
+use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use super::fiber::{Fiber, YieldAction};
+use crate::mem::{RegionId, Touch};
 use crate::sched::{Scheduler, StopReason, System};
 use crate::task::TaskId;
 use crate::topology::CpuId;
+
+thread_local! {
+    /// The virtual CPU this worker OS thread drives. Set once at
+    /// worker-loop entry; fibers resumed on this thread read it to
+    /// attribute their memory touches (a migrated fiber automatically
+    /// reports its *new* CPU — that is the point).
+    static CURRENT_VCPU: Cell<Option<CpuId>> = const { Cell::new(None) };
+}
 
 /// Barrier state shared between workers.
 #[derive(Debug, Default)]
@@ -69,6 +87,30 @@ impl GreenApi {
     /// The system (topology, metrics) for introspection.
     pub fn system(&self) -> &Arc<System> {
         &self.inner.sys
+    }
+
+    /// The virtual CPU currently running this green thread. Only valid
+    /// inside a fiber body on a worker (panics elsewhere).
+    pub fn cpu(&self) -> CpuId {
+        CURRENT_VCPU
+            .with(|c| c.get())
+            .expect("GreenApi::cpu outside a worker fiber")
+    }
+
+    /// Record a memory touch on `region` from this green thread: the
+    /// registry resolves the home (first touch homes, striped regions
+    /// rotate over their stripes, next-touch migrates), the footprint
+    /// accounting follows, and the local/remote access metrics are
+    /// bumped — the native counterpart of the simulator's per-chunk
+    /// touches (both go through [`System::touch_region`]).
+    pub fn touch_region(&self, region: RegionId) -> Touch {
+        self.inner.sys.touch_region(region, self.cpu())
+    }
+
+    /// Home node of a region (None before first touch; None for
+    /// striped regions, whose homes are per stripe).
+    pub fn region_home(&self, region: RegionId) -> Option<usize> {
+        self.inner.sys.mem.home(region)
     }
 }
 
@@ -192,6 +234,9 @@ impl Executor {
 }
 
 fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
+    // Fibers resumed on this OS thread attribute their memory touches
+    // to this CPU (see GreenApi::touch_region).
+    CURRENT_VCPU.with(|c| c.set(Some(cpu)));
     loop {
         if inner.live.load(Ordering::SeqCst) == 0 || inner.stop.load(Ordering::SeqCst) {
             inner.park.cv.notify_all();
@@ -407,6 +452,42 @@ mod tests {
         ex.run();
         assert_eq!(done.load(Ordering::SeqCst), 8);
         assert_eq!(ex.system().tasks.state(b), TaskState::Terminated);
+    }
+
+    #[test]
+    fn green_threads_touch_regions_on_their_worker_cpu() {
+        use crate::mem::AllocPolicy;
+        let sys = Arc::new(System::new(Arc::new(Topology::numa(2, 2))));
+        let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+        let mut ex = Executor::new(sys.clone(), sched);
+        let r = sys.mem.alloc(4096, AllocPolicy::FirstTouch);
+        let t = sys.tasks.new_thread("toucher", crate::task::PRIO_THREAD);
+        sys.mem.attach(&sys.tasks, t, r);
+        let homes = Arc::new(Mutex::new(Vec::new()));
+        let h = homes.clone();
+        ex.register(t, move |api| {
+            let touch = api.touch_region(r);
+            h.lock().unwrap().push((touch.home, api.cpu()));
+            api.yield_now();
+            let touch2 = api.touch_region(r);
+            h.lock().unwrap().push((touch2.home, api.cpu()));
+        });
+        ex.wake(t);
+        ex.run();
+        let log = homes.lock().unwrap();
+        assert_eq!(log.len(), 2);
+        // First touch homed the region on the worker CPU's own node,
+        // and the home stuck for the second touch.
+        let (home0, cpu0) = log[0];
+        assert_eq!(home0, sys.topo.numa_of(cpu0));
+        assert_eq!(sys.mem.home(r), Some(home0));
+        // Registry, metrics and footprint all saw the native touches.
+        assert_eq!(sys.mem.regions.total_touches(), 2);
+        let locals = sys.metrics.local_accesses.load(Ordering::SeqCst);
+        let remotes = sys.metrics.remote_accesses.load(Ordering::SeqCst);
+        assert_eq!(locals + remotes, 2);
+        assert!(sys.mem.conserved(&sys.tasks));
+        assert_eq!(sys.mem.dominant_node(t), Some(home0));
     }
 
     #[test]

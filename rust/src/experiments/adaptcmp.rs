@@ -241,11 +241,13 @@ fn collect(title: String, runs: Vec<(SchedKind, SimEngine, u64)>) -> AdaptCmp {
     AdaptCmp { title, rows }
 }
 
-/// Run the phase-changing workload under each policy.
-pub fn run_phase(topo: &Topology, p: &PhaseParams, kinds: &[SchedKind]) -> AdaptCmp {
+/// Run the phase-changing workload under each policy. `seed` drives
+/// the engine's timing jitter: same seed, identical numbers.
+pub fn run_phase(topo: &Topology, p: &PhaseParams, kinds: &[SchedKind], seed: u64) -> AdaptCmp {
     let mut runs = Vec::with_capacity(kinds.len());
     for &kind in kinds {
-        let mut e = engine_with(topo, make_default(kind), SimConfig::default());
+        let cfg = SimConfig { seed, ..SimConfig::default() };
+        let mut e = engine_with(topo, make_default(kind), cfg);
         build_phases(&mut e, p);
         let rep = e.run().expect("adaptcmp phase run");
         runs.push((kind, e, rep.total_time));
@@ -261,11 +263,12 @@ pub fn run_phase(topo: &Topology, p: &PhaseParams, kinds: &[SchedKind]) -> Adapt
     )
 }
 
-/// Run the bursty workload under each policy.
-pub fn run_bursty(topo: &Topology, p: &BurstParams, kinds: &[SchedKind]) -> AdaptCmp {
+/// Run the bursty workload under each policy (seeded like [`run_phase`]).
+pub fn run_bursty(topo: &Topology, p: &BurstParams, kinds: &[SchedKind], seed: u64) -> AdaptCmp {
     let mut runs = Vec::with_capacity(kinds.len());
     for &kind in kinds {
-        let mut e = engine_with(topo, make_default(kind), SimConfig::default());
+        let cfg = SimConfig { seed, ..SimConfig::default() };
+        let mut e = engine_with(topo, make_default(kind), cfg);
         build_bursts(&mut e, p);
         let rep = e.run().expect("adaptcmp bursty run");
         runs.push((kind, e, rep.total_time));
@@ -280,6 +283,8 @@ pub fn run_bursty(topo: &Topology, p: &BurstParams, kinds: &[SchedKind]) -> Adap
 mod tests {
     use super::*;
 
+    const SEED: u64 = 0x5eed;
+
     #[test]
     fn adaptive_beats_afs_on_phase_change() {
         // ISSUE-3 acceptance: on the phase-changing workload on the
@@ -287,7 +292,7 @@ mod tests {
         // machine-wide stealing on makespan *and* locality.
         let topo = Topology::numa(4, 4);
         let p = PhaseParams::for_machine(&topo);
-        let c = run_phase(&topo, &p, &[SchedKind::Adaptive, SchedKind::Afs]);
+        let c = run_phase(&topo, &p, &[SchedKind::Adaptive, SchedKind::Afs], SEED);
         let ad = c.get("adaptive");
         let afs = c.get("afs");
         assert!(ad.makespan > 0 && afs.makespan > 0);
@@ -309,7 +314,7 @@ mod tests {
     fn adaptive_keeps_cross_node_traffic_below_afs_on_bursts() {
         let topo = Topology::numa(4, 4);
         let p = BurstParams::smoke(&topo);
-        let c = run_bursty(&topo, &p, &[SchedKind::Adaptive, SchedKind::Afs]);
+        let c = run_bursty(&topo, &p, &[SchedKind::Adaptive, SchedKind::Afs], SEED);
         let ad = c.get("adaptive");
         let afs = c.get("afs");
         assert!(ad.makespan > 0 && afs.makespan > 0);
@@ -331,7 +336,7 @@ mod tests {
             hot_factor: 2,
             mem_fraction: 0.4,
         };
-        let c = run_phase(&topo, &p, &default_kinds());
+        let c = run_phase(&topo, &p, &default_kinds(), SEED);
         let out = c.render();
         for k in default_kinds() {
             assert!(out.contains(k.label()), "{} missing:\n{out}", k.label());

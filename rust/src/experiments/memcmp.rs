@@ -5,13 +5,26 @@
 //! under several policies on the same machine and compare the
 //! local-access ratio, steals, and next-touch migration traffic
 //! (`repro memcmp` prints the table; the tests pin the ordering).
+//!
+//! The harness has an **engine axis**: [`run`] drives the simulator,
+//! [`run_native`] the native executor — real OS workers running green
+//! threads that record their region touches through `GreenApi`. Both
+//! report the same [`MemRow`] shape (native makespans are wall
+//! nanoseconds), so `repro memcmp --engine native` makes the memory
+//! behaviour of the two engines directly comparable; its rows land in
+//! `BENCH_mem_native.json`. Sim runs take an explicit `seed` and are
+//! reproducible run-to-run (pinned by a test).
 
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 use crate::apps::conduction::{self, HeatParams};
 use crate::apps::{engine_with, StructureMode};
 use crate::config::SchedKind;
+use crate::exec::Executor;
+use crate::mem::AllocPolicy;
 use crate::sched::factory::make_default;
+use crate::sched::System;
 use crate::sim::SimConfig;
 use crate::topology::Topology;
 use crate::util::fmt::Table;
@@ -63,6 +76,20 @@ impl MemCmp {
         }
         format!("== {} ==\n{}", self.title, t.render())
     }
+
+    /// Minimal JSON rows for the CI artifact trail
+    /// (`BENCH_mem_native.json`).
+    pub fn json_rows(&self, engine: &str) -> Vec<String> {
+        self.rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"engine\":\"{engine}\",\"policy\":\"{}\",\"makespan\":{},\"local_ratio\":{:.4},\"steals\":{},\"mem_migrations\":{},\"migrated_bytes\":{}}}",
+                    r.sched, r.makespan, r.local_ratio, r.steals, r.mem_migrations, r.migrated_bytes
+                )
+            })
+            .collect()
+    }
 }
 
 /// Policies compared by default: the memory-aware policy against the
@@ -71,9 +98,10 @@ pub fn default_kinds() -> Vec<SchedKind> {
     vec![SchedKind::Memaware, SchedKind::Bubble, SchedKind::Afs, SchedKind::Lds, SchedKind::Ss]
 }
 
-/// Run the conduction workload under each policy and collect the
-/// memory behaviour.
-pub fn run(topo: &Topology, p: &HeatParams, kinds: &[SchedKind]) -> MemCmp {
+/// Run the conduction workload under each policy on the simulator and
+/// collect the memory behaviour. `seed` drives the engine's timing
+/// jitter; two runs with the same seed are bit-identical.
+pub fn run(topo: &Topology, p: &HeatParams, kinds: &[SchedKind], seed: u64) -> MemCmp {
     let mut rows = Vec::with_capacity(kinds.len());
     for &kind in kinds {
         let mode = if kind == SchedKind::Bubble {
@@ -81,7 +109,8 @@ pub fn run(topo: &Topology, p: &HeatParams, kinds: &[SchedKind]) -> MemCmp {
         } else {
             StructureMode::Simple
         };
-        let mut e = engine_with(topo, make_default(kind), SimConfig::default());
+        let cfg = SimConfig { seed, ..SimConfig::default() };
+        let mut e = engine_with(topo, make_default(kind), cfg);
         conduction::build(&mut e, mode, p);
         let rep = e.run().expect("memcmp run");
         debug_assert!(e.sys.mem.conserved(&e.sys.tasks), "footprint leak under {kind:?}");
@@ -98,6 +127,46 @@ pub fn run(topo: &Topology, p: &HeatParams, kinds: &[SchedKind]) -> MemCmp {
     MemCmp { title: format!("local vs remote accesses (conduction, {})", topo.name()), rows }
 }
 
+/// Run the conduction-shaped green-thread workload under each policy
+/// on the **native executor** (real OS workers, fibers recording their
+/// region touches through `GreenApi`) and collect the same memory
+/// behaviour the sim harness reports. `makespan` is wall nanoseconds
+/// here; `touches` is the number of touch+yield points per barrier
+/// cycle and `policy` homes the stripe regions (first-touch exercises
+/// native homing; round-robin pre-homes so placement quality alone is
+/// measured). All policies run the loose-thread shape — the native
+/// builder has no bubble variant yet.
+pub fn run_native(
+    topo: &Topology,
+    p: &HeatParams,
+    kinds: &[SchedKind],
+    touches: usize,
+    policy: AllocPolicy,
+) -> MemCmp {
+    let mut rows = Vec::with_capacity(kinds.len());
+    for &kind in kinds {
+        let sys = Arc::new(System::new(Arc::new(topo.clone())));
+        let sched = make_default(kind);
+        let mut ex = Executor::new(sys.clone(), sched);
+        conduction::build_native(&mut ex, p, policy, touches);
+        let rep = ex.run();
+        debug_assert!(sys.mem.conserved(&sys.tasks), "footprint leak under {kind:?}");
+        let m = &sys.metrics;
+        rows.push(MemRow {
+            sched: kind.label().to_string(),
+            makespan: rep.elapsed.as_nanos() as u64,
+            local_ratio: m.local_ratio(),
+            steals: m.steals.load(Ordering::Relaxed),
+            mem_migrations: m.mem_migrations.load(Ordering::Relaxed),
+            migrated_bytes: m.migrated_bytes.load(Ordering::Relaxed),
+        });
+    }
+    MemCmp {
+        title: format!("local vs remote accesses (native conduction, {})", topo.name()),
+        rows,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,12 +177,14 @@ mod tests {
         HeatParams { threads: 24, cycles: 8, work: 400_000, mem_fraction: 0.35 }
     }
 
+    const SEED: u64 = 0x5eed;
+
     #[test]
     fn memaware_beats_afs_on_locality() {
         // ISSUE-2 acceptance: strictly higher local-access ratio than
         // the AFS baseline on the numa(4,4) preset.
         let topo = Topology::numa(4, 4);
-        let c = run(&topo, &contended(), &[SchedKind::Memaware, SchedKind::Afs]);
+        let c = run(&topo, &contended(), &[SchedKind::Memaware, SchedKind::Afs], SEED);
         let ma = c.get("memaware");
         let afs = c.get("afs");
         assert!(ma.makespan > 0 && afs.makespan > 0);
@@ -128,7 +199,7 @@ mod tests {
     #[test]
     fn memaware_keeps_most_accesses_local() {
         let topo = Topology::numa(4, 4);
-        let c = run(&topo, &contended(), &[SchedKind::Memaware]);
+        let c = run(&topo, &contended(), &[SchedKind::Memaware], SEED);
         let ma = c.get("memaware");
         assert!(ma.local_ratio > 0.6, "local ratio {:.3} too low", ma.local_ratio);
     }
@@ -137,10 +208,50 @@ mod tests {
     fn render_lists_every_policy() {
         let topo = Topology::numa(2, 2);
         let p = HeatParams { threads: 4, cycles: 3, work: 200_000, mem_fraction: 0.35 };
-        let c = run(&topo, &p, &default_kinds());
+        let c = run(&topo, &p, &default_kinds(), SEED);
         let out = c.render();
         for k in default_kinds() {
             assert!(out.contains(k.label()), "{} missing:\n{out}", k.label());
+        }
+        assert_eq!(c.json_rows("sim").len(), default_kinds().len());
+    }
+
+    #[test]
+    fn seeded_smoke_runs_reproduce_identical_makespans() {
+        // ISSUE-4 satellite: the same CLI seed must reproduce the
+        // BENCH numbers bit-for-bit, even within one process (the
+        // wake-placement rotation is per system, not a global).
+        let topo = Topology::numa(2, 2);
+        let p = HeatParams { threads: 6, cycles: 3, work: 150_000, mem_fraction: 0.35 };
+        let kinds = [SchedKind::Memaware, SchedKind::Afs, SchedKind::Ss];
+        let spans = |c: &MemCmp| c.rows.iter().map(|r| r.makespan).collect::<Vec<_>>();
+        let a = run(&topo, &p, &kinds, 7);
+        let b = run(&topo, &p, &kinds, 7);
+        assert_eq!(spans(&a), spans(&b), "same seed must reproduce identical makespans");
+    }
+
+    #[test]
+    fn native_engine_attributes_touches() {
+        // The native engine must report a non-trivial local ratio:
+        // touches are attributed on real OS workers, locals + remotes
+        // equal the registry's touch count.
+        let topo = Topology::numa(2, 2);
+        let p = HeatParams { threads: 6, cycles: 3, work: 0, mem_fraction: 0.0 };
+        let c = run_native(
+            &topo,
+            &p,
+            &[SchedKind::Memaware, SchedKind::Afs],
+            2,
+            AllocPolicy::FirstTouch,
+        );
+        for row in &c.rows {
+            assert!(row.makespan > 0, "{}", row.sched);
+            assert!(
+                row.local_ratio > 0.0 && row.local_ratio <= 1.0,
+                "{}: local ratio {:.3} not attributed",
+                row.sched,
+                row.local_ratio
+            );
         }
     }
 }

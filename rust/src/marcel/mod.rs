@@ -154,6 +154,14 @@ impl Marcel {
         self.sys.mem.alloc(bytes, policy)
     }
 
+    /// `marcel_region_alloc_striped`: one region spread over several
+    /// home nodes — shared data no single thread owns. Touches rotate
+    /// over the stripes and next-touch migrates one stripe at a time
+    /// (see [`crate::mem::RegionRegistry::alloc_striped`]).
+    pub fn region_alloc_striped(&self, bytes: u64, nodes: &[usize]) -> RegionId {
+        self.sys.mem.alloc_striped(bytes, nodes)
+    }
+
     /// `marcel_attach_region`: declare that `task` (thread or bubble)
     /// works on `region`. Its bytes then count towards the task's — and
     /// every enclosing bubble's — NUMA footprint, which memory-aware
@@ -279,6 +287,21 @@ mod tests {
         assert_eq!(sys.mem.dominant_node(t), Some(1));
         assert_eq!(sys.mem.dominant_node(b), Some(1), "bubbles aggregate members");
         assert!(sys.mem.conserved(&sys.tasks));
+    }
+
+    #[test]
+    fn striped_region_spreads_bubble_footprint() {
+        let m = Marcel::new(Topology::numa(2, 2));
+        let b = m.bubble_init();
+        let t = m.create_dontsched("t");
+        m.bubble_inserttask(b, t);
+        let r = m.region_alloc_striped(4096, &[0, 1]);
+        m.attach_region(t, r);
+        let sys = m.system();
+        assert_eq!(sys.mem.footprint.of(t), vec![2048, 2048]);
+        assert_eq!(sys.mem.footprint.of(b), vec![2048, 2048]);
+        assert!(sys.mem.conserved(&sys.tasks));
+        assert!(sys.mem.hierarchy_consistent(&sys.tasks));
     }
 
     #[test]

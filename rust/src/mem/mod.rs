@@ -20,23 +20,39 @@
 //!   migrated thread; migrated bytes surface in
 //!   [`crate::metrics::Metrics`].
 //!
+//! * **Striped regions** ([`MemState::alloc_striped`]): one region
+//!   split across several home nodes, per-stripe touch attribution and
+//!   per-stripe next-touch migration — see [`registry`].
+//! * **Pressure view** ([`MemState::node_pressure`] /
+//!   [`MemState::pressure_view`]): per-node homed-byte counters the
+//!   pick and steal paths consult for footprint *headroom* (the
+//!   pressure-aware pass 1 in [`crate::sched::core::pick`], and the
+//!   `memaware` steal tie-break and wake fallback).
+//!
 //! [`MemState`] bundles the two and keeps them consistent: every
 //! operation that changes a region's home or owner applies the matching
 //! footprint delta. It hangs off [`crate::sched::System`] so policies
 //! (e.g. `memaware`, see [`crate::sched::MemAwareScheduler`]) can
-//! consult it on the wake/pick/steal paths.
+//! consult it on the wake/pick/steal paths. Both engines touch regions
+//! through [`crate::sched::System::touch_region`]: the simulator on
+//! every memory-bound compute chunk, the native executor from green
+//! threads via `GreenApi::touch_region` — so footprints, next-touch
+//! migration and the local/remote access metrics are engine-agnostic.
 //!
-//! **Conservation invariant** (checked by [`MemState::conserved`] and
-//! the `mem_props` integration suite): at every step, the sum of
-//! per-node bytes over root tasks equals the total size of attached,
-//! homed regions.
+//! **Conservation invariant** (checked by [`MemState::conserved`] /
+//! [`MemState::hierarchy_consistent`] and the `mem_props` +
+//! `mem_striping` + `policy_conformance` suites): at every step, the
+//! sum of per-node bytes over root tasks equals the total size of
+//! attached, homed regions, and every bubble's footprint equals the sum
+//! of its subtree's.
 
 pub mod footprint;
 pub mod registry;
 
 pub use footprint::Footprint;
 pub use registry::{
-    AllocPolicy, HomeChange, RegionId, RegionInfo, RegionRegistry, Touch, DEFAULT_REGION_BYTES,
+    AllocPolicy, HomeChange, RegionId, RegionInfo, RegionRegistry, Stripe, Touch,
+    DEFAULT_REGION_BYTES,
 };
 
 use std::sync::Mutex;
@@ -73,20 +89,29 @@ impl MemState {
         self.regions.alloc(size, policy)
     }
 
+    /// Allocate a striped region of `size` bytes spread over `nodes`
+    /// (see [`RegionRegistry::alloc_striped`]).
+    pub fn alloc_striped(&self, size: u64, nodes: &[usize]) -> RegionId {
+        self.regions.alloc_striped(size, nodes)
+    }
+
     /// Attach a region to `task`: its bytes count towards the task's
     /// (and every enclosing bubble's) footprint once the region is
-    /// homed. Re-attaching moves the bytes to the new owner.
+    /// homed — per stripe for striped regions. Re-attaching moves the
+    /// bytes to the new owner.
     pub fn attach(&self, tasks: &TaskTable, task: TaskId, r: RegionId) {
         let _sync = self.sync.lock().unwrap();
-        let (prev, delta) = self.regions.attach(r, task);
-        if let Some(HomeChange::Homed { node, size, .. }) = delta {
-            if let Some(old) = prev {
-                if old != task {
-                    self.footprint.sub(tasks, old, node, size);
+        let (prev, deltas) = self.regions.attach(r, task);
+        for delta in deltas {
+            if let HomeChange::Homed { node, size, .. } = delta {
+                if let Some(old) = prev {
+                    if old != task {
+                        self.footprint.sub(tasks, old, node, size);
+                    }
                 }
-            }
-            if prev != Some(task) {
-                self.footprint.add(tasks, task, node, size);
+                if prev != Some(task) {
+                    self.footprint.add(tasks, task, node, size);
+                }
             }
         }
     }
@@ -109,9 +134,21 @@ impl MemState {
         touch
     }
 
-    /// Home node of a region (None before first touch).
+    /// Home node of a region (None before first touch; None for
+    /// striped regions — their homes are per stripe).
     pub fn home(&self, r: RegionId) -> Option<usize> {
         self.regions.home(r)
+    }
+
+    /// Bytes of homed regions on `node` — the node's memory pressure
+    /// (lock-free, advisory).
+    pub fn node_pressure(&self, node: usize) -> u64 {
+        self.regions.node_pressure(node)
+    }
+
+    /// Per-node homed-bytes snapshot (index = NUMA node).
+    pub fn pressure_view(&self) -> Vec<u64> {
+        self.regions.pressure_view()
     }
 
     /// Snapshot of one region.
@@ -156,6 +193,33 @@ impl MemState {
             }
         }
         accounted == self.regions.attached_homed_bytes()
+    }
+
+    /// Strong per-task/per-bubble conservation: rebuild every task's
+    /// expected per-node footprint from the region registry (each
+    /// attached, homed region charges its owner and every enclosing
+    /// bubble — per stripe for striped regions) and compare against the
+    /// incremental counters. Subsumes [`Self::conserved`]; O(regions ×
+    /// depth + tasks × nodes) — test/debug use.
+    pub fn hierarchy_consistent(&self, tasks: &TaskTable) -> bool {
+        let n = self.footprint.n_nodes();
+        let ids: Vec<TaskId> = tasks.ids();
+        let mut expected: std::collections::HashMap<TaskId, Vec<u64>> =
+            ids.iter().map(|&t| (t, vec![0u64; n])).collect();
+        for region in self.regions.snapshot() {
+            let Some(owner) = region.owner else { continue };
+            let bytes = region.homed_bytes_per_node(n);
+            // Charge the owner and every enclosing bubble.
+            let mut cur = Some(owner);
+            while let Some(t) = cur {
+                let slot = expected.entry(t).or_insert_with(|| vec![0u64; n]);
+                for (node, b) in bytes.iter().enumerate() {
+                    slot[node] += b;
+                }
+                cur = tasks.parent(t);
+            }
+        }
+        ids.iter().all(|&t| self.footprint.of(t) == expected[&t])
     }
 }
 
@@ -219,6 +283,41 @@ mod tests {
         assert_eq!(mem.home(r), Some(1));
         assert_eq!(mem.dominant_node(t), Some(1));
         assert!(mem.conserved(&tasks));
+    }
+
+    #[test]
+    fn striped_attach_charges_each_declared_node() {
+        let topo = numa22();
+        let mem = MemState::new(&topo);
+        let tasks = TaskTable::new();
+        let b = tasks.new_bubble("b", PRIO_BUBBLE);
+        let t = tasks.new_thread("t", PRIO_THREAD);
+        tasks.with(t, |x| x.parent = Some(b));
+        let r = mem.alloc_striped(100, &[0, 1]);
+        mem.attach(&tasks, t, r);
+        assert_eq!(mem.footprint.of(t), vec![50, 50]);
+        assert_eq!(mem.footprint.of(b), vec![50, 50]);
+        assert!(mem.conserved(&tasks));
+        assert!(mem.hierarchy_consistent(&tasks));
+        // Striped next-touch moves one stripe; the footprint follows.
+        mem.mark_next_touch(r);
+        let touch = mem.touch(&tasks, &topo, r, CpuId(3)); // node 1, stripe 0
+        assert_eq!(touch.migrated, 50);
+        assert_eq!(mem.footprint.of(b), vec![0, 100]);
+        assert_eq!(mem.pressure_view(), vec![0, 100]);
+        assert!(mem.hierarchy_consistent(&tasks));
+    }
+
+    #[test]
+    fn pressure_helpers_expose_headroom() {
+        let topo = numa22();
+        let mem = MemState::new(&topo);
+        assert_eq!(mem.pressure_view(), vec![0, 0]);
+        let _ = mem.alloc(100, AllocPolicy::Fixed(0));
+        assert_eq!(mem.node_pressure(0), 100);
+        assert_eq!(mem.node_pressure(1), 0);
+        let _ = mem.alloc(200, AllocPolicy::Fixed(1));
+        assert_eq!(mem.pressure_view(), vec![100, 200]);
     }
 
     #[test]

@@ -11,8 +11,22 @@
 //! a region marked next-touch re-homes onto the node of the *next* CPU
 //! that touches it, so memory can follow a migrated thread. Migrated
 //! bytes are reported to the caller for metrics accounting.
+//!
+//! **Striped regions** ([`RegionRegistry::alloc_striped`]): one region
+//! split across several home nodes — the shared-mesh / round-robin-page
+//! layout real NUMA allocators produce. Each [`Stripe`] owns a share of
+//! the bytes on one node; touches rotate over the stripes (a sequential
+//! sweep over a striped array lands on each node in turn), and a
+//! next-touch mark migrates only the *touched* stripe to the toucher's
+//! node. Footprint attribution is per stripe, so a striped region
+//! charges each declared node exactly its stripe's bytes.
+//!
+//! **Pressure view**: the registry keeps per-node homed-byte counters
+//! (lock-free reads) so the pick path can ask "which node has footprint
+//! headroom?" in O(1) — see [`RegionRegistry::node_pressure`] and the
+//! pressure-aware pass 1 in `sched::core::pick`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::task::TaskId;
@@ -37,13 +51,27 @@ pub enum AllocPolicy {
     Fixed(usize),
 }
 
+/// One stripe of a striped region: a share of the region's bytes homed
+/// on one node. The stripe's node changes only under next-touch
+/// migration; its size is fixed at declaration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stripe {
+    /// Node currently holding this stripe's bytes.
+    pub node: usize,
+    /// Bytes in this stripe.
+    pub size: u64,
+}
+
 /// One region's full state (also the snapshot returned by `info`).
 #[derive(Debug, Clone)]
 pub struct RegionInfo {
     /// Size in bytes.
     pub size: u64,
-    /// Home NUMA node (None until first touch under `FirstTouch`).
+    /// Home NUMA node (None until first touch under `FirstTouch`, and
+    /// always None for striped regions — their homes are per stripe).
     pub home: Option<usize>,
+    /// Stripes of a striped region (empty for ordinary regions).
+    pub stripes: Vec<Stripe>,
     /// CPU that last touched the region (cache-line ownership).
     pub last_toucher: Option<CpuId>,
     /// Task the region is attached to (footprint attribution).
@@ -52,6 +80,28 @@ pub struct RegionInfo {
     pub touches: u64,
     /// Re-home onto the next toucher's node (next-touch migration).
     pub next_touch: bool,
+}
+
+impl RegionInfo {
+    /// Is the region homed (single-home assigned, or striped — stripes
+    /// are placed at declaration)?
+    pub fn is_homed(&self) -> bool {
+        self.home.is_some() || !self.stripes.is_empty()
+    }
+
+    /// Per-node byte vector of the region's homed bytes (all zeros when
+    /// unhomed).
+    pub fn homed_bytes_per_node(&self, n_nodes: usize) -> Vec<u64> {
+        let mut v = vec![0u64; n_nodes];
+        if !self.stripes.is_empty() {
+            for s in &self.stripes {
+                v[s.node] += s.size;
+            }
+        } else if let Some(n) = self.home {
+            v[n] += self.size;
+        }
+        v
+    }
 }
 
 /// Outcome of one touch, resolved against the registry.
@@ -83,16 +133,46 @@ pub struct RegionRegistry {
     rr_next: AtomicUsize,
     /// NUMA node count for round-robin wrapping.
     n_nodes: usize,
+    /// Per-node homed bytes (all regions, attached or not): the memory
+    /// *pressure* view. Written under the slots lock, read lock-free by
+    /// the pressure-aware pick pass 1.
+    node_homed: Vec<AtomicU64>,
 }
 
 impl RegionRegistry {
     /// Empty registry for a machine with `n_nodes` NUMA nodes.
     pub fn new(n_nodes: usize) -> RegionRegistry {
+        let n = n_nodes.max(1);
         RegionRegistry {
             slots: Mutex::new(Vec::new()),
             rr_next: AtomicUsize::new(0),
-            n_nodes: n_nodes.max(1),
+            n_nodes: n,
+            node_homed: (0..n).map(|_| AtomicU64::new(0)).collect(),
         }
+    }
+
+    /// Bytes of homed regions on `node` (the pressure the node is
+    /// under). Lock-free, advisory.
+    pub fn node_pressure(&self, node: usize) -> u64 {
+        self.node_homed[node].load(Ordering::Relaxed)
+    }
+
+    /// Per-node homed-bytes snapshot (index = NUMA node).
+    pub fn pressure_view(&self) -> Vec<u64> {
+        self.node_homed.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    fn pressure_add(&self, node: usize, bytes: u64) {
+        self.node_homed[node].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    fn pressure_move(&self, from: usize, to: usize, bytes: u64) {
+        if from == to {
+            return;
+        }
+        let _ = self.node_homed[from]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(bytes)));
+        self.node_homed[to].fetch_add(bytes, Ordering::Relaxed);
     }
 
     /// Allocate a region of `size` bytes under `policy`.
@@ -116,9 +196,50 @@ impl RegionRegistry {
             }
         };
         let mut slots = self.slots.lock().unwrap();
+        if let Some(n) = home {
+            self.pressure_add(n, size);
+        }
         slots.push(RegionInfo {
             size,
             home,
+            stripes: Vec::new(),
+            last_toucher: None,
+            owner: None,
+            touches: 0,
+            next_touch: false,
+        });
+        slots.len() - 1
+    }
+
+    /// Allocate a *striped* region of `size` bytes spread over `nodes`:
+    /// stripe `i` holds `size/n` bytes (the remainder goes to the first
+    /// stripes) homed on `nodes[i]`. Panics on an empty node list or an
+    /// out-of-range node — caller mistakes, caught here rather than as
+    /// index errors in the footprint accounting.
+    pub fn alloc_striped(&self, size: u64, nodes: &[usize]) -> RegionId {
+        assert!(!nodes.is_empty(), "alloc_striped with no nodes");
+        for &n in nodes {
+            assert!(
+                n < self.n_nodes,
+                "alloc_striped over node {n} on a machine with {} NUMA nodes",
+                self.n_nodes
+            );
+        }
+        let n = nodes.len() as u64;
+        let (base, rem) = (size / n, size % n);
+        let stripes: Vec<Stripe> = nodes
+            .iter()
+            .enumerate()
+            .map(|(i, &node)| Stripe { node, size: base + u64::from((i as u64) < rem) })
+            .collect();
+        let mut slots = self.slots.lock().unwrap();
+        for s in &stripes {
+            self.pressure_add(s.node, s.size);
+        }
+        slots.push(RegionInfo {
+            size,
+            home: None,
+            stripes,
             last_toucher: None,
             owner: None,
             touches: 0,
@@ -142,43 +263,85 @@ impl RegionRegistry {
         self.slots.lock().unwrap()[r].clone()
     }
 
-    /// Home node of a region (None before first touch).
+    /// Snapshot of every region (test/debug iteration).
+    pub fn snapshot(&self) -> Vec<RegionInfo> {
+        self.slots.lock().unwrap().clone()
+    }
+
+    /// Total touches recorded across all regions.
+    pub fn total_touches(&self) -> u64 {
+        self.slots.lock().unwrap().iter().map(|s| s.touches).sum()
+    }
+
+    /// Home node of a region (None before first touch, and None for
+    /// striped regions — their homes are per stripe, see [`Self::info`]).
     pub fn home(&self, r: RegionId) -> Option<usize> {
         self.slots.lock().unwrap()[r].home
     }
 
     /// Attach a region to `task`, replacing any previous owner. Returns
     /// the previous owner and, when the region is already homed, the
-    /// footprint delta the caller must apply.
-    pub fn attach(&self, r: RegionId, task: TaskId) -> (Option<TaskId>, Option<HomeChange>) {
+    /// footprint deltas the caller must apply (one per stripe for a
+    /// striped region).
+    pub fn attach(&self, r: RegionId, task: TaskId) -> (Option<TaskId>, Vec<HomeChange>) {
         let mut slots = self.slots.lock().unwrap();
         let slot = &mut slots[r];
         let prev = slot.owner.replace(task);
-        let delta = slot.home.map(|node| HomeChange::Homed {
-            owner: Some(task),
-            node,
-            size: slot.size,
-        });
-        (prev, delta)
+        let deltas = if !slot.stripes.is_empty() {
+            slot.stripes
+                .iter()
+                .map(|s| HomeChange::Homed { owner: Some(task), node: s.node, size: s.size })
+                .collect()
+        } else if let Some(node) = slot.home {
+            vec![HomeChange::Homed { owner: Some(task), node, size: slot.size }]
+        } else {
+            Vec::new()
+        };
+        (prev, deltas)
     }
 
     /// Record a touch by a CPU on NUMA node `node`: first touch homes
-    /// the region, next-touch migrates it. Returns the resolved touch
-    /// and any footprint delta.
+    /// the region, next-touch migrates it. On a striped region the
+    /// touch lands on the stripes in rotation (touch `k` hits stripe
+    /// `k mod n` — a sequential sweep over the striped array), and a
+    /// next-touch mark migrates only the touched stripe. Returns the
+    /// resolved touch and any footprint delta.
     pub fn touch(&self, r: RegionId, cpu: CpuId, node: usize) -> (Touch, Option<HomeChange>) {
         let mut slots = self.slots.lock().unwrap();
         let slot = &mut slots[r];
         slot.touches += 1;
         let prev_toucher = slot.last_toucher;
         slot.last_toucher = Some(cpu);
+        if !slot.stripes.is_empty() {
+            let idx = ((slot.touches - 1) % slot.stripes.len() as u64) as usize;
+            let owner = slot.owner;
+            let stripe = &mut slot.stripes[idx];
+            let old = stripe.node;
+            let (delta, migrated) = if slot.next_touch && old != node {
+                stripe.node = node;
+                let size = stripe.size;
+                slot.next_touch = false;
+                self.pressure_move(old, node, size);
+                (Some(HomeChange::Moved { owner, from: old, to: node, size }), size)
+            } else {
+                // Any touch consumes the mark (a same-node touch means
+                // the touched stripe already is where the toucher runs).
+                slot.next_touch = false;
+                (None, 0)
+            };
+            let home = slot.stripes[idx].node;
+            return (Touch { home, last_toucher: prev_toucher, migrated }, delta);
+        }
         let (home, delta, migrated) = match slot.home {
             None => {
                 slot.home = Some(node);
+                self.pressure_add(node, slot.size);
                 (node, Some(HomeChange::Homed { owner: slot.owner, node, size: slot.size }), 0)
             }
             Some(old) if slot.next_touch && old != node => {
                 slot.home = Some(node);
                 slot.next_touch = false;
+                self.pressure_move(old, node, slot.size);
                 (
                     node,
                     Some(HomeChange::Moved {
@@ -222,11 +385,12 @@ impl RegionRegistry {
 
     /// Total bytes of regions that are both attached and homed — the
     /// amount the footprint counters must account for (conservation).
+    /// Striped regions are homed at declaration, so they count in full.
     pub fn attached_homed_bytes(&self) -> u64 {
         let slots = self.slots.lock().unwrap();
         slots
             .iter()
-            .filter(|s| s.owner.is_some() && s.home.is_some())
+            .filter(|s| s.owner.is_some() && s.is_homed())
             .map(|s| s.size)
             .sum()
     }
@@ -303,13 +467,69 @@ mod tests {
         let b = reg.alloc(50, AllocPolicy::FirstTouch);
         let (prev, delta) = reg.attach(a, TaskId(7));
         assert_eq!(prev, None);
-        assert!(matches!(delta, Some(HomeChange::Homed { node: 0, size: 100, .. })));
+        assert!(matches!(delta.as_slice(), [HomeChange::Homed { node: 0, size: 100, .. }]));
         let (_, delta_b) = reg.attach(b, TaskId(7));
-        assert!(delta_b.is_none(), "unhomed region has no footprint yet");
+        assert!(delta_b.is_empty(), "unhomed region has no footprint yet");
         assert_eq!(reg.attached_homed_bytes(), 100);
         reg.touch(b, CpuId(0), 0);
         assert_eq!(reg.attached_homed_bytes(), 150);
         assert_eq!(reg.mark_owner_next_touch(TaskId(7)), 150);
         assert!(reg.info(a).next_touch && reg.info(b).next_touch);
+    }
+
+    #[test]
+    fn striped_alloc_splits_bytes_over_declared_nodes() {
+        let reg = RegionRegistry::new(4);
+        let r = reg.alloc_striped(10, &[1, 3, 0]);
+        let info = reg.info(r);
+        assert_eq!(info.home, None, "striped regions have no single home");
+        assert!(info.is_homed());
+        let nodes: Vec<usize> = info.stripes.iter().map(|s| s.node).collect();
+        assert_eq!(nodes, vec![1, 3, 0]);
+        let sizes: Vec<u64> = info.stripes.iter().map(|s| s.size).collect();
+        assert_eq!(sizes, vec![4, 3, 3], "remainder goes to the first stripes");
+        assert_eq!(sizes.iter().sum::<u64>(), 10);
+        assert_eq!(info.homed_bytes_per_node(4), vec![3, 4, 0, 3]);
+    }
+
+    #[test]
+    fn striped_touches_rotate_and_next_touch_moves_one_stripe() {
+        let reg = RegionRegistry::new(4);
+        let r = reg.alloc_striped(30, &[0, 1, 2]);
+        // Touches sweep the stripes: nodes 0, 1, 2, 0, ...
+        let (t0, d0) = reg.touch(r, CpuId(0), 3);
+        let (t1, d1) = reg.touch(r, CpuId(0), 3);
+        assert_eq!((t0.home, t1.home), (0, 1));
+        assert!(d0.is_none() && d1.is_none());
+        // Mark next-touch: the *third* touch (stripe 2) migrates only
+        // that stripe to the toucher's node.
+        reg.mark_next_touch(r);
+        let (t2, d2) = reg.touch(r, CpuId(12), 3);
+        assert_eq!(t2.home, 3);
+        assert_eq!(t2.migrated, 10);
+        assert!(matches!(d2, Some(HomeChange::Moved { from: 2, to: 3, size: 10, .. })));
+        // The other stripes did not move; the rotation continues.
+        let (t3, d3) = reg.touch(r, CpuId(0), 0);
+        assert_eq!((t3.home, t3.migrated), (0, 0));
+        assert!(d3.is_none());
+        assert_eq!(reg.info(r).homed_bytes_per_node(4), vec![10, 10, 0, 10]);
+    }
+
+    #[test]
+    fn pressure_view_tracks_homes_and_migrations() {
+        let reg = RegionRegistry::new(2);
+        assert_eq!(reg.pressure_view(), vec![0, 0]);
+        let _ = reg.alloc(100, AllocPolicy::Fixed(0));
+        assert_eq!(reg.pressure_view(), vec![100, 0]);
+        let b = reg.alloc(60, AllocPolicy::FirstTouch);
+        assert_eq!(reg.pressure_view(), vec![100, 0], "unhomed bytes exert no pressure");
+        reg.touch(b, CpuId(2), 1);
+        assert_eq!(reg.pressure_view(), vec![100, 60]);
+        reg.mark_next_touch(b);
+        reg.touch(b, CpuId(0), 0);
+        assert_eq!(reg.pressure_view(), vec![160, 0], "next-touch moved the bytes");
+        let _ = reg.alloc_striped(10, &[0, 1]);
+        assert_eq!(reg.pressure_view(), vec![165, 5]);
+        assert_eq!(reg.node_pressure(1), 5);
     }
 }

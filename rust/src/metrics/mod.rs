@@ -57,6 +57,13 @@ pub struct Metrics {
     pub idle_time: AtomicU64,
     /// Two-pass search retries (pass-2 lost the race).
     pub search_retries: AtomicU64,
+    /// Searches where footprint headroom redirected the choice away
+    /// from the plain scan order and the pick/steal went through: the
+    /// pressure-aware pass 1 (`sched::core::pick::pass1_pressure`, a
+    /// later equal-priority list won on headroom) and the `memaware`
+    /// steal tie-break (an equally distant victim on a lower-pressure
+    /// node won) both count here.
+    pub pressure_redirects: AtomicU64,
 }
 
 impl Metrics {
@@ -134,6 +141,7 @@ impl Metrics {
         t.row(&["preemptions".into(), g(&self.preemptions)]);
         t.row(&["utilisation".into(), format!("{:.3}", self.utilisation())]);
         t.row(&["search_retries".into(), g(&self.search_retries)]);
+        t.row(&["pressure_redirects".into(), g(&self.pressure_redirects)]);
         t.render()
     }
 }

@@ -130,12 +130,11 @@ pub fn most_loaded_leaf(sys: &System, cpus: impl Iterator<Item = CpuId>) -> Opti
 /// real wake-placement is effectively arbitrary among equally loaded
 /// CPUs, and a fixed tie-break would give the opportunist baselines
 /// accidental (unrealistic) locality — all new threads piling onto
-/// cpu0's node.
+/// cpu0's node. The rotation counter lives on the [`System`] (not a
+/// process-wide static) so seeded runs are reproducible in-process.
 pub fn least_loaded_leaf(sys: &System, cpus: impl Iterator<Item = CpuId>) -> LevelId {
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    static ROT: AtomicUsize = AtomicUsize::new(0);
     let all: Vec<CpuId> = cpus.collect();
-    let off = ROT.fetch_add(1, Ordering::Relaxed) % all.len().max(1);
+    let off = sys.next_placement_rot() % all.len().max(1);
     let mut best: Option<(LevelId, usize)> = None;
     for i in 0..all.len() {
         let cpu = all[(i + off) % all.len()];

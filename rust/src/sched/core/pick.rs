@@ -5,6 +5,24 @@
 //! earlier list wins. Pass 2 locks only the chosen list and re-pops; if
 //! another processor raced us to the task, the search retries (bounded,
 //! accounted in `metrics.search_retries`).
+//!
+//! The **pressure-aware** variants ([`pass1_pressure`] /
+//! [`pick_thread_pressure`]) consult the memory subsystem's per-node
+//! pressure view ([`crate::mem::MemState::node_pressure`]) in pass 1:
+//! on a priority tie the list whose NUMA node has more footprint
+//! *headroom* (fewer homed bytes) wins, instead of plain order
+//! position — so CPUs drain work towards nodes where subsequent
+//! first-touch allocation hurts least. Priority always dominates;
+//! pressure only breaks ties. Redirects are accounted in
+//! `metrics.pressure_redirects` and the per-level rate counters.
+//!
+//! Note the tie can only fire when the order holds several
+//! simultaneously populated lists: under a policy that enqueues
+//! exclusively onto leaves (today's `memaware` wake/stop), a covering
+//! chain has one populated list and this degenerates to [`pass1`] —
+//! the production home of the headroom preference is the `memaware`
+//! *steal* tie-break, which scans many sibling leaves at equal
+//! distance and shares the same accounting.
 
 use super::ops;
 use crate::metrics::Metrics;
@@ -30,26 +48,99 @@ pub fn pass1(sys: &System, order: &[LevelId]) -> Option<LevelId> {
     best.map(|(l, _)| l)
 }
 
-/// Both passes: scan, lock, re-check, retry on race. Returns the popped
-/// task, its priority, and the list it came from; None when every list
-/// in the order is (or raced to) empty.
-pub fn two_pass(sys: &System, order: &[LevelId]) -> Option<(TaskId, Prio, LevelId)> {
+/// The shared two-pass skeleton: run `scan` (a pass 1 returning the
+/// chosen list and whether the choice was redirected), lock, re-check,
+/// retry on race (bounded, accounted in `metrics.search_retries`).
+/// `on_redirect` fires only for a pop that actually succeeded, so
+/// raced retries cannot inflate redirect counts.
+fn two_pass_with(
+    sys: &System,
+    order: &[LevelId],
+    scan: impl Fn(&System, &[LevelId]) -> Option<(LevelId, bool)>,
+    mut on_redirect: impl FnMut(),
+) -> Option<(TaskId, Prio, LevelId)> {
     let mut credits = 2 * order.len() + 8;
     while credits > 0 {
         credits -= 1;
-        let list = pass1(sys, order)?;
+        let (list, redirected) = scan(sys, order)?;
         match sys.rq.pop_max(list) {
-            Some((task, prio)) => return Some((task, prio, list)),
+            Some((task, prio)) => {
+                if redirected {
+                    on_redirect();
+                }
+                return Some((task, prio, list));
+            }
             None => Metrics::inc(&sys.metrics.search_retries),
         }
     }
     None
 }
 
+/// Both passes: scan, lock, re-check, retry on race. Returns the popped
+/// task, its priority, and the list it came from; None when every list
+/// in the order is (or raced to) empty.
+pub fn two_pass(sys: &System, order: &[LevelId]) -> Option<(TaskId, Prio, LevelId)> {
+    two_pass_with(sys, order, |sys, order| pass1(sys, order).map(|l| (l, false)), || {})
+}
+
 /// The whole thread pick path for policies whose lists only ever hold
 /// threads (every baseline): two-pass search + dispatch accounting.
 pub fn pick_thread(sys: &System, cpu: CpuId, order: &[LevelId]) -> Option<TaskId> {
     let (task, _prio, from) = two_pass(sys, order)?;
+    ops::dispatch(sys, cpu, task, from);
+    Some(task)
+}
+
+/// Memory pressure of the NUMA node holding list `l` (the node of the
+/// list's first CPU stands in for node-spanning lists).
+fn list_pressure(sys: &System, l: LevelId) -> u64 {
+    let cpu = CpuId(sys.topo.node(l).cpu_first);
+    sys.mem.node_pressure(sys.topo.numa_of(cpu))
+}
+
+/// Pressure-aware pass 1: like [`pass1`], but a priority tie goes to
+/// the list whose node has more footprint headroom (order position only
+/// breaks exact pressure ties). Returns the chosen list and whether
+/// headroom *redirected* the choice away from the plain-order winner.
+pub fn pass1_pressure(sys: &System, order: &[LevelId]) -> Option<(LevelId, bool)> {
+    let mut best: Option<(LevelId, Prio, u64)> = None;
+    let mut redirected = false;
+    for &l in order {
+        let p = sys.rq.peek_max(l);
+        if p == i32::MIN {
+            continue;
+        }
+        let pressure = list_pressure(sys, l);
+        match best {
+            Some((_, bp, bpress)) if p > bp || (p == bp && pressure < bpress) => {
+                redirected = p == bp;
+                best = Some((l, p, pressure));
+            }
+            Some(_) => {}
+            None => best = Some((l, p, pressure)),
+        }
+    }
+    best.map(|(l, _, _)| (l, redirected))
+}
+
+/// Both passes over the pressure-aware pass 1 (see [`two_pass`]);
+/// redirects of successful picks are accounted against `cpu`'s
+/// covering chain.
+pub fn two_pass_pressure(
+    sys: &System,
+    cpu: CpuId,
+    order: &[LevelId],
+) -> Option<(TaskId, Prio, LevelId)> {
+    two_pass_with(sys, order, pass1_pressure, || {
+        Metrics::inc(&sys.metrics.pressure_redirects);
+        sys.rates.on_pressure_redirect(&sys.topo, cpu);
+    })
+}
+
+/// Thread pick through the pressure-aware search + dispatch accounting
+/// (the `memaware` policy's pick path).
+pub fn pick_thread_pressure(sys: &System, cpu: CpuId, order: &[LevelId]) -> Option<TaskId> {
+    let (task, _prio, from) = two_pass_pressure(sys, cpu, order)?;
     ops::dispatch(sys, cpu, task, from);
     Some(task)
 }
@@ -98,5 +189,54 @@ mod tests {
     fn empty_order_is_none() {
         let sys = system(Topology::smp(2));
         assert_eq!(two_pass(&sys, sys.topo.covering(CpuId(0))), None);
+        assert_eq!(two_pass_pressure(&sys, CpuId(0), sys.topo.covering(CpuId(0))), None);
+    }
+
+    #[test]
+    fn pass1_pressure_prefers_headroom_on_ties() {
+        use crate::mem::AllocPolicy;
+        let sys = system(Topology::numa(2, 2));
+        // Node 0 carries homed bytes; node 1 has headroom.
+        let _ = sys.mem.alloc(1 << 20, AllocPolicy::Fixed(0));
+        let l0 = sys.topo.leaf_of(CpuId(0)); // node 0
+        let l1 = sys.topo.leaf_of(CpuId(2)); // node 1
+        sys.rq.push(l0, TaskId(0), PRIO_THREAD);
+        sys.rq.push(l1, TaskId(1), PRIO_THREAD);
+        let order = [l0, l1];
+        // Plain pass 1: the earlier list wins the tie.
+        assert_eq!(pass1(&sys, &order), Some(l0));
+        // Pressure-aware: node 1's headroom redirects the pick.
+        assert_eq!(pass1_pressure(&sys, &order), Some((l1, true)));
+        // Priority still dominates pressure.
+        sys.rq.push(l0, TaskId(2), PRIO_HIGH);
+        assert_eq!(pass1_pressure(&sys, &order), Some((l0, false)));
+    }
+
+    #[test]
+    fn pick_thread_pressure_accounts_redirects() {
+        use crate::mem::AllocPolicy;
+        use std::sync::atomic::Ordering;
+        let sys = system(Topology::numa(2, 2));
+        let _ = sys.mem.alloc(4096, AllocPolicy::Fixed(0));
+        let l0 = sys.topo.leaf_of(CpuId(0));
+        let l1 = sys.topo.leaf_of(CpuId(2));
+        let a = sys.tasks.new_thread("a", PRIO_THREAD);
+        let b = sys.tasks.new_thread("b", PRIO_THREAD);
+        ops::enqueue(&sys, a, l0);
+        ops::enqueue(&sys, b, l1);
+        let got = pick_thread_pressure(&sys, CpuId(0), &[l0, l1]);
+        assert_eq!(got, Some(b), "headroom list must win the tie");
+        assert_eq!(sys.metrics.pressure_redirects.load(Ordering::Relaxed), 1);
+        assert_eq!(sys.rates.snap(sys.topo.root()).pressure_redirects, 1);
+        // Equal pressure: plain order (locality) decides, no redirect.
+        let sys2 = system(Topology::numa(2, 2));
+        let c = sys2.tasks.new_thread("c", PRIO_THREAD);
+        let d = sys2.tasks.new_thread("d", PRIO_THREAD);
+        let m0 = sys2.topo.leaf_of(CpuId(0));
+        let m1 = sys2.topo.leaf_of(CpuId(2));
+        ops::enqueue(&sys2, c, m0);
+        ops::enqueue(&sys2, d, m1);
+        assert_eq!(pick_thread_pressure(&sys2, CpuId(0), &[m0, m1]), Some(c));
+        assert_eq!(sys2.metrics.pressure_redirects.load(Ordering::Relaxed), 0);
     }
 }

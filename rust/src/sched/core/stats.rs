@@ -12,9 +12,10 @@
 //!   dispatch/stop by [`super::ops::dispatch`]/[`super::ops::note_stop`].
 //! * **event rates** — [`RateStats`]: monotonic per-component counters
 //!   of the *feedback* signals an online policy adapts on — steal
-//!   attempts and failures, cross-node migrations, idle polls —
-//!   attributed along the acting CPU's covering chain like the running
-//!   counts. A feedback policy (the ARMS-style `adaptive` scheduler)
+//!   attempts and failures, cross-node migrations, idle polls,
+//!   pressure-redirected picks — attributed along the acting CPU's
+//!   covering chain like the running counts. A feedback policy (the
+//!   ARMS-style `adaptive` scheduler)
 //!   snapshots a component with [`RateStats::snap`] and diffs two
 //!   snapshots to get the rate over its own decision epoch; nothing
 //!   here decays or windows, so readers choose their own horizon.
@@ -72,6 +73,10 @@ pub struct RateSnap {
     pub cross_node: u64,
     /// Picks that returned nothing (the covered CPU went idle).
     pub idles: u64,
+    /// Picks/steals by a covered CPU where footprint headroom
+    /// redirected the choice away from the plain scan order (pass-1
+    /// priority ties and `memaware` steal distance-tie groups).
+    pub pressure_redirects: u64,
 }
 
 impl RateSnap {
@@ -83,6 +88,9 @@ impl RateSnap {
             steal_fails: self.steal_fails.saturating_sub(earlier.steal_fails),
             cross_node: self.cross_node.saturating_sub(earlier.cross_node),
             idles: self.idles.saturating_sub(earlier.idles),
+            pressure_redirects: self
+                .pressure_redirects
+                .saturating_sub(earlier.pressure_redirects),
         }
     }
 
@@ -107,6 +115,7 @@ pub struct RateStats {
     steal_fails: Vec<AtomicU64>,
     cross_node: Vec<AtomicU64>,
     idles: Vec<AtomicU64>,
+    pressure_redirects: Vec<AtomicU64>,
 }
 
 impl RateStats {
@@ -119,6 +128,7 @@ impl RateStats {
             steal_fails: zeroed(),
             cross_node: zeroed(),
             idles: zeroed(),
+            pressure_redirects: zeroed(),
         }
     }
 
@@ -148,6 +158,11 @@ impl RateStats {
         Self::bump(&self.idles, topo, cpu);
     }
 
+    /// `cpu`'s pressure-aware pass 1 redirected a pick for headroom.
+    pub fn on_pressure_redirect(&self, topo: &Topology, cpu: CpuId) {
+        Self::bump(&self.pressure_redirects, topo, cpu);
+    }
+
     /// Cumulative counts for one component.
     pub fn snap(&self, l: LevelId) -> RateSnap {
         RateSnap {
@@ -155,6 +170,7 @@ impl RateStats {
             steal_fails: self.steal_fails[l.0].load(Ordering::Relaxed),
             cross_node: self.cross_node[l.0].load(Ordering::Relaxed),
             idles: self.idles[l.0].load(Ordering::Relaxed),
+            pressure_redirects: self.pressure_redirects[l.0].load(Ordering::Relaxed),
         }
     }
 }

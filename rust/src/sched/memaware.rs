@@ -10,17 +10,24 @@
 //!   loaded leaf of the NUMA node holding the plurality of its
 //!   footprint; bubbles pass their aggregated footprint down to members
 //!   with no data of their own. Footprint-less tasks fall back to
-//!   last-CPU affinity, then to machine-wide least-loaded.
-//! * **pick** — the paper's two-pass search over the covering chain;
-//!   ties go to the more local list, which under this wake policy means
-//!   the more footprint-local list.
+//!   last-CPU affinity, then to the least loaded leaf among the nodes
+//!   with the most footprint *headroom*
+//!   ([`crate::mem::MemState::pressure_view`]) — the place where the
+//!   thread's first-touch allocations hurt least.
+//! * **pick** — the pressure-aware two-pass search over the covering
+//!   chain ([`super::core::pick::pick_thread_pressure`]): priority
+//!   first, then footprint headroom on ties, then order position.
 //! * **steal** — closest-victim-first, but a steal whose remote-access
 //!   surcharge ([`DistanceModel::mem_factor`]) exceeds
 //!   `max_steal_factor` is *refused* unless the victim queue is at
 //!   least `desperate_queue` deep (only then does the idle-CPU gain
-//!   clearly outweigh the NUMA penalty). A cross-node steal marks the
-//!   stolen thread's regions **next-touch** so its memory follows it
-//!   (migrated bytes surface in `metrics.migrated_bytes`).
+//!   clearly outweigh the NUMA penalty). Among equally distant
+//!   admissible victims, the one whose node has the most footprint
+//!   *headroom* wins — threads queued where little memory is homed are
+//!   the cheapest to move (headroom overrides of the plain scan order
+//!   count in `metrics.pressure_redirects`). A cross-node steal marks
+//!   the stolen thread's regions **next-touch** so its memory follows
+//!   it (migrated bytes surface in `metrics.migrated_bytes`).
 //! * **stop** — yielded/preempted threads requeue towards their
 //!   footprint's node, snapping back to their data after a forced
 //!   remote excursion (unless next-touch migration already moved the
@@ -31,8 +38,9 @@
 
 use super::core::{ops, pick, traversal};
 use super::{Scheduler, StopReason, System};
+use crate::metrics::Metrics;
 use crate::task::TaskId;
-use crate::topology::{CpuId, DistanceModel};
+use crate::topology::{CpuId, DistanceModel, LevelId};
 
 /// Tunables for the memory-aware policy.
 #[derive(Debug, Clone)]
@@ -71,8 +79,15 @@ impl MemAwareScheduler {
     }
 
     /// Memory-aware steal: closest victims first, remote ones only when
-    /// cheap enough or desperate. Cross-node steals ask the thread's
-    /// memory to follow it (next-touch).
+    /// cheap enough or desperate. Within one distance tie group the
+    /// victim whose node has the most footprint *headroom* wins (its
+    /// threads have the least locally-homed data holding them in place,
+    /// so they are the cheapest to move; deeper queue breaks exact
+    /// pressure ties) — this is where the pressure view genuinely picks
+    /// between several populated runqueues, and a headroom override of
+    /// the plain scan order is counted in `metrics.pressure_redirects`.
+    /// Cross-node steals ask the thread's memory to follow it
+    /// (next-touch).
     fn steal(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
         sys.rates.on_steal_attempt(&sys.topo, cpu);
         if sys.rq.total_queued() == 0 {
@@ -81,23 +96,75 @@ impl MemAwareScheduler {
         }
         let topo = &sys.topo;
         let here = topo.numa_of(cpu);
-        for &v in topo.steal_order(cpu) {
-            let qlen = sys.rq.len_of(v);
-            if qlen == 0 {
-                continue;
+        let order = topo.steal_order(cpu);
+        let sep = |l: LevelId| topo.separation(cpu, CpuId(topo.node(l).cpu_first));
+        let mut i = 0;
+        while i < order.len() {
+            let d = sep(order[i]);
+            let mut j = i;
+            while j < order.len() && sep(order[j]) == d {
+                j += 1;
             }
-            let vnode = topo.numa_of(CpuId(topo.node(v).cpu_first));
-            let factor = self.cfg.dist.mem_factor(topo, cpu, vnode);
-            if factor > self.cfg.max_steal_factor && qlen < self.cfg.desperate_queue {
-                continue; // remote-access cost exceeds the idle-CPU gain
-            }
-            if let Some((t, _prio)) = ops::pop_steal(sys, cpu, v) {
+            let group = &order[i..j];
+            // Headroom-first within the distance tie group, allocation
+            // free: pick the admissible victim whose node has the
+            // fewest homed bytes (deeper queue breaks exact pressure
+            // ties, plain scan order breaks the rest). A pop that
+            // races to empty rescans — the emptied victim filters
+            // itself out, so still-populated same-distance victims are
+            // not skipped (bounded like the two-pass pick).
+            let mut credits = 2 * group.len() + 4;
+            loop {
+                // The victim the plain closest-first scan would take.
+                let mut scan_first: Option<(LevelId, u64)> = None;
+                let mut best: Option<(LevelId, u64, usize)> = None;
+                for &v in group {
+                    let qlen = sys.rq.len_of(v);
+                    if qlen == 0 {
+                        continue;
+                    }
+                    let vnode = topo.numa_of(CpuId(topo.node(v).cpu_first));
+                    let factor = self.cfg.dist.mem_factor(topo, cpu, vnode);
+                    if factor > self.cfg.max_steal_factor && qlen < self.cfg.desperate_queue {
+                        continue; // remote cost exceeds the idle-CPU gain
+                    }
+                    let pressure = sys.mem.node_pressure(vnode);
+                    if scan_first.is_none() {
+                        scan_first = Some((v, pressure));
+                    }
+                    let better = match best {
+                        None => true,
+                        Some((_, bp, bq)) => pressure < bp || (pressure == bp && qlen > bq),
+                    };
+                    if better {
+                        best = Some((v, pressure, qlen));
+                    }
+                }
+                let Some((v, pressure, _)) = best else { break };
+                let Some((t, _prio)) = ops::pop_steal(sys, cpu, v) else {
+                    credits -= 1;
+                    if credits == 0 {
+                        break;
+                    }
+                    continue;
+                };
+                // Count only *pressure-driven* overrides of the plain
+                // scan order, and only for steals that happened (not
+                // queue-depth tie-breaks).
+                if let Some((fv, fp)) = scan_first {
+                    if v != fv && pressure < fp {
+                        Metrics::inc(&sys.metrics.pressure_redirects);
+                        sys.rates.on_pressure_redirect(topo, cpu);
+                    }
+                }
+                let vnode = topo.numa_of(CpuId(topo.node(v).cpu_first));
                 if vnode != here {
                     sys.mem.mark_task_regions_next_touch(t);
                 }
                 ops::dispatch(sys, cpu, t, topo.leaf_of(cpu));
                 return Some(t);
             }
+            i = j;
         }
         ops::note_steal_fail(sys, cpu);
         None
@@ -135,7 +202,16 @@ impl Scheduler for MemAwareScheduler {
                     .with(t, |x| x.last_cpu)
                     .map(|c| sys.topo.leaf_of(c))
                     .unwrap_or_else(|| {
-                        ops::least_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId))
+                        // First placement of a data-less thread: the
+                        // least loaded leaf among the nodes with the
+                        // most footprint headroom (uniform pressure —
+                        // e.g. nothing homed yet — degenerates to the
+                        // machine-wide least-loaded fallback).
+                        let view = sys.mem.pressure_view();
+                        let min = view.iter().min().copied().unwrap_or(0);
+                        let cpus = (0..sys.topo.n_cpus()).map(CpuId);
+                        let open = cpus.filter(|&c| view[sys.topo.numa_of(c)] == min);
+                        ops::least_loaded_leaf(sys, open)
                     }),
             };
             ops::enqueue(sys, t, list);
@@ -144,7 +220,7 @@ impl Scheduler for MemAwareScheduler {
 
     fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
         let order = traversal::covering(&sys.topo, cpu);
-        if let Some(t) = pick::pick_thread(sys, cpu, order) {
+        if let Some(t) = pick::pick_thread_pressure(sys, cpu, order) {
             return Some(t);
         }
         self.steal(sys, cpu)
@@ -190,6 +266,20 @@ mod tests {
         let list = sys.tasks.with(t, |x| x.last_list).unwrap();
         let leaf_cpu = CpuId(sys.topo.node(list).cpu_first);
         assert_eq!(sys.topo.numa_of(leaf_cpu), 1, "thread must land on its data's node");
+    }
+
+    #[test]
+    fn dataless_wake_lands_on_headroom_node() {
+        let sys = system(Topology::numa(2, 2));
+        let s = MemAwareScheduler::default();
+        // Node 0 is loaded with homed bytes: a thread with no footprint
+        // and no history must first-touch on node 1 instead.
+        let _ = sys.mem.alloc(1 << 20, AllocPolicy::Fixed(0));
+        let t = sys.tasks.new_thread("t", PRIO_THREAD);
+        s.wake(&sys, t);
+        let list = sys.tasks.with(t, |x| x.last_list).unwrap();
+        let leaf_cpu = CpuId(sys.topo.node(list).cpu_first);
+        assert_eq!(sys.topo.numa_of(leaf_cpu), 1, "wake must prefer footprint headroom");
     }
 
     #[test]
@@ -274,6 +364,35 @@ mod tests {
         let t = sys2.tasks.new_thread("t", PRIO_THREAD);
         ops::enqueue(&sys2, t, sys2.topo.leaf_of(CpuId(2)));
         assert_eq!(s2.pick(&sys2, CpuId(0)), None);
+    }
+
+    #[test]
+    fn steal_prefers_victims_on_headroom_nodes() {
+        use std::sync::atomic::Ordering;
+        // numa(3,2) from cpu0: nodes 1 and 2 are equally distant, so
+        // their leaves share one steal tie group (ascending CPU order:
+        // node 1 first). Node 1 carries homed bytes; node 2 has
+        // headroom — the steal must take node 2's thread and count the
+        // headroom override of the plain scan order.
+        let sys = system(Topology::numa(3, 2));
+        let s = MemAwareScheduler::default();
+        let _ = sys.mem.alloc(1 << 20, AllocPolicy::Fixed(1));
+        let mut near = Vec::new();
+        let mut far = Vec::new();
+        for i in 0..3 {
+            // Deep queues on both remote nodes so the 3.0-factor
+            // steals are admissible (desperate_queue = 3).
+            let a = sys.tasks.new_thread(format!("n1t{i}"), PRIO_THREAD);
+            ops::enqueue(&sys, a, sys.topo.leaf_of(CpuId(2)));
+            near.push(a);
+            let b = sys.tasks.new_thread(format!("n2t{i}"), PRIO_THREAD);
+            ops::enqueue(&sys, b, sys.topo.leaf_of(CpuId(4)));
+            far.push(b);
+        }
+        let got = s.pick(&sys, CpuId(0)).expect("desperate steal");
+        assert!(far.contains(&got), "steal must come from the headroom node (node 2)");
+        assert_eq!(sys.metrics.pressure_redirects.load(Ordering::Relaxed), 1);
+        assert_eq!(sys.rates.snap(sys.topo.root()).pressure_redirects, 1);
     }
 
     #[test]

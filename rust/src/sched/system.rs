@@ -1,15 +1,15 @@
 //! Shared scheduler state: topology + task table + list hierarchy +
 //! metrics + trace, bundled so engines and schedulers pass one handle.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, RwLock};
 
 use super::core::stats::{LoadStats, RateStats};
-use crate::mem::MemState;
+use crate::mem::{MemState, RegionId, Touch};
 use crate::metrics::Metrics;
 use crate::rq::RqHierarchy;
 use crate::task::TaskTable;
-use crate::topology::Topology;
+use crate::topology::{CpuId, Topology};
 use crate::trace::Trace;
 
 /// Optional callback fired after every `ops::enqueue` (installed by the
@@ -56,6 +56,10 @@ pub struct System {
     /// Engine clock (simulated cycles / native ns); engines advance it,
     /// schedulers read it for trace timestamps.
     clock: AtomicU64,
+    /// Rotating tie-break offset for wake placement (see
+    /// `core::ops::least_loaded_leaf`). Per-system — not a process
+    /// global — so two seeded runs in one process place identically.
+    placement_rot: AtomicUsize,
     enqueue_hook: EnqueueHook,
 }
 
@@ -76,8 +80,14 @@ impl System {
             metrics: Metrics::new(),
             trace: Trace::default(),
             clock: AtomicU64::new(0),
+            placement_rot: AtomicUsize::new(0),
             enqueue_hook: EnqueueHook::default(),
         }
+    }
+
+    /// Next wake-placement rotation offset (monotonic per system).
+    pub fn next_placement_rot(&self) -> usize {
+        self.placement_rot.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Install the enqueue notification hook, replacing any previous
@@ -100,6 +110,28 @@ impl System {
         if let Some(h) = hook {
             h();
         }
+    }
+
+    /// Record a memory touch on region `r` by `cpu` and account it:
+    /// the registry resolves the home (first touch homes, next-touch
+    /// migrates, striped regions rotate over their stripes), the
+    /// footprint follows, and the local/remote access + migration
+    /// metrics are bumped. Both engines go through here — the simulator
+    /// on every memory-bound compute chunk, the native executor from
+    /// green threads (`GreenApi::touch_region`) — so the memory
+    /// behaviour of a policy is observable identically on either.
+    pub fn touch_region(&self, r: RegionId, cpu: CpuId) -> Touch {
+        let touch = self.mem.touch(&self.tasks, &self.topo, r, cpu);
+        if touch.home == self.topo.numa_of(cpu) {
+            Metrics::inc(&self.metrics.local_accesses);
+        } else {
+            Metrics::inc(&self.metrics.remote_accesses);
+        }
+        if touch.migrated > 0 {
+            Metrics::inc(&self.metrics.mem_migrations);
+            Metrics::add(&self.metrics.migrated_bytes, touch.migrated);
+        }
+        touch
     }
 
     /// Current engine time.

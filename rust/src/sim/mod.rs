@@ -184,6 +184,12 @@ impl SimEngine {
         self.sys.mem.alloc(bytes, policy)
     }
 
+    /// Allocate a striped region of `bytes` spread over `nodes` (one
+    /// stripe per node — see [`crate::mem::RegionRegistry::alloc_striped`]).
+    pub fn alloc_region_striped(&mut self, bytes: u64, nodes: &[usize]) -> RegionId {
+        self.sys.mem.alloc_striped(bytes, nodes)
+    }
+
     /// Attach a region to a task: its bytes count towards the task's
     /// (and its bubbles') NUMA footprint (see [`crate::mem`]).
     pub fn attach_region(&mut self, task: TaskId, region: RegionId) {
@@ -331,22 +337,12 @@ impl SimEngine {
                     if slice == 0 {
                         break; // quantum exhausted
                     }
-                    // The registry resolves the touch: first touch
-                    // homes the region, next-touch migrates it, and
-                    // the footprint accounting follows.
-                    let touch = region
-                        .map(|r| self.sys.mem.touch(&self.sys.tasks, &self.sys.topo, r, cpu));
-                    if let Some(t) = &touch {
-                        if t.home == self.sys.topo.numa_of(cpu) {
-                            Metrics::inc(&self.sys.metrics.local_accesses);
-                        } else {
-                            Metrics::inc(&self.sys.metrics.remote_accesses);
-                        }
-                        if t.migrated > 0 {
-                            Metrics::inc(&self.sys.metrics.mem_migrations);
-                            Metrics::add(&self.sys.metrics.migrated_bytes, t.migrated);
-                        }
-                    }
+                    // The shared touch path (System::touch_region)
+                    // resolves the touch — first touch homes, striped
+                    // regions rotate, next-touch migrates — and keeps
+                    // footprint + local/remote metrics in sync exactly
+                    // like the native executor's green-thread touches.
+                    let touch = region.map(|r| self.sys.touch_region(r, cpu));
                     let (sib_busy, sib_symb) = self.sibling_state(cpu, task);
                     let ctx = match &touch {
                         Some(t) => ChunkCtx::from_touch(t, mem_fraction, sib_busy, sib_symb),

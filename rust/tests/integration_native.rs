@@ -118,6 +118,43 @@ fn native_repeated_barriers_with_uneven_work() {
 }
 
 #[test]
+fn native_memaware_beats_afs_on_locality() {
+    // ISSUE-4 acceptance: the sim pin (`memaware` strictly above `afs`
+    // on local-access ratio, numa(4,4)) mirrored on real green
+    // threads. Regions are round-robin homed across the nodes, so the
+    // memory-aware wake can place each thread on its data's node from
+    // the start, while AFS places and steals memory-blind. Smoke-sized
+    // and heavily oversubscribed so the ordering is robust to OS
+    // scheduling noise.
+    use bubbles::apps::conduction::HeatParams;
+    use bubbles::experiments::memcmp;
+    let topo = Topology::numa(4, 4);
+    let p = HeatParams { threads: 24, cycles: 8, work: 0, mem_fraction: 0.0 };
+    let c = memcmp::run_native(
+        &topo,
+        &p,
+        &[SchedKind::Memaware, SchedKind::Afs],
+        4,
+        bubbles::mem::AllocPolicy::RoundRobin,
+    );
+    let ma = c.get("memaware");
+    let afs = c.get("afs");
+    assert!(ma.makespan > 0 && afs.makespan > 0);
+    assert!(
+        ma.local_ratio > 0.0 && afs.local_ratio > 0.0,
+        "touches must be attributed on the native engine: memaware {:.3}, afs {:.3}",
+        ma.local_ratio,
+        afs.local_ratio
+    );
+    assert!(
+        ma.local_ratio > afs.local_ratio,
+        "native memaware {:.3} must beat afs {:.3} on locality",
+        ma.local_ratio,
+        afs.local_ratio
+    );
+}
+
+#[test]
 fn native_gang_scheduler_runs_gangs() {
     let sys = system(Topology::smp(4));
     let sched = make_default(SchedKind::Gang);

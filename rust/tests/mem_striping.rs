@@ -1,0 +1,151 @@
+//! Striped-region properties (ISSUE-4 satellite): random stripe
+//! declarations cover exactly the declared nodes with per-stripe
+//! footprints summing to the region size, and random
+//! touch/next-touch/migrate sequences conserve bytes — in the raw
+//! registry, in the footprint hierarchy, and in the per-node pressure
+//! view.
+
+use std::sync::Arc;
+
+use bubbles::marcel::Marcel;
+use bubbles::mem::AllocPolicy;
+use bubbles::sched::System;
+use bubbles::topology::{CpuId, Topology};
+use bubbles::util::proptest;
+
+const N_NODES: usize = 4;
+
+fn fresh() -> Arc<System> {
+    Arc::new(System::new(Arc::new(Topology::numa(N_NODES, 4))))
+}
+
+#[test]
+fn random_stripe_declarations_cover_exactly_the_declared_nodes() {
+    proptest::check(0x57217e, 40, |rng| {
+        let sys = fresh();
+        for _ in 0..20 {
+            let n_stripes = rng.range(1, N_NODES + 1);
+            let mut nodes = Vec::with_capacity(n_stripes);
+            for _ in 0..n_stripes {
+                nodes.push(rng.below(N_NODES as u64) as usize);
+            }
+            let size = 1 + rng.below(1 << 22);
+            let r = sys.mem.alloc_striped(size, &nodes);
+            let info = sys.mem.info(r);
+            // One stripe per declared node, in declaration order.
+            let got: Vec<usize> = info.stripes.iter().map(|s| s.node).collect();
+            assert_eq!(got, nodes, "stripes must cover exactly the declared nodes");
+            // Per-stripe sizes sum to the region size, split near-evenly.
+            let sizes: Vec<u64> = info.stripes.iter().map(|s| s.size).collect();
+            assert_eq!(sizes.iter().sum::<u64>(), size);
+            let min = *sizes.iter().min().unwrap();
+            let max = *sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "stripes must split evenly: {sizes:?}");
+            // The pressure view accounts the same bytes.
+            let by_node = info.homed_bytes_per_node(N_NODES);
+            assert_eq!(by_node.iter().sum::<u64>(), size);
+        }
+        // Total pressure equals total homed bytes (every region in
+        // this test is homed at declaration).
+        let mut total = 0u64;
+        for info in sys.mem.regions.snapshot() {
+            total += info.size;
+        }
+        assert_eq!(sys.mem.pressure_view().iter().sum::<u64>(), total);
+    });
+}
+
+#[test]
+fn random_touch_sequences_conserve_bytes_everywhere() {
+    proptest::check(0x57217e2, 30, |rng| {
+        let sys = fresh();
+        let m = Marcel::with_system(&sys);
+        // A bubble forest plus loose threads to attribute into.
+        let mut tasks = Vec::new();
+        for b in 0..2 {
+            let bubble = m.bubble_init();
+            for k in 0..3 {
+                let t = m.create_dontsched(format!("b{b}t{k}"));
+                m.bubble_inserttask(bubble, t);
+                tasks.push(t);
+            }
+        }
+        for k in 0..2 {
+            tasks.push(m.create_dontsched(format!("loose{k}")));
+        }
+        let n_cpus = sys.topo.n_cpus();
+        let mut regions = Vec::new();
+        for step in 0..160 {
+            match rng.below(6) {
+                0 => {
+                    let size = 1 + rng.below(1 << 20);
+                    let n_stripes = rng.range(1, N_NODES + 1);
+                    let mut nodes = Vec::with_capacity(n_stripes);
+                    for _ in 0..n_stripes {
+                        nodes.push(rng.below(N_NODES as u64) as usize);
+                    }
+                    regions.push(sys.mem.alloc_striped(size, &nodes));
+                }
+                1 => {
+                    let policy = match rng.below(3) {
+                        0 => AllocPolicy::FirstTouch,
+                        1 => AllocPolicy::RoundRobin,
+                        _ => AllocPolicy::Fixed(rng.below(N_NODES as u64) as usize),
+                    };
+                    regions.push(sys.mem.alloc(1 + rng.below(1 << 20), policy));
+                }
+                2 if !regions.is_empty() => {
+                    let r = *rng.choose(&regions);
+                    let t = *rng.choose(&tasks);
+                    sys.mem.attach(&sys.tasks, t, r);
+                }
+                3 if !regions.is_empty() => {
+                    let r = *rng.choose(&regions);
+                    let cpu = CpuId(rng.below(n_cpus as u64) as usize);
+                    // The engine-shared touch path keeps metrics in
+                    // step with the registry's touch counter.
+                    sys.touch_region(r, cpu);
+                }
+                4 if !regions.is_empty() => {
+                    sys.mem.mark_next_touch(*rng.choose(&regions));
+                }
+                5 => {
+                    sys.mem.mark_task_regions_next_touch(*rng.choose(&tasks));
+                }
+                _ => {}
+            }
+            // Bytes are conserved at every step: region sizes never
+            // change, stripes only move between nodes.
+            for &r in &regions {
+                let info = sys.mem.info(r);
+                if !info.stripes.is_empty() {
+                    let sum: u64 = info.stripes.iter().map(|s| s.size).sum();
+                    assert_eq!(sum, info.size, "stripe bytes leaked at step {step}");
+                }
+            }
+            assert!(sys.mem.conserved(&sys.tasks), "conservation broken at step {step}");
+            assert!(
+                sys.mem.hierarchy_consistent(&sys.tasks),
+                "footprint hierarchy broken at step {step}"
+            );
+            // Pressure view == homed bytes, every step.
+            let mut homed = 0u64;
+            for info in sys.mem.regions.snapshot() {
+                if info.is_homed() {
+                    homed += info.size;
+                }
+            }
+            assert_eq!(
+                sys.mem.pressure_view().iter().sum::<u64>(),
+                homed,
+                "pressure leaked at step {step}"
+            );
+        }
+        // Touch accounting: every registry touch was exactly one local
+        // or remote access.
+        use std::sync::atomic::Ordering;
+        let locals = sys.metrics.local_accesses.load(Ordering::Relaxed);
+        let remotes = sys.metrics.remote_accesses.load(Ordering::Relaxed);
+        assert_eq!(locals + remotes, sys.mem.regions.total_touches());
+    });
+}

@@ -11,7 +11,15 @@
 //!   every woken task is eventually picked within a fuel budget;
 //! * **stats consistency** — the incremental `LoadStats` running
 //!   counters return to zero on every component, and the pick/steal
-//!   metrics add up.
+//!   metrics add up;
+//! * **memory invariants, on both engines** — per-task/per-bubble
+//!   footprint conservation after every run
+//!   (`MemState::hierarchy_consistent`), and touch accounting:
+//!   `local_ratio ∈ [0,1]` with locals + remotes equal to the
+//!   registry's total touches. The native leg runs every registry
+//!   entry over real green threads recording touches via `GreenApi`,
+//!   so a future policy inherits the gate on *both* engines
+//!   automatically.
 //!
 //! Workloads are deliberately free of *inter-gang* coupling (no global
 //! barrier across independent gangs) so strict space/time-sharing
@@ -61,8 +69,24 @@ fn assert_consistent(name: &str, machine: &str, sys: &System, threads: &[TaskId]
             "{name} on {machine}: thread {task} leaked on list {list:?}"
         );
     }
-    // Footprint conservation (regions were declared in every workload).
+    // Footprint conservation (regions were declared in every workload):
+    // the aggregate invariant plus the strong per-task/per-bubble one.
     assert!(sys.mem.conserved(&sys.tasks), "{name} on {machine}: footprint leak");
+    assert!(
+        sys.mem.hierarchy_consistent(&sys.tasks),
+        "{name} on {machine}: footprint hierarchy inconsistent"
+    );
+    // Touch accounting: every registry touch was counted as exactly one
+    // local or remote access, and the ratio is a valid fraction.
+    let locals = sys.metrics.local_accesses.load(Ordering::Relaxed);
+    let remotes = sys.metrics.remote_accesses.load(Ordering::Relaxed);
+    assert_eq!(
+        locals + remotes,
+        sys.mem.regions.total_touches(),
+        "{name} on {machine}: touch accounting mismatch"
+    );
+    let lr = sys.metrics.local_ratio();
+    assert!((0.0..=1.0).contains(&lr), "{name} on {machine}: local_ratio {lr}");
     // Metrics add up: every thread was dispatched at least once, and
     // steals never exceed picks.
     let picks = sys.metrics.picks.load(Ordering::Relaxed);
@@ -187,6 +211,67 @@ fn starvation_freedom(name: &str, topo: &Topology) {
     assert_eq!(sys.rq.total_queued(), 0, "{name}: runqueues not drained");
     for i in 0..sys.topo.n_components() {
         assert_eq!(sys.stats.running(LevelId(i)), 0, "{name}: running counter leaked");
+    }
+}
+
+/// Native-engine memory leg: bubble-structured green threads (one
+/// bubble per NUMA node, no inter-gang coupling) whose bodies record
+/// region touches through `GreenApi`; afterwards the run must satisfy
+/// the same invariants [`assert_consistent`] enforces on the sim legs
+/// — touches attributed on real OS workers included.
+fn native_mem_workload(name: &str, topo: &Topology) {
+    use bubbles::exec::Executor;
+    let sys = Arc::new(System::new(Arc::new(topo.clone())));
+    let sched = factory::make(&bubbles::config::SchedConfig {
+        kind: factory::lookup(name).expect("registered policy").kind,
+        ..Default::default()
+    });
+    let m = Marcel::with_system(&sys);
+    let mut ex = Executor::new(sys.clone(), sched.clone());
+    let groups = sys.topo.n_numa().max(2);
+    let per = sys.topo.n_cpus().div_ceil(groups).max(1);
+    let touches_each = 3u64;
+    let mut threads = Vec::new();
+    let mut bubbles_list = Vec::new();
+    for g in 0..groups {
+        let b = m.bubble_init();
+        for k in 0..per {
+            let t = m.create_dontsched(format!("g{g}t{k}"));
+            m.bubble_inserttask(b, t);
+            let r = sys.mem.alloc(1 << 20, bubbles::mem::AllocPolicy::FirstTouch);
+            sys.mem.attach(&sys.tasks, t, r);
+            ex.register(t, move |api| {
+                for _ in 0..touches_each {
+                    api.touch_region(r);
+                    api.yield_now();
+                }
+            });
+            threads.push(t);
+        }
+        bubbles_list.push(b);
+    }
+    for &b in &bubbles_list {
+        sched.wake(&sys, b);
+    }
+    ex.run();
+    let machine = topo.name();
+    assert_consistent(name, machine, &sys, &threads);
+    // Touches were actually attributed on the native workers.
+    let locals = sys.metrics.local_accesses.load(Ordering::Relaxed);
+    let remotes = sys.metrics.remote_accesses.load(Ordering::Relaxed);
+    assert_eq!(
+        locals + remotes,
+        threads.len() as u64 * touches_each,
+        "{name} on {machine}: native touches lost"
+    );
+}
+
+#[test]
+fn every_registered_policy_holds_memory_invariants_on_the_native_engine() {
+    for entry in factory::registry() {
+        for topo in machines() {
+            native_mem_workload(entry.name, &topo);
+        }
     }
 }
 
