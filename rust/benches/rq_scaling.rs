@@ -6,60 +6,23 @@
 //!    single global list vs per-CPU lists from N OS threads.
 //! 2. **Pick path** — the paper's two-pass search (pass-1 lock-free
 //!    hint scan over a covering chain + pass-2 locked pop) under
-//!    contention, comparing the bucket-array `RunList` against the
-//!    previous BTreeMap layout (`BtreeRunList`) on a numa-4x4 machine.
+//!    contention on a numa-4x4 machine.
 //!
 //! Results are printed as tables *and* written machine-readably to
-//! `BENCH_rq.json`, so the perf trajectory is tracked across PRs.
-//! Acceptance shape: the bucket layout is no slower single-threaded
-//! and faster at ≥16 contended threads.
+//! `BENCH_rq.json`, so the perf trajectory is tracked across PRs. The
+//! legacy `BTreeRunList` comparison leg is gone (PR 5): the bucket
+//! layout won across several PRs of `BENCH_rq.json` history, so the
+//! pick path is now tracked in absolute ns/op.
+//! Acceptance shape: hierarchy win grows with threads; pick-path ns/op
+//! stays flat-ish as PRs land.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use bubbles::rq::{BtreeRunList, RunList};
-use bubbles::task::{Prio, TaskId};
+use bubbles::rq::RunList;
+use bubbles::task::TaskId;
 use bubbles::topology::{CpuId, LevelId, Topology};
 use bubbles::util::fmt::Table;
-
-/// The list surface both layouts share, so the same driver measures
-/// either.
-trait PrioQueue: Send + Sync + 'static {
-    fn make(level: LevelId) -> Self;
-    fn push(&self, t: TaskId, p: Prio);
-    fn pop_max(&self) -> Option<(TaskId, Prio)>;
-    fn peek_max(&self) -> Prio;
-}
-
-impl PrioQueue for RunList {
-    fn make(level: LevelId) -> Self {
-        RunList::new(level)
-    }
-    fn push(&self, t: TaskId, p: Prio) {
-        RunList::push(self, t, p)
-    }
-    fn pop_max(&self) -> Option<(TaskId, Prio)> {
-        RunList::pop_max(self)
-    }
-    fn peek_max(&self) -> Prio {
-        RunList::peek_max(self)
-    }
-}
-
-impl PrioQueue for BtreeRunList {
-    fn make(level: LevelId) -> Self {
-        BtreeRunList::new(level)
-    }
-    fn push(&self, t: TaskId, p: Prio) {
-        BtreeRunList::push(self, t, p)
-    }
-    fn pop_max(&self) -> Option<(TaskId, Prio)> {
-        BtreeRunList::pop_max(self)
-    }
-    fn peek_max(&self) -> Prio {
-        BtreeRunList::peek_max(self)
-    }
-}
 
 // ---------------------------------------------------------- contention
 
@@ -97,9 +60,9 @@ fn throughput(threads: usize, lists: usize, dur_ms: u64) -> f64 {
 /// a shared numa-4x4 list hierarchy. Workers map onto CPUs round-robin,
 /// so ≥16 threads means every chain is contended and the shared node /
 /// root lists see cross-CPU traffic.
-fn pick_path_ns<Q: PrioQueue>(topo: &Topology, threads: usize, dur_ms: u64) -> f64 {
-    let lists: Arc<Vec<Q>> =
-        Arc::new((0..topo.n_components()).map(|i| Q::make(LevelId(i))).collect());
+fn pick_path_ns(topo: &Topology, threads: usize, dur_ms: u64) -> f64 {
+    let lists: Arc<Vec<RunList>> =
+        Arc::new((0..topo.n_components()).map(|i| RunList::new(LevelId(i))).collect());
     let stop = Arc::new(AtomicBool::new(false));
     let mut joins = Vec::new();
     for w in 0..threads {
@@ -178,28 +141,20 @@ fn main() {
     println!("{}", t.render());
     println!("expected shape: the win grows with the thread count (§2.2).\n");
 
-    println!("pick path (two-pass over numa-4x4 chains): bucket array vs BTreeMap\n");
+    println!("pick path (two-pass over numa-4x4 chains): bucket-array RunList\n");
     let topo = Topology::numa(4, 4);
     let mut pick_rows = Vec::new();
-    let mut t2 = Table::new(&["threads", "bucket ns/op", "btree ns/op", "bucket speedup"]);
+    let mut t2 = Table::new(&["threads", "bucket ns/op"]);
     for threads in [1usize, 4, 16, 32] {
-        let bucket = pick_path_ns::<RunList>(&topo, threads, dur);
-        let btree = pick_path_ns::<BtreeRunList>(&topo, threads, dur);
-        t2.row(&[
-            threads.to_string(),
-            format!("{bucket:.1}"),
-            format!("{btree:.1}"),
-            format!("{:.2}x", btree / bucket),
-        ]);
+        let bucket = pick_path_ns(&topo, threads, dur);
+        t2.row(&[threads.to_string(), format!("{bucket:.1}")]);
         pick_rows.push(format!(
-            "{{\"threads\":{threads},\"bucket_ns\":{},\"btree_ns\":{},\"speedup\":{}}}",
-            json_escape_free(bucket),
-            json_escape_free(btree),
-            json_escape_free(btree / bucket)
+            "{{\"threads\":{threads},\"bucket_ns\":{}}}",
+            json_escape_free(bucket)
         ));
     }
     println!("{}", t2.render());
-    println!("acceptance shape: >= 1.00x at 1 thread, > 1.00x at >= 16 threads.");
+    println!("acceptance shape: ns/op comparable to the BENCH_rq.json history.");
 
     let json = format!(
         "{{\n  \"bench\": \"rq_scaling\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"contention\": [{}],\n  \"pick_path\": [{}]\n}}\n",

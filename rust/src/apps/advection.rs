@@ -39,6 +39,19 @@ pub fn build_with_shared_mesh(
     conduction::build_with_shared_mesh(engine, mode, p, mesh_bytes)
 }
 
+/// Build as real green threads on the native executor under the same
+/// structure axis as the simulator builder (loose threads vs one
+/// bubble per NUMA node — see [`conduction::build_native`]).
+pub fn build_native(
+    ex: &mut crate::exec::Executor,
+    mode: StructureMode,
+    p: &HeatParams,
+    policy: crate::mem::AllocPolicy,
+    touches: usize,
+) -> Vec<TaskId> {
+    conduction::build_native(ex, mode, p, policy, touches)
+}
+
 /// Run one row.
 pub fn run(topo: &Topology, mode: StructureMode, p: &HeatParams) -> SimReport {
     conduction::run(topo, mode, p)

@@ -150,6 +150,77 @@ fn build_inner(
     }
 }
 
+/// Build the AMR workload as real green threads on the native executor
+/// under the same structure axis as the simulator builder (`Simple`/
+/// `Bound` = loose threads, `Bubbles` = one bubble per NUMA node via
+/// [`Marcel::bubbles_from_topology`]). The per-stripe imbalance
+/// survives the translation: each cycle a stripe records a number of
+/// region touches proportional to its [`work_table`] weight (at least
+/// one), with a yield after every touch, then arrives at the global
+/// barrier. `touches` scales the mean touches per cycle.
+pub fn build_native(
+    ex: &mut crate::exec::Executor,
+    mode: StructureMode,
+    p: &AmrParams,
+    policy: crate::mem::AllocPolicy,
+    touches: usize,
+) -> Vec<TaskId> {
+    let table = work_table(p);
+    let sys = ex.system().clone();
+    let bar = ex.alloc_barrier(p.threads);
+    let touches = touches.max(1);
+    let regions: Vec<_> = (0..p.threads).map(|_| sys.mem.alloc(1 << 20, policy)).collect();
+    // Touch counts per (stripe, cycle): mean `touches`, skewed like the
+    // simulated work table.
+    let counts: Vec<Vec<u64>> = (0..p.threads)
+        .map(|i| {
+            (0..p.cycles)
+                .map(|c| {
+                    ((table[i][c] as f64 / p.mean_work as f64) * touches as f64).round().max(1.0)
+                        as u64
+                })
+                .collect()
+        })
+        .collect();
+    let body = move |r: crate::mem::RegionId, mine: Vec<u64>| {
+        move |api: crate::exec::GreenApi| {
+            for &n in &mine {
+                for _ in 0..n {
+                    api.touch_region(r);
+                    api.yield_now();
+                }
+                api.barrier(bar);
+            }
+        }
+    };
+    match mode {
+        StructureMode::Simple | StructureMode::Bound => {
+            let mut out = Vec::with_capacity(p.threads);
+            for (i, &r) in regions.iter().enumerate() {
+                let t = sys.tasks.new_thread(format!("amr{i}"), PRIO_THREAD);
+                sys.mem.attach(&sys.tasks, t, r);
+                ex.register(t, body(r, counts[i].clone()));
+                out.push(t);
+            }
+            for &t in &out {
+                ex.wake(t);
+            }
+            out
+        }
+        StructureMode::Bubbles => {
+            let m = Marcel::with_system(&sys);
+            let names: Vec<String> = (0..p.threads).map(|i| format!("amr{i}")).collect();
+            let (root, threads) = m.bubbles_from_topology(&names);
+            for (i, (&t, &r)) in threads.iter().zip(regions.iter()).enumerate() {
+                m.attach_region(t, r);
+                ex.register(t, body(r, counts[i].clone()));
+            }
+            ex.wake(root);
+            threads
+        }
+    }
+}
+
 /// Run one AMR row.
 pub fn run(topo: &Topology, mode: StructureMode, p: &AmrParams) -> SimReport {
     let mut e = super::engine_for(topo, mode);
@@ -299,6 +370,35 @@ mod tests {
         assert!(e.sys.mem.conserved(&e.sys.tasks));
         assert!(e.sys.mem.hierarchy_consistent(&e.sys.tasks));
         assert_eq!(threads.len(), p.threads);
+    }
+
+    #[test]
+    fn native_builder_runs_imbalanced_stripes_under_both_structures() {
+        use crate::sched::{BubbleConfig, BubbleScheduler, System};
+        use std::sync::Arc;
+        let p = AmrParams { threads: 4, cycles: 4, redraw_every: 2, ..Default::default() };
+        for mode in [Simple, Bubbles] {
+            let sys = Arc::new(System::new(Arc::new(Topology::numa(2, 2))));
+            let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+            let mut ex = crate::exec::Executor::new(sys.clone(), sched);
+            let threads =
+                build_native(&mut ex, mode, &p, crate::mem::AllocPolicy::FirstTouch, 2);
+            ex.run();
+            for &t in &threads {
+                assert_eq!(sys.tasks.state(t), crate::task::TaskState::Terminated, "{mode:?}");
+            }
+            // At least one touch per stripe per cycle, all attributed.
+            assert!(
+                sys.mem.regions.total_touches() >= (p.threads * p.cycles) as u64,
+                "{mode:?}"
+            );
+            assert!(sys.mem.conserved(&sys.tasks), "{mode:?}");
+            let parented = threads.iter().filter(|&&t| sys.tasks.parent(t).is_some()).count();
+            match mode {
+                Bubbles => assert_eq!(parented, p.threads),
+                _ => assert_eq!(parented, 0),
+            }
+        }
     }
 
     #[test]

@@ -154,14 +154,21 @@ fn build_inner(
 }
 
 /// Build the striped workload as real green threads on the native
-/// executor (the `Simple` shape: loose threads, attached stripe
-/// regions, a barrier per cycle). Each cycle every thread records
+/// executor, under the same **structure axis** as the simulator
+/// builder: `Simple`/`Bound` spawn loose threads, `Bubbles` queries
+/// the machine through [`Marcel::bubbles_from_topology`] and groups
+/// the stripes into one bubble per NUMA node — the Figure-4 shape on
+/// real OS workers. Stripe regions are homed per `policy` and attached
+/// per thread either way, so footprint-driven policies see the same
+/// declarations on both engines. Each cycle every thread records
 /// `touches` region touches through [`crate::exec::GreenApi`] with a
 /// yield between them, so scheduling decisions — and their memory
 /// consequences — happen mid-cycle exactly as in the simulator.
-/// Threads are registered and woken; the caller runs the executor.
+/// Threads (or the root bubble) are registered and woken; the caller
+/// runs the executor.
 pub fn build_native(
     ex: &mut crate::exec::Executor,
+    mode: StructureMode,
     p: &HeatParams,
     policy: crate::mem::AllocPolicy,
     touches: usize,
@@ -170,12 +177,9 @@ pub fn build_native(
     let bar = ex.alloc_barrier(p.threads);
     let cycles = p.cycles;
     let touches = touches.max(1);
-    let mut out = Vec::with_capacity(p.threads);
-    for i in 0..p.threads {
-        let r = sys.mem.alloc(STRIPE_BYTES, policy);
-        let t = sys.tasks.new_thread(format!("stripe{i}"), PRIO_THREAD);
-        sys.mem.attach(&sys.tasks, t, r);
-        ex.register(t, move |api| {
+    let regions: Vec<_> = (0..p.threads).map(|_| sys.mem.alloc(STRIPE_BYTES, policy)).collect();
+    let body = move |r: crate::mem::RegionId| {
+        move |api: crate::exec::GreenApi| {
             for _ in 0..cycles {
                 for _ in 0..touches {
                     api.touch_region(r);
@@ -183,13 +187,39 @@ pub fn build_native(
                 }
                 api.barrier(bar);
             }
-        });
-        out.push(t);
+        }
+    };
+    match mode {
+        StructureMode::Simple | StructureMode::Bound => {
+            // Loose green threads; the scheduler decides everything
+            // (there is no native pinning, so Bound degrades to Simple).
+            let mut out = Vec::with_capacity(p.threads);
+            for (i, &r) in regions.iter().enumerate() {
+                let t = sys.tasks.new_thread(format!("stripe{i}"), PRIO_THREAD);
+                sys.mem.attach(&sys.tasks, t, r);
+                ex.register(t, body(r));
+                out.push(t);
+            }
+            for &t in &out {
+                ex.wake(t);
+            }
+            out
+        }
+        StructureMode::Bubbles => {
+            // Figure-4 style, natively: one bubble per NUMA node, the
+            // root woken through the executor's scheduler (opportunist
+            // policies flatten it; the bubble scheduler descends it).
+            let m = Marcel::with_system(&sys);
+            let names: Vec<String> = (0..p.threads).map(|i| format!("stripe{i}")).collect();
+            let (root, threads) = m.bubbles_from_topology(&names);
+            for (&t, &r) in threads.iter().zip(regions.iter()) {
+                m.attach_region(t, r);
+                ex.register(t, body(r));
+            }
+            ex.wake(root);
+            threads
+        }
     }
-    for &t in &out {
-        ex.wake(t);
-    }
-    out
 }
 
 /// Sequential baseline: one thread computes all stripes, no barriers.
@@ -310,6 +340,40 @@ mod tests {
         assert!(e.sys.mem.conserved(&e.sys.tasks));
         assert!(e.sys.mem.hierarchy_consistent(&e.sys.tasks));
         assert_eq!(threads.len(), p.threads);
+    }
+
+    #[test]
+    fn native_builder_supports_both_structures() {
+        use crate::sched::{BubbleConfig, BubbleScheduler, System};
+        use std::sync::Arc;
+        let p = HeatParams { threads: 8, cycles: 3, work: 0, mem_fraction: 0.0 };
+        for mode in [Simple, Bubbles] {
+            let sys = Arc::new(System::new(Arc::new(Topology::numa(2, 2))));
+            let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+            let mut ex = crate::exec::Executor::new(sys.clone(), sched);
+            let threads =
+                build_native(&mut ex, mode, &p, crate::mem::AllocPolicy::FirstTouch, 2);
+            ex.run();
+            assert_eq!(threads.len(), p.threads, "{mode:?}");
+            for &t in &threads {
+                assert_eq!(sys.tasks.state(t), crate::task::TaskState::Terminated, "{mode:?}");
+            }
+            // Every green-thread touch went through the registry, and
+            // the attached stripes conserve.
+            assert_eq!(
+                sys.mem.regions.total_touches(),
+                (p.threads * p.cycles * 2) as u64,
+                "{mode:?}"
+            );
+            assert!(sys.mem.conserved(&sys.tasks), "{mode:?}");
+            // The structure axis is real: bubble mode nests the threads
+            // under per-node bubbles, simple mode leaves them loose.
+            let parented = threads.iter().filter(|&&t| sys.tasks.parent(t).is_some()).count();
+            match mode {
+                Bubbles => assert_eq!(parented, p.threads, "threads must sit in bubbles"),
+                _ => assert_eq!(parented, 0, "loose threads must have no bubble"),
+            }
+        }
     }
 
     #[test]

@@ -107,8 +107,10 @@ COMMANDS
   fig5       fibonacci bubble gain (Figure 5)    [--machine xeon-2x-ht|numa-4x4]
   ablations  design-choice sweeps                [--which burst|regen|zoo|all]
   memcmp     local vs remote access ratio per policy [--machine, --scheds a,b,c,
-             --engine sim|native, --seed N (sim), --smoke]
-             (--engine native runs real green threads, writes BENCH_mem_native.json)
+             --engine sim|native, --structure simple|bubbles|both (native),
+             --seed N (sim), --smoke]
+             (--engine native runs real green threads — loose or grouped into
+             one bubble per NUMA node — and writes BENCH_mem_native.json)
   adaptcmp   adaptive steal-scope vs fixed scopes on bursty/phase-change load
              [--machine, --scheds a,b,c, --seed N, --smoke]
              (writes BENCH_adaptive.json)
@@ -242,6 +244,13 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
     };
     match args.get("engine", "sim") {
         "sim" => {
+            if args.options.contains_key("structure") {
+                return Err(Error::config(
+                    "--structure applies to --engine native only (the sim harness \
+                     picks the structure per policy)"
+                        .to_string(),
+                ));
+            }
             let c = memcmp::run(&topo, &p, &kinds, seed);
             Ok(format!(
                 "memory locality comparison on `{}` ({} stripes, {} cycles, seed {seed})\n\n{}",
@@ -253,16 +262,31 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
         }
         "native" => {
             let touches = if smoke { 2 } else { 4 };
+            use crate::apps::StructureMode;
+            let structure = args.get("structure", "both");
+            let modes: Vec<StructureMode> = match structure {
+                "simple" => vec![StructureMode::Simple],
+                "bubbles" => vec![StructureMode::Bubbles],
+                "both" => vec![StructureMode::Simple, StructureMode::Bubbles],
+                other => {
+                    return Err(Error::config(format!(
+                        "unknown structure `{other}` (want simple|bubbles|both)"
+                    )))
+                }
+            };
             let c = memcmp::run_native(
                 &topo,
                 &p,
                 &kinds,
                 touches,
                 crate::mem::AllocPolicy::FirstTouch,
+                &modes,
             );
             // No seed in the native artifact: native makespans are wall
             // clock and OS scheduling makes them run-to-run noisy — a
-            // seed field would falsely promise reproducibility.
+            // seed field would falsely promise reproducibility. The
+            // structure axis lives on each result row (one vocabulary:
+            // the StructureMode labels), not at the top level.
             let json = format!(
                 "{{\n  \"bench\": \"memcmp\",\n  \"engine\": \"native\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"results\": [{}]\n}}\n",
                 if smoke { "smoke" } else { "full" },
@@ -276,10 +300,11 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
                 ""
             };
             Ok(format!(
-                "memory locality comparison on `{}` (native engine, {} green threads, {} cycles)\n\n{}\n{}{}",
+                "memory locality comparison on `{}` (native engine, {} green threads, {} cycles, structure {})\n\n{}\n{}{}",
                 topo.name(),
                 p.threads,
                 p.cycles,
+                structure,
                 c.render(),
                 note,
                 seed_note
@@ -565,12 +590,31 @@ mod tests {
     #[test]
     fn memcmp_native_engine_runs_green_threads() {
         // Writes BENCH_mem_native.json into the cwd, like the adaptcmp
-        // smoke artifact.
+        // smoke artifact. The default structure axis reports both the
+        // loose-thread and the bubble-structured shape per policy.
         let cmd = "memcmp --machine numa-2x2 --scheds memaware,afs --engine native --smoke";
         let out = run(&argv(cmd)).unwrap();
         assert!(out.contains("native"), "{out}");
         assert!(out.contains("memaware"), "{out}");
+        assert!(out.contains("Simple"), "{out}");
+        assert!(out.contains("Bubbles"), "{out}");
         assert!(out.contains("BENCH_mem_native.json"), "{out}");
+        // The axis is selectable, and garbage is rejected.
+        let one =
+            "memcmp --machine numa-2x2 --scheds afs --engine native --structure bubbles --smoke";
+        let out = run(&argv(one)).unwrap();
+        assert!(out.contains("Bubbles"), "{out}");
+        assert!(!out.contains("Simple"), "{out}");
+        let err = run(&argv(
+            "memcmp --machine numa-2x2 --engine native --structure warp --smoke",
+        ))
+        .unwrap_err();
+        assert!(err.to_string().contains("unknown structure"), "{err}");
+        // The axis is native-only: the sim engine rejects it loudly
+        // instead of silently ignoring it.
+        let err = run(&argv("memcmp --machine numa-2x2 --structure bubbles --smoke"))
+            .unwrap_err();
+        assert!(err.to_string().contains("native only"), "{err}");
     }
 
     #[test]

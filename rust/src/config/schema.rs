@@ -161,6 +161,9 @@ pub struct SchedConfig {
     pub burst: BurstLevel,
     pub idle_regen: bool,
     pub thread_steal: bool,
+    /// Timeslice in engine units (`sched.timeslice`, 0 = none):
+    /// bubble preventive regeneration, gang rotation, and — when set —
+    /// moldable-gang rotation when demand exceeds the machine.
     pub timeslice: Option<u64>,
     pub regen_hysteresis: u64,
     /// `adaptive`: consecutive empty picks before a CPU widens its

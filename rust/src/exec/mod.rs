@@ -16,6 +16,21 @@
 //! `repro memcmp --engine native` comparable with the sim numbers and
 //! lets the conformance suite enforce the same memory invariants on
 //! either engine.
+//!
+//! **Native tick path**: every fiber resume is one scheduling segment;
+//! the worker charges its wall nanoseconds to the policy through
+//! [`crate::sched::Scheduler::tick`] and honours a `true` return with a
+//! preempt-flavoured stop — so strict-gang rotation, moldable
+//! timeslice rotation and bubble preventive regeneration run on real
+//! OS workers exactly as on the simulator (`metrics.preemptions` is
+//! observable on both engines; see `worker.rs` for the protocol).
+//!
+//! **Structure axis**: applications present themselves either as loose
+//! green threads or as topology-mirroring bubbles — the apps' native
+//! builders (`conduction`/`advection`/`amr` `build_native`) take the
+//! same [`crate::apps::StructureMode`] as their simulator builders, so
+//! `--engine native` reproduces the paper's structured-vs-flat
+//! comparison.
 
 pub mod fiber;
 mod worker;

@@ -8,6 +8,29 @@
 //! footprints, next-touch migration and the local/remote access
 //! metrics live on real OS workers exactly as on the simulator — both
 //! engines share [`System::touch_region`].
+//!
+//! **Tick protocol** (mirrors [`crate::sim`]'s `segment_end`): every
+//! `resume()` of a fiber is one scheduling segment. The worker measures
+//! the segment's wall nanoseconds and charges them to the scheduler
+//! through [`Scheduler::tick`] before resolving the fiber's yield
+//! action. A `true` return turns a voluntary yield into a
+//! [`StopReason::Preempt`] — that is how strict-gang rotation, moldable
+//! timeslice rotation and the bubble scheduler's preventive
+//! regeneration run on real OS workers. Barrier and exit actions keep
+//! their own stop reasons (unlike the simulator, a fiber that yielded
+//! *at* a barrier has already passed the arrival point, so the barrier
+//! must be processed; the tick's side effects — gang rotation etc. —
+//! still happen).
+//!
+//! **Idle protocol**: a worker whose pick came up empty parks on the
+//! [`Park`] condvar against the wake generation `seq`. Plain idleness
+//! (nothing queued anywhere) waits for an enqueue notification; queued
+//! but *unpickable* work (a policy refused this CPU, e.g. a parked
+//! moldable gang on another component) takes a capped exponential
+//! backoff on the same condvar — still woken instantly by any enqueue,
+//! counted in `metrics.exec_backoffs` so tests can bound it. All
+//! termination paths bump `seq` and notify under the park lock, so the
+//! remaining timeouts are pure safety backstops, not wake mechanisms.
 
 use std::cell::Cell;
 use std::collections::HashMap;
@@ -53,6 +76,29 @@ struct Park {
     /// internal queue) still prevents the sleep.
     seq: AtomicUsize,
 }
+
+impl Park {
+    /// Wake every parked worker, closing the missed-wakeup race: the
+    /// generation bump happens before the locked notify, so a worker
+    /// either sees the new generation during its (locked) pre-sleep
+    /// check or is already in `wait` and receives the notification.
+    /// Used by the termination paths, which the enqueue hook does not
+    /// cover.
+    fn wake_all(&self) {
+        self.seq.fetch_add(1, Ordering::SeqCst);
+        let _guard = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+}
+
+/// Backstop timeout for a plainly idle worker. All wake paths notify
+/// under the park lock, so this is defense-in-depth against an unknown
+/// missed-wakeup bug, not part of the protocol (it used to be 2 ms
+/// *because* exit-path notifies fired unlocked and could be missed).
+const PARK_BACKSTOP: std::time::Duration = std::time::Duration::from_millis(10);
+/// Exponential backoff window for queued-but-unpickable work.
+const BACKOFF_MIN: std::time::Duration = std::time::Duration::from_micros(20);
+const BACKOFF_MAX: std::time::Duration = std::time::Duration::from_millis(2);
 
 /// Shared executor state.
 struct Inner {
@@ -237,22 +283,26 @@ fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
     // Fibers resumed on this OS thread attribute their memory touches
     // to this CPU (see GreenApi::touch_region).
     CURRENT_VCPU.with(|c| c.set(Some(cpu)));
+    // Current backoff window for queued-but-unpickable work; grows
+    // exponentially across consecutive refusals, resets on a pick.
+    let mut backoff = BACKOFF_MIN;
     loop {
         if inner.live.load(Ordering::SeqCst) == 0 || inner.stop.load(Ordering::SeqCst) {
-            inner.park.cv.notify_all();
+            inner.park.wake_all();
             return;
         }
         let seq_before = inner.park.seq.load(Ordering::SeqCst);
         let Some(task) = inner.sched.pick(&inner.sys, cpu) else {
             crate::metrics::Metrics::inc(&inner.sys.metrics.idle_picks);
             inner.sys.rates.on_idle(&inner.sys.topo, cpu);
-            // Nothing pickable. Park until the enqueue hook notifies
-            // (see Executor::new for the missed-wakeup protocol; the
-            // timeout backstops exit-path notifies, which fire
-            // unlocked) — unless a wake already raced the failed pick
-            // (generation changed), or work is queued that this CPU
-            // cannot take right now (a policy refused the steal), in
-            // which case back off briefly instead of busy-spinning.
+            // Nothing pickable. Park until the enqueue hook (or a
+            // termination path) notifies — see Executor::new for the
+            // missed-wakeup protocol — unless a wake already raced the
+            // failed pick (generation changed). Work that is queued but
+            // not pickable *by this CPU* (a policy refused it, e.g. a
+            // moldable gang owning another component) parks too, on a
+            // capped exponential backoff: any enqueue still wakes the
+            // worker instantly, but it no longer busy-polls an OS core.
             let guard = inner.park.lock.lock().unwrap();
             if inner.live.load(Ordering::SeqCst) == 0 {
                 continue; // loop top exits
@@ -264,25 +314,23 @@ fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
             // always sees the other.
             std::sync::atomic::fence(Ordering::SeqCst);
             let raced = inner.park.seq.load(Ordering::SeqCst) != seq_before;
-            if !raced && inner.sys.rq.total_queued() == 0 {
-                let _ = inner
-                    .park
-                    .cv
-                    .wait_timeout(guard, std::time::Duration::from_millis(2))
-                    .unwrap();
-                inner.park.parked.fetch_sub(1, Ordering::SeqCst);
-            } else {
-                inner.park.parked.fetch_sub(1, Ordering::SeqCst);
-                drop(guard);
-                if !raced {
-                    // Queued but unpickable for this CPU: brief backoff.
-                    std::thread::sleep(std::time::Duration::from_micros(200));
-                }
-                // raced: re-pick immediately — the wake may be for work
-                // invisible to sys.rq (gang's internal queue).
+            if !raced {
+                let timeout = if inner.sys.rq.total_queued() == 0 {
+                    PARK_BACKSTOP
+                } else {
+                    crate::metrics::Metrics::inc(&inner.sys.metrics.exec_backoffs);
+                    let t = backoff;
+                    backoff = (backoff * 2).min(BACKOFF_MAX);
+                    t
+                };
+                let _ = inner.park.cv.wait_timeout(guard, timeout).unwrap();
             }
+            // raced: re-pick immediately — the wake may be for work
+            // invisible to sys.rq (gang's internal queue).
+            inner.park.parked.fetch_sub(1, Ordering::SeqCst);
             continue;
         };
+        backoff = BACKOFF_MIN;
         // Take exclusive ownership of the fiber while it runs.
         let mut fiber = {
             let mut fibers = inner.fibers.lock().unwrap();
@@ -296,11 +344,21 @@ fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
                 }
             }
         };
+        let seg_start = Instant::now();
         let action = fiber.resume();
+        // Timeslice accounting, mirroring the simulator's segment_end:
+        // charge the segment's wall nanoseconds to the scheduler after
+        // every resume. A `true` return preempts a voluntary yield;
+        // barrier/exit actions keep their own semantics (the fiber has
+        // already passed its yield point), but the tick's side effects
+        // (gang rotation, bubble regeneration) still happen.
+        let elapsed = (seg_start.elapsed().as_nanos() as u64).max(1);
+        let preempt = inner.sched.tick(&inner.sys, cpu, task, elapsed);
         match action {
             YieldAction::Yield => {
                 inner.fibers.lock().unwrap().insert(task, fiber);
-                inner.sched.stop(&inner.sys, cpu, task, StopReason::Yield);
+                let why = if preempt { StopReason::Preempt } else { StopReason::Yield };
+                inner.sched.stop(&inner.sys, cpu, task, why);
             }
             YieldAction::Barrier(id) => {
                 inner.fibers.lock().unwrap().insert(task, fiber);
@@ -341,8 +399,10 @@ fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
                 inner.sched.stop(&inner.sys, cpu, task, StopReason::Terminate);
                 inner.live.fetch_sub(1, Ordering::SeqCst);
                 // Unpark everyone so workers observe live==0 and exit
-                // (enqueue-driven wakes do not cover termination).
-                inner.park.cv.notify_all();
+                // (enqueue-driven wakes do not cover termination). The
+                // generation bump + locked notify guarantee a worker
+                // about to sleep sees it.
+                inner.park.wake_all();
             }
         }
     }
@@ -488,6 +548,37 @@ mod tests {
         assert_eq!(locals + remotes, 2);
         assert!(sys.mem.conserved(&sys.tasks));
         assert_eq!(sys.mem.dominant_node(t), Some(home0));
+    }
+
+    #[test]
+    fn tick_preempts_voluntary_yields() {
+        // Two loose threads under strict gang scheduling on one CPU:
+        // only a timeslice tick (true return → StopReason::Preempt)
+        // can interleave them before the first finishes, and the
+        // preemption must be observable in the metrics.
+        let sys = Arc::new(System::new(Arc::new(Topology::smp(1))));
+        let sched = crate::sched::factory::make(&crate::config::SchedConfig {
+            kind: crate::config::SchedKind::Gang,
+            timeslice: Some(1), // every segment expires the slice
+            ..Default::default()
+        });
+        let mut ex = Executor::new(sys.clone(), sched);
+        let count = Arc::new(AtomicU64::new(0));
+        for i in 0..2 {
+            let c = count.clone();
+            ex.spawn(format!("t{i}"), move |api| {
+                for _ in 0..5 {
+                    c.fetch_add(1, Ordering::SeqCst);
+                    api.yield_now();
+                }
+            });
+        }
+        ex.run();
+        assert_eq!(count.load(Ordering::SeqCst), 10);
+        assert!(
+            sys.metrics.preemptions.load(Ordering::SeqCst) > 0,
+            "tick must deliver preemptions on the native engine"
+        );
     }
 
     #[test]

@@ -14,6 +14,12 @@
 //! behaviour of the two engines directly comparable; its rows land in
 //! `BENCH_mem_native.json`. Sim runs take an explicit `seed` and are
 //! reproducible run-to-run (pinned by a test).
+//!
+//! The native leg additionally has a **structure axis**
+//! ([`StructureMode`]): every policy runs the workload both as loose
+//! green threads and as topology-mirroring bubbles
+//! (`--structure simple|bubbles|both`), reproducing the paper's
+//! structured-vs-flat comparison on real OS workers.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -33,12 +39,19 @@ use crate::util::fmt::Table;
 #[derive(Debug, Clone)]
 pub struct MemRow {
     pub sched: String,
+    /// Structure the application presented itself with
+    /// ([`StructureMode::label`]): loose threads vs topology-mirroring
+    /// bubbles — the paper's structured-vs-flat axis.
+    pub structure: String,
     pub makespan: u64,
     /// Fraction of memory touches on the local node (higher = better).
     pub local_ratio: f64,
     pub steals: u64,
     pub mem_migrations: u64,
     pub migrated_bytes: u64,
+    /// Timeslice preemptions delivered during the run (proof that
+    /// `Scheduler::tick` is live on the engine that produced the row).
+    pub preemptions: u64,
 }
 
 /// The comparison result.
@@ -49,29 +62,42 @@ pub struct MemCmp {
 }
 
 impl MemCmp {
-    /// Row accessor by policy name (panics on unknown name — harness
-    /// misuse).
+    /// Row accessor by policy name — first matching row in structure
+    /// order (panics on unknown name — harness misuse).
     pub fn get(&self, sched: &str) -> &MemRow {
         self.rows.iter().find(|r| r.sched == sched).expect("unknown policy row")
+    }
+
+    /// Row accessor by (policy, structure) pair — the native harness
+    /// reports one row per point on the structure axis.
+    pub fn get_structured(&self, sched: &str, structure: StructureMode) -> &MemRow {
+        self.rows
+            .iter()
+            .find(|r| r.sched == sched && r.structure == structure.label())
+            .expect("unknown (policy, structure) row")
     }
 
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
             "policy",
+            "structure",
             "makespan (Mcycles)",
             "local ratio",
             "steals",
             "mem migrations",
             "migrated MiB",
+            "preemptions",
         ]);
         for r in &self.rows {
             t.row(&[
                 r.sched.clone(),
+                r.structure.clone(),
                 format!("{:.2}", r.makespan as f64 / 1e6),
                 format!("{:.3}", r.local_ratio),
                 r.steals.to_string(),
                 r.mem_migrations.to_string(),
                 format!("{:.1}", r.migrated_bytes as f64 / (1u64 << 20) as f64),
+                r.preemptions.to_string(),
             ]);
         }
         format!("== {} ==\n{}", self.title, t.render())
@@ -84,8 +110,15 @@ impl MemCmp {
             .iter()
             .map(|r| {
                 format!(
-                    "{{\"engine\":\"{engine}\",\"policy\":\"{}\",\"makespan\":{},\"local_ratio\":{:.4},\"steals\":{},\"mem_migrations\":{},\"migrated_bytes\":{}}}",
-                    r.sched, r.makespan, r.local_ratio, r.steals, r.mem_migrations, r.migrated_bytes
+                    "{{\"engine\":\"{engine}\",\"policy\":\"{}\",\"structure\":\"{}\",\"makespan\":{},\"local_ratio\":{:.4},\"steals\":{},\"mem_migrations\":{},\"migrated_bytes\":{},\"preemptions\":{}}}",
+                    r.sched,
+                    r.structure,
+                    r.makespan,
+                    r.local_ratio,
+                    r.steals,
+                    r.mem_migrations,
+                    r.migrated_bytes,
+                    r.preemptions
                 )
             })
             .collect()
@@ -117,49 +150,61 @@ pub fn run(topo: &Topology, p: &HeatParams, kinds: &[SchedKind], seed: u64) -> M
         let m = &e.sys.metrics;
         rows.push(MemRow {
             sched: kind.label().to_string(),
+            structure: mode.label().to_string(),
             makespan: rep.total_time,
             local_ratio: m.local_ratio(),
             steals: m.steals.load(Ordering::Relaxed),
             mem_migrations: m.mem_migrations.load(Ordering::Relaxed),
             migrated_bytes: m.migrated_bytes.load(Ordering::Relaxed),
+            preemptions: m.preemptions.load(Ordering::Relaxed),
         });
     }
     MemCmp { title: format!("local vs remote accesses (conduction, {})", topo.name()), rows }
 }
 
-/// Run the conduction-shaped green-thread workload under each policy
-/// on the **native executor** (real OS workers, fibers recording their
-/// region touches through `GreenApi`) and collect the same memory
-/// behaviour the sim harness reports. `makespan` is wall nanoseconds
-/// here; `touches` is the number of touch+yield points per barrier
-/// cycle and `policy` homes the stripe regions (first-touch exercises
-/// native homing; round-robin pre-homes so placement quality alone is
-/// measured). All policies run the loose-thread shape — the native
-/// builder has no bubble variant yet.
+/// Run the conduction-shaped green-thread workload under each policy ×
+/// structure mode on the **native executor** (real OS workers, fibers
+/// recording their region touches through `GreenApi`) and collect the
+/// same memory behaviour the sim harness reports. `makespan` is wall
+/// nanoseconds here; `touches` is the number of touch+yield points per
+/// barrier cycle and `policy` homes the stripe regions (first-touch
+/// exercises native homing; round-robin pre-homes so placement quality
+/// alone is measured). `modes` is the structure axis: `Simple` spawns
+/// loose green threads, `Bubbles` builds one bubble per NUMA node
+/// through `Marcel::bubbles_from_topology` — the paper's
+/// structured-vs-flat comparison on real OS workers.
 pub fn run_native(
     topo: &Topology,
     p: &HeatParams,
     kinds: &[SchedKind],
     touches: usize,
     policy: AllocPolicy,
+    modes: &[StructureMode],
 ) -> MemCmp {
-    let mut rows = Vec::with_capacity(kinds.len());
+    let mut rows = Vec::with_capacity(kinds.len() * modes.len());
     for &kind in kinds {
-        let sys = Arc::new(System::new(Arc::new(topo.clone())));
-        let sched = make_default(kind);
-        let mut ex = Executor::new(sys.clone(), sched);
-        conduction::build_native(&mut ex, p, policy, touches);
-        let rep = ex.run();
-        debug_assert!(sys.mem.conserved(&sys.tasks), "footprint leak under {kind:?}");
-        let m = &sys.metrics;
-        rows.push(MemRow {
-            sched: kind.label().to_string(),
-            makespan: rep.elapsed.as_nanos() as u64,
-            local_ratio: m.local_ratio(),
-            steals: m.steals.load(Ordering::Relaxed),
-            mem_migrations: m.mem_migrations.load(Ordering::Relaxed),
-            migrated_bytes: m.migrated_bytes.load(Ordering::Relaxed),
-        });
+        for &mode in modes {
+            let sys = Arc::new(System::new(Arc::new(topo.clone())));
+            let sched = make_default(kind);
+            let mut ex = Executor::new(sys.clone(), sched);
+            conduction::build_native(&mut ex, mode, p, policy, touches);
+            let rep = ex.run();
+            debug_assert!(
+                sys.mem.conserved(&sys.tasks),
+                "footprint leak under {kind:?}/{mode:?}"
+            );
+            let m = &sys.metrics;
+            rows.push(MemRow {
+                sched: kind.label().to_string(),
+                structure: mode.label().to_string(),
+                makespan: rep.elapsed.as_nanos() as u64,
+                local_ratio: m.local_ratio(),
+                steals: m.steals.load(Ordering::Relaxed),
+                mem_migrations: m.mem_migrations.load(Ordering::Relaxed),
+                migrated_bytes: m.migrated_bytes.load(Ordering::Relaxed),
+                preemptions: m.preemptions.load(Ordering::Relaxed),
+            });
+        }
     }
     MemCmp {
         title: format!("local vs remote accesses (native conduction, {})", topo.name()),
@@ -243,6 +288,7 @@ mod tests {
             &[SchedKind::Memaware, SchedKind::Afs],
             2,
             AllocPolicy::FirstTouch,
+            &[StructureMode::Simple],
         );
         for row in &c.rows {
             assert!(row.makespan > 0, "{}", row.sched);
@@ -252,6 +298,30 @@ mod tests {
                 row.sched,
                 row.local_ratio
             );
+        }
+    }
+
+    #[test]
+    fn native_structure_axis_reports_one_row_per_mode() {
+        // Every (policy, structure) point gets its own row, reachable
+        // through get_structured, and both structures complete.
+        let topo = Topology::numa(2, 2);
+        let p = HeatParams { threads: 6, cycles: 3, work: 0, mem_fraction: 0.0 };
+        let kinds = [SchedKind::Bubble, SchedKind::Ss];
+        let modes = [StructureMode::Simple, StructureMode::Bubbles];
+        let c = run_native(&topo, &p, &kinds, 2, AllocPolicy::FirstTouch, &modes);
+        assert_eq!(c.rows.len(), kinds.len() * modes.len());
+        for kind in &kinds {
+            for &mode in &modes {
+                let row = c.get_structured(kind.label(), mode);
+                assert!(row.makespan > 0, "{} {:?}", kind.label(), mode);
+                assert!(row.local_ratio > 0.0, "{} {:?}", kind.label(), mode);
+            }
+        }
+        let out = c.render();
+        assert!(out.contains("Simple") && out.contains("Bubbles"), "{out}");
+        for j in c.json_rows("native") {
+            assert!(j.contains("\"structure\""), "{j}");
         }
     }
 }

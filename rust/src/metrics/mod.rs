@@ -64,6 +64,13 @@ pub struct Metrics {
     /// steal tie-break (an equally distant victim on a lower-pressure
     /// node won) both count here.
     pub pressure_redirects: AtomicU64,
+    /// Native executor: backoff waits taken by a worker that saw
+    /// queued work it could not pick (the policy refused this CPU —
+    /// e.g. a moldable gang owning another component). Each wait parks
+    /// on the executor condvar under a capped exponential window, so a
+    /// busy-polling regression shows up as a blow-up in this counter
+    /// (tests bound it).
+    pub exec_backoffs: AtomicU64,
 }
 
 impl Metrics {
@@ -142,6 +149,7 @@ impl Metrics {
         t.row(&["utilisation".into(), format!("{:.3}", self.utilisation())]);
         t.row(&["search_retries".into(), g(&self.search_retries)]);
         t.row(&["pressure_redirects".into(), g(&self.pressure_redirects)]);
+        t.row(&["exec_backoffs".into(), g(&self.exec_backoffs)]);
         t.render()
     }
 }

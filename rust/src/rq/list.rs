@@ -2,11 +2,11 @@
 //!
 //! The hot-path layout is a **fixed-size priority-bucket array with an
 //! occupancy bitmask**: `pop_max` and `max_prio` are constant-time word
-//! scans (find-highest-set-bit over two `u64`s) instead of the previous
+//! scans (find-highest-set-bit over two `u64`s) instead of a
 //! `BTreeMap` walk, and `remove` indexes the task's bucket directly
-//! instead of scanning every priority class. The previous BTreeMap
-//! layout is kept in [`super::BtreeRunList`] as the comparison baseline
-//! for `benches/rq_scaling.rs`.
+//! instead of scanning every priority class. (The legacy `BtreeRunList`
+//! comparison baseline was dropped in PR 5 once `BENCH_rq.json` had a
+//! few PRs of history showing the bucket layout winning.)
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicI32, AtomicUsize, Ordering};

@@ -17,10 +17,8 @@
 //! (e.g. an idle CPU bails out of a steal attempt in O(1) when the
 //! whole machine is empty).
 
-mod btree;
 mod list;
 
-pub use btree::BtreeRunList;
 pub use list::{RunList, PRIO_CEIL, PRIO_FLOOR};
 
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -41,54 +41,59 @@ pub struct GangScheduler {
     st: Mutex<GangState>,
 }
 
+/// Release the gang's threads onto the root list. Nested bubbles (a
+/// topology-mirroring hierarchy woken as one gang) are flattened: the
+/// sub-bubbles stay parked, their threads join the gang — "gangs hold
+/// a fixed number of threads".
+fn release_gang(sys: &System, gang: TaskId) {
+    if sys.tasks.is_bubble(gang) {
+        let contents = sys.tasks.with(gang, |t| t.kind_contents_snapshot());
+        for c in contents {
+            if sys.tasks.is_bubble(c) {
+                sys.tasks.with(c, |t| t.state = TaskState::Blocked);
+                release_gang(sys, c);
+                continue;
+            }
+            let state = sys.tasks.state(c);
+            if state == TaskState::InBubble || state.is_ready() {
+                if let Some(l) = state.ready_list() {
+                    sys.rq.remove(l, c, sys.tasks.prio(c));
+                }
+                ops::enqueue(sys, c, sys.topo.root());
+            }
+        }
+    } else {
+        ops::enqueue(sys, gang, sys.topo.root());
+    }
+}
+
+/// Pull the gang's ready threads off the lists (rotation), nested
+/// bubbles flattened.
+fn pull_ready(sys: &System, gang: TaskId) {
+    if !sys.tasks.is_bubble(gang) {
+        return;
+    }
+    let contents = sys.tasks.with(gang, |t| t.kind_contents_snapshot());
+    for c in contents {
+        if sys.tasks.is_bubble(c) {
+            pull_ready(sys, c);
+        } else if let Some(l) = sys.tasks.state(c).ready_list() {
+            if sys.rq.remove(l, c, sys.tasks.prio(c)) {
+                sys.tasks.set_state(c, TaskState::InBubble);
+            }
+        }
+    }
+}
+
 impl GangScheduler {
     /// `slice` = engine time a gang owns the machine before rotating.
     pub fn new(slice: u64) -> GangScheduler {
         GangScheduler { slice, st: Mutex::new(GangState::default()) }
     }
 
-    /// Release the gang's threads onto the root list.
-    fn activate(&self, sys: &System, gang: TaskId) {
-        if sys.tasks.is_bubble(gang) {
-            let contents = sys.tasks.with(gang, |t| t.kind_contents_snapshot());
-            for c in contents {
-                let state = sys.tasks.state(c);
-                if state == TaskState::InBubble || state.is_ready() {
-                    if let Some(l) = state.ready_list() {
-                        sys.rq.remove(l, c, sys.tasks.prio(c));
-                    }
-                    ops::enqueue(sys, c, sys.topo.root());
-                }
-            }
-        } else {
-            ops::enqueue(sys, gang, sys.topo.root());
-        }
-    }
-
-    /// True if the gang still has unfinished members.
-    fn gang_live(&self, sys: &System, gang: TaskId) -> bool {
-        if sys.tasks.is_bubble(gang) {
-            sys.tasks
-                .with(gang, |t| t.kind_contents_snapshot())
-                .into_iter()
-                .any(|c| sys.tasks.state(c) != TaskState::Terminated)
-        } else {
-            sys.tasks.state(gang) != TaskState::Terminated
-        }
-    }
-
-    /// Pull the active gang's ready threads off the lists (rotation).
+    /// Pull the active gang off the lists (rotation).
     fn deactivate(&self, sys: &System, gang: TaskId) {
-        if sys.tasks.is_bubble(gang) {
-            let contents = sys.tasks.with(gang, |t| t.kind_contents_snapshot());
-            for c in contents {
-                if let Some(l) = sys.tasks.state(c).ready_list() {
-                    if sys.rq.remove(l, c, sys.tasks.prio(c)) {
-                        sys.tasks.set_state(c, TaskState::InBubble);
-                    }
-                }
-            }
-        }
+        pull_ready(sys, gang);
         sys.trace.emit(sys.now(), Event::Regen { bubble: gang, why: RegenWhy::Timeslice });
     }
 
@@ -96,7 +101,7 @@ impl GangScheduler {
     fn ensure_active(&self, sys: &System, st: &mut GangState) {
         loop {
             match st.active {
-                Some(g) if self.gang_live(sys, g) => return,
+                Some(g) if ops::gang_live(sys, g) => return,
                 Some(g) => {
                     // Gang finished: drop it.
                     let _ = g;
@@ -105,12 +110,12 @@ impl GangScheduler {
                 }
                 None => match st.queue.pop_front() {
                     Some(g) => {
-                        if !self.gang_live(sys, g) {
+                        if !ops::gang_live(sys, g) {
                             continue;
                         }
                         st.active = Some(g);
                         st.used = 0;
-                        self.activate(sys, g);
+                        release_gang(sys, g);
                         return;
                     }
                     None => return,
@@ -131,8 +136,17 @@ impl Scheduler for GangScheduler {
         let is_member = sys.tasks.parent(task).is_some();
         if is_member && state == TaskState::Blocked {
             // An unblocked member of some gang: if its gang is active,
-            // rejoin the root list, else wait inside the gang.
-            let gang = sys.tasks.parent(task).unwrap();
+            // rejoin the root list, else wait inside the gang. The
+            // gang is the *outermost* bubble (nested hierarchies are
+            // flattened into one gang). A woken *sub-bubble* releases
+            // its threads instead of being enqueued itself.
+            let gang = ops::root_bubble(sys, task);
+            if sys.tasks.is_bubble(task) {
+                if st.active == Some(gang) {
+                    release_gang(sys, task);
+                }
+                return;
+            }
             if st.active == Some(gang) {
                 ops::enqueue(sys, task, sys.topo.root());
             } else {
@@ -162,9 +176,22 @@ impl Scheduler for GangScheduler {
         ops::note_stop(sys, cpu);
         match why {
             StopReason::Yield | StopReason::Preempt => {
-                sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Yield });
-                let st = self.st.lock().unwrap();
-                let gang_of = sys.tasks.parent(task).unwrap_or(task);
+                let stop_why = if why == StopReason::Preempt {
+                    // The engine honoured a rotation tick: count it so
+                    // `preemptions` is observable under gang scheduling
+                    // on both engines, like every other timeslice user.
+                    Metrics::inc(&sys.metrics.preemptions);
+                    StopWhy::Preempt
+                } else {
+                    StopWhy::Yield
+                };
+                sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: stop_why });
+                // One guard for the whole transition: dropping and
+                // re-locking between the Blocked transition and the
+                // requeue would let a concurrent pick activate the
+                // task and this path queue it a second time.
+                let mut st = self.st.lock().unwrap();
+                let gang_of = ops::root_bubble(sys, task);
                 if st.active == Some(gang_of) {
                     ops::enqueue(sys, task, sys.topo.root());
                 } else {
@@ -177,10 +204,11 @@ impl Scheduler for GangScheduler {
                             TaskState::Blocked
                         },
                     );
-                    if sys.tasks.parent(task).is_none() {
-                        // Loose thread: it IS its own gang; requeue it.
-                        drop(st);
-                        let mut st = self.st.lock().unwrap();
+                    if sys.tasks.parent(task).is_none() && !st.queue.contains(&task) {
+                        // Loose thread: it IS its own gang; requeue it
+                        // — unless the rotation tick already did (a
+                        // preempted singleton is pushed by tick before
+                        // its stop arrives).
                         st.queue.push_back(task);
                     }
                 }
@@ -199,7 +227,7 @@ impl Scheduler for GangScheduler {
     fn tick(&self, sys: &System, _cpu: CpuId, _task: TaskId, elapsed: u64) -> bool {
         let mut st = self.st.lock().unwrap();
         st.used += elapsed;
-        if st.used >= self.slice && st.queue.iter().any(|&g| self.gang_live(sys, g)) {
+        if st.used >= self.slice && st.queue.iter().any(|&g| ops::gang_live(sys, g)) {
             // Rotate: collect the active gang and requeue it.
             if let Some(g) = st.active.take() {
                 self.deactivate(sys, g);
@@ -289,6 +317,39 @@ mod tests {
         let y = s.pick(&sys, CpuId(0)).unwrap();
         assert_eq!(y, t2[0]);
         let _ = (g1, g2);
+    }
+
+    #[test]
+    fn nested_bubbles_flatten_into_one_gang() {
+        // A topology-mirroring hierarchy (root bubble holding per-node
+        // bubbles) woken under gang scheduling is one gang: every
+        // thread runs together, the parked sub-bubbles never reach a
+        // runqueue, and the gang dies when its threads do.
+        let sys = system(Topology::numa(2, 2));
+        let s = GangScheduler::new(1_000);
+        let m = Marcel::with_system(&sys);
+        let root = m.bubble_init();
+        let mut threads = Vec::new();
+        for g in 0..2 {
+            let b = m.bubble_init();
+            for k in 0..2 {
+                let t = m.create_dontsched(format!("g{g}k{k}"));
+                m.bubble_inserttask(b, t);
+                threads.push(t);
+            }
+            m.bubble_insertbubble(root, b);
+        }
+        s.wake(&sys, root);
+        let picked: Vec<TaskId> = (0..4).filter_map(|c| s.pick(&sys, CpuId(c))).collect();
+        assert_eq!(picked.len(), 4, "all nested threads join the gang: {picked:?}");
+        for &t in &picked {
+            assert!(threads.contains(&t), "picked a non-thread task {t}");
+            s.stop(&sys, CpuId(0), t, StopReason::Terminate);
+        }
+        assert!(
+            s.pick(&sys, CpuId(0)).is_none(),
+            "parked sub-bubbles must not keep the gang alive"
+        );
     }
 
     #[test]

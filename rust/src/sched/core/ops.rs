@@ -54,6 +54,38 @@ pub fn note_stop(sys: &System, cpu: CpuId) {
     sys.stats.on_stop(&sys.topo, cpu);
 }
 
+/// The outermost bubble containing `task` (itself when loose) — the
+/// unit gang-style policies (`gang`, `moldable-gang`) schedule.
+pub fn root_bubble(sys: &System, task: TaskId) -> TaskId {
+    let mut cur = task;
+    while let Some(p) = sys.tasks.parent(cur) {
+        cur = p;
+    }
+    cur
+}
+
+/// Collect the *thread* members of a task subtree into `out`, nested
+/// bubbles flattened (a loose thread is its own single member).
+pub fn thread_members(sys: &System, task: TaskId, out: &mut Vec<TaskId>) {
+    if sys.tasks.is_bubble(task) {
+        let contents = sys.tasks.with(task, |t| t.kind_contents_snapshot());
+        for c in contents {
+            thread_members(sys, c, out);
+        }
+    } else {
+        out.push(task);
+    }
+}
+
+/// True while any thread member of the gang has not terminated
+/// (nested bubbles flattened — a parked sub-bubble itself never
+/// terminates and must not keep its gang alive).
+pub fn gang_live(sys: &System, gang: TaskId) -> bool {
+    let mut ms = Vec::new();
+    thread_members(sys, gang, &mut ms);
+    ms.iter().any(|&m| sys.tasks.state(m) != TaskState::Terminated)
+}
+
 /// Flatten-wake: threads go through `push`; bubbles recursively release
 /// their contents (opportunist schedulers ignore structure — that is
 /// precisely the paper's criticism of them).

@@ -139,10 +139,11 @@ static REGISTRY: [PolicyInfo; 13] = [
         name: "moldable-gang",
         aliases: &["moldable", "mgang"],
         summary: "moldable gangs: shrink a gang's CPU set instead of idling processors \
-                  (knob: sched.resize_hysteresis)",
+                  (knobs: sched.resize_hysteresis, sched.timeslice for rotation)",
         build: |cfg| {
             Arc::new(MoldableGangScheduler::new(MoldableConfig {
                 resize_hysteresis: cfg.resize_hysteresis,
+                timeslice: cfg.timeslice,
             }))
         },
     },

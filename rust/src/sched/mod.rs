@@ -57,6 +57,10 @@ pub trait Scheduler: Send + Sync {
 
     /// Timeslice accounting: `elapsed` engine-time has passed on `cpu`
     /// running `task`. Returns true if the scheduler wants to preempt.
+    /// Both engines call it once per scheduling segment — the simulator
+    /// with the segment's simulated cycles, the native executor with
+    /// the fiber resume's wall nanoseconds — and honour a `true` return
+    /// with a [`StopReason::Preempt`] stop.
     fn tick(&self, _sys: &System, _cpu: CpuId, _task: TaskId, _elapsed: u64) -> bool {
         false
     }

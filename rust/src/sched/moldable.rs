@@ -49,17 +49,22 @@ use crate::task::{TaskId, TaskState};
 use crate::topology::{CpuId, LevelId, Topology};
 use crate::trace::{Event, RegenWhy};
 
-/// Tunables (config key `sched.resize_hysteresis`).
+/// Tunables (config keys `sched.resize_hysteresis`, `sched.timeslice`).
 #[derive(Debug, Clone)]
 pub struct MoldableConfig {
     /// Consecutive resize evaluations that must agree before a
     /// shrink/expand commits (damps resize thrash under bursty load).
     pub resize_hysteresis: u32,
+    /// Engine time a gang may own its component while another gang
+    /// waits with no free component, before [`Scheduler::tick`] rotates
+    /// it off the machine (the ROADMAP "timeslice rotation when demand
+    /// exceeds the machine"). `None` keeps pure space-sharing.
+    pub timeslice: Option<u64>,
 }
 
 impl Default for MoldableConfig {
     fn default() -> Self {
-        MoldableConfig { resize_hysteresis: 4 }
+        MoldableConfig { resize_hysteresis: 4, timeslice: None }
     }
 }
 
@@ -70,6 +75,8 @@ struct GangSlot {
     comp: LevelId,
     shrink_streak: u32,
     expand_streak: u32,
+    /// Engine time consumed since placement (timeslice rotation).
+    used: u64,
 }
 
 #[derive(Debug, Default)]
@@ -97,28 +104,6 @@ fn overlaps(topo: &Topology, a: LevelId, b: LevelId) -> bool {
     na.cpu_first < nb.cpu_first + nb.cpu_count && nb.cpu_first < na.cpu_first + na.cpu_count
 }
 
-/// The top-level gang a task belongs to (itself when loose).
-fn root_gang(sys: &System, task: TaskId) -> TaskId {
-    let mut cur = task;
-    while let Some(p) = sys.tasks.parent(cur) {
-        cur = p;
-    }
-    cur
-}
-
-/// All thread members of a gang, nested bubbles flattened (a loose
-/// thread is its own single member).
-fn thread_members(sys: &System, gang: TaskId, out: &mut Vec<TaskId>) {
-    if sys.tasks.is_bubble(gang) {
-        let contents = sys.tasks.with(gang, |t| t.kind_contents_snapshot());
-        for c in contents {
-            thread_members(sys, c, out);
-        }
-    } else {
-        out.push(gang);
-    }
-}
-
 /// Members (of `members(sys, gang)`) that want a CPU now or will once
 /// activated (not blocked, not finished).
 fn demand_of(sys: &System, ms: &[TaskId]) -> usize {
@@ -139,15 +124,8 @@ fn demand_of(sys: &System, ms: &[TaskId]) -> usize {
 /// the list across demand / shrink-target / migration passes).
 fn members(sys: &System, gang: TaskId) -> Vec<TaskId> {
     let mut ms = Vec::new();
-    thread_members(sys, gang, &mut ms);
+    ops::thread_members(sys, gang, &mut ms);
     ms
-}
-
-/// True while any member has not terminated.
-fn gang_live(sys: &System, gang: TaskId) -> bool {
-    let mut ms = Vec::new();
-    thread_members(sys, gang, &mut ms);
-    ms.iter().any(|&m| sys.tasks.state(m) != TaskState::Terminated)
 }
 
 impl MoldableGangScheduler {
@@ -279,7 +257,7 @@ impl MoldableGangScheduler {
             sys.tasks.with(gang, |t| t.state = TaskState::Blocked);
         }
         let mut ms = Vec::new();
-        thread_members(sys, gang, &mut ms);
+        ops::thread_members(sys, gang, &mut ms);
         for m in ms {
             // Park intermediate bubbles encountered on the way.
             if let Some(p) = sys.tasks.parent(m) {
@@ -308,7 +286,7 @@ impl MoldableGangScheduler {
         loop {
             // Drop finished gangs from the head of the queue.
             while let Some(&g) = st.queue.front() {
-                if gang_live(sys, g) {
+                if ops::gang_live(sys, g) {
                     break;
                 }
                 st.queue.pop_front();
@@ -316,7 +294,13 @@ impl MoldableGangScheduler {
             let Some(&g) = st.queue.front() else { return };
             let Some(comp) = self.find_free(sys, st) else { return };
             st.queue.pop_front();
-            st.active.push(GangSlot { gang: g, comp, shrink_streak: 0, expand_streak: 0 });
+            st.active.push(GangSlot {
+                gang: g,
+                comp,
+                shrink_streak: 0,
+                expand_streak: 0,
+                used: 0,
+            });
             self.activate(sys, g, comp);
         }
     }
@@ -383,7 +367,7 @@ impl Scheduler for MoldableGangScheduler {
             // A member of some gang woke (barrier release, join, …).
             // Only a genuinely blocked member needs action: a spurious
             // wake of a Ready/Running member must not double-queue it.
-            let gang = root_gang(sys, task);
+            let gang = ops::root_bubble(sys, task);
             if sys.tasks.state(task) == TaskState::Blocked {
                 if let Some(slot) = st.active.iter().find(|s| s.gang == gang) {
                     ops::enqueue(sys, task, slot.comp);
@@ -440,7 +424,7 @@ impl Scheduler for MoldableGangScheduler {
         if demand_of(sys, &ms) == 0 {
             // Nothing in this gang can run: give the CPUs back.
             st.active.swap_remove(i);
-            if gang_live(sys, gang) {
+            if ops::gang_live(sys, gang) {
                 st.parked.push(gang);
                 sys.trace.emit(sys.now(), Event::Regen { bubble: gang, why: RegenWhy::Idle });
             }
@@ -460,7 +444,7 @@ impl Scheduler for MoldableGangScheduler {
 
     fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
         ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
-            let gang = root_gang(sys, t);
+            let gang = ops::root_bubble(sys, t);
             let mut st = self.st.lock().unwrap();
             if let Some(slot) = st.active.iter().find(|s| s.gang == gang) {
                 ops::enqueue(sys, t, slot.comp);
@@ -477,10 +461,10 @@ impl Scheduler for MoldableGangScheduler {
             }
         });
         if why == StopReason::Terminate {
-            let gang = root_gang(sys, task);
+            let gang = ops::root_bubble(sys, task);
             let mut st = self.st.lock().unwrap();
             if let Some(i) = st.active.iter().position(|s| s.gang == gang) {
-                if !gang_live(sys, gang) {
+                if !ops::gang_live(sys, gang) {
                     // The whole gang finished: free its component.
                     st.active.swap_remove(i);
                     self.place_waiting(sys, &mut st);
@@ -488,6 +472,46 @@ impl Scheduler for MoldableGangScheduler {
                 }
             }
         }
+    }
+
+    fn tick(&self, sys: &System, _cpu: CpuId, task: TaskId, elapsed: u64) -> bool {
+        // Timeslice rotation when demand exceeds the machine: space
+        // sharing (shrink/park) is always tried first, so rotation only
+        // fires when a live gang is waiting with no free component.
+        let Some(slice) = self.cfg.timeslice else { return false };
+        let gang = ops::root_bubble(sys, task);
+        let mut st = self.st.lock().unwrap();
+        let Some(i) = st.active.iter().position(|s| s.gang == gang) else {
+            return false;
+        };
+        st.active[i].used += elapsed;
+        if st.active[i].used < slice || !st.queue.iter().any(|&g| ops::gang_live(sys, g)) {
+            return false;
+        }
+        // Rotate: free the component, pull queued members back inside
+        // the gang (running members fall back in on their next stop),
+        // requeue the gang and hand the space to the waiters.
+        let slot = st.active.swap_remove(i);
+        let ms = members(sys, gang);
+        for &m in &ms {
+            if let Some(l) = sys.tasks.state(m).ready_list() {
+                if sys.rq.remove(l, m, sys.tasks.prio(m)) {
+                    sys.tasks.set_state(
+                        m,
+                        if sys.tasks.parent(m).is_some() {
+                            TaskState::InBubble
+                        } else {
+                            TaskState::Blocked
+                        },
+                    );
+                }
+            }
+        }
+        st.queue.push_back(slot.gang);
+        Metrics::inc(&sys.metrics.regenerations);
+        sys.trace.emit(sys.now(), Event::Regen { bubble: gang, why: RegenWhy::Timeslice });
+        self.place_waiting(sys, &mut st);
+        true
     }
 }
 
@@ -539,7 +563,10 @@ mod tests {
     #[test]
     fn shrink_frees_cpus_for_the_waiting_gang() {
         let sys = system(Topology::numa(2, 2));
-        let s = MoldableGangScheduler::new(MoldableConfig { resize_hysteresis: 1 });
+        let s = MoldableGangScheduler::new(MoldableConfig {
+            resize_hysteresis: 1,
+            ..Default::default()
+        });
         let m = Marcel::with_system(&sys);
         let (g1, t1) = gang_of(&m, 2, "a");
         let (g2, t2) = gang_of(&m, 2, "b");
@@ -613,9 +640,43 @@ mod tests {
     }
 
     #[test]
+    fn timeslice_rotates_when_demand_exceeds_the_machine() {
+        // Two full-machine gangs: no shrink can free space, so only
+        // the tick rotation lets them time-share (ROADMAP follow-on).
+        let sys = system(Topology::smp(2));
+        let s = MoldableGangScheduler::new(MoldableConfig {
+            resize_hysteresis: 100,
+            timeslice: Some(100),
+        });
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&m, 2, "a");
+        let (g2, t2) = gang_of(&m, 2, "b");
+        s.wake(&sys, g1);
+        s.wake(&sys, g2);
+        let x = s.pick(&sys, CpuId(0)).unwrap();
+        let y = s.pick(&sys, CpuId(1)).unwrap();
+        assert!(t1.contains(&x) && t1.contains(&y));
+        // Slice expiry with a live waiter rotates gang 1 off the root.
+        assert!(s.tick(&sys, CpuId(0), x, 150), "slice must expire");
+        s.stop(&sys, CpuId(0), x, StopReason::Preempt);
+        s.stop(&sys, CpuId(1), y, StopReason::Preempt);
+        let z = s.pick(&sys, CpuId(0)).expect("gang 2's turn");
+        assert!(t2.contains(&z), "rotation must hand the machine to gang 2");
+        // Gang 1 queued again: the next expiry brings it back.
+        assert!(s.tick(&sys, CpuId(0), z, 150));
+        s.stop(&sys, CpuId(0), z, StopReason::Preempt);
+        let w = s.pick(&sys, CpuId(0)).expect("gang 1 back after rotation");
+        assert!(t1.contains(&w));
+        assert!(sys.metrics.preemptions.load(std::sync::atomic::Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
     fn loose_threads_are_singleton_gangs() {
         let sys = system(Topology::smp(2));
-        let s = MoldableGangScheduler::new(MoldableConfig { resize_hysteresis: 1 });
+        let s = MoldableGangScheduler::new(MoldableConfig {
+            resize_hysteresis: 1,
+            ..Default::default()
+        });
         let a = sys.tasks.new_thread("a", PRIO_THREAD);
         let b = sys.tasks.new_thread("b", PRIO_THREAD);
         s.wake(&sys, a);

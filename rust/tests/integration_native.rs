@@ -127,6 +127,7 @@ fn native_memaware_beats_afs_on_locality() {
     // and heavily oversubscribed so the ordering is robust to OS
     // scheduling noise.
     use bubbles::apps::conduction::HeatParams;
+    use bubbles::apps::StructureMode;
     use bubbles::experiments::memcmp;
     let topo = Topology::numa(4, 4);
     let p = HeatParams { threads: 24, cycles: 8, work: 0, mem_fraction: 0.0 };
@@ -136,6 +137,7 @@ fn native_memaware_beats_afs_on_locality() {
         &[SchedKind::Memaware, SchedKind::Afs],
         4,
         bubbles::mem::AllocPolicy::RoundRobin,
+        &[StructureMode::Simple],
     );
     let ma = c.get("memaware");
     let afs = c.get("afs");
@@ -151,6 +153,87 @@ fn native_memaware_beats_afs_on_locality() {
         "native memaware {:.3} must beat afs {:.3} on locality",
         ma.local_ratio,
         afs.local_ratio
+    );
+}
+
+#[test]
+fn native_bubble_structure_keeps_accesses_at_least_as_local_as_loose_threads() {
+    // ISSUE-5 acceptance: the paper's structured-vs-flat comparison on
+    // the native engine. The same oversubscribed conduction workload
+    // under the bubble scheduler, once as loose green threads and once
+    // grouped into one bubble per NUMA node: the bubble structure must
+    // not lose locality against the flat shape (first-touch homing, so
+    // a thread that stays in its node bubble keeps its data local,
+    // while loose threads get rebalanced memory-blind).
+    use bubbles::apps::conduction::HeatParams;
+    use bubbles::apps::StructureMode;
+    use bubbles::experiments::memcmp;
+    let topo = Topology::numa(4, 4);
+    let p = HeatParams { threads: 24, cycles: 8, work: 0, mem_fraction: 0.0 };
+    let c = memcmp::run_native(
+        &topo,
+        &p,
+        &[SchedKind::Bubble],
+        4,
+        bubbles::mem::AllocPolicy::FirstTouch,
+        &[StructureMode::Simple, StructureMode::Bubbles],
+    );
+    let simple = c.get_structured("bubble", StructureMode::Simple);
+    let bubbles = c.get_structured("bubble", StructureMode::Bubbles);
+    assert!(simple.makespan > 0 && bubbles.makespan > 0);
+    assert!(
+        simple.local_ratio > 0.0 && bubbles.local_ratio > 0.0,
+        "touches must be attributed: simple {:.3}, bubbles {:.3}",
+        simple.local_ratio,
+        bubbles.local_ratio
+    );
+    assert!(
+        bubbles.local_ratio >= simple.local_ratio,
+        "bubble structure {:.3} must not lose locality vs loose threads {:.3}",
+        bubbles.local_ratio,
+        simple.local_ratio
+    );
+}
+
+#[test]
+fn native_backoff_is_bounded_when_work_is_queued_but_unpickable() {
+    // A moldable gang shrinks onto one NUMA node; the other node's
+    // workers then repeatedly see queued work they may not pick. They
+    // must park on the executor condvar under the capped exponential
+    // backoff (counted in exec_backoffs) instead of busy-polling a
+    // fixed 200µs sleep — the metric bounds the idle-path traffic.
+    use bubbles::sched::{MoldableConfig, MoldableGangScheduler};
+    let sys = system(Topology::numa(2, 2));
+    let sched = Arc::new(MoldableGangScheduler::new(MoldableConfig {
+        resize_hysteresis: 1,
+        ..Default::default()
+    }));
+    let m = Marcel::with_system(&sys);
+    let mut ex = Executor::new(sys.clone(), sched.clone());
+    let b = m.bubble_init();
+    let done = Arc::new(AtomicU64::new(0));
+    for k in 0..2 {
+        let t = m.create_dontsched(format!("k{k}"));
+        m.bubble_inserttask(b, t);
+        let d = done.clone();
+        ex.register(t, move |api| {
+            for i in 0..200u64 {
+                for _ in 0..2_000 {
+                    std::hint::black_box(i);
+                }
+                api.yield_now();
+            }
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+    use bubbles::sched::Scheduler;
+    sched.wake(&sys, b);
+    ex.run();
+    assert_eq!(done.load(Ordering::SeqCst), 2, "gang must finish");
+    let backoffs = sys.metrics.exec_backoffs.load(Ordering::SeqCst);
+    assert!(
+        backoffs < 50_000,
+        "busy-polling regression: {backoffs} queued-but-unpickable backoff waits"
     );
 }
 

@@ -87,6 +87,7 @@ fn random_mold_run(rng: &mut Rng) {
     let sys = Arc::new(System::new(Arc::new(topo)));
     let s = MoldableGangScheduler::new(MoldableConfig {
         resize_hysteresis: 1 + rng.range(0, 4) as u32,
+        ..Default::default()
     });
     let m = Marcel::with_system(&sys);
 

@@ -214,17 +214,51 @@ fn starvation_freedom(name: &str, topo: &Topology) {
     }
 }
 
+/// Transparent scheduler wrapper counting `tick` deliveries. The
+/// native executor must charge every segment to the policy through
+/// `Scheduler::tick` (that is what makes gang rotation, moldable
+/// rotation and bubble preventive regeneration live on real OS
+/// workers), so the native leg asserts the count below.
+struct TickProbe {
+    inner: Arc<dyn Scheduler>,
+    ticks: std::sync::atomic::AtomicU64,
+}
+
+impl Scheduler for TickProbe {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+    fn wake(&self, sys: &System, task: TaskId) {
+        self.inner.wake(sys, task)
+    }
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        self.inner.pick(sys, cpu)
+    }
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        self.inner.stop(sys, cpu, task, why)
+    }
+    fn tick(&self, sys: &System, cpu: CpuId, task: TaskId, elapsed: u64) -> bool {
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+        assert!(elapsed > 0, "segments must charge non-zero time");
+        self.inner.tick(sys, cpu, task, elapsed)
+    }
+}
+
 /// Native-engine memory leg: bubble-structured green threads (one
 /// bubble per NUMA node, no inter-gang coupling) whose bodies record
 /// region touches through `GreenApi`; afterwards the run must satisfy
 /// the same invariants [`assert_consistent`] enforces on the sim legs
-/// — touches attributed on real OS workers included.
+/// — touches attributed on real OS workers included, and every policy
+/// must have seen `tick` for every executed segment.
 fn native_mem_workload(name: &str, topo: &Topology) {
     use bubbles::exec::Executor;
     let sys = Arc::new(System::new(Arc::new(topo.clone())));
-    let sched = factory::make(&bubbles::config::SchedConfig {
-        kind: factory::lookup(name).expect("registered policy").kind,
-        ..Default::default()
+    let sched: Arc<TickProbe> = Arc::new(TickProbe {
+        inner: factory::make(&bubbles::config::SchedConfig {
+            kind: factory::lookup(name).expect("registered policy").kind,
+            ..Default::default()
+        }),
+        ticks: std::sync::atomic::AtomicU64::new(0),
     });
     let m = Marcel::with_system(&sys);
     let mut ex = Executor::new(sys.clone(), sched.clone());
@@ -263,6 +297,66 @@ fn native_mem_workload(name: &str, topo: &Topology) {
         locals + remotes,
         threads.len() as u64 * touches_each,
         "{name} on {machine}: native touches lost"
+    );
+    // Tick delivery: every thread ran at least one segment, and the
+    // executor must have charged each segment to the policy.
+    let ticks = sched.ticks.load(Ordering::Relaxed);
+    assert!(
+        ticks >= threads.len() as u64,
+        "{name} on {machine}: only {ticks} ticks for {} threads",
+        threads.len()
+    );
+}
+
+/// Strict gang scheduling on the native engine with more gangs than
+/// CPUs: only timeslice rotation (tick → preempt → requeue) lets every
+/// gang make progress before the active one finishes, and every gang
+/// must still run to completion.
+#[test]
+fn native_strict_gang_rotates_across_gangs() {
+    use bubbles::exec::Executor;
+    let topo = Topology::smp(2);
+    let sys = Arc::new(System::new(Arc::new(topo)));
+    let sched = factory::make(&bubbles::config::SchedConfig {
+        kind: bubbles::config::SchedKind::Gang,
+        timeslice: Some(20_000), // 20µs of wall time per gang slice
+        ..Default::default()
+    });
+    let m = Marcel::with_system(&sys);
+    let mut ex = Executor::new(sys.clone(), sched.clone());
+    let done = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let mut threads = Vec::new();
+    for g in 0..4 {
+        let b = m.bubble_init();
+        for k in 0..2 {
+            let t = m.create_dontsched(format!("g{g}k{k}"));
+            m.bubble_inserttask(b, t);
+            let d = done.clone();
+            ex.register(t, move |api| {
+                for i in 0..40u64 {
+                    for _ in 0..5_000 {
+                        std::hint::black_box(i);
+                    }
+                    api.yield_now();
+                }
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+            threads.push(t);
+        }
+        sched.wake(&sys, b);
+    }
+    ex.run();
+    assert_eq!(done.load(Ordering::SeqCst), 8, "every gang must finish");
+    for t in threads {
+        assert_eq!(sys.tasks.state(t), TaskState::Terminated);
+    }
+    assert!(
+        sys.metrics.preemptions.load(Ordering::Relaxed) > 0,
+        "tick-driven preemption must fire on the native engine"
+    );
+    assert!(
+        sys.metrics.regenerations.load(Ordering::Relaxed) > 0,
+        "gang rotation must fire before the active gang finishes"
     );
 }
 
