@@ -1,4 +1,4 @@
-//! Runqueue scaling, two measurements:
+//! Runqueue scaling, three measurements:
 //!
 //! 1. **Contention** — §2.2's claim, measured: "a unique thread list
 //!    for the whole machine is a bottleneck, particularly when the
@@ -7,19 +7,38 @@
 //! 2. **Pick path** — the paper's two-pass search (pass-1 lock-free
 //!    hint scan over a covering chain + pass-2 locked pop) under
 //!    contention on a numa-4x4 machine.
+//! 3. **Contended pick/steal** (the gated matrix) — N OS workers, each
+//!    the owner of its leaf list, running the scheduler's hot mix:
+//!    push-own + pick-own with a steal probe at a neighbour every 4th
+//!    round. Two legs per (shape, threads) cell: `locked` = plain
+//!    bucket `RunList`, `lockless` = two-tier `RunList` with the
+//!    Chase-Lev fast lane in front. The lockless/locked throughput
+//!    ratio is the PR-6 acceptance number (≥1.5× at 8 threads on
+//!    numa-4x4).
 //!
 //! Results are printed as tables *and* written machine-readably to
-//! `BENCH_rq.json`, so the perf trajectory is tracked across PRs. The
-//! legacy `BTreeRunList` comparison leg is gone (PR 5): the bucket
-//! layout won across several PRs of `BENCH_rq.json` history, so the
-//! pick path is now tracked in absolute ns/op.
+//! `BENCH_rq.json` (schema 2 — see `benches/BENCH_SCHEMA.md`), with
+//! provenance: git revision, a FNV-1a hash of the bench configuration,
+//! and the run mode, so a history of committed baselines is comparable
+//! run-over-run.
+//!
+//! **Gate mode** (`BENCH_GATE=1`): before overwriting `BENCH_rq.json`,
+//! the committed file is read as the baseline and every contended leg
+//! is compared via `bubbles::bench::gate` (±25% ns/op threshold). A
+//! regressed leg exits nonzero *after* writing the fresh file, so CI
+//! both fails and uploads the evidence. An empty/absent baseline makes
+//! the run record-only. `BENCH_INJECT_REGRESSION=<f>` multiplies the
+//! measured contended ns/op by `f` — CI uses it to prove the gate
+//! actually fails on a planted 2× regression.
+//!
 //! Acceptance shape: hierarchy win grows with threads; pick-path ns/op
-//! stays flat-ish as PRs land.
+//! stays flat-ish as PRs land; lockless beats locked under contention.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use bubbles::rq::RunList;
+use bubbles::bench::gate;
+use bubbles::rq::{owner, RunList, FAST_LANE_PRIO};
 use bubbles::task::TaskId;
 use bubbles::topology::{CpuId, LevelId, Topology};
 use bubbles::util::fmt::Table;
@@ -106,6 +125,87 @@ fn pick_path_ns(topo: &Topology, threads: usize, dur_ms: u64) -> f64 {
     (dur_ms as f64 * 1e6) * threads as f64 / total.max(1) as f64
 }
 
+// ------------------------------------------------- contended pick/steal
+
+/// The gated benchmark: `threads` OS workers over one `RunList` per
+/// CPU, each worker the *owner* of the list of CPU `w % n_cpus`. Hot
+/// mix per round: push-own at thread priority + pick-own, and every 4th
+/// round a steal probe at the neighbouring CPU's list — the same
+/// operations `ops::enqueue` / `pick` / `steal_closest` issue, minus
+/// the policy glue. `lockless` legs build the lists with a fast lane
+/// and register the worker as its CPU's owner; `locked` legs use the
+/// plain bucket list (every op takes the mutex). Returns (ns/op,
+/// Mops/s).
+fn contended_ns(topo: &Topology, threads: usize, lockless: bool, dur_ms: u64) -> (f64, f64) {
+    let n_cpus = topo.n_cpus();
+    let lists: Arc<Vec<RunList>> = Arc::new(
+        (0..n_cpus)
+            .map(|i| {
+                if lockless {
+                    RunList::with_fast_lane(LevelId(i), CpuId(i))
+                } else {
+                    RunList::new(LevelId(i))
+                }
+            })
+            .collect(),
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut joins = Vec::new();
+    for w in 0..threads {
+        let lists = lists.clone();
+        let stop = stop.clone();
+        let cpu = w % n_cpus;
+        joins.push(std::thread::spawn(move || {
+            owner::set_current_cpu(Some(CpuId(cpu)));
+            let own = &lists[cpu];
+            let neighbour = &lists[(cpu + 1) % lists.len()];
+            let mut ops = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                own.push(TaskId(w), FAST_LANE_PRIO);
+                let _ = own.pop_max();
+                ops += 2;
+                if ops % 8 == 0 {
+                    // Steal probe: thief-side pop on a list this worker
+                    // does not own.
+                    let _ = neighbour.pop_max();
+                    ops += 1;
+                }
+            }
+            owner::set_current_cpu(None);
+            ops
+        }));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(dur_ms));
+    stop.store(true, Ordering::Relaxed);
+    let total: u64 = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    let ns_op = (dur_ms as f64 * 1e6) * threads as f64 / total.max(1) as f64;
+    let mops = total as f64 / (dur_ms as f64 * 1e3);
+    (ns_op, mops)
+}
+
+// ----------------------------------------------------------- provenance
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
 // ---------------------------------------------------------------- main
 
 fn json_escape_free(v: f64) -> String {
@@ -116,9 +216,19 @@ fn json_escape_free(v: f64) -> String {
     }
 }
 
+const CONTENDED_THREADS: [usize; 3] = [2, 4, 8];
+
 fn main() {
     let fast = std::env::var("BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let gated = std::env::var("BENCH_GATE").map(|v| v == "1").unwrap_or(false);
+    let inject: f64 = std::env::var("BENCH_INJECT_REGRESSION")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
     let dur = if fast { 50 } else { 300 };
+
+    // Read the committed baseline *before* this run overwrites it.
+    let baseline = if gated { std::fs::read_to_string("BENCH_rq.json").ok() } else { None };
 
     println!("runqueue contention: single global list vs per-CPU lists\n");
     let mut contention_rows = Vec::new();
@@ -142,11 +252,11 @@ fn main() {
     println!("expected shape: the win grows with the thread count (§2.2).\n");
 
     println!("pick path (two-pass over numa-4x4 chains): bucket-array RunList\n");
-    let topo = Topology::numa(4, 4);
+    let numa = Topology::numa(4, 4);
     let mut pick_rows = Vec::new();
     let mut t2 = Table::new(&["threads", "bucket ns/op"]);
     for threads in [1usize, 4, 16, 32] {
-        let bucket = pick_path_ns(&topo, threads, dur);
+        let bucket = pick_path_ns(&numa, threads, dur);
         t2.row(&[threads.to_string(), format!("{bucket:.1}")]);
         pick_rows.push(format!(
             "{{\"threads\":{threads},\"bucket_ns\":{}}}",
@@ -154,17 +264,84 @@ fn main() {
         ));
     }
     println!("{}", t2.render());
-    println!("acceptance shape: ns/op comparable to the BENCH_rq.json history.");
+    println!("acceptance shape: ns/op comparable to the BENCH_rq.json history.\n");
 
+    println!("contended pick/steal: locked buckets vs lock-free fast lane\n");
+    if inject != 1.0 {
+        println!("(BENCH_INJECT_REGRESSION={inject}: reported ns/op scaled accordingly)\n");
+    }
+    let shapes = [Topology::smp(4), numa];
+    let mut contended_rows = Vec::new();
+    let mut current_legs = Vec::new();
+    let mut t3 = Table::new(&["shape", "threads", "locked ns/op", "lockless ns/op", "lockless win"]);
+    for topo in &shapes {
+        for threads in CONTENDED_THREADS {
+            let mut cell = [0.0f64; 2];
+            for (i, lockless) in [false, true].into_iter().enumerate() {
+                let (mut ns_op, mut mops) = contended_ns(topo, threads, lockless, dur);
+                ns_op *= inject;
+                mops /= inject;
+                cell[i] = ns_op;
+                let leg = if lockless { "lockless" } else { "locked" };
+                contended_rows.push(format!(
+                    "{{\"shape\":\"{}\",\"threads\":{threads},\"leg\":\"{leg}\",\"ns_op\":{},\"mops\":{}}}",
+                    topo.name(),
+                    json_escape_free(ns_op),
+                    json_escape_free(mops)
+                ));
+                current_legs.push(gate::LegResult {
+                    shape: topo.name().to_string(),
+                    threads,
+                    leg: leg.to_string(),
+                    ns_op,
+                    mops,
+                });
+            }
+            t3.row(&[
+                topo.name().to_string(),
+                threads.to_string(),
+                format!("{:.1}", cell[0]),
+                format!("{:.1}", cell[1]),
+                format!("{:.2}x", cell[0] / cell[1].max(f64::MIN_POSITIVE)),
+            ]);
+        }
+    }
+    println!("{}", t3.render());
+    println!("acceptance: lockless ≥1.5x locked throughput at 8 threads on numa-4x4.");
+
+    let config = format!(
+        "shapes=smp-4,numa-4x4;threads={CONTENDED_THREADS:?};legs=locked,lockless;dur_ms={dur}"
+    );
     let json = format!(
-        "{{\n  \"bench\": \"rq_scaling\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"contention\": [{}],\n  \"pick_path\": [{}]\n}}\n",
+        "{{\n  \"bench\": \"rq_scaling\",\n  \"schema\": 2,\n  \"mode\": \"{}\",\n  \"git_rev\": \"{}\",\n  \"config_hash\": \"{:016x}\",\n  \"machine\": \"{}\",\n  \"contention\": [{}],\n  \"pick_path\": [{}],\n  \"contended\": [{}]\n}}\n",
         if fast { "fast" } else { "full" },
-        topo.name(),
+        git_rev(),
+        fnv1a(&config),
+        shapes[1].name(),
         contention_rows.join(","),
-        pick_rows.join(",")
+        pick_rows.join(","),
+        contended_rows.join(",\n")
     );
     match std::fs::write("BENCH_rq.json", &json) {
         Ok(()) => println!("\nwrote BENCH_rq.json"),
         Err(e) => eprintln!("\ncould not write BENCH_rq.json: {e}"),
+    }
+
+    if gated {
+        let base_legs = baseline.as_deref().map(gate::parse_legs).unwrap_or_default();
+        if base_legs.is_empty() {
+            println!(
+                "\nbench gate: no contended legs in the committed baseline — record-only run."
+            );
+            return;
+        }
+        let report = gate::compare(&base_legs, &current_legs, gate::DEFAULT_THRESHOLD);
+        println!("\nbench gate vs committed baseline (threshold +{:.0}%):", (gate::DEFAULT_THRESHOLD - 1.0) * 100.0);
+        print!("{}", report.render());
+        if !report.passed() {
+            eprintln!("bench gate: {} leg(s) regressed past threshold", report.regressions().len());
+            std::process::exit(2);
+        }
+        println!("bench gate: passed ({} legs compared)", report.deltas.len());
     }
 }

@@ -1,0 +1,267 @@
+//! Bench regression gate: compare a `BENCH_rq.json` run against the
+//! committed baseline and fail CI on a thresholded ns/op regression.
+//!
+//! The bench files are written by this crate's own plain-main benches
+//! (no external JSON dependency exists by design), so the parser here
+//! is a deliberately small extractor matched to that shape: every
+//! *flat* `{...}` object carrying `"shape"`, `"threads"`, `"leg"` and
+//! `"ns_op"` fields is a contended-bench leg; everything else in the
+//! file (prose fields, the legacy `contention`/`pick_path` arrays) is
+//! ignored. A leg is identified by `shape/threads/leg` — e.g.
+//! `numa-4x4/t8/lockless` — and compared by `ns_op`:
+//!
+//! * `current / baseline > threshold` → **regression** (the gate's
+//!   nonzero exit).
+//! * Legs present on only one side are reported and skipped — a bench
+//!   matrix change must not masquerade as a perf change.
+//! * An empty baseline (no contended legs, e.g. the first commit of the
+//!   file) makes the run **record-only**: nothing to compare against.
+//!
+//! The default threshold is ±25% ([`DEFAULT_THRESHOLD`]): wide enough
+//! to absorb shared-runner noise on a smoke-length run, tight enough to
+//! catch a lock slipped back into the pick hot path (which costs ≥2×
+//! under contention — see the `rq_scaling` bench).
+
+/// Ratio above which a leg counts as regressed (1.25 = +25% ns/op).
+pub const DEFAULT_THRESHOLD: f64 = 1.25;
+
+/// One contended-bench leg, parsed from a `BENCH_rq.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LegResult {
+    /// Machine shape the leg ran on (`smp-4`, `numa-4x4`).
+    pub shape: String,
+    /// Worker OS threads hammering the lists.
+    pub threads: usize,
+    /// Which runqueue variant: `locked` or `lockless`.
+    pub leg: String,
+    /// Nanoseconds per operation (lower is better — the gated number).
+    pub ns_op: f64,
+    /// Throughput in Mops/s (informational).
+    pub mops: f64,
+}
+
+impl LegResult {
+    /// Stable identity of a leg across runs.
+    pub fn key(&self) -> String {
+        format!("{}/t{}/{}", self.shape, self.threads, self.leg)
+    }
+}
+
+/// One leg-pair comparison.
+#[derive(Debug, Clone)]
+pub struct LegDelta {
+    pub key: String,
+    pub baseline_ns: f64,
+    pub current_ns: f64,
+    /// `current / baseline` (> 1 = slower).
+    pub ratio: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of gating one run against a baseline.
+#[derive(Debug, Clone, Default)]
+pub struct GateReport {
+    /// Per-leg comparisons, in current-run order.
+    pub deltas: Vec<LegDelta>,
+    /// Current legs with no baseline counterpart (matrix grew).
+    pub unmatched_current: Vec<String>,
+    /// Baseline legs missing from the current run (matrix shrank).
+    pub unmatched_baseline: Vec<String>,
+}
+
+impl GateReport {
+    /// Legs over the threshold.
+    pub fn regressions(&self) -> Vec<&LegDelta> {
+        self.deltas.iter().filter(|d| d.regressed).collect()
+    }
+
+    /// Did the gate pass (no regressed leg)?
+    pub fn passed(&self) -> bool {
+        self.deltas.iter().all(|d| !d.regressed)
+    }
+
+    /// Human-readable per-leg lines for the CI log.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.deltas {
+            out.push_str(&format!(
+                "{} {:>24}  {:>9.1} -> {:>9.1} ns/op  ({:+.1}%)\n",
+                if d.regressed { "REGRESSED" } else { "ok       " },
+                d.key,
+                d.baseline_ns,
+                d.current_ns,
+                (d.ratio - 1.0) * 100.0,
+            ));
+        }
+        for k in &self.unmatched_current {
+            out.push_str(&format!("skipped   {k:>24}  (no baseline leg)\n"));
+        }
+        for k in &self.unmatched_baseline {
+            out.push_str(&format!("skipped   {k:>24}  (leg gone from current run)\n"));
+        }
+        out
+    }
+}
+
+fn field_num(obj: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let rest = obj[obj.find(&pat)? + pat.len()..].trim_start();
+    let end = rest
+        .find(|c: char| c == ',' || c == '}' || c.is_whitespace())
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn field_str(obj: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let rest = obj[obj.find(&pat)? + pat.len()..].trim_start();
+    let quoted = rest.strip_prefix('"')?;
+    Some(quoted[..quoted.find('"')?].to_string())
+}
+
+fn parse_leg(obj: &str) -> Option<LegResult> {
+    Some(LegResult {
+        shape: field_str(obj, "shape")?,
+        threads: field_num(obj, "threads")? as usize,
+        leg: field_str(obj, "leg")?,
+        ns_op: field_num(obj, "ns_op")?,
+        mops: field_num(obj, "mops").unwrap_or(0.0),
+    })
+}
+
+/// Extract every contended-bench leg from a `BENCH_rq.json` document.
+/// Scans for *innermost* `{...}` spans (the leg objects are flat) and
+/// keeps those with the full leg field set; anything else — including
+/// the legacy `contention`/`pick_path` rows — is skipped silently.
+pub fn parse_legs(json: &str) -> Vec<LegResult> {
+    let mut out = Vec::new();
+    let mut start = None;
+    for (i, b) in json.bytes().enumerate() {
+        match b {
+            b'{' => start = Some(i),
+            b'}' => {
+                if let Some(s) = start.take() {
+                    if let Some(leg) = parse_leg(&json[s..=i]) {
+                        out.push(leg);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Compare `current` legs against `baseline` by key; a leg regresses
+/// when `current.ns_op / baseline.ns_op > threshold`. Unmatched legs on
+/// either side are reported, never gated on.
+pub fn compare(baseline: &[LegResult], current: &[LegResult], threshold: f64) -> GateReport {
+    let mut report = GateReport::default();
+    for cur in current {
+        match baseline.iter().find(|b| b.key() == cur.key()) {
+            Some(base) if base.ns_op > 0.0 => {
+                let ratio = cur.ns_op / base.ns_op;
+                report.deltas.push(LegDelta {
+                    key: cur.key(),
+                    baseline_ns: base.ns_op,
+                    current_ns: cur.ns_op,
+                    ratio,
+                    regressed: ratio > threshold,
+                });
+            }
+            _ => report.unmatched_current.push(cur.key()),
+        }
+    }
+    for base in baseline {
+        if !current.iter().any(|c| c.key() == base.key()) {
+            report.unmatched_baseline.push(base.key());
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leg(shape: &str, threads: usize, leg_name: &str, ns_op: f64) -> LegResult {
+        LegResult {
+            shape: shape.into(),
+            threads,
+            leg: leg_name.into(),
+            ns_op,
+            mops: if ns_op > 0.0 { 1e3 / ns_op } else { 0.0 },
+        }
+    }
+
+    #[test]
+    fn parses_legs_out_of_a_full_document() {
+        let doc = r#"{
+  "bench": "rq_scaling",
+  "schema": 2,
+  "git_rev": "abc1234",
+  "contention": [{"threads":2,"global_mops":1.00,"percpu_mops":2.00}],
+  "contended": [{"shape":"smp-4","threads":2,"leg":"locked","ns_op":81.25,"mops":12.31},
+{"shape":"numa-4x4","threads":8,"leg":"lockless","ns_op":40.50,"mops":24.69}],
+  "pick_path": [{"threads":4,"bucket_ns":120.00}]
+}
+"#;
+        let legs = parse_legs(doc);
+        assert_eq!(legs.len(), 2, "only full leg objects count: {legs:?}");
+        assert_eq!(legs[0].key(), "smp-4/t2/locked");
+        assert_eq!(legs[0].ns_op, 81.25);
+        assert_eq!(legs[1].key(), "numa-4x4/t8/lockless");
+        assert_eq!(legs[1].mops, 24.69);
+    }
+
+    #[test]
+    fn two_x_regression_fails_the_gate() {
+        let base = vec![leg("numa-4x4", 8, "lockless", 50.0)];
+        let cur = vec![leg("numa-4x4", 8, "lockless", 100.0)];
+        let report = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(!report.passed());
+        let regs = report.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].key, "numa-4x4/t8/lockless");
+        assert!((regs[0].ratio - 2.0).abs() < 1e-9);
+        assert!(report.render().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn noise_within_threshold_passes() {
+        let base = vec![leg("smp-4", 4, "locked", 100.0), leg("smp-4", 4, "lockless", 60.0)];
+        let cur = vec![leg("smp-4", 4, "locked", 120.0), leg("smp-4", 4, "lockless", 49.0)];
+        let report = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(report.passed(), "+20% and an improvement are both inside ±25%: {report:?}");
+        assert_eq!(report.deltas.len(), 2);
+    }
+
+    #[test]
+    fn unmatched_legs_are_skipped_not_gated() {
+        let base = vec![leg("smp-4", 2, "locked", 100.0), leg("smp-4", 16, "locked", 90.0)];
+        let cur = vec![leg("smp-4", 2, "locked", 101.0), leg("numa-4x4", 2, "locked", 70.0)];
+        let report = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(report.passed());
+        assert_eq!(report.unmatched_current, vec!["numa-4x4/t2/locked".to_string()]);
+        assert_eq!(report.unmatched_baseline, vec!["smp-4/t16/locked".to_string()]);
+        assert!(report.render().contains("skipped"));
+    }
+
+    #[test]
+    fn empty_baseline_is_record_only() {
+        let cur = vec![leg("smp-4", 2, "locked", 100.0)];
+        let report = compare(&[], &cur, DEFAULT_THRESHOLD);
+        assert!(report.passed(), "nothing to compare against cannot fail");
+        assert!(report.deltas.is_empty());
+        assert_eq!(report.unmatched_current.len(), 1);
+    }
+
+    #[test]
+    fn zero_baseline_ns_cannot_divide() {
+        let base = vec![leg("smp-4", 2, "locked", 0.0)];
+        let cur = vec![leg("smp-4", 2, "locked", 100.0)];
+        let report = compare(&base, &cur, DEFAULT_THRESHOLD);
+        assert!(report.passed());
+        assert_eq!(report.unmatched_current.len(), 1, "a 0 ns baseline leg is unusable");
+    }
+}

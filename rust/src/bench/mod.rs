@@ -14,6 +14,12 @@
 //! batch auto-sizes its iteration count so a batch lasts ≥ `min_batch`;
 //! Tukey outlier trimming; mean/median/σ/p95 in the report. Honors
 //! `BENCH_FAST=1` for smoke runs.
+//!
+//! [`gate`] holds the bench *regression gate*: the comparator CI uses
+//! to fail a build when a `BENCH_rq.json` run regresses past threshold
+//! against the committed baseline.
+
+pub mod gate;
 
 use std::time::Instant;
 

@@ -32,7 +32,6 @@
 //! termination paths bump `seq` and notify under the park lock, so the
 //! remaining timeouts are pure safety backstops, not wake mechanisms.
 
-use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -43,14 +42,6 @@ use crate::mem::{RegionId, Touch};
 use crate::sched::{Scheduler, StopReason, System};
 use crate::task::TaskId;
 use crate::topology::CpuId;
-
-thread_local! {
-    /// The virtual CPU this worker OS thread drives. Set once at
-    /// worker-loop entry; fibers resumed on this thread read it to
-    /// attribute their memory touches (a migrated fiber automatically
-    /// reports its *new* CPU — that is the point).
-    static CURRENT_VCPU: Cell<Option<CpuId>> = const { Cell::new(None) };
-}
 
 /// Barrier state shared between workers.
 #[derive(Debug, Default)]
@@ -138,9 +129,7 @@ impl GreenApi {
     /// The virtual CPU currently running this green thread. Only valid
     /// inside a fiber body on a worker (panics elsewhere).
     pub fn cpu(&self) -> CpuId {
-        CURRENT_VCPU
-            .with(|c| c.get())
-            .expect("GreenApi::cpu outside a worker fiber")
+        crate::rq::owner::current_cpu().expect("GreenApi::cpu outside a worker fiber")
     }
 
     /// Record a memory touch on `region` from this green thread: the
@@ -280,9 +269,11 @@ impl Executor {
 }
 
 fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
-    // Fibers resumed on this OS thread attribute their memory touches
-    // to this CPU (see GreenApi::touch_region).
-    CURRENT_VCPU.with(|c| c.set(Some(cpu)));
+    // This OS thread now acts as `cpu`: fibers resumed here attribute
+    // their memory touches to it (see GreenApi::touch_region), and the
+    // runqueue routes the worker's own same-priority pushes through the
+    // leaf's lock-free fast lane (see crate::rq::owner).
+    crate::rq::owner::set_current_cpu(Some(cpu));
     // Current backoff window for queued-but-unpickable work; grows
     // exponentially across consecutive refusals, resets on a pick.
     let mut backoff = BACKOFF_MIN;
@@ -383,11 +374,15 @@ fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
                                 waiters: waiters.len() + 1,
                             },
                         );
-                        // Last arriver yields; the blocked ones wake.
+                        // Last arriver yields; the blocked ones wake —
+                        // as one batch, so the release notifies the
+                        // park condvar once instead of per waiter.
                         inner.sched.stop(&inner.sys, cpu, task, StopReason::Yield);
-                        for w in waiters {
-                            inner.sched.wake(&inner.sys, w);
-                        }
+                        inner.sys.wake_batch(|| {
+                            for w in waiters {
+                                inner.sched.wake(&inner.sys, w);
+                            }
+                        });
                     }
                     None => {
                         inner.sched.stop(&inner.sys, cpu, task, StopReason::Block);

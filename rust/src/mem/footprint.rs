@@ -7,8 +7,18 @@
 //! byte counter is bumped for that task **and every enclosing bubble**
 //! (O(nesting depth)). A policy can then ask "where does this bubble's
 //! memory live?" in O(nodes) without walking its contents.
+//!
+//! Each (task, node) counter is an `AtomicU64`: mutation is a lock-free
+//! atomic op, so native workers touching regions concurrently never
+//! serialize on a table-wide mutex. The outer `RwLock` exists only to
+//! grow the table on first sight of a task id — the hot paths take the
+//! shared side. Multi-counter updates (`rehome`'s sub+add pair, the
+//! chain walk) are not one atomic transaction; a concurrent reader can
+//! see a transient split, which is fine for counters that are advisory
+//! while running and checked (conservation invariants) at quiescence.
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 
 use crate::task::{TaskId, TaskTable};
 
@@ -18,7 +28,7 @@ pub struct Footprint {
     n_nodes: usize,
     /// `foot[task.0][node]` = bytes of attached regions homed on `node`
     /// owned by the task or anything nested under it (for bubbles).
-    foot: Mutex<Vec<Vec<u64>>>,
+    foot: RwLock<Vec<Box<[AtomicU64]>>>,
 }
 
 /// The bubble chain of a task: itself, then every enclosing bubble.
@@ -35,7 +45,7 @@ fn chain(tasks: &TaskTable, task: TaskId) -> Vec<TaskId> {
 impl Footprint {
     /// Zeroed counters for a machine with `n_nodes` NUMA nodes.
     pub fn new(n_nodes: usize) -> Footprint {
-        Footprint { n_nodes: n_nodes.max(1), foot: Mutex::new(Vec::new()) }
+        Footprint { n_nodes: n_nodes.max(1), foot: RwLock::new(Vec::new()) }
     }
 
     /// Number of NUMA nodes accounted.
@@ -43,20 +53,26 @@ impl Footprint {
         self.n_nodes
     }
 
-    fn slot<'a>(v: &'a mut Vec<Vec<u64>>, t: TaskId, n_nodes: usize) -> &'a mut Vec<u64> {
-        if v.len() <= t.0 {
-            v.resize_with(t.0 + 1, || vec![0; n_nodes]);
+    /// Make sure rows up to `max_task` exist (write lock only when the
+    /// table actually needs to grow).
+    fn ensure(&self, max_task: usize) {
+        if self.foot.read().unwrap().len() > max_task {
+            return;
         }
-        &mut v[t.0]
+        let mut w = self.foot.write().unwrap();
+        while w.len() <= max_task {
+            w.push((0..self.n_nodes).map(|_| AtomicU64::new(0)).collect());
+        }
     }
 
     /// `bytes` homed on `node` now belong to `task`: bump the task and
     /// every enclosing bubble.
     pub fn add(&self, tasks: &TaskTable, task: TaskId, node: usize, bytes: u64) {
         let chain = chain(tasks, task);
-        let mut foot = self.foot.lock().unwrap();
+        self.ensure(chain.iter().map(|t| t.0).max().unwrap_or(0));
+        let foot = self.foot.read().unwrap();
         for t in chain {
-            Self::slot(&mut foot, t, self.n_nodes)[node] += bytes;
+            foot[t.0][node].fetch_add(bytes, Ordering::Relaxed);
         }
     }
 
@@ -64,10 +80,13 @@ impl Footprint {
     /// Saturating, so an unbalanced call cannot wrap the counters.
     pub fn sub(&self, tasks: &TaskTable, task: TaskId, node: usize, bytes: u64) {
         let chain = chain(tasks, task);
-        let mut foot = self.foot.lock().unwrap();
+        self.ensure(chain.iter().map(|t| t.0).max().unwrap_or(0));
+        let foot = self.foot.read().unwrap();
         for t in chain {
-            let slot = Self::slot(&mut foot, t, self.n_nodes);
-            slot[node] = slot[node].saturating_sub(bytes);
+            let _ = foot[t.0][node]
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    Some(v.saturating_sub(bytes))
+                });
         }
     }
 
@@ -77,11 +96,14 @@ impl Footprint {
             return;
         }
         let chain = chain(tasks, task);
-        let mut foot = self.foot.lock().unwrap();
+        self.ensure(chain.iter().map(|t| t.0).max().unwrap_or(0));
+        let foot = self.foot.read().unwrap();
         for t in chain {
-            let slot = Self::slot(&mut foot, t, self.n_nodes);
-            slot[from] = slot[from].saturating_sub(bytes);
-            slot[to] += bytes;
+            let row = &foot[t.0];
+            let _ = row[from].fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(bytes))
+            });
+            row[to].fetch_add(bytes, Ordering::Relaxed);
         }
     }
 
@@ -95,48 +117,45 @@ impl Footprint {
         if ancestors.is_empty() {
             return;
         }
-        let mut foot = self.foot.lock().unwrap();
-        let own = match foot.get(task.0) {
-            Some(v) => v.clone(),
-            None => return,
-        };
+        let own = self.of(task);
         if own.iter().all(|&b| b == 0) {
             return;
         }
+        self.ensure(ancestors.iter().map(|t| t.0).max().unwrap_or(0));
+        let foot = self.foot.read().unwrap();
         for t in ancestors {
-            let slot = Self::slot(&mut foot, t, self.n_nodes);
             for (node, &bytes) in own.iter().enumerate() {
-                slot[node] += bytes;
+                foot[t.0][node].fetch_add(bytes, Ordering::Relaxed);
             }
         }
     }
 
     /// Per-node byte vector of a task's (subtree) footprint.
     pub fn of(&self, task: TaskId) -> Vec<u64> {
-        let foot = self.foot.lock().unwrap();
+        let foot = self.foot.read().unwrap();
         match foot.get(task.0) {
-            Some(v) => v.clone(),
+            Some(row) => row.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
             None => vec![0; self.n_nodes],
         }
     }
 
     /// Bytes of `task`'s footprint homed on `node`.
     pub fn node_bytes(&self, task: TaskId, node: usize) -> u64 {
-        let foot = self.foot.lock().unwrap();
-        foot.get(task.0).map_or(0, |v| v[node])
+        let foot = self.foot.read().unwrap();
+        foot.get(task.0).map_or(0, |row| row[node].load(Ordering::Relaxed))
     }
 
     /// Total attached bytes of a task's footprint.
     pub fn total(&self, task: TaskId) -> u64 {
-        let foot = self.foot.lock().unwrap();
-        foot.get(task.0).map_or(0, |v| v.iter().sum())
+        let foot = self.foot.read().unwrap();
+        foot.get(task.0)
+            .map_or(0, |row| row.iter().map(|b| b.load(Ordering::Relaxed)).sum())
     }
 
     /// The node holding the plurality of `task`'s footprint (lowest
     /// index on ties; None when the footprint is empty).
     pub fn dominant_node(&self, task: TaskId) -> Option<usize> {
-        let foot = self.foot.lock().unwrap();
-        let v = foot.get(task.0)?;
+        let v = self.of(task);
         let (best, bytes) = v
             .iter()
             .enumerate()
@@ -215,5 +234,31 @@ mod tests {
         f.add(&tasks, t, 2, 100);
         f.add(&tasks, t, 1, 100);
         assert_eq!(f.dominant_node(t), Some(1));
+    }
+
+    #[test]
+    fn concurrent_touch_accounting_is_exact() {
+        // Many threads hammering one (task, node) counter: atomics must
+        // keep the sum exact without a table-wide lock.
+        use std::sync::Arc;
+        let tasks = Arc::new(TaskTable::new());
+        let t = tasks.new_thread("t", PRIO_THREAD);
+        let f = Arc::new(Footprint::new(2));
+        let mut joins = Vec::new();
+        for w in 0..4 {
+            let f = f.clone();
+            let tasks = tasks.clone();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..1_000 {
+                    f.add(&tasks, t, w % 2, 3);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(f.total(t), 12_000);
+        assert_eq!(f.node_bytes(t, 0), 6_000);
+        assert_eq!(f.node_bytes(t, 1), 6_000);
     }
 }

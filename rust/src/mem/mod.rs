@@ -27,7 +27,14 @@
 //!   [`MemState::pressure_view`]): per-node homed-byte counters the
 //!   pick and steal paths consult for footprint *headroom* (the
 //!   pressure-aware pass 1 in [`crate::sched::core::pick`], and the
-//!   `memaware` steal tie-break and wake fallback).
+//!   `memaware` steal tie-break and wake fallback). The counters are
+//!   versioned by [`MemState::pressure_epoch`], so per-pick readers can
+//!   cache a snapshot ([`MemState::pressure_view_into`]) and refresh
+//!   only when placement moved.
+//! * **Lock-free steady-state touches**: a touch of a homed, unmarked
+//!   region commits through atomics ([`RegionRegistry::touch_fast`])
+//!   without the registry mutex *or* the `sync` mutex below — see
+//!   [`MemState::touch`].
 //!
 //! [`MemState`] bundles the two and keeps them consistent: every
 //! operation that changes a region's home or owner applies the matching
@@ -118,7 +125,17 @@ impl MemState {
 
     /// Record a touch by `cpu`: resolves the home (first touch homes,
     /// next-touch migrates) and keeps the footprint in sync.
+    ///
+    /// Steady-state touches (region homed, no next-touch mark pending)
+    /// commit lock-free through [`RegionRegistry::touch_fast`]: they
+    /// change no placement, so there is no registry→footprint delta to
+    /// serialise and the `sync` mutex — the old per-touch bottleneck
+    /// for native workers — is skipped entirely. Placement-changing
+    /// touches still queue on it, preserving conservation.
     pub fn touch(&self, tasks: &TaskTable, topo: &Topology, r: RegionId, cpu: CpuId) -> Touch {
+        if let Some(touch) = self.regions.touch_fast(r, cpu) {
+            return touch;
+        }
         let _sync = self.sync.lock().unwrap();
         let node = topo.numa_of(cpu);
         let (touch, delta) = self.regions.touch(r, cpu, node);
@@ -149,6 +166,18 @@ impl MemState {
     /// Per-node homed-bytes snapshot (index = NUMA node).
     pub fn pressure_view(&self) -> Vec<u64> {
         self.regions.pressure_view()
+    }
+
+    /// Allocation-free [`Self::pressure_view`] into a caller buffer.
+    pub fn pressure_view_into(&self, out: &mut Vec<u64>) {
+        self.regions.pressure_view_into(out);
+    }
+
+    /// Monotonic pressure version: moves exactly when some node's homed
+    /// bytes do, so per-pick readers can cache a snapshot and refresh
+    /// only on change.
+    pub fn pressure_epoch(&self) -> u64 {
+        self.regions.pressure_epoch()
     }
 
     /// Snapshot of one region.
@@ -318,6 +347,29 @@ mod tests {
         assert_eq!(mem.node_pressure(1), 0);
         let _ = mem.alloc(200, AllocPolicy::Fixed(1));
         assert_eq!(mem.pressure_view(), vec![100, 200]);
+    }
+
+    #[test]
+    fn steady_state_touches_skip_the_sync_lock_and_conserve() {
+        let topo = numa22();
+        let mem = MemState::new(&topo);
+        let tasks = TaskTable::new();
+        let t = tasks.new_thread("t", PRIO_THREAD);
+        let r = mem.alloc(100, AllocPolicy::FirstTouch);
+        mem.attach(&tasks, t, r);
+        mem.touch(&tasks, &topo, r, CpuId(0)); // first touch: slow path, homes on node 0
+        let epoch = mem.pressure_epoch();
+        // Hold the sync mutex across a steady-state touch: if the touch
+        // needed the lock (fast path regressed), this would deadlock.
+        let guard = mem.sync.lock().unwrap();
+        let touch = mem.touch(&tasks, &topo, r, CpuId(3));
+        drop(guard);
+        assert_eq!((touch.home, touch.migrated), (0, 0));
+        assert_eq!(touch.last_toucher, Some(CpuId(0)));
+        assert_eq!(mem.pressure_epoch(), epoch, "no placement change, no epoch move");
+        assert_eq!(mem.regions.info(r).touches, 2);
+        assert!(mem.conserved(&tasks));
+        assert!(mem.hierarchy_consistent(&tasks));
     }
 
     #[test]

@@ -21,13 +21,31 @@
 //! node. Footprint attribution is per stripe, so a striped region
 //! charges each declared node exactly its stripe's bytes.
 //!
+//! **Lock-free steady-state touches** ([`RegionRegistry::touch_fast`]):
+//! each region's mutable hot state (touch count, last toucher,
+//! next-touch flag, home / stripe nodes) lives in a [`RegionHot`] of
+//! atomics, separate from the lock-protected static part (size, stripe
+//! sizes, owner). A touch of a homed, unmarked region changes no
+//! placement, so it commits with three atomic ops and never takes the
+//! registry mutex — that is the overwhelmingly common case once an
+//! application's working set is placed. Touches that *can* move bytes
+//! (first touch, a pending next-touch mark) fall back to the locked
+//! [`RegionRegistry::touch`], which serialises against attach so the
+//! footprint conservation invariant holds. A mark racing in after a
+//! fast touch commits simply linearises that touch before the mark —
+//! the next touch migrates, exactly as if the two had queued on a lock.
+//!
 //! **Pressure view**: the registry keeps per-node homed-byte counters
 //! (lock-free reads) so the pick path can ask "which node has footprint
 //! headroom?" in O(1) — see [`RegionRegistry::node_pressure`] and the
-//! pressure-aware pass 1 in `sched::core::pick`.
+//! pressure-aware pass 1 in `sched::core::pick`. The counters carry a
+//! monotonic [`RegionRegistry::pressure_epoch`] bumped on every change,
+//! so per-pick readers can cache a snapshot (via
+//! [`RegionRegistry::pressure_view_into`], allocation-free) and refresh
+//! only when placement actually moved.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::task::TaskId;
 use crate::topology::CpuId;
@@ -37,6 +55,9 @@ pub type RegionId = usize;
 
 /// Default region size when the caller does not say (1 MiB).
 pub const DEFAULT_REGION_BYTES: u64 = 1 << 20;
+
+/// Sentinel for "no node / no CPU" in the hot-state atomics.
+const NONE_IDX: usize = usize::MAX;
 
 /// Memory allocation policy for regions (paper §2.3: modern systems
 /// "let the application choose the memory allocation policy (specific
@@ -62,7 +83,7 @@ pub struct Stripe {
     pub size: u64,
 }
 
-/// One region's full state (also the snapshot returned by `info`).
+/// One region's full state (the snapshot returned by `info`).
 #[derive(Debug, Clone)]
 pub struct RegionInfo {
     /// Size in bytes.
@@ -125,18 +146,86 @@ pub enum HomeChange {
     Moved { owner: Option<TaskId>, from: usize, to: usize, size: u64 },
 }
 
+/// Static (lock-protected) part of a region: what never changes per
+/// touch. `owner` changes only through `attach`, which is rare and
+/// placement-relevant, so it stays behind the lock.
+#[derive(Debug)]
+struct RegionSlot {
+    size: u64,
+    /// Per-stripe byte counts (empty for ordinary regions). Sizes are
+    /// fixed at declaration; the stripes' *nodes* live in the hot part.
+    stripe_sizes: Vec<u64>,
+    owner: Option<TaskId>,
+}
+
+/// Hot (lock-free) part of a region: everything a steady-state touch
+/// reads or writes. Single source of truth for these fields — the
+/// locked paths update the same atomics, so the two tiers cannot
+/// drift.
+#[derive(Debug)]
+struct RegionHot {
+    /// Touches recorded; a touch's 0-based index (`fetch_add` result)
+    /// drives the stripe rotation.
+    touches: AtomicU64,
+    /// CPU of the previous toucher (`NONE_IDX` = never touched).
+    last_toucher: AtomicUsize,
+    /// Pending next-touch migration mark.
+    next_touch: AtomicBool,
+    /// Home node of a single-home region (`NONE_IDX` = unhomed; always
+    /// `NONE_IDX` for striped regions).
+    home: AtomicUsize,
+    /// Current node of each stripe (empty for ordinary regions).
+    stripe_nodes: Box<[AtomicUsize]>,
+}
+
+impl RegionHot {
+    fn new(home: Option<usize>, stripe_nodes: &[usize]) -> RegionHot {
+        RegionHot {
+            touches: AtomicU64::new(0),
+            last_toucher: AtomicUsize::new(NONE_IDX),
+            next_touch: AtomicBool::new(false),
+            home: AtomicUsize::new(home.unwrap_or(NONE_IDX)),
+            stripe_nodes: stripe_nodes.iter().map(|&n| AtomicUsize::new(n)).collect(),
+        }
+    }
+
+    fn home_node(&self) -> Option<usize> {
+        let h = self.home.load(Ordering::Acquire);
+        (h != NONE_IDX).then_some(h)
+    }
+
+    fn last(&self) -> Option<CpuId> {
+        let c = self.last_toucher.load(Ordering::Acquire);
+        (c != NONE_IDX).then_some(CpuId(c))
+    }
+
+    fn is_homed(&self) -> bool {
+        !self.stripe_nodes.is_empty() || self.home_node().is_some()
+    }
+}
+
 /// The registry proper: an append-only arena of regions.
+///
+/// Lock order (where both are taken): `slots` mutex, then `hot` read
+/// lock. `hot`'s write side is taken only while appending in `alloc`.
 #[derive(Debug)]
 pub struct RegionRegistry {
-    slots: Mutex<Vec<RegionInfo>>,
+    slots: Mutex<Vec<RegionSlot>>,
+    /// Hot per-region state, `Arc`'d so the fast path can drop the
+    /// (uncontended) read guard before committing its atomics.
+    hot: RwLock<Vec<Arc<RegionHot>>>,
     /// Round-robin placement cursor.
     rr_next: AtomicUsize,
     /// NUMA node count for round-robin wrapping.
     n_nodes: usize,
     /// Per-node homed bytes (all regions, attached or not): the memory
-    /// *pressure* view. Written under the slots lock, read lock-free by
-    /// the pressure-aware pick pass 1.
+    /// *pressure* view. Written by the placement-changing (locked)
+    /// paths, read lock-free by the pressure-aware pick pass 1.
     node_homed: Vec<AtomicU64>,
+    /// Monotonic pressure version: bumped whenever `node_homed` moves,
+    /// so per-pick readers can cache a snapshot and refresh only when
+    /// placement actually changed.
+    epoch: AtomicU64,
 }
 
 impl RegionRegistry {
@@ -145,9 +234,11 @@ impl RegionRegistry {
         let n = n_nodes.max(1);
         RegionRegistry {
             slots: Mutex::new(Vec::new()),
+            hot: RwLock::new(Vec::new()),
             rr_next: AtomicUsize::new(0),
             n_nodes: n,
             node_homed: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            epoch: AtomicU64::new(0),
         }
     }
 
@@ -162,8 +253,22 @@ impl RegionRegistry {
         self.node_homed.iter().map(|a| a.load(Ordering::Relaxed)).collect()
     }
 
+    /// Allocation-free [`Self::pressure_view`]: clears and refills
+    /// `out` so per-pick readers can reuse one buffer.
+    pub fn pressure_view_into(&self, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(self.node_homed.iter().map(|a| a.load(Ordering::Relaxed)));
+    }
+
+    /// Current pressure epoch: moves (monotonically) exactly when some
+    /// `node_homed` counter does.
+    pub fn pressure_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
     fn pressure_add(&self, node: usize, bytes: u64) {
         self.node_homed[node].fetch_add(bytes, Ordering::Relaxed);
+        self.epoch.fetch_add(1, Ordering::Release);
     }
 
     fn pressure_move(&self, from: usize, to: usize, bytes: u64) {
@@ -173,6 +278,13 @@ impl RegionRegistry {
         let _ = self.node_homed[from]
             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(bytes)));
         self.node_homed[to].fetch_add(bytes, Ordering::Relaxed);
+        self.epoch.fetch_add(1, Ordering::Release);
+    }
+
+    /// The hot handle of one region (cloned out of the uncontended read
+    /// guard).
+    fn hot_of(&self, r: RegionId) -> Arc<RegionHot> {
+        self.hot.read().unwrap()[r].clone()
     }
 
     /// Allocate a region of `size` bytes under `policy`.
@@ -196,18 +308,12 @@ impl RegionRegistry {
             }
         };
         let mut slots = self.slots.lock().unwrap();
+        let mut hot = self.hot.write().unwrap();
         if let Some(n) = home {
             self.pressure_add(n, size);
         }
-        slots.push(RegionInfo {
-            size,
-            home,
-            stripes: Vec::new(),
-            last_toucher: None,
-            owner: None,
-            touches: 0,
-            next_touch: false,
-        });
+        slots.push(RegionSlot { size, stripe_sizes: Vec::new(), owner: None });
+        hot.push(Arc::new(RegionHot::new(home, &[])));
         slots.len() - 1
     }
 
@@ -227,24 +333,16 @@ impl RegionRegistry {
         }
         let n = nodes.len() as u64;
         let (base, rem) = (size / n, size % n);
-        let stripes: Vec<Stripe> = nodes
-            .iter()
-            .enumerate()
-            .map(|(i, &node)| Stripe { node, size: base + u64::from((i as u64) < rem) })
+        let stripe_sizes: Vec<u64> = (0..nodes.len())
+            .map(|i| base + u64::from((i as u64) < rem))
             .collect();
         let mut slots = self.slots.lock().unwrap();
-        for s in &stripes {
-            self.pressure_add(s.node, s.size);
+        let mut hot = self.hot.write().unwrap();
+        for (&node, &bytes) in nodes.iter().zip(&stripe_sizes) {
+            self.pressure_add(node, bytes);
         }
-        slots.push(RegionInfo {
-            size,
-            home: None,
-            stripes,
-            last_toucher: None,
-            owner: None,
-            touches: 0,
-            next_touch: false,
-        });
+        slots.push(RegionSlot { size, stripe_sizes, owner: None });
+        hot.push(Arc::new(RegionHot::new(None, nodes)));
         slots.len() - 1
     }
 
@@ -258,25 +356,46 @@ impl RegionRegistry {
         self.len() == 0
     }
 
+    fn build_info(slot: &RegionSlot, h: &RegionHot) -> RegionInfo {
+        RegionInfo {
+            size: slot.size,
+            home: if slot.stripe_sizes.is_empty() { h.home_node() } else { None },
+            stripes: slot
+                .stripe_sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &size)| Stripe { node: h.stripe_nodes[i].load(Ordering::Acquire), size })
+                .collect(),
+            last_toucher: h.last(),
+            owner: slot.owner,
+            touches: h.touches.load(Ordering::Acquire),
+            next_touch: h.next_touch.load(Ordering::Acquire),
+        }
+    }
+
     /// Snapshot of one region.
     pub fn info(&self, r: RegionId) -> RegionInfo {
-        self.slots.lock().unwrap()[r].clone()
+        let slots = self.slots.lock().unwrap();
+        let hot = self.hot.read().unwrap();
+        Self::build_info(&slots[r], &hot[r])
     }
 
     /// Snapshot of every region (test/debug iteration).
     pub fn snapshot(&self) -> Vec<RegionInfo> {
-        self.slots.lock().unwrap().clone()
+        let slots = self.slots.lock().unwrap();
+        let hot = self.hot.read().unwrap();
+        slots.iter().zip(hot.iter()).map(|(s, h)| Self::build_info(s, h)).collect()
     }
 
     /// Total touches recorded across all regions.
     pub fn total_touches(&self) -> u64 {
-        self.slots.lock().unwrap().iter().map(|s| s.touches).sum()
+        self.hot.read().unwrap().iter().map(|h| h.touches.load(Ordering::Acquire)).sum()
     }
 
     /// Home node of a region (None before first touch, and None for
     /// striped regions — their homes are per stripe, see [`Self::info`]).
     pub fn home(&self, r: RegionId) -> Option<usize> {
-        self.slots.lock().unwrap()[r].home
+        self.hot_of(r).home_node()
     }
 
     /// Attach a region to `task`, replacing any previous owner. Returns
@@ -285,14 +404,21 @@ impl RegionRegistry {
     /// striped region).
     pub fn attach(&self, r: RegionId, task: TaskId) -> (Option<TaskId>, Vec<HomeChange>) {
         let mut slots = self.slots.lock().unwrap();
+        let hot = self.hot.read().unwrap();
         let slot = &mut slots[r];
+        let h = &hot[r];
         let prev = slot.owner.replace(task);
-        let deltas = if !slot.stripes.is_empty() {
-            slot.stripes
+        let deltas = if !slot.stripe_sizes.is_empty() {
+            slot.stripe_sizes
                 .iter()
-                .map(|s| HomeChange::Homed { owner: Some(task), node: s.node, size: s.size })
+                .enumerate()
+                .map(|(i, &size)| HomeChange::Homed {
+                    owner: Some(task),
+                    node: h.stripe_nodes[i].load(Ordering::Acquire),
+                    size,
+                })
                 .collect()
-        } else if let Some(node) = slot.home {
+        } else if let Some(node) = h.home_node() {
             vec![HomeChange::Homed { owner: Some(task), node, size: slot.size }]
         } else {
             Vec::new()
@@ -300,64 +426,85 @@ impl RegionRegistry {
         (prev, deltas)
     }
 
+    /// Lock-free steady-state touch: commits iff the touch cannot
+    /// change placement — the region is homed (or striped) and carries
+    /// no next-touch mark. Returns None when the locked [`Self::touch`]
+    /// must run instead (first touch, pending migration). A mark racing
+    /// in after the commit linearises this touch before the mark.
+    pub fn touch_fast(&self, r: RegionId, cpu: CpuId) -> Option<Touch> {
+        let h = self.hot_of(r);
+        if h.next_touch.load(Ordering::Acquire) || !h.is_homed() {
+            return None;
+        }
+        let k = h.touches.fetch_add(1, Ordering::AcqRel);
+        let prev = h.last_toucher.swap(cpu.0, Ordering::AcqRel);
+        let home = if h.stripe_nodes.is_empty() {
+            h.home.load(Ordering::Acquire)
+        } else {
+            h.stripe_nodes[(k % h.stripe_nodes.len() as u64) as usize].load(Ordering::Acquire)
+        };
+        Some(Touch { home, last_toucher: (prev != NONE_IDX).then_some(CpuId(prev)), migrated: 0 })
+    }
+
     /// Record a touch by a CPU on NUMA node `node`: first touch homes
-    /// the region, next-touch migrates it. On a striped region the
-    /// touch lands on the stripes in rotation (touch `k` hits stripe
+    /// the region, next-touch migrates. On a striped region the touch
+    /// lands on the stripes in rotation (touch `k` hits stripe
     /// `k mod n` — a sequential sweep over the striped array), and a
     /// next-touch mark migrates only the touched stripe. Returns the
-    /// resolved touch and any footprint delta.
+    /// resolved touch and any footprint delta. This is the locked slow
+    /// path; [`Self::touch_fast`] handles the placement-neutral case.
     pub fn touch(&self, r: RegionId, cpu: CpuId, node: usize) -> (Touch, Option<HomeChange>) {
-        let mut slots = self.slots.lock().unwrap();
-        let slot = &mut slots[r];
-        slot.touches += 1;
-        let prev_toucher = slot.last_toucher;
-        slot.last_toucher = Some(cpu);
-        if !slot.stripes.is_empty() {
-            let idx = ((slot.touches - 1) % slot.stripes.len() as u64) as usize;
+        let slots = self.slots.lock().unwrap();
+        let hot = self.hot.read().unwrap();
+        let slot = &slots[r];
+        let h = &hot[r];
+        let k = h.touches.fetch_add(1, Ordering::AcqRel);
+        let prev = h.last_toucher.swap(cpu.0, Ordering::AcqRel);
+        let prev_toucher = (prev != NONE_IDX).then_some(CpuId(prev));
+        if !slot.stripe_sizes.is_empty() {
+            let idx = (k % slot.stripe_sizes.len() as u64) as usize;
             let owner = slot.owner;
-            let stripe = &mut slot.stripes[idx];
-            let old = stripe.node;
-            let (delta, migrated) = if slot.next_touch && old != node {
-                stripe.node = node;
-                let size = stripe.size;
-                slot.next_touch = false;
+            let old = h.stripe_nodes[idx].load(Ordering::Acquire);
+            // Any touch consumes the mark (a same-node touch means the
+            // touched stripe already is where the toucher runs).
+            let marked = h.next_touch.swap(false, Ordering::AcqRel);
+            let (delta, migrated) = if marked && old != node {
+                h.stripe_nodes[idx].store(node, Ordering::Release);
+                let size = slot.stripe_sizes[idx];
                 self.pressure_move(old, node, size);
                 (Some(HomeChange::Moved { owner, from: old, to: node, size }), size)
             } else {
-                // Any touch consumes the mark (a same-node touch means
-                // the touched stripe already is where the toucher runs).
-                slot.next_touch = false;
                 (None, 0)
             };
-            let home = slot.stripes[idx].node;
+            let home = h.stripe_nodes[idx].load(Ordering::Acquire);
             return (Touch { home, last_toucher: prev_toucher, migrated }, delta);
         }
-        let (home, delta, migrated) = match slot.home {
+        let (home, delta, migrated) = match h.home_node() {
             None => {
-                slot.home = Some(node);
+                h.home.store(node, Ordering::Release);
                 self.pressure_add(node, slot.size);
                 (node, Some(HomeChange::Homed { owner: slot.owner, node, size: slot.size }), 0)
-            }
-            Some(old) if slot.next_touch && old != node => {
-                slot.home = Some(node);
-                slot.next_touch = false;
-                self.pressure_move(old, node, slot.size);
-                (
-                    node,
-                    Some(HomeChange::Moved {
-                        owner: slot.owner,
-                        from: old,
-                        to: node,
-                        size: slot.size,
-                    }),
-                    slot.size,
-                )
             }
             Some(old) => {
                 // A same-node touch also consumes the next-touch mark:
                 // the data already is where the toucher runs.
-                slot.next_touch = false;
-                (old, None, 0)
+                let marked = h.next_touch.swap(false, Ordering::AcqRel);
+                if marked && old != node {
+                    h.home.store(node, Ordering::Release);
+                    self.pressure_move(old, node, slot.size);
+                    (
+                        node,
+                        Some(HomeChange::Moved {
+                            owner: slot.owner,
+                            from: old,
+                            to: node,
+                            size: slot.size,
+                        }),
+                        slot.size,
+                    )
+                } else {
+                    (old, None, 0)
+                }
             }
         };
         (Touch { home, last_toucher: prev_toucher, migrated }, delta)
@@ -365,18 +512,19 @@ impl RegionRegistry {
 
     /// Mark one region for next-touch migration.
     pub fn mark_next_touch(&self, r: RegionId) {
-        self.slots.lock().unwrap()[r].next_touch = true;
+        self.hot_of(r).next_touch.store(true, Ordering::Release);
     }
 
     /// Mark every region attached to `task` for next-touch migration
     /// (a migrated thread asks its memory to follow it). Returns the
     /// bytes marked.
     pub fn mark_owner_next_touch(&self, task: TaskId) -> u64 {
-        let mut slots = self.slots.lock().unwrap();
+        let slots = self.slots.lock().unwrap();
+        let hot = self.hot.read().unwrap();
         let mut bytes = 0;
-        for slot in slots.iter_mut() {
+        for (slot, h) in slots.iter().zip(hot.iter()) {
             if slot.owner == Some(task) {
-                slot.next_touch = true;
+                h.next_touch.store(true, Ordering::Release);
                 bytes += slot.size;
             }
         }
@@ -388,10 +536,12 @@ impl RegionRegistry {
     /// Striped regions are homed at declaration, so they count in full.
     pub fn attached_homed_bytes(&self) -> u64 {
         let slots = self.slots.lock().unwrap();
+        let hot = self.hot.read().unwrap();
         slots
             .iter()
-            .filter(|s| s.owner.is_some() && s.is_homed())
-            .map(|s| s.size)
+            .zip(hot.iter())
+            .filter(|(s, h)| s.owner.is_some() && h.is_homed())
+            .map(|(s, _)| s.size)
             .sum()
     }
 }
@@ -531,5 +681,64 @@ mod tests {
         let _ = reg.alloc_striped(10, &[0, 1]);
         assert_eq!(reg.pressure_view(), vec![165, 5]);
         assert_eq!(reg.node_pressure(1), 5);
+    }
+
+    #[test]
+    fn fast_touch_commits_only_when_placement_cannot_change() {
+        let reg = RegionRegistry::new(2);
+        let r = reg.alloc(64, AllocPolicy::FirstTouch);
+        // Unhomed: the first touch must home it — slow path only.
+        assert!(reg.touch_fast(r, CpuId(0)).is_none());
+        assert_eq!(reg.info(r).touches, 0, "a declined fast touch records nothing");
+        reg.touch(r, CpuId(0), 0);
+        // Homed and unmarked: fast path commits.
+        let t = reg.touch_fast(r, CpuId(3)).expect("steady state takes the fast path");
+        assert_eq!((t.home, t.migrated), (0, 0));
+        assert_eq!(t.last_toucher, Some(CpuId(0)));
+        assert_eq!(reg.info(r).touches, 2);
+        assert_eq!(reg.info(r).last_toucher, Some(CpuId(3)));
+        // Marked: migration pending — back to the slow path.
+        reg.mark_next_touch(r);
+        assert!(reg.touch_fast(r, CpuId(1)).is_none());
+    }
+
+    #[test]
+    fn fast_touches_share_the_stripe_rotation() {
+        let reg = RegionRegistry::new(4);
+        let r = reg.alloc_striped(30, &[0, 1, 2]);
+        // Striped regions are placed at declaration, so even the very
+        // first touch is placement-neutral. Fast and slow touches drive
+        // one shared rotation counter.
+        let t0 = reg.touch_fast(r, CpuId(0)).unwrap();
+        let (t1, _) = reg.touch(r, CpuId(0), 3);
+        let t2 = reg.touch_fast(r, CpuId(0)).unwrap();
+        let t3 = reg.touch_fast(r, CpuId(0)).unwrap();
+        assert_eq!(
+            (t0.home, t1.home, t2.home, t3.home),
+            (0, 1, 2, 0),
+            "rotation sweeps the stripes regardless of path"
+        );
+        assert_eq!(reg.info(r).touches, 4);
+    }
+
+    #[test]
+    fn pressure_epoch_moves_exactly_with_placement() {
+        let reg = RegionRegistry::new(2);
+        let e0 = reg.pressure_epoch();
+        let r = reg.alloc(100, AllocPolicy::Fixed(0));
+        let e1 = reg.pressure_epoch();
+        assert!(e1 > e0, "placing a region moves the epoch");
+        // Steady-state touches change nothing: epoch holds, so a cached
+        // pressure snapshot stays valid.
+        reg.touch_fast(r, CpuId(1)).unwrap();
+        reg.touch(r, CpuId(1), 1);
+        assert_eq!(reg.pressure_epoch(), e1);
+        // Migration moves bytes: epoch moves.
+        reg.mark_next_touch(r);
+        reg.touch(r, CpuId(2), 1);
+        assert!(reg.pressure_epoch() > e1);
+        let mut buf = Vec::new();
+        reg.pressure_view_into(&mut buf);
+        assert_eq!(buf, vec![0, 100]);
     }
 }

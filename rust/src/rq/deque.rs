@@ -1,0 +1,276 @@
+//! A Chase-Lev-style work-stealing deque — the per-CPU *fast lane*.
+//!
+//! One end ("bottom") belongs to the owning CPU: it pushes and pops
+//! there without taking any lock. Every other CPU is a *thief* and
+//! takes from the opposite end ("top") with a single CAS. The memory
+//! ordering discipline follows the classic formulation (Chase & Lev,
+//! SPAA '05; Lê et al., PPoPP '13): the only cross-thread arbitration
+//! is the CAS on `top`, so the common owner push/pop never contends.
+//!
+//! Differences from the textbook deque, driven by how [`super::RunList`]
+//! uses it:
+//!
+//! * **Fixed capacity, no growth.** The ring is a `Box<[AtomicU64]>`
+//!   sized at construction; a full deque makes `push_bottom` return the
+//!   task to the caller, which falls back to the locked priority
+//!   buckets. No reallocation means no reclamation hazard and the whole
+//!   structure is safe Rust.
+//! * **FIFO consumption by default.** The paper's §3.3.3 "requeue at
+//!   the end of the class" semantics requires FIFO within a priority
+//!   class, so the runqueue integration drains the lane from the *top*
+//!   (steal) end even on the owner's own picks. `pop_bottom` (owner
+//!   LIFO) is provided and tested for policies that want cache-hot
+//!   depth-first execution, but the default pick path never uses it.
+//!
+//! Indices are monotonically increasing `i64`s; `index & mask` locates
+//! the slot. A slot can only be overwritten once `top` has advanced
+//! past it (the capacity check in `push_bottom` reads `top`), and any
+//! advance of `top` fails the in-flight thief CAS, so a thief can never
+//! observe a torn or recycled value it then returns.
+
+use std::sync::atomic::{fence, AtomicI64, AtomicU64, Ordering};
+
+use crate::task::TaskId;
+
+/// Fast-lane capacity (slots). Power of two; beyond this, pushes spill
+/// to the priority buckets, so it only needs to cover a leaf's typical
+/// ready backlog.
+pub const FAST_LANE_CAP: usize = 256;
+
+/// The deque proper. All methods are safe to call from any thread, but
+/// `push_bottom`/`pop_bottom` assume a **single concurrent caller** (the
+/// owner); [`super::RunList`] enforces that by checking the caller's
+/// CPU identity before routing here.
+#[derive(Debug)]
+pub struct StealDeque {
+    /// Next index a thief takes. Monotonic.
+    top: AtomicI64,
+    /// Next index the owner pushes. Only the owner writes it.
+    bottom: AtomicI64,
+    slots: Box<[AtomicU64]>,
+    mask: i64,
+}
+
+impl StealDeque {
+    /// An empty deque holding up to `cap` tasks (rounded up to a power
+    /// of two).
+    pub fn new(cap: usize) -> StealDeque {
+        let cap = cap.max(2).next_power_of_two();
+        StealDeque {
+            top: AtomicI64::new(0),
+            bottom: AtomicI64::new(0),
+            slots: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            mask: cap as i64 - 1,
+        }
+    }
+
+    fn slot(&self, i: i64) -> &AtomicU64 {
+        &self.slots[(i & self.mask) as usize]
+    }
+
+    /// Queued tasks (advisory under concurrency, exact when quiescent).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Acquire);
+        let t = self.top.load(Ordering::Acquire);
+        (b - t).max(0) as usize
+    }
+
+    /// True when the deque is (probably) empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner-only: enqueue at the bottom. `Err(task)` when the ring is
+    /// full — the caller spills to the locked buckets.
+    pub fn push_bottom(&self, task: TaskId) -> Result<(), TaskId> {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        if b - t > self.mask {
+            return Err(task); // full (a stale `t` only under-admits)
+        }
+        self.slot(b).store(task.0 as u64, Ordering::Relaxed);
+        // Publish the slot before the new bottom so a thief acquiring
+        // `bottom` sees the value.
+        self.bottom.store(b + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Owner-only: dequeue at the bottom (LIFO). The final-element race
+    /// against thieves is arbitrated by a CAS on `top`.
+    pub fn pop_bottom(&self) -> Option<TaskId> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // Already empty: undo the decrement.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let task = TaskId(self.slot(b).load(Ordering::Relaxed) as usize);
+        if t < b {
+            return Some(task); // more than one element: no race possible
+        }
+        // Single element: win it against thieves or concede.
+        let won = self
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok();
+        self.bottom.store(b + 1, Ordering::Relaxed);
+        if won {
+            Some(task)
+        } else {
+            None
+        }
+    }
+
+    /// Any thread: take the oldest task (FIFO end) with a single CAS.
+    /// `None` means empty *or* lost a race — callers that must drain
+    /// retry while [`Self::is_empty`] is false (each failed CAS means
+    /// another thread took an element, so the retry loop is bounded).
+    pub fn steal_top(&self) -> Option<TaskId> {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return None;
+        }
+        let task = TaskId(self.slot(t).load(Ordering::Relaxed) as usize);
+        if self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok() {
+            Some(task)
+        } else {
+            None
+        }
+    }
+
+    /// Drain from the steal end until an observed-empty, collecting into
+    /// `out` in FIFO order. Used by the bucket-fallback `remove` path;
+    /// bounded even against a concurrent owner because each iteration
+    /// either advances `top` globally or observes empty.
+    pub fn drain_into(&self, out: &mut Vec<TaskId>) {
+        loop {
+            match self.steal_top() {
+                Some(t) => out.push(t),
+                None if self.is_empty() => break,
+                None => continue, // lost a CAS race; someone else advanced
+            }
+        }
+    }
+
+    /// Racy copy of the queued tasks, oldest (steal end) first — test
+    /// and trace support only.
+    pub fn snapshot(&self) -> Vec<TaskId> {
+        let t = self.top.load(Ordering::Acquire);
+        let b = self.bottom.load(Ordering::Acquire);
+        (t..b.max(t)).map(|i| TaskId(self.slot(i).load(Ordering::Relaxed) as usize)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn owner_lifo_and_thief_fifo() {
+        let d = StealDeque::new(8);
+        for i in 0..3 {
+            d.push_bottom(TaskId(i)).unwrap();
+        }
+        // Owner end is LIFO…
+        assert_eq!(d.pop_bottom(), Some(TaskId(2)));
+        // …the steal end is FIFO.
+        assert_eq!(d.steal_top(), Some(TaskId(0)));
+        assert_eq!(d.pop_bottom(), Some(TaskId(1)));
+        assert_eq!(d.pop_bottom(), None);
+        assert_eq!(d.steal_top(), None);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn full_deque_rejects_push() {
+        let d = StealDeque::new(4);
+        for i in 0..4 {
+            d.push_bottom(TaskId(i)).unwrap();
+        }
+        assert_eq!(d.push_bottom(TaskId(99)), Err(TaskId(99)));
+        assert_eq!(d.steal_top(), Some(TaskId(0)));
+        // One slot freed: the next push fits again.
+        d.push_bottom(TaskId(99)).unwrap();
+        assert_eq!(d.len(), 4);
+    }
+
+    #[test]
+    fn wraparound_keeps_order() {
+        let d = StealDeque::new(4);
+        for round in 0..10 {
+            for i in 0..3 {
+                d.push_bottom(TaskId(round * 3 + i)).unwrap();
+            }
+            for i in 0..3 {
+                assert_eq!(d.steal_top(), Some(TaskId(round * 3 + i)));
+            }
+        }
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn drain_collects_fifo() {
+        let d = StealDeque::new(8);
+        for i in 0..5 {
+            d.push_bottom(TaskId(i)).unwrap();
+        }
+        let mut out = Vec::new();
+        d.drain_into(&mut out);
+        assert_eq!(out, (0..5).map(TaskId).collect::<Vec<_>>());
+        assert!(d.is_empty());
+    }
+
+    /// One owner pushing + popping, several thieves stealing: every
+    /// pushed id comes out exactly once.
+    #[test]
+    fn stress_no_loss_no_duplication() {
+        let d = Arc::new(StealDeque::new(64));
+        let total = 20_000usize;
+        let taken = Arc::new(AtomicUsize::new(0));
+        let seen: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..total).map(|_| AtomicUsize::new(0)).collect());
+        let mut thieves = Vec::new();
+        for _ in 0..3 {
+            let d = d.clone();
+            let taken = taken.clone();
+            let seen = seen.clone();
+            thieves.push(std::thread::spawn(move || {
+                while taken.load(Ordering::SeqCst) < total {
+                    if let Some(t) = d.steal_top() {
+                        seen[t.0].fetch_add(1, Ordering::SeqCst);
+                        taken.fetch_add(1, Ordering::SeqCst);
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let mut next = 0usize;
+        while next < total {
+            match d.push_bottom(TaskId(next)) {
+                Ok(()) => next += 1,
+                Err(_) => {
+                    // Ring full: the owner takes some back itself.
+                    if let Some(t) = d.pop_bottom() {
+                        seen[t.0].fetch_add(1, Ordering::SeqCst);
+                        taken.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            }
+        }
+        for th in thieves {
+            th.join().unwrap();
+        }
+        let counts: HashSet<usize> =
+            seen.iter().map(|c| c.load(Ordering::SeqCst)).collect();
+        assert_eq!(counts, HashSet::from([1]), "every task exactly once");
+    }
+}

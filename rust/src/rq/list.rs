@@ -1,24 +1,43 @@
-//! A single priority task list with a lock-free max-priority hint.
+//! A single task list: priority buckets plus an optional lock-free
+//! fast lane.
 //!
-//! The hot-path layout is a **fixed-size priority-bucket array with an
+//! The locked tier is a **fixed-size priority-bucket array with an
 //! occupancy bitmask**: `pop_max` and `max_prio` are constant-time word
 //! scans (find-highest-set-bit over two `u64`s) instead of a
 //! `BTreeMap` walk, and `remove` indexes the task's bucket directly
 //! instead of scanning every priority class. (The legacy `BtreeRunList`
 //! comparison baseline was dropped in PR 5 once `BENCH_rq.json` had a
 //! few PRs of history showing the bucket layout winning.)
+//!
+//! Leaf lists additionally carry a **fast lane** — a Chase-Lev-style
+//! deque ([`super::StealDeque`]) owned by the leaf's CPU. See the
+//! module docs of [`crate::rq`] for the routing rules; in short: the
+//! owner's same-priority (`FAST_LANE_PRIO`) pushes go to the lane and
+//! both local picks and remote steals take from its CAS end, while
+//! priority outliers, remote pushes, spills from a full ring, and
+//! `remove` use the buckets. On a priority *tie* between the tiers the
+//! buckets win, so remote-pushed work can never starve behind an
+//! owner's push/pop cycle.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicI32, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicI32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::task::{Prio, TaskId};
-use crate::topology::LevelId;
+use super::deque::{StealDeque, FAST_LANE_CAP};
+use super::owner;
+use crate::task::{Prio, TaskId, PRIO_THREAD};
+use crate::topology::{CpuId, LevelId};
 
 /// Lowest priority with its own bucket; anything below saturates here.
 pub const PRIO_FLOOR: Prio = -64;
 /// Highest priority with its own bucket; anything above saturates here.
 pub const PRIO_CEIL: Prio = 63;
+
+/// The one priority class the fast lane serves: ordinary threads. The
+/// common yield/requeue/pick cycle is same-priority FIFO (§3.3.3), so
+/// this single class covers the contended hot path; everything else is
+/// a priority outlier and takes the buckets.
+pub const FAST_LANE_PRIO: Prio = PRIO_THREAD;
 
 const N_BUCKETS: usize = (PRIO_CEIL - PRIO_FLOOR + 1) as usize;
 const WORDS: usize = N_BUCKETS / 64;
@@ -143,27 +162,56 @@ impl Buckets {
     }
 }
 
+/// The lock-free tier of a leaf list plus its traffic counters (the
+/// counters let tests assert the lane actually engaged).
+#[derive(Debug)]
+struct FastLane {
+    owner: CpuId,
+    deque: StealDeque,
+    pushes: AtomicU64,
+    pops: AtomicU64,
+}
+
 /// One task list (one topology component's runqueue).
 ///
-/// `max_prio`/`count` are lock-free *hints* maintained under the lock:
-/// pass-1 scans may read slightly stale values; pass 2 re-checks under
-/// the lock, exactly as the paper's implementation does (§4).
+/// `max_prio`/`count` are lock-free *hints* maintained under the lock
+/// and covering the **bucket tier only**: pass-1 scans may read
+/// slightly stale values; pass 2 re-checks under the lock, exactly as
+/// the paper's implementation does (§4). [`RunList::peek_max`] and
+/// [`RunList::len`] fold the fast lane in, so callers still see the
+/// whole list.
 #[derive(Debug)]
 pub struct RunList {
     level: LevelId,
     inner: Mutex<Buckets>,
     max_prio: AtomicI32,
     count: AtomicUsize,
+    fast: Option<FastLane>,
 }
 
 impl RunList {
+    /// A bucket-only list (interior components, baselines' shared
+    /// lists, and the bench's "locked" comparison leg).
     pub fn new(level: LevelId) -> RunList {
         RunList {
             level,
             inner: Mutex::new(Buckets::default()),
             max_prio: AtomicI32::new(i32::MIN),
             count: AtomicUsize::new(0),
+            fast: None,
         }
+    }
+
+    /// A leaf list with a fast lane owned by `owner` (the leaf's CPU).
+    pub fn with_fast_lane(level: LevelId, owner: CpuId) -> RunList {
+        let mut l = RunList::new(level);
+        l.fast = Some(FastLane {
+            owner,
+            deque: StealDeque::new(FAST_LANE_CAP),
+            pushes: AtomicU64::new(0),
+            pops: AtomicU64::new(0),
+        });
+        l
     }
 
     /// Which component this list belongs to.
@@ -171,16 +219,45 @@ impl RunList {
         self.level
     }
 
-    /// Enqueue (FIFO within the priority class).
+    /// The CPU owning this list's fast lane, if it has one.
+    pub fn fast_lane_owner(&self) -> Option<CpuId> {
+        self.fast.as_ref().map(|f| f.owner)
+    }
+
+    /// (pushes, pops) served by the fast lane so far — test/bench
+    /// observability.
+    pub fn fast_lane_ops(&self) -> (u64, u64) {
+        match &self.fast {
+            Some(f) => (f.pushes.load(Ordering::Relaxed), f.pops.load(Ordering::Relaxed)),
+            None => (0, 0),
+        }
+    }
+
+    /// Enqueue (FIFO within the priority class). An owner-context push
+    /// of the fast-lane class goes to the lock-free lane; everything
+    /// else — remote pushes, priority outliers, spills from a full
+    /// ring — takes the buckets.
     pub fn push(&self, task: TaskId, prio: Prio) {
+        if let Some(f) = &self.fast {
+            if prio == FAST_LANE_PRIO
+                && owner::current_cpu() == Some(f.owner)
+                && f.deque.push_bottom(task).is_ok()
+            {
+                f.pushes.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        self.push_bucket(task, prio);
+    }
+
+    fn push_bucket(&self, task: TaskId, prio: Prio) {
         let mut b = self.inner.lock().unwrap();
         b.push(task, prio);
         self.max_prio.store(b.max_prio(), Ordering::Release);
         self.count.store(b.len(), Ordering::Release);
     }
 
-    /// Dequeue the highest-priority task.
-    pub fn pop_max(&self) -> Option<(TaskId, Prio)> {
+    fn pop_bucket(&self) -> Option<(TaskId, Prio)> {
         let mut b = self.inner.lock().unwrap();
         let out = b.pop_max();
         self.max_prio.store(b.max_prio(), Ordering::Release);
@@ -188,17 +265,78 @@ impl RunList {
         out
     }
 
-    /// Lock-free max-priority hint; `i32::MIN` when (probably) empty.
-    /// Exact for every priority, including values outside
+    /// Take from the lane's steal end, retrying lost CAS races while
+    /// the lane still looks non-empty (bounded: every lost race means
+    /// another CPU took an element).
+    fn pop_fast(f: &FastLane) -> Option<(TaskId, Prio)> {
+        while !f.deque.is_empty() {
+            if let Some(t) = f.deque.steal_top() {
+                f.pops.fetch_add(1, Ordering::Relaxed);
+                return Some((t, FAST_LANE_PRIO));
+            }
+        }
+        None
+    }
+
+    /// Dequeue the highest-priority task. The lane is consumed from the
+    /// steal (FIFO) end even by the owner, preserving requeue-at-end
+    /// class semantics; a priority tie between the tiers goes to the
+    /// buckets (remote pushes must not starve).
+    pub fn pop_max(&self) -> Option<(TaskId, Prio)> {
+        let Some(f) = &self.fast else {
+            return self.pop_bucket();
+        };
+        // Common contended case: buckets (by their hint) hold nothing
+        // at or above the lane's class → serve the lane, no lock.
+        if self.max_prio.load(Ordering::Acquire) < FAST_LANE_PRIO {
+            if let Some(out) = Self::pop_fast(f) {
+                return Some(out);
+            }
+        }
+        // Locked tier: pop it only if it genuinely wins (≥ lane class,
+        // or the lane is empty — a lower-priority bucket task must not
+        // jump ahead of queued lane work).
+        let (out, took_bucket) = {
+            let mut b = self.inner.lock().unwrap();
+            let take = b.max_prio() >= FAST_LANE_PRIO || f.deque.is_empty();
+            let out = if take { b.pop_max() } else { None };
+            self.max_prio.store(b.max_prio(), Ordering::Release);
+            self.count.store(b.len(), Ordering::Release);
+            (out, take)
+        };
+        if out.is_some() {
+            return out;
+        }
+        if let Some(out) = Self::pop_fast(f) {
+            return Some(out);
+        }
+        // The locked tier was deliberately skipped (lane looked
+        // non-empty) but thieves emptied the lane first: the bucket
+        // item must still come out.
+        if took_bucket {
+            None
+        } else {
+            self.pop_bucket()
+        }
+    }
+
+    /// Max-priority hint; `i32::MIN` when (probably) empty. Lock-free:
+    /// the bucket hint folded with the lane's class when the lane is
+    /// non-empty. Exact for every priority, including values outside
     /// [`PRIO_FLOOR`, `PRIO_CEIL`] (those live sorted in the end
     /// buckets).
     pub fn peek_max(&self) -> Prio {
-        self.max_prio.load(Ordering::Acquire)
+        let hint = self.max_prio.load(Ordering::Acquire);
+        match &self.fast {
+            Some(f) if !f.deque.is_empty() => hint.max(FAST_LANE_PRIO),
+            _ => hint,
+        }
     }
 
-    /// Lock-free length hint.
+    /// Lock-free length hint (both tiers).
     pub fn len(&self) -> usize {
-        self.count.load(Ordering::Acquire)
+        let fast = self.fast.as_ref().map_or(0, |f| f.deque.len());
+        self.count.load(Ordering::Acquire) + fast
     }
 
     /// True when the hint says empty.
@@ -208,23 +346,61 @@ impl RunList {
 
     /// Remove a specific task, given the priority it was pushed with
     /// (tasks carry a fixed `prio`, so callers always know it). Returns
-    /// whether it was found.
+    /// whether it was found. If the buckets miss, the fast lane is
+    /// drained through its steal end and the survivors are respilled
+    /// into the buckets in FIFO order — `remove` is the regeneration
+    /// slow path, so evicting the lane is fine.
     pub fn remove(&self, task: TaskId, prio: Prio) -> bool {
+        {
+            let mut b = self.inner.lock().unwrap();
+            let hit = b.remove(task, prio);
+            self.max_prio.store(b.max_prio(), Ordering::Release);
+            self.count.store(b.len(), Ordering::Release);
+            if hit {
+                return true;
+            }
+        }
+        let Some(f) = &self.fast else {
+            return false;
+        };
+        let mut drained = Vec::new();
+        f.deque.drain_into(&mut drained);
+        if drained.is_empty() {
+            return false;
+        }
+        let mut found = false;
         let mut b = self.inner.lock().unwrap();
-        let hit = b.remove(task, prio);
+        for t in drained {
+            if !found && t == task {
+                found = true;
+            } else {
+                b.push(t, FAST_LANE_PRIO);
+            }
+        }
         self.max_prio.store(b.max_prio(), Ordering::Release);
         self.count.store(b.len(), Ordering::Release);
-        hit
+        found
     }
 
-    /// Copy of the queue contents (tests / traces), highest first.
+    /// Copy of the queue contents (tests / traces), in pop order:
+    /// bucket tasks at or above the lane class, then the lane (oldest
+    /// first), then the rest of the buckets.
     pub fn snapshot(&self) -> Vec<(TaskId, Prio)> {
-        let b = self.inner.lock().unwrap();
         let mut out = Vec::new();
-        for bk in (0..N_BUCKETS).rev() {
-            for &(t, p) in &b.queues[bk] {
-                out.push((t, p));
+        {
+            let b = self.inner.lock().unwrap();
+            for bk in (0..N_BUCKETS).rev() {
+                for &(t, p) in &b.queues[bk] {
+                    out.push((t, p));
+                }
             }
+        }
+        if let Some(f) = &self.fast {
+            let pos =
+                out.iter().position(|&(_, p)| p < FAST_LANE_PRIO).unwrap_or(out.len());
+            let lane: Vec<(TaskId, Prio)> =
+                f.deque.snapshot().into_iter().map(|t| (t, FAST_LANE_PRIO)).collect();
+            out.splice(pos..pos, lane);
         }
         out
     }
@@ -234,6 +410,16 @@ impl RunList {
 mod tests {
     use super::*;
     use std::sync::Arc;
+
+    /// Run `f` with the owner context pointing at `cpu`, restoring the
+    /// previous context afterwards (tests share OS threads).
+    fn as_cpu<R>(cpu: CpuId, f: impl FnOnce() -> R) -> R {
+        let prev = owner::current_cpu();
+        owner::set_current_cpu(Some(cpu));
+        let out = f();
+        owner::set_current_cpu(prev);
+        out
+    }
 
     #[test]
     fn hint_is_consistent_after_each_op() {
@@ -308,6 +494,107 @@ mod tests {
         assert_eq!(l.pop_max(), Some((TaskId(2), -10)));
         assert_eq!(l.pop_max(), Some((TaskId(0), -60)));
         assert_eq!(l.pop_max(), None);
+    }
+
+    #[test]
+    fn owner_pushes_take_the_lane_and_stay_fifo() {
+        let l = RunList::with_fast_lane(LevelId(0), CpuId(1));
+        as_cpu(CpuId(1), || {
+            for i in 0..4 {
+                l.push(TaskId(i), FAST_LANE_PRIO);
+            }
+        });
+        assert_eq!(l.fast_lane_ops().0, 4, "owner pushes must hit the lane");
+        assert_eq!(l.peek_max(), FAST_LANE_PRIO);
+        assert_eq!(l.len(), 4);
+        // FIFO out, from any thread, lock-free (bucket hint stays MIN).
+        for i in 0..4 {
+            assert_eq!(l.pop_max(), Some((TaskId(i), FAST_LANE_PRIO)));
+        }
+        assert_eq!(l.fast_lane_ops().1, 4);
+        assert_eq!(l.pop_max(), None);
+    }
+
+    #[test]
+    fn non_owner_and_outlier_pushes_take_buckets() {
+        let l = RunList::with_fast_lane(LevelId(0), CpuId(0));
+        // No owner context at all → buckets.
+        l.push(TaskId(0), FAST_LANE_PRIO);
+        // Wrong CPU → buckets.
+        as_cpu(CpuId(3), || l.push(TaskId(1), FAST_LANE_PRIO));
+        // Right CPU, outlier priority → buckets.
+        as_cpu(CpuId(0), || l.push(TaskId(2), FAST_LANE_PRIO + 1));
+        assert_eq!(l.fast_lane_ops(), (0, 0));
+        assert_eq!(l.pop_max(), Some((TaskId(2), FAST_LANE_PRIO + 1)));
+        assert_eq!(l.pop_max(), Some((TaskId(0), FAST_LANE_PRIO)));
+        assert_eq!(l.pop_max(), Some((TaskId(1), FAST_LANE_PRIO)));
+    }
+
+    #[test]
+    fn bucket_wins_priority_ties_and_outliers_win_outright() {
+        let l = RunList::with_fast_lane(LevelId(0), CpuId(0));
+        as_cpu(CpuId(0), || l.push(TaskId(10), FAST_LANE_PRIO)); // lane
+        l.push(TaskId(11), FAST_LANE_PRIO); // bucket, same class
+        l.push(TaskId(12), FAST_LANE_PRIO + 2); // bucket, higher
+        l.push(TaskId(13), FAST_LANE_PRIO - 1); // bucket, lower
+        assert_eq!(l.peek_max(), FAST_LANE_PRIO + 2);
+        // Higher bucket priority first, then the tie goes to the
+        // bucket, then the lane, then lower bucket priorities.
+        assert_eq!(l.pop_max(), Some((TaskId(12), FAST_LANE_PRIO + 2)));
+        assert_eq!(l.pop_max(), Some((TaskId(11), FAST_LANE_PRIO)));
+        assert_eq!(l.pop_max(), Some((TaskId(10), FAST_LANE_PRIO)));
+        assert_eq!(l.pop_max(), Some((TaskId(13), FAST_LANE_PRIO - 1)));
+        assert_eq!(l.pop_max(), None);
+    }
+
+    #[test]
+    fn full_lane_spills_to_buckets_and_loses_nothing() {
+        let l = RunList::with_fast_lane(LevelId(0), CpuId(0));
+        let n = FAST_LANE_CAP + 10;
+        as_cpu(CpuId(0), || {
+            for i in 0..n {
+                l.push(TaskId(i), FAST_LANE_PRIO);
+            }
+        });
+        assert_eq!(l.len(), n);
+        assert_eq!(l.fast_lane_ops().0 as usize, FAST_LANE_CAP);
+        let mut got: Vec<usize> =
+            std::iter::from_fn(|| l.pop_max().map(|(t, _)| t.0)).collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn remove_reaches_into_the_lane() {
+        let l = RunList::with_fast_lane(LevelId(0), CpuId(0));
+        as_cpu(CpuId(0), || {
+            for i in 0..5 {
+                l.push(TaskId(i), FAST_LANE_PRIO);
+            }
+        });
+        assert!(l.remove(TaskId(2), FAST_LANE_PRIO));
+        assert!(!l.remove(TaskId(2), FAST_LANE_PRIO));
+        // Survivors keep FIFO order (now via the buckets).
+        let order: Vec<usize> =
+            std::iter::from_fn(|| l.pop_max().map(|(t, _)| t.0)).collect();
+        assert_eq!(order, vec![0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn snapshot_merges_tiers_in_pop_order() {
+        let l = RunList::with_fast_lane(LevelId(0), CpuId(0));
+        as_cpu(CpuId(0), || l.push(TaskId(1), FAST_LANE_PRIO));
+        l.push(TaskId(0), FAST_LANE_PRIO + 1);
+        l.push(TaskId(2), FAST_LANE_PRIO - 2);
+        let snap = l.snapshot();
+        assert_eq!(
+            snap,
+            vec![
+                (TaskId(0), FAST_LANE_PRIO + 1),
+                (TaskId(1), FAST_LANE_PRIO),
+                (TaskId(2), FAST_LANE_PRIO - 2),
+            ]
+        );
     }
 
     #[test]

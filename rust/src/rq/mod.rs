@@ -10,6 +10,28 @@
 //! pass 2 locks only the selected list and re-checks, in case another
 //! processor took the task in the meantime.
 //!
+//! # Two-tier lists: fast lane + priority buckets
+//!
+//! Every list has a locked **priority-bucket** tier; single-CPU leaf
+//! lists additionally carry a lock-free **fast lane** — a
+//! Chase-Lev-style deque ([`StealDeque`]) owned by the leaf's CPU
+//! (§2.2: a contended shared list "is a bottleneck"). Routing:
+//!
+//! * the owner CPU's pushes at the common thread priority
+//!   ([`FAST_LANE_PRIO`]) go to the lane's bottom, lock-free (owner
+//!   identity comes from the [`owner`] thread-local, set by both
+//!   execution engines);
+//! * picks and steals take from the lane's top with one CAS —
+//!   hierarchy-ordered stealing needs no extra machinery, because
+//!   every steal path already walks [`crate::topology::Topology`]'s
+//!   precomputed scan orders and ends in `pop_max` on the victim leaf;
+//! * the **bucket fallback** triggers for priority outliers
+//!   (`prio != FAST_LANE_PRIO`), pushes from a thread with no or a
+//!   different CPU context (remote wakeups), spills when the lane's
+//!   fixed ring is full, and `remove` (which drains the lane through
+//!   its steal end and respills survivors). A priority *tie* between
+//!   the tiers is served bucket-first so remote work cannot starve.
+//!
 //! Besides the per-list hints, the hierarchy maintains **incremental
 //! subtree occupancy counters**: `queued_subtree(l)` is the number of
 //! tasks queued anywhere in `l`'s subtree, updated in O(depth) on every
@@ -17,9 +39,12 @@
 //! (e.g. an idle CPU bails out of a steal attempt in O(1) when the
 //! whole machine is empty).
 
+mod deque;
 mod list;
+pub mod owner;
 
-pub use list::{RunList, PRIO_CEIL, PRIO_FLOOR};
+pub use deque::{StealDeque, FAST_LANE_CAP};
+pub use list::{RunList, FAST_LANE_PRIO, PRIO_CEIL, PRIO_FLOOR};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -40,11 +65,23 @@ pub struct RqHierarchy {
 }
 
 impl RqHierarchy {
-    /// Build the list hierarchy for a machine.
+    /// Build the list hierarchy for a machine. Single-CPU leaves get a
+    /// fast lane owned by their CPU; every other component (and any
+    /// multi-CPU leaf an exotic topology might declare) is bucket-only.
     pub fn new(topo: &Topology) -> RqHierarchy {
         let n = topo.n_components();
         RqHierarchy {
-            lists: (0..n).map(|i| RunList::new(LevelId(i))).collect(),
+            lists: (0..n)
+                .map(|i| {
+                    let l = LevelId(i);
+                    let node = topo.node(l);
+                    if node.children.is_empty() && node.cpu_count == 1 {
+                        RunList::with_fast_lane(l, crate::topology::CpuId(node.cpu_first))
+                    } else {
+                        RunList::new(l)
+                    }
+                })
+                .collect(),
             parent: (0..n).map(|i| topo.node(LevelId(i)).parent).collect(),
             subtree: (0..n).map(|_| AtomicUsize::new(0)).collect(),
         }
@@ -129,6 +166,15 @@ impl RqHierarchy {
         self.subtree[0].load(Ordering::Relaxed)
     }
 
+    /// Total (pushes, pops) served lock-free by the fast lanes across
+    /// all lists — lets tests assert the lockless tier engaged.
+    pub fn fast_lane_ops(&self) -> (u64, u64) {
+        self.lists.iter().fold((0, 0), |(pu, po), l| {
+            let (p, q) = l.fast_lane_ops();
+            (pu + p, po + q)
+        })
+    }
+
     /// Snapshot of all (list, task, prio) triples — test/trace support.
     pub fn snapshot(&self) -> Vec<(LevelId, TaskId, Prio)> {
         let mut out = Vec::new();
@@ -208,6 +254,38 @@ mod tests {
         let snap = rq.snapshot();
         assert_eq!(snap.len(), 2);
         assert!(snap.contains(&(LevelId(2), TaskId(1), 2)));
+    }
+
+    #[test]
+    fn leaves_get_fast_lanes_and_counters_stay_exact() {
+        let topo = Topology::numa(2, 2);
+        let rq = RqHierarchy::new(&topo);
+        for i in 0..rq.len() {
+            let l = LevelId(i);
+            let node = topo.node(l);
+            let owner = rq.list(l).fast_lane_owner();
+            if node.children.is_empty() {
+                assert_eq!(owner, Some(crate::topology::CpuId(node.cpu_first)));
+            } else {
+                assert_eq!(owner, None);
+            }
+        }
+        // Owner-context pushes ride the lane; subtree counters and the
+        // snapshot still see them.
+        let cpu = crate::topology::CpuId(1);
+        let leaf = topo.leaf_of(cpu);
+        owner::set_current_cpu(Some(cpu));
+        rq.push(leaf, TaskId(0), FAST_LANE_PRIO);
+        rq.push(leaf, TaskId(1), FAST_LANE_PRIO);
+        owner::set_current_cpu(None);
+        assert_eq!(rq.fast_lane_ops().0, 2);
+        assert_eq!(rq.queued_subtree(topo.root()), 2);
+        assert_eq!(rq.len_of(leaf), 2);
+        assert_eq!(rq.snapshot().len(), 2);
+        assert_eq!(rq.pop_max(leaf), Some((TaskId(0), FAST_LANE_PRIO)));
+        assert!(rq.remove(leaf, TaskId(1), FAST_LANE_PRIO));
+        assert_eq!(rq.total_queued(), 0);
+        assert_eq!(rq.fast_lane_ops(), (2, 1));
     }
 
     #[test]

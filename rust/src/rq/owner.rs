@@ -1,0 +1,44 @@
+//! Which virtual CPU the current OS thread is acting as.
+//!
+//! The fast-lane deque ([`super::deque::StealDeque`]) has a
+//! single-producer bottom end: only the leaf's *owning* CPU may push
+//! there. "The owner" is a role, not a thread identity — the native
+//! executor pins one worker thread per virtual CPU, while the simulator
+//! plays every CPU from one thread — so the runqueue asks this
+//! thread-local context instead of guessing. A thread with no context
+//! set (tests driving lists directly, remote wakeups) simply takes the
+//! locked bucket path, which is always correct.
+
+use std::cell::Cell;
+
+use crate::topology::CpuId;
+
+thread_local! {
+    static CURRENT_CPU: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Declare that this OS thread is now acting as `cpu` (or, with `None`,
+/// as no CPU at all). The native executor sets it once per worker; the
+/// simulator re-points it at every event.
+pub fn set_current_cpu(cpu: Option<CpuId>) {
+    CURRENT_CPU.with(|c| c.set(cpu.map(|c| c.0)));
+}
+
+/// The virtual CPU this OS thread is acting as, if any.
+pub fn current_cpu() -> Option<CpuId> {
+    CURRENT_CPU.with(|c| c.get()).map(CpuId)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_is_per_thread() {
+        set_current_cpu(Some(CpuId(3)));
+        assert_eq!(current_cpu(), Some(CpuId(3)));
+        std::thread::spawn(|| assert_eq!(current_cpu(), None)).join().unwrap();
+        set_current_cpu(None);
+        assert_eq!(current_cpu(), None);
+    }
+}

@@ -36,8 +36,8 @@
 //! `metrics.scope_narrows`; [`AdaptiveScheduler::scope_switches`]
 //! totals them for tests.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 use super::core::stats::RateSnap;
 use super::core::{ops, pick, traversal};
@@ -76,37 +76,74 @@ impl Default for AdaptiveConfig {
     }
 }
 
-/// Per-CPU controller state.
-#[derive(Debug, Clone, Default)]
-struct CpuState {
+/// Floor on the slot allocation, so an instance built against a small
+/// machine still has headroom if a generic harness reuses it over a
+/// bigger one.
+const MIN_SLOTS: usize = 64;
+
+/// Per-CPU controller state as plain atomics. **Single-writer**: only
+/// the thread acting as a CPU runs that CPU's pick path (one worker per
+/// virtual CPU natively; the simulator is one thread), so every field
+/// is a read-modify-write by one thread and `Relaxed` suffices — the
+/// pick hot path reads its scope with one load, no lock. Cross-CPU
+/// readers (tests via `scope_of`) see each field individually
+/// consistent, which is all this advisory state needs.
+#[derive(Debug, Default)]
+struct CpuSlot {
     /// Index into the CPU's covering chain: 0 = leaf … len-1 = machine.
-    scope: usize,
+    scope: AtomicUsize,
     /// Consecutive picks that found nothing within the scope.
-    consec_fails: u32,
+    consec_fails: AtomicU32,
     /// Pick events since the last rate decision.
-    epoch_events: u32,
-    /// Scope component's rate counters at the last decision.
-    last: RateSnap,
+    epoch_events: AtomicU32,
     /// Consecutive calm epochs (towards a narrow).
-    narrow_streak: u32,
+    narrow_streak: AtomicU32,
+    /// Scope component's rate counters at the last decision
+    /// (a [`RateSnap`] exploded into per-field atomics).
+    last_steal_attempts: AtomicU64,
+    last_steal_fails: AtomicU64,
+    last_cross_node: AtomicU64,
+    last_idles: AtomicU64,
+    last_pressure_redirects: AtomicU64,
+}
+
+impl CpuSlot {
+    fn load_last(&self) -> RateSnap {
+        RateSnap {
+            steal_attempts: self.last_steal_attempts.load(Ordering::Relaxed),
+            steal_fails: self.last_steal_fails.load(Ordering::Relaxed),
+            cross_node: self.last_cross_node.load(Ordering::Relaxed),
+            idles: self.last_idles.load(Ordering::Relaxed),
+            pressure_redirects: self.last_pressure_redirects.load(Ordering::Relaxed),
+        }
+    }
+
+    fn store_last(&self, s: RateSnap) {
+        self.last_steal_attempts.store(s.steal_attempts, Ordering::Relaxed);
+        self.last_steal_fails.store(s.steal_fails, Ordering::Relaxed);
+        self.last_cross_node.store(s.cross_node, Ordering::Relaxed);
+        self.last_idles.store(s.idles, Ordering::Relaxed);
+        self.last_pressure_redirects.store(s.pressure_redirects, Ordering::Relaxed);
+    }
 }
 
 /// Adaptive steal-scope scheduler (registry name: `adaptive`).
 #[derive(Debug)]
 pub struct AdaptiveScheduler {
     cfg: AdaptiveConfig,
-    /// Per-CPU controller state behind per-CPU locks: a CPU's pick path
-    /// only ever touches its own entry, so the hot path takes one
-    /// uncontended read lock plus its own mutex. The outer `RwLock` is
-    /// written only to grow the vector on first sight of a machine
-    /// (schedulers are built before they see a [`System`]).
-    cpus: RwLock<Vec<Mutex<CpuState>>>,
+    /// Per-CPU controller slots, allocated once on first sight of a
+    /// machine (schedulers are built before they see a [`System`]),
+    /// sized `n_cpus.max(MIN_SLOTS)`. A CPU beyond the allocation (an
+    /// instance reused over a machine with more than `MIN_SLOTS` extra
+    /// CPUs) shares the last slot — the state is advisory, so aliasing
+    /// degrades scope choices, never correctness.
+    cpus: OnceLock<Box<[CpuSlot]>>,
     switches: AtomicU64,
 }
 
 impl AdaptiveScheduler {
     pub fn new(cfg: AdaptiveConfig) -> AdaptiveScheduler {
-        AdaptiveScheduler { cfg, cpus: RwLock::new(Vec::new()), switches: AtomicU64::new(0) }
+        AdaptiveScheduler { cfg, cpus: OnceLock::new(), switches: AtomicU64::new(0) }
     }
 
     /// Total scope switches (widen + narrow) so far — test/report hook.
@@ -116,81 +153,88 @@ impl AdaptiveScheduler {
 
     /// Current scope depth of a CPU (0 = leaf), for tests.
     pub fn scope_of(&self, cpu: CpuId) -> usize {
-        let v = self.cpus.read().unwrap();
-        v.get(cpu.0).map(|m| m.lock().unwrap().scope).unwrap_or(0)
+        match self.cpus.get() {
+            Some(slots) => slots[cpu.0.min(slots.len() - 1)].scope.load(Ordering::Relaxed),
+            None => 0,
+        }
     }
 
-    fn with_state<R>(&self, sys: &System, cpu: CpuId, f: impl FnOnce(&mut CpuState) -> R) -> R {
-        let n = sys.topo.n_cpus();
-        if self.cpus.read().unwrap().len() < n {
-            let mut v = self.cpus.write().unwrap();
-            while v.len() < n {
-                v.push(Mutex::new(CpuState::default()));
-            }
+    fn slot(&self, sys: &System, cpu: CpuId) -> &CpuSlot {
+        let slots = self.cpus.get_or_init(|| {
+            (0..sys.topo.n_cpus().max(MIN_SLOTS)).map(|_| CpuSlot::default()).collect()
+        });
+        &slots[cpu.0.min(slots.len() - 1)]
+    }
+
+    /// The slot's scope clamped to this machine's chain depth (the same
+    /// instance may be reused over a shallower machine by generic
+    /// harnesses); persists the clamp so later reads agree.
+    fn scope_idx(&self, sl: &CpuSlot, depth: usize) -> usize {
+        let raw = sl.scope.load(Ordering::Relaxed);
+        let clamped = raw.min(depth - 1);
+        if clamped != raw {
+            sl.scope.store(clamped, Ordering::Relaxed);
         }
-        let v = self.cpus.read().unwrap();
-        let mut st = v[cpu.0].lock().unwrap();
-        // Defensive clamp: the same instance may be reused over a
-        // shallower machine by generic harnesses.
-        let depth = sys.topo.covering(cpu).len();
-        if st.scope >= depth {
-            st.scope = depth - 1;
-        }
-        f(&mut st)
+        clamped
     }
 
     /// A pick succeeded within the scope: advance the epoch and run the
     /// narrow decision when it completes.
     fn note_success(&self, sys: &System, cpu: CpuId) {
-        self.with_state(sys, cpu, |st| {
-            st.consec_fails = 0;
-            st.epoch_events += 1;
-            if st.epoch_events >= self.cfg.epoch {
-                self.decide(sys, cpu, st);
-            }
-        });
+        let sl = self.slot(sys, cpu);
+        sl.consec_fails.store(0, Ordering::Relaxed);
+        let events = sl.epoch_events.load(Ordering::Relaxed) + 1;
+        sl.epoch_events.store(events, Ordering::Relaxed);
+        if events >= self.cfg.epoch {
+            self.decide(sys, cpu, sl);
+        }
     }
 
     /// The scope search failed: widen on a long-enough streak, and keep
     /// the epoch clock ticking so droughts still produce decisions.
     fn note_fail(&self, sys: &System, cpu: CpuId) {
-        self.with_state(sys, cpu, |st| {
-            st.consec_fails = st.consec_fails.saturating_add(1);
-            st.epoch_events += 1;
-            let depth = sys.topo.covering(cpu).len();
-            if st.consec_fails >= self.cfg.widen_after && st.scope + 1 < depth {
-                st.scope += 1;
-                st.consec_fails = 0;
-                st.narrow_streak = 0;
-                st.epoch_events = 0;
-                st.last = sys.rates.snap(sys.topo.covering(cpu)[st.scope]);
-                Metrics::inc(&sys.metrics.scope_widens);
-                self.switches.fetch_add(1, Ordering::Relaxed);
-            } else if st.epoch_events >= self.cfg.epoch {
-                self.decide(sys, cpu, st);
-            }
-        });
+        let sl = self.slot(sys, cpu);
+        let fails = sl.consec_fails.load(Ordering::Relaxed).saturating_add(1);
+        sl.consec_fails.store(fails, Ordering::Relaxed);
+        let events = sl.epoch_events.load(Ordering::Relaxed) + 1;
+        sl.epoch_events.store(events, Ordering::Relaxed);
+        let depth = sys.topo.covering(cpu).len();
+        let scope = self.scope_idx(sl, depth);
+        if fails >= self.cfg.widen_after && scope + 1 < depth {
+            sl.scope.store(scope + 1, Ordering::Relaxed);
+            sl.consec_fails.store(0, Ordering::Relaxed);
+            sl.narrow_streak.store(0, Ordering::Relaxed);
+            sl.epoch_events.store(0, Ordering::Relaxed);
+            sl.store_last(sys.rates.snap(sys.topo.covering(cpu)[scope + 1]));
+            Metrics::inc(&sys.metrics.scope_widens);
+            self.switches.fetch_add(1, Ordering::Relaxed);
+        } else if events >= self.cfg.epoch {
+            self.decide(sys, cpu, sl);
+        }
     }
 
     /// End-of-epoch rate decision over the scope component.
-    fn decide(&self, sys: &System, cpu: CpuId, st: &mut CpuState) {
-        let scope = sys.topo.covering(cpu)[st.scope];
-        let now = sys.rates.snap(scope);
-        let delta = now.since(&st.last);
-        st.last = now;
-        st.epoch_events = 0;
-        if st.scope > 0 && delta.fail_ratio() <= self.cfg.narrow_fail_ratio {
-            st.narrow_streak += 1;
-            if st.narrow_streak >= self.cfg.hysteresis {
-                st.scope -= 1;
-                st.narrow_streak = 0;
-                st.consec_fails = 0;
-                st.last = sys.rates.snap(sys.topo.covering(cpu)[st.scope]);
+    fn decide(&self, sys: &System, cpu: CpuId, sl: &CpuSlot) {
+        let depth = sys.topo.covering(cpu).len();
+        let scope = self.scope_idx(sl, depth);
+        let now = sys.rates.snap(sys.topo.covering(cpu)[scope]);
+        let delta = now.since(&sl.load_last());
+        sl.store_last(now);
+        sl.epoch_events.store(0, Ordering::Relaxed);
+        if scope > 0 && delta.fail_ratio() <= self.cfg.narrow_fail_ratio {
+            let streak = sl.narrow_streak.load(Ordering::Relaxed) + 1;
+            if streak >= self.cfg.hysteresis {
+                sl.scope.store(scope - 1, Ordering::Relaxed);
+                sl.narrow_streak.store(0, Ordering::Relaxed);
+                sl.consec_fails.store(0, Ordering::Relaxed);
+                sl.store_last(sys.rates.snap(sys.topo.covering(cpu)[scope - 1]));
                 Metrics::inc(&sys.metrics.scope_narrows);
                 self.switches.fetch_add(1, Ordering::Relaxed);
+            } else {
+                sl.narrow_streak.store(streak, Ordering::Relaxed);
             }
         } else {
-            st.narrow_streak = 0;
+            sl.narrow_streak.store(0, Ordering::Relaxed);
         }
     }
 
@@ -259,7 +303,7 @@ impl Scheduler for AdaptiveScheduler {
 
     fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
         let chain = traversal::covering(&sys.topo, cpu);
-        let scope_idx = self.with_state(sys, cpu, |st| st.scope);
+        let scope_idx = self.scope_idx(self.slot(sys, cpu), chain.len());
         if let Some(t) = pick::pick_thread(sys, cpu, &chain[..=scope_idx]) {
             self.note_success(sys, cpu);
             return Some(t);

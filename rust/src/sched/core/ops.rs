@@ -88,14 +88,20 @@ pub fn gang_live(sys: &System, gang: TaskId) -> bool {
 
 /// Flatten-wake: threads go through `push`; bubbles recursively release
 /// their contents (opportunist schedulers ignore structure — that is
-/// precisely the paper's criticism of them).
+/// precisely the paper's criticism of them). The whole release runs as
+/// one [`System::wake_batch`], so waking an N-thread bubble notifies
+/// the executor's parked workers once, not N times.
 pub fn flatten_wake(sys: &System, task: TaskId, push: &mut dyn FnMut(&System, TaskId)) {
+    sys.wake_batch(|| flatten_wake_inner(sys, task, push));
+}
+
+fn flatten_wake_inner(sys: &System, task: TaskId, push: &mut dyn FnMut(&System, TaskId)) {
     if sys.tasks.is_bubble(task) {
         let contents = sys.tasks.with(task, |t| t.kind_contents_snapshot());
         // The bubble itself is inert for baselines: park it off-list.
         sys.tasks.with(task, |t| t.state = TaskState::Blocked);
         for c in contents {
-            flatten_wake(sys, c, push);
+            flatten_wake_inner(sys, c, push);
         }
     } else {
         push(sys, task);

@@ -42,6 +42,12 @@ use crate::metrics::Metrics;
 use crate::task::TaskId;
 use crate::topology::{CpuId, DistanceModel, LevelId};
 
+thread_local! {
+    /// Reused pressure-snapshot buffer for the data-less wake fallback
+    /// (one Vec per thread for the process lifetime, not one per wake).
+    static PRESSURE_BUF: std::cell::RefCell<Vec<u64>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// Tunables for the memory-aware policy.
 #[derive(Debug, Clone)]
 pub struct MemAwareConfig {
@@ -206,12 +212,19 @@ impl Scheduler for MemAwareScheduler {
                         // least loaded leaf among the nodes with the
                         // most footprint headroom (uniform pressure —
                         // e.g. nothing homed yet — degenerates to the
-                        // machine-wide least-loaded fallback).
-                        let view = sys.mem.pressure_view();
-                        let min = view.iter().min().copied().unwrap_or(0);
-                        let cpus = (0..sys.topo.n_cpus()).map(CpuId);
-                        let open = cpus.filter(|&c| view[sys.topo.numa_of(c)] == min);
-                        ops::least_loaded_leaf(sys, open)
+                        // machine-wide least-loaded fallback). The
+                        // pressure snapshot fills a reused per-thread
+                        // buffer, so the wake path stays allocation-free
+                        // once warm.
+                        PRESSURE_BUF.with(|buf| {
+                            let mut view = buf.borrow_mut();
+                            sys.mem.pressure_view_into(&mut view);
+                            let min = view.iter().min().copied().unwrap_or(0);
+                            let cpus = (0..sys.topo.n_cpus()).map(CpuId);
+                            let open =
+                                cpus.filter(|&c| view[sys.topo.numa_of(c)] == min);
+                            ops::least_loaded_leaf(sys, open)
+                        })
                     }),
             };
             ops::enqueue(sys, t, list);

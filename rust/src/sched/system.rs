@@ -1,8 +1,9 @@
 //! Shared scheduler state: topology + task table + list hierarchy +
 //! metrics + trace, bundled so engines and schedulers pass one handle.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, RwLock};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use super::core::stats::{LoadStats, RateStats};
 use crate::mem::{MemState, RegionId, Touch};
@@ -16,23 +17,51 @@ use crate::trace::Trace;
 /// native executor so idle workers wake on work arrival instead of
 /// timing out; engines that poll never set it). Replaceable, so a
 /// second executor over the same system takes over wakeups instead of
-/// silently notifying a dead parking lot. The atomic flag keeps the
-/// hookless (simulator) enqueue hot path at one relaxed load — no lock,
-/// no Arc churn.
-#[derive(Default)]
+/// silently notifying a dead parking lot.
+///
+/// Stored as an atomic pointer to a heap'd `Arc`, so the enqueue hot
+/// path is one acquire load — no lock, no Arc refcount churn. A
+/// *replaced* hook is intentionally leaked: a racing `notify_enqueue`
+/// may still be inside it, engines install at most a few hooks per
+/// system, and a leak is the entire cost of not needing an epoch
+/// scheme. The final hook is freed on drop (no readers can race a
+/// `&mut self`).
 struct EnqueueHook {
-    set: AtomicBool,
-    hook: RwLock<Option<Arc<dyn Fn() + Send + Sync>>>,
+    ptr: AtomicPtr<Arc<dyn Fn() + Send + Sync>>,
+}
+
+impl Default for EnqueueHook {
+    fn default() -> EnqueueHook {
+        EnqueueHook { ptr: AtomicPtr::new(std::ptr::null_mut()) }
+    }
+}
+
+impl Drop for EnqueueHook {
+    fn drop(&mut self) {
+        let p = *self.ptr.get_mut();
+        if !p.is_null() {
+            // SAFETY: `p` came from Box::into_raw in `set`, was never
+            // freed (replacements leak), and `&mut self` rules out a
+            // concurrent reader.
+            drop(unsafe { Box::from_raw(p) });
+        }
+    }
 }
 
 impl std::fmt::Debug for EnqueueHook {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(if self.set.load(Ordering::Relaxed) {
-            "EnqueueHook(set)"
-        } else {
+        f.write_str(if self.ptr.load(Ordering::Relaxed).is_null() {
             "EnqueueHook(unset)"
+        } else {
+            "EnqueueHook(set)"
         })
     }
+}
+
+thread_local! {
+    /// (nesting depth, notification pending) of this thread's enqueue
+    /// wake batch — see [`System::wake_batch`].
+    static WAKE_BATCH: Cell<(u32, bool)> = const { Cell::new((0, false)) };
 }
 
 /// Everything a scheduler needs to see the machine and its tasks.
@@ -93,23 +122,85 @@ impl System {
     /// Install the enqueue notification hook, replacing any previous
     /// one. Called by engines that park idle workers.
     pub fn set_enqueue_hook(&self, hook: Arc<dyn Fn() + Send + Sync>) {
-        *self.enqueue_hook.hook.write().unwrap() = Some(hook);
-        self.enqueue_hook.set.store(true, Ordering::Release);
+        let raw = Box::into_raw(Box::new(hook));
+        // The swapped-out hook is deliberately leaked — see EnqueueHook.
+        let _old = self.enqueue_hook.ptr.swap(raw, Ordering::AcqRel);
     }
 
     /// Fire the enqueue hook, if any ([`crate::sched::core::ops::enqueue`]
     /// calls this after pushing a task). Hookless engines pay one
-    /// relaxed atomic load; with a hook the Arc is cloned out of the
-    /// read lock before the call so a slow hook cannot block
-    /// `set_enqueue_hook`.
+    /// atomic load; with a hook the pointer is dereferenced directly —
+    /// no lock, no refcount traffic. Inside a [`System::wake_batch`]
+    /// the call is deferred to the end of the batch.
     pub fn notify_enqueue(&self) {
-        if !self.enqueue_hook.set.load(Ordering::Acquire) {
+        let deferred = WAKE_BATCH.with(|b| {
+            let (depth, _) = b.get();
+            if depth > 0 {
+                b.set((depth, true));
+                true
+            } else {
+                false
+            }
+        });
+        if !deferred {
+            self.fire_enqueue_hook();
+        }
+    }
+
+    fn fire_enqueue_hook(&self) {
+        let p = self.enqueue_hook.ptr.load(Ordering::Acquire);
+        if p.is_null() {
             return;
         }
-        let hook = self.enqueue_hook.hook.read().unwrap().clone();
-        if let Some(h) = hook {
-            h();
+        // SAFETY: a non-null pointer came from Box::into_raw in
+        // set_enqueue_hook and is never freed while the system is
+        // shared (replaced hooks leak; the last one is freed by Drop,
+        // which requires exclusive access).
+        (unsafe { &*p })();
+    }
+
+    /// Run `f` with enqueue notifications **coalesced**: however many
+    /// tasks it enqueues, parked workers are notified once, when the
+    /// outermost batch on this thread closes. Bulk wake paths (bubble
+    /// flattening, barrier release) use this so the executor's park
+    /// condvar is not taken per task. Nests freely; scoped to the
+    /// calling thread, so enqueues must happen inside `f` itself, and a
+    /// batch must not span two systems (the pending flag is
+    /// per-thread, not per-system — the wake paths never interleave
+    /// systems).
+    pub fn wake_batch<R>(&self, f: impl FnOnce() -> R) -> R {
+        /// Restores the depth even if `f` unwinds, so a caught panic
+        /// cannot permanently swallow this thread's notifications.
+        struct DepthGuard;
+        impl Drop for DepthGuard {
+            fn drop(&mut self) {
+                WAKE_BATCH.with(|b| {
+                    let (depth, pending) = b.get();
+                    b.set((depth.saturating_sub(1), pending));
+                });
+            }
         }
+        WAKE_BATCH.with(|b| {
+            let (depth, pending) = b.get();
+            b.set((depth + 1, pending));
+        });
+        let out = {
+            let _g = DepthGuard;
+            f()
+        };
+        let fire = WAKE_BATCH.with(|b| {
+            let (depth, pending) = b.get();
+            if depth == 0 && pending {
+                b.set((0, false));
+                true
+            } else {
+                false
+            }
+        });
+        if fire {
+            self.fire_enqueue_hook();
+        }
+        out
     }
 
     /// Record a memory touch on region `r` by `cpu` and account it:
@@ -191,5 +282,33 @@ mod tests {
         s.notify_enqueue();
         assert_eq!(first.load(Ordering::SeqCst), 1, "old hook must be replaced");
         assert_eq!(second.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn wake_batch_coalesces_notifications() {
+        use std::sync::atomic::AtomicUsize;
+        let s = System::new(Arc::new(Topology::smp(2)));
+        let fired = Arc::new(AtomicUsize::new(0));
+        let h = fired.clone();
+        s.set_enqueue_hook(Arc::new(move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        // A batch of notifies (nested, as flatten_wake recursion
+        // produces) collapses to a single hook call at the end.
+        s.wake_batch(|| {
+            s.notify_enqueue();
+            s.wake_batch(|| {
+                s.notify_enqueue();
+                s.notify_enqueue();
+            });
+            assert_eq!(fired.load(Ordering::SeqCst), 0, "deferred until batch close");
+        });
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        // An empty batch fires nothing; outside a batch each notify
+        // fires directly.
+        s.wake_batch(|| {});
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        s.notify_enqueue();
+        assert_eq!(fired.load(Ordering::SeqCst), 2);
     }
 }

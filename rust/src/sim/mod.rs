@@ -232,6 +232,18 @@ impl SimEngine {
     /// Run until every thread terminated (or error on deadlock /
     /// max_time).
     pub fn run(&mut self) -> Result<SimReport> {
+        // The simulator multiplexes every virtual CPU onto this one OS
+        // thread, so the run loop re-points the fast-lane owner context
+        // (see [`crate::rq::owner`]) at each event's CPU: scheduler code
+        // running "on" a virtual CPU is that CPU's runqueue owner,
+        // exactly like a native worker pinned to it — the simulator
+        // exercises the same lock-free push/pop paths.
+        let out = self.run_inner();
+        crate::rq::owner::set_current_cpu(None);
+        out
+    }
+
+    fn run_inner(&mut self) -> Result<SimReport> {
         for cpu in 0..self.sys.topo.n_cpus() {
             self.push_event(0, CpuId(cpu), 0);
         }
@@ -239,6 +251,7 @@ impl SimEngine {
         while let Some(Reverse((at, _seq, cpu, kind))) = self.queue.pop() {
             self.now = at;
             self.sys.advance_clock(at);
+            crate::rq::owner::set_current_cpu(Some(cpu));
             if at > self.cfg.max_time {
                 return Err(Error::Sim(format!("exceeded max_time at {at}")));
             }

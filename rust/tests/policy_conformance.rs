@@ -396,6 +396,105 @@ fn no_registered_policy_starves_tasks() {
     }
 }
 
+/// The hierarchy every leg above schedules on IS the two-tier lockless
+/// runqueue: single-CPU leaves carry a Chase-Lev fast lane in front of
+/// the priority buckets, and both engines (the native workers natively,
+/// the simulator per event) run with the owner context pointing at the
+/// executing CPU. Pin that structurally for every machine in the
+/// matrix, then drive every registry policy through a fair-polling
+/// termination/conservation run with the owner context set — wake,
+/// pick, one yield-requeue per task, terminate — so owner-side
+/// enqueues and picks exercise the lock-free path. Lane engagement is
+/// asserted in aggregate across the registry: policies that enqueue on
+/// the root only (e.g. `ss`) are entitled to zero lane traffic of
+/// their own, but the affinity family requeues yields on
+/// `leaf_of(cpu)` and must light the lanes up.
+#[test]
+fn every_registered_policy_conserves_on_the_lockless_runqueue() {
+    use bubbles::rq::owner;
+    for topo in machines() {
+        let sys = System::new(Arc::new(topo.clone()));
+        for c in 0..topo.n_cpus() {
+            let leaf = topo.leaf_of(CpuId(c));
+            assert_eq!(
+                sys.rq.list(leaf).fast_lane_owner(),
+                Some(CpuId(c)),
+                "{}: leaf of cpu{c} carries no fast lane",
+                topo.name()
+            );
+        }
+    }
+    let mut lane_pushes = 0u64;
+    let mut lane_pops = 0u64;
+    for entry in factory::registry() {
+        let topo = Topology::numa(4, 4);
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        let sched = factory::make_default(entry.kind);
+        let n_cpus = sys.topo.n_cpus();
+        let n = 3 * n_cpus;
+        let mut remaining = std::collections::HashSet::new();
+        for i in 0..n {
+            let t = sys.tasks.new_thread(format!("lf{i}"), PRIO_THREAD);
+            owner::set_current_cpu(Some(CpuId(i % n_cpus)));
+            sched.wake(&sys, t);
+            remaining.insert(t);
+        }
+        let mut requeued = std::collections::HashSet::new();
+        let mut fuel = 120 * n * n_cpus + 800;
+        let mut cpu = 0;
+        while !remaining.is_empty() && fuel > 0 {
+            fuel -= 1;
+            owner::set_current_cpu(Some(CpuId(cpu)));
+            if let Some(t) = sched.pick(&sys, CpuId(cpu)) {
+                assert!(
+                    remaining.contains(&t),
+                    "{}: {t} picked after termination",
+                    entry.name
+                );
+                // First pick yields (the affinity family requeues on
+                // leaf_of(cpu) — with the context set, a lane push);
+                // the second pick terminates.
+                if requeued.insert(t) {
+                    sched.stop(&sys, CpuId(cpu), t, StopReason::Yield);
+                } else {
+                    sched.stop(&sys, CpuId(cpu), t, StopReason::Terminate);
+                    remaining.remove(&t);
+                }
+            }
+            cpu = (cpu + 1) % n_cpus;
+        }
+        owner::set_current_cpu(None);
+        assert!(
+            remaining.is_empty(),
+            "{}: {} tasks lost on the lockless runqueue",
+            entry.name,
+            remaining.len()
+        );
+        assert_eq!(
+            sys.rq.total_queued(),
+            0,
+            "{}: lockless runqueues not drained",
+            entry.name
+        );
+        for i in 0..sys.topo.n_components() {
+            assert_eq!(
+                sys.stats.running(LevelId(i)),
+                0,
+                "{}: running counter leaked on component {i}",
+                entry.name
+            );
+        }
+        let (pu, po) = sys.rq.fast_lane_ops();
+        assert!(po <= pu, "{}: lane pops {po} exceed pushes {pu}", entry.name);
+        lane_pushes += pu;
+        lane_pops += po;
+    }
+    assert!(
+        lane_pushes > 0 && lane_pops > 0,
+        "no registry policy engaged the fast lanes (pushes {lane_pushes}, pops {lane_pops})"
+    );
+}
+
 #[test]
 fn registry_is_complete_and_buildable() {
     // The conformance matrix above runs whatever the registry lists;
