@@ -10,11 +10,16 @@
 //! 3. **Contended pick/steal** (the gated matrix) — N OS workers, each
 //!    the owner of its leaf list, running the scheduler's hot mix:
 //!    push-own + pick-own with a steal probe at a neighbour every 4th
-//!    round. Two legs per (shape, threads) cell: `locked` = plain
+//!    round. Four legs per (shape, threads) cell: `locked` = plain
 //!    bucket `RunList`, `lockless` = two-tier `RunList` with the
-//!    Chase-Lev fast lane in front. The lockless/locked throughput
-//!    ratio is the PR-6 acceptance number (≥1.5× at 8 threads on
-//!    numa-4x4).
+//!    Chase-Lev fast lane in front, `trace-off` = lockless with the
+//!    sharded event trace compiled into the loop but disabled (the
+//!    production hot-path shape — one atomic load + branch per op),
+//!    `trace-on` = lockless with the trace recording every round. The
+//!    lockless/locked throughput ratio is the PR-6 acceptance number
+//!    (≥1.5× at 8 threads on numa-4x4); the trace-off/lockless ratio
+//!    is the PR-7 acceptance number (disabled tracing must cost <5%
+//!    ns/op, asserted in gate mode against the same-run lockless leg).
 //!
 //! Results are printed as tables *and* written machine-readably to
 //! `BENCH_rq.json` (schema 2 — see `benches/BENCH_SCHEMA.md`), with
@@ -41,6 +46,7 @@ use bubbles::bench::gate;
 use bubbles::rq::{owner, RunList, FAST_LANE_PRIO};
 use bubbles::task::TaskId;
 use bubbles::topology::{CpuId, LevelId, Topology};
+use bubbles::trace::{Event, Trace};
 use bubbles::util::fmt::Table;
 
 // ---------------------------------------------------------- contention
@@ -136,7 +142,22 @@ fn pick_path_ns(topo: &Topology, threads: usize, dur_ms: u64) -> f64 {
 /// and register the worker as its CPU's owner; `locked` legs use the
 /// plain bucket list (every op takes the mutex). Returns (ns/op,
 /// Mops/s).
-fn contended_ns(topo: &Topology, threads: usize, lockless: bool, dur_ms: u64) -> (f64, f64) {
+/// Tracing flavour of a contended leg: no trace object at all, trace
+/// present but disabled (the production hot-path shape), or recording.
+#[derive(Clone, Copy, PartialEq)]
+enum TraceLeg {
+    None,
+    Off,
+    On,
+}
+
+fn contended_ns(
+    topo: &Topology,
+    threads: usize,
+    lockless: bool,
+    tl: TraceLeg,
+    dur_ms: u64,
+) -> (f64, f64) {
     let n_cpus = topo.n_cpus();
     let lists: Arc<Vec<RunList>> = Arc::new(
         (0..n_cpus)
@@ -149,11 +170,21 @@ fn contended_ns(topo: &Topology, threads: usize, lockless: bool, dur_ms: u64) ->
             })
             .collect(),
     );
+    let trace = match tl {
+        TraceLeg::None => None,
+        TraceLeg::Off => Some(Arc::new(Trace::for_cpus(n_cpus, 1 << 12))),
+        TraceLeg::On => {
+            let t = Arc::new(Trace::for_cpus(n_cpus, 1 << 12));
+            t.set_enabled(true);
+            Some(t)
+        }
+    };
     let stop = Arc::new(AtomicBool::new(false));
     let mut joins = Vec::new();
     for w in 0..threads {
         let lists = lists.clone();
         let stop = stop.clone();
+        let trace = trace.clone();
         let cpu = w % n_cpus;
         joins.push(std::thread::spawn(move || {
             owner::set_current_cpu(Some(CpuId(cpu)));
@@ -164,6 +195,14 @@ fn contended_ns(topo: &Topology, threads: usize, lockless: bool, dur_ms: u64) ->
                 own.push(TaskId(w), FAST_LANE_PRIO);
                 let _ = own.pop_max();
                 ops += 2;
+                // The production emit shape: enabled() check first, so
+                // the disabled leg pays one atomic load + branch and
+                // never constructs the event.
+                if let Some(t) = &trace {
+                    if t.enabled() {
+                        t.emit(ops, Event::Dispatch { task: TaskId(w), cpu: CpuId(cpu) });
+                    }
+                }
                 if ops % 8 == 0 {
                     // Steal probe: thief-side pop on a list this worker
                     // does not own.
@@ -271,18 +310,33 @@ fn main() {
         println!("(BENCH_INJECT_REGRESSION={inject}: reported ns/op scaled accordingly)\n");
     }
     let shapes = [Topology::smp(4), numa];
+    const LEGS: [(&str, bool, TraceLeg); 4] = [
+        ("locked", false, TraceLeg::None),
+        ("lockless", true, TraceLeg::None),
+        ("trace-off", true, TraceLeg::Off),
+        ("trace-on", true, TraceLeg::On),
+    ];
     let mut contended_rows = Vec::new();
     let mut current_legs = Vec::new();
-    let mut t3 = Table::new(&["shape", "threads", "locked ns/op", "lockless ns/op", "lockless win"]);
+    let mut trace_tax_ratios = Vec::new();
+    let mut t3 = Table::new(&[
+        "shape",
+        "threads",
+        "locked ns/op",
+        "lockless ns/op",
+        "trace-off ns/op",
+        "trace-on ns/op",
+        "lockless win",
+        "trace tax",
+    ]);
     for topo in &shapes {
         for threads in CONTENDED_THREADS {
-            let mut cell = [0.0f64; 2];
-            for (i, lockless) in [false, true].into_iter().enumerate() {
-                let (mut ns_op, mut mops) = contended_ns(topo, threads, lockless, dur);
+            let mut cell = [0.0f64; LEGS.len()];
+            for (i, &(leg, lockless, tl)) in LEGS.iter().enumerate() {
+                let (mut ns_op, mut mops) = contended_ns(topo, threads, lockless, tl, dur);
                 ns_op *= inject;
                 mops /= inject;
                 cell[i] = ns_op;
-                let leg = if lockless { "lockless" } else { "locked" };
                 contended_rows.push(format!(
                     "{{\"shape\":\"{}\",\"threads\":{threads},\"leg\":\"{leg}\",\"ns_op\":{},\"mops\":{}}}",
                     topo.name(),
@@ -297,20 +351,33 @@ fn main() {
                     mops,
                 });
             }
+            // Disabled-tracing overhead vs the same-run untraced leg —
+            // same machine, same moment, so runner noise cancels.
+            trace_tax_ratios.push(cell[2] / cell[1].max(f64::MIN_POSITIVE));
             t3.row(&[
                 topo.name().to_string(),
                 threads.to_string(),
                 format!("{:.1}", cell[0]),
                 format!("{:.1}", cell[1]),
+                format!("{:.1}", cell[2]),
+                format!("{:.1}", cell[3]),
                 format!("{:.2}x", cell[0] / cell[1].max(f64::MIN_POSITIVE)),
+                format!("{:.3}x", cell[2] / cell[1].max(f64::MIN_POSITIVE)),
             ]);
         }
     }
     println!("{}", t3.render());
     println!("acceptance: lockless ≥1.5x locked throughput at 8 threads on numa-4x4.");
+    let trace_tax =
+        trace_tax_ratios.iter().sum::<f64>() / trace_tax_ratios.len().max(1) as f64;
+    println!(
+        "tracing overhead (disabled): mean trace-off/lockless ns/op ratio {trace_tax:.3}x \
+         across {} cells (budget 1.05x)",
+        trace_tax_ratios.len()
+    );
 
     let config = format!(
-        "shapes=smp-4,numa-4x4;threads={CONTENDED_THREADS:?};legs=locked,lockless;dur_ms={dur}"
+        "shapes=smp-4,numa-4x4;threads={CONTENDED_THREADS:?};legs=locked,lockless,trace-off,trace-on;dur_ms={dur}"
     );
     let json = format!(
         "{{\n  \"bench\": \"rq_scaling\",\n  \"schema\": 2,\n  \"mode\": \"{}\",\n  \"git_rev\": \"{}\",\n  \"config_hash\": \"{:016x}\",\n  \"machine\": \"{}\",\n  \"contention\": [{}],\n  \"pick_path\": [{}],\n  \"contended\": [{}]\n}}\n",
@@ -328,6 +395,18 @@ fn main() {
     }
 
     if gated {
+        // Same-run overhead assertion: disabled tracing must stay
+        // under +5% ns/op vs the untraced lockless leg. Compared
+        // within one run (not against the committed baseline), so the
+        // check is immune to runner-to-runner drift.
+        if trace_tax > 1.05 {
+            eprintln!(
+                "bench gate: disabled tracing costs {:.1}% ns/op on the contended \
+                 lockless legs (budget 5%)",
+                (trace_tax - 1.0) * 100.0
+            );
+            std::process::exit(3);
+        }
         let base_legs = baseline.as_deref().map(gate::parse_legs).unwrap_or_default();
         if base_legs.is_empty() {
             println!(

@@ -88,6 +88,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         "adaptcmp" => cmd_adaptcmp(&args),
         "run" => cmd_run(&args),
         "analyze" => cmd_analyze(&args),
+        "trace" => cmd_trace(&args),
         "evolve" => cmd_evolve(&args),
         "schedulers" => Ok(crate::sched::factory::render_list()),
         other => Err(Error::config(format!("unknown command `{other}`; try `repro help`"))),
@@ -108,14 +109,20 @@ COMMANDS
   ablations  design-choice sweeps                [--which burst|regen|zoo|all]
   memcmp     local vs remote access ratio per policy [--machine, --scheds a,b,c,
              --engine sim|native, --structure simple|bubbles|both (native),
-             --seed N (sim), --smoke]
+             --seed N (sim), --smoke, --trace out.json]
              (--engine native runs real green threads — loose or grouped into
-             one bubble per NUMA node — and writes BENCH_mem_native.json)
+             one bubble per NUMA node — and writes BENCH_mem_native.json;
+             --trace exports the first leg as Chrome trace-event JSON)
   adaptcmp   adaptive steal-scope vs fixed scopes on bursty/phase-change load
-             [--machine, --scheds a,b,c, --seed N, --smoke]
-             (writes BENCH_adaptive.json)
+             [--machine, --scheds a,b,c, --seed N, --smoke, --trace out.json]
+             (writes BENCH_adaptive.json; --trace exports the first
+             phase-changing leg as Chrome trace-event JSON)
   run        config-driven simulation            [--config file.toml]
-  analyze    traced run + scheduler analysis     [--machine, --app, --sched]
+  analyze    traced run + scheduler analysis     [--machine, --app, --sched,
+             --engine sim|native]
+  trace      traced run exported as Chrome trace-event JSON for
+             chrome://tracing / ui.perfetto.dev  [--machine, --sched,
+             --engine sim|native, --smoke, --out trace.json]
   evolve     traced bubble evolution (Figure 3)  [--machine numa-4x4]
   schedulers list registered scheduling policies (also: --sched list)
   help       this text
@@ -235,6 +242,11 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
     };
     let smoke = args.flag("smoke");
     let seed = args.u64("seed", crate::sim::SimConfig::default().seed);
+    let trace_out = args.options.get("trace").map(|s| s.as_str());
+    let trace_note = match trace_out {
+        Some(p) => format!("\nwrote first-leg Chrome trace to {p}"),
+        None => String::new(),
+    };
     // Oversubscribe the machine so rebalancing pressure is real: that
     // is where memory-blind policies scatter accesses.
     let p = HeatParams {
@@ -251,13 +263,14 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
                         .to_string(),
                 ));
             }
-            let c = memcmp::run(&topo, &p, &kinds, seed);
+            let c = memcmp::run(&topo, &p, &kinds, seed, trace_out);
             Ok(format!(
-                "memory locality comparison on `{}` ({} stripes, {} cycles, seed {seed})\n\n{}",
+                "memory locality comparison on `{}` ({} stripes, {} cycles, seed {seed})\n\n{}{}",
                 topo.name(),
                 p.threads,
                 p.cycles,
-                c.render()
+                c.render(),
+                trace_note
             ))
         }
         "native" => {
@@ -281,6 +294,7 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
                 touches,
                 crate::mem::AllocPolicy::FirstTouch,
                 &modes,
+                trace_out,
             );
             // No seed in the native artifact: native makespans are wall
             // clock and OS scheduling makes them run-to-run noisy — a
@@ -300,14 +314,15 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
                 ""
             };
             Ok(format!(
-                "memory locality comparison on `{}` (native engine, {} green threads, {} cycles, structure {})\n\n{}\n{}{}",
+                "memory locality comparison on `{}` (native engine, {} green threads, {} cycles, structure {})\n\n{}\n{}{}{}",
                 topo.name(),
                 p.threads,
                 p.cycles,
                 structure,
                 c.render(),
                 note,
-                seed_note
+                seed_note,
+                trace_note
             ))
         }
         other => Err(Error::config(format!("unknown engine `{other}` (want sim|native)"))),
@@ -334,7 +349,8 @@ fn cmd_adaptcmp(args: &Args) -> Result<String> {
     } else {
         (adaptcmp::PhaseParams::for_machine(&topo), adaptcmp::BurstParams::for_machine(&topo))
     };
-    let phase = adaptcmp::run_phase(&topo, &pp, &kinds, seed);
+    let trace_out = args.options.get("trace").map(|s| s.as_str());
+    let phase = adaptcmp::run_phase(&topo, &pp, &kinds, seed, trace_out);
     let bursty = adaptcmp::run_bursty(&topo, &bp, &kinds, seed);
     let mut rows = phase.json_rows("phase");
     rows.extend(bursty.json_rows("bursty"));
@@ -346,13 +362,18 @@ fn cmd_adaptcmp(args: &Args) -> Result<String> {
         rows.join(",")
     );
     let note = write_bench_artifact("BENCH_adaptive.json", &json);
+    let trace_note = match trace_out {
+        Some(p) => format!("\nwrote first-leg Chrome trace to {p}"),
+        None => String::new(),
+    };
     Ok(format!(
-        "adaptive steal-scope comparison on `{}`{}\n\n{}\n{}\n{}",
+        "adaptive steal-scope comparison on `{}`{}\n\n{}\n{}\n{}{}",
         topo.name(),
         if smoke { " (smoke)" } else { "" },
         phase.render(),
         bursty.render(),
-        note
+        note,
+        trace_note
     ))
 }
 
@@ -428,7 +449,7 @@ fn cmd_run(args: &Args) -> Result<String> {
 }
 
 fn cmd_analyze(args: &Args) -> Result<String> {
-    // Traced run + the §6 analysis tools.
+    // Traced run + the §6 analysis tools, on either engine.
     let topo = args.machine()?;
     let sched_name = args.get("sched", "bubble");
     if sched_name == "list" || sched_name == "help" {
@@ -444,8 +465,6 @@ fn cmd_analyze(args: &Args) -> Result<String> {
         kind,
         ..Default::default()
     });
-    let mut e = crate::apps::engine_with(&topo, sched, crate::sim::SimConfig::default());
-    e.sys.trace.set_enabled(true);
     let mode = if kind == crate::config::SchedKind::Bubble {
         crate::apps::StructureMode::Bubbles
     } else {
@@ -456,24 +475,135 @@ fn cmd_analyze(args: &Args) -> Result<String> {
         cycles: 10,
         ..HeatParams::conduction()
     };
-    match args.get("app", "conduction") {
-        "conduction" => {
-            crate::apps::conduction::build(&mut e, mode, &p);
+    match args.get("engine", "sim") {
+        "sim" => {
+            let mut e = crate::apps::engine_with(&topo, sched, crate::sim::SimConfig::default());
+            e.sys.trace.set_enabled(true);
+            match args.get("app", "conduction") {
+                "conduction" => {
+                    crate::apps::conduction::build(&mut e, mode, &p);
+                }
+                "amr" => {
+                    crate::apps::amr::build(&mut e, mode, &AmrParams::default());
+                }
+                other => return Err(Error::config(format!("unknown app `{other}`"))),
+            }
+            let rep = e.run()?;
+            let analysis = crate::trace::analysis::analyse(&e.sys.trace.records());
+            Ok(format!(
+                "traced `{}` under `{}` on `{}`: makespan {} cycles\n\n{}",
+                args.get("app", "conduction"),
+                sched_name,
+                topo.name(),
+                crate::util::fmt::cycles(rep.total_time),
+                analysis.render(&topo)
+            ))
         }
-        "amr" => {
-            crate::apps::amr::build(&mut e, mode, &AmrParams::default());
+        "native" => {
+            use std::sync::Arc;
+            if args.get("app", "conduction") != "conduction" {
+                return Err(Error::config(
+                    "--engine native analyzes the conduction workload only".to_string(),
+                ));
+            }
+            let sys = Arc::new(crate::sched::System::new(Arc::new(topo.clone())));
+            sys.trace.set_enabled(true);
+            let mut ex = crate::exec::Executor::new(sys.clone(), sched);
+            crate::apps::conduction::build_native(
+                &mut ex,
+                mode,
+                &p,
+                crate::mem::AllocPolicy::FirstTouch,
+                2,
+            );
+            let rep = ex.run();
+            let analysis = crate::trace::analysis::analyse(&sys.trace.records());
+            Ok(format!(
+                "traced `conduction` under `{}` on `{}` (native engine): {:.2} ms wall\n\n{}",
+                sched_name,
+                topo.name(),
+                rep.elapsed.as_secs_f64() * 1e3,
+                analysis.render(&topo)
+            ))
         }
-        other => return Err(Error::config(format!("unknown app `{other}`"))),
+        other => Err(Error::config(format!("unknown engine `{other}` (want sim|native)"))),
     }
-    let rep = e.run()?;
-    let analysis = crate::trace::analysis::analyse(&e.sys.trace.records());
+}
+
+fn cmd_trace(args: &Args) -> Result<String> {
+    // Traced conduction run exported as Chrome trace-event JSON: one
+    // timeline row per CPU with Dispatch→Stop spans and instants for
+    // the scheduler's structural events. Open the artifact in
+    // chrome://tracing or ui.perfetto.dev.
+    let topo = args.machine()?;
+    let sched_name = args.get("sched", "bubble");
+    if sched_name == "list" || sched_name == "help" {
+        return Ok(crate::sched::factory::render_list());
+    }
+    let kind = crate::config::SchedKind::parse(sched_name).ok_or_else(|| {
+        Error::config(format!(
+            "unknown scheduler `{sched_name}`; try `repro schedulers`"
+        ))
+    })?;
+    let sched = crate::sched::factory::make(&crate::config::SchedConfig {
+        kind,
+        ..Default::default()
+    });
+    let mode = if kind == crate::config::SchedKind::Bubble {
+        crate::apps::StructureMode::Bubbles
+    } else {
+        crate::apps::StructureMode::Simple
+    };
+    let p = HeatParams {
+        threads: topo.n_cpus(),
+        cycles: if args.flag("smoke") { 3 } else { 10 },
+        ..HeatParams::conduction()
+    };
+    let out_path = args.get("out", "trace.json");
+    let engine = args.get("engine", "sim");
+    let (recs, dropped, headline) = match engine {
+        "sim" => {
+            let mut e = crate::apps::engine_with(&topo, sched, crate::sim::SimConfig::default());
+            e.sys.trace.set_enabled(true);
+            crate::apps::conduction::build(&mut e, mode, &p);
+            let rep = e.run()?;
+            let recs = e.sys.trace.drain();
+            let dropped = e.sys.trace.dropped();
+            let headline =
+                format!("makespan {} cycles", crate::util::fmt::cycles(rep.total_time));
+            (recs, dropped, headline)
+        }
+        "native" => {
+            use std::sync::Arc;
+            let sys = Arc::new(crate::sched::System::new(Arc::new(topo.clone())));
+            sys.trace.set_enabled(true);
+            let mut ex = crate::exec::Executor::new(sys.clone(), sched);
+            crate::apps::conduction::build_native(
+                &mut ex,
+                mode,
+                &p,
+                crate::mem::AllocPolicy::FirstTouch,
+                2,
+            );
+            let rep = ex.run();
+            let recs = sys.trace.drain();
+            let dropped = sys.trace.dropped();
+            (recs, dropped, format!("{:.2} ms wall", rep.elapsed.as_secs_f64() * 1e3))
+        }
+        other => {
+            return Err(Error::config(format!("unknown engine `{other}` (want sim|native)")))
+        }
+    };
+    let label = format!("conduction/{sched_name} on {} ({engine})", topo.name());
+    let json = crate::trace::export::chrome_json(&recs, topo.n_cpus(), &label);
+    let note = write_bench_artifact(out_path, &json);
     Ok(format!(
-        "traced `{}` under `{}` on `{}`: makespan {} cycles\n\n{}",
-        args.get("app", "conduction"),
-        sched_name,
+        "traced conduction under `{sched_name}` on `{}` ({engine} engine): {headline}\n\
+         {} events captured ({} dropped)\n\
+         {note} — open in chrome://tracing or ui.perfetto.dev\n",
         topo.name(),
-        crate::util::fmt::cycles(rep.total_time),
-        analysis.render(&topo)
+        recs.len(),
+        dropped
     ))
 }
 
@@ -627,6 +757,51 @@ mod tests {
         assert!(out.contains("BENCH_adaptive.json"), "{out}");
         let err = run(&argv("adaptcmp --machine numa-2x2 --scheds warp")).unwrap_err();
         assert!(err.to_string().contains("unknown scheduler"), "{err}");
+    }
+
+    #[test]
+    fn trace_command_writes_chrome_json() {
+        // `repro trace` drops a well-formed Chrome trace-event artifact
+        // and points the user at a viewer; help advertises it.
+        assert!(run(&argv("help")).unwrap().contains("trace"), "help must mention trace");
+        let path = std::env::temp_dir().join("bubbles-cli-trace.json");
+        let cmd = format!(
+            "trace --machine numa-2x2 --sched afs --smoke --out {}",
+            path.display()
+        );
+        let out = run(&argv(&cmd)).unwrap();
+        assert!(out.contains("perfetto"), "{out}");
+        assert!(out.contains("events captured"), "{out}");
+        let s = std::fs::read_to_string(&path).unwrap();
+        crate::util::json::validate(&s).unwrap_or_else(|e| panic!("invalid JSON: {e}"));
+        assert!(s.contains("traceEvents"), "{s}");
+        let err = run(&argv("trace --machine numa-2x2 --engine warp")).unwrap_err();
+        assert!(err.to_string().contains("unknown engine"), "{err}");
+    }
+
+    #[test]
+    fn memcmp_trace_flag_writes_artifact() {
+        let path = std::env::temp_dir().join("bubbles-cli-memcmp-trace.json");
+        let cmd = format!(
+            "memcmp --machine numa-2x2 --scheds afs --smoke --trace {}",
+            path.display()
+        );
+        let out = run(&argv(&cmd)).unwrap();
+        assert!(out.contains("wrote first-leg Chrome trace"), "{out}");
+        let s = std::fs::read_to_string(&path).unwrap();
+        crate::util::json::validate(&s).unwrap_or_else(|e| panic!("invalid JSON: {e}"));
+    }
+
+    #[test]
+    fn analyze_native_engine_reports_dispatches() {
+        let out = run(&argv("analyze --machine numa-2x2 --sched afs --engine native")).unwrap();
+        assert!(out.contains("native engine"), "{out}");
+        assert!(out.contains("dispatches"), "{out}");
+        let err = run(&argv("analyze --machine numa-2x2 --engine warp")).unwrap_err();
+        assert!(err.to_string().contains("unknown engine"), "{err}");
+        let err =
+            run(&argv("analyze --machine numa-2x2 --engine native --app amr")).unwrap_err();
+        assert!(err.to_string().contains("conduction"), "{err}");
     }
 
     #[test]

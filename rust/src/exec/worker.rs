@@ -245,6 +245,10 @@ impl Executor {
     /// worker per topology CPU.
     pub fn run(&mut self) -> ExecReport {
         let t0 = Instant::now();
+        // Anchor the engine clock to wall time: from here `sys.now()`
+        // reports monotonic ns, so native trace records and preemption
+        // ticks share one real time base (idempotent across runs).
+        self.inner.sys.start_wall_clock();
         let n = self.inner.sys.topo.n_cpus();
         let mut joins = Vec::with_capacity(n);
         for c in 0..n {
@@ -283,7 +287,17 @@ fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
             return;
         }
         let seq_before = inner.park.seq.load(Ordering::SeqCst);
-        let Some(task) = inner.sched.pick(&inner.sys, cpu) else {
+        // Time the pick only while tracing: the timer is two clock
+        // reads, which would be measurable noise on the idle loop.
+        let pick_t0 = inner.sys.trace.enabled().then(Instant::now);
+        let picked = inner.sched.pick(&inner.sys, cpu);
+        if let Some(t0) = pick_t0 {
+            let ns = (t0.elapsed().as_nanos() as u64).max(1);
+            inner.sys.metrics.pick_latency.record(ns);
+            let ev = crate::trace::Event::PickLatency { cpu, ns, hit: picked.is_some() };
+            inner.sys.trace.emit(inner.sys.now(), ev);
+        }
+        let Some(task) = picked else {
             crate::metrics::Metrics::inc(&inner.sys.metrics.idle_picks);
             inner.sys.rates.on_idle(&inner.sys.topo, cpu);
             // Nothing pickable. Park until the enqueue hook (or a
@@ -314,7 +328,9 @@ fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
                     backoff = (backoff * 2).min(BACKOFF_MAX);
                     t
                 };
+                inner.sys.trace_emit(|| crate::trace::Event::WorkerPark { cpu });
                 let _ = inner.park.cv.wait_timeout(guard, timeout).unwrap();
+                inner.sys.trace_emit(|| crate::trace::Event::WorkerUnpark { cpu });
             }
             // raced: re-pick immediately — the wake may be for work
             // invisible to sys.rq (gang's internal queue).

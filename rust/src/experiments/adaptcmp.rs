@@ -243,13 +243,33 @@ fn collect(title: String, runs: Vec<(SchedKind, SimEngine, u64)>) -> AdaptCmp {
 
 /// Run the phase-changing workload under each policy. `seed` drives
 /// the engine's timing jitter: same seed, identical numbers.
-pub fn run_phase(topo: &Topology, p: &PhaseParams, kinds: &[SchedKind], seed: u64) -> AdaptCmp {
+/// `trace_out` writes the first policy leg's event stream as Chrome
+/// trace-event JSON — the phase-changing workload is where the
+/// adaptive policy's ScopeChange events are worth looking at.
+pub fn run_phase(
+    topo: &Topology,
+    p: &PhaseParams,
+    kinds: &[SchedKind],
+    seed: u64,
+    trace_out: Option<&str>,
+) -> AdaptCmp {
     let mut runs = Vec::with_capacity(kinds.len());
-    for &kind in kinds {
+    for (i, &kind) in kinds.iter().enumerate() {
         let cfg = SimConfig { seed, ..SimConfig::default() };
         let mut e = engine_with(topo, make_default(kind), cfg);
+        let traced = i == 0 && trace_out.is_some();
+        if traced {
+            e.sys.trace.set_enabled(true);
+        }
         build_phases(&mut e, p);
         let rep = e.run().expect("adaptcmp phase run");
+        if traced {
+            let path = trace_out.unwrap();
+            let recs = e.sys.trace.drain();
+            let label = format!("adaptcmp phase/{} on {}", kind.label(), topo.name());
+            let json = crate::trace::export::chrome_json(&recs, topo.n_cpus(), &label);
+            std::fs::write(path, json).unwrap_or_else(|err| panic!("write trace {path}: {err}"));
+        }
         runs.push((kind, e, rep.total_time));
     }
     collect(
@@ -292,7 +312,7 @@ mod tests {
         // machine-wide stealing on makespan *and* locality.
         let topo = Topology::numa(4, 4);
         let p = PhaseParams::for_machine(&topo);
-        let c = run_phase(&topo, &p, &[SchedKind::Adaptive, SchedKind::Afs], SEED);
+        let c = run_phase(&topo, &p, &[SchedKind::Adaptive, SchedKind::Afs], SEED, None);
         let ad = c.get("adaptive");
         let afs = c.get("afs");
         assert!(ad.makespan > 0 && afs.makespan > 0);
@@ -336,7 +356,7 @@ mod tests {
             hot_factor: 2,
             mem_fraction: 0.4,
         };
-        let c = run_phase(&topo, &p, &default_kinds(), SEED);
+        let c = run_phase(&topo, &p, &default_kinds(), SEED, None);
         let out = c.render();
         for k in default_kinds() {
             assert!(out.contains(k.label()), "{} missing:\n{out}", k.label());

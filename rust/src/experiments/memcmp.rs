@@ -131,12 +131,28 @@ pub fn default_kinds() -> Vec<SchedKind> {
     vec![SchedKind::Memaware, SchedKind::Bubble, SchedKind::Afs, SchedKind::Lds, SchedKind::Ss]
 }
 
+/// Write the first comparison leg's trace as a Chrome trace-event JSON
+/// artifact. Only the first leg is traced: the point of `--trace` on a
+/// comparison harness is one representative timeline, not N.
+fn write_trace(trace: &crate::trace::Trace, topo: &Topology, path: &str, label: &str) {
+    let recs = trace.drain();
+    let json = crate::trace::export::chrome_json(&recs, topo.n_cpus(), label);
+    std::fs::write(path, json).unwrap_or_else(|e| panic!("write trace {path}: {e}"));
+}
+
 /// Run the conduction workload under each policy on the simulator and
 /// collect the memory behaviour. `seed` drives the engine's timing
-/// jitter; two runs with the same seed are bit-identical.
-pub fn run(topo: &Topology, p: &HeatParams, kinds: &[SchedKind], seed: u64) -> MemCmp {
+/// jitter; two runs with the same seed are bit-identical. `trace_out`
+/// writes the first leg's event stream as Chrome trace-event JSON.
+pub fn run(
+    topo: &Topology,
+    p: &HeatParams,
+    kinds: &[SchedKind],
+    seed: u64,
+    trace_out: Option<&str>,
+) -> MemCmp {
     let mut rows = Vec::with_capacity(kinds.len());
-    for &kind in kinds {
+    for (i, &kind) in kinds.iter().enumerate() {
         let mode = if kind == SchedKind::Bubble {
             StructureMode::Bubbles
         } else {
@@ -144,8 +160,16 @@ pub fn run(topo: &Topology, p: &HeatParams, kinds: &[SchedKind], seed: u64) -> M
         };
         let cfg = SimConfig { seed, ..SimConfig::default() };
         let mut e = engine_with(topo, make_default(kind), cfg);
+        let traced = i == 0 && trace_out.is_some();
+        if traced {
+            e.sys.trace.set_enabled(true);
+        }
         conduction::build(&mut e, mode, p);
         let rep = e.run().expect("memcmp run");
+        if traced {
+            let label = format!("memcmp sim/{} on {}", kind.label(), topo.name());
+            write_trace(&e.sys.trace, topo, trace_out.unwrap(), &label);
+        }
         debug_assert!(e.sys.mem.conserved(&e.sys.tasks), "footprint leak under {kind:?}");
         let m = &e.sys.metrics;
         rows.push(MemRow {
@@ -172,7 +196,10 @@ pub fn run(topo: &Topology, p: &HeatParams, kinds: &[SchedKind], seed: u64) -> M
 /// alone is measured). `modes` is the structure axis: `Simple` spawns
 /// loose green threads, `Bubbles` builds one bubble per NUMA node
 /// through `Marcel::bubbles_from_topology` — the paper's
-/// structured-vs-flat comparison on real OS workers.
+/// structured-vs-flat comparison on real OS workers. `trace_out`
+/// writes the first (policy, structure) leg's event stream as Chrome
+/// trace-event JSON — with wall-clock timestamps, since the native
+/// engine anchors `sys.now()` to a monotonic timer.
 pub fn run_native(
     topo: &Topology,
     p: &HeatParams,
@@ -180,15 +207,27 @@ pub fn run_native(
     touches: usize,
     policy: AllocPolicy,
     modes: &[StructureMode],
+    trace_out: Option<&str>,
 ) -> MemCmp {
     let mut rows = Vec::with_capacity(kinds.len() * modes.len());
+    let mut traced_legs = 0usize;
     for &kind in kinds {
         for &mode in modes {
             let sys = Arc::new(System::new(Arc::new(topo.clone())));
             let sched = make_default(kind);
             let mut ex = Executor::new(sys.clone(), sched);
+            let traced = traced_legs == 0 && trace_out.is_some();
+            traced_legs += 1;
+            if traced {
+                sys.trace.set_enabled(true);
+            }
             conduction::build_native(&mut ex, mode, p, policy, touches);
             let rep = ex.run();
+            if traced {
+                let label =
+                    format!("memcmp native/{}/{} on {}", kind.label(), mode.label(), topo.name());
+                write_trace(&sys.trace, topo, trace_out.unwrap(), &label);
+            }
             debug_assert!(
                 sys.mem.conserved(&sys.tasks),
                 "footprint leak under {kind:?}/{mode:?}"
@@ -229,7 +268,7 @@ mod tests {
         // ISSUE-2 acceptance: strictly higher local-access ratio than
         // the AFS baseline on the numa(4,4) preset.
         let topo = Topology::numa(4, 4);
-        let c = run(&topo, &contended(), &[SchedKind::Memaware, SchedKind::Afs], SEED);
+        let c = run(&topo, &contended(), &[SchedKind::Memaware, SchedKind::Afs], SEED, None);
         let ma = c.get("memaware");
         let afs = c.get("afs");
         assert!(ma.makespan > 0 && afs.makespan > 0);
@@ -244,7 +283,7 @@ mod tests {
     #[test]
     fn memaware_keeps_most_accesses_local() {
         let topo = Topology::numa(4, 4);
-        let c = run(&topo, &contended(), &[SchedKind::Memaware], SEED);
+        let c = run(&topo, &contended(), &[SchedKind::Memaware], SEED, None);
         let ma = c.get("memaware");
         assert!(ma.local_ratio > 0.6, "local ratio {:.3} too low", ma.local_ratio);
     }
@@ -253,7 +292,7 @@ mod tests {
     fn render_lists_every_policy() {
         let topo = Topology::numa(2, 2);
         let p = HeatParams { threads: 4, cycles: 3, work: 200_000, mem_fraction: 0.35 };
-        let c = run(&topo, &p, &default_kinds(), SEED);
+        let c = run(&topo, &p, &default_kinds(), SEED, None);
         let out = c.render();
         for k in default_kinds() {
             assert!(out.contains(k.label()), "{} missing:\n{out}", k.label());
@@ -270,8 +309,8 @@ mod tests {
         let p = HeatParams { threads: 6, cycles: 3, work: 150_000, mem_fraction: 0.35 };
         let kinds = [SchedKind::Memaware, SchedKind::Afs, SchedKind::Ss];
         let spans = |c: &MemCmp| c.rows.iter().map(|r| r.makespan).collect::<Vec<_>>();
-        let a = run(&topo, &p, &kinds, 7);
-        let b = run(&topo, &p, &kinds, 7);
+        let a = run(&topo, &p, &kinds, 7, None);
+        let b = run(&topo, &p, &kinds, 7, None);
         assert_eq!(spans(&a), spans(&b), "same seed must reproduce identical makespans");
     }
 
@@ -309,7 +348,7 @@ mod tests {
         let p = HeatParams { threads: 6, cycles: 3, work: 0, mem_fraction: 0.0 };
         let kinds = [SchedKind::Bubble, SchedKind::Ss];
         let modes = [StructureMode::Simple, StructureMode::Bubbles];
-        let c = run_native(&topo, &p, &kinds, 2, AllocPolicy::FirstTouch, &modes);
+        let c = run_native(&topo, &p, &kinds, 2, AllocPolicy::FirstTouch, &modes, None);
         assert_eq!(c.rows.len(), kinds.len() * modes.len());
         for kind in &kinds {
             for &mode in &modes {

@@ -1,0 +1,197 @@
+//! Log-bucketed latency histograms.
+//!
+//! 64 power-of-two buckets: bucket 0 counts the value 0, bucket `i`
+//! (1 ≤ i < 63) counts `[2^(i-1), 2^i)`, bucket 63 is open-ended.
+//! Two flavours share the bucketing: [`LatencyHist`] is atomic and
+//! lives in [`super::Metrics`] for lock-free hot-path recording;
+//! [`Histogram`] is a plain value type used by trace analysis.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log2 buckets.
+pub const BUCKETS: usize = 64;
+
+/// Bucket index for a value (see the module docs for the boundaries).
+pub fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// `(inclusive lower, exclusive upper)` bound of bucket `i`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    match i {
+        0 => (0, 1),
+        _ if i >= BUCKETS - 1 => (1 << (BUCKETS - 2), u64::MAX),
+        _ => (1 << (i - 1), 1 << i),
+    }
+}
+
+/// Lock-free histogram: one relaxed `fetch_add` per record.
+#[derive(Debug)]
+pub struct LatencyHist {
+    buckets: Box<[AtomicU64]>,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist { buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect() }
+    }
+}
+
+impl LatencyHist {
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot into a plain [`Histogram`].
+    pub fn snapshot(&self) -> Histogram {
+        Histogram { counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect() }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Plain (non-atomic) log2 histogram. Empty until first record —
+/// `counts` is either empty or `BUCKETS` long.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    pub fn record(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+        }
+        self.counts[bucket_of(v)] += 1;
+    }
+
+    pub fn from_samples(samples: impl IntoIterator<Item = u64>) -> Histogram {
+        let mut h = Histogram::default();
+        for s in samples {
+            h.record(s);
+        }
+        h
+    }
+
+    pub fn count(&self, bucket: usize) -> u64 {
+        self.counts.get(bucket).copied().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+
+    /// Value below which `p` (0.0–1.0) of the samples fall, reported
+    /// as the matching bucket's exclusive upper bound (`u64::MAX` for
+    /// the open last bucket); 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.total();
+        if total == 0 {
+            return 0;
+        }
+        let target = (p.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return bucket_bounds(i).1;
+            }
+        }
+        u64::MAX
+    }
+
+    /// Compact text rendering of the non-empty buckets.
+    pub fn render(&self, label: &str) -> String {
+        let total = self.total();
+        let mut out = format!("{label}: {total} samples");
+        if total == 0 {
+            out.push('\n');
+            return out;
+        }
+        out.push_str(&format!(
+            " (p50 < {}, p99 < {})\n",
+            self.percentile(0.50),
+            self.percentile(0.99)
+        ));
+        let peak = self.counts.iter().copied().max().unwrap_or(0).max(1);
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let (lo, hi) = bucket_bounds(i);
+            let bar = "#".repeat((c * 40).div_ceil(peak) as usize);
+            out.push_str(&format!("  [{lo:>12}, {hi:>12})  {c:>8}  {bar}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(7), 3);
+        assert_eq!(bucket_of(8), 4);
+        assert_eq!(bucket_of(1000), 10);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bounds_cover_the_line() {
+        for i in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo < hi, "bucket {i}");
+            assert_eq!(bucket_of(lo), i, "lower bound of bucket {i}");
+            if i < BUCKETS - 1 {
+                assert_eq!(bucket_of(hi - 1), i, "upper bound of bucket {i}");
+                assert_eq!(bucket_bounds(i + 1).0, hi, "buckets {i}/{} adjoin", i + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn atomic_and_plain_agree() {
+        let samples = [0u64, 1, 2, 3, 4, 7, 8, 1000, 1 << 40];
+        let a = LatencyHist::default();
+        for &s in &samples {
+            a.record(s);
+        }
+        let p = Histogram::from_samples(samples);
+        assert_eq!(a.snapshot(), p);
+        assert_eq!(a.total(), samples.len() as u64);
+        assert_eq!(p.count(10), 1);
+        assert_eq!(p.count(2), 2);
+    }
+
+    #[test]
+    fn percentile_reports_bucket_upper_bound() {
+        let h = Histogram::from_samples([1u64; 99].into_iter().chain([1000]));
+        assert_eq!(h.percentile(0.50), 2);
+        assert_eq!(h.percentile(0.995), 1024);
+        assert_eq!(Histogram::default().percentile(0.5), 0);
+        let open = Histogram::from_samples([u64::MAX]);
+        assert_eq!(open.percentile(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn render_mentions_counts() {
+        let h = Histogram::from_samples([5u64, 6, 7]);
+        let s = h.render("pick");
+        assert!(s.contains("3 samples"));
+        assert!(s.contains('#'));
+        assert!(Histogram::default().render("empty").contains("0 samples"));
+    }
+}

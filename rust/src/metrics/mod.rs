@@ -5,9 +5,13 @@
 //! basis of the evaluation tables: remote-access ratio and migrations
 //! are what separate *simple* from *bound*/*bubbles* in Table 2.
 
+pub mod hist;
+
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::fmt::Table;
+
+pub use hist::{Histogram, LatencyHist};
 
 /// Monotonic counters describing one run.
 #[derive(Debug, Default)]
@@ -71,6 +75,11 @@ pub struct Metrics {
     /// busy-polling regression shows up as a blow-up in this counter
     /// (tests bound it).
     pub exec_backoffs: AtomicU64,
+    /// Host-ns latency of `Scheduler::pick` calls (recorded only while
+    /// tracing is enabled — the timer itself costs two clock reads).
+    pub pick_latency: LatencyHist,
+    /// Host-ns latency of steal searches (same gating).
+    pub steal_latency: LatencyHist,
 }
 
 impl Metrics {
@@ -150,6 +159,8 @@ impl Metrics {
         t.row(&["search_retries".into(), g(&self.search_retries)]);
         t.row(&["pressure_redirects".into(), g(&self.pressure_redirects)]);
         t.row(&["exec_backoffs".into(), g(&self.exec_backoffs)]);
+        t.row(&["pick_latency_samples".into(), self.pick_latency.total().to_string()]);
+        t.row(&["steal_latency_samples".into(), self.steal_latency.total().to_string()]);
         t.render()
     }
 }

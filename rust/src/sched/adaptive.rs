@@ -208,6 +208,15 @@ impl AdaptiveScheduler {
             sl.store_last(sys.rates.snap(sys.topo.covering(cpu)[scope + 1]));
             Metrics::inc(&sys.metrics.scope_widens);
             self.switches.fetch_add(1, Ordering::Relaxed);
+            sys.trace_emit(|| {
+                let covering = sys.topo.covering(cpu);
+                crate::trace::Event::ScopeChange {
+                    cpu,
+                    from: covering[scope],
+                    to: covering[scope + 1],
+                    widened: true,
+                }
+            });
         } else if events >= self.cfg.epoch {
             self.decide(sys, cpu, sl);
         }
@@ -230,6 +239,15 @@ impl AdaptiveScheduler {
                 sl.store_last(sys.rates.snap(sys.topo.covering(cpu)[scope - 1]));
                 Metrics::inc(&sys.metrics.scope_narrows);
                 self.switches.fetch_add(1, Ordering::Relaxed);
+                sys.trace_emit(|| {
+                    let covering = sys.topo.covering(cpu);
+                    crate::trace::Event::ScopeChange {
+                        cpu,
+                        from: covering[scope],
+                        to: covering[scope - 1],
+                        widened: false,
+                    }
+                });
             } else {
                 sl.narrow_streak.store(streak, Ordering::Relaxed);
             }

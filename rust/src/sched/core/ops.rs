@@ -19,7 +19,7 @@ pub fn enqueue(sys: &System, task: TaskId, list: LevelId) {
         t.prio
     });
     sys.rq.push(list, task, prio);
-    sys.trace.emit(sys.now(), Event::Enqueue { task, list });
+    sys.trace_emit(|| Event::Enqueue { task, list });
     // Wake parked idle workers (native executor); no-op under the
     // polling simulator.
     sys.notify_enqueue();
@@ -44,7 +44,7 @@ pub fn dispatch(sys: &System, cpu: CpuId, task: TaskId, from: LevelId) {
     });
     sys.stats.on_dispatch(&sys.topo, cpu);
     Metrics::inc(&sys.metrics.picks);
-    sys.trace.emit(sys.now(), Event::Dispatch { task, cpu });
+    sys.trace_emit(|| Event::Dispatch { task, cpu });
 }
 
 /// Account that the task running on `cpu` stopped (whatever the
@@ -121,25 +121,22 @@ pub fn default_stop(
     note_stop(sys, cpu);
     match why {
         Yield | Preempt => {
-            sys.trace.emit(
-                sys.now(),
-                Event::Stop {
-                    task,
-                    cpu,
-                    why: if why == Yield { StopWhy::Yield } else { StopWhy::Preempt },
-                },
-            );
+            sys.trace_emit(|| Event::Stop {
+                task,
+                cpu,
+                why: if why == Yield { StopWhy::Yield } else { StopWhy::Preempt },
+            });
             if why == Preempt {
                 Metrics::inc(&sys.metrics.preemptions);
             }
             requeue(sys, task);
         }
         Block => {
-            sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Block });
+            sys.trace_emit(|| Event::Stop { task, cpu, why: StopWhy::Block });
             sys.tasks.set_state(task, TaskState::Blocked);
         }
         Terminate => {
-            sys.trace.emit(sys.now(), Event::Stop { task, cpu, why: StopWhy::Terminate });
+            sys.trace_emit(|| Event::Stop { task, cpu, why: StopWhy::Terminate });
             sys.tasks.set_state(task, TaskState::Terminated);
         }
     }
@@ -192,8 +189,30 @@ pub fn least_loaded_leaf(sys: &System, cpus: impl Iterator<Item = CpuId>) -> Lev
 pub fn pop_steal(sys: &System, cpu: CpuId, victim: LevelId) -> Option<(TaskId, Prio)> {
     let (task, prio) = sys.rq.pop_max(victim)?;
     Metrics::inc(&sys.metrics.steals);
-    sys.trace.emit(sys.now(), Event::Steal { task, from: victim, by: cpu });
+    sys.trace_emit(|| Event::Steal { task, from: victim, by: cpu });
     Some((task, prio))
+}
+
+/// Start a steal-search timer iff tracing is on (the timer is two host
+/// clock reads — not worth paying on every search otherwise).
+fn steal_timer(sys: &System) -> Option<std::time::Instant> {
+    sys.trace.enabled().then(std::time::Instant::now)
+}
+
+/// Record one finished steal search: latency histogram + StealAttempt
+/// trace record. `scope` is the widest level the search considered
+/// (the victim's list on a success, the searched root on a miss).
+fn note_steal_search(
+    sys: &System,
+    cpu: CpuId,
+    scope: LevelId,
+    ok: bool,
+    t0: Option<std::time::Instant>,
+) {
+    let Some(t0) = t0 else { return };
+    let ns = (t0.elapsed().as_nanos() as u64).max(1);
+    sys.metrics.steal_latency.record(ns);
+    sys.trace.emit(sys.now(), Event::StealAttempt { by: cpu, scope, ok, ns });
 }
 
 /// Account one steal search that came up empty (metric + per-level
@@ -210,8 +229,10 @@ pub fn note_steal_fail(sys: &System, cpu: CpuId) {
 /// machine is empty (root subtree counter).
 pub fn steal_fullest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
     sys.rates.on_steal_attempt(&sys.topo, cpu);
+    let t0 = steal_timer(sys);
     if sys.rq.total_queued() == 0 {
         note_steal_fail(sys, cpu);
+        note_steal_search(sys, cpu, sys.topo.root(), false, t0);
         return None;
     }
     let mut victim: Option<(LevelId, usize)> = None;
@@ -230,6 +251,7 @@ pub fn steal_fullest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
     if out.is_none() {
         note_steal_fail(sys, cpu);
     }
+    note_steal_search(sys, cpu, out.map_or(sys.topo.root(), |(_, v)| v), out.is_some(), t0);
     out
 }
 
@@ -238,6 +260,7 @@ pub fn steal_fullest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
 /// distance the fullest victim wins.
 pub fn steal_closest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
     sys.rates.on_steal_attempt(&sys.topo, cpu);
+    let t0 = steal_timer(sys);
     let order = sys.topo.steal_order(cpu);
     let sep = |l: LevelId| sys.topo.separation(cpu, CpuId(sys.topo.node(l).cpu_first));
     let mut i = 0;
@@ -254,12 +277,14 @@ pub fn steal_closest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
         }
         if let Some((_, v)) = best {
             if let Some((task, _)) = pop_steal(sys, cpu, v) {
+                note_steal_search(sys, cpu, v, true, t0);
                 return Some((task, v));
             }
         }
         i = j;
     }
     note_steal_fail(sys, cpu);
+    note_steal_search(sys, cpu, sys.topo.root(), false, t0);
     None
 }
 
@@ -267,11 +292,13 @@ pub fn steal_closest(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
 /// 2.6 / FreeBSD 5 "rebalance" structure).
 pub fn steal_most_loaded(sys: &System, cpu: CpuId) -> Option<(TaskId, LevelId)> {
     sys.rates.on_steal_attempt(&sys.topo, cpu);
+    let t0 = steal_timer(sys);
     let out = most_loaded_leaf(sys, (0..sys.topo.n_cpus()).map(CpuId).filter(|&c| c != cpu))
         .and_then(|v| pop_steal(sys, cpu, v).map(|(task, _prio)| (task, v)));
     if out.is_none() {
         note_steal_fail(sys, cpu);
     }
+    note_steal_search(sys, cpu, out.map_or(sys.topo.root(), |(_, v)| v), out.is_some(), t0);
     out
 }
 

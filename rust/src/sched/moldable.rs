@@ -231,6 +231,7 @@ impl MoldableGangScheduler {
         shrink: bool,
     ) {
         let gang = st.active[i].gang;
+        let from = st.active[i].comp;
         st.active[i].comp = to;
         st.active[i].shrink_streak = 0;
         st.active[i].expand_streak = 0;
@@ -247,6 +248,7 @@ impl MoldableGangScheduler {
             &sys.metrics.gang_expands
         });
         sys.trace.emit(sys.now(), Event::RegenDone { bubble: gang, list: to });
+        sys.trace_emit(|| Event::GangResize { gang, from, to, grew: !shrink });
     }
 
     /// Release a gang's runnable members onto its component's list.

@@ -3,7 +3,8 @@
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 use super::core::stats::{LoadStats, RateStats};
 use crate::mem::{MemState, RegionId, Touch};
@@ -11,7 +12,7 @@ use crate::metrics::Metrics;
 use crate::rq::RqHierarchy;
 use crate::task::TaskTable;
 use crate::topology::{CpuId, Topology};
-use crate::trace::Trace;
+use crate::trace::{Event, Trace};
 
 /// Optional callback fired after every `ops::enqueue` (installed by the
 /// native executor so idle workers wake on work arrival instead of
@@ -85,6 +86,11 @@ pub struct System {
     /// Engine clock (simulated cycles / native ns); engines advance it,
     /// schedulers read it for trace timestamps.
     clock: AtomicU64,
+    /// Wall-clock anchor set by the native executor
+    /// ([`System::start_wall_clock`]). Once set, [`System::now`] reports
+    /// monotonic nanoseconds since the anchor instead of the logical
+    /// clock, so native trace records carry real timestamps.
+    wall_anchor: OnceLock<Instant>,
     /// Rotating tie-break offset for wake placement (see
     /// `core::ops::least_loaded_leaf`). Per-system — not a process
     /// global — so two seeded runs in one process place identically.
@@ -99,6 +105,7 @@ impl System {
         let stats = LoadStats::new(&topo);
         let rates = RateStats::new(&topo);
         let mem = MemState::new(&topo);
+        let n_cpus = topo.n_cpus();
         System {
             topo,
             tasks: TaskTable::new(),
@@ -107,8 +114,9 @@ impl System {
             rates,
             mem,
             metrics: Metrics::new(),
-            trace: Trace::default(),
+            trace: Trace::for_cpus(n_cpus, 1 << 14),
             clock: AtomicU64::new(0),
+            wall_anchor: OnceLock::new(),
             placement_rot: AtomicUsize::new(0),
             enqueue_hook: EnqueueHook::default(),
         }
@@ -212,8 +220,13 @@ impl System {
     /// green threads (`GreenApi::touch_region`) — so the memory
     /// behaviour of a policy is observable identically on either.
     pub fn touch_region(&self, r: RegionId, cpu: CpuId) -> Touch {
+        // The pre-touch home is only observable before the touch, and
+        // only needed for the RegionMigrate record — query it lazily.
+        let tracing = self.trace.enabled();
+        let pre_home = if tracing { self.mem.home(r) } else { None };
         let touch = self.mem.touch(&self.tasks, &self.topo, r, cpu);
-        if touch.home == self.topo.numa_of(cpu) {
+        let local = touch.home == self.topo.numa_of(cpu);
+        if local {
             Metrics::inc(&self.metrics.local_accesses);
         } else {
             Metrics::inc(&self.metrics.remote_accesses);
@@ -222,17 +235,55 @@ impl System {
             Metrics::inc(&self.metrics.mem_migrations);
             Metrics::add(&self.metrics.migrated_bytes, touch.migrated);
         }
+        if tracing {
+            let at = self.now();
+            self.trace.emit(at, Event::RegionTouch { region: r, cpu, home: touch.home, local });
+            if touch.migrated > 0 {
+                self.trace.emit(
+                    at,
+                    Event::RegionMigrate {
+                        region: r,
+                        from: pre_home.unwrap_or(touch.home),
+                        to: touch.home,
+                        bytes: touch.migrated,
+                    },
+                );
+            }
+        }
         touch
     }
 
-    /// Current engine time.
+    /// Current engine time: wall ns since [`System::start_wall_clock`]
+    /// once a native run anchored it (offset by 1 so a started clock is
+    /// never 0), otherwise the logical clock engines advance.
     pub fn now(&self) -> u64 {
-        self.clock.load(Ordering::Relaxed)
+        match self.wall_anchor.get() {
+            Some(anchor) => anchor.elapsed().as_nanos() as u64 + 1,
+            None => self.clock.load(Ordering::Relaxed),
+        }
     }
 
-    /// Advance the engine clock to `t` (monotonic max).
+    /// Anchor the engine clock to the host monotonic clock (native
+    /// executor, at run start). Idempotent: the first anchor wins, so
+    /// timestamps stay comparable across executors sharing a system.
+    pub fn start_wall_clock(&self) {
+        self.wall_anchor.get_or_init(Instant::now);
+    }
+
+    /// Advance the logical engine clock to `t` (monotonic max; the
+    /// simulator's time source — ignored by [`System::now`] once a
+    /// wall anchor is set).
     pub fn advance_clock(&self, t: u64) {
         self.clock.fetch_max(t, Ordering::Relaxed);
+    }
+
+    /// Emit a trace event without paying to construct it while tracing
+    /// is off: `f` runs only when enabled. Hot paths (enqueue,
+    /// dispatch, steal, pick timing) come through here.
+    pub fn trace_emit(&self, f: impl FnOnce() -> Event) {
+        if self.trace.enabled() {
+            self.trace.emit(self.now(), f());
+        }
     }
 }
 
@@ -247,6 +298,20 @@ mod tests {
         s.advance_clock(10);
         s.advance_clock(5);
         assert_eq!(s.now(), 10);
+    }
+
+    #[test]
+    fn wall_clock_overrides_logical_clock() {
+        let s = System::new(Arc::new(Topology::smp(2)));
+        s.start_wall_clock();
+        let a = s.now();
+        assert!(a > 0, "anchored clock is never 0");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let b = s.now();
+        assert!(b > a, "anchored clock advances with wall time");
+        s.advance_clock(u64::MAX);
+        assert!(s.now() >= b, "logical advances no longer steer now()");
+        assert!(s.now() < u64::MAX / 2);
     }
 
     #[test]

@@ -313,7 +313,19 @@ impl SimEngine {
     /// Ask the scheduler for work; start a segment if any. Returns
     /// whether the CPU got work.
     fn dispatch_on(&mut self, cpu: CpuId) -> bool {
-        let Some(task) = self.sched.pick(&self.sys, cpu) else {
+        // Time the pick only while tracing. The ns value is *host*
+        // tool time (how expensive the pick code itself is) while `at`
+        // stays in simulated cycles; the record never feeds back into
+        // simulated timing, so seeded runs stay reproducible.
+        let pick_t0 = self.sys.trace.enabled().then(std::time::Instant::now);
+        let picked = self.sched.pick(&self.sys, cpu);
+        if let Some(t0) = pick_t0 {
+            let ns = (t0.elapsed().as_nanos() as u64).max(1);
+            self.sys.metrics.pick_latency.record(ns);
+            let ev = TraceEvent::PickLatency { cpu, ns, hit: picked.is_some() };
+            self.sys.trace.emit(self.sys.now(), ev);
+        }
+        let Some(task) = picked else {
             return false;
         };
         // Resume penalty: cache refill if the thread moved CPUs.

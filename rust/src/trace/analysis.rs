@@ -5,11 +5,15 @@
 //! Consumes a [`super::Trace`] and produces:
 //! * per-CPU dispatch/steal counts and a migration matrix,
 //! * per-bubble lifecycle summaries (descents, bursts, regenerations),
-//! * a list-occupancy profile (which levels actually hold work).
+//! * a list-occupancy profile (which levels actually hold work),
+//! * pick/steal latency histograms and per-interval utilization and
+//!   local-ratio time series (from the Dispatch→Stop spans and
+//!   RegionTouch records).
 
 use std::collections::HashMap;
 
 use super::{Event, Record, RegenWhy};
+use crate::metrics::Histogram;
 use crate::task::TaskId;
 use crate::topology::{CpuId, LevelId, Topology};
 use crate::util::fmt::Table;
@@ -41,13 +45,41 @@ pub struct Analysis {
     pub bubbles: HashMap<usize, BubbleStats>,
     /// Barrier releases observed.
     pub barrier_releases: usize,
+    /// Host-ns latency of pick calls (from PickLatency records).
+    pub pick_latency: Histogram,
+    /// Host-ns latency of steal searches (from StealAttempt records).
+    pub steal_latency: Histogram,
+    /// PickLatency records that returned a task / came up empty.
+    pub pick_hits: usize,
+    pub pick_misses: usize,
+    /// StealAttempt records total / successful.
+    pub steal_attempts: usize,
+    pub steal_hits: usize,
+    /// Adaptive scope moves, moldable gang resizes, region re-homings,
+    /// native worker parks.
+    pub scope_changes: usize,
+    pub gang_resizes: usize,
+    pub region_migrations: usize,
+    pub parks: usize,
+    /// Executed Dispatch→Stop segments: `(cpu, start, end)`.
+    pub spans: Vec<(usize, u64, u64)>,
+    /// RegionTouch records: `(at, local)`.
+    pub touches: Vec<(u64, bool)>,
+    /// Timestamp range seen across all records (0,0 when empty).
+    pub t_min: u64,
+    pub t_max: u64,
 }
 
-/// Analyse a recorded trace.
+/// Analyse a recorded trace (a merged stream sorted by time, as
+/// [`super::Trace::records`]/[`super::Trace::drain`] produce).
 pub fn analyse(records: &[Record]) -> Analysis {
     let mut a = Analysis::default();
     let mut last_cpu: HashMap<TaskId, CpuId> = HashMap::new();
+    let mut open: HashMap<usize, (TaskId, u64)> = HashMap::new();
+    let mut t_min = u64::MAX;
     for r in records {
+        t_min = t_min.min(r.at);
+        a.t_max = a.t_max.max(r.at);
         match &r.event {
             Event::Dispatch { task, cpu } => {
                 *a.dispatches.entry(cpu.0).or_default() += 1;
@@ -55,6 +87,16 @@ pub fn analyse(records: &[Record]) -> Analysis {
                     if prev != *cpu {
                         a.migrations += 1;
                         *a.migration_matrix.entry((prev.0, cpu.0)).or_default() += 1;
+                    }
+                }
+                open.insert(cpu.0, (*task, r.at));
+            }
+            Event::Stop { task, cpu, .. } => {
+                if let Some((t, start)) = open.remove(&cpu.0) {
+                    if t == *task {
+                        a.spans.push((cpu.0, start, r.at));
+                    } else {
+                        open.insert(cpu.0, (t, start));
                     }
                 }
             }
@@ -80,8 +122,37 @@ pub fn analyse(records: &[Record]) -> Analysis {
                 }
             }
             Event::BarrierRelease { .. } => a.barrier_releases += 1,
-            Event::Stop { .. } | Event::RegenDone { .. } => {}
+            Event::PickLatency { ns, hit, .. } => {
+                a.pick_latency.record(*ns);
+                if *hit {
+                    a.pick_hits += 1;
+                } else {
+                    a.pick_misses += 1;
+                }
+            }
+            Event::StealAttempt { ok, ns, .. } => {
+                a.steal_latency.record(*ns);
+                a.steal_attempts += 1;
+                if *ok {
+                    a.steal_hits += 1;
+                }
+            }
+            Event::ScopeChange { .. } => a.scope_changes += 1,
+            Event::GangResize { .. } => a.gang_resizes += 1,
+            Event::RegionMigrate { .. } => a.region_migrations += 1,
+            Event::RegionTouch { local, .. } => a.touches.push((r.at, *local)),
+            Event::WorkerPark { .. } => a.parks += 1,
+            Event::RegenDone { .. } | Event::WorkerUnpark { .. } => {}
         }
+    }
+    // A segment still running at the trace edge counts up to the last
+    // seen timestamp (matches the exporter's dangling-span closing).
+    for (cpu, (_, start)) in open {
+        a.spans.push((cpu, start, a.t_max.max(start)));
+    }
+    a.spans.sort_unstable();
+    if t_min != u64::MAX {
+        a.t_min = t_min;
     }
     a
 }
@@ -116,6 +187,61 @@ impl Analysis {
             *out.entry(d).or_default() += n;
         }
         out
+    }
+
+    /// Per-interval CPU utilization: the `(t_min, t_max)` range split
+    /// into `intervals` equal windows, each reporting busy-time (from
+    /// the Dispatch→Stop spans, summed over CPUs) divided by
+    /// `n_cpus × window`. Empty when the trace has no time extent.
+    pub fn utilization_timeline(&self, n_cpus: usize, intervals: usize) -> Vec<f64> {
+        let extent = self.t_max.saturating_sub(self.t_min);
+        if extent == 0 || intervals == 0 || n_cpus == 0 {
+            return Vec::new();
+        }
+        let mut busy = vec![0.0f64; intervals];
+        let w = extent as f64 / intervals as f64;
+        for &(_, s, e) in &self.spans {
+            let (s, e) = (s.max(self.t_min), e.min(self.t_max));
+            if e <= s {
+                continue;
+            }
+            let lo = ((s - self.t_min) as f64 / w) as usize;
+            let hi = (((e - self.t_min) as f64 / w).ceil() as usize).min(intervals);
+            for (i, b) in busy.iter_mut().enumerate().take(hi).skip(lo) {
+                let win_s = self.t_min as f64 + i as f64 * w;
+                let overlap = (e as f64).min(win_s + w) - (s as f64).max(win_s);
+                if overlap > 0.0 {
+                    *b += overlap;
+                }
+            }
+        }
+        busy.iter().map(|&b| (b / (w * n_cpus as f64)).min(1.0)).collect()
+    }
+
+    /// Per-interval memory locality: `(window start, local ratio,
+    /// touches)` per window with at least one RegionTouch record.
+    pub fn local_ratio_timeline(&self, intervals: usize) -> Vec<(u64, f64, usize)> {
+        let extent = self.t_max.saturating_sub(self.t_min);
+        if extent == 0 || intervals == 0 || self.touches.is_empty() {
+            return Vec::new();
+        }
+        let mut local = vec![0usize; intervals];
+        let mut total = vec![0usize; intervals];
+        let w = extent as f64 / intervals as f64;
+        for &(at, is_local) in &self.touches {
+            let i = (((at.saturating_sub(self.t_min)) as f64 / w) as usize).min(intervals - 1);
+            total[i] += 1;
+            if is_local {
+                local[i] += 1;
+            }
+        }
+        (0..intervals)
+            .filter(|&i| total[i] > 0)
+            .map(|i| {
+                let start = self.t_min + (i as f64 * w) as u64;
+                (start, local[i] as f64 / total[i] as f64, total[i])
+            })
+            .collect()
     }
 
     /// Human-readable report.
@@ -164,6 +290,41 @@ impl Analysis {
                 ]);
             }
             out.push_str(&t.render());
+        }
+        if self.pick_hits + self.pick_misses > 0 {
+            out.push_str(&format!(
+                "picks timed: {} hit, {} empty\n",
+                self.pick_hits, self.pick_misses
+            ));
+            out.push_str(&self.pick_latency.render("pick latency ns"));
+        }
+        if self.steal_attempts > 0 {
+            out.push_str(&format!(
+                "steal searches: {} ({} hit)\n",
+                self.steal_attempts, self.steal_hits
+            ));
+            out.push_str(&self.steal_latency.render("steal latency ns"));
+        }
+        if self.scope_changes + self.gang_resizes + self.region_migrations + self.parks > 0 {
+            out.push_str(&format!(
+                "scope changes: {}, gang resizes: {}, region migrations: {}, parks: {}\n",
+                self.scope_changes, self.gang_resizes, self.region_migrations, self.parks
+            ));
+        }
+        let util = self.utilization_timeline(topo.n_cpus(), 10);
+        if !util.is_empty() {
+            out.push_str("utilization timeline (10 windows):\n ");
+            for u in &util {
+                out.push_str(&format!(" {u:.2}"));
+            }
+            out.push('\n');
+        }
+        let locality = self.local_ratio_timeline(10);
+        if !locality.is_empty() {
+            out.push_str("local-ratio timeline (window start, ratio, touches):\n");
+            for (start, ratio, n) in &locality {
+                out.push_str(&format!("  {start:>12}  {ratio:.3}  {n}\n"));
+            }
         }
         out
     }
@@ -231,5 +392,60 @@ mod tests {
         let a = analyse(&[]);
         assert_eq!(a.migrations, 0);
         assert_eq!(a.dispatch_imbalance(), 0.0);
+        assert!(a.utilization_timeline(4, 10).is_empty());
+        assert!(a.local_ratio_timeline(10).is_empty());
+    }
+
+    #[test]
+    fn spans_and_timelines_from_synthetic_stream() {
+        use crate::trace::StopWhy;
+        let rec = |at: u64, seq: u64, event: Event| Record { at, seq, cpu: Some(CpuId(0)), event };
+        let recs = vec![
+            rec(0, 0, Event::Dispatch { task: TaskId(1), cpu: CpuId(0) }),
+            rec(200, 1, Event::RegionTouch { region: 0, cpu: CpuId(0), home: 0, local: true }),
+            rec(500, 2, Event::Stop { task: TaskId(1), cpu: CpuId(0), why: StopWhy::Yield }),
+            rec(700, 3, Event::PickLatency { cpu: CpuId(0), ns: 1000, hit: false }),
+            rec(
+                800,
+                4,
+                Event::StealAttempt { by: CpuId(0), scope: LevelId(0), ok: true, ns: 3 },
+            ),
+            rec(900, 5, Event::RegionTouch { region: 1, cpu: CpuId(0), home: 1, local: false }),
+            rec(1000, 6, Event::WorkerPark { cpu: CpuId(0) }),
+        ];
+        let a = analyse(&recs);
+        assert_eq!(a.spans, vec![(0, 0, 500)]);
+        assert_eq!((a.t_min, a.t_max), (0, 1000));
+        assert_eq!(a.pick_misses, 1);
+        assert_eq!((a.steal_attempts, a.steal_hits), (1, 1));
+        assert_eq!(a.pick_latency.count(10), 1, "1000ns lands in bucket 10");
+        assert_eq!(a.steal_latency.count(2), 1, "3ns lands in bucket 2");
+        assert_eq!(a.parks, 1);
+        // One CPU busy for [0,500) of [0,1000): halves of the timeline.
+        let util = analyse(&recs).utilization_timeline(1, 2);
+        assert!((util[0] - 1.0).abs() < 1e-9 && util[1].abs() < 1e-9, "{util:?}");
+        let loc = a.local_ratio_timeline(2);
+        assert_eq!(loc.len(), 2);
+        assert!((loc[0].1 - 1.0).abs() < 1e-9 && loc[1].1.abs() < 1e-9, "{loc:?}");
+    }
+
+    #[test]
+    fn dangling_span_closes_at_trace_edge() {
+        let recs = vec![
+            Record {
+                at: 100,
+                seq: 0,
+                cpu: Some(CpuId(1)),
+                event: Event::Dispatch { task: TaskId(2), cpu: CpuId(1) },
+            },
+            Record {
+                at: 400,
+                seq: 1,
+                cpu: Some(CpuId(0)),
+                event: Event::WorkerPark { cpu: CpuId(0) },
+            },
+        ];
+        let a = analyse(&recs);
+        assert_eq!(a.spans, vec![(1, 100, 400)]);
     }
 }

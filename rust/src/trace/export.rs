@@ -1,0 +1,295 @@
+//! Chrome trace-event JSON export (`chrome://tracing`, Perfetto).
+//!
+//! Hand-rolled writer — the crate is dependency-free. Schema: one
+//! object `{"traceEvents": [...]}` where everything shares `pid` 0,
+//! each CPU is a thread row (`tid` = CPU index, named `cpu<N>` by
+//! metadata events) plus an `external` row for records with no CPU
+//! context. Each Dispatch→Stop pair becomes one complete `"X"` event
+//! (name `t<task>`, `ts`/`dur` in microseconds, args carrying the task
+//! id and stop reason); spans still open at the end of the stream are
+//! closed at the last seen timestamp so the file always validates.
+//! Bursts, steals, bubble moves, regenerations, barrier releases,
+//! scope/gang changes, region migrations and worker park/unpark become
+//! `"i"` instant events. Enqueue, RegionTouch and PickLatency records
+//! are high-frequency raw-stream data; the viewer adds nothing over
+//! the analysis tables, so they are not exported.
+
+use super::{Event, Record, StopWhy};
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Engine-ns timestamp → trace-event µs with ns precision kept.
+fn us(at: u64) -> String {
+    format!("{:.3}", at as f64 / 1000.0)
+}
+
+fn meta(name: &str, tid: usize, value: &str) -> String {
+    format!(
+        "{{\"name\":\"{name}\",\"ph\":\"M\",\"pid\":0,\"tid\":{tid},\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        esc(value)
+    )
+}
+
+fn span(task: usize, tid: usize, start: u64, end: u64, why: &str) -> String {
+    format!(
+        "{{\"name\":\"t{task}\",\"ph\":\"X\",\"pid\":0,\"tid\":{tid},\
+         \"ts\":{},\"dur\":{},\"args\":{{\"task\":{task},\"why\":\"{why}\"}}}}",
+        us(start),
+        us(end.saturating_sub(start))
+    )
+}
+
+fn instant(name: &str, tid: usize, at: u64, args: &str) -> String {
+    format!(
+        "{{\"name\":\"{name}\",\"ph\":\"i\",\"pid\":0,\"tid\":{tid},\
+         \"ts\":{},\"s\":\"t\",\"args\":{{{args}}}}}",
+        us(at)
+    )
+}
+
+fn why_str(w: StopWhy) -> &'static str {
+    match w {
+        StopWhy::Yield => "yield",
+        StopWhy::Preempt => "preempt",
+        StopWhy::Block => "block",
+        StopWhy::Terminate => "terminate",
+        StopWhy::BackInBubble => "back-in-bubble",
+    }
+}
+
+/// Render a merged, time-ordered record stream (see
+/// [`super::Trace::drain`]) as Chrome trace-event JSON. `n_cpus` sizes
+/// the thread rows (records from CPUs ≥ `n_cpus` and contextless
+/// records land on the `external` row); `label` names the process.
+pub fn chrome_json(records: &[Record], n_cpus: usize, label: &str) -> String {
+    let ext = n_cpus;
+    let mut ev: Vec<String> = Vec::with_capacity(records.len() + n_cpus + 2);
+    ev.push(meta("process_name", 0, label));
+    for c in 0..n_cpus {
+        ev.push(meta("thread_name", c, &format!("cpu{c}")));
+    }
+    ev.push(meta("thread_name", ext, "external"));
+
+    // Open Dispatch span per CPU row: (task, start time).
+    let mut open: Vec<Option<(usize, u64)>> = vec![None; n_cpus + 1];
+    let mut t_max = 0u64;
+    let row = |c: usize| if c < n_cpus { c } else { ext };
+
+    for r in records {
+        t_max = t_max.max(r.at);
+        let ctx = r.cpu.map_or(ext, |c| row(c.0));
+        match &r.event {
+            Event::Dispatch { task, cpu } => {
+                let tid = row(cpu.0);
+                // A dispatch over a still-open span (lost Stop record)
+                // closes the old one here rather than leaking it.
+                if let Some((t, start)) = open[tid].take() {
+                    ev.push(span(t, tid, start, r.at, "lost"));
+                }
+                open[tid] = Some((task.0, r.at));
+            }
+            Event::Stop { task, cpu, why } => {
+                let tid = row(cpu.0);
+                match open[tid].take() {
+                    Some((t, start)) if t == task.0 => {
+                        ev.push(span(t, tid, start, r.at, why_str(*why)));
+                    }
+                    other => {
+                        // Stop without a matching Dispatch (dropped
+                        // record): restore and render a zero-width span
+                        // so the segment stays visible.
+                        open[tid] = other;
+                        ev.push(span(task.0, tid, r.at, r.at, why_str(*why)));
+                    }
+                }
+            }
+            Event::Burst { bubble, list, released } => {
+                ev.push(instant(
+                    "burst",
+                    ctx,
+                    r.at,
+                    &format!("\"bubble\":{},\"list\":{},\"released\":{released}", bubble.0, list.0),
+                ));
+            }
+            Event::Steal { task, from, by } => {
+                ev.push(instant(
+                    "steal",
+                    row(by.0),
+                    r.at,
+                    &format!("\"task\":{},\"from\":{}", task.0, from.0),
+                ));
+            }
+            Event::StealAttempt { by, scope, ok, ns } => {
+                if !ok {
+                    ev.push(instant(
+                        "steal-miss",
+                        row(by.0),
+                        r.at,
+                        &format!("\"scope\":{},\"ns\":{ns}", scope.0),
+                    ));
+                }
+            }
+            Event::BubbleDown { bubble, from, to } => {
+                ev.push(instant(
+                    "bubble-down",
+                    ctx,
+                    r.at,
+                    &format!("\"bubble\":{},\"from\":{},\"to\":{}", bubble.0, from.0, to.0),
+                ));
+            }
+            Event::Regen { bubble, .. } => {
+                ev.push(instant("regen", ctx, r.at, &format!("\"bubble\":{}", bubble.0)));
+            }
+            Event::RegenDone { bubble, list } => {
+                ev.push(instant(
+                    "regen-done",
+                    ctx,
+                    r.at,
+                    &format!("\"bubble\":{},\"list\":{}", bubble.0, list.0),
+                ));
+            }
+            Event::BarrierRelease { id, waiters } => {
+                ev.push(instant(
+                    "barrier",
+                    ctx,
+                    r.at,
+                    &format!("\"id\":{id},\"waiters\":{waiters}"),
+                ));
+            }
+            Event::ScopeChange { cpu, from, to, widened } => {
+                ev.push(instant(
+                    if *widened { "scope-widen" } else { "scope-narrow" },
+                    row(cpu.0),
+                    r.at,
+                    &format!("\"from\":{},\"to\":{}", from.0, to.0),
+                ));
+            }
+            Event::GangResize { gang, from, to, grew } => {
+                ev.push(instant(
+                    if *grew { "gang-grow" } else { "gang-shrink" },
+                    ctx,
+                    r.at,
+                    &format!("\"gang\":{},\"from\":{},\"to\":{}", gang.0, from.0, to.0),
+                ));
+            }
+            Event::RegionMigrate { region, from, to, bytes } => {
+                ev.push(instant(
+                    "region-migrate",
+                    ctx,
+                    r.at,
+                    &format!("\"region\":{region},\"from\":{from},\"to\":{to},\"bytes\":{bytes}"),
+                ));
+            }
+            Event::WorkerPark { cpu } => {
+                ev.push(instant("park", row(cpu.0), r.at, ""));
+            }
+            Event::WorkerUnpark { cpu } => {
+                ev.push(instant("unpark", row(cpu.0), r.at, ""));
+            }
+            Event::Enqueue { .. } | Event::RegionTouch { .. } | Event::PickLatency { .. } => {}
+        }
+    }
+    // Close dangling spans (run ended mid-segment) at the last seen
+    // timestamp so every "X" event is complete.
+    for (tid, slot) in open.iter().enumerate() {
+        if let Some((t, start)) = slot {
+            ev.push(span(*t, tid, *start, t_max.max(*start), "run-end"));
+        }
+    }
+
+    let mut out = String::from("{\"traceEvents\":[\n");
+    out.push_str(&ev.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::task::TaskId;
+    use crate::topology::{CpuId, LevelId};
+    use crate::util::json;
+
+    fn rec(at: u64, seq: u64, cpu: Option<usize>, event: Event) -> Record {
+        Record { at, seq, cpu: cpu.map(CpuId), event }
+    }
+
+    fn count(hay: &str, needle: &str) -> usize {
+        hay.matches(needle).count()
+    }
+
+    #[test]
+    fn spans_pair_dispatch_with_stop() {
+        let recs = vec![
+            rec(1000, 0, Some(0), Event::Dispatch { task: TaskId(7), cpu: CpuId(0) }),
+            rec(5000, 1, Some(0), Event::Stop {
+                task: TaskId(7),
+                cpu: CpuId(0),
+                why: StopWhy::Yield,
+            }),
+        ];
+        let j = chrome_json(&recs, 2, "test");
+        json::validate(&j).expect("valid JSON");
+        assert_eq!(count(&j, "\"ph\":\"X\""), 1);
+        assert!(j.contains("\"name\":\"t7\""));
+        assert!(j.contains("\"ts\":1.000"));
+        assert!(j.contains("\"dur\":4.000"));
+        assert!(j.contains("\"why\":\"yield\""));
+        assert!(j.contains("\"name\":\"cpu1\""));
+        assert!(j.contains("\"name\":\"external\""));
+    }
+
+    #[test]
+    fn dangling_span_is_closed_at_stream_end() {
+        let recs = vec![
+            rec(100, 0, Some(1), Event::Dispatch { task: TaskId(3), cpu: CpuId(1) }),
+            rec(900, 1, Some(0), Event::WorkerPark { cpu: CpuId(0) }),
+        ];
+        let j = chrome_json(&recs, 2, "test");
+        json::validate(&j).expect("valid JSON");
+        assert_eq!(count(&j, "\"ph\":\"X\""), 1);
+        assert!(j.contains("\"why\":\"run-end\""));
+        assert!(j.contains("\"dur\":0.800"));
+    }
+
+    #[test]
+    fn instants_and_skips() {
+        let recs = vec![
+            rec(1, 0, None, Event::Enqueue { task: TaskId(1), list: LevelId(0) }),
+            rec(2, 1, Some(0), Event::PickLatency { cpu: CpuId(0), ns: 50, hit: true }),
+            rec(3, 2, Some(0), Event::Steal { task: TaskId(1), from: LevelId(0), by: CpuId(0) }),
+            rec(4, 3, Some(1), Event::StealAttempt {
+                by: CpuId(1),
+                scope: LevelId(0),
+                ok: false,
+                ns: 90,
+            }),
+            rec(5, 4, None, Event::Burst { bubble: TaskId(9), list: LevelId(0), released: 2 }),
+        ];
+        let j = chrome_json(&recs, 2, "test");
+        json::validate(&j).expect("valid JSON");
+        assert_eq!(count(&j, "\"ph\":\"i\""), 3, "steal + steal-miss + burst");
+        assert_eq!(count(&j, "\"ph\":\"X\""), 0);
+        assert!(!j.contains("Enqueue") && !j.contains("PickLatency"));
+        assert!(j.contains("\"name\":\"steal-miss\""));
+    }
+
+    #[test]
+    fn label_is_escaped() {
+        let j = chrome_json(&[], 1, "a\"b\\c");
+        json::validate(&j).expect("valid JSON");
+        assert!(j.contains("a\\\"b\\\\c"));
+    }
+}

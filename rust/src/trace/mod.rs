@@ -2,18 +2,53 @@
 //! based on tracing the scheduler at runtime, so as to check and refine
 //! scheduling strategies").
 //!
-//! A bounded in-memory ring of timestamped events, cheap enough to leave
-//! compiled in; recording is off unless enabled. Tests use traces to
-//! assert *behavioural* properties (e.g. "every burst happens at the
-//! bubble's bursting depth"), the CLI dumps them for humans.
+//! Always compiled in, near-zero cost while disabled: the hot-path
+//! check is one atomic load ([`Trace::enabled`]), and callers that
+//! would pay to *construct* an event go through
+//! [`crate::sched::System::trace_emit`], which checks first.
+//!
+//! # Ring / drain protocol
+//!
+//! Recording is sharded: one fixed-capacity lock-free ring
+//! ([`ring::EventRing`]) per virtual CPU plus one *external* shard for
+//! threads with no CPU context. A writer picks its shard through the
+//! owner-identity thread-local ([`crate::rq::owner::current_cpu`]) —
+//! the same identity that routes the runqueue fast lane — so native
+//! workers and the simulator's virtual CPUs record without ever
+//! contending on a lock. Each record carries the engine timestamp, a
+//! globally ordered emission stamp (one shared `fetch_add`), and the
+//! recording CPU; the merge step sorts by `(at, stamp)` into one
+//! time-ordered stream. Per-slot seqlocks make drain-while-recording
+//! well-defined: [`Trace::drain`] returns every published record
+//! exactly once, counts lapped records as dropped, and never returns a
+//! torn read (see `ring` for the memory-ordering argument).
+//!
+//! Events are stored word-encoded (7×u64 per record, one cache line
+//! with the seqlock word); [`Event::encode`]/[`Event::decode`]
+//! round-trip every variant.
+//!
+//! # Export schema
+//!
+//! [`export::chrome_json`] renders a merged stream as Chrome
+//! trace-event JSON (`chrome://tracing`, Perfetto): one row (`tid`) per
+//! CPU plus an `external` row, a complete `"X"` span per
+//! Dispatch→Stop segment (name `t<task>`, `ts`/`dur` in µs from the
+//! engine-ns timestamps), and `"i"` instant events for bursts, steals,
+//! migrations, scope/gang changes and worker park/unpark.
+//! [`analysis::analyse`] consumes the same stream for the §6 tables,
+//! utilization timelines and latency histograms.
 
 pub mod analysis;
+pub mod export;
+mod ring;
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 use crate::task::TaskId;
 use crate::topology::{CpuId, LevelId};
+
+use ring::{EventRing, REC_WORDS};
 
 /// What happened.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -36,6 +71,28 @@ pub enum Event {
     Steal { task: TaskId, from: LevelId, by: CpuId },
     /// Barrier crossed by all participants.
     BarrierRelease { id: usize, waiters: usize },
+    /// One `Scheduler::pick` call on `cpu` took `ns` host nanoseconds
+    /// (`hit` = it returned a task). Native workers time every pick;
+    /// the simulator reports the host-side cost of its pick calls
+    /// while `at` stays in simulated cycles.
+    PickLatency { cpu: CpuId, ns: u64, hit: bool },
+    /// One steal search by `by` over `scope` took `ns` host
+    /// nanoseconds (`ok` = it found a task).
+    StealAttempt { by: CpuId, scope: LevelId, ok: bool, ns: u64 },
+    /// Adaptive policy: `cpu`'s steal scope moved `from` → `to`.
+    ScopeChange { cpu: CpuId, from: LevelId, to: LevelId, widened: bool },
+    /// Moldable policy: `gang`'s component moved `from` → `to`.
+    GangResize { gang: TaskId, from: LevelId, to: LevelId, grew: bool },
+    /// A region's memory was re-homed `from` → `to` NUMA node
+    /// (next-touch migration).
+    RegionMigrate { region: usize, from: usize, to: usize, bytes: u64 },
+    /// A memory touch on `region` by `cpu` resolved to NUMA node
+    /// `home` (`local` = same node as the toucher).
+    RegionTouch { region: usize, cpu: CpuId, home: usize, local: bool },
+    /// A native worker parked (nothing pickable).
+    WorkerPark { cpu: CpuId },
+    /// A native worker resumed after parking.
+    WorkerUnpark { cpu: CpuId },
 }
 
 /// Why a thread stopped.
@@ -49,6 +106,29 @@ pub enum StopWhy {
     BackInBubble,
 }
 
+impl StopWhy {
+    fn code(self) -> u64 {
+        match self {
+            StopWhy::Yield => 0,
+            StopWhy::Preempt => 1,
+            StopWhy::Block => 2,
+            StopWhy::Terminate => 3,
+            StopWhy::BackInBubble => 4,
+        }
+    }
+
+    fn from_code(c: u64) -> Option<StopWhy> {
+        Some(match c {
+            0 => StopWhy::Yield,
+            1 => StopWhy::Preempt,
+            2 => StopWhy::Block,
+            3 => StopWhy::Terminate,
+            4 => StopWhy::BackInBubble,
+            _ => return None,
+        })
+    }
+}
+
 /// Why a bubble regenerated.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RegenWhy {
@@ -58,20 +138,177 @@ pub enum RegenWhy {
     Timeslice,
 }
 
+impl RegenWhy {
+    fn code(self) -> u64 {
+        match self {
+            RegenWhy::Idle => 0,
+            RegenWhy::Timeslice => 1,
+        }
+    }
+
+    fn from_code(c: u64) -> Option<RegenWhy> {
+        Some(match c {
+            0 => RegenWhy::Idle,
+            1 => RegenWhy::Timeslice,
+            _ => return None,
+        })
+    }
+}
+
+fn b2w(b: bool) -> u64 {
+    b as u64
+}
+
+impl Event {
+    /// Word-encode into `(kind, payload)`; [`Event::decode`] inverts.
+    pub(crate) fn encode(&self) -> (u8, [u64; 4]) {
+        use Event::*;
+        match *self {
+            Enqueue { task, list } => (0, [task.0 as u64, list.0 as u64, 0, 0]),
+            Dispatch { task, cpu } => (1, [task.0 as u64, cpu.0 as u64, 0, 0]),
+            Stop { task, cpu, why } => (2, [task.0 as u64, cpu.0 as u64, why.code(), 0]),
+            BubbleDown { bubble, from, to } => {
+                (3, [bubble.0 as u64, from.0 as u64, to.0 as u64, 0])
+            }
+            Burst { bubble, list, released } => {
+                (4, [bubble.0 as u64, list.0 as u64, released as u64, 0])
+            }
+            Regen { bubble, why } => (5, [bubble.0 as u64, why.code(), 0, 0]),
+            RegenDone { bubble, list } => (6, [bubble.0 as u64, list.0 as u64, 0, 0]),
+            Steal { task, from, by } => (7, [task.0 as u64, from.0 as u64, by.0 as u64, 0]),
+            BarrierRelease { id, waiters } => (8, [id as u64, waiters as u64, 0, 0]),
+            PickLatency { cpu, ns, hit } => (9, [cpu.0 as u64, ns, b2w(hit), 0]),
+            StealAttempt { by, scope, ok, ns } => {
+                (10, [by.0 as u64, scope.0 as u64, b2w(ok), ns])
+            }
+            ScopeChange { cpu, from, to, widened } => {
+                (11, [cpu.0 as u64, from.0 as u64, to.0 as u64, b2w(widened)])
+            }
+            GangResize { gang, from, to, grew } => {
+                (12, [gang.0 as u64, from.0 as u64, to.0 as u64, b2w(grew)])
+            }
+            RegionMigrate { region, from, to, bytes } => {
+                (13, [region as u64, from as u64, to as u64, bytes])
+            }
+            RegionTouch { region, cpu, home, local } => {
+                (14, [region as u64, cpu.0 as u64, home as u64, b2w(local)])
+            }
+            WorkerPark { cpu } => (15, [cpu.0 as u64, 0, 0, 0]),
+            WorkerUnpark { cpu } => (16, [cpu.0 as u64, 0, 0, 0]),
+        }
+    }
+
+    /// Inverse of [`Event::encode`] (`None` on an unknown kind or
+    /// enum code — a corrupt slot is dropped, not propagated).
+    pub(crate) fn decode(kind: u8, p: &[u64; 4]) -> Option<Event> {
+        use Event::*;
+        Some(match kind {
+            0 => Enqueue { task: TaskId(p[0] as usize), list: LevelId(p[1] as usize) },
+            1 => Dispatch { task: TaskId(p[0] as usize), cpu: CpuId(p[1] as usize) },
+            2 => Stop {
+                task: TaskId(p[0] as usize),
+                cpu: CpuId(p[1] as usize),
+                why: StopWhy::from_code(p[2])?,
+            },
+            3 => BubbleDown {
+                bubble: TaskId(p[0] as usize),
+                from: LevelId(p[1] as usize),
+                to: LevelId(p[2] as usize),
+            },
+            4 => Burst {
+                bubble: TaskId(p[0] as usize),
+                list: LevelId(p[1] as usize),
+                released: p[2] as usize,
+            },
+            5 => Regen { bubble: TaskId(p[0] as usize), why: RegenWhy::from_code(p[1])? },
+            6 => RegenDone { bubble: TaskId(p[0] as usize), list: LevelId(p[1] as usize) },
+            7 => Steal {
+                task: TaskId(p[0] as usize),
+                from: LevelId(p[1] as usize),
+                by: CpuId(p[2] as usize),
+            },
+            8 => BarrierRelease { id: p[0] as usize, waiters: p[1] as usize },
+            9 => PickLatency { cpu: CpuId(p[0] as usize), ns: p[1], hit: p[2] != 0 },
+            10 => StealAttempt {
+                by: CpuId(p[0] as usize),
+                scope: LevelId(p[1] as usize),
+                ok: p[2] != 0,
+                ns: p[3],
+            },
+            11 => ScopeChange {
+                cpu: CpuId(p[0] as usize),
+                from: LevelId(p[1] as usize),
+                to: LevelId(p[2] as usize),
+                widened: p[3] != 0,
+            },
+            12 => GangResize {
+                gang: TaskId(p[0] as usize),
+                from: LevelId(p[1] as usize),
+                to: LevelId(p[2] as usize),
+                grew: p[3] != 0,
+            },
+            13 => RegionMigrate {
+                region: p[0] as usize,
+                from: p[1] as usize,
+                to: p[2] as usize,
+                bytes: p[3],
+            },
+            14 => RegionTouch {
+                region: p[0] as usize,
+                cpu: CpuId(p[1] as usize),
+                home: p[2] as usize,
+                local: p[3] != 0,
+            },
+            15 => WorkerPark { cpu: CpuId(p[0] as usize) },
+            16 => WorkerUnpark { cpu: CpuId(p[0] as usize) },
+            _ => return None,
+        })
+    }
+}
+
 /// A timestamped trace record.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Record {
-    /// Engine time (simulated cycles, or ns for the native executor).
+    /// Engine time (simulated cycles, or wall ns for the native
+    /// executor — see `System::now`).
     pub at: u64,
+    /// Global emission stamp: a total order across all shards,
+    /// tie-breaking records with equal `at`.
+    pub seq: u64,
+    /// CPU context of the recording thread (`None` = recorded outside
+    /// any worker, e.g. from the process main thread).
+    pub cpu: Option<CpuId>,
     pub event: Event,
 }
 
-/// Bounded trace buffer.
-#[derive(Debug)]
+/// Sharded bounded trace buffer (see the module docs for the
+/// ring/drain protocol).
 pub struct Trace {
     enabled: AtomicBool,
+    /// Per-shard capacity (rounded up to a power of two on init).
     cap: usize,
-    buf: Mutex<Vec<Record>>,
+    /// Shards `0..n_cpus` are per-CPU; shard `n_cpus` is external.
+    n_cpus: usize,
+    stamp: AtomicU64,
+    /// Records whose stored words failed to decode (corruption guard;
+    /// counted into [`Trace::dropped`]).
+    decode_drops: AtomicU64,
+    /// Rings are allocated on first enable, not up front: a disabled
+    /// trace costs one pointer per system.
+    shards: OnceLock<Box<[EventRing]>>,
+    /// Serialises the reader side (drain/records/clear): the tail
+    /// cursors and drop counters are reader-owned state.
+    reader: Mutex<()>,
+}
+
+impl std::fmt::Debug for Trace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Trace")
+            .field("enabled", &self.enabled())
+            .field("n_cpus", &self.n_cpus)
+            .field("len", &self.len())
+            .finish()
+    }
 }
 
 impl Default for Trace {
@@ -81,13 +318,38 @@ impl Default for Trace {
 }
 
 impl Trace {
-    /// Create with the given capacity (oldest records dropped beyond it).
+    /// Trace with no per-CPU shards (everything lands in the external
+    /// shard of capacity `cap`). [`Trace::for_cpus`] is what engines
+    /// use.
     pub fn new(cap: usize) -> Trace {
-        Trace { enabled: AtomicBool::new(false), cap, buf: Mutex::new(Vec::new()) }
+        Trace::for_cpus(0, cap)
     }
 
-    /// Turn recording on/off.
+    /// Trace with one ring per CPU plus the external shard, each of
+    /// capacity `cap` (rounded up to a power of two).
+    pub fn for_cpus(n_cpus: usize, cap: usize) -> Trace {
+        Trace {
+            enabled: AtomicBool::new(false),
+            cap,
+            n_cpus,
+            stamp: AtomicU64::new(0),
+            decode_drops: AtomicU64::new(0),
+            shards: OnceLock::new(),
+            reader: Mutex::new(()),
+        }
+    }
+
+    fn shards(&self) -> &[EventRing] {
+        self.shards.get_or_init(|| (0..=self.n_cpus).map(|_| EventRing::new(self.cap)).collect())
+    }
+
+    /// Turn recording on/off. Enabling allocates the shards *before*
+    /// publishing the flag, so a concurrent [`Trace::emit`] that sees
+    /// `enabled` always finds them.
     pub fn set_enabled(&self, on: bool) {
+        if on {
+            self.shards();
+        }
         self.enabled.store(on, Ordering::Release);
     }
 
@@ -96,26 +358,91 @@ impl Trace {
         self.enabled.load(Ordering::Acquire)
     }
 
-    /// Record an event (no-op when disabled).
+    /// Per-shard ring capacity (after power-of-two rounding).
+    pub fn shard_capacity(&self) -> usize {
+        self.cap.max(2).next_power_of_two()
+    }
+
+    /// Record an event (no-op when disabled). Lock-free: one atomic
+    /// stamp increment plus a seqlock slot publish in this thread's
+    /// shard. Callers that would pay to construct `event` should check
+    /// [`Trace::enabled`] first (`System::trace_emit` does).
     pub fn emit(&self, at: u64, event: Event) {
         if !self.enabled() {
             return;
         }
-        let mut buf = self.buf.lock().unwrap();
-        if buf.len() == self.cap {
-            buf.remove(0); // ring behaviour; cap is large, this is rare
+        let shards = self.shards();
+        let idx = match crate::rq::owner::current_cpu() {
+            Some(c) if c.0 < self.n_cpus => c.0,
+            _ => self.n_cpus,
+        };
+        let (kind, p) = event.encode();
+        // kind in bits 0..8; (cpu context + 1) above (0 = external).
+        let ctx = if idx < self.n_cpus { idx as u64 + 1 } else { 0 };
+        let kindctx = kind as u64 | (ctx << 8);
+        let stamp = self.stamp.fetch_add(1, Ordering::Relaxed);
+        shards[idx].push(&[at, kindctx, p[0], p[1], p[2], p[3], stamp]);
+    }
+
+    fn decode_sorted(&self, raw: Vec<[u64; REC_WORDS]>) -> Vec<Record> {
+        let mut out = Vec::with_capacity(raw.len());
+        for w in &raw {
+            let kind = (w[1] & 0xff) as u8;
+            let ctx = w[1] >> 8;
+            let cpu = if ctx == 0 { None } else { Some(CpuId(ctx as usize - 1)) };
+            match Event::decode(kind, &[w[2], w[3], w[4], w[5]]) {
+                Some(event) => out.push(Record { at: w[0], seq: w[6], cpu, event }),
+                None => {
+                    self.decode_drops.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
-        buf.push(Record { at, event });
+        out.sort_by_key(|r| (r.at, r.seq));
+        out
     }
 
-    /// Copy of the recorded events.
+    /// Non-consuming snapshot of the recorded events, merged across
+    /// shards into one time-ordered stream (sorted by `(at, seq)`).
+    /// Safe while writers are recording; lapped slots are skipped.
     pub fn records(&self) -> Vec<Record> {
-        self.buf.lock().unwrap().clone()
+        let _r = self.reader.lock().unwrap();
+        let Some(shards) = self.shards.get() else {
+            return Vec::new();
+        };
+        let mut raw = Vec::new();
+        for s in shards.iter() {
+            s.snapshot_into(&mut raw);
+        }
+        self.decode_sorted(raw)
     }
 
-    /// Number of recorded events.
+    /// Consume the recorded events: every published record is returned
+    /// exactly once (across any sequence of drains), merged and
+    /// time-ordered. Records lapped before the drain reached them are
+    /// counted in [`Trace::dropped`]. Safe while writers are recording.
+    pub fn drain(&self) -> Vec<Record> {
+        let _r = self.reader.lock().unwrap();
+        let Some(shards) = self.shards.get() else {
+            return Vec::new();
+        };
+        let mut raw = Vec::new();
+        for s in shards.iter() {
+            s.drain_into(&mut raw);
+        }
+        self.decode_sorted(raw)
+    }
+
+    /// Records lost so far: lapped by writers before a drain got to
+    /// them, plus any that failed to decode.
+    pub fn dropped(&self) -> u64 {
+        self.decode_drops.load(Ordering::Relaxed)
+            + self.shards.get().map_or(0, |s| s.iter().map(|r| r.dropped()).sum())
+    }
+
+    /// Advisory number of currently drainable records (summed over
+    /// shards; concurrent writers may move it).
     pub fn len(&self) -> usize {
-        self.buf.lock().unwrap().len()
+        self.shards.get().map_or(0, |s| s.iter().map(|r| r.len()).sum())
     }
 
     /// No events recorded?
@@ -123,12 +450,17 @@ impl Trace {
         self.len() == 0
     }
 
-    /// Drop all records.
+    /// Drop all records (the reader cursors jump to the write heads).
     pub fn clear(&self) {
-        self.buf.lock().unwrap().clear();
+        let _r = self.reader.lock().unwrap();
+        if let Some(shards) = self.shards.get() {
+            for s in shards.iter() {
+                s.clear();
+            }
+        }
     }
 
-    /// Human-readable dump.
+    /// Human-readable dump of the merged stream.
     pub fn dump(&self) -> String {
         let mut out = String::new();
         for r in self.records() {
@@ -147,6 +479,7 @@ mod tests {
         let t = Trace::default();
         t.emit(0, Event::Dispatch { task: TaskId(0), cpu: CpuId(0) });
         assert!(t.is_empty());
+        assert!(t.records().is_empty());
     }
 
     #[test]
@@ -160,15 +493,92 @@ mod tests {
     }
 
     #[test]
-    fn ring_drops_oldest() {
+    fn ring_drops_oldest_at_capacity() {
+        // cap 3 rounds to 4 slots; 6 emits keep the newest 4.
         let t = Trace::new(3);
         t.set_enabled(true);
-        for i in 0..5 {
+        assert_eq!(t.shard_capacity(), 4);
+        for i in 0..6 {
             t.emit(i, Event::Dispatch { task: TaskId(i as usize), cpu: CpuId(0) });
         }
-        let r = t.records();
-        assert_eq!(r.len(), 3);
+        let r = t.drain();
+        assert_eq!(r.len(), 4);
         assert_eq!(r[0].at, 2);
-        assert_eq!(r[2].at, 4);
+        assert_eq!(r[3].at, 5);
+        assert_eq!(t.dropped(), 2);
+    }
+
+    #[test]
+    fn drain_consumes_snapshot_does_not() {
+        let t = Trace::new(16);
+        t.set_enabled(true);
+        t.emit(1, Event::WorkerPark { cpu: CpuId(0) });
+        t.emit(2, Event::WorkerUnpark { cpu: CpuId(0) });
+        assert_eq!(t.records().len(), 2);
+        assert_eq!(t.records().len(), 2, "records() must not consume");
+        assert_eq!(t.drain().len(), 2);
+        assert!(t.drain().is_empty(), "drain() must consume exactly once");
+    }
+
+    #[test]
+    fn shard_attribution_follows_owner_context() {
+        let t = Trace::for_cpus(2, 16);
+        t.set_enabled(true);
+        crate::rq::owner::set_current_cpu(Some(CpuId(1)));
+        t.emit(1, Event::WorkerPark { cpu: CpuId(1) });
+        crate::rq::owner::set_current_cpu(None);
+        t.emit(2, Event::WorkerUnpark { cpu: CpuId(1) });
+        let r = t.records();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].cpu, Some(CpuId(1)));
+        assert_eq!(r[1].cpu, None, "no owner context lands in the external shard");
+    }
+
+    #[test]
+    fn merged_stream_is_time_ordered_with_stamp_tiebreak() {
+        let t = Trace::for_cpus(2, 16);
+        t.set_enabled(true);
+        // Same `at` from two shards: the emission stamp orders them.
+        crate::rq::owner::set_current_cpu(Some(CpuId(0)));
+        t.emit(7, Event::WorkerPark { cpu: CpuId(0) });
+        crate::rq::owner::set_current_cpu(Some(CpuId(1)));
+        t.emit(7, Event::WorkerPark { cpu: CpuId(1) });
+        t.emit(3, Event::WorkerUnpark { cpu: CpuId(1) });
+        crate::rq::owner::set_current_cpu(None);
+        let r = t.records();
+        assert_eq!(r[0].at, 3);
+        assert_eq!(r[1].cpu, Some(CpuId(0)));
+        assert_eq!(r[2].cpu, Some(CpuId(1)));
+        assert!(r[1].seq < r[2].seq);
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_every_variant() {
+        let evs = vec![
+            Event::Enqueue { task: TaskId(1), list: LevelId(2) },
+            Event::Dispatch { task: TaskId(3), cpu: CpuId(4) },
+            Event::Stop { task: TaskId(5), cpu: CpuId(6), why: StopWhy::BackInBubble },
+            Event::BubbleDown { bubble: TaskId(7), from: LevelId(0), to: LevelId(1) },
+            Event::Burst { bubble: TaskId(8), list: LevelId(2), released: 9 },
+            Event::Regen { bubble: TaskId(10), why: RegenWhy::Timeslice },
+            Event::RegenDone { bubble: TaskId(11), list: LevelId(3) },
+            Event::Steal { task: TaskId(12), from: LevelId(4), by: CpuId(5) },
+            Event::BarrierRelease { id: 13, waiters: 14 },
+            Event::PickLatency { cpu: CpuId(1), ns: 1500, hit: true },
+            Event::StealAttempt { by: CpuId(2), scope: LevelId(0), ok: false, ns: 88 },
+            Event::ScopeChange { cpu: CpuId(3), from: LevelId(6), to: LevelId(2), widened: true },
+            Event::GangResize { gang: TaskId(15), from: LevelId(1), to: LevelId(0), grew: true },
+            Event::RegionMigrate { region: 16, from: 0, to: 3, bytes: 1 << 20 },
+            Event::RegionTouch { region: 17, cpu: CpuId(7), home: 1, local: false },
+            Event::WorkerPark { cpu: CpuId(8) },
+            Event::WorkerUnpark { cpu: CpuId(9) },
+        ];
+        for ev in evs {
+            let (kind, p) = ev.encode();
+            assert_eq!(Event::decode(kind, &p).as_ref(), Some(&ev), "{ev:?}");
+        }
+        // Unknown kinds and enum codes are rejected, not mangled.
+        assert_eq!(Event::decode(200, &[0; 4]), None);
+        assert_eq!(Event::decode(2, &[0, 0, 99, 0]), None);
     }
 }

@@ -1,0 +1,274 @@
+//! Lock-free bounded event ring: one per trace shard.
+//!
+//! **Write side** (any thread mapped to this shard): reserve a slot by
+//! `head.fetch_add(1)`, then publish the record under a per-slot
+//! seqlock — store the *odd* sequence `2·gen+1`, fence, store the
+//! payload words, store the *even* sequence `2·gen+2` (Release), where
+//! `gen = index >> log2(capacity)` is the lap number. Multiple
+//! producers never write the same slot concurrently for the same
+//! index, and a producer that laps a slot simply opens a new odd/even
+//! pair with a higher generation — a reader can always tell "not yet
+//! written", "being written" and "overwritten" apart from the sequence
+//! value alone.
+//!
+//! **Read side** (one drainer at a time — the [`super::Trace`] holds a
+//! reader mutex): walk indices from the reader cursor (`tail`) to a
+//! `head` snapshot. For index `i` the slot is valid iff its sequence is
+//! exactly `2·(i >> shift)+2`; a *smaller* value means the writer has
+//! not finished (stop the walk — later records would otherwise be
+//! returned twice on the next drain), a *larger* value means the slot
+//! was lapped (count it dropped and move on). Payload loads are
+//! sandwiched by an acquire fence + sequence re-check, so a torn read
+//! from a concurrent lap is detected and discarded, never returned.
+//!
+//! Capacity is rounded up to a power of two so the index→slot map is a
+//! mask and the generation a shift — no division on the hot path.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+/// Payload words of one encoded record: `[at, kind|ctx, p0..p3, stamp]`
+/// (see `super::Trace` for the packing).
+pub(super) const REC_WORDS: usize = 7;
+
+/// One record slot: sequence word + payload, padded to a cache line so
+/// neighbouring slots never false-share.
+#[repr(align(64))]
+struct Slot {
+    /// `words[0]` is the seqlock sequence; `words[1..]` the payload.
+    words: [AtomicU64; REC_WORDS + 1],
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot { words: Default::default() }
+    }
+}
+
+/// Outcome of reading one slot at a specific reservation index.
+enum SlotRead {
+    /// The record for this index, read consistently.
+    Published([u64; REC_WORDS]),
+    /// The writer holding this index has not finished publishing.
+    InFlight,
+    /// A later lap overwrote (or is overwriting) this index.
+    Overwritten,
+}
+
+/// Fixed-capacity multi-producer / single-drainer event ring.
+pub(super) struct EventRing {
+    /// Next reservation index (monotonic; never wraps in practice).
+    head: AtomicU64,
+    /// Reader cursor: first index not yet drained. Only the drainer
+    /// (under the trace's reader mutex) writes it.
+    tail: AtomicU64,
+    /// Records lost to lapping (writer outran the drainer) — reader
+    /// accounting, bumped under the reader mutex.
+    dropped: AtomicU64,
+    mask: u64,
+    shift: u32,
+    slots: Box<[Slot]>,
+}
+
+impl EventRing {
+    /// Ring with capacity `cap` rounded up to a power of two (min 2).
+    pub(super) fn new(cap: usize) -> EventRing {
+        let cap = cap.max(2).next_power_of_two();
+        EventRing {
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            mask: (cap - 1) as u64,
+            shift: cap.trailing_zeros(),
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+        }
+    }
+
+    pub(super) fn capacity(&self) -> usize {
+        self.mask as usize + 1
+    }
+
+    /// Reserve the next index and publish `rec` under the seqlock
+    /// protocol. O(1), lock-free, safe from any number of producers.
+    pub(super) fn push(&self, rec: &[u64; REC_WORDS]) {
+        let i = self.head.fetch_add(1, Ordering::Relaxed);
+        let gen = i >> self.shift;
+        let slot = &self.slots[(i & self.mask) as usize];
+        slot.words[0].store(2 * gen + 1, Ordering::Relaxed);
+        // The odd mark must become visible before any payload word: a
+        // reader of the *previous* lap must never pair fresh payload
+        // with the stale even sequence it already validated against.
+        fence(Ordering::Release);
+        for (w, &v) in slot.words[1..].iter().zip(rec) {
+            w.store(v, Ordering::Relaxed);
+        }
+        slot.words[0].store(2 * gen + 2, Ordering::Release);
+    }
+
+    fn read_at(&self, i: u64) -> SlotRead {
+        let expected = 2 * (i >> self.shift) + 2;
+        let slot = &self.slots[(i & self.mask) as usize];
+        let s1 = slot.words[0].load(Ordering::Acquire);
+        if s1 < expected {
+            return SlotRead::InFlight;
+        }
+        if s1 > expected {
+            return SlotRead::Overwritten;
+        }
+        let mut rec = [0u64; REC_WORDS];
+        for (o, w) in rec.iter_mut().zip(&slot.words[1..]) {
+            *o = w.load(Ordering::Relaxed);
+        }
+        // Validate: if a lap started mid-copy the re-read sees an odd
+        // or higher sequence and the torn payload is discarded.
+        fence(Ordering::Acquire);
+        if slot.words[0].load(Ordering::Relaxed) != expected {
+            return SlotRead::Overwritten;
+        }
+        SlotRead::Published(rec)
+    }
+
+    /// Consume published records into `out`, advancing the reader
+    /// cursor and counting lapped records as dropped. Stops at the
+    /// first in-flight slot so every record is drained exactly once.
+    /// Caller must hold the trace's reader mutex.
+    pub(super) fn drain_into(&self, out: &mut Vec<[u64; REC_WORDS]>) {
+        let h = self.head.load(Ordering::Acquire);
+        let t = self.tail.load(Ordering::Relaxed);
+        let cap = self.mask + 1;
+        let start = t.max(h.saturating_sub(cap));
+        if start > t {
+            // Everything in [t, start) was lapped before we got here.
+            self.dropped.fetch_add(start - t, Ordering::Relaxed);
+        }
+        let mut i = start;
+        while i < h {
+            match self.read_at(i) {
+                SlotRead::Published(r) => {
+                    out.push(r);
+                    i += 1;
+                }
+                SlotRead::InFlight => break,
+                SlotRead::Overwritten => {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                    i += 1;
+                }
+            }
+        }
+        self.tail.store(i, Ordering::Relaxed);
+    }
+
+    /// Copy published records without consuming them (the reader cursor
+    /// and drop accounting stay untouched); lapped and in-flight slots
+    /// are skipped silently. Caller must hold the trace's reader mutex.
+    pub(super) fn snapshot_into(&self, out: &mut Vec<[u64; REC_WORDS]>) {
+        let h = self.head.load(Ordering::Acquire);
+        let t = self.tail.load(Ordering::Relaxed);
+        let mut i = t.max(h.saturating_sub(self.mask + 1));
+        while i < h {
+            match self.read_at(i) {
+                SlotRead::Published(r) => {
+                    out.push(r);
+                    i += 1;
+                }
+                SlotRead::InFlight => break,
+                SlotRead::Overwritten => i += 1,
+            }
+        }
+    }
+
+    /// Advisory count of records a drain would currently see.
+    pub(super) fn len(&self) -> usize {
+        let h = self.head.load(Ordering::Relaxed);
+        let t = self.tail.load(Ordering::Relaxed);
+        h.saturating_sub(t).min(self.mask + 1) as usize
+    }
+
+    pub(super) fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Forget everything recorded so far (caller holds the reader
+    /// mutex): the cursor jumps to the current head.
+    pub(super) fn clear(&self) {
+        let h = self.head.load(Ordering::Acquire);
+        self.tail.store(h, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(v: u64) -> [u64; REC_WORDS] {
+        [v; REC_WORDS]
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        assert_eq!(EventRing::new(3).capacity(), 4);
+        assert_eq!(EventRing::new(4).capacity(), 4);
+        assert_eq!(EventRing::new(5).capacity(), 8);
+        assert_eq!(EventRing::new(0).capacity(), 2);
+    }
+
+    #[test]
+    fn push_drain_roundtrip() {
+        let r = EventRing::new(8);
+        for i in 0..5 {
+            r.push(&rec(i));
+        }
+        assert_eq!(r.len(), 5);
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        assert_eq!(out, (0..5).map(rec).collect::<Vec<_>>());
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.dropped(), 0);
+        // A second drain returns nothing: exactly-once.
+        let mut again = Vec::new();
+        r.drain_into(&mut again);
+        assert!(again.is_empty());
+    }
+
+    #[test]
+    fn lapping_drops_oldest_and_counts() {
+        let r = EventRing::new(4);
+        for i in 0..10 {
+            r.push(&rec(i));
+        }
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        // Only the newest `cap` records survive; the rest are counted.
+        assert_eq!(out, (6..10).map(rec).collect::<Vec<_>>());
+        assert_eq!(r.dropped(), 6);
+    }
+
+    #[test]
+    fn snapshot_does_not_consume() {
+        let r = EventRing::new(8);
+        r.push(&rec(1));
+        r.push(&rec(2));
+        let mut a = Vec::new();
+        r.snapshot_into(&mut a);
+        let mut b = Vec::new();
+        r.snapshot_into(&mut b);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+        let mut d = Vec::new();
+        r.drain_into(&mut d);
+        assert_eq!(d, a);
+    }
+
+    #[test]
+    fn clear_skips_to_head() {
+        let r = EventRing::new(8);
+        for i in 0..3 {
+            r.push(&rec(i));
+        }
+        r.clear();
+        assert_eq!(r.len(), 0);
+        r.push(&rec(9));
+        let mut out = Vec::new();
+        r.drain_into(&mut out);
+        assert_eq!(out, vec![rec(9)]);
+    }
+}

@@ -5,6 +5,7 @@
 //! reimplemented here at the scale this project needs.
 
 pub mod fmt;
+pub mod json;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
