@@ -28,12 +28,16 @@
 //! run-over-run.
 //!
 //! **Gate mode** (`BENCH_GATE=1`): before overwriting `BENCH_rq.json`,
-//! the committed file is read as the baseline and every contended leg
-//! is compared via `bubbles::bench::gate` (±25% ns/op threshold). A
-//! regressed leg exits nonzero *after* writing the fresh file, so CI
-//! both fails and uploads the evidence. An empty/absent baseline makes
-//! the run record-only. `BENCH_INJECT_REGRESSION=<f>` multiplies the
-//! measured contended ns/op by `f` — CI uses it to prove the gate
+//! a baseline file is read and every contended leg is compared via
+//! `bubbles::bench::gate` (±25% ns/op threshold). The baseline path
+//! defaults to the committed `BENCH_rq.json` and is overridden with
+//! `BENCH_BASELINE=<path>` — CI records a baseline on the same runner
+//! first, then gates subsequent runs against it, so the comparison is
+//! matched-leg and same-machine rather than cross-runner. A regressed
+//! leg exits nonzero *after* writing the fresh file, so CI both fails
+//! and uploads the evidence. An empty/absent baseline makes the run
+//! record-only. `BENCH_INJECT_REGRESSION=<f>` multiplies the measured
+//! contended ns/op by `f` — CI uses it to prove the armed gate
 //! actually fails on a planted 2× regression.
 //!
 //! Acceptance shape: hierarchy win grows with threads; pick-path ns/op
@@ -266,8 +270,12 @@ fn main() {
         .unwrap_or(1.0);
     let dur = if fast { 50 } else { 300 };
 
-    // Read the committed baseline *before* this run overwrites it.
-    let baseline = if gated { std::fs::read_to_string("BENCH_rq.json").ok() } else { None };
+    // Read the baseline *before* this run overwrites BENCH_rq.json.
+    // BENCH_BASELINE points at a recorded same-runner baseline (how CI
+    // arms the gate); the default is the committed file.
+    let baseline_path =
+        std::env::var("BENCH_BASELINE").unwrap_or_else(|_| "BENCH_rq.json".to_string());
+    let baseline = if gated { std::fs::read_to_string(&baseline_path).ok() } else { None };
 
     println!("runqueue contention: single global list vs per-CPU lists\n");
     let mut contention_rows = Vec::new();
@@ -410,12 +418,15 @@ fn main() {
         let base_legs = baseline.as_deref().map(gate::parse_legs).unwrap_or_default();
         if base_legs.is_empty() {
             println!(
-                "\nbench gate: no contended legs in the committed baseline — record-only run."
+                "\nbench gate: no contended legs in baseline `{baseline_path}` — record-only run."
             );
             return;
         }
         let report = gate::compare(&base_legs, &current_legs, gate::DEFAULT_THRESHOLD);
-        println!("\nbench gate vs committed baseline (threshold +{:.0}%):", (gate::DEFAULT_THRESHOLD - 1.0) * 100.0);
+        println!(
+            "\nbench gate vs baseline `{baseline_path}` (threshold +{:.0}%):",
+            (gate::DEFAULT_THRESHOLD - 1.0) * 100.0
+        );
         print!("{}", report.render());
         if !report.passed() {
             eprintln!("bench gate: {} leg(s) regressed past threshold", report.regressions().len());

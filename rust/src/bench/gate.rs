@@ -228,6 +228,41 @@ mod tests {
     }
 
     #[test]
+    fn armed_baseline_trips_on_a_planted_regression() {
+        // The CI arming scheme end to end, in miniature: a recorded
+        // baseline document with the full contended matrix, then a
+        // current run whose ns/op was multiplied by a planted factor
+        // (what BENCH_INJECT_REGRESSION=2 does to the measurements).
+        // Every leg is matched — nothing may be skipped — and every
+        // matched leg must trip the ±25% gate.
+        let doc = r#"{
+  "bench": "rq_scaling",
+  "schema": 2,
+  "mode": "fast",
+  "contended": [{"shape":"smp-4","threads":2,"leg":"locked","ns_op":80.00,"mops":12.50},
+{"shape":"smp-4","threads":2,"leg":"lockless","ns_op":45.00,"mops":22.22},
+{"shape":"numa-4x4","threads":8,"leg":"locked","ns_op":120.00,"mops":8.33},
+{"shape":"numa-4x4","threads":8,"leg":"lockless","ns_op":40.00,"mops":25.00}]
+}
+"#;
+        let base = parse_legs(doc);
+        assert_eq!(base.len(), 4);
+        let planted: Vec<LegResult> = base
+            .iter()
+            .map(|l| LegResult { ns_op: l.ns_op * 2.0, mops: l.mops / 2.0, ..l.clone() })
+            .collect();
+        let report = compare(&base, &planted, DEFAULT_THRESHOLD);
+        assert!(report.unmatched_current.is_empty(), "armed baseline must match every leg");
+        assert!(report.unmatched_baseline.is_empty());
+        assert!(!report.passed(), "a planted 2x regression must fail the armed gate");
+        assert_eq!(report.regressions().len(), 4, "every matched leg trips");
+        // And the same matched baseline passes an un-planted run.
+        let clean = compare(&base, &base.clone(), DEFAULT_THRESHOLD);
+        assert!(clean.passed());
+        assert_eq!(clean.deltas.len(), 4);
+    }
+
+    #[test]
     fn noise_within_threshold_passes() {
         let base = vec![leg("smp-4", 4, "locked", 100.0), leg("smp-4", 4, "lockless", 60.0)];
         let cur = vec![leg("smp-4", 4, "locked", 120.0), leg("smp-4", 4, "lockless", 49.0)];

@@ -86,6 +86,8 @@ pub fn run(argv: &[String]) -> Result<String> {
         "ablations" => cmd_ablations(&args),
         "memcmp" => cmd_memcmp(&args),
         "adaptcmp" => cmd_adaptcmp(&args),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
         "run" => cmd_run(&args),
         "analyze" => cmd_analyze(&args),
         "trace" => cmd_trace(&args),
@@ -117,6 +119,17 @@ COMMANDS
              [--machine, --scheds a,b,c, --seed N, --smoke, --trace out.json]
              (writes BENCH_adaptive.json; --trace exports the first
              phase-changing leg as Chrome trace-event JSON)
+  serve      multi-tenant job server: seeded bursty stream of short jobs
+             multiplexed over one executor, job-fair vs static-partition
+             vs ss [--machine, --jobs N, --seed N, --engine sim|native|both,
+             --submitters N (native), --queue spool-file, --gap N (queue),
+             --smoke (>=1000 jobs), --trace out.json]
+             (writes BENCH_serve.json; --trace exports the first leg's
+             mix run as Chrome trace-event JSON)
+  submit     append one job to a spool file for `serve --queue`
+             [--queue file (required), --name, --mode simple|bound|bubbles,
+             --class latency|normal|batch, --threads, --cycles, --work,
+             --mem 0..1, --touches]
   run        config-driven simulation            [--config file.toml]
   analyze    traced run + scheduler analysis     [--machine, --app, --sched,
              --engine sim|native]
@@ -374,6 +387,112 @@ fn cmd_adaptcmp(args: &Args) -> Result<String> {
         bursty.render(),
         note,
         trace_note
+    ))
+}
+
+fn cmd_serve(args: &Args) -> Result<String> {
+    use crate::experiments::serve as harness;
+    let topo = args.machine()?;
+    let smoke = args.flag("smoke");
+    let seed = args.u64("seed", crate::sim::SimConfig::default().seed);
+    let submitters = args.u64("submitters", 4).max(1) as usize;
+    let trace_out = args.options.get("trace").map(|s| s.as_str());
+    let engines = match args.get("engine", "both") {
+        "sim" => (true, false),
+        "native" => (false, true),
+        "both" => (true, true),
+        other => {
+            return Err(Error::config(format!(
+                "unknown engine `{other}` (want sim|native|both)"
+            )))
+        }
+    };
+    // The stream: a spool file (`serve --queue`, fed by `repro submit`)
+    // or the seeded bursty generator. `--smoke` is the CI stream: the
+    // ISSUE-8 acceptance floor of >= 1000 short jobs.
+    let (arrivals, source) = match args.options.get("queue") {
+        Some(path) => {
+            let specs = crate::serve::read_spool(path)?;
+            if specs.is_empty() {
+                return Err(Error::config(format!("queue `{path}` holds no jobs")));
+            }
+            let gap = args.u64("gap", 10_000).max(1);
+            let n = specs.len();
+            let arrivals: Vec<_> = specs
+                .into_iter()
+                .map(|spec| crate::serve::Arrival { gap, spec })
+                .collect();
+            (arrivals, format!("queue {path} ({n} jobs)"))
+        }
+        None => {
+            let gen = if smoke {
+                harness::smoke_gen(seed)
+            } else {
+                crate::serve::GenConfig {
+                    jobs: args.u64("jobs", 200).max(1) as usize,
+                    seed,
+                    ..crate::serve::GenConfig::default()
+                }
+            };
+            let arrivals = crate::serve::generate(&gen);
+            (arrivals, format!("generated stream ({} jobs, seed {seed})", gen.jobs))
+        }
+    };
+    let c = harness::run(&topo, &arrivals, seed, engines, submitters, trace_out)?;
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"seed\": {},\n  \"jobs\": {},\n  \"results\": [{}]\n}}\n",
+        if smoke { "smoke" } else { "full" },
+        topo.name(),
+        seed,
+        arrivals.len(),
+        c.json_rows().join(",")
+    );
+    let note = write_bench_artifact("BENCH_serve.json", &json);
+    let trace_note = match trace_out {
+        Some(p) => format!("\nwrote first-leg Chrome trace to {p}"),
+        None => String::new(),
+    };
+    Ok(format!(
+        "{}\nsource: {source}\n\n{}\n{}{}",
+        c.title,
+        c.render(),
+        note,
+        trace_note
+    ))
+}
+
+fn cmd_submit(args: &Args) -> Result<String> {
+    let queue = args
+        .options
+        .get("queue")
+        .ok_or_else(|| Error::config("--queue <spool-file> is required".to_string()))?;
+    let mut spec = crate::serve::JobSpec::small(0);
+    spec.name = args.get("name", "job").to_string();
+    if let Some(m) = args.options.get("mode") {
+        spec.mode = crate::serve::parse_mode(m).ok_or_else(|| {
+            Error::config(format!("unknown mode `{m}` (want simple|bound|bubbles)"))
+        })?;
+    }
+    if let Some(c) = args.options.get("class") {
+        spec.class = crate::sched::DeadlineClass::parse(c).ok_or_else(|| {
+            Error::config(format!("unknown class `{c}` (want latency|normal|batch)"))
+        })?;
+    }
+    spec.threads = args.u64("threads", spec.threads as u64) as usize;
+    spec.cycles = args.u64("cycles", spec.cycles as u64) as usize;
+    spec.work = args.u64("work", spec.work);
+    spec.mem_fraction = args.f64("mem", spec.mem_fraction).clamp(0.0, 1.0);
+    spec.touches = args.u64("touches", spec.touches as u64) as usize;
+    if spec.threads == 0 {
+        return Err(Error::config("--threads must be >= 1".to_string()));
+    }
+    crate::serve::append_spool(queue, &spec)?;
+    Ok(format!(
+        "queued `{}` ({} threads, class {}, {}) to {queue}\n",
+        spec.name,
+        spec.threads,
+        spec.class.label(),
+        spec.mode.label()
     ))
 }
 
@@ -757,6 +876,46 @@ mod tests {
         assert!(out.contains("BENCH_adaptive.json"), "{out}");
         let err = run(&argv("adaptcmp --machine numa-2x2 --scheds warp")).unwrap_err();
         assert!(err.to_string().contains("unknown scheduler"), "{err}");
+    }
+
+    #[test]
+    fn serve_command_reports_all_legs() {
+        // Small generated stream, sim engine only: the three sim legs
+        // (job-fair, its static baseline, ss) land in the table and the
+        // BENCH_serve.json artifact.
+        let out = run(&argv("serve --machine numa-2x2 --jobs 12 --seed 3 --engine sim")).unwrap();
+        assert!(out.contains("multi-tenant serve"), "{out}");
+        assert!(out.contains("job-fair"), "{out}");
+        assert!(out.contains("job-fair-static"), "{out}");
+        assert!(out.contains("generated stream"), "{out}");
+        assert!(out.contains("BENCH_serve.json"), "{out}");
+        let err = run(&argv("serve --machine numa-2x2 --engine warp")).unwrap_err();
+        assert!(err.to_string().contains("unknown engine"), "{err}");
+    }
+
+    #[test]
+    fn submit_then_serve_from_queue() {
+        let path = std::env::temp_dir().join("bubbles-cli-serve-spool.txt");
+        let _ = std::fs::remove_file(&path);
+        let q = path.to_string_lossy().to_string();
+        let out = run(&argv(&format!(
+            "submit --queue {q} --name web --class latency --threads 2 --mode bubbles"
+        )))
+        .unwrap();
+        assert!(out.contains("web"), "{out}");
+        assert!(out.contains("latency"), "{out}");
+        run(&argv(&format!("submit --queue {q} --name bulk --class batch"))).unwrap();
+        let out = run(&argv(&format!("serve --machine numa-2x2 --queue {q} --engine sim")))
+            .unwrap();
+        assert!(out.contains("(2 jobs)"), "{out}");
+        assert!(out.contains("job-fair"), "{out}");
+        // Misuse fails loudly.
+        let err = run(&argv("submit --name x")).unwrap_err();
+        assert!(err.to_string().contains("--queue"), "{err}");
+        let err = run(&argv(&format!("submit --queue {q} --class warp"))).unwrap_err();
+        assert!(err.to_string().contains("unknown class"), "{err}");
+        let err = run(&argv(&format!("submit --queue {q} --mode warp"))).unwrap_err();
+        assert!(err.to_string().contains("unknown mode"), "{err}");
     }
 
     #[test]

@@ -116,6 +116,10 @@ pub enum SchedKind {
     /// Moldable gangs: gang scheduling that shrinks a gang's CPU set
     /// instead of idling processors (malleable-job direction).
     MoldableGang,
+    /// Cross-job fair scheduling for the server mode: per-job gangs
+    /// with deadline classes, starvation-driven squeezes, and a
+    /// static-partition baseline ([`crate::serve`]).
+    JobFair,
 }
 
 impl SchedKind {
@@ -140,6 +144,7 @@ impl SchedKind {
             SchedKind::Gang,
             SchedKind::Adaptive,
             SchedKind::MoldableGang,
+            SchedKind::JobFair,
         ]
     }
 
@@ -541,6 +546,8 @@ mod tests {
         assert_eq!(cfg.sched.resize_hysteresis, 2);
         assert_eq!(SchedKind::parse("moldable-gang"), Some(SchedKind::MoldableGang));
         assert_eq!(SchedKind::parse("moldable"), Some(SchedKind::MoldableGang));
+        assert_eq!(SchedKind::parse("job-fair"), Some(SchedKind::JobFair));
+        assert_eq!(SchedKind::parse("jobs"), Some(SchedKind::JobFair));
     }
 
     #[test]

@@ -36,4 +36,4 @@ pub mod fiber;
 mod worker;
 
 pub use fiber::{fiber_yield, yield_now, Fiber, YieldAction};
-pub use worker::{ExecReport, Executor, GreenApi};
+pub use worker::{ExecReport, Executor, GreenApi, Submitter};

@@ -270,6 +270,71 @@ impl Executor {
     pub fn system(&self) -> &Arc<System> {
         &self.inner.sys
     }
+
+    /// Open a cross-thread submission handle: other OS threads can
+    /// register and wake green threads *while the executor runs*. The
+    /// handle is a liveness latch — workers will not quiesce while any
+    /// `Submitter` is open, even if every registered fiber has exited,
+    /// so a run cannot end between two submissions. Drop all handles to
+    /// let the executor drain and return.
+    pub fn submitter(&self) -> Submitter {
+        self.inner.live.fetch_add(1, Ordering::SeqCst);
+        Submitter { inner: self.inner.clone() }
+    }
+}
+
+/// Cross-thread job submission into a running [`Executor`] (the
+/// `repro serve` streaming path). Cloneable; each clone holds the
+/// liveness latch independently. See [`Executor::submitter`].
+pub struct Submitter {
+    inner: Arc<Inner>,
+}
+
+impl Submitter {
+    /// Register a green thread from any OS thread (the task must
+    /// already exist in the system). The fiber becomes runnable once
+    /// [`Submitter::wake`] reaches its task or job root.
+    pub fn register(&self, task: TaskId, body: impl FnOnce(GreenApi) + Send + 'static) {
+        let api = GreenApi { inner: self.inner.clone() };
+        let fiber = Fiber::new(move || body(api));
+        self.inner.fibers.lock().unwrap().insert(task, fiber);
+        self.inner.live.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Wake a task (thread or job-root bubble) through the scheduler.
+    pub fn wake(&self, task: TaskId) {
+        self.inner.sched.wake(&self.inner.sys, task);
+    }
+
+    /// Allocate a native barrier usable by subsequently submitted
+    /// fibers.
+    pub fn alloc_barrier(&self, parties: usize) -> usize {
+        let mut b = self.inner.barriers.lock().unwrap();
+        b.push(BarrierState { parties, arrived: 0, waiting: Vec::new() });
+        b.len() - 1
+    }
+
+    /// The underlying system.
+    pub fn system(&self) -> &Arc<System> {
+        &self.inner.sys
+    }
+}
+
+impl Clone for Submitter {
+    fn clone(&self) -> Self {
+        self.inner.live.fetch_add(1, Ordering::SeqCst);
+        Submitter { inner: self.inner.clone() }
+    }
+}
+
+impl Drop for Submitter {
+    fn drop(&mut self) {
+        // Release the latch and nudge the workers: if this was the last
+        // handle and all fibers have exited, they observe live==0 and
+        // quiesce.
+        self.inner.live.fetch_sub(1, Ordering::SeqCst);
+        self.inner.park.wake_all();
+    }
 }
 
 fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
@@ -590,6 +655,45 @@ mod tests {
             sys.metrics.preemptions.load(Ordering::SeqCst) > 0,
             "tick must deliver preemptions on the native engine"
         );
+    }
+
+    #[test]
+    fn submitter_streams_work_into_a_running_executor() {
+        // The executor starts with zero fibers; a separate OS thread
+        // streams short green threads in through a Submitter while the
+        // workers run. The latch keeps the run alive between
+        // submissions, and dropping the handle lets it quiesce.
+        let sys = Arc::new(System::new(Arc::new(Topology::smp(2))));
+        let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+        let mut ex = Executor::new(sys.clone(), sched);
+        let sub = ex.submitter();
+        let done = Arc::new(AtomicU64::new(0));
+        let feeder = {
+            let d = done.clone();
+            std::thread::spawn(move || {
+                for i in 0..50 {
+                    let t = sub
+                        .system()
+                        .tasks
+                        .new_thread(format!("s{i}"), crate::task::PRIO_THREAD);
+                    let d = d.clone();
+                    sub.register(t, move |api| {
+                        d.fetch_add(1, Ordering::SeqCst);
+                        api.yield_now();
+                    });
+                    sub.wake(t);
+                    if i % 16 == 0 {
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                }
+                // sub drops here: latch released, executor may drain.
+            })
+        };
+        let rep = ex.run();
+        feeder.join().unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), 50);
+        // Pre-registered count is zero; the streamed fibers all ran.
+        assert_eq!(rep.threads, 0);
     }
 
     #[test]

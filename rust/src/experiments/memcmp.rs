@@ -328,6 +328,7 @@ mod tests {
             2,
             AllocPolicy::FirstTouch,
             &[StructureMode::Simple],
+            None,
         );
         for row in &c.rows {
             assert!(row.makespan > 0, "{}", row.sched);

@@ -8,5 +8,6 @@ pub mod ablations;
 pub mod adaptcmp;
 pub mod fig5;
 pub mod memcmp;
+pub mod serve;
 pub mod table1;
 pub mod table2;

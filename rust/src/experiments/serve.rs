@@ -1,0 +1,271 @@
+//! Multi-tenant serve harness (`repro serve`): drive a seeded bursty
+//! job stream through both engines and report per-job fairness numbers.
+//!
+//! Each leg serves the *same* generated arrival stream under one
+//! (engine, policy) pair and reports: mix makespan, admission-latency
+//! quantiles, tail (p95/p99) **slowdown** versus a recorded solo-run
+//! profile (each distinct job shape run alone on the same engine and
+//! policy), admission throughput over the arrival span, and the mean
+//! per-job local-touch ratio. The rows land in `BENCH_serve.json` so
+//! bench-smoke can upload mix-level regressions, and the pinned tests
+//! assert the tentpole claim: cross-job reallocation (`job-fair`) beats
+//! the static per-tenant partition on mix makespan with bounded tail
+//! slowdown.
+
+use std::collections::HashMap;
+
+use crate::config::SchedKind;
+use crate::error::Result;
+use crate::serve::{
+    quantile, run_native, run_sim, Arrival, GenConfig, ServeConfig, ServeOutcome,
+};
+use crate::topology::Topology;
+use crate::util::fmt::Table;
+
+/// One (engine, policy) leg over the mix.
+#[derive(Debug, Clone)]
+pub struct ServeRow {
+    pub engine: String,
+    pub policy: String,
+    pub jobs: usize,
+    pub lost: usize,
+    /// Whole-mix makespan (sim cycles / native wall ns).
+    pub mix_makespan: u64,
+    /// Admission latency (first dispatch − admission) quantiles.
+    pub admission_p50: u64,
+    pub admission_p99: u64,
+    /// Tail slowdown vs the solo-run profile of each job's shape.
+    pub p95_slowdown: f64,
+    pub p99_slowdown: f64,
+    /// Jobs admitted per second of engine time over the arrival span
+    /// (sim cycles are counted as nanoseconds).
+    pub admission_throughput: f64,
+    pub mean_local_ratio: f64,
+}
+
+/// The serve comparison result.
+#[derive(Debug, Clone)]
+pub struct ServeCmp {
+    pub title: String,
+    pub rows: Vec<ServeRow>,
+}
+
+impl ServeCmp {
+    /// Row accessor (panics on unknown leg — harness misuse).
+    pub fn get(&self, engine: &str, policy: &str) -> &ServeRow {
+        self.rows
+            .iter()
+            .find(|r| r.engine == engine && r.policy == policy)
+            .expect("unknown (engine, policy) row")
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "engine",
+            "policy",
+            "jobs",
+            "lost",
+            "mix makespan (M)",
+            "adm p50",
+            "adm p99",
+            "p95 slowdown",
+            "p99 slowdown",
+            "adm jobs/s",
+            "local ratio",
+        ]);
+        for r in &self.rows {
+            t.row(&[
+                r.engine.clone(),
+                r.policy.clone(),
+                r.jobs.to_string(),
+                r.lost.to_string(),
+                format!("{:.2}", r.mix_makespan as f64 / 1e6),
+                r.admission_p50.to_string(),
+                r.admission_p99.to_string(),
+                format!("{:.2}", r.p95_slowdown),
+                format!("{:.2}", r.p99_slowdown),
+                format!("{:.0}", r.admission_throughput),
+                format!("{:.3}", r.mean_local_ratio),
+            ]);
+        }
+        format!("== {} ==\n{}", self.title, t.render())
+    }
+
+    /// JSON result rows for the `BENCH_serve.json` artifact.
+    pub fn json_rows(&self) -> Vec<String> {
+        self.rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"engine\":\"{}\",\"policy\":\"{}\",\"jobs\":{},\"lost\":{},\"mix_makespan\":{},\"admission_p50\":{},\"admission_p99\":{},\"p95_slowdown\":{:.4},\"p99_slowdown\":{:.4},\"admission_throughput\":{:.2},\"mean_local_ratio\":{:.4}}}",
+                    r.engine,
+                    r.policy,
+                    r.jobs,
+                    r.lost,
+                    r.mix_makespan,
+                    r.admission_p50,
+                    r.admission_p99,
+                    r.p95_slowdown,
+                    r.p99_slowdown,
+                    r.admission_throughput,
+                    r.mean_local_ratio
+                )
+            })
+            .collect()
+    }
+}
+
+/// Solo-run profile: each distinct shape in the stream, run as the only
+/// job on the same engine and policy. Keyed by [`crate::serve::JobSpec::shape_key`].
+fn solo_profile(
+    topo: &Topology,
+    cfg: &ServeConfig,
+    arrivals: &[Arrival],
+    native: bool,
+) -> Result<HashMap<String, u64>> {
+    let mut out = HashMap::new();
+    for a in arrivals {
+        let key = a.spec.shape_key();
+        if out.contains_key(&key) {
+            continue;
+        }
+        let solo = [Arrival { gap: 1, spec: a.spec.clone() }];
+        let o = if native {
+            run_native(topo, cfg, &solo, 1, None)?
+        } else {
+            run_sim(topo, cfg, &solo, None)?
+        };
+        out.insert(key, o.jobs[0].makespan.max(1));
+    }
+    Ok(out)
+}
+
+/// Fold one leg's outcome + solo profile into a row.
+fn row_of(engine: &str, out: &ServeOutcome, solo: &HashMap<String, u64>) -> ServeRow {
+    let adm: Vec<f64> = out.jobs.iter().map(|j| j.admission_latency as f64).collect();
+    let slow: Vec<f64> = out
+        .jobs
+        .iter()
+        .map(|j| j.makespan as f64 / solo[&j.shape_key] as f64)
+        .collect();
+    let arrivals: Vec<u64> = out.jobs.iter().map(|j| j.arrived).collect();
+    let span = arrivals.iter().max().unwrap_or(&0) - arrivals.iter().min().unwrap_or(&0);
+    let local: Vec<f64> = out.jobs.iter().map(|j| j.local_ratio).collect();
+    ServeRow {
+        engine: engine.to_string(),
+        policy: out.policy.clone(),
+        jobs: out.jobs.len(),
+        lost: out.lost,
+        mix_makespan: out.mix_makespan,
+        admission_p50: quantile(&adm, 0.5) as u64,
+        admission_p99: quantile(&adm, 0.99) as u64,
+        p95_slowdown: quantile(&slow, 0.95),
+        p99_slowdown: quantile(&slow, 0.99),
+        admission_throughput: out.jobs.len() as f64 / (span.max(1) as f64 / 1e9),
+        mean_local_ratio: local.iter().sum::<f64>() / local.len().max(1) as f64,
+    }
+}
+
+/// Serve one leg and compute its row (slowdowns vs that leg's own solo
+/// profile). Returns the row and the raw outcome (tests want both).
+pub fn run_leg(
+    topo: &Topology,
+    cfg: &ServeConfig,
+    arrivals: &[Arrival],
+    native: bool,
+    submitters: usize,
+    trace_out: Option<&str>,
+) -> Result<(ServeRow, ServeOutcome)> {
+    // Solo-profile runs happen first so the traced artifact holds only
+    // the mix run's event stream.
+    let solo = solo_profile(topo, cfg, arrivals, native)?;
+    let out = if native {
+        run_native(topo, cfg, arrivals, submitters, trace_out)?
+    } else {
+        run_sim(topo, cfg, arrivals, trace_out)?
+    };
+    let engine = if native { "native" } else { "sim" };
+    Ok((row_of(engine, &out, &solo), out))
+}
+
+/// The standard comparison over one arrival stream. The sim legs are
+/// `job-fair`, its static-partition baseline and the SS opportunist;
+/// the native leg serves the same stream with `job-fair` through
+/// `submitters` concurrent [`crate::exec::Submitter`] threads.
+/// `engines` selects `(sim, native)`. `trace_out` writes the first
+/// leg's mix-run event stream as Chrome trace-event JSON (one
+/// representative timeline, as in `memcmp`).
+pub fn run(
+    topo: &Topology,
+    arrivals: &[Arrival],
+    seed: u64,
+    engines: (bool, bool),
+    submitters: usize,
+    trace_out: Option<&str>,
+) -> Result<ServeCmp> {
+    let (sim, native) = engines;
+    let mut rows = Vec::new();
+    let mut trace_slot = trace_out;
+    if sim {
+        let sim_legs = [
+            ServeConfig { kind: SchedKind::JobFair, static_partition: false, seed },
+            ServeConfig { kind: SchedKind::JobFair, static_partition: true, seed },
+            ServeConfig { kind: SchedKind::Ss, static_partition: false, seed },
+        ];
+        for cfg in &sim_legs {
+            let (row, _) = run_leg(topo, cfg, arrivals, false, 1, trace_slot.take())?;
+            rows.push(row);
+        }
+    }
+    if native {
+        let ncfg = ServeConfig { kind: SchedKind::JobFair, static_partition: false, seed };
+        let (nrow, _) = run_leg(topo, &ncfg, arrivals, true, submitters, trace_slot.take())?;
+        rows.push(nrow);
+    }
+    Ok(ServeCmp {
+        title: format!("multi-tenant serve ({} jobs, {})", arrivals.len(), topo.name()),
+        rows,
+    })
+}
+
+/// The CI smoke stream: ≥1000 short jobs on the numa(4,4) preset.
+pub fn smoke_gen(seed: u64) -> GenConfig {
+    GenConfig { jobs: 1000, seed, mean_gap: 10_000, ..GenConfig::default() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::generate;
+
+    fn quick_gen() -> GenConfig {
+        GenConfig { jobs: 30, ..GenConfig::default() }
+    }
+
+    #[test]
+    fn harness_reports_every_leg_with_zero_lost() {
+        let topo = Topology::numa(2, 2);
+        let gen = quick_gen();
+        let c = run(&topo, &generate(&gen), gen.seed, (true, true), 2, None).unwrap();
+        assert_eq!(c.rows.len(), 4, "3 sim legs + 1 native leg");
+        for r in &c.rows {
+            assert_eq!(r.lost, 0, "{}/{} lost jobs", r.engine, r.policy);
+            assert_eq!(r.jobs, 30, "{}/{}", r.engine, r.policy);
+            assert!(r.mix_makespan > 0);
+            assert!(r.p99_slowdown >= r.p95_slowdown);
+            assert!(r.admission_throughput > 0.0);
+        }
+        let out = c.render();
+        assert!(out.contains("job-fair") && out.contains("job-fair-static"), "{out}");
+        assert_eq!(c.json_rows().len(), 4);
+        for j in c.json_rows() {
+            assert!(j.contains("\"p99_slowdown\""), "{j}");
+        }
+    }
+
+    #[test]
+    fn smoke_gen_is_at_least_a_thousand_jobs() {
+        // ISSUE-8 acceptance: the --smoke stream drives >= 1000 jobs.
+        assert!(smoke_gen(1).jobs >= 1000);
+    }
+}

@@ -62,6 +62,7 @@ pub mod metrics;
 pub mod rq;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod sim;
 pub mod task;
 pub mod topology;

@@ -99,6 +99,11 @@ pub struct RegionInfo {
     pub owner: Option<TaskId>,
     /// Number of touches recorded.
     pub touches: u64,
+    /// Touches resolved on the toucher's own NUMA node (engine-side
+    /// locality attribution, see [`RegionRegistry::note_locality`]).
+    pub local_touches: u64,
+    /// Touches resolved on a remote node.
+    pub remote_touches: u64,
     /// Re-home onto the next toucher's node (next-touch migration).
     pub next_touch: bool,
 }
@@ -171,6 +176,11 @@ struct RegionHot {
     last_toucher: AtomicUsize,
     /// Pending next-touch migration mark.
     next_touch: AtomicBool,
+    /// Touches that resolved on the toucher's node / a remote node.
+    /// Written by the engines via [`RegionRegistry::note_locality`]
+    /// (the registry itself cannot map a CPU to its node).
+    locals: AtomicU64,
+    remotes: AtomicU64,
     /// Home node of a single-home region (`NONE_IDX` = unhomed; always
     /// `NONE_IDX` for striped regions).
     home: AtomicUsize,
@@ -184,6 +194,8 @@ impl RegionHot {
             touches: AtomicU64::new(0),
             last_toucher: AtomicUsize::new(NONE_IDX),
             next_touch: AtomicBool::new(false),
+            locals: AtomicU64::new(0),
+            remotes: AtomicU64::new(0),
             home: AtomicUsize::new(home.unwrap_or(NONE_IDX)),
             stripe_nodes: stripe_nodes.iter().map(|&n| AtomicUsize::new(n)).collect(),
         }
@@ -369,6 +381,8 @@ impl RegionRegistry {
             last_toucher: h.last(),
             owner: slot.owner,
             touches: h.touches.load(Ordering::Acquire),
+            local_touches: h.locals.load(Ordering::Acquire),
+            remote_touches: h.remotes.load(Ordering::Acquire),
             next_touch: h.next_touch.load(Ordering::Acquire),
         }
     }
@@ -508,6 +522,20 @@ impl RegionRegistry {
             }
         };
         (Touch { home, last_toucher: prev_toucher, migrated }, delta)
+    }
+
+    /// Attribute one resolved touch as local (the toucher ran on the
+    /// region's home node) or remote. The engines call this right after
+    /// resolving a touch — only they know the machine's CPU→node map —
+    /// which gives every region, and hence every *job* owning regions,
+    /// its own locality ratio (lock-free, two atomic ops).
+    pub fn note_locality(&self, r: RegionId, local: bool) {
+        let h = self.hot_of(r);
+        if local {
+            h.locals.fetch_add(1, Ordering::Relaxed);
+        } else {
+            h.remotes.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Mark one region for next-touch migration.
@@ -719,6 +747,21 @@ mod tests {
             "rotation sweeps the stripes regardless of path"
         );
         assert_eq!(reg.info(r).touches, 4);
+    }
+
+    #[test]
+    fn locality_notes_accumulate_per_region() {
+        let reg = RegionRegistry::new(2);
+        let r = reg.alloc(64, AllocPolicy::Fixed(0));
+        let s = reg.alloc(64, AllocPolicy::Fixed(1));
+        reg.note_locality(r, true);
+        reg.note_locality(r, true);
+        reg.note_locality(r, false);
+        reg.note_locality(s, false);
+        let ri = reg.info(r);
+        assert_eq!((ri.local_touches, ri.remote_touches), (2, 1));
+        let si = reg.info(s);
+        assert_eq!((si.local_touches, si.remote_touches), (0, 1));
     }
 
     #[test]

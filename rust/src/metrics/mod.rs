@@ -53,6 +53,14 @@ pub struct Metrics {
     pub gang_shrinks: AtomicU64,
     /// Moldable gangs: a gang's CPU set expanded to its parent.
     pub gang_expands: AtomicU64,
+    /// Job server: jobs admitted (job root first woken).
+    pub jobs_admitted: AtomicU64,
+    /// Job server: jobs whose members all terminated.
+    pub jobs_completed: AtomicU64,
+    /// Job server: cross-job processor reallocations — a starving
+    /// deadline class squeezed or rotated another job off its
+    /// component (`job-fair` policy).
+    pub job_reallocations: AtomicU64,
     /// Threads preempted by timeslice expiry.
     pub preemptions: AtomicU64,
     /// Busy engine-time units summed over CPUs.
@@ -154,6 +162,9 @@ impl Metrics {
         t.row(&["scope_narrows".into(), g(&self.scope_narrows)]);
         t.row(&["gang_shrinks".into(), g(&self.gang_shrinks)]);
         t.row(&["gang_expands".into(), g(&self.gang_expands)]);
+        t.row(&["jobs_admitted".into(), g(&self.jobs_admitted)]);
+        t.row(&["jobs_completed".into(), g(&self.jobs_completed)]);
+        t.row(&["job_reallocations".into(), g(&self.job_reallocations)]);
         t.row(&["preemptions".into(), g(&self.preemptions)]);
         t.row(&["utilisation".into(), format!("{:.3}", self.utilisation())]);
         t.row(&["search_retries".into(), g(&self.search_retries)]);

@@ -15,8 +15,8 @@ use super::baselines::{
     LdsScheduler, SsScheduler, TssScheduler,
 };
 use super::{
-    AdaptiveConfig, AdaptiveScheduler, BubbleScheduler, MemAwareConfig, MemAwareScheduler,
-    MoldableConfig, MoldableGangScheduler, Scheduler,
+    AdaptiveConfig, AdaptiveScheduler, BubbleScheduler, JobFairConfig, JobFairScheduler,
+    MemAwareConfig, MemAwareScheduler, MoldableConfig, MoldableGangScheduler, Scheduler,
 };
 use crate::config::{SchedConfig, SchedKind};
 use crate::util::fmt::Table;
@@ -33,7 +33,7 @@ pub struct PolicyInfo {
     build: fn(&SchedConfig) -> Arc<dyn Scheduler>,
 }
 
-static REGISTRY: [PolicyInfo; 13] = [
+static REGISTRY: [PolicyInfo; 14] = [
     PolicyInfo {
         kind: SchedKind::Bubble,
         name: "bubble",
@@ -144,6 +144,21 @@ static REGISTRY: [PolicyInfo; 13] = [
             Arc::new(MoldableGangScheduler::new(MoldableConfig {
                 resize_hysteresis: cfg.resize_hysteresis,
                 timeslice: cfg.timeslice,
+            }))
+        },
+    },
+    PolicyInfo {
+        kind: SchedKind::JobFair,
+        name: "job-fair",
+        aliases: &["jobs", "jobfair"],
+        summary: "cross-job fairness for the server mode: deadline-class admission, \
+                  starvation squeezes (knobs: sched.resize_hysteresis, sched.timeslice)",
+        build: |cfg| {
+            Arc::new(JobFairScheduler::new(JobFairConfig {
+                resize_hysteresis: cfg.resize_hysteresis,
+                starve_hysteresis: cfg.resize_hysteresis,
+                timeslice: cfg.timeslice,
+                static_partition: false,
             }))
         },
     },

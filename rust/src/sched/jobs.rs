@@ -1,0 +1,848 @@
+//! Cross-job processor reallocation under a hierarchical fairness
+//! policy (registry name: `job-fair`).
+//!
+//! [`super::MoldableGangScheduler`] resizes gangs *within* one
+//! application; a job server needs the same machinery *across* jobs
+//! (Cao et al., "Scalable Hierarchical Scheduling for Malleable
+//! Parallel Jobs"): every job is a gang owning one topology component,
+//! and processors move between jobs as their demand and urgency shift.
+//! This policy keeps moldable-gang's placement/shrink/expand/park
+//! protocol and adds the cross-job fairness layer the server mode
+//! (`crate::serve`) schedules its mix with:
+//!
+//! * **Deadline classes** ([`DeadlineClass`], set per job via
+//!   [`JobFairScheduler::set_class`]): `Latency` > `Normal` > `Batch`.
+//!   Waiting jobs are admitted to the machine strictest-class first
+//!   (FIFO within a class), so a latency job never queues behind a
+//!   backlog of batch work.
+//! * **Starvation squeeze**: when a live job waits with no free
+//!   component for [`JobFairConfig::starve_hysteresis`] consecutive
+//!   pick evaluations, the weakest-class active job (largest component
+//!   on ties) is *squeezed* — shrunk one level towards its busiest
+//!   child even if its demand overcommits the smaller set. A victim
+//!   already at a leaf is rotated off entirely, but only for a
+//!   strictly stricter waiter. Squeezes are hysteresis-damped exactly
+//!   like resizes, and counted in `metrics.job_reallocations`.
+//! * **Expansion fairness**: a job never expands while another live
+//!   job is waiting for space — freed processors go to waiters first.
+//! * **Static partition baseline** ([`JobFairConfig::static_partition`]):
+//!   every job is pinned round-robin (by admission order) to one child
+//!   of the machine root and never resized — the per-job fixed
+//!   partition that `repro serve` compares reallocation against.
+//!
+//! Fairness knobs: `resize_hysteresis` (demand-driven shrink/expand
+//! damping, shared with moldable-gang), `starve_hysteresis` (how long
+//! a waiter starves before a squeeze), `timeslice` (rotation of equal
+//! jobs when the machine is overcommitted), `static_partition` (the
+//! baseline switch). With no classes set and no starving waiters the
+//! policy behaves like moldable-gang, which is what lets the whole
+//! conformance matrix run over it unchanged.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+use super::core::{ops, pick};
+use super::{Scheduler, StopReason, System};
+use crate::metrics::Metrics;
+use crate::task::{TaskId, TaskState};
+use crate::topology::{CpuId, LevelId, Topology};
+use crate::trace::{Event, RegenWhy};
+
+/// How urgent a job's completion is. Ordered by strictness: a stricter
+/// class is admitted first and can squeeze processors out of weaker
+/// ones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DeadlineClass {
+    /// Throughput work: runs whenever space is left over.
+    Batch,
+    /// The default class.
+    Normal,
+    /// Deadline-sensitive work: admitted first, may squeeze others.
+    Latency,
+}
+
+impl DeadlineClass {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DeadlineClass::Batch => "batch",
+            DeadlineClass::Normal => "normal",
+            DeadlineClass::Latency => "latency",
+        }
+    }
+
+    /// Parse a class name (CLI / spool files).
+    pub fn parse(s: &str) -> Option<DeadlineClass> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "batch" => Some(DeadlineClass::Batch),
+            "normal" => Some(DeadlineClass::Normal),
+            "latency" => Some(DeadlineClass::Latency),
+            _ => None,
+        }
+    }
+}
+
+/// Tunables (config keys `sched.resize_hysteresis`, `sched.timeslice`).
+#[derive(Debug, Clone)]
+pub struct JobFairConfig {
+    /// Consecutive resize evaluations that must agree before a
+    /// demand-driven shrink/expand commits (as in moldable-gang).
+    pub resize_hysteresis: u32,
+    /// Consecutive pick evaluations a live job must starve (waiting
+    /// with no free component) before the weakest active job is
+    /// squeezed.
+    pub starve_hysteresis: u32,
+    /// Engine time a job may own its component while another live job
+    /// waits, before [`Scheduler::tick`] rotates it off.
+    pub timeslice: Option<u64>,
+    /// Baseline mode: pin each job round-robin to one child of the
+    /// machine root, never resize, never squeeze.
+    pub static_partition: bool,
+}
+
+impl Default for JobFairConfig {
+    fn default() -> Self {
+        JobFairConfig {
+            resize_hysteresis: 4,
+            starve_hysteresis: 4,
+            timeslice: None,
+            static_partition: false,
+        }
+    }
+}
+
+/// One active job and the component it owns.
+#[derive(Debug, Clone)]
+struct JobSlot {
+    gang: TaskId,
+    comp: LevelId,
+    shrink_streak: u32,
+    expand_streak: u32,
+    /// Engine time consumed since placement (timeslice rotation).
+    used: u64,
+}
+
+#[derive(Debug, Default)]
+struct JobState {
+    /// Jobs currently owning components (pairwise-disjoint, except in
+    /// static-partition mode where jobs may share their pinned child).
+    active: Vec<JobSlot>,
+    /// Jobs waiting for a free component.
+    queue: VecDeque<TaskId>,
+    /// Jobs off the machine because every member is blocked.
+    parked: Vec<TaskId>,
+    /// Deadline class per job root (absent = Normal).
+    classes: HashMap<TaskId, DeadlineClass>,
+    /// Consecutive pick evaluations some live waiter found no space.
+    starve_streak: u32,
+    /// Round-robin cursor for static-partition pinning.
+    next_static: usize,
+    /// Pinned partition per job (static mode; stable across park).
+    static_home: HashMap<TaskId, LevelId>,
+}
+
+/// Cross-job fair scheduler (registry name: `job-fair`).
+#[derive(Debug)]
+pub struct JobFairScheduler {
+    cfg: JobFairConfig,
+    st: Mutex<JobState>,
+}
+
+/// Two components' CPU ranges intersect.
+fn overlaps(topo: &Topology, a: LevelId, b: LevelId) -> bool {
+    let na = topo.node(a);
+    let nb = topo.node(b);
+    na.cpu_first < nb.cpu_first + nb.cpu_count && nb.cpu_first < na.cpu_first + na.cpu_count
+}
+
+/// Members that want a CPU now or will once activated.
+fn demand_of(sys: &System, ms: &[TaskId]) -> usize {
+    ms.iter()
+        .filter(|&&m| {
+            matches!(
+                sys.tasks.state(m),
+                TaskState::New
+                    | TaskState::InBubble
+                    | TaskState::Ready { .. }
+                    | TaskState::Running { .. }
+            )
+        })
+        .count()
+}
+
+/// Collected thread members of a job (one traversal per caller).
+fn members(sys: &System, gang: TaskId) -> Vec<TaskId> {
+    let mut ms = Vec::new();
+    ops::thread_members(sys, gang, &mut ms);
+    ms
+}
+
+/// The class a job runs under (Normal unless declared).
+fn class_of(st: &JobState, gang: TaskId) -> DeadlineClass {
+    st.classes.get(&gang).copied().unwrap_or(DeadlineClass::Normal)
+}
+
+/// The static-partition components: the children of the machine root
+/// (the root itself on a flat machine).
+fn partitions(topo: &Topology) -> Vec<LevelId> {
+    let root = topo.root();
+    let ch = &topo.node(root).children;
+    if ch.is_empty() {
+        vec![root]
+    } else {
+        ch.clone()
+    }
+}
+
+impl JobFairScheduler {
+    pub fn new(cfg: JobFairConfig) -> JobFairScheduler {
+        JobFairScheduler { cfg, st: Mutex::new(JobState::default()) }
+    }
+
+    /// Declare a job's deadline class (call before or after waking the
+    /// job root; absent = Normal).
+    pub fn set_class(&self, gang: TaskId, class: DeadlineClass) {
+        self.st.lock().unwrap().classes.insert(gang, class);
+    }
+
+    /// Snapshot of (job, owned component) pairs — test hook.
+    pub fn assignments(&self) -> Vec<(TaskId, LevelId)> {
+        let st = self.st.lock().unwrap();
+        st.active.iter().map(|s| (s.gang, s.comp)).collect()
+    }
+
+    /// The pinned partition of a job in static mode (assigned round
+    /// robin at first placement, stable across park/unpark).
+    fn static_home_of(&self, sys: &System, st: &mut JobState, gang: TaskId) -> LevelId {
+        if let Some(&h) = st.static_home.get(&gang) {
+            return h;
+        }
+        let parts = partitions(&sys.topo);
+        let h = parts[st.next_static % parts.len()];
+        st.next_static += 1;
+        st.static_home.insert(gang, h);
+        h
+    }
+
+    /// The child of `comp` the job should shrink into: big enough for
+    /// the demand, holding the most members by last-run CPU.
+    fn shrink_target(
+        &self,
+        sys: &System,
+        comp: LevelId,
+        ms: &[TaskId],
+        d: usize,
+    ) -> Option<LevelId> {
+        let node = sys.topo.node(comp);
+        if node.children.is_empty() || d == 0 || d >= node.cpu_count {
+            return None;
+        }
+        let mut best: Option<(usize, LevelId)> = None;
+        for &c in &node.children {
+            let cn = sys.topo.node(c);
+            if cn.cpu_count < d {
+                continue;
+            }
+            let count = ms
+                .iter()
+                .filter(|&&m| {
+                    sys.tasks
+                        .with(m, |t| t.last_cpu)
+                        .map(|cpu| cn.covers(cpu))
+                        .unwrap_or(false)
+                })
+                .count();
+            if best.map_or(true, |(bc, _)| count > bc) {
+                best = Some((count, c));
+            }
+        }
+        best.map(|(_, c)| c)
+    }
+
+    /// The child of `comp` a *squeeze* forces the job into: the one
+    /// holding the most members, capacity ignored (the job overcommits
+    /// on purpose — the freed siblings go to the starving waiter).
+    fn squeeze_target(&self, sys: &System, comp: LevelId, ms: &[TaskId]) -> LevelId {
+        let node = sys.topo.node(comp);
+        let mut best = (usize::MAX, node.children[0]);
+        for &c in &node.children {
+            let cn = sys.topo.node(c);
+            let count = ms
+                .iter()
+                .filter(|&&m| {
+                    sys.tasks
+                        .with(m, |t| t.last_cpu)
+                        .map(|cpu| cn.covers(cpu))
+                        .unwrap_or(false)
+                })
+                .count();
+            if best.0 == usize::MAX || count > best.0 {
+                best = (count, c);
+            }
+        }
+        best.1
+    }
+
+    /// Commit a resize: move the slot to `to` and migrate every queued
+    /// member onto the new component's list.
+    fn apply_resize(
+        &self,
+        sys: &System,
+        st: &mut JobState,
+        i: usize,
+        ms: &[TaskId],
+        to: LevelId,
+        shrink: bool,
+    ) {
+        let gang = st.active[i].gang;
+        let from = st.active[i].comp;
+        st.active[i].comp = to;
+        st.active[i].shrink_streak = 0;
+        st.active[i].expand_streak = 0;
+        for &m in ms {
+            if let Some(list) = sys.tasks.state(m).ready_list() {
+                if list != to && sys.rq.remove(list, m, sys.tasks.prio(m)) {
+                    ops::enqueue(sys, m, to);
+                }
+            }
+        }
+        Metrics::inc(if shrink {
+            &sys.metrics.gang_shrinks
+        } else {
+            &sys.metrics.gang_expands
+        });
+        sys.trace.emit(sys.now(), Event::RegenDone { bubble: gang, list: to });
+        sys.trace_emit(|| Event::GangResize { gang, from, to, grew: !shrink });
+    }
+
+    /// Release a job's runnable members onto its component's list.
+    fn activate(&self, sys: &System, gang: TaskId, comp: LevelId) {
+        if sys.tasks.is_bubble(gang) {
+            sys.tasks.with(gang, |t| t.state = TaskState::Blocked);
+        }
+        let mut ms = Vec::new();
+        ops::thread_members(sys, gang, &mut ms);
+        for m in ms {
+            if let Some(p) = sys.tasks.parent(m) {
+                if p != gang && sys.tasks.is_bubble(p) {
+                    sys.tasks.with(p, |t| t.state = TaskState::Blocked);
+                }
+            }
+            match sys.tasks.state(m) {
+                TaskState::New | TaskState::InBubble => ops::enqueue(sys, m, comp),
+                TaskState::Ready { list } => {
+                    if list != comp && sys.rq.remove(list, m, sys.tasks.prio(m)) {
+                        ops::enqueue(sys, m, comp);
+                    }
+                }
+                TaskState::Blocked if m == gang => ops::enqueue(sys, m, comp),
+                _ => {}
+            }
+        }
+    }
+
+    /// Index (into the queue) of the waiter to admit next: strictest
+    /// class first, FIFO within a class. Dead jobs are dropped.
+    fn best_waiter(&self, sys: &System, st: &mut JobState) -> Option<usize> {
+        st.queue.retain(|&g| ops::gang_live(sys, g));
+        let mut best: Option<(usize, DeadlineClass)> = None;
+        for (i, &g) in st.queue.iter().enumerate() {
+            let c = class_of(st, g);
+            if best.map_or(true, |(_, bc)| c > bc) {
+                best = Some((i, c));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Place waiting jobs on free components while any exist
+    /// (strictest class first; static mode pins each job immediately).
+    fn place_waiting(&self, sys: &System, st: &mut JobState) {
+        if self.cfg.static_partition {
+            loop {
+                st.queue.retain(|&g| ops::gang_live(sys, g));
+                let Some(g) = st.queue.pop_front() else { return };
+                let comp = self.static_home_of(sys, st, g);
+                st.active.push(JobSlot {
+                    gang: g,
+                    comp,
+                    shrink_streak: 0,
+                    expand_streak: 0,
+                    used: 0,
+                });
+                self.activate(sys, g, comp);
+            }
+        }
+        loop {
+            let Some(i) = self.best_waiter(sys, st) else { return };
+            let Some(comp) = self.find_free(sys, st) else { return };
+            let g = st.queue.remove(i).expect("waiter index in range");
+            st.active.push(JobSlot {
+                gang: g,
+                comp,
+                shrink_streak: 0,
+                expand_streak: 0,
+                used: 0,
+            });
+            self.activate(sys, g, comp);
+        }
+    }
+
+    /// Largest free component: first in BFS id order that overlaps no
+    /// active job's set.
+    fn find_free(&self, sys: &System, st: &JobState) -> Option<LevelId> {
+        (0..sys.topo.n_components())
+            .map(LevelId)
+            .find(|&l| st.active.iter().all(|s| !overlaps(&sys.topo, l, s.comp)))
+    }
+
+    /// Hysteresis-damped demand-driven resize for one active job.
+    /// Expansion is additionally refused while any live job waits —
+    /// freed processors belong to waiters first.
+    fn maybe_resize(&self, sys: &System, st: &mut JobState, i: usize, ms: &[TaskId]) {
+        if self.cfg.static_partition {
+            return;
+        }
+        let comp = st.active[i].comp;
+        let d = demand_of(sys, ms);
+        if let Some(child) = self.shrink_target(sys, comp, ms, d) {
+            st.active[i].expand_streak = 0;
+            st.active[i].shrink_streak += 1;
+            if st.active[i].shrink_streak >= self.cfg.resize_hysteresis {
+                self.apply_resize(sys, st, i, ms, child, true);
+            }
+            return;
+        }
+        st.active[i].shrink_streak = 0;
+        let parent = sys.topo.node(comp).parent;
+        let waiter = st.queue.iter().any(|&g| ops::gang_live(sys, g));
+        if d > sys.topo.node(comp).cpu_count && !waiter {
+            if let Some(parent) = parent {
+                let blocked = st
+                    .active
+                    .iter()
+                    .enumerate()
+                    .any(|(j, s)| j != i && overlaps(&sys.topo, parent, s.comp));
+                if !blocked {
+                    st.active[i].expand_streak += 1;
+                    if st.active[i].expand_streak >= self.cfg.resize_hysteresis {
+                        self.apply_resize(sys, st, i, ms, parent, false);
+                    }
+                    return;
+                }
+            }
+        }
+        st.active[i].expand_streak = 0;
+    }
+
+    /// The cross-job fairness move: when a live waiter has starved for
+    /// `starve_hysteresis` pick evaluations with no free component,
+    /// squeeze the weakest-class active job (largest component on
+    /// ties) one level towards its busiest child — or rotate it off
+    /// entirely when it already sits on a leaf and the waiter's class
+    /// is strictly stricter.
+    fn maybe_squeeze(&self, sys: &System, st: &mut JobState) {
+        let Some(wi) = self.best_waiter(sys, st) else {
+            st.starve_streak = 0;
+            return;
+        };
+        if self.find_free(sys, st).is_some() {
+            st.starve_streak = 0;
+            self.place_waiting(sys, st);
+            return;
+        }
+        st.starve_streak += 1;
+        if st.starve_streak < self.cfg.starve_hysteresis {
+            return;
+        }
+        st.starve_streak = 0;
+        let wclass = class_of(st, st.queue[wi]);
+        let Some(v) = st
+            .active
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| {
+                (class_of(st, s.gang), std::cmp::Reverse(sys.topo.node(s.comp).cpu_count))
+            })
+            .map(|(i, _)| i)
+        else {
+            return;
+        };
+        let vclass = class_of(st, st.active[v].gang);
+        let comp = st.active[v].comp;
+        if !sys.topo.node(comp).children.is_empty() {
+            let gang = st.active[v].gang;
+            let ms = members(sys, gang);
+            let child = self.squeeze_target(sys, comp, &ms);
+            self.apply_resize(sys, st, v, &ms, child, true);
+            Metrics::inc(&sys.metrics.job_reallocations);
+        } else if wclass > vclass {
+            // Leaf-level victim, strictly stricter waiter: rotate it
+            // off the machine (queued members return inside the job;
+            // running members fall back in on their next stop).
+            let slot = st.active.swap_remove(v);
+            let ms = members(sys, slot.gang);
+            for &m in &ms {
+                if let Some(l) = sys.tasks.state(m).ready_list() {
+                    if sys.rq.remove(l, m, sys.tasks.prio(m)) {
+                        sys.tasks.set_state(
+                            m,
+                            if sys.tasks.parent(m).is_some() {
+                                TaskState::InBubble
+                            } else {
+                                TaskState::Blocked
+                            },
+                        );
+                    }
+                }
+            }
+            st.queue.push_back(slot.gang);
+            Metrics::inc(&sys.metrics.job_reallocations);
+            sys.trace
+                .emit(sys.now(), Event::Regen { bubble: slot.gang, why: RegenWhy::Timeslice });
+        } else {
+            return;
+        }
+        self.place_waiting(sys, st);
+    }
+}
+
+impl Default for JobFairScheduler {
+    fn default() -> Self {
+        JobFairScheduler::new(JobFairConfig::default())
+    }
+}
+
+impl Scheduler for JobFairScheduler {
+    fn name(&self) -> String {
+        "job-fair".into()
+    }
+
+    fn wake(&self, sys: &System, task: TaskId) {
+        let mut st = self.st.lock().unwrap();
+        if sys.tasks.parent(task).is_some() {
+            // A member of some job woke; only a genuinely blocked
+            // member needs action.
+            let gang = ops::root_bubble(sys, task);
+            if sys.tasks.state(task) == TaskState::Blocked {
+                if let Some(slot) = st.active.iter().find(|s| s.gang == gang) {
+                    ops::enqueue(sys, task, slot.comp);
+                } else {
+                    sys.tasks.set_state(task, TaskState::InBubble);
+                    if let Some(p) = st.parked.iter().position(|&g| g == gang) {
+                        st.parked.remove(p);
+                        st.queue.push_back(gang);
+                        self.place_waiting(sys, &mut st);
+                    }
+                }
+            }
+            sys.notify_enqueue();
+            return;
+        }
+        // The task IS a job root: a bubble, or a loose (singleton)
+        // thread.
+        if sys.tasks.is_bubble(task) {
+            sys.tasks.with(task, |t| t.state = TaskState::Blocked);
+        }
+        if let Some(slot) = st.active.iter().find(|s| s.gang == task) {
+            if !sys.tasks.is_bubble(task) && sys.tasks.state(task) == TaskState::Blocked {
+                ops::enqueue(sys, task, slot.comp);
+            }
+        } else {
+            if let Some(p) = st.parked.iter().position(|&g| g == task) {
+                st.parked.remove(p);
+            }
+            if !st.queue.contains(&task) {
+                st.queue.push_back(task);
+            }
+            self.place_waiting(sys, &mut st);
+        }
+        sys.notify_enqueue();
+    }
+
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let mut st = self.st.lock().unwrap();
+        self.place_waiting(sys, &mut st);
+        let Some(i) = st.active.iter().position(|s| sys.topo.node(s.comp).covers(cpu)) else {
+            if !self.cfg.static_partition {
+                self.maybe_squeeze(sys, &mut st);
+                if let Some(j) =
+                    st.active.iter().position(|s| sys.topo.node(s.comp).covers(cpu))
+                {
+                    let comp = st.active[j].comp;
+                    return pick::pick_thread(sys, cpu, &[comp]);
+                }
+            }
+            return None;
+        };
+        let comp = st.active[i].comp;
+        let gang = st.active[i].gang;
+        if let Some(t) = pick::pick_thread(sys, cpu, &[comp]) {
+            let ms = members(sys, gang);
+            self.maybe_resize(sys, &mut st, i, &ms);
+            if !self.cfg.static_partition {
+                self.maybe_squeeze(sys, &mut st);
+            }
+            return Some(t);
+        }
+        let ms = members(sys, gang);
+        if demand_of(sys, &ms) == 0 {
+            // Nothing in this job can run: give the CPUs back.
+            st.active.swap_remove(i);
+            if ops::gang_live(sys, gang) {
+                st.parked.push(gang);
+                sys.trace.emit(sys.now(), Event::Regen { bubble: gang, why: RegenWhy::Idle });
+            }
+            self.place_waiting(sys, &mut st);
+            // Retry once: a freshly placed job may cover this CPU.
+            if let Some(j) =
+                st.active.iter().position(|s| sys.topo.node(s.comp).covers(cpu))
+            {
+                let comp = st.active[j].comp;
+                return pick::pick_thread(sys, cpu, &[comp]);
+            }
+            return None;
+        }
+        self.maybe_resize(sys, &mut st, i, &ms);
+        if !self.cfg.static_partition {
+            self.maybe_squeeze(sys, &mut st);
+        }
+        None
+    }
+
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        ops::default_stop(sys, cpu, task, why, &mut |sys, t| {
+            let gang = ops::root_bubble(sys, t);
+            let mut st = self.st.lock().unwrap();
+            if let Some(slot) = st.active.iter().find(|s| s.gang == gang) {
+                ops::enqueue(sys, t, slot.comp);
+            } else if sys.tasks.parent(t).is_some() {
+                sys.tasks.set_state(t, TaskState::InBubble);
+            } else {
+                sys.tasks.set_state(t, TaskState::Blocked);
+                if !st.queue.contains(&t) {
+                    st.queue.push_back(t);
+                }
+                self.place_waiting(sys, &mut st);
+            }
+        });
+        if why == StopReason::Terminate {
+            let gang = ops::root_bubble(sys, task);
+            let mut st = self.st.lock().unwrap();
+            if let Some(i) = st.active.iter().position(|s| s.gang == gang) {
+                if !ops::gang_live(sys, gang) {
+                    st.active.swap_remove(i);
+                    st.classes.remove(&gang);
+                    st.static_home.remove(&gang);
+                    self.place_waiting(sys, &mut st);
+                    sys.notify_enqueue();
+                }
+            }
+        }
+    }
+
+    fn tick(&self, sys: &System, _cpu: CpuId, task: TaskId, elapsed: u64) -> bool {
+        // Timeslice rotation when the machine is overcommitted; space
+        // sharing (shrink/squeeze/park) is always tried first. The
+        // static baseline never rotates — jobs pinned to one partition
+        // time-share through their shared list instead.
+        let Some(slice) = self.cfg.timeslice else { return false };
+        if self.cfg.static_partition {
+            return false;
+        }
+        let gang = ops::root_bubble(sys, task);
+        let mut st = self.st.lock().unwrap();
+        let Some(i) = st.active.iter().position(|s| s.gang == gang) else {
+            return false;
+        };
+        st.active[i].used += elapsed;
+        if st.active[i].used < slice || !st.queue.iter().any(|&g| ops::gang_live(sys, g)) {
+            return false;
+        }
+        let slot = st.active.swap_remove(i);
+        let ms = members(sys, gang);
+        for &m in &ms {
+            if let Some(l) = sys.tasks.state(m).ready_list() {
+                if sys.rq.remove(l, m, sys.tasks.prio(m)) {
+                    sys.tasks.set_state(
+                        m,
+                        if sys.tasks.parent(m).is_some() {
+                            TaskState::InBubble
+                        } else {
+                            TaskState::Blocked
+                        },
+                    );
+                }
+            }
+        }
+        st.queue.push_back(slot.gang);
+        Metrics::inc(&sys.metrics.regenerations);
+        sys.trace.emit(sys.now(), Event::Regen { bubble: gang, why: RegenWhy::Timeslice });
+        self.place_waiting(sys, &mut st);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::marcel::Marcel;
+    use crate::sched::baselines::testsupport;
+    use crate::sched::testutil::system;
+    use crate::topology::Topology;
+
+    fn gang_of(m: &Marcel, n: usize, tag: &str) -> (TaskId, Vec<TaskId>) {
+        let b = m.bubble_init();
+        let ts: Vec<TaskId> = (0..n).map(|i| m.create_dontsched(format!("{tag}{i}"))).collect();
+        for &t in &ts {
+            m.bubble_inserttask(b, t);
+        }
+        (b, ts)
+    }
+
+    #[test]
+    fn behavioural_suite() {
+        testsupport::drains_all_work(&JobFairScheduler::default(), Topology::numa(2, 2), 40);
+        testsupport::flattens_bubbles(&JobFairScheduler::default(), Topology::smp(2));
+        testsupport::block_wake_roundtrip(&JobFairScheduler::default(), Topology::smp(2));
+    }
+
+    #[test]
+    fn stricter_class_is_admitted_first() {
+        let sys = system(Topology::smp(4));
+        let s = JobFairScheduler::default();
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&m, 2, "a");
+        let (g2, t2) = gang_of(&m, 2, "b");
+        let (g3, t3) = gang_of(&m, 2, "c");
+        s.set_class(g2, DeadlineClass::Batch);
+        s.set_class(g3, DeadlineClass::Latency);
+        s.wake(&sys, g1);
+        s.wake(&sys, g2);
+        s.wake(&sys, g3);
+        // Job 1 owns the root (no shrink: demand 2 exceeds every leaf).
+        let x = s.pick(&sys, CpuId(0)).expect("job1 thread");
+        let y = s.pick(&sys, CpuId(1)).expect("job1 thread");
+        assert!(t1.contains(&x) && t1.contains(&y));
+        s.stop(&sys, CpuId(0), x, StopReason::Terminate);
+        s.stop(&sys, CpuId(1), y, StopReason::Terminate);
+        // The freed machine goes to the latency job, not the earlier
+        // batch job.
+        let z = s.pick(&sys, CpuId(0)).expect("next job thread");
+        assert!(t3.contains(&z), "latency job must be admitted before batch");
+        let _ = (g1, t2);
+    }
+
+    #[test]
+    fn starving_waiter_squeezes_the_weakest_job() {
+        let sys = system(Topology::numa(2, 2));
+        let s = JobFairScheduler::new(JobFairConfig {
+            resize_hysteresis: 100, // demand-driven resize never fires
+            starve_hysteresis: 1,
+            ..Default::default()
+        });
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&m, 4, "a"); // fills the whole machine
+        let (g2, t2) = gang_of(&m, 1, "b");
+        s.set_class(g1, DeadlineClass::Batch);
+        s.set_class(g2, DeadlineClass::Latency);
+        s.wake(&sys, g1);
+        s.wake(&sys, g2);
+        // Demand 4 = root capacity: no demand shrink is possible, so
+        // only the starvation squeeze can make room for job 2.
+        let x = s.pick(&sys, CpuId(0)).expect("job1 thread");
+        assert!(t1.contains(&x));
+        // The pick above observed the starving latency job and squeezed
+        // job 1 one level down; job 2 got the freed node.
+        let a = s.assignments();
+        assert_eq!(a.len(), 2, "both jobs on the machine after the squeeze: {a:?}");
+        assert_ne!(a[0].1, sys.topo.root());
+        let mut got_t2 = false;
+        for c in 0..4 {
+            if let Some(t) = s.pick(&sys, CpuId(c)) {
+                got_t2 |= t2.contains(&t);
+            }
+        }
+        assert!(got_t2, "the latency job must run on the freed component");
+        assert!(
+            sys.metrics.job_reallocations.load(std::sync::atomic::Ordering::Relaxed) >= 1
+        );
+    }
+
+    #[test]
+    fn leaf_victim_rotates_off_for_a_stricter_waiter() {
+        let sys = system(Topology::smp(2));
+        let s = JobFairScheduler::new(JobFairConfig {
+            resize_hysteresis: 100,
+            starve_hysteresis: 1,
+            ..Default::default()
+        });
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&m, 2, "a");
+        s.set_class(g1, DeadlineClass::Batch);
+        s.wake(&sys, g1);
+        let x = s.pick(&sys, CpuId(0)).expect("job1 thread");
+        assert!(t1.contains(&x));
+        // A latency waiter arrives: the first squeeze pushes job 1 from
+        // the root onto one leaf and places job 2 on the other.
+        let (g2, t2) = gang_of(&m, 1, "b");
+        s.set_class(g2, DeadlineClass::Latency);
+        s.wake(&sys, g2);
+        let _ = s.pick(&sys, CpuId(1));
+        assert_eq!(s.assignments().len(), 2);
+        // A second latency waiter: job 1 now sits on a leaf, so the
+        // squeeze rotates it off the machine entirely.
+        let (g3, t3) = gang_of(&m, 1, "c");
+        s.set_class(g3, DeadlineClass::Latency);
+        s.wake(&sys, g3);
+        let mut seen = Vec::new();
+        for _ in 0..8 {
+            for c in 0..2 {
+                if let Some(t) = s.pick(&sys, CpuId(c)) {
+                    seen.push(t);
+                    s.stop(&sys, CpuId(c), t, StopReason::Yield);
+                }
+            }
+        }
+        assert!(
+            seen.iter().any(|t| t3.contains(t)),
+            "second latency job must displace the leaf-level batch job: {seen:?}"
+        );
+        let _ = t2;
+    }
+
+    #[test]
+    fn static_partition_pins_jobs_round_robin_and_never_resizes() {
+        let sys = system(Topology::numa(2, 2));
+        let s = JobFairScheduler::new(JobFairConfig {
+            static_partition: true,
+            starve_hysteresis: 1,
+            resize_hysteresis: 1,
+            ..Default::default()
+        });
+        let m = Marcel::with_system(&sys);
+        let (g1, t1) = gang_of(&m, 1, "a");
+        let (g2, t2) = gang_of(&m, 1, "b");
+        let (g3, t3) = gang_of(&m, 1, "c");
+        s.wake(&sys, g1);
+        s.wake(&sys, g2);
+        s.wake(&sys, g3);
+        let a = s.assignments();
+        assert_eq!(a.len(), 3, "static mode admits everyone immediately: {a:?}");
+        // Round robin over the root's children: jobs 1 and 3 share the
+        // first partition, job 2 gets the second.
+        assert_eq!(a[0].1, a[2].1, "jobs 1 and 3 share a partition");
+        assert_ne!(a[0].1, a[1].1, "job 2 is pinned elsewhere");
+        assert_ne!(a[0].1, sys.topo.root(), "nobody owns the whole machine");
+        // Both partitions run work; singletons never resize.
+        let x = s.pick(&sys, CpuId(0)).expect("partition 0 runs");
+        let y = s.pick(&sys, CpuId(2)).expect("partition 1 runs");
+        assert!(t1.contains(&x) || t3.contains(&x));
+        assert!(t2.contains(&y));
+        assert_eq!(s.assignments().len(), 3, "no slot was resized or dropped");
+        assert_eq!(
+            sys.metrics.gang_shrinks.load(std::sync::atomic::Ordering::Relaxed)
+                + sys.metrics.gang_expands.load(std::sync::atomic::Ordering::Relaxed),
+            0
+        );
+    }
+}

@@ -11,12 +11,14 @@ pub mod baselines;
 mod bubble;
 pub mod core;
 pub mod factory;
+mod jobs;
 mod memaware;
 mod moldable;
 mod system;
 
 pub use adaptive::{AdaptiveConfig, AdaptiveScheduler};
 pub use bubble::{BubbleConfig, BubbleScheduler};
+pub use jobs::{DeadlineClass, JobFairConfig, JobFairScheduler};
 pub use memaware::{MemAwareConfig, MemAwareScheduler};
 pub use moldable::{MoldableConfig, MoldableGangScheduler};
 pub use system::System;

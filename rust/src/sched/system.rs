@@ -231,6 +231,9 @@ impl System {
         } else {
             Metrics::inc(&self.metrics.remote_accesses);
         }
+        // Per-region attribution of the same signal, so a job owning a
+        // set of regions gets its own local_ratio (crate::serve).
+        self.mem.regions.note_locality(r, local);
         if touch.migrated > 0 {
             Metrics::inc(&self.metrics.mem_migrations);
             Metrics::add(&self.metrics.migrated_bytes, touch.migrated);

@@ -1,0 +1,841 @@
+//! Multi-tenant job server: admit, isolate, and reallocate a stream of
+//! jobs over one executor.
+//!
+//! The paper evaluates one application at a time; this module turns the
+//! same machinery into a long-lived *server*: many concurrent jobs —
+//! each an app shape plus a [`StructureMode`], a priority and a
+//! [`DeadlineClass`] — are wrapped in their own bubble subtree under a
+//! per-job root and multiplexed over one engine (simulator or native
+//! executor). Cross-job processor reallocation is the `job-fair`
+//! policy's business ([`crate::sched::JobFairScheduler`]); this module
+//! provides the admission layer, the per-job bookkeeping, and the
+//! arrival generator that drives thousands of short jobs through it.
+//!
+//! # Job lifecycle
+//!
+//! A job moves through four states, all recorded in the [`JobBook`]:
+//!
+//! 1. **Submitted** — the job's bubble subtree, member threads and
+//!    regions exist, but nothing has been woken. Sim: built before the
+//!    run, woken by the arrival-driver thread. Native: built and woken
+//!    by a [`Submitter`] OS thread while the workers run.
+//! 2. **Admitted** — the job root's first wake reached the scheduler.
+//!    `arrived` is stamped, the admission order index assigned, an
+//!    [`Event::JobAdmit`] emitted and `metrics.jobs_admitted` bumped.
+//! 3. **Running** — some member was dispatched (`first_dispatch`
+//!    stamped; `first_dispatch − arrived` is the admission latency).
+//! 4. **Done** — every member terminated. `finished` is stamped, an
+//!    [`Event::JobDone`] emitted and `metrics.jobs_completed` bumped.
+//!    `finished − arrived` is the job's makespan in the mix.
+//!
+//! The tracking is a wrapper scheduler ([`JobTracker`]) around the
+//! actual policy, so *every* registry policy can serve the job stream
+//! and the lifecycle instrumentation is engine-independent: both
+//! engines call `wake`/`pick`/`stop` the same way, and `sys.now()` is
+//! simulated cycles on the simulator and wall nanoseconds natively.
+//!
+//! # Fairness knobs
+//!
+//! Reallocation policy lives in [`crate::sched::JobFairConfig`]:
+//! `resize_hysteresis` (idle-pick streak before a job shrinks to free
+//! room), `starve_hysteresis` (pick-miss streak of a strictly stricter
+//! waiter before the weakest active job is squeezed), `timeslice`
+//! (rotation between queued jobs), and `static_partition` (the
+//! no-reallocation baseline: jobs are pinned round-robin to the root's
+//! children and never moved — what a fixed per-tenant partition would
+//! do). Per-job deadline classes are set at submission from
+//! [`JobSpec::class`].
+//!
+//! Jobs deliberately contain **no cross-member barriers**: every
+//! registry policy (including opportunists that scatter members) must
+//! be able to drain an arbitrary job mix without coupling, which is
+//! what the cross-job conformance matrix in `tests/policy_conformance`
+//! relies on.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::apps::StructureMode;
+use crate::config::SchedKind;
+use crate::error::{Error, Result};
+use crate::exec::Executor;
+use crate::marcel::Marcel;
+use crate::mem::{AllocPolicy, RegionId};
+use crate::metrics::Metrics;
+use crate::sched::factory::make_default;
+use crate::sched::{
+    DeadlineClass, JobFairConfig, JobFairScheduler, Scheduler, StopReason, System,
+};
+use crate::sim::{CostModel, Program, SimConfig, SimEngine};
+use crate::task::{Prio, TaskId, PRIO_HIGH, PRIO_THREAD};
+use crate::topology::{CpuId, DistanceModel, Topology};
+use crate::trace::Event;
+use crate::util::Rng;
+
+/// Bytes of data each job member works on (attached per member, so
+/// per-job footprints are visible to memory-aware policies and the
+/// conformance matrix can check per-job conservation).
+pub const JOB_REGION_BYTES: u64 = 256 << 10;
+
+// ---------------------------------------------------------------- specs
+
+/// One job's shape: what the tenant submitted.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    /// How the job presents itself: flat members under the job root, or
+    /// per-NUMA-node sub-bubbles (the paper's structure axis, per job).
+    pub mode: StructureMode,
+    pub prio: Prio,
+    pub class: DeadlineClass,
+    /// Member threads.
+    pub threads: usize,
+    /// Compute items per member (sim) / touch cycles per member (native).
+    pub cycles: usize,
+    /// Simulated cycles per compute item.
+    pub work: u64,
+    /// Memory-bound fraction of each compute item.
+    pub mem_fraction: f64,
+    /// Region touches per cycle on the native engine.
+    pub touches: usize,
+}
+
+impl JobSpec {
+    /// Canonical short job (the bulk of the smoke stream).
+    pub fn small(i: usize) -> JobSpec {
+        JobSpec {
+            name: format!("small{i}"),
+            mode: StructureMode::Simple,
+            prio: PRIO_THREAD,
+            class: DeadlineClass::Normal,
+            threads: 1,
+            cycles: 1,
+            work: 20_000,
+            mem_fraction: 0.3,
+            touches: 1,
+        }
+    }
+
+    /// Medium job: a couple of members, a couple of cycles.
+    pub fn medium(i: usize) -> JobSpec {
+        JobSpec { name: format!("medium{i}"), threads: 2, cycles: 2, work: 60_000, ..JobSpec::small(i) }
+    }
+
+    /// Large job: node-filling gang.
+    pub fn large(i: usize) -> JobSpec {
+        JobSpec { name: format!("large{i}"), threads: 4, cycles: 2, work: 150_000, ..JobSpec::small(i) }
+    }
+
+    /// Key identifying the job's *shape* (everything that determines
+    /// its solo runtime) — the slowdown baseline is recorded per key.
+    pub fn shape_key(&self) -> String {
+        format!(
+            "{}t{}c{}w{:.2}m:{}",
+            self.threads, self.cycles, self.work, self.mem_fraction, self.mode.label()
+        )
+    }
+
+    /// Serialise as one spool line (`key=value` pairs) for the
+    /// `repro submit` → `repro serve` file queue.
+    pub fn spool_line(&self) -> String {
+        format!(
+            "name={} mode={} prio={} class={} threads={} cycles={} work={} mem={} touches={}",
+            self.name,
+            self.mode.label().to_lowercase(),
+            self.prio,
+            self.class.label(),
+            self.threads,
+            self.cycles,
+            self.work,
+            self.mem_fraction,
+            self.touches
+        )
+    }
+
+    /// Parse one spool line. Unknown keys error; missing keys take the
+    /// [`JobSpec::small`] defaults.
+    pub fn parse_spool(line: &str) -> Result<JobSpec> {
+        let mut spec = JobSpec::small(0);
+        spec.name = "spool".into();
+        for kv in line.split_whitespace() {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| Error::config(format!("spool: expected key=value, got {kv:?}")))?;
+            let bad = |what: &str| Error::config(format!("spool: bad {what} {v:?}"));
+            match k {
+                "name" => spec.name = v.to_string(),
+                "mode" => spec.mode = parse_mode(v).ok_or_else(|| bad("mode"))?,
+                "prio" => spec.prio = v.parse().map_err(|_| bad("prio"))?,
+                "class" => spec.class = DeadlineClass::parse(v).ok_or_else(|| bad("class"))?,
+                "threads" => spec.threads = v.parse().map_err(|_| bad("threads"))?,
+                "cycles" => spec.cycles = v.parse().map_err(|_| bad("cycles"))?,
+                "work" => spec.work = v.parse().map_err(|_| bad("work"))?,
+                "mem" => spec.mem_fraction = v.parse().map_err(|_| bad("mem"))?,
+                "touches" => spec.touches = v.parse().map_err(|_| bad("touches"))?,
+                other => return Err(Error::config(format!("spool: unknown key {other:?}"))),
+            }
+        }
+        if spec.threads == 0 {
+            return Err(Error::config("spool: threads must be >= 1"));
+        }
+        Ok(spec)
+    }
+}
+
+/// Parse a structure-mode label (CLI / spool).
+pub fn parse_mode(s: &str) -> Option<StructureMode> {
+    match s.to_ascii_lowercase().as_str() {
+        "simple" => Some(StructureMode::Simple),
+        "bound" => Some(StructureMode::Bound),
+        "bubbles" => Some(StructureMode::Bubbles),
+        _ => None,
+    }
+}
+
+/// Append a job spec to a spool file (`repro submit`).
+pub fn append_spool(path: &str, spec: &JobSpec) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{}", spec.spool_line())?;
+    Ok(())
+}
+
+/// Read every job spec from a spool file (`repro serve --queue`).
+pub fn read_spool(path: &str) -> Result<Vec<JobSpec>> {
+    let text = std::fs::read_to_string(path)?;
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(JobSpec::parse_spool)
+        .collect()
+}
+
+// ------------------------------------------------------------- arrivals
+
+/// One submission: wait `gap` (sim cycles / native ns) after the
+/// previous one, then wake the job.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub gap: u64,
+    pub spec: JobSpec,
+}
+
+/// Bursty arrival generator: Poisson gaps with periodic burst phases
+/// (a tight volley of back-to-back submissions), fully seeded.
+#[derive(Debug, Clone)]
+pub struct GenConfig {
+    pub jobs: usize,
+    pub seed: u64,
+    /// Mean Poisson inter-arrival gap (sim cycles).
+    pub mean_gap: u64,
+    /// After this many Poisson arrivals, a burst phase starts...
+    pub burst_every: usize,
+    /// ...submitting this many jobs back to back...
+    pub burst_len: usize,
+    /// ...with this tiny fixed gap.
+    pub burst_gap: u64,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            jobs: 200,
+            seed: 0x5eed,
+            mean_gap: 30_000,
+            burst_every: 16,
+            burst_len: 8,
+            burst_gap: 1_000,
+        }
+    }
+}
+
+/// Generate a seeded bursty job stream: ~70% small, ~20% medium, ~10%
+/// large shapes; deadline classes ~20% latency / ~50% normal / ~30%
+/// batch; ~30% of jobs present as per-node bubbles.
+pub fn generate(cfg: &GenConfig) -> Vec<Arrival> {
+    let mut rng = Rng::new(cfg.seed);
+    let phase_len = cfg.burst_every + cfg.burst_len.max(1);
+    let mut out = Vec::with_capacity(cfg.jobs);
+    for i in 0..cfg.jobs {
+        let in_burst = i % phase_len >= cfg.burst_every;
+        let gap = if in_burst {
+            cfg.burst_gap.max(1)
+        } else {
+            (rng.exp(cfg.mean_gap as f64) as u64).max(1)
+        };
+        let shape = rng.f64();
+        let mut spec = if shape < 0.7 {
+            JobSpec::small(i)
+        } else if shape < 0.9 {
+            JobSpec::medium(i)
+        } else {
+            JobSpec::large(i)
+        };
+        let class = rng.f64();
+        spec.class = if class < 0.2 {
+            DeadlineClass::Latency
+        } else if class < 0.7 {
+            DeadlineClass::Normal
+        } else {
+            DeadlineClass::Batch
+        };
+        if rng.chance(0.3) {
+            spec.mode = StructureMode::Bubbles;
+        }
+        out.push(Arrival { gap, spec });
+    }
+    out
+}
+
+// ------------------------------------------------------------- the book
+
+/// Per-job lifecycle record (see the module docs for the state
+/// machine). All times come from `sys.now()`.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: usize,
+    pub spec: JobSpec,
+    pub root: TaskId,
+    pub members: Vec<TaskId>,
+    pub regions: Vec<RegionId>,
+    /// Members not yet terminated.
+    remaining: usize,
+    pub arrived: Option<u64>,
+    pub first_dispatch: Option<u64>,
+    pub finished: Option<u64>,
+}
+
+#[derive(Debug, Default)]
+struct BookInner {
+    jobs: Vec<JobRecord>,
+    by_root: HashMap<TaskId, usize>,
+    by_member: HashMap<TaskId, usize>,
+    admission_order: Vec<usize>,
+}
+
+/// Shared job registry: one lock, engine-agnostic. The sim driver and
+/// the native submitter threads register jobs; the [`JobTracker`]
+/// stamps lifecycle times as the scheduler sees the events.
+#[derive(Clone, Default)]
+pub struct JobBook {
+    inner: Arc<Mutex<BookInner>>,
+}
+
+impl JobBook {
+    pub fn new() -> JobBook {
+        JobBook::default()
+    }
+
+    /// Register a built (not yet woken) job. Returns its id.
+    pub fn register(&self, spec: &JobSpec, built: &BuiltJob) -> usize {
+        let mut b = self.inner.lock().unwrap();
+        let id = b.jobs.len();
+        b.by_root.insert(built.root, id);
+        for &m in &built.members {
+            b.by_member.insert(m, id);
+        }
+        b.jobs.push(JobRecord {
+            id,
+            spec: spec.clone(),
+            root: built.root,
+            members: built.members.clone(),
+            regions: built.regions.clone(),
+            remaining: built.members.len(),
+            arrived: None,
+            first_dispatch: None,
+            finished: None,
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of every record.
+    pub fn records(&self) -> Vec<JobRecord> {
+        self.inner.lock().unwrap().jobs.clone()
+    }
+
+    /// Job ids in the order their roots were first woken.
+    pub fn admission_order(&self) -> Vec<usize> {
+        self.inner.lock().unwrap().admission_order.clone()
+    }
+
+    fn on_wake(&self, sys: &System, task: TaskId) {
+        let mut b = self.inner.lock().unwrap();
+        let Some(&id) = b.by_root.get(&task) else { return };
+        if b.jobs[id].arrived.is_some() {
+            return;
+        }
+        b.jobs[id].arrived = Some(sys.now());
+        b.admission_order.push(id);
+        Metrics::inc(&sys.metrics.jobs_admitted);
+        sys.trace.emit(sys.now(), Event::JobAdmit { job: id as u64, root: task });
+    }
+
+    fn on_dispatch(&self, sys: &System, task: TaskId) {
+        let mut b = self.inner.lock().unwrap();
+        let Some(&id) = b.by_member.get(&task) else { return };
+        if b.jobs[id].first_dispatch.is_none() {
+            b.jobs[id].first_dispatch = Some(sys.now());
+        }
+    }
+
+    fn on_terminate(&self, sys: &System, task: TaskId) {
+        let mut b = self.inner.lock().unwrap();
+        let Some(&id) = b.by_member.get(&task) else { return };
+        let j = &mut b.jobs[id];
+        if j.remaining == 0 {
+            return; // double Terminate would be a scheduler bug
+        }
+        j.remaining -= 1;
+        if j.remaining == 0 {
+            j.finished = Some(sys.now());
+            let root = j.root;
+            Metrics::inc(&sys.metrics.jobs_completed);
+            sys.trace.emit(sys.now(), Event::JobDone { job: id as u64, root });
+        }
+    }
+}
+
+// ---------------------------------------------------------- the tracker
+
+/// Wrapper scheduler: forwards every call to the wrapped policy and
+/// stamps job lifecycle events into the [`JobBook`] as they pass by.
+/// This is what makes *any* registry policy servable: the admission
+/// layer observes the scheduler protocol instead of requiring policy
+/// cooperation.
+pub struct JobTracker {
+    inner: Arc<dyn Scheduler>,
+    book: JobBook,
+}
+
+impl JobTracker {
+    pub fn new(inner: Arc<dyn Scheduler>, book: JobBook) -> JobTracker {
+        JobTracker { inner, book }
+    }
+}
+
+impl Scheduler for JobTracker {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn wake(&self, sys: &System, task: TaskId) {
+        self.book.on_wake(sys, task);
+        self.inner.wake(sys, task);
+    }
+
+    fn pick(&self, sys: &System, cpu: CpuId) -> Option<TaskId> {
+        let t = self.inner.pick(sys, cpu)?;
+        self.book.on_dispatch(sys, t);
+        Some(t)
+    }
+
+    fn stop(&self, sys: &System, cpu: CpuId, task: TaskId, why: StopReason) {
+        self.inner.stop(sys, cpu, task, why);
+        if why == StopReason::Terminate {
+            self.book.on_terminate(sys, task);
+        }
+    }
+
+    fn tick(&self, sys: &System, cpu: CpuId, task: TaskId, elapsed: u64) -> bool {
+        self.inner.tick(sys, cpu, task, elapsed)
+    }
+}
+
+// ----------------------------------------------------------- job builds
+
+/// A job's constructed-but-unwoken subtree.
+#[derive(Debug, Clone)]
+pub struct BuiltJob {
+    pub root: TaskId,
+    pub members: Vec<TaskId>,
+    pub regions: Vec<RegionId>,
+}
+
+/// Build a job's bubble subtree over a system: a per-job root bubble;
+/// `Simple`/`Bound` put members directly in it, `Bubbles` groups them
+/// into one sub-bubble per NUMA node. Each member gets an attached
+/// region ([`JOB_REGION_BYTES`], first touch). Nothing is woken.
+pub fn build_job(sys: &Arc<System>, spec: &JobSpec, id: usize) -> BuiltJob {
+    let m = Marcel::with_system(sys);
+    let root = m.bubble_init();
+    let mut members = Vec::with_capacity(spec.threads);
+    let mut regions = Vec::with_capacity(spec.threads);
+    for k in 0..spec.threads {
+        let t = m.create_dontsched_prio(format!("j{id}.{k}"), spec.prio);
+        let r = sys.mem.alloc(JOB_REGION_BYTES, AllocPolicy::FirstTouch);
+        m.attach_region(t, r);
+        members.push(t);
+        regions.push(r);
+    }
+    match spec.mode {
+        StructureMode::Simple | StructureMode::Bound => {
+            for &t in &members {
+                m.bubble_inserttask(root, t);
+            }
+        }
+        StructureMode::Bubbles => {
+            let nodes = sys.topo.n_numa().max(1);
+            let per = spec.threads.div_ceil(nodes).max(1);
+            for chunk in members.chunks(per) {
+                let sub = m.bubble_init();
+                for &t in chunk {
+                    m.bubble_inserttask(sub, t);
+                }
+                m.bubble_insertbubble(root, sub);
+            }
+        }
+    }
+    BuiltJob { root, members, regions }
+}
+
+/// The member program on the simulator: `cycles` compute items on the
+/// member's own region. Deliberately barrier-free (see module docs).
+fn member_program(spec: &JobSpec, region: RegionId) -> Program {
+    let mut p = Program::new();
+    for _ in 0..spec.cycles.max(1) {
+        p = p.compute(spec.work.max(1), spec.mem_fraction, Some(region));
+    }
+    p
+}
+
+// -------------------------------------------------------------- serving
+
+/// Which policy serves the mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeConfig {
+    pub kind: SchedKind,
+    /// `job-fair` only: pin jobs round-robin and never reallocate (the
+    /// static per-tenant partition baseline).
+    pub static_partition: bool,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { kind: SchedKind::JobFair, static_partition: false, seed: 0x5eed }
+    }
+}
+
+/// Write a serve run's event stream as Chrome trace-event JSON.
+fn write_trace(trace: &crate::trace::Trace, topo: &Topology, path: &str, label: &str) {
+    let recs = trace.drain();
+    let json = crate::trace::export::chrome_json(&recs, topo.n_cpus(), label);
+    std::fs::write(path, json).unwrap_or_else(|e| panic!("write trace {path}: {e}"));
+}
+
+/// Build the serving scheduler; for `job-fair` also return the concrete
+/// handle (deadline classes are set through it at submission).
+fn build_sched(cfg: &ServeConfig) -> (Arc<dyn Scheduler>, Option<Arc<JobFairScheduler>>) {
+    if cfg.kind == SchedKind::JobFair {
+        let jf = Arc::new(JobFairScheduler::new(JobFairConfig {
+            static_partition: cfg.static_partition,
+            ..JobFairConfig::default()
+        }));
+        (jf.clone(), Some(jf))
+    } else {
+        (make_default(cfg.kind), None)
+    }
+}
+
+/// One served job's outcome.
+#[derive(Debug, Clone)]
+pub struct JobStats {
+    pub id: usize,
+    pub name: String,
+    pub class: DeadlineClass,
+    pub shape_key: String,
+    pub arrived: u64,
+    /// `finished − arrived` (sim cycles / native ns).
+    pub makespan: u64,
+    /// `first_dispatch − arrived`.
+    pub admission_latency: u64,
+    /// Local fraction of the job's own region touches (engine-side
+    /// attribution, see [`crate::mem::RegionRegistry::note_locality`]).
+    pub local_ratio: f64,
+}
+
+/// A full serve run's result.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    pub policy: String,
+    pub jobs: Vec<JobStats>,
+    /// Job ids in admission order.
+    pub admission_order: Vec<usize>,
+    /// Whole-mix makespan (sim cycles / native wall ns).
+    pub mix_makespan: u64,
+    /// Jobs that never finished (must be 0 on a successful run).
+    pub lost: usize,
+}
+
+impl ServeOutcome {
+    /// Per-job makespans in job-id order (determinism tests compare
+    /// these vectors across seeded runs).
+    pub fn makespans(&self) -> Vec<u64> {
+        self.jobs.iter().map(|j| j.makespan).collect()
+    }
+}
+
+/// Fold the book into a [`ServeOutcome`] once the engine drained.
+fn collect(sys: &System, book: &JobBook, policy: String, mix_makespan: u64) -> Result<ServeOutcome> {
+    let records = book.records();
+    let lost = records.iter().filter(|r| r.finished.is_none()).count();
+    if lost > 0 {
+        return Err(Error::Sim(format!("serve: {lost} jobs lost (never finished)")));
+    }
+    let jobs = records
+        .iter()
+        .map(|r| {
+            let arrived = r.arrived.expect("finished job must have arrived");
+            let (mut loc, mut rem) = (0u64, 0u64);
+            for &rg in &r.regions {
+                let info = sys.mem.info(rg);
+                loc += info.local_touches;
+                rem += info.remote_touches;
+            }
+            JobStats {
+                id: r.id,
+                name: r.spec.name.clone(),
+                class: r.spec.class,
+                shape_key: r.spec.shape_key(),
+                arrived,
+                makespan: r.finished.unwrap().saturating_sub(arrived),
+                admission_latency: r
+                    .first_dispatch
+                    .expect("finished job must have dispatched")
+                    .saturating_sub(arrived),
+                local_ratio: if loc + rem == 0 { 0.0 } else { loc as f64 / (loc + rem) as f64 },
+            }
+        })
+        .collect();
+    Ok(ServeOutcome {
+        policy,
+        jobs,
+        admission_order: book.admission_order(),
+        mix_makespan,
+        lost,
+    })
+}
+
+/// Serve an arrival stream on the **simulator**. Jobs are built up
+/// front; a high-priority driver thread replays the arrival gaps and
+/// wakes each job root in order, so admission timing is part of the
+/// deterministic event stream — same seed + same stream ⇒ bit-identical
+/// per-job makespans and admission order. `trace_out` writes the run's
+/// event stream (job admits/dones included) as Chrome trace-event JSON.
+pub fn run_sim(
+    topo: &Topology,
+    cfg: &ServeConfig,
+    arrivals: &[Arrival],
+    trace_out: Option<&str>,
+) -> Result<ServeOutcome> {
+    let (sched, jf) = build_sched(cfg);
+    let book = JobBook::new();
+    let tracker = Arc::new(JobTracker::new(sched, book.clone()));
+    let sys = Arc::new(System::new(Arc::new(topo.clone())));
+    let mut e = SimEngine::new(
+        sys,
+        tracker,
+        CostModel::new(DistanceModel::default()),
+        SimConfig { seed: cfg.seed, ..SimConfig::default() },
+    );
+    if trace_out.is_some() {
+        e.sys.trace.set_enabled(true);
+    }
+    let mut driver = Program::new();
+    for (i, a) in arrivals.iter().enumerate() {
+        let built = build_job(&e.sys, &a.spec, i);
+        if let Some(jf) = &jf {
+            jf.set_class(built.root, a.spec.class);
+        }
+        for (&t, &r) in built.members.iter().zip(built.regions.iter()) {
+            e.set_program(t, member_program(&a.spec, r));
+        }
+        book.register(&a.spec, &built);
+        driver = driver.compute(a.gap.max(1), 0.0, None).wake(built.root);
+    }
+    let d = e.add_thread("arrivals", PRIO_HIGH, driver);
+    e.wake(d);
+    let rep = e.run()?;
+    let policy = format!("{}{}", cfg.kind.label(), if cfg.static_partition { "-static" } else { "" });
+    if let Some(path) = trace_out {
+        let label = format!("serve sim/{policy} on {}", topo.name());
+        write_trace(&e.sys.trace, topo, path, &label);
+    }
+    collect(&e.sys, &book, policy, rep.total_time)
+}
+
+/// Serve an arrival stream on the **native executor**: `submitters` OS
+/// threads stream jobs in through [`crate::exec::Submitter`] handles
+/// while the workers drain them. Arrival gaps are honoured as
+/// nanosecond sleeps (capped — the stream must outlive no one). With a
+/// single submitter the admission order is deterministic; makespans are
+/// wall time and are not.
+pub fn run_native(
+    topo: &Topology,
+    cfg: &ServeConfig,
+    arrivals: &[Arrival],
+    submitters: usize,
+    trace_out: Option<&str>,
+) -> Result<ServeOutcome> {
+    const MAX_GAP_NS: u64 = 200_000;
+    let (sched, jf) = build_sched(cfg);
+    let book = JobBook::new();
+    let tracker = Arc::new(JobTracker::new(sched, book.clone()));
+    let sys = Arc::new(System::new(Arc::new(topo.clone())));
+    let mut ex = Executor::new(sys.clone(), tracker);
+    if trace_out.is_some() {
+        sys.trace.set_enabled(true);
+    }
+    let sub = ex.submitter();
+    let n_subs = submitters.max(1);
+    let handles: Vec<_> = (0..n_subs)
+        .map(|s| {
+            let sub = sub.clone();
+            let jf = jf.clone();
+            let book = book.clone();
+            // Round-robin split keeps a single submitter's order equal
+            // to the stream order (the determinism test relies on it).
+            let mine: Vec<(usize, Arrival)> = arrivals
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % n_subs == s)
+                .map(|(i, a)| (i, a.clone()))
+                .collect();
+            std::thread::spawn(move || {
+                for (i, a) in mine {
+                    std::thread::sleep(std::time::Duration::from_nanos(a.gap.min(MAX_GAP_NS)));
+                    let sys = sub.system().clone();
+                    let built = build_job(&sys, &a.spec, i);
+                    if let Some(jf) = &jf {
+                        jf.set_class(built.root, a.spec.class);
+                    }
+                    let cycles = a.spec.cycles.max(1);
+                    let touches = a.spec.touches.max(1);
+                    for (&t, &r) in built.members.iter().zip(built.regions.iter()) {
+                        sub.register(t, move |api| {
+                            for _ in 0..cycles {
+                                for _ in 0..touches {
+                                    api.touch_region(r);
+                                    api.yield_now();
+                                }
+                            }
+                        });
+                    }
+                    book.register(&a.spec, &built);
+                    sub.wake(built.root);
+                }
+                // The clone drops here, releasing its liveness latch.
+            })
+        })
+        .collect();
+    drop(sub);
+    let rep = ex.run();
+    for h in handles {
+        h.join().map_err(|_| Error::Sim("serve: submitter thread panicked".into()))?;
+    }
+    let policy = format!("{}{}", cfg.kind.label(), if cfg.static_partition { "-static" } else { "" });
+    if let Some(path) = trace_out {
+        let label = format!("serve native/{policy} on {}", topo.name());
+        write_trace(&sys.trace, topo, path, &label);
+    }
+    collect(&sys, &book, policy, rep.elapsed.as_nanos() as u64)
+}
+
+// ------------------------------------------------------------ quantiles
+
+/// Exact quantile over a non-empty slice (nearest-rank on the sorted
+/// copy). Panics on an empty slice — harness misuse.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "quantile of empty slice");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    v[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Topology;
+
+    #[test]
+    fn generator_is_seeded_and_bursty() {
+        let cfg = GenConfig { jobs: 64, ..GenConfig::default() };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), 64);
+        assert_eq!(
+            a.iter().map(|x| (x.gap, x.spec.shape_key())).collect::<Vec<_>>(),
+            b.iter().map(|x| (x.gap, x.spec.shape_key())).collect::<Vec<_>>(),
+            "same seed must generate the same stream"
+        );
+        // Burst phases exist: some gaps are the tight burst gap.
+        assert!(a.iter().filter(|x| x.gap == cfg.burst_gap).count() >= cfg.burst_len);
+        // All three deadline classes appear in a 64-job stream.
+        for c in [DeadlineClass::Latency, DeadlineClass::Normal, DeadlineClass::Batch] {
+            assert!(a.iter().any(|x| x.spec.class == c), "{c:?} missing");
+        }
+    }
+
+    #[test]
+    fn spool_roundtrip() {
+        let mut s = JobSpec::large(3);
+        s.class = DeadlineClass::Latency;
+        s.mode = StructureMode::Bubbles;
+        let line = s.spool_line();
+        let back = JobSpec::parse_spool(&line).unwrap();
+        assert_eq!(back.name, s.name);
+        assert_eq!(back.class, s.class);
+        assert_eq!(back.mode, s.mode);
+        assert_eq!(back.threads, s.threads);
+        assert_eq!(back.work, s.work);
+        assert!(JobSpec::parse_spool("nonsense").is_err());
+        assert!(JobSpec::parse_spool("threads=0").is_err());
+        assert!(JobSpec::parse_spool("bogus=1").is_err());
+    }
+
+    #[test]
+    fn sim_serve_completes_every_job_and_stamps_lifecycle() {
+        let topo = Topology::numa(2, 2);
+        let arrivals = generate(&GenConfig { jobs: 40, ..GenConfig::default() });
+        let cfg = ServeConfig::default();
+        let out = run_sim(&topo, &cfg, &arrivals, None).unwrap();
+        assert_eq!(out.jobs.len(), 40);
+        assert_eq!(out.lost, 0);
+        assert_eq!(out.admission_order.len(), 40);
+        for j in &out.jobs {
+            assert!(j.makespan > 0, "job {} has zero makespan", j.id);
+            assert!(j.makespan >= j.admission_latency, "job {}", j.id);
+        }
+        // The driver replays arrivals in stream order on one thread, so
+        // admission order is exactly 0..n.
+        assert_eq!(out.admission_order, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serve_works_under_a_non_gang_policy_too() {
+        // The tracker must not depend on job-fair cooperation.
+        let topo = Topology::numa(2, 2);
+        let arrivals = generate(&GenConfig { jobs: 24, ..GenConfig::default() });
+        let cfg = ServeConfig { kind: SchedKind::Ss, ..ServeConfig::default() };
+        let out = run_sim(&topo, &cfg, &arrivals, None).unwrap();
+        assert_eq!(out.lost, 0);
+        assert_eq!(out.jobs.len(), 24);
+    }
+
+    #[test]
+    fn quantiles_are_exact_on_small_sets() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 3.0); // nearest rank rounds up here
+    }
+}

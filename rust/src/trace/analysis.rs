@@ -61,6 +61,10 @@ pub struct Analysis {
     pub gang_resizes: usize,
     pub region_migrations: usize,
     pub parks: usize,
+    /// Job-server admissions ([`Event::JobAdmit`]) seen in the stream.
+    pub job_admits: usize,
+    /// Job-server completions ([`Event::JobDone`]).
+    pub job_dones: usize,
     /// Executed Dispatch→Stop segments: `(cpu, start, end)`.
     pub spans: Vec<(usize, u64, u64)>,
     /// RegionTouch records: `(at, local)`.
@@ -142,6 +146,8 @@ pub fn analyse(records: &[Record]) -> Analysis {
             Event::RegionMigrate { .. } => a.region_migrations += 1,
             Event::RegionTouch { local, .. } => a.touches.push((r.at, *local)),
             Event::WorkerPark { .. } => a.parks += 1,
+            Event::JobAdmit { .. } => a.job_admits += 1,
+            Event::JobDone { .. } => a.job_dones += 1,
             Event::RegenDone { .. } | Event::WorkerUnpark { .. } => {}
         }
     }

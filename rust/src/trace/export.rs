@@ -198,6 +198,22 @@ pub fn chrome_json(records: &[Record], n_cpus: usize, label: &str) -> String {
             Event::WorkerUnpark { cpu } => {
                 ev.push(instant("unpark", row(cpu.0), r.at, ""));
             }
+            Event::JobAdmit { job, root } => {
+                ev.push(instant(
+                    "job-admit",
+                    ctx,
+                    r.at,
+                    &format!("\"job\":{job},\"root\":{}", root.0),
+                ));
+            }
+            Event::JobDone { job, root } => {
+                ev.push(instant(
+                    "job-done",
+                    ctx,
+                    r.at,
+                    &format!("\"job\":{job},\"root\":{}", root.0),
+                ));
+            }
             Event::Enqueue { .. } | Event::RegionTouch { .. } | Event::PickLatency { .. } => {}
         }
     }

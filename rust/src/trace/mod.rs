@@ -93,6 +93,11 @@ pub enum Event {
     WorkerPark { cpu: CpuId },
     /// A native worker resumed after parking.
     WorkerUnpark { cpu: CpuId },
+    /// Job server: job `job` (its root task `root`) was admitted —
+    /// the root's first wake reached the scheduler.
+    JobAdmit { job: u64, root: TaskId },
+    /// Job server: every member of job `job` terminated.
+    JobDone { job: u64, root: TaskId },
 }
 
 /// Why a thread stopped.
@@ -195,6 +200,8 @@ impl Event {
             }
             WorkerPark { cpu } => (15, [cpu.0 as u64, 0, 0, 0]),
             WorkerUnpark { cpu } => (16, [cpu.0 as u64, 0, 0, 0]),
+            JobAdmit { job, root } => (17, [job, root.0 as u64, 0, 0]),
+            JobDone { job, root } => (18, [job, root.0 as u64, 0, 0]),
         }
     }
 
@@ -261,6 +268,8 @@ impl Event {
             },
             15 => WorkerPark { cpu: CpuId(p[0] as usize) },
             16 => WorkerUnpark { cpu: CpuId(p[0] as usize) },
+            17 => JobAdmit { job: p[0], root: TaskId(p[1] as usize) },
+            18 => JobDone { job: p[0], root: TaskId(p[1] as usize) },
             _ => return None,
         })
     }
@@ -572,6 +581,8 @@ mod tests {
             Event::RegionTouch { region: 17, cpu: CpuId(7), home: 1, local: false },
             Event::WorkerPark { cpu: CpuId(8) },
             Event::WorkerUnpark { cpu: CpuId(9) },
+            Event::JobAdmit { job: 18, root: TaskId(19) },
+            Event::JobDone { job: 20, root: TaskId(21) },
         ];
         for ev in evs {
             let (kind, p) = ev.encode();

@@ -25,6 +25,13 @@
 //! barrier across independent gangs) so strict space/time-sharing
 //! policies (`gang`) can pass them too; barrier-coupled behaviour is
 //! exercised by the scheduler-specific suites.
+//!
+//! The **cross-job matrix** additionally serves a mixed multi-tenant
+//! job stream (the `serve` admission layer: per-job bubble subtrees
+//! woken by a replayed arrival schedule) under every registry policy on
+//! smp(4) and the paper's numa(4,4): every job must finish (no runnable
+//! job starved while the mix drains), every member must terminate, and
+//! each job's footprint must stay conserved within its own subtree.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -493,6 +500,89 @@ fn every_registered_policy_conserves_on_the_lockless_runqueue() {
         lane_pushes > 0 && lane_pops > 0,
         "no registry policy engaged the fast lanes (pushes {lane_pushes}, pops {lane_pops})"
     );
+}
+
+/// Cross-job conformance: a mixed multi-tenant stream (small/medium/
+/// large shapes, all three deadline classes, flat and bubbled job
+/// structures) served through the `serve` admission layer under the
+/// given policy. The policy never sees the admission layer — the
+/// [`bubbles::serve::JobTracker`] wrapper observes the scheduler
+/// protocol — so every registry entry must drain the mix unmodified.
+fn served_job_matrix(name: &str, topo: &Topology) {
+    use bubbles::serve::{build_job, generate, GenConfig, JobBook, JobTracker, JOB_REGION_BYTES};
+    use bubbles::task::PRIO_HIGH;
+    let entry = factory::lookup(name).expect("registered policy");
+    let book = JobBook::new();
+    let tracker: Arc<dyn Scheduler> =
+        Arc::new(JobTracker::new(factory::make_default(entry.kind), book.clone()));
+    let mut e = engine(topo, tracker);
+    let arrivals = generate(&GenConfig { jobs: 12, mean_gap: 5_000, ..GenConfig::default() });
+    let mut driver = Program::new();
+    let mut members = Vec::new();
+    for (i, a) in arrivals.iter().enumerate() {
+        let built = build_job(&e.sys, &a.spec, i);
+        for (&t, &r) in built.members.iter().zip(built.regions.iter()) {
+            let mut p = Program::new();
+            for _ in 0..a.spec.cycles.max(1) {
+                p = p.compute(a.spec.work.max(1), a.spec.mem_fraction, Some(r));
+            }
+            e.set_program(t, p);
+        }
+        book.register(&a.spec, &built);
+        driver = driver.compute(a.gap.max(1), 0.0, None).wake(built.root);
+        members.extend(built.members.iter().copied());
+    }
+    let d = e.add_thread("arrivals", PRIO_HIGH, driver);
+    e.wake(d);
+    e.run()
+        .unwrap_or_else(|err| panic!("{name} on {}: serve run failed: {err}", topo.name()));
+    let machine = topo.name();
+    // Per-job lifecycle + conservation. A job left unfinished while the
+    // engine drained would mean the policy starved a runnable job while
+    // other jobs' CPUs went idle to completion — the run above would
+    // have deadlocked or this stays stamped `None`.
+    let recs = book.records();
+    assert_eq!(recs.len(), arrivals.len(), "{name} on {machine}: jobs lost from the book");
+    assert_eq!(
+        book.admission_order().len(),
+        arrivals.len(),
+        "{name} on {machine}: admissions lost"
+    );
+    for r in &recs {
+        assert!(r.arrived.is_some(), "{name} on {machine}: job {} never admitted", r.id);
+        assert!(r.first_dispatch.is_some(), "{name} on {machine}: job {} starved", r.id);
+        assert!(r.finished.is_some(), "{name} on {machine}: job {} never finished", r.id);
+        for &t in &r.members {
+            assert_eq!(
+                e.sys.tasks.state(t),
+                TaskState::Terminated,
+                "{name} on {machine}: job {} member {t} not terminated",
+                r.id
+            );
+        }
+        // Per-job footprint conservation: every member region is touched
+        // (mem-bound fraction > 0) hence homed, and its bytes must roll
+        // up to exactly the job's own root — no bleed across subtrees.
+        assert_eq!(
+            e.sys.mem.footprint.total(r.root),
+            r.regions.len() as u64 * JOB_REGION_BYTES,
+            "{name} on {machine}: job {} footprint leaked out of its subtree",
+            r.id
+        );
+    }
+    // The driver thread terminated too, and the global invariants
+    // (hierarchy-consistent footprints included) still hold.
+    members.push(d);
+    assert_consistent(name, machine, &e.sys, &members);
+}
+
+#[test]
+fn every_registered_policy_serves_a_multi_tenant_job_stream() {
+    for entry in factory::registry() {
+        for topo in [Topology::smp(4), Topology::numa(4, 4)] {
+            served_job_matrix(entry.name, &topo);
+        }
+    }
 }
 
 #[test]
