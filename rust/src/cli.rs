@@ -27,7 +27,7 @@ impl Args {
     /// (`--config` with no path) fails loudly instead of becoming the
     /// literal value `true`.
     pub fn parse(argv: &[String]) -> Result<Args> {
-        const BOOL_FLAGS: &[&str] = &["smoke"];
+        const BOOL_FLAGS: &[&str] = &["smoke", "arena"];
         let mut args = Args::default();
         let mut it = argv.iter().peekable();
         args.command = it.next().cloned().unwrap_or_else(|| "help".to_string());
@@ -104,13 +104,16 @@ Multiprocessor Machines' (Thibault, 2005)
 USAGE: repro <command> [--key value ...]
 
 COMMANDS
-  topology   render a machine tree (Figure 2)    [--machine numa-4x4]
+  topology   render a machine tree (Figure 2)    [--machine numa-4x4,
+             --json out.json (machine-shape artifact: cpus, NUMA nodes,
+             OS-CPU map and SLIT matrix when detected)]
   table1     scheduler micro-costs (Table 1)
   table2     conduction+advection rows (Table 2) [--machine, --scale 1.0]
   fig5       fibonacci bubble gain (Figure 5)    [--machine xeon-2x-ht|numa-4x4]
   ablations  design-choice sweeps                [--which burst|regen|zoo|all]
   memcmp     local vs remote access ratio per policy [--machine, --scheds a,b,c,
              --engine sim|native, --structure simple|bubbles|both (native),
+             --arena (native: back regions with real mmap pages),
              --seed N (sim), --smoke, --trace out.json]
              (--engine native runs real green threads — loose or grouped into
              one bubble per NUMA node — and writes BENCH_mem_native.json;
@@ -140,21 +143,61 @@ COMMANDS
   schedulers list registered scheduling policies (also: --sched list)
   help       this text
 
-MACHINES: xeon-2x-ht, numa-4x4 (novascale), deep, asym, smp-<n>, numa-<a>x<b>
+MACHINES: xeon-2x-ht, numa-4x4 (novascale), deep, asym, smp-<n>, numa-<a>x<b>,
+          detect (discover this machine from /sys: online CPUs, packages,
+          cores, NUMA nodes and SLIT distances; native workers then pin to
+          the detected OS CPUs. Falls back to smp-N when /sys is absent.)
 SCHEDULERS: see `repro schedulers`
 ";
 
 fn cmd_topology(args: &Args) -> Result<String> {
     let t = args.machine()?;
+    let note = match args.options.get("json") {
+        Some(path) => format!("\n{}", write_bench_artifact(path, &topology_json(&t))),
+        None => String::new(),
+    };
     Ok(format!(
-        "machine `{}`: {} CPUs, {} NUMA nodes, {} lists, depth {}\n\n{}",
+        "machine `{}`: {} CPUs, {} NUMA nodes, {} lists, depth {}\n\n{}{}",
         t.name(),
         t.n_cpus(),
         t.n_numa(),
         t.n_components(),
         t.depth(),
-        t.render()
+        t.render(),
+        note
     ))
+}
+
+/// Machine-shape JSON for the CI artifact trail (`topology --json`):
+/// the shape counts plus — when the machine carries them, i.e. it was
+/// discovered from `/sys` — the vCPU→OS-CPU map and the normalized
+/// SLIT distance matrix.
+fn topology_json(t: &Topology) -> String {
+    let mut s = format!(
+        "{{\n  \"machine\": \"{}\",\n  \"cpus\": {},\n  \"numa_nodes\": {},\n  \"components\": {},\n  \"depth\": {},\n  \"pinnable\": {}",
+        t.name(),
+        t.n_cpus(),
+        t.n_numa(),
+        t.n_components(),
+        t.depth(),
+        t.os_cpus().is_some()
+    );
+    if let Some(map) = t.os_cpus() {
+        let list: Vec<String> = map.iter().map(|c| c.to_string()).collect();
+        s.push_str(&format!(",\n  \"os_cpus\": [{}]", list.join(",")));
+    }
+    if let Some(m) = t.numa_matrix() {
+        let rows: Vec<String> = m
+            .iter()
+            .map(|r| {
+                let cols: Vec<String> = r.iter().map(|f| format!("{f:.3}")).collect();
+                format!("[{}]", cols.join(","))
+            })
+            .collect();
+        s.push_str(&format!(",\n  \"numa_matrix\": [{}]", rows.join(",")));
+    }
+    s.push_str("\n}\n");
+    s
 }
 
 fn cmd_table1(_args: &Args) -> Result<String> {
@@ -276,6 +319,13 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
                         .to_string(),
                 ));
             }
+            if args.flag("arena") {
+                return Err(Error::config(
+                    "--arena applies to --engine native only (the sim engine models \
+                     memory, it does not touch real pages)"
+                        .to_string(),
+                ));
+            }
             let c = memcmp::run(&topo, &p, &kinds, seed, trace_out);
             Ok(format!(
                 "memory locality comparison on `{}` ({} stripes, {} cycles, seed {seed})\n\n{}{}",
@@ -306,6 +356,7 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
                 &kinds,
                 touches,
                 crate::mem::AllocPolicy::FirstTouch,
+                args.flag("arena"),
                 &modes,
                 trace_out,
             );
@@ -313,11 +364,16 @@ fn cmd_memcmp(args: &Args) -> Result<String> {
             // clock and OS scheduling makes them run-to-run noisy — a
             // seed field would falsely promise reproducibility. The
             // structure axis lives on each result row (one vocabulary:
-            // the StructureMode labels), not at the top level.
+            // the StructureMode labels), not at the top level. The
+            // detected shape rides along so the CI detect leg can check
+            // the machine the workers actually ran on.
             let json = format!(
-                "{{\n  \"bench\": \"memcmp\",\n  \"engine\": \"native\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"results\": [{}]\n}}\n",
+                "{{\n  \"bench\": \"memcmp\",\n  \"engine\": \"native\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"cpus\": {},\n  \"numa_nodes\": {},\n  \"pinnable\": {},\n  \"results\": [{}]\n}}\n",
                 if smoke { "smoke" } else { "full" },
                 topo.name(),
+                topo.n_cpus(),
+                topo.n_numa(),
+                topo.os_cpus().is_some(),
                 c.json_rows("native").join(",")
             );
             let note = write_bench_artifact("BENCH_mem_native.json", &json);
@@ -507,7 +563,10 @@ fn cmd_run(args: &Args) -> Result<String> {
         &topo,
         sched,
         crate::sim::SimConfig::default(),
-        cfg.machine.distance_model(),
+        // Resolved against the built machine: a detected topology's
+        // SLIT matrix prices remote access unless the config gave an
+        // explicit one.
+        cfg.machine.distance_model_for(&topo),
     );
     let w = &cfg.workload;
     match w.app.as_str() {
@@ -817,6 +876,40 @@ mod tests {
     }
 
     #[test]
+    fn malformed_machine_specs_error_and_list_presets() {
+        // Zero-sized and garbage custom specs are rejected loudly, and
+        // the error points at the preset list instead of silently
+        // building a degenerate machine.
+        for bad in ["smp-0", "numa-0x4", "numa-4x0", "numa-2x2x2", "smp-two"] {
+            let err = run(&argv(&format!("topology --machine {bad}"))).unwrap_err();
+            assert!(err.to_string().contains("presets"), "{bad}: {err}");
+            assert!(err.to_string().contains("detect"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn topology_json_writes_machine_shape_artifact() {
+        let path = std::env::temp_dir().join("bubbles-cli-topology.json");
+        let cmd = format!("topology --machine numa-2x2 --json {}", path.display());
+        let out = run(&argv(&cmd)).unwrap();
+        assert!(out.contains("wrote"), "{out}");
+        let s = std::fs::read_to_string(&path).unwrap();
+        crate::util::json::validate(&s).unwrap_or_else(|e| panic!("invalid JSON: {e}"));
+        assert!(s.contains("\"cpus\": 4"), "{s}");
+        assert!(s.contains("\"numa_nodes\": 2"), "{s}");
+        // Preset machines carry no OS map.
+        assert!(s.contains("\"pinnable\": false"), "{s}");
+        // The detected machine always carries one (identity map when
+        // `/sys` was absent and detection fell back to smp-N).
+        let cmd = format!("topology --machine detect --json {}", path.display());
+        run(&argv(&cmd)).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        crate::util::json::validate(&s).unwrap_or_else(|e| panic!("invalid JSON: {e}"));
+        assert!(s.contains("\"pinnable\": true"), "{s}");
+        assert!(s.contains("\"os_cpus\""), "{s}");
+    }
+
+    #[test]
     fn evolve_traces_burst() {
         let out = run(&argv("evolve --machine numa-2x2")).unwrap();
         assert!(out.contains("Burst"), "{out}");
@@ -864,6 +957,20 @@ mod tests {
         let err = run(&argv("memcmp --machine numa-2x2 --structure bubbles --smoke"))
             .unwrap_err();
         assert!(err.to_string().contains("native only"), "{err}");
+    }
+
+    #[test]
+    fn memcmp_arena_flag_is_native_only_and_runs() {
+        // --arena on the sim engine is a loud error…
+        let err = run(&argv("memcmp --machine numa-2x2 --arena --smoke")).unwrap_err();
+        assert!(err.to_string().contains("native only"), "{err}");
+        // …and on the native engine it backs regions with real mmap
+        // pages (best-effort: the run must succeed either way).
+        let cmd = "memcmp --machine numa-2x2 --scheds afs --engine native \
+                   --structure simple --arena --smoke";
+        let out = run(&argv(cmd)).unwrap();
+        assert!(out.contains("BENCH_mem_native.json"), "{out}");
+        assert!(out.contains("afs"), "{out}");
     }
 
     #[test]

@@ -83,6 +83,23 @@ impl MachineConfig {
             numa_matrix: self.numa_matrix.clone(),
         }
     }
+
+    /// Like [`MachineConfig::distance_model`], but resolved against the
+    /// built topology: when the config gives no explicit `numa_matrix`
+    /// and the machine carries one discovered from `/sys` SLIT
+    /// distances (`--machine detect`), the detected matrix prices
+    /// remote access. An explicit config matrix always wins.
+    pub fn distance_model_for(&self, topo: &Topology) -> DistanceModel {
+        let mut d = self.distance_model();
+        if d.numa_matrix.is_none() {
+            if let Some(m) = topo.numa_matrix() {
+                if m.len() == topo.n_numa() {
+                    d.numa_matrix = Some(m.clone());
+                }
+            }
+        }
+        d
+    }
 }
 
 /// Which scheduler to run.
@@ -320,6 +337,12 @@ fn machine_from(doc: &Doc) -> Result<MachineConfig> {
             m.levels.push((kind, arity));
         }
     }
+    if get_bool(doc, "machine.detect") == Some(true) {
+        // Discover the real machine from `/sys` instead of a canned
+        // shape; overrides any preset/levels given alongside.
+        m.preset = Some("detect".into());
+        m.levels.clear();
+    }
     if let Some(f) = get_f64(doc, "machine.numa_factor") {
         m.numa_factor = f;
     }
@@ -548,6 +571,44 @@ mod tests {
         assert_eq!(SchedKind::parse("moldable"), Some(SchedKind::MoldableGang));
         assert_eq!(SchedKind::parse("job-fair"), Some(SchedKind::JobFair));
         assert_eq!(SchedKind::parse("jobs"), Some(SchedKind::JobFair));
+    }
+
+    #[test]
+    fn detect_key_selects_the_detect_preset() {
+        let cfg = ExperimentConfig::from_toml("[machine]\ndetect = true").unwrap();
+        assert_eq!(cfg.machine.preset.as_deref(), Some("detect"));
+        // Detection never fails: it falls back to smp-N when `/sys` is
+        // unreadable, so the topology always builds.
+        let t = cfg.machine.build_topology().unwrap();
+        assert!(t.n_cpus() >= 1);
+        // `detect = true` wins over a preset given alongside.
+        let cfg = ExperimentConfig::from_toml("[machine]\npreset = \"deep\"\ndetect = true")
+            .unwrap();
+        assert_eq!(cfg.machine.preset.as_deref(), Some("detect"));
+        // `detect = false` is a no-op.
+        let cfg = ExperimentConfig::from_toml("[machine]\npreset = \"deep\"\ndetect = false")
+            .unwrap();
+        assert_eq!(cfg.machine.preset.as_deref(), Some("deep"));
+    }
+
+    #[test]
+    fn detected_matrix_feeds_the_distance_model() {
+        let m = MachineConfig::default();
+        let mut topo = Topology::numa(2, 2);
+        topo.set_numa_matrix(vec![vec![1.0, 2.5], vec![2.5, 1.0]]);
+        // No config matrix → the topology's detected one is used.
+        let d = m.distance_model_for(&topo);
+        assert_eq!(d.numa_matrix.as_ref().unwrap()[0][1], 2.5);
+        // An explicit config matrix always wins over the detected one.
+        let explicit = MachineConfig {
+            numa_matrix: Some(vec![vec![1.0, 9.0], vec![9.0, 1.0]]),
+            ..MachineConfig::default()
+        };
+        let d = explicit.distance_model_for(&topo);
+        assert_eq!(d.numa_matrix.as_ref().unwrap()[0][1], 9.0);
+        // A plain preset machine carries no matrix: scalar fallback.
+        let d = m.distance_model_for(&Topology::numa(2, 2));
+        assert!(d.numa_matrix.is_none());
     }
 
     #[test]

@@ -31,6 +31,15 @@
 //! same [`crate::apps::StructureMode`] as their simulator builders, so
 //! `--engine native` reproduces the paper's structured-vs-flat
 //! comparison.
+//!
+//! **Real-machine path** (`--machine detect`): when the topology was
+//! discovered from `/sys` ([`crate::topology::Topology::detect`]), the
+//! paper's "binds one kernel thread on each processor" becomes literal
+//! — each worker pins itself to its vCPU's OS CPU via
+//! `sched_setaffinity`, with a graceful per-worker fallback
+//! (`metrics.pin_failures`) where affinity is denied, and a loud
+//! one-time warning when a binding-*required* policy (`bound`) runs
+//! without it. See the pinning protocol in `worker.rs`.
 
 pub mod fiber;
 mod worker;

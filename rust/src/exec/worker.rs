@@ -31,6 +31,21 @@
 //! counted in `metrics.exec_backoffs` so tests can bound it. All
 //! termination paths bump `seq` and notify under the park lock, so the
 //! remaining timeouts are pure safety backstops, not wake mechanisms.
+//!
+//! **Pinning protocol**: when the topology carries a vCPU → OS CPU map
+//! ([`crate::topology::Topology::os_cpus`], i.e. `--machine detect`),
+//! each worker pins itself to its vCPU's OS CPU with
+//! `sched_setaffinity` before its first pick, so "vCPU c" is a real
+//! hardware placement and the memory-locality numbers describe
+//! silicon. The fallback is *per worker* and graceful: a denied
+//! affinity call (cgroup-restricted CI, seccomp) bumps
+//! `metrics.pin_failures` and leaves that worker loose — semantics are
+//! identical, only the placement guarantee is lost. Preset topologies
+//! have no map and skip pinning entirely. If the scheduler *requires*
+//! binding ([`Scheduler::needs_binding`], the `bound` policy), running
+//! without affinity additionally emits a one-time warning on stderr
+//! and counts `metrics.bound_unpinned` per worker, instead of silently
+//! degrading bound threads to loose ones.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -102,6 +117,9 @@ struct Inner {
     /// Idle workers park here; `ops::enqueue` notifies via the system's
     /// enqueue hook, so they wake on work arrival instead of timing out.
     park: Arc<Park>,
+    /// Latch for the one-time bound-without-affinity warning (see the
+    /// pinning protocol in the module docs).
+    pin_warned: AtomicBool,
 }
 
 /// API handed to green-thread bodies (thin facade over fiber yields).
@@ -202,6 +220,7 @@ impl Executor {
                 live: AtomicUsize::new(0),
                 stop: AtomicBool::new(false),
                 park,
+                pin_warned: AtomicBool::new(false),
             }),
             threads: 0,
         }
@@ -337,12 +356,50 @@ impl Drop for Submitter {
     }
 }
 
+/// Pin this worker OS thread to its vCPU's detected OS CPU, per the
+/// pinning protocol in the module docs. Best-effort by design: every
+/// outcome is counted, none aborts the run.
+fn pin_worker(inner: &Inner, cpu: CpuId) {
+    match inner.sys.topo.os_cpu(cpu) {
+        Some(os) if crate::util::os::pin_to_os_cpu(os) => {
+            crate::metrics::Metrics::inc(&inner.sys.metrics.workers_pinned);
+        }
+        Some(_) => {
+            crate::metrics::Metrics::inc(&inner.sys.metrics.pin_failures);
+            warn_unbound(inner, cpu, "sched_setaffinity denied");
+        }
+        // Preset topologies: nothing to pin to. Only a policy whose
+        // contract needs real binding makes that worth reporting.
+        None => warn_unbound(inner, cpu, "no detected OS-CPU map (preset machine)"),
+    }
+}
+
+/// One-time loud warning (plus a per-worker metric) when a
+/// binding-required policy runs without OS-level affinity.
+fn warn_unbound(inner: &Inner, cpu: CpuId, why: &str) {
+    if !inner.sched.needs_binding() {
+        return;
+    }
+    crate::metrics::Metrics::inc(&inner.sys.metrics.bound_unpinned);
+    if !inner.pin_warned.swap(true, Ordering::SeqCst) {
+        eprintln!(
+            "warning: policy `{}` requires thread binding, but worker vcpu{} \
+             runs unpinned ({why}); bindings are scheduler-level only — use \
+             --machine detect on hardware that allows sched_setaffinity for \
+             real binding",
+            inner.sched.name(),
+            cpu.0
+        );
+    }
+}
+
 fn worker_loop(inner: Arc<Inner>, cpu: CpuId) {
     // This OS thread now acts as `cpu`: fibers resumed here attribute
     // their memory touches to it (see GreenApi::touch_region), and the
     // runqueue routes the worker's own same-priority pushes through the
     // leaf's lock-free fast lane (see crate::rq::owner).
     crate::rq::owner::set_current_cpu(Some(cpu));
+    pin_worker(&inner, cpu);
     // Current backoff window for queued-but-unpickable work; grows
     // exponentially across consecutive refusals, resets on a pick.
     let mut backoff = BACKOFF_MIN;
@@ -694,6 +751,41 @@ mod tests {
         assert_eq!(done.load(Ordering::SeqCst), 50);
         // Pre-registered count is zero; the streamed fibers all ran.
         assert_eq!(rep.threads, 0);
+    }
+
+    #[test]
+    fn workers_pin_or_fall_back_when_an_os_map_exists() {
+        // Both vCPUs map to OS CPU 0 (online on every machine): each
+        // worker must report exactly one of pinned / pin-failed, even
+        // where the sandbox denies affinity calls.
+        let mut topo = Topology::smp(2);
+        topo.set_os_cpus(vec![0, 0]);
+        let sys = Arc::new(System::new(Arc::new(topo)));
+        let sched = Arc::new(BubbleScheduler::new(BubbleConfig::default()));
+        let mut ex = Executor::new(sys.clone(), sched);
+        ex.spawn("t", |_| {});
+        ex.run();
+        let pinned = sys.metrics.workers_pinned.load(Ordering::SeqCst);
+        let failed = sys.metrics.pin_failures.load(Ordering::SeqCst);
+        assert_eq!(pinned + failed, 2, "every worker is pinned-or-fallback");
+        // Bubble scheduling does not *require* binding: no bound alarm.
+        assert_eq!(sys.metrics.bound_unpinned.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn bound_without_affinity_counts_unpinned_workers() {
+        // A preset machine has no OS-CPU map, so bound's binding is
+        // scheduler-level only — the executor must say so per worker
+        // instead of silently degrading.
+        let sys = Arc::new(System::new(Arc::new(Topology::smp(2))));
+        let sched = Arc::new(crate::sched::baselines::BoundScheduler::new());
+        let mut ex = Executor::new(sys.clone(), sched);
+        for i in 0..2 {
+            ex.spawn(format!("t{i}"), |_| {});
+        }
+        ex.run();
+        assert_eq!(sys.metrics.bound_unpinned.load(Ordering::SeqCst), 2);
+        assert_eq!(sys.metrics.workers_pinned.load(Ordering::SeqCst), 0);
     }
 
     #[test]

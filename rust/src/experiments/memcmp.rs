@@ -52,6 +52,12 @@ pub struct MemRow {
     /// Timeslice preemptions delivered during the run (proof that
     /// `Scheduler::tick` is live on the engine that produced the row).
     pub preemptions: u64,
+    /// Workers that pinned themselves to a detected OS CPU — non-zero
+    /// only on the native engine with `--machine detect`.
+    pub workers_pinned: u64,
+    /// Workers whose `sched_setaffinity` was denied and who fell back
+    /// to running unpinned (CI sandboxes commonly deny affinity).
+    pub pin_failures: u64,
 }
 
 /// The comparison result.
@@ -110,7 +116,7 @@ impl MemCmp {
             .iter()
             .map(|r| {
                 format!(
-                    "{{\"engine\":\"{engine}\",\"policy\":\"{}\",\"structure\":\"{}\",\"makespan\":{},\"local_ratio\":{:.4},\"steals\":{},\"mem_migrations\":{},\"migrated_bytes\":{},\"preemptions\":{}}}",
+                    "{{\"engine\":\"{engine}\",\"policy\":\"{}\",\"structure\":\"{}\",\"makespan\":{},\"local_ratio\":{:.4},\"steals\":{},\"mem_migrations\":{},\"migrated_bytes\":{},\"preemptions\":{},\"workers_pinned\":{},\"pin_failures\":{}}}",
                     r.sched,
                     r.structure,
                     r.makespan,
@@ -118,7 +124,9 @@ impl MemCmp {
                     r.steals,
                     r.mem_migrations,
                     r.migrated_bytes,
-                    r.preemptions
+                    r.preemptions,
+                    r.workers_pinned,
+                    r.pin_failures
                 )
             })
             .collect()
@@ -181,6 +189,8 @@ pub fn run(
             mem_migrations: m.mem_migrations.load(Ordering::Relaxed),
             migrated_bytes: m.migrated_bytes.load(Ordering::Relaxed),
             preemptions: m.preemptions.load(Ordering::Relaxed),
+            workers_pinned: m.workers_pinned.load(Ordering::Relaxed),
+            pin_failures: m.pin_failures.load(Ordering::Relaxed),
         });
     }
     MemCmp { title: format!("local vs remote accesses (conduction, {})", topo.name()), rows }
@@ -199,13 +209,16 @@ pub fn run(
 /// structured-vs-flat comparison on real OS workers. `trace_out`
 /// writes the first (policy, structure) leg's event stream as Chrome
 /// trace-event JSON — with wall-clock timestamps, since the native
-/// engine anchors `sys.now()` to a monotonic timer.
+/// engine anchors `sys.now()` to a monotonic timer. `arena` backs each
+/// region with a real `mmap` arena ([`crate::mem::ArenaSet`]) so every
+/// `touch_region` also walks real bytes (`--arena`).
 pub fn run_native(
     topo: &Topology,
     p: &HeatParams,
     kinds: &[SchedKind],
     touches: usize,
     policy: AllocPolicy,
+    arena: bool,
     modes: &[StructureMode],
     trace_out: Option<&str>,
 ) -> MemCmp {
@@ -214,6 +227,9 @@ pub fn run_native(
     for &kind in kinds {
         for &mode in modes {
             let sys = Arc::new(System::new(Arc::new(topo.clone())));
+            if arena {
+                sys.mem.enable_arenas();
+            }
             let sched = make_default(kind);
             let mut ex = Executor::new(sys.clone(), sched);
             let traced = traced_legs == 0 && trace_out.is_some();
@@ -242,6 +258,8 @@ pub fn run_native(
                 mem_migrations: m.mem_migrations.load(Ordering::Relaxed),
                 migrated_bytes: m.migrated_bytes.load(Ordering::Relaxed),
                 preemptions: m.preemptions.load(Ordering::Relaxed),
+                workers_pinned: m.workers_pinned.load(Ordering::Relaxed),
+                pin_failures: m.pin_failures.load(Ordering::Relaxed),
             });
         }
     }
@@ -327,6 +345,7 @@ mod tests {
             &[SchedKind::Memaware, SchedKind::Afs],
             2,
             AllocPolicy::FirstTouch,
+            true, // arena-backed: every touch also walks real mmap'd bytes
             &[StructureMode::Simple],
             None,
         );
@@ -349,7 +368,7 @@ mod tests {
         let p = HeatParams { threads: 6, cycles: 3, work: 0, mem_fraction: 0.0 };
         let kinds = [SchedKind::Bubble, SchedKind::Ss];
         let modes = [StructureMode::Simple, StructureMode::Bubbles];
-        let c = run_native(&topo, &p, &kinds, 2, AllocPolicy::FirstTouch, &modes, None);
+        let c = run_native(&topo, &p, &kinds, 2, AllocPolicy::FirstTouch, false, &modes, None);
         assert_eq!(c.rows.len(), kinds.len() * modes.len());
         for kind in &kinds {
             for &mode in &modes {

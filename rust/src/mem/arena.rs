@@ -1,0 +1,172 @@
+//! Optional mmap-backed arenas behind the region registry.
+//!
+//! By default `mem/` regions are byte *counters*: touches move numbers,
+//! not cache lines, which is exactly right for the simulator and cheap
+//! for native smoke runs. On real hardware that means the locality
+//! numbers measure the model, not the machine. This module closes the
+//! loop: when arenas are enabled (`--arena` on the native memcmp leg),
+//! every allocated region is backed by an anonymous `mmap` mapping,
+//! [`ArenaSet::touch`] walks a bounded window of its pages with real
+//! volatile writes, and the region's home-node preference is forwarded
+//! to the kernel via `mbind` (best-effort — see
+//! [`crate::util::os::bind_to_node`]).
+//!
+//! Failure is always soft: a denied map or bind leaves the region in
+//! counter-only mode and the run proceeds unchanged. Mapping sizes are
+//! clamped to [`MAX_MAP_BYTES`] so modelled multi-GB regions don't
+//! reserve real multi-GB mappings in CI.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::RwLock;
+
+use super::RegionId;
+use crate::util::os::{bind_to_node, MapRegion};
+
+/// Page stride for touch walks (the kernel page size on every platform
+/// the native engine targets; a wrong guess only changes the stride).
+const PAGE: usize = 4096;
+/// Hard cap on bytes actually mapped per region.
+const MAX_MAP_BYTES: usize = 16 << 20;
+/// Pages written per [`ArenaSet::touch`] call: enough to leave the
+/// core's L1 between touches, small enough to keep smoke runs fast.
+const PAGES_PER_TOUCH: usize = 8;
+
+/// One region's backing mapping plus a rotating touch cursor.
+#[derive(Debug)]
+struct Arena {
+    map: MapRegion,
+    cursor: AtomicUsize,
+}
+
+impl Arena {
+    fn new(bytes: u64) -> Option<Arena> {
+        let len = (bytes as usize).clamp(PAGE, MAX_MAP_BYTES);
+        let len = (len + PAGE - 1) & !(PAGE - 1);
+        MapRegion::map(len).map(|map| Arena { map, cursor: AtomicUsize::new(0) })
+    }
+
+    /// Write one byte per page across the next window (wrapping), so
+    /// repeated touches eventually fault in and re-visit every page.
+    fn touch_next(&self) {
+        let pages_total = self.map.len() / PAGE;
+        if pages_total == 0 {
+            return;
+        }
+        let start = self.cursor.fetch_add(PAGES_PER_TOUCH, Ordering::Relaxed);
+        let ptr = self.map.as_ptr();
+        for i in 0..PAGES_PER_TOUCH.min(pages_total) {
+            let page = (start + i) % pages_total;
+            // SAFETY: `page * PAGE` is in bounds of the live mapping;
+            // volatile read-modify-write tolerates concurrent touchers
+            // (the value is never interpreted).
+            unsafe {
+                let p = ptr.add(page * PAGE);
+                p.write_volatile(p.read_volatile().wrapping_add(1));
+            }
+        }
+    }
+}
+
+/// RegionId-indexed arena table. Disabled (and free) unless explicitly
+/// switched on; every operation is a no-op while disabled.
+#[derive(Debug, Default)]
+pub struct ArenaSet {
+    enabled: AtomicBool,
+    arenas: RwLock<Vec<Option<Arena>>>,
+    bytes_mapped: AtomicU64,
+    touches: AtomicU64,
+}
+
+impl ArenaSet {
+    pub fn new() -> ArenaSet {
+        ArenaSet::default()
+    }
+
+    /// Turn real backing on/off for *subsequent* allocations.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Release);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Acquire)
+    }
+
+    /// Back region `r` (modelled size `bytes`) with an anonymous
+    /// mapping, preferring NUMA node `home` when given. Returns whether
+    /// a mapping now backs the region; `false` (disabled, or mmap
+    /// denied) means the region stays counter-only.
+    pub fn back(&self, r: RegionId, bytes: u64, home: Option<usize>) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        let Some(arena) = Arena::new(bytes) else { return false };
+        if let Some(node) = home {
+            let _ = bind_to_node(arena.map.as_ptr(), arena.map.len(), node);
+        }
+        self.bytes_mapped.fetch_add(arena.map.len() as u64, Ordering::Relaxed);
+        let mut v = self.arenas.write().unwrap();
+        if v.len() <= r {
+            v.resize_with(r + 1, || None);
+        }
+        v[r] = Some(arena);
+        true
+    }
+
+    /// Walk real bytes of region `r`'s backing window, if any.
+    pub fn touch(&self, r: RegionId) {
+        if !self.enabled() {
+            return;
+        }
+        let v = self.arenas.read().unwrap();
+        if let Some(Some(a)) = v.get(r) {
+            a.touch_next();
+            self.touches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// (bytes actually mapped, touch walks performed).
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.bytes_mapped.load(Ordering::Relaxed),
+            self.touches.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_set_is_inert() {
+        let set = ArenaSet::new();
+        assert!(!set.back(0, 4096, None));
+        set.touch(0);
+        assert_eq!(set.stats(), (0, 0));
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn enabled_set_maps_and_walks_real_pages() {
+        let set = ArenaSet::new();
+        set.set_enabled(true);
+        assert!(set.back(3, 8 * 4096, Some(0)), "anonymous mmap should succeed");
+        set.touch(3);
+        set.touch(3);
+        let (bytes, touches) = set.stats();
+        assert_eq!(bytes, 8 * 4096);
+        assert_eq!(touches, 2);
+        // Unbacked ids stay no-ops even while enabled.
+        set.touch(999);
+        assert_eq!(set.stats().1, 2);
+    }
+
+    #[test]
+    fn mapping_size_is_clamped() {
+        let set = ArenaSet::new();
+        set.set_enabled(true);
+        if set.back(0, u64::MAX, None) {
+            assert_eq!(set.stats().0 as usize, MAX_MAP_BYTES);
+        }
+    }
+}

@@ -53,9 +53,11 @@
 //! attached, homed regions, and every bubble's footprint equals the sum
 //! of its subtree's.
 
+pub mod arena;
 pub mod footprint;
 pub mod registry;
 
+pub use arena::ArenaSet;
 pub use footprint::Footprint;
 pub use registry::{
     AllocPolicy, HomeChange, RegionId, RegionInfo, RegionRegistry, Stripe, Touch,
@@ -78,6 +80,11 @@ pub struct MemState {
     /// could interleave their deltas and double-charge bytes, breaking
     /// the conservation invariant for good.
     sync: Mutex<()>,
+    /// Optional real `mmap` backing per region (native engine,
+    /// `--arena`): touches additionally walk real pages so first-touch /
+    /// next-touch measure actual cross-node behaviour. Disabled (and
+    /// free) by default — see [`arena::ArenaSet`].
+    pub arenas: ArenaSet,
 }
 
 impl MemState {
@@ -88,18 +95,34 @@ impl MemState {
             regions: RegionRegistry::new(n),
             footprint: Footprint::new(n),
             sync: Mutex::new(()),
+            arenas: ArenaSet::new(),
         }
+    }
+
+    /// Back *subsequent* allocations with real `mmap` arenas (see
+    /// [`arena::ArenaSet`]). Off by default; failure to map or bind any
+    /// individual region degrades that region to counter-only mode.
+    pub fn enable_arenas(&self) {
+        self.arenas.set_enabled(true);
     }
 
     /// Allocate a region of `size` bytes under `policy`.
     pub fn alloc(&self, size: u64, policy: AllocPolicy) -> RegionId {
-        self.regions.alloc(size, policy)
+        let home = if let AllocPolicy::Fixed(n) = policy { Some(n) } else { None };
+        let r = self.regions.alloc(size, policy);
+        self.arenas.back(r, size, home);
+        r
     }
 
     /// Allocate a striped region of `size` bytes spread over `nodes`
     /// (see [`RegionRegistry::alloc_striped`]).
     pub fn alloc_striped(&self, size: u64, nodes: &[usize]) -> RegionId {
-        self.regions.alloc_striped(size, nodes)
+        let r = self.regions.alloc_striped(size, nodes);
+        // One mapping per region; the kernel preference follows the
+        // first declared stripe node (per-stripe binding is a ROADMAP
+        // follow-on).
+        self.arenas.back(r, size, nodes.first().copied());
+        r
     }
 
     /// Attach a region to `task`: its bytes count towards the task's
@@ -132,8 +155,12 @@ impl MemState {
     /// serialise and the `sync` mutex — the old per-touch bottleneck
     /// for native workers — is skipped entirely. Placement-changing
     /// touches still queue on it, preserving conservation.
+    ///
+    /// With arenas enabled the touch additionally walks a window of the
+    /// region's real backing pages (both paths — see [`arena::ArenaSet`]).
     pub fn touch(&self, tasks: &TaskTable, topo: &Topology, r: RegionId, cpu: CpuId) -> Touch {
         if let Some(touch) = self.regions.touch_fast(r, cpu) {
+            self.arenas.touch(r);
             return touch;
         }
         let _sync = self.sync.lock().unwrap();
@@ -148,6 +175,7 @@ impl MemState {
             }
             _ => {}
         }
+        self.arenas.touch(r);
         touch
     }
 
@@ -368,6 +396,26 @@ mod tests {
         assert_eq!(touch.last_toucher, Some(CpuId(0)));
         assert_eq!(mem.pressure_epoch(), epoch, "no placement change, no epoch move");
         assert_eq!(mem.regions.info(r).touches, 2);
+        assert!(mem.conserved(&tasks));
+        assert!(mem.hierarchy_consistent(&tasks));
+    }
+
+    #[test]
+    fn arena_backed_touches_walk_real_bytes_and_conserve() {
+        let topo = numa22();
+        let mem = MemState::new(&topo);
+        mem.enable_arenas();
+        let tasks = TaskTable::new();
+        let t = tasks.new_thread("t", PRIO_THREAD);
+        let r = mem.alloc(8192, AllocPolicy::Fixed(0));
+        mem.attach(&tasks, t, r);
+        mem.touch(&tasks, &topo, r, CpuId(0)); // slow path (first resolve)
+        mem.touch(&tasks, &topo, r, CpuId(1)); // fast path
+        let (bytes, touches) = mem.arenas.stats();
+        // On platforms without mmap the region degrades to counter-only.
+        if bytes > 0 {
+            assert_eq!(touches, 2, "both touch paths must walk the arena");
+        }
         assert!(mem.conserved(&tasks));
         assert!(mem.hierarchy_consistent(&tasks));
     }

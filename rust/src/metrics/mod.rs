@@ -83,6 +83,17 @@ pub struct Metrics {
     /// busy-polling regression shows up as a blow-up in this counter
     /// (tests bound it).
     pub exec_backoffs: AtomicU64,
+    /// Native executor: workers successfully pinned to their vCPU's
+    /// detected OS CPU (`--machine detect` + `sched_setaffinity`).
+    pub workers_pinned: AtomicU64,
+    /// Native executor: workers whose affinity call was denied (e.g.
+    /// cgroup-restricted CI) — they run unpinned, semantics unchanged.
+    pub pin_failures: AtomicU64,
+    /// Native executor: workers that ran a binding-*required* policy
+    /// (see [`crate::sched::Scheduler::needs_binding`], the `bound`
+    /// row) without OS-level affinity. Nonzero means the bound numbers
+    /// describe scheduler-level binding only, not silicon.
+    pub bound_unpinned: AtomicU64,
     /// Host-ns latency of `Scheduler::pick` calls (recorded only while
     /// tracing is enabled — the timer itself costs two clock reads).
     pub pick_latency: LatencyHist,
@@ -170,6 +181,9 @@ impl Metrics {
         t.row(&["search_retries".into(), g(&self.search_retries)]);
         t.row(&["pressure_redirects".into(), g(&self.pressure_redirects)]);
         t.row(&["exec_backoffs".into(), g(&self.exec_backoffs)]);
+        t.row(&["workers_pinned".into(), g(&self.workers_pinned)]);
+        t.row(&["pin_failures".into(), g(&self.pin_failures)]);
+        t.row(&["bound_unpinned".into(), g(&self.bound_unpinned)]);
         t.row(&["pick_latency_samples".into(), self.pick_latency.total().to_string()]);
         t.row(&["steal_latency_samples".into(), self.steal_latency.total().to_string()]);
         t.render()

@@ -15,7 +15,10 @@
 //! owner's same-priority (`FAST_LANE_PRIO`) pushes go to the lane and
 //! both local picks and remote steals take from its CAS end, while
 //! priority outliers, remote pushes, spills from a full ring, and
-//! `remove` use the buckets. On a priority *tie* between the tiers the
+//! `remove` use the buckets. A full ring spills *in bulk*: the whole
+//! lane plus the overflowing task move under one lock acquisition
+//! (see [`RunList::push`]), emptying the lane so the next owner push
+//! is lock-free again. On a priority *tie* between the tiers the
 //! buckets win, so remote-pushed work can never starve behind an
 //! owner's push/pop cycle.
 
@@ -170,6 +173,10 @@ struct FastLane {
     deque: StealDeque,
     pushes: AtomicU64,
     pops: AtomicU64,
+    /// Spill batches taken (one bucket-lock round-trip each).
+    spills: AtomicU64,
+    /// Tasks moved to the buckets by those batches.
+    spilled: AtomicU64,
 }
 
 /// One task list (one topology component's runqueue).
@@ -210,6 +217,8 @@ impl RunList {
             deque: StealDeque::new(FAST_LANE_CAP),
             pushes: AtomicU64::new(0),
             pops: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            spilled: AtomicU64::new(0),
         });
         l
     }
@@ -233,21 +242,61 @@ impl RunList {
         }
     }
 
+    /// (spill batches, tasks spilled) from a full lane into the
+    /// buckets. One batch is one bucket-lock round-trip moving the
+    /// whole lane plus the overflowing task — tests pin the ratio.
+    pub fn fast_lane_spills(&self) -> (u64, u64) {
+        match &self.fast {
+            Some(f) => (f.spills.load(Ordering::Relaxed), f.spilled.load(Ordering::Relaxed)),
+            None => (0, 0),
+        }
+    }
+
     /// Enqueue (FIFO within the priority class). An owner-context push
     /// of the fast-lane class goes to the lock-free lane; everything
     /// else — remote pushes, priority outliers, spills from a full
     /// ring — takes the buckets.
     pub fn push(&self, task: TaskId, prio: Prio) {
         if let Some(f) = &self.fast {
-            if prio == FAST_LANE_PRIO
-                && owner::current_cpu() == Some(f.owner)
-                && f.deque.push_bottom(task).is_ok()
-            {
-                f.pushes.fetch_add(1, Ordering::Relaxed);
+            if prio == FAST_LANE_PRIO && owner::current_cpu() == Some(f.owner) {
+                match f.deque.push_bottom(task) {
+                    Ok(()) => {
+                        f.pushes.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Ring full: spill the whole lane plus the
+                    // overflowing task in one batch (previously one
+                    // lock round-trip per overflowed push).
+                    Err(task) => self.spill_lane(f, task),
+                }
                 return;
             }
         }
         self.push_bucket(task, prio);
+    }
+
+    /// Lane-overflow slow path: drain the ring through its steal end
+    /// (oldest first), append the task that did not fit, and move the
+    /// whole batch into the buckets under a *single* lock acquisition.
+    /// Emptying the lane makes the very next owner push lock-free
+    /// again, and batch order preserves class FIFO: the buckets win
+    /// priority ties, and every batched task is older than anything
+    /// pushed to the lane afterwards. Concurrent thieves may shrink the
+    /// batch mid-drain — they took those tasks, nothing is lost.
+    fn spill_lane(&self, f: &FastLane, task: TaskId) {
+        let mut batch = Vec::with_capacity(FAST_LANE_CAP + 1);
+        f.deque.drain_into(&mut batch);
+        batch.push(task);
+        let n = batch.len() as u64;
+        {
+            let mut b = self.inner.lock().unwrap();
+            for t in batch {
+                b.push(t, FAST_LANE_PRIO);
+            }
+            self.max_prio.store(b.max_prio(), Ordering::Release);
+            self.count.store(b.len(), Ordering::Release);
+        }
+        f.spills.fetch_add(1, Ordering::Relaxed);
+        f.spilled.fetch_add(n, Ordering::Relaxed);
     }
 
     fn push_bucket(&self, task: TaskId, prio: Prio) {
@@ -557,11 +606,38 @@ mod tests {
             }
         });
         assert_eq!(l.len(), n);
-        assert_eq!(l.fast_lane_ops().0 as usize, FAST_LANE_CAP);
+        // Push CAP+1 overflows and batch-spills the whole lane; the
+        // trailing 9 pushes re-enter the (now empty) lane.
+        assert_eq!(l.fast_lane_ops().0 as usize, FAST_LANE_CAP + 9);
         let mut got: Vec<usize> =
             std::iter::from_fn(|| l.pop_max().map(|(t, _)| t.0)).collect();
         got.sort_unstable();
         assert_eq!(got, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn spill_batch_takes_one_lock_round_trip_and_keeps_fifo() {
+        let l = RunList::with_fast_lane(LevelId(0), CpuId(0));
+        let n = FAST_LANE_CAP + 1;
+        as_cpu(CpuId(0), || {
+            for i in 0..n {
+                l.push(TaskId(i), FAST_LANE_PRIO);
+            }
+        });
+        // The overflowing push drained the whole lane plus itself into
+        // the buckets in ONE batch — one lock round-trip for CAP + 1
+        // tasks, not one per task.
+        assert_eq!(l.fast_lane_spills(), (1, (FAST_LANE_CAP + 1) as u64));
+        // The lane is empty again: the very next owner push is
+        // lock-free and triggers no further spill.
+        as_cpu(CpuId(0), || l.push(TaskId(n), FAST_LANE_PRIO));
+        assert_eq!(l.fast_lane_spills().0, 1, "no second spill");
+        assert_eq!(l.fast_lane_ops().0 as usize, FAST_LANE_CAP + 1);
+        // Class FIFO survives the spill: the batched (older) tasks in
+        // the buckets win the tie against the fresh lane push.
+        let order: Vec<usize> =
+            std::iter::from_fn(|| l.pop_max().map(|(t, _)| t.0)).collect();
+        assert_eq!(order, (0..=n).collect::<Vec<_>>());
     }
 
     #[test]

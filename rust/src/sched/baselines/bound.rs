@@ -61,6 +61,13 @@ impl Scheduler for BoundScheduler {
             ops::enqueue(sys, t, sys.topo.leaf_of(c));
         });
     }
+
+    /// The whole point of this policy is the binding: without OS-level
+    /// affinity it only binds threads to *virtual* CPUs, so the native
+    /// executor must warn rather than silently degrade.
+    fn needs_binding(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]
@@ -76,6 +83,14 @@ mod tests {
         testsupport::drains_all_work(&BoundScheduler::new(), Topology::numa(2, 2), 40);
         testsupport::flattens_bubbles(&BoundScheduler::new(), Topology::smp(2));
         testsupport::block_wake_roundtrip(&BoundScheduler::new(), Topology::smp(2));
+    }
+
+    #[test]
+    fn bound_declares_its_binding_requirement() {
+        use crate::sched::baselines::SsScheduler;
+        assert!(BoundScheduler::new().needs_binding());
+        // Opportunist baselines don't care where workers really run.
+        assert!(!SsScheduler::new().needs_binding());
     }
 
     #[test]

@@ -66,6 +66,18 @@ pub trait Scheduler: Send + Sync {
     fn tick(&self, _sys: &System, _cpu: CpuId, _task: TaskId, _elapsed: u64) -> bool {
         false
     }
+
+    /// Whether this policy's *contract* requires worker↔CPU binding to
+    /// be real (the Table-2 `bound` row: one thread nailed to each
+    /// processor). The native executor pins workers to detected OS CPUs
+    /// when the topology carries a map (`--machine detect`); when such a
+    /// policy runs *without* OS-level affinity — preset machine, or
+    /// `sched_setaffinity` denied — the executor emits a one-time
+    /// warning and counts `bound_unpinned` instead of silently
+    /// degrading to loose threads.
+    fn needs_binding(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,340 @@
+//! Runtime topology discovery from `/sys/devices/system/{cpu,node}`.
+//!
+//! The paper's portability argument (and the later BubbleSched/hwloc
+//! line of work) rests on discovering the hierarchy of the *running*
+//! machine instead of hard-coding it. This module parses the Linux
+//! sysfs topology files into the existing [`Topology`] model:
+//!
+//! * `cpu/online` — the cpulist of online CPUs ("0-3,5" style). Offline
+//!   CPUs are simply absent from the resulting machine.
+//! * `cpu/cpu<N>/topology/{package_id,core_id}` — physical package and
+//!   core of each CPU; CPUs sharing a (package, core) pair become SMT
+//!   siblings under one [`LevelKind::Core`] component.
+//! * `node/node<N>/cpulist` — NUMA node membership. Memory-only nodes
+//!   (no online CPUs) are skipped; non-contiguous node ids are fine.
+//! * `node/node<N>/distance` — ACPI SLIT distances, normalised by the
+//!   diagonal (local access = 1.0) into [`Topology::numa_matrix`].
+//!
+//! Detected vCPUs are renumbered contiguously in tree order; the
+//! original OS CPU ids are kept in [`Topology::os_cpus`] so the native
+//! executor can pin each worker with `sched_setaffinity`.
+//!
+//! **Fallback:** when `/sys` is missing or unreadable (non-Linux hosts,
+//! sandboxes, stripped containers), [`Topology::detect`] degrades to a
+//! flat `smp-N` machine with `N = available_parallelism()` and an
+//! identity OS-CPU map — the run proceeds, just without hierarchy.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::{LevelId, LevelKind, TopoNode, Topology};
+use crate::error::{Error, Result};
+
+impl Topology {
+    /// Discover the running machine. Never fails: a missing or
+    /// malformed `/sys` tree falls back to [`Topology::detect_fallback`].
+    pub fn detect() -> Topology {
+        Topology::detect_from_sysfs(Path::new("/"))
+            .unwrap_or_else(|_| Topology::detect_fallback())
+    }
+
+    /// The documented fallback when `/sys` is unavailable: a flat
+    /// `smp-N` machine sized by `available_parallelism()`, with an
+    /// identity vCPU → OS CPU map (best-effort pinning still applies).
+    pub fn detect_fallback() -> Topology {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut t = Topology::smp(n);
+        t.set_os_cpus((0..n).collect());
+        t
+    }
+
+    /// Parse a sysfs tree rooted at `root` (so golden tests can feed
+    /// canned snapshots: the real machine uses `root = "/"`, i.e. the
+    /// files live under `<root>/sys/devices/system/...`).
+    pub fn detect_from_sysfs(root: &Path) -> Result<Topology> {
+        detect_from(root)
+    }
+}
+
+/// One online CPU as described by sysfs.
+struct OsCpu {
+    os: usize,
+    package: usize,
+    core: usize,
+}
+
+fn detect_from(root: &Path) -> Result<Topology> {
+    let cpu_dir = root.join("sys/devices/system/cpu");
+    let online = std::fs::read_to_string(cpu_dir.join("online"))
+        .map_err(|e| Error::Topology(format!("cannot read cpu/online: {e}")))?;
+    let online = parse_cpulist(online.trim())?;
+    if online.is_empty() {
+        return Err(Error::Topology("cpu/online lists no CPUs".into()));
+    }
+
+    // Per-CPU physical identity. Missing topology files (very old
+    // kernels, incomplete snapshots) degrade to one core per CPU.
+    let cpus: Vec<OsCpu> = online
+        .iter()
+        .map(|&os| {
+            let t = cpu_dir.join(format!("cpu{os}/topology"));
+            OsCpu {
+                os,
+                package: read_id(&t.join("package_id")).unwrap_or(0),
+                core: read_id(&t.join("core_id")).unwrap_or(os),
+            }
+        })
+        .collect();
+
+    // NUMA nodes: sorted OS node ids that hold at least one online CPU.
+    // `all_node_ids` keeps memory-only nodes too — distance rows carry
+    // one column per *existing* node, so column selection needs them.
+    let node_dir = root.join("sys/devices/system/node");
+    let mut all_node_ids: Vec<usize> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(&node_dir) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if let Some(num) = name.strip_prefix("node") {
+                if let Ok(id) = num.parse::<usize>() {
+                    all_node_ids.push(id);
+                }
+            }
+        }
+    }
+    all_node_ids.sort_unstable();
+    let mut node_of: BTreeMap<usize, usize> = BTreeMap::new(); // os cpu -> os node id
+    let mut cpu_nodes: Vec<usize> = Vec::new(); // os node ids with online cpus, sorted
+    for &id in &all_node_ids {
+        let list = match std::fs::read_to_string(node_dir.join(format!("node{id}/cpulist"))) {
+            Ok(s) => parse_cpulist(s.trim())?,
+            Err(_) => continue,
+        };
+        let mut holds_cpu = false;
+        for os in list {
+            if online.contains(&os) {
+                node_of.insert(os, id);
+                holds_cpu = true;
+            }
+        }
+        if holds_cpu {
+            cpu_nodes.push(id);
+        }
+    }
+    // Build the NUMA level only when every online CPU is covered by a
+    // node cpulist; a partial map would misplace the stragglers.
+    let has_numa = !cpu_nodes.is_empty() && cpus.iter().all(|c| node_of.contains_key(&c.os));
+
+    // Group CPUs: node (tree order) -> (package, core) -> sorted CPUs.
+    let groups: Vec<(Option<usize>, Vec<Vec<OsCpu>>)> = if has_numa {
+        cpu_nodes
+            .iter()
+            .map(|&nid| {
+                let members: Vec<&OsCpu> =
+                    cpus.iter().filter(|c| node_of[&c.os] == nid).collect();
+                (Some(nid), group_cores(&members))
+            })
+            .collect()
+    } else {
+        vec![(None, group_cores(&cpus.iter().collect::<Vec<_>>()))]
+    };
+
+    let total = cpus.len();
+    let mut nodes: Vec<TopoNode> = vec![TopoNode {
+        kind: LevelKind::Machine,
+        parent: None,
+        children: Vec::new(),
+        depth: 0,
+        cpu_first: 0,
+        cpu_count: total,
+    }];
+    let mut os_map: Vec<usize> = Vec::with_capacity(total);
+    let mut next_cpu = 0usize;
+    for (nid, cores) in &groups {
+        let group_total: usize = cores.iter().map(|c| c.len()).sum();
+        let (core_parent, core_depth) = if nid.is_some() {
+            let i = nodes.len();
+            nodes.push(TopoNode {
+                kind: LevelKind::NumaNode,
+                parent: Some(LevelId(0)),
+                children: Vec::new(),
+                depth: 1,
+                cpu_first: next_cpu,
+                cpu_count: group_total,
+            });
+            nodes[0].children.push(LevelId(i));
+            (i, 2)
+        } else {
+            (0, 1)
+        };
+        for core_cpus in cores {
+            let ci = nodes.len();
+            nodes.push(TopoNode {
+                kind: LevelKind::Core,
+                parent: Some(LevelId(core_parent)),
+                children: Vec::new(),
+                depth: core_depth,
+                cpu_first: next_cpu,
+                cpu_count: core_cpus.len(),
+            });
+            nodes[core_parent].children.push(LevelId(ci));
+            if core_cpus.len() == 1 {
+                os_map.push(core_cpus[0].os);
+                next_cpu += 1;
+            } else {
+                // SMT: one logical-processor leaf per hardware thread.
+                for c in core_cpus {
+                    let si = nodes.len();
+                    nodes.push(TopoNode {
+                        kind: LevelKind::Smt,
+                        parent: Some(LevelId(ci)),
+                        children: Vec::new(),
+                        depth: core_depth + 1,
+                        cpu_first: next_cpu,
+                        cpu_count: 1,
+                    });
+                    nodes[ci].children.push(LevelId(si));
+                    os_map.push(c.os);
+                    next_cpu += 1;
+                }
+            }
+        }
+    }
+
+    let mut topo = Topology::from_parts("detect".into(), nodes)?;
+    topo.set_os_cpus(os_map);
+    if has_numa {
+        if let Some(m) = read_distances(&node_dir, &all_node_ids, &cpu_nodes) {
+            topo.set_numa_matrix(m);
+        }
+    }
+    Ok(topo)
+}
+
+/// Group a node's CPUs into physical cores by (package_id, core_id),
+/// cores ordered by that key, CPUs within a core by OS id.
+fn group_cores(members: &[&OsCpu]) -> Vec<Vec<OsCpu>> {
+    let mut by_core: BTreeMap<(usize, usize), Vec<OsCpu>> = BTreeMap::new();
+    for c in members {
+        by_core.entry((c.package, c.core)).or_default().push(OsCpu {
+            os: c.os,
+            package: c.package,
+            core: c.core,
+        });
+    }
+    by_core
+        .into_values()
+        .map(|mut v| {
+            v.sort_by_key(|c| c.os);
+            v
+        })
+        .collect()
+}
+
+/// Read and normalise the node distance matrix for the CPU-bearing
+/// nodes. SLIT rows carry one column per existing node (including
+/// memory-only ones), so columns are selected by position in the full
+/// sorted node list. Diagonal normalisation makes local access 1.0;
+/// anything unreadable or degenerate yields `None` (no matrix — the
+/// distance model falls back to its scalar `numa_factor`).
+fn read_distances(
+    node_dir: &Path,
+    all_node_ids: &[usize],
+    cpu_nodes: &[usize],
+) -> Option<Vec<Vec<f64>>> {
+    let cols: Vec<usize> = cpu_nodes
+        .iter()
+        .map(|id| all_node_ids.iter().position(|x| x == id).unwrap_or(usize::MAX))
+        .collect();
+    if cols.iter().any(|&c| c == usize::MAX) {
+        return None;
+    }
+    let mut raw: Vec<Vec<f64>> = Vec::with_capacity(cpu_nodes.len());
+    for &id in cpu_nodes {
+        let s = std::fs::read_to_string(node_dir.join(format!("node{id}/distance"))).ok()?;
+        let row: Vec<f64> = s
+            .split_whitespace()
+            .map(|t| t.parse::<f64>().ok())
+            .collect::<Option<_>>()?;
+        if row.len() != all_node_ids.len() {
+            return None;
+        }
+        raw.push(cols.iter().map(|&c| row[c]).collect());
+    }
+    let mut out = Vec::with_capacity(raw.len());
+    for (i, row) in raw.iter().enumerate() {
+        let diag = row[i];
+        if !(diag.is_finite() && diag > 0.0) {
+            return None;
+        }
+        let mut norm: Vec<f64> = row.iter().map(|&d| (d / diag).max(1.0)).collect();
+        norm[i] = 1.0;
+        out.push(norm);
+    }
+    Some(out)
+}
+
+fn read_id(p: &PathBuf) -> Option<usize> {
+    std::fs::read_to_string(p).ok()?.trim().parse().ok()
+}
+
+/// Parse the kernel cpulist format: comma-separated decimal ids and
+/// inclusive ranges, e.g. `"0-3,5,8-9"`. An empty string is an empty
+/// list (memory-only nodes publish exactly that).
+fn parse_cpulist(s: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let bad = || Error::Topology(format!("malformed cpulist entry `{part}`"));
+        if let Some((a, b)) = part.split_once('-') {
+            let a: usize = a.trim().parse().map_err(|_| bad())?;
+            let b: usize = b.trim().parse().map_err(|_| bad())?;
+            if b < a {
+                return Err(bad());
+            }
+            out.extend(a..=b);
+        } else {
+            out.push(part.parse().map_err(|_| bad())?);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parses_ranges_and_singles() {
+        assert_eq!(parse_cpulist("0-3,5,8-9").unwrap(), vec![0, 1, 2, 3, 5, 8, 9]);
+        assert_eq!(parse_cpulist("0").unwrap(), vec![0]);
+        assert_eq!(parse_cpulist("").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_cpulist(" 2 , 4-5 ").unwrap(), vec![2, 4, 5]);
+    }
+
+    #[test]
+    fn cpulist_rejects_garbage() {
+        assert!(parse_cpulist("3-1").is_err());
+        assert!(parse_cpulist("a-b").is_err());
+        assert!(parse_cpulist("1,x").is_err());
+    }
+
+    #[test]
+    fn detect_never_panics_and_covers_the_host() {
+        let t = Topology::detect();
+        assert!(t.n_cpus() >= 1);
+        assert_eq!(t.os_cpus().map(|m| m.len()), Some(t.n_cpus()));
+    }
+
+    #[test]
+    fn fallback_is_flat_smp_with_identity_map() {
+        let t = Topology::detect_fallback();
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert_eq!(t.n_cpus(), n);
+        assert_eq!(t.depth(), 2);
+        assert!(t.name().starts_with("smp-"));
+        assert_eq!(t.os_cpus().unwrap(), (0..n).collect::<Vec<_>>());
+    }
+}

@@ -7,6 +7,7 @@
 //! CPU *covered* by that component.
 
 mod builder;
+mod detect;
 mod distance;
 mod level;
 mod presets;
@@ -66,6 +67,12 @@ pub struct Topology {
     /// Per-CPU precomputed scan orders (see [`scan`]): the scheduler
     /// hot path reads slices, it never re-walks the tree.
     scan: Vec<ScanOrder>,
+    /// vCPU → OS CPU map, present only when the topology was discovered
+    /// from the running machine (see [`detect`]). Presets have none.
+    os_cpus: Option<Vec<usize>>,
+    /// Normalised NUMA distance matrix parsed from `/sys` node
+    /// distances (diagonal 1.0), present only on detected topologies.
+    numa_dist: Option<Vec<Vec<f64>>>,
 }
 
 impl Topology {
@@ -140,6 +147,8 @@ impl Topology {
             numa_count,
             smt_sibling,
             scan: Vec::new(),
+            os_cpus: None,
+            numa_dist: None,
         };
         topo.scan = scan::build_orders(&topo);
         Ok(topo)
@@ -227,6 +236,35 @@ impl Topology {
     /// SMT sibling of a CPU (the other logical processor on its core).
     pub fn smt_sibling(&self, cpu: CpuId) -> Option<CpuId> {
         self.smt_sibling[cpu.0]
+    }
+
+    /// The OS CPU backing a vCPU, when this topology was discovered from
+    /// the running machine (`--machine detect`). `None` on presets: a
+    /// pretend machine has nothing to pin to.
+    pub fn os_cpu(&self, cpu: CpuId) -> Option<usize> {
+        self.os_cpus.as_ref().and_then(|m| m.get(cpu.0).copied())
+    }
+
+    /// The full vCPU → OS CPU map, if detected.
+    pub fn os_cpus(&self) -> Option<&[usize]> {
+        self.os_cpus.as_deref()
+    }
+
+    /// Normalised NUMA distance matrix (diagonal 1.0) parsed from the
+    /// machine's `/sys` node distances, if detected. Indexed by the
+    /// topology's own NUMA numbering (see [`Topology::numa_of`]).
+    pub fn numa_matrix(&self) -> Option<&Vec<Vec<f64>>> {
+        self.numa_dist.as_ref()
+    }
+
+    pub(crate) fn set_os_cpus(&mut self, map: Vec<usize>) {
+        debug_assert_eq!(map.len(), self.n_cpus());
+        self.os_cpus = Some(map);
+    }
+
+    pub(crate) fn set_numa_matrix(&mut self, m: Vec<Vec<f64>>) {
+        debug_assert_eq!(m.len(), self.numa_count);
+        self.numa_dist = Some(m);
     }
 
     /// The child of `ancestor` that lies on the path towards `cpu`.

@@ -80,20 +80,30 @@ impl Topology {
         Topology::from_parts("asym".into(), nodes).expect("asym preset")
     }
 
-    /// Look a preset up by name (CLI `--machine`).
+    /// Look a preset up by name (CLI `--machine`). Malformed custom
+    /// specs (`smp-0`, `numa-0x4`, trailing garbage) return `None` so
+    /// the CLI can error with the preset list instead of building a
+    /// zero-CPU machine.
     pub fn preset(name: &str) -> Option<Topology> {
         match name {
             "xeon-2x-ht" | "xeon" => Some(Topology::xeon_2x_ht()),
             "numa-4x4" | "novascale" => Some(Topology::numa(4, 4)),
             "deep" => Some(Topology::deep()),
             "asym" => Some(Topology::asym()),
+            "detect" => Some(Topology::detect()),
             _ => {
                 if let Some(n) = name.strip_prefix("smp-") {
-                    n.parse().ok().map(Topology::smp)
+                    match n.parse::<usize>() {
+                        Ok(n) if n > 0 => Some(Topology::smp(n)),
+                        _ => None,
+                    }
                 } else if let Some(spec) = name.strip_prefix("numa-") {
                     let mut it = spec.split('x');
-                    let a = it.next()?.parse().ok()?;
-                    let b = it.next()?.parse().ok()?;
+                    let a: usize = it.next()?.parse().ok()?;
+                    let b: usize = it.next()?.parse().ok()?;
+                    if a == 0 || b == 0 || it.next().is_some() {
+                        return None;
+                    }
                     Some(Topology::numa(a, b))
                 } else {
                     None
@@ -104,7 +114,7 @@ impl Topology {
 
     /// Names of the named presets (for CLI help).
     pub fn preset_names() -> &'static [&'static str] {
-        &["xeon-2x-ht", "numa-4x4", "deep", "asym", "smp-<n>", "numa-<a>x<b>"]
+        &["xeon-2x-ht", "numa-4x4", "deep", "asym", "detect", "smp-<n>", "numa-<a>x<b>"]
     }
 }
 
@@ -134,6 +144,29 @@ mod tests {
         assert_eq!(t.covering(CpuId(5)).len(), 4);
         assert!(t.smt_sibling(CpuId(4)).is_some());
         assert!(t.smt_sibling(CpuId(0)).is_none());
+    }
+
+    #[test]
+    fn preset_rejects_malformed_custom_specs() {
+        // Zero CPUs or zero nodes must not build a machine.
+        assert!(Topology::preset("smp-0").is_none());
+        assert!(Topology::preset("numa-0x4").is_none());
+        assert!(Topology::preset("numa-4x0").is_none());
+        assert!(Topology::preset("numa-0x0").is_none());
+        // Trailing garbage is rejected, not silently ignored.
+        assert!(Topology::preset("numa-2x2x2").is_none());
+        assert!(Topology::preset("smp-").is_none());
+        assert!(Topology::preset("smp-two").is_none());
+        assert!(Topology::preset("numa-2x").is_none());
+    }
+
+    #[test]
+    fn detect_preset_resolves_to_a_usable_machine() {
+        let t = Topology::preset("detect").expect("detect never fails");
+        assert!(t.n_cpus() >= 1);
+        // Detected or fallback, the OS-CPU map is always present so the
+        // native executor has something to pin to.
+        assert_eq!(t.os_cpus().map(|m| m.len()), Some(t.n_cpus()));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 pub mod fmt;
 pub mod json;
+pub mod os;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

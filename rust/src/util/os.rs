@@ -1,0 +1,193 @@
+//! Thin OS bindings for the real-machine backend: thread→CPU affinity
+//! and anonymous memory mappings, declared directly against libc (the
+//! build is deliberately dependency-free).
+//!
+//! Everything here is *best-effort*: a denied `sched_setaffinity`
+//! (cgroup-restricted CI, seccomp sandboxes) or an unsupported `mbind`
+//! reports failure instead of erroring, and non-Linux builds compile to
+//! stubs that report unavailability. Callers decide how loudly to care
+//! (see the pinning protocol in [`crate::exec`]).
+
+/// Bits in the affinity/node masks we pass to the kernel (glibc's
+/// `cpu_set_t` is 1024 bits; we mirror that as `[u64; 16]`).
+const MASK_WORDS: usize = 16;
+const MASK_BITS: usize = MASK_WORDS * 64;
+
+/// Pin the *calling* OS thread to the single CPU `os_cpu`.
+/// Returns whether the kernel accepted the mask.
+#[cfg(target_os = "linux")]
+pub fn pin_to_os_cpu(os_cpu: usize) -> bool {
+    if os_cpu >= MASK_BITS {
+        return false;
+    }
+    let mut mask = [0u64; MASK_WORDS];
+    mask[os_cpu / 64] = 1u64 << (os_cpu % 64);
+    extern "C" {
+        // pid 0 = the calling thread.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // SAFETY: `mask` points at MASK_WORDS*8 valid, initialised bytes and
+    // outlives the call; the kernel only reads it.
+    unsafe { sched_setaffinity(0, MASK_WORDS * 8, mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_os_cpu(_os_cpu: usize) -> bool {
+    false
+}
+
+/// Prefer placing the pages of `[ptr, ptr+len)` on NUMA node `node`
+/// (`mbind` with `MPOL_PREFERRED`: a preference, not a strict bind, so
+/// a full node degrades to remote pages instead of OOM). Returns
+/// whether the kernel accepted the policy.
+pub fn bind_to_node(ptr: *mut u8, len: usize, node: usize) -> bool {
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        #[cfg(target_arch = "x86_64")]
+        const NR_MBIND: i64 = 237;
+        #[cfg(target_arch = "aarch64")]
+        const NR_MBIND: i64 = 235;
+        const MPOL_PREFERRED: i32 = 1;
+        if node >= MASK_BITS || ptr.is_null() || len == 0 {
+            return false;
+        }
+        let mut mask = [0u64; MASK_WORDS];
+        mask[node / 64] = 1u64 << (node % 64);
+        extern "C" {
+            fn syscall(num: i64, ...) -> i64;
+        }
+        // SAFETY: the mask buffer is valid for MASK_BITS bits and the
+        // kernel treats [ptr, ptr+len) opaquely (no dereference here).
+        unsafe {
+            syscall(NR_MBIND, ptr, len, MPOL_PREFERRED, mask.as_ptr(), MASK_BITS, 0i32) == 0
+        }
+    }
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        let _ = (ptr, len, node);
+        false
+    }
+}
+
+/// An anonymous private memory mapping (the backing store for
+/// [`crate::mem::arena`]). Unmapped on drop.
+#[derive(Debug)]
+pub struct MapRegion {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is plain process memory; all mutation goes
+// through volatile page touches that tolerate races by design.
+unsafe impl Send for MapRegion {}
+unsafe impl Sync for MapRegion {}
+
+impl MapRegion {
+    /// Map `len` bytes of zeroed anonymous memory, or `None` when the
+    /// platform can't (`len == 0`, non-Linux, mmap denied).
+    #[cfg(target_os = "linux")]
+    pub fn map(len: usize) -> Option<MapRegion> {
+        if len == 0 {
+            return None;
+        }
+        const PROT_READ: i32 = 1;
+        const PROT_WRITE: i32 = 2;
+        const MAP_PRIVATE: i32 = 2;
+        const MAP_ANONYMOUS: i32 = 0x20;
+        extern "C" {
+            fn mmap(
+                addr: *mut u8,
+                len: usize,
+                prot: i32,
+                flags: i32,
+                fd: i32,
+                off: i64,
+            ) -> *mut u8;
+        }
+        // SAFETY: anonymous mapping, no address hint, no fd.
+        let p = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ | PROT_WRITE,
+                MAP_PRIVATE | MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if p as isize == -1 {
+            None
+        } else {
+            Some(MapRegion { ptr: p, len })
+        }
+    }
+
+    #[cfg(not(target_os = "linux"))]
+    pub fn map(_len: usize) -> Option<MapRegion> {
+        None
+    }
+
+    pub fn as_ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for MapRegion {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        {
+            extern "C" {
+                fn munmap(addr: *mut u8, len: usize) -> i32;
+            }
+            // SAFETY: `ptr/len` came from a successful mmap and nothing
+            // hands out references that outlive `self`.
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_rejects_out_of_range_cpus() {
+        assert!(!pin_to_os_cpu(usize::MAX / 2));
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn pin_to_cpu_zero_is_accepted_or_cleanly_denied() {
+        // CPU 0 is online everywhere; the call may still be denied in
+        // restricted sandboxes — either answer is fine, crashing is not.
+        let _ = pin_to_os_cpu(0);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn map_region_is_readable_and_writable() {
+        let m = MapRegion::map(4096).expect("anonymous mmap");
+        assert_eq!(m.len(), 4096);
+        // SAFETY: in-bounds access to a live RW mapping.
+        unsafe {
+            m.as_ptr().write_volatile(7);
+            assert_eq!(m.as_ptr().read_volatile(), 7);
+            assert_eq!(m.as_ptr().add(4095).read_volatile(), 0);
+        }
+    }
+
+    #[test]
+    fn bind_handles_bad_input_without_crashing() {
+        assert!(!bind_to_node(std::ptr::null_mut(), 0, 0));
+    }
+}

@@ -137,7 +137,9 @@ fn native_memaware_beats_afs_on_locality() {
         &[SchedKind::Memaware, SchedKind::Afs],
         4,
         bubbles::mem::AllocPolicy::RoundRobin,
+        false,
         &[StructureMode::Simple],
+        None,
     );
     let ma = c.get("memaware");
     let afs = c.get("afs");
@@ -176,7 +178,9 @@ fn native_bubble_structure_keeps_accesses_at_least_as_local_as_loose_threads() {
         &[SchedKind::Bubble],
         4,
         bubbles::mem::AllocPolicy::FirstTouch,
+        false,
         &[StructureMode::Simple, StructureMode::Bubbles],
+        None,
     );
     let simple = c.get_structured("bubble", StructureMode::Simple);
     let bubbles = c.get_structured("bubble", StructureMode::Bubbles);

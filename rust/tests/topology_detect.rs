@@ -1,0 +1,178 @@
+//! Golden-file tests for `/sys` topology detection: canned sysfs
+//! snapshots written to a temp dir and parsed through
+//! `Topology::detect_from_sysfs`, covering SLIT normalisation, offline
+//! CPUs, non-contiguous and memory-only nodes, SMT laptops, and the
+//! documented smp-N fallback when `/sys` is missing entirely.
+
+use std::path::PathBuf;
+
+use bubbles::topology::{CpuId, Topology};
+
+/// A canned sysfs tree under a unique temp dir. Paths are relative to
+/// the snapshot root, exactly as the parser expects them under `/`.
+struct Snapshot {
+    root: PathBuf,
+}
+
+impl Snapshot {
+    fn new(tag: &str) -> Snapshot {
+        let root =
+            std::env::temp_dir().join(format!("bubbles-detect-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join("sys/devices/system/cpu")).unwrap();
+        std::fs::create_dir_all(root.join("sys/devices/system/node")).unwrap();
+        Snapshot { root }
+    }
+
+    fn write(&self, rel: &str, content: &str) -> &Snapshot {
+        let p = self.root.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(p, content).unwrap();
+        self
+    }
+
+    /// One online CPU's physical identity files.
+    fn cpu(&self, os: usize, package: usize, core: usize) -> &Snapshot {
+        let dir = format!("sys/devices/system/cpu/cpu{os}/topology");
+        self.write(&format!("{dir}/package_id"), &format!("{package}\n"));
+        self.write(&format!("{dir}/core_id"), &format!("{core}\n"))
+    }
+
+    fn parse(&self) -> Topology {
+        Topology::detect_from_sysfs(&self.root).expect("snapshot must parse")
+    }
+}
+
+impl Drop for Snapshot {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+#[test]
+fn two_node_machine_normalises_slit_distances() {
+    let s = Snapshot::new("two-node");
+    s.write("sys/devices/system/cpu/online", "0-3\n");
+    s.cpu(0, 0, 0).cpu(1, 0, 1).cpu(2, 1, 0).cpu(3, 1, 1);
+    s.write("sys/devices/system/node/node0/cpulist", "0-1\n");
+    s.write("sys/devices/system/node/node1/cpulist", "2-3\n");
+    // ACPI SLIT convention: local 10, remote 21 → normalised 1.0 / 2.1.
+    s.write("sys/devices/system/node/node0/distance", "10 21\n");
+    s.write("sys/devices/system/node/node1/distance", "21 10\n");
+    let t = s.parse();
+    assert_eq!(t.name(), "detect");
+    assert_eq!(t.n_cpus(), 4);
+    assert_eq!(t.n_numa(), 2);
+    // Machine → NumaNode → Core, one CPU per core: no SMT level.
+    assert_eq!(t.depth(), 3);
+    assert_eq!(t.os_cpus().unwrap(), &[0, 1, 2, 3]);
+    let m = t.numa_matrix().expect("SLIT matrix must survive parsing");
+    assert_eq!(m.len(), 2);
+    assert_eq!(m[0][0], 1.0);
+    assert_eq!(m[1][1], 1.0);
+    assert!((m[0][1] - 2.1).abs() < 1e-9, "got {}", m[0][1]);
+    assert!((m[1][0] - 2.1).abs() < 1e-9, "got {}", m[1][0]);
+}
+
+#[test]
+fn offline_cpus_and_non_contiguous_nodes_are_handled() {
+    // CPUs 1 and 3 are offline; the machine has nodes 0, 1, 2 where
+    // node1 is memory-only (empty cpulist). Distance rows still carry
+    // one column per *existing* node — the parser must select the
+    // CPU-bearing columns by position, not by node id.
+    let s = Snapshot::new("holes");
+    s.write("sys/devices/system/cpu/online", "0,2,4-5\n");
+    s.cpu(0, 0, 0).cpu(2, 0, 1).cpu(4, 1, 0).cpu(5, 1, 1);
+    s.write("sys/devices/system/node/node0/cpulist", "0,2\n");
+    s.write("sys/devices/system/node/node1/cpulist", "\n");
+    s.write("sys/devices/system/node/node2/cpulist", "4-5\n");
+    s.write("sys/devices/system/node/node0/distance", "10 15 20\n");
+    s.write("sys/devices/system/node/node1/distance", "15 10 15\n");
+    s.write("sys/devices/system/node/node2/distance", "20 15 10\n");
+    let t = s.parse();
+    assert_eq!(t.n_cpus(), 4, "offline CPUs must be absent");
+    assert_eq!(t.n_numa(), 2, "memory-only nodes hold no scheduling level");
+    // vCPUs are renumbered contiguously; the OS ids survive in the map.
+    assert_eq!(t.os_cpus().unwrap(), &[0, 2, 4, 5]);
+    let m = t.numa_matrix().expect("matrix for the two CPU-bearing nodes");
+    assert_eq!(m.len(), 2);
+    assert!((m[0][1] - 2.0).abs() < 1e-9, "node0→node2 column picked: {}", m[0][1]);
+    assert!((m[1][0] - 2.0).abs() < 1e-9, "node2→node0 column picked: {}", m[1][0]);
+}
+
+#[test]
+fn single_node_smt_laptop_gets_an_smt_level() {
+    let s = Snapshot::new("laptop");
+    s.write("sys/devices/system/cpu/online", "0-3\n");
+    // Two physical cores, two hardware threads each.
+    s.cpu(0, 0, 0).cpu(1, 0, 0).cpu(2, 0, 1).cpu(3, 0, 1);
+    s.write("sys/devices/system/node/node0/cpulist", "0-3\n");
+    s.write("sys/devices/system/node/node0/distance", "10\n");
+    let t = s.parse();
+    assert_eq!(t.n_cpus(), 4);
+    assert_eq!(t.n_numa(), 1);
+    // Machine → NumaNode → Core → Smt.
+    assert_eq!(t.depth(), 4);
+    assert_eq!(t.smt_sibling(CpuId(0)), Some(CpuId(1)));
+    assert_eq!(t.smt_sibling(CpuId(2)), Some(CpuId(3)));
+    assert_eq!(t.os_cpus().unwrap(), &[0, 1, 2, 3]);
+}
+
+#[test]
+fn malformed_snapshots_error_but_detect_still_falls_back() {
+    // No sys/ tree at all → an error the caller can see…
+    let empty =
+        std::env::temp_dir().join(format!("bubbles-detect-empty-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&empty);
+    std::fs::create_dir_all(&empty).unwrap();
+    assert!(Topology::detect_from_sysfs(&empty).is_err());
+    let _ = std::fs::remove_dir_all(&empty);
+    // …and a garbage online list errors instead of mis-parsing.
+    let s = Snapshot::new("garbage");
+    s.write("sys/devices/system/cpu/online", "zero-four\n");
+    assert!(Topology::detect_from_sysfs(&s.root).is_err());
+    // The public entry point never fails: it degrades to the
+    // documented smp-N fallback with an identity OS-CPU map.
+    let t = Topology::detect();
+    assert!(t.n_cpus() >= 1);
+    assert_eq!(t.os_cpus().map(|m| m.len()), Some(t.n_cpus()));
+}
+
+#[test]
+fn native_workers_pin_or_fall_back_on_a_detected_machine() {
+    // End-to-end: run the native memcmp harness on a canned detected
+    // topology. Every worker must either pin to its mapped OS CPU or
+    // count a pin failure — the per-worker fallback, exercised for
+    // real here because the snapshot maps vCPUs to OS CPUs this host
+    // may not have.
+    use bubbles::apps::conduction::HeatParams;
+    use bubbles::apps::StructureMode;
+    use bubbles::config::SchedKind;
+    use bubbles::experiments::memcmp;
+    let s = Snapshot::new("native");
+    s.write("sys/devices/system/cpu/online", "0-3\n");
+    s.cpu(0, 0, 0).cpu(1, 0, 1).cpu(2, 1, 0).cpu(3, 1, 1);
+    s.write("sys/devices/system/node/node0/cpulist", "0-1\n");
+    s.write("sys/devices/system/node/node1/cpulist", "2-3\n");
+    let topo = s.parse();
+    let p = HeatParams { threads: 6, cycles: 2, work: 0, mem_fraction: 0.0 };
+    let c = memcmp::run_native(
+        &topo,
+        &p,
+        &[SchedKind::Afs],
+        2,
+        bubbles::mem::AllocPolicy::FirstTouch,
+        true, // arena-backed regions: touches walk real mmap'd bytes
+        &[StructureMode::Simple],
+        None,
+    );
+    let row = c.get("afs");
+    assert!(row.makespan > 0);
+    assert_eq!(
+        row.workers_pinned + row.pin_failures,
+        topo.n_cpus() as u64,
+        "every worker must pin or count a failure (pinned {}, failed {})",
+        row.workers_pinned,
+        row.pin_failures
+    );
+}
