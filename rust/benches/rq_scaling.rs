@@ -227,27 +227,10 @@ fn contended_ns(
 }
 
 // ----------------------------------------------------------- provenance
-
-fn fnv1a(s: &str) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in s.bytes() {
-        h ^= u64::from(b);
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h
-}
-
-fn git_rev() -> String {
-    std::process::Command::new("git")
-        .args(["rev-parse", "--short", "HEAD"])
-        .output()
-        .ok()
-        .filter(|o| o.status.success())
-        .and_then(|o| String::from_utf8(o.stdout).ok())
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .unwrap_or_else(|| "unknown".into())
-}
+//
+// The FNV config hash and git revision come from the shared gate
+// module (`gate::fnv1a` / `gate::git_rev`) so this bench stamps its
+// artifact exactly like the experiment harness does.
 
 // ---------------------------------------------------------------- main
 
@@ -390,8 +373,8 @@ fn main() {
     let json = format!(
         "{{\n  \"bench\": \"rq_scaling\",\n  \"schema\": 2,\n  \"mode\": \"{}\",\n  \"git_rev\": \"{}\",\n  \"config_hash\": \"{:016x}\",\n  \"machine\": \"{}\",\n  \"contention\": [{}],\n  \"pick_path\": [{}],\n  \"contended\": [{}]\n}}\n",
         if fast { "fast" } else { "full" },
-        git_rev(),
-        fnv1a(&config),
+        gate::git_rev(),
+        gate::fnv1a(&config),
         shapes[1].name(),
         contention_rows.join(","),
         pick_rows.join(","),

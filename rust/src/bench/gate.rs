@@ -21,9 +21,47 @@
 //! to absorb shared-runner noise on a smoke-length run, tight enough to
 //! catch a lock slipped back into the pick hot path (which costs ≥2×
 //! under contention — see the `rq_scaling` bench).
+//!
+//! The comparator is shared: `repro sweep diff` feeds it generic
+//! `(cell key, metric)` pairs via [`compare_cells`] / [`parse_cells`],
+//! so sweep regression reports and the contended-rq gate use one
+//! matched-cell ratio engine. The provenance helpers ([`fnv1a`],
+//! [`git_rev`]) live here too so benches and the experiment harness
+//! stamp artifacts identically.
+
+use crate::util::json::{field_num, field_str, flat_fields, flat_objects, FieldValue};
 
 /// Ratio above which a leg counts as regressed (1.25 = +25% ns/op).
 pub const DEFAULT_THRESHOLD: f64 = 1.25;
+
+/// Metric fields the generic differ gates on when it finds them in a
+/// result row; every other numeric field is informational.
+pub const GATED_METRICS: &[&str] = &["ns_op", "makespan", "mix_makespan", "p99_slowdown"];
+
+/// FNV-1a 64-bit — the config/provenance hash used by every bench and
+/// sweep artifact. Stable across runs and platforms by construction.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Short git revision of the working tree, or `"unknown"` outside a
+/// checkout — artifact provenance, best-effort by design.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
 
 /// One contended-bench leg, parsed from a `BENCH_rq.json`.
 #[derive(Debug, Clone, PartialEq)]
@@ -85,7 +123,7 @@ impl GateReport {
         let mut out = String::new();
         for d in &self.deltas {
             out.push_str(&format!(
-                "{} {:>24}  {:>9.1} -> {:>9.1} ns/op  ({:+.1}%)\n",
+                "{} {:>24}  {:>10.2} -> {:>10.2}  ({:+.1}%)\n",
                 if d.regressed { "REGRESSED" } else { "ok       " },
                 d.key,
                 d.baseline_ns,
@@ -103,22 +141,6 @@ impl GateReport {
     }
 }
 
-fn field_num(obj: &str, key: &str) -> Option<f64> {
-    let pat = format!("\"{key}\":");
-    let rest = obj[obj.find(&pat)? + pat.len()..].trim_start();
-    let end = rest
-        .find(|c: char| c == ',' || c == '}' || c.is_whitespace())
-        .unwrap_or(rest.len());
-    rest[..end].parse().ok()
-}
-
-fn field_str(obj: &str, key: &str) -> Option<String> {
-    let pat = format!("\"{key}\":");
-    let rest = obj[obj.find(&pat)? + pat.len()..].trim_start();
-    let quoted = rest.strip_prefix('"')?;
-    Some(quoted[..quoted.find('"')?].to_string())
-}
-
 fn parse_leg(obj: &str) -> Option<LegResult> {
     Some(LegResult {
         shape: field_str(obj, "shape")?,
@@ -134,50 +156,84 @@ fn parse_leg(obj: &str) -> Option<LegResult> {
 /// keeps those with the full leg field set; anything else — including
 /// the legacy `contention`/`pick_path` rows — is skipped silently.
 pub fn parse_legs(json: &str) -> Vec<LegResult> {
+    flat_objects(json).into_iter().filter_map(parse_leg).collect()
+}
+
+/// Extract generic gateable cells from any artifact this crate writes:
+/// every innermost flat object whose string fields form a label (sorted
+/// `k=v` pairs) contributes one cell per `gated` metric it carries,
+/// keyed `<labels>:<metric>`. Rows without string labels are skipped —
+/// there is nothing stable to match them by across runs.
+pub fn parse_cells(json: &str, gated: &[&str]) -> Vec<(String, f64)> {
     let mut out = Vec::new();
-    let mut start = None;
-    for (i, b) in json.bytes().enumerate() {
-        match b {
-            b'{' => start = Some(i),
-            b'}' => {
-                if let Some(s) = start.take() {
-                    if let Some(leg) = parse_leg(&json[s..=i]) {
-                        out.push(leg);
-                    }
-                }
+    for obj in flat_objects(json) {
+        let mut labels: Vec<(String, String)> = Vec::new();
+        let mut nums: Vec<(String, f64)> = Vec::new();
+        for (k, v) in flat_fields(obj) {
+            match v {
+                FieldValue::Str(s) => labels.push((k, s)),
+                FieldValue::Num(n) => nums.push((k, n)),
+                FieldValue::Other => {}
             }
-            _ => {}
+        }
+        if labels.is_empty() {
+            continue;
+        }
+        labels.sort();
+        let label_key: Vec<String> = labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        let label_key = label_key.join(" ");
+        for g in gated {
+            if let Some((_, n)) = nums.iter().find(|(k, _)| k == g) {
+                out.push((format!("{label_key}:{g}"), *n));
+            }
         }
     }
     out
 }
 
-/// Compare `current` legs against `baseline` by key; a leg regresses
-/// when `current.ns_op / baseline.ns_op > threshold`. Unmatched legs on
-/// either side are reported, never gated on.
-pub fn compare(baseline: &[LegResult], current: &[LegResult], threshold: f64) -> GateReport {
+/// Compare generic `(key, value)` cells: a cell regresses when
+/// `current / baseline > threshold` (lower is better for every gated
+/// metric). Unmatched cells on either side — and cells with a zero or
+/// negative baseline, which cannot form a ratio — are reported, never
+/// gated on.
+pub fn compare_cells(
+    baseline: &[(String, f64)],
+    current: &[(String, f64)],
+    threshold: f64,
+) -> GateReport {
     let mut report = GateReport::default();
-    for cur in current {
-        match baseline.iter().find(|b| b.key() == cur.key()) {
-            Some(base) if base.ns_op > 0.0 => {
-                let ratio = cur.ns_op / base.ns_op;
+    for (key, cur) in current {
+        match baseline.iter().find(|(k, _)| k == key) {
+            Some((_, base)) if *base > 0.0 => {
+                let ratio = cur / base;
                 report.deltas.push(LegDelta {
-                    key: cur.key(),
-                    baseline_ns: base.ns_op,
-                    current_ns: cur.ns_op,
+                    key: key.clone(),
+                    baseline_ns: *base,
+                    current_ns: *cur,
                     ratio,
                     regressed: ratio > threshold,
                 });
             }
-            _ => report.unmatched_current.push(cur.key()),
+            _ => report.unmatched_current.push(key.clone()),
         }
     }
-    for base in baseline {
-        if !current.iter().any(|c| c.key() == base.key()) {
-            report.unmatched_baseline.push(base.key());
+    for (key, _) in baseline {
+        if !current.iter().any(|(k, _)| k == key) {
+            report.unmatched_baseline.push(key.clone());
         }
     }
     report
+}
+
+/// Compare `current` legs against `baseline` by key; a leg regresses
+/// when `current.ns_op / baseline.ns_op > threshold`. Unmatched legs on
+/// either side are reported, never gated on. (A thin wrapper over
+/// [`compare_cells`] keyed by [`LegResult::key`].)
+pub fn compare(baseline: &[LegResult], current: &[LegResult], threshold: f64) -> GateReport {
+    let cells = |legs: &[LegResult]| -> Vec<(String, f64)> {
+        legs.iter().map(|l| (l.key(), l.ns_op)).collect()
+    };
+    compare_cells(&cells(baseline), &cells(current), threshold)
 }
 
 #[cfg(test)]
@@ -298,5 +354,46 @@ mod tests {
         let report = compare(&base, &cur, DEFAULT_THRESHOLD);
         assert!(report.passed());
         assert_eq!(report.unmatched_current.len(), 1, "a 0 ns baseline leg is unusable");
+    }
+
+    #[test]
+    fn fnv1a_is_stable_and_distinct() {
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("policy=afs seed=1"), fnv1a("policy=afs seed=1"));
+        assert_ne!(fnv1a("policy=afs seed=1"), fnv1a("policy=afs seed=2"));
+    }
+
+    #[test]
+    fn serve_rows_gate_through_generic_cells() {
+        // The BENCH_serve.json row shape: engine/policy labels, mix
+        // makespan and tail slowdown as the gated metrics per engine.
+        let doc = r#"{"bench":"serve","results":[
+{"engine":"sim","policy":"job-fair","jobs":30,"mix_makespan":5000,"p99_slowdown":2.5000},
+{"engine":"native","policy":"job-fair","jobs":30,"mix_makespan":7000,"p99_slowdown":3.0000}]}
+"#;
+        let base = parse_cells(doc, GATED_METRICS);
+        assert_eq!(base.len(), 4, "two rows x (mix_makespan, p99_slowdown): {base:?}");
+        assert!(base
+            .iter()
+            .any(|(k, v)| k == "engine=sim policy=job-fair:mix_makespan" && *v == 5000.0));
+        // Identical runs: every cell matched, nothing regresses.
+        let clean = compare_cells(&base, &base.clone(), DEFAULT_THRESHOLD);
+        assert!(clean.passed());
+        assert_eq!(clean.deltas.len(), 4);
+        assert!(clean.unmatched_current.is_empty());
+        // A planted 2x on every metric trips every matched cell.
+        let planted: Vec<(String, f64)> =
+            base.iter().map(|(k, v)| (k.clone(), v * 2.0)).collect();
+        let report = compare_cells(&base, &planted, DEFAULT_THRESHOLD);
+        assert!(!report.passed());
+        assert_eq!(report.regressions().len(), 4);
+    }
+
+    #[test]
+    fn cells_without_labels_are_skipped() {
+        let doc = r#"{"results":[{"makespan":100},{"policy":"afs","makespan":200}]}"#;
+        let cells = parse_cells(doc, GATED_METRICS);
+        assert_eq!(cells.len(), 1, "label-less rows cannot be matched across runs");
+        assert_eq!(cells[0].0, "policy=afs:makespan");
     }
 }

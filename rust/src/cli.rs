@@ -4,19 +4,21 @@
 
 use std::collections::HashMap;
 
-use crate::apps::amr::{AmrParams, SkewParams};
+use crate::apps::amr::AmrParams;
 use crate::apps::conduction::HeatParams;
 use crate::apps::fib::FibParams;
 use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
-use crate::experiments::{ablations, adaptcmp, fig5, memcmp, table1, table2};
+use crate::experiments::{fig5, harness, sweep, table1, table2};
 use crate::topology::Topology;
 
-/// Parsed command line: positional command + `--key value` options.
+/// Parsed command line: positional command + `--key value` options,
+/// plus bare operands for the commands that take them (`sweep diff`).
 #[derive(Debug, Default)]
 pub struct Args {
     pub command: String,
     pub options: HashMap<String, String>,
+    pub positionals: Vec<String>,
 }
 
 impl Args {
@@ -25,14 +27,23 @@ impl Args {
     /// (`repro adaptcmp --smoke`) and default to `"true"`. Any other
     /// `--key` without a value is still an error, so a forgotten value
     /// (`--config` with no path) fails loudly instead of becoming the
-    /// literal value `true`.
+    /// literal value `true`. Bare arguments are operands only for the
+    /// commands that declare them; everywhere else they stay errors.
     pub fn parse(argv: &[String]) -> Result<Args> {
-        const BOOL_FLAGS: &[&str] = &["smoke", "arena"];
+        const BOOL_FLAGS: &[&str] = &["smoke", "arena", "continue-on-failure"];
+        const POSITIONAL_COMMANDS: &[&str] = &["sweep"];
         let mut args = Args::default();
         let mut it = argv.iter().peekable();
         args.command = it.next().cloned().unwrap_or_else(|| "help".to_string());
         while let Some(a) = it.next() {
-            if let Some(key) = a.strip_prefix("--") {
+            if a == "-j" {
+                // `-j N` is the conventional spelling of `--j N`.
+                let val = it
+                    .next()
+                    .cloned()
+                    .ok_or_else(|| Error::config("-j needs a value".to_string()))?;
+                args.options.insert("j".to_string(), val);
+            } else if let Some(key) = a.strip_prefix("--") {
                 let next_is_value = it.peek().map(|v| !v.starts_with("--")).unwrap_or(false);
                 let val = if next_is_value {
                     it.next().cloned().unwrap()
@@ -42,6 +53,8 @@ impl Args {
                     return Err(Error::config(format!("--{key} needs a value")));
                 };
                 args.options.insert(key.to_string(), val);
+            } else if POSITIONAL_COMMANDS.contains(&args.command.as_str()) {
+                args.positionals.push(a.clone());
             } else {
                 return Err(Error::config(format!("unexpected argument `{a}`")));
             }
@@ -83,10 +96,11 @@ pub fn run(argv: &[String]) -> Result<String> {
         "table1" => cmd_table1(&args),
         "table2" => cmd_table2(&args),
         "fig5" => cmd_fig5(&args),
-        "ablations" => cmd_ablations(&args),
-        "memcmp" => cmd_memcmp(&args),
-        "adaptcmp" => cmd_adaptcmp(&args),
-        "serve" => cmd_serve(&args),
+        "ablations" => run_experiment("ablations", &args),
+        "memcmp" => run_experiment("memcmp", &args),
+        "adaptcmp" => run_experiment("adaptcmp", &args),
+        "serve" => run_experiment("serve", &args),
+        "sweep" => cmd_sweep(&args),
         "submit" => cmd_submit(&args),
         "run" => cmd_run(&args),
         "analyze" => cmd_analyze(&args),
@@ -110,7 +124,7 @@ COMMANDS
   table1     scheduler micro-costs (Table 1)
   table2     conduction+advection rows (Table 2) [--machine, --scale 1.0]
   fig5       fibonacci bubble gain (Figure 5)    [--machine xeon-2x-ht|numa-4x4]
-  ablations  design-choice sweeps                [--which burst|regen|zoo|all]
+  ablations  design-choice sweeps     [--workload burst|regen|zoo|memory|all]
   memcmp     local vs remote access ratio per policy [--machine, --scheds a,b,c,
              --engine sim|native, --structure simple|bubbles|both (native),
              --arena (native: back regions with real mmap pages),
@@ -119,20 +133,30 @@ COMMANDS
              one bubble per NUMA node — and writes BENCH_mem_native.json;
              --trace exports the first leg as Chrome trace-event JSON)
   adaptcmp   adaptive steal-scope vs fixed scopes on bursty/phase-change load
-             [--machine, --scheds a,b,c, --seed N, --smoke, --trace out.json]
+             [--machine, --scheds a,b,c, --workload phase|bursty|both,
+             --seed N, --smoke, --trace out.json]
              (writes BENCH_adaptive.json; --trace exports the first
              phase-changing leg as Chrome trace-event JSON)
   serve      multi-tenant job server: seeded bursty stream of short jobs
              multiplexed over one executor, job-fair vs static-partition
              vs ss [--machine, --jobs N, --seed N, --engine sim|native|both,
+             --workload touch|conduction|amr|mix (generated stream),
              --submitters N (native), --queue spool-file, --gap N (queue),
              --smoke (>=1000 jobs), --trace out.json]
              (writes BENCH_serve.json; --trace exports the first leg's
              mix run as Chrome trace-event JSON)
+  sweep      provenance-tracked experiment grids  [--grid spec.toml, -j N,
+             --continue-on-failure, --out results]
+             expands [grid] axes (policy/machine/workload/seed/...) into
+             cells, runs each as a subprocess, writes content-addressed
+             artifacts + a manifest under results/<cfg-hash>/; exit 1
+             when any cell failed. `sweep diff <a> <b>` gates two runs
+             (or plain BENCH_*.json artifacts) through the bench
+             comparator — exit 2 on a >=1.25x regression
   submit     append one job to a spool file for `serve --queue`
              [--queue file (required), --name, --mode simple|bound|bubbles,
-             --class latency|normal|batch, --threads, --cycles, --work,
-             --mem 0..1, --touches]
+             --class latency|normal|batch, --app touch|conduction|amr,
+             --threads, --cycles, --work, --mem 0..1, --touches]
   run        config-driven simulation            [--config file.toml]
   analyze    traced run + scheduler analysis     [--machine, --app, --sched,
              --engine sim|native]
@@ -240,38 +264,67 @@ fn cmd_fig5(args: &Args) -> Result<String> {
     ))
 }
 
-fn cmd_ablations(args: &Args) -> Result<String> {
-    let topo = args.machine()?;
-    let which = args.get("which", "all");
-    let mut out = String::new();
-    if which == "burst" || which == "all" {
-        out.push_str(&ablations::burst_level(&topo, &HeatParams::conduction()).render());
-        out.push('\n');
+/// Run a harness experiment from the parsed CLI options: the
+/// memcmp/adaptcmp/serve/ablations commands are thin wrappers over the
+/// shared [`harness::Experiment`] registry, so the CLI and the sweep
+/// runner execute the exact same code path. Writes the experiment's
+/// default artifact (when it produced one) and appends the note.
+fn run_experiment(name: &str, args: &Args) -> Result<String> {
+    let exp = harness::lookup(name).expect("registered experiment");
+    let out = exp.run(&harness::Params::from_options(&args.options))?;
+    match out.artifact {
+        Some(a) => {
+            let note = write_bench_artifact(&a.path, &a.artifact.json());
+            Ok(format!("{}\n{note}", out.text))
+        }
+        None => Ok(out.text),
     }
-    if which == "regen" || which == "all" {
-        out.push_str(&ablations::regeneration_skewed(&topo, &SkewParams::default()).render());
-        out.push('\n');
-        out.push_str(
-            &ablations::regeneration(
-                &topo,
-                &AmrParams { cycles: 12, redraw_every: 3, ..Default::default() },
-            )
-            .render(),
-        );
-        out.push('\n');
+}
+
+fn cmd_sweep(args: &Args) -> Result<String> {
+    // Cell mode: one grid cell in this process — the runner's per-job
+    // subprocess entry point.
+    if let Some(spec) = args.options.get("cell") {
+        return sweep::run_cell(spec, args.options.get("cell-out").map(|s| s.as_str()));
     }
-    if which == "zoo" || which == "all" {
-        out.push_str(&ablations::scheduler_zoo(&topo, &HeatParams::conduction()).render());
-        out.push('\n');
+    match args.positionals.first().map(|s| s.as_str()) {
+        Some("diff") => {
+            let (a, b) = match (args.positionals.get(1), args.positionals.get(2)) {
+                (Some(a), Some(b)) => (a.clone(), b.clone()),
+                (Some(b), None) => {
+                    let a = std::env::var("BENCH_BASELINE").map_err(|_| {
+                        Error::config(
+                            "sweep diff needs two runs (or BENCH_BASELINE=<run> and one)"
+                                .to_string(),
+                        )
+                    })?;
+                    (a, b.clone())
+                }
+                _ => {
+                    return Err(Error::config(
+                        "usage: repro sweep diff <baseline> <current>".to_string(),
+                    ))
+                }
+            };
+            sweep::diff(&a, &b)
+        }
+        Some(other) => Err(Error::config(format!(
+            "unknown sweep subcommand `{other}` (want diff, or --grid <spec.toml>)"
+        ))),
+        None => {
+            let grid_path = args.options.get("grid").ok_or_else(|| {
+                Error::config("sweep needs --grid <spec.toml> (or `sweep diff <a> <b>`)")
+            })?;
+            let grid = crate::config::GridSpec::from_file(grid_path)?;
+            let opts = sweep::SweepOptions {
+                workers: args.u64("j", 4).max(1) as usize,
+                continue_on_failure: args.flag("continue-on-failure"),
+                out_dir: args.get("out", "results").to_string(),
+                repro_bin: None,
+            };
+            sweep::run_sweep(&grid, &opts)
+        }
     }
-    if which == "memory" || which == "all" {
-        out.push_str(&ablations::memory_policy(&topo, &HeatParams::conduction()).render());
-        out.push('\n');
-    }
-    if out.is_empty() {
-        return Err(Error::config(format!("unknown ablation `{which}`")));
-    }
-    Ok(out)
 }
 
 /// Write a `BENCH_*.json` artifact; returns the note line for the
@@ -281,240 +334,6 @@ fn write_bench_artifact(path: &str, json: &str) -> String {
         Ok(()) => format!("wrote {path}"),
         Err(e) => format!("could not write {path}: {e}"),
     }
-}
-
-fn cmd_memcmp(args: &Args) -> Result<String> {
-    let topo = args.machine()?;
-    let kinds = match args.options.get("scheds") {
-        Some(list) => list
-            .split(',')
-            .map(|s| {
-                crate::config::SchedKind::parse(s.trim()).ok_or_else(|| {
-                    Error::config(format!("unknown scheduler `{s}`; try `repro schedulers`"))
-                })
-            })
-            .collect::<Result<Vec<_>>>()?,
-        None => memcmp::default_kinds(),
-    };
-    let smoke = args.flag("smoke");
-    let seed = args.u64("seed", crate::sim::SimConfig::default().seed);
-    let trace_out = args.options.get("trace").map(|s| s.as_str());
-    let trace_note = match trace_out {
-        Some(p) => format!("\nwrote first-leg Chrome trace to {p}"),
-        None => String::new(),
-    };
-    // Oversubscribe the machine so rebalancing pressure is real: that
-    // is where memory-blind policies scatter accesses.
-    let p = HeatParams {
-        threads: topo.n_cpus() + topo.n_cpus() / 2,
-        cycles: if smoke { 4 } else { 20 },
-        ..HeatParams::conduction()
-    };
-    match args.get("engine", "sim") {
-        "sim" => {
-            if args.options.contains_key("structure") {
-                return Err(Error::config(
-                    "--structure applies to --engine native only (the sim harness \
-                     picks the structure per policy)"
-                        .to_string(),
-                ));
-            }
-            if args.flag("arena") {
-                return Err(Error::config(
-                    "--arena applies to --engine native only (the sim engine models \
-                     memory, it does not touch real pages)"
-                        .to_string(),
-                ));
-            }
-            let c = memcmp::run(&topo, &p, &kinds, seed, trace_out);
-            Ok(format!(
-                "memory locality comparison on `{}` ({} stripes, {} cycles, seed {seed})\n\n{}{}",
-                topo.name(),
-                p.threads,
-                p.cycles,
-                c.render(),
-                trace_note
-            ))
-        }
-        "native" => {
-            let touches = if smoke { 2 } else { 4 };
-            use crate::apps::StructureMode;
-            let structure = args.get("structure", "both");
-            let modes: Vec<StructureMode> = match structure {
-                "simple" => vec![StructureMode::Simple],
-                "bubbles" => vec![StructureMode::Bubbles],
-                "both" => vec![StructureMode::Simple, StructureMode::Bubbles],
-                other => {
-                    return Err(Error::config(format!(
-                        "unknown structure `{other}` (want simple|bubbles|both)"
-                    )))
-                }
-            };
-            let c = memcmp::run_native(
-                &topo,
-                &p,
-                &kinds,
-                touches,
-                crate::mem::AllocPolicy::FirstTouch,
-                args.flag("arena"),
-                &modes,
-                trace_out,
-            );
-            // No seed in the native artifact: native makespans are wall
-            // clock and OS scheduling makes them run-to-run noisy — a
-            // seed field would falsely promise reproducibility. The
-            // structure axis lives on each result row (one vocabulary:
-            // the StructureMode labels), not at the top level. The
-            // detected shape rides along so the CI detect leg can check
-            // the machine the workers actually ran on.
-            let json = format!(
-                "{{\n  \"bench\": \"memcmp\",\n  \"engine\": \"native\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"cpus\": {},\n  \"numa_nodes\": {},\n  \"pinnable\": {},\n  \"results\": [{}]\n}}\n",
-                if smoke { "smoke" } else { "full" },
-                topo.name(),
-                topo.n_cpus(),
-                topo.n_numa(),
-                topo.os_cpus().is_some(),
-                c.json_rows("native").join(",")
-            );
-            let note = write_bench_artifact("BENCH_mem_native.json", &json);
-            let seed_note = if args.options.contains_key("seed") {
-                "\nnote: --seed applies to the sim engine only; native makespans are wall-clock"
-            } else {
-                ""
-            };
-            Ok(format!(
-                "memory locality comparison on `{}` (native engine, {} green threads, {} cycles, structure {})\n\n{}\n{}{}{}",
-                topo.name(),
-                p.threads,
-                p.cycles,
-                structure,
-                c.render(),
-                note,
-                seed_note,
-                trace_note
-            ))
-        }
-        other => Err(Error::config(format!("unknown engine `{other}` (want sim|native)"))),
-    }
-}
-
-fn cmd_adaptcmp(args: &Args) -> Result<String> {
-    let topo = args.machine()?;
-    let kinds = match args.options.get("scheds") {
-        Some(list) => list
-            .split(',')
-            .map(|s| {
-                crate::config::SchedKind::parse(s.trim()).ok_or_else(|| {
-                    Error::config(format!("unknown scheduler `{s}`; try `repro schedulers`"))
-                })
-            })
-            .collect::<Result<Vec<_>>>()?,
-        None => adaptcmp::default_kinds(),
-    };
-    let smoke = args.flag("smoke");
-    let seed = args.u64("seed", crate::sim::SimConfig::default().seed);
-    let (pp, bp) = if smoke {
-        (adaptcmp::PhaseParams::smoke(&topo), adaptcmp::BurstParams::smoke(&topo))
-    } else {
-        (adaptcmp::PhaseParams::for_machine(&topo), adaptcmp::BurstParams::for_machine(&topo))
-    };
-    let trace_out = args.options.get("trace").map(|s| s.as_str());
-    let phase = adaptcmp::run_phase(&topo, &pp, &kinds, seed, trace_out);
-    let bursty = adaptcmp::run_bursty(&topo, &bp, &kinds, seed);
-    let mut rows = phase.json_rows("phase");
-    rows.extend(bursty.json_rows("bursty"));
-    let json = format!(
-        "{{\n  \"bench\": \"adaptcmp\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"seed\": {},\n  \"results\": [{}]\n}}\n",
-        if smoke { "smoke" } else { "full" },
-        topo.name(),
-        seed,
-        rows.join(",")
-    );
-    let note = write_bench_artifact("BENCH_adaptive.json", &json);
-    let trace_note = match trace_out {
-        Some(p) => format!("\nwrote first-leg Chrome trace to {p}"),
-        None => String::new(),
-    };
-    Ok(format!(
-        "adaptive steal-scope comparison on `{}`{}\n\n{}\n{}\n{}{}",
-        topo.name(),
-        if smoke { " (smoke)" } else { "" },
-        phase.render(),
-        bursty.render(),
-        note,
-        trace_note
-    ))
-}
-
-fn cmd_serve(args: &Args) -> Result<String> {
-    use crate::experiments::serve as harness;
-    let topo = args.machine()?;
-    let smoke = args.flag("smoke");
-    let seed = args.u64("seed", crate::sim::SimConfig::default().seed);
-    let submitters = args.u64("submitters", 4).max(1) as usize;
-    let trace_out = args.options.get("trace").map(|s| s.as_str());
-    let engines = match args.get("engine", "both") {
-        "sim" => (true, false),
-        "native" => (false, true),
-        "both" => (true, true),
-        other => {
-            return Err(Error::config(format!(
-                "unknown engine `{other}` (want sim|native|both)"
-            )))
-        }
-    };
-    // The stream: a spool file (`serve --queue`, fed by `repro submit`)
-    // or the seeded bursty generator. `--smoke` is the CI stream: the
-    // ISSUE-8 acceptance floor of >= 1000 short jobs.
-    let (arrivals, source) = match args.options.get("queue") {
-        Some(path) => {
-            let specs = crate::serve::read_spool(path)?;
-            if specs.is_empty() {
-                return Err(Error::config(format!("queue `{path}` holds no jobs")));
-            }
-            let gap = args.u64("gap", 10_000).max(1);
-            let n = specs.len();
-            let arrivals: Vec<_> = specs
-                .into_iter()
-                .map(|spec| crate::serve::Arrival { gap, spec })
-                .collect();
-            (arrivals, format!("queue {path} ({n} jobs)"))
-        }
-        None => {
-            let gen = if smoke {
-                harness::smoke_gen(seed)
-            } else {
-                crate::serve::GenConfig {
-                    jobs: args.u64("jobs", 200).max(1) as usize,
-                    seed,
-                    ..crate::serve::GenConfig::default()
-                }
-            };
-            let arrivals = crate::serve::generate(&gen);
-            (arrivals, format!("generated stream ({} jobs, seed {seed})", gen.jobs))
-        }
-    };
-    let c = harness::run(&topo, &arrivals, seed, engines, submitters, trace_out)?;
-    let json = format!(
-        "{{\n  \"bench\": \"serve\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\",\n  \"seed\": {},\n  \"jobs\": {},\n  \"results\": [{}]\n}}\n",
-        if smoke { "smoke" } else { "full" },
-        topo.name(),
-        seed,
-        arrivals.len(),
-        c.json_rows().join(",")
-    );
-    let note = write_bench_artifact("BENCH_serve.json", &json);
-    let trace_note = match trace_out {
-        Some(p) => format!("\nwrote first-leg Chrome trace to {p}"),
-        None => String::new(),
-    };
-    Ok(format!(
-        "{}\nsource: {source}\n\n{}\n{}{}",
-        c.title,
-        c.render(),
-        note,
-        trace_note
-    ))
 }
 
 fn cmd_submit(args: &Args) -> Result<String> {
@@ -532,6 +351,11 @@ fn cmd_submit(args: &Args) -> Result<String> {
     if let Some(c) = args.options.get("class") {
         spec.class = crate::sched::DeadlineClass::parse(c).ok_or_else(|| {
             Error::config(format!("unknown class `{c}` (want latency|normal|batch)"))
+        })?;
+    }
+    if let Some(a) = args.options.get("app") {
+        spec.app = crate::serve::JobApp::parse(a).ok_or_else(|| {
+            Error::config(format!("unknown app `{a}` (want touch|conduction|amr)"))
         })?;
     }
     spec.threads = args.u64("threads", spec.threads as u64) as usize;
@@ -1011,7 +835,7 @@ mod tests {
         .unwrap();
         assert!(out.contains("web"), "{out}");
         assert!(out.contains("latency"), "{out}");
-        run(&argv(&format!("submit --queue {q} --name bulk --class batch"))).unwrap();
+        run(&argv(&format!("submit --queue {q} --name bulk --class batch --app amr"))).unwrap();
         let out = run(&argv(&format!("serve --machine numa-2x2 --queue {q} --engine sim")))
             .unwrap();
         assert!(out.contains("(2 jobs)"), "{out}");
@@ -1023,6 +847,8 @@ mod tests {
         assert!(err.to_string().contains("unknown class"), "{err}");
         let err = run(&argv(&format!("submit --queue {q} --mode warp"))).unwrap_err();
         assert!(err.to_string().contains("unknown mode"), "{err}");
+        let err = run(&argv(&format!("submit --queue {q} --app warp"))).unwrap_err();
+        assert!(err.to_string().contains("unknown app"), "{err}");
     }
 
     #[test]
@@ -1086,5 +912,43 @@ mod tests {
         ])
         .unwrap();
         assert!(out.contains("makespan"), "{out}");
+    }
+
+    #[test]
+    fn sweep_args_and_dispatch_errors() {
+        // Operands are allowed for sweep (and only sweep), `-j N` is
+        // the worker-count spelling, and the failure modes are loud.
+        let a = Args::parse(&argv("sweep diff runA runB -j 8")).unwrap();
+        assert_eq!(a.positionals, ["diff", "runA", "runB"]);
+        assert_eq!(a.get("j", "4"), "8");
+        let a = Args::parse(&argv("sweep --grid g.toml --continue-on-failure")).unwrap();
+        assert!(a.flag("continue-on-failure"));
+        assert!(Args::parse(&argv("memcmp stray")).is_err());
+        assert!(Args::parse(&argv("sweep -j")).is_err());
+        let err = run(&argv("sweep")).unwrap_err();
+        assert!(err.to_string().contains("--grid"), "{err}");
+        let err = run(&argv("sweep warp")).unwrap_err();
+        assert!(err.to_string().contains("unknown sweep subcommand"), "{err}");
+        let err = run(&argv("sweep --grid /no/such/grid.toml")).unwrap_err();
+        assert!(err.to_string().contains("cannot read grid"), "{err}");
+    }
+
+    #[test]
+    fn sweep_cell_runs_one_grid_cell_in_process() {
+        let path = std::env::temp_dir().join("bubbles-cli-sweep-cell.json");
+        let argv: Vec<String> = vec![
+            "sweep".to_string(),
+            "--cell".to_string(),
+            "experiment=memcmp machine=numa-2x2 scheds=afs engine=sim seed=3 smoke=true"
+                .to_string(),
+            "--cell-out".to_string(),
+            path.to_string_lossy().to_string(),
+        ];
+        let out = run(&argv).unwrap();
+        assert!(out.contains("afs"), "{out}");
+        let s = std::fs::read_to_string(&path).unwrap();
+        crate::util::json::validate(&s).unwrap_or_else(|e| panic!("invalid JSON: {e}"));
+        assert!(s.contains("\"bench\": \"sweep-cell\""), "{s}");
+        assert!(s.contains("\"config_hash\""), "{s}");
     }
 }

@@ -1,0 +1,262 @@
+//! Sweep grid specification (`repro sweep --grid spec.toml`).
+//!
+//! A grid file names one experiment and the axes to sweep:
+//!
+//! ```toml
+//! [grid]
+//! experiment = "memcmp"
+//! policy     = ["afs", "memaware"]
+//! machine    = ["smp-4", "numa-4x4"]
+//! seed       = [1, 2]
+//!
+//! [run]            # constants applied to every cell
+//! engine = "sim"
+//! smoke  = true
+//!
+//! [sweep]          # optional runner directives
+//! plant_fail = "machine=smp-4 seed=2"   # drill: this cell panics
+//! ```
+//!
+//! `[grid]` arrays are the axes (their cartesian product is the job
+//! list), `[run]` scalars ride along on every cell, and
+//! `sweep.plant_fail` marks the matching cells as deliberate failures —
+//! the `--continue-on-failure` drill the sweep tests exercise. The axis
+//! name `policy` maps to the experiments' `scheds` parameter, so grids
+//! read in the paper's vocabulary.
+
+use std::collections::BTreeMap;
+
+use super::toml::{self, Value};
+use crate::error::{Error, Result};
+
+/// A parsed sweep grid: experiment name, sweep axes (sorted by key),
+/// per-cell constants, and the optional planted-failure matcher.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    pub experiment: String,
+    pub axes: Vec<(String, Vec<String>)>,
+    pub extras: Vec<(String, String)>,
+    pub plant_fail: Option<Vec<(String, String)>>,
+}
+
+/// Grid axes and matchers use the paper's `policy` vocabulary; the
+/// experiments take `scheds`.
+fn axis_key(name: &str) -> String {
+    if name == "policy" {
+        "scheds".to_string()
+    } else {
+        name.to_string()
+    }
+}
+
+fn scalar(v: &Value) -> Option<String> {
+    match v {
+        Value::Str(s) => Some(s.clone()),
+        Value::Int(i) => Some(i.to_string()),
+        Value::Float(f) => Some(format!("{f}")),
+        Value::Bool(b) => Some(b.to_string()),
+        Value::Array(_) => None,
+    }
+}
+
+/// Parse a `k=v k=v` matcher string (the `plant_fail` value).
+fn parse_matcher(s: &str) -> Result<Vec<(String, String)>> {
+    s.split_whitespace()
+        .map(|pair| {
+            let (k, v) = pair.split_once('=').ok_or_else(|| {
+                Error::config(format!("plant_fail needs `k=v` pairs, got `{pair}`"))
+            })?;
+            Ok((axis_key(k), v.to_string()))
+        })
+        .collect()
+}
+
+impl GridSpec {
+    pub fn from_file(path: &str) -> Result<GridSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::config(format!("cannot read grid `{path}`: {e}")))?;
+        GridSpec::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<GridSpec> {
+        let doc = toml::parse(text)?;
+        let mut spec = GridSpec {
+            experiment: "memcmp".to_string(),
+            axes: Vec::new(),
+            extras: Vec::new(),
+            plant_fail: None,
+        };
+        for (key, val) in &doc {
+            if key == "grid.experiment" {
+                spec.experiment = val
+                    .as_str()
+                    .ok_or_else(|| Error::config("grid.experiment must be a string"))?
+                    .to_string();
+            } else if let Some(name) = key.strip_prefix("grid.") {
+                let arr = val.as_array().ok_or_else(|| {
+                    Error::config(format!("grid axis `{name}` must be an array"))
+                })?;
+                let values: Vec<String> = arr
+                    .iter()
+                    .map(|v| {
+                        scalar(v).ok_or_else(|| {
+                            Error::config(format!("grid axis `{name}` holds a non-scalar value"))
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                if values.is_empty() {
+                    return Err(Error::config(format!("grid axis `{name}` is empty")));
+                }
+                spec.axes.push((axis_key(name), values));
+            } else if let Some(name) = key.strip_prefix("run.") {
+                let v = scalar(val).ok_or_else(|| {
+                    Error::config(format!("run.{name} must be a scalar, not an array"))
+                })?;
+                spec.extras.push((axis_key(name), v));
+            } else if key == "sweep.plant_fail" {
+                let s = val
+                    .as_str()
+                    .ok_or_else(|| Error::config("sweep.plant_fail must be a string"))?;
+                spec.plant_fail = Some(parse_matcher(s)?);
+            } else {
+                return Err(Error::config(format!(
+                    "unknown grid key `{key}` (want [grid] axes, [run] constants, \
+                     sweep.plant_fail)"
+                )));
+            }
+        }
+        if spec.axes.is_empty() {
+            return Err(Error::config("grid has no axes (add arrays under [grid])"));
+        }
+        Ok(spec)
+    }
+
+    /// Expand the axes into one parameter map per cell (cartesian
+    /// product, `[run]` constants on every cell). Cells matched by the
+    /// `plant_fail` matcher carry the `__plant_fail=1` marker the
+    /// runner turns into a deliberate panic.
+    pub fn jobs(&self) -> Vec<BTreeMap<String, String>> {
+        let base: BTreeMap<String, String> = self.extras.iter().cloned().collect();
+        let mut out = vec![base];
+        for (key, values) in &self.axes {
+            let mut next = Vec::with_capacity(out.len() * values.len());
+            for cell in &out {
+                for v in values {
+                    let mut job = cell.clone();
+                    job.insert(key.clone(), v.clone());
+                    next.push(job);
+                }
+            }
+            out = next;
+        }
+        if let Some(matcher) = &self.plant_fail {
+            for job in &mut out {
+                let hit = matcher
+                    .iter()
+                    .all(|(k, v)| job.get(k).map(String::as_str) == Some(v.as_str()));
+                if hit {
+                    job.insert("__plant_fail".to_string(), "1".to_string());
+                }
+            }
+        }
+        out
+    }
+
+    /// Stable one-line identity of the whole grid — the sweep's
+    /// content-addressed results directory hashes this.
+    pub fn canonical(&self) -> String {
+        let mut parts = vec![format!("experiment={}", self.experiment)];
+        for (k, vs) in &self.axes {
+            parts.push(format!("{k}=[{}]", vs.join(",")));
+        }
+        for (k, v) in &self.extras {
+            parts.push(format!("{k}={v}"));
+        }
+        if let Some(m) = &self.plant_fail {
+            let pairs: Vec<String> = m.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            parts.push(format!("plant_fail=[{}]", pairs.join(",")));
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GRID: &str = r#"
+        [grid]
+        experiment = "memcmp"
+        policy  = ["afs", "memaware"]
+        machine = ["smp-4", "numa-4x4"]
+        seed    = [1, 2]
+
+        [run]
+        engine = "sim"
+        smoke  = true
+    "#;
+
+    #[test]
+    fn axes_expand_to_the_cartesian_product() {
+        let g = GridSpec::from_toml(GRID).unwrap();
+        assert_eq!(g.experiment, "memcmp");
+        let jobs = g.jobs();
+        assert_eq!(jobs.len(), 2 * 2 * 2);
+        // policy maps to the experiments' scheds parameter; [run]
+        // constants ride on every cell.
+        for job in &jobs {
+            assert!(job.contains_key("scheds"), "{job:?}");
+            assert_eq!(job.get("engine").unwrap(), "sim");
+            assert_eq!(job.get("smoke").unwrap(), "true");
+        }
+        // All cells are distinct.
+        let mut keys: Vec<String> = jobs
+            .iter()
+            .map(|j| {
+                j.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(" ")
+            })
+            .collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 8, "cells must be distinct");
+    }
+
+    #[test]
+    fn plant_fail_marks_only_matching_cells() {
+        let spec = format!("{GRID}\n[sweep]\nplant_fail = \"machine=smp-4 seed=2\"\n");
+        let g = GridSpec::from_toml(&spec).unwrap();
+        let jobs = g.jobs();
+        let planted: Vec<_> =
+            jobs.iter().filter(|j| j.contains_key("__plant_fail")).collect();
+        assert_eq!(planted.len(), 2, "one per policy value");
+        for j in &planted {
+            assert_eq!(j.get("machine").unwrap(), "smp-4");
+            assert_eq!(j.get("seed").unwrap(), "2");
+        }
+    }
+
+    #[test]
+    fn canonical_is_stable_and_covers_the_grid() {
+        let a = GridSpec::from_toml(GRID).unwrap().canonical();
+        let b = GridSpec::from_toml(GRID).unwrap().canonical();
+        assert_eq!(a, b);
+        assert!(a.contains("experiment=memcmp"), "{a}");
+        assert!(a.contains("scheds=[afs,memaware]"), "{a}");
+        assert!(a.contains("engine=sim"), "{a}");
+    }
+
+    #[test]
+    fn malformed_grids_error_loudly() {
+        // A non-array axis.
+        assert!(GridSpec::from_toml("[grid]\npolicy = \"afs\"").is_err());
+        // An empty axis.
+        assert!(GridSpec::from_toml("[grid]\npolicy = []").is_err());
+        // No axes at all.
+        assert!(GridSpec::from_toml("[run]\nengine = \"sim\"").is_err());
+        // Unknown sections.
+        assert!(GridSpec::from_toml("[grid]\npolicy = [\"afs\"]\n[warp]\nx = 1").is_err());
+        // A malformed matcher.
+        let e = GridSpec::from_toml("[grid]\npolicy = [\"afs\"]\n[sweep]\nplant_fail = \"oops\"");
+        assert!(e.is_err());
+    }
+}

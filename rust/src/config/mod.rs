@@ -6,8 +6,10 @@
 //! arrays, comments), and [`schema`] maps parsed values onto typed
 //! experiment configs.
 
+pub mod grid;
 pub mod schema;
 pub mod toml;
 
+pub use grid::GridSpec;
 pub use schema::{ExperimentConfig, MachineConfig, SchedConfig, SchedKind, WorkloadConfig};
 pub use toml::{parse, Value};

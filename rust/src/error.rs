@@ -32,6 +32,12 @@ pub enum Error {
     /// I/O errors (artifact files, traces).
     #[error(transparent)]
     Io(#[from] std::io::Error),
+
+    /// A command finished with a report that must reach stdout and a
+    /// specific process exit code (sweep failures exit 1, sweep-diff
+    /// regressions exit 2 — the per-job / gate exit-code contract).
+    #[error("{report}")]
+    Exit { code: i32, report: String },
 }
 
 impl From<xla::Error> for Error {

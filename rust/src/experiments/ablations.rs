@@ -9,10 +9,12 @@
 
 use std::sync::Arc;
 
-use crate::apps::amr::{self, AmrParams};
+use super::harness;
+use crate::apps::amr::{self, AmrParams, SkewParams};
 use crate::apps::conduction::{self, HeatParams};
 use crate::apps::{engine_with, StructureMode};
 use crate::config::SchedKind;
+use crate::error::{Error, Result};
 use crate::sched::factory::make_default;
 use crate::sched::{BubbleConfig, BubbleScheduler};
 use crate::sim::SimConfig;
@@ -38,6 +40,83 @@ impl Ablation {
 
     pub fn get(&self, name: &str) -> u64 {
         self.rows.iter().find(|(n, _)| n == name).expect("row").1
+    }
+
+    /// Structured harness rows: one per variant, keyed by the sweep
+    /// this ablation belongs to.
+    pub fn harness_rows(&self, which: &str) -> Vec<harness::Row> {
+        self.rows
+            .iter()
+            .map(|(name, time)| {
+                harness::Row::new()
+                    .label("ablation", which)
+                    .label("variant", name.clone())
+                    .int("makespan", *time)
+            })
+            .collect()
+    }
+}
+
+/// The `ablations` experiment on the shared harness: `repro ablations`
+/// and sweep grid cells both run through here. The `workload` param
+/// selects the sweep (`--which` stays as the CLI spelling).
+pub struct AblationsExperiment;
+
+const PARAMS: &[harness::ParamSpec] = &[
+    harness::ParamSpec { key: "machine", help: "machine preset (default numa-4x4)" },
+    harness::ParamSpec { key: "workload", help: "burst|regen|zoo|memory|all (default all)" },
+    harness::ParamSpec { key: "which", help: "alias of workload (CLI spelling)" },
+];
+
+impl harness::Experiment for AblationsExperiment {
+    fn name(&self) -> &'static str {
+        "ablations"
+    }
+
+    fn param_schema(&self) -> &'static [harness::ParamSpec] {
+        PARAMS
+    }
+
+    fn run(&self, args: &harness::Params) -> Result<harness::RunOutput> {
+        let topo = args.machine()?;
+        let which = args.get("workload").or_else(|| args.get("which")).unwrap_or("all");
+        let mut text = String::new();
+        let mut rows = Vec::new();
+        if which == "burst" || which == "all" {
+            let a = burst_level(&topo, &HeatParams::conduction());
+            rows.extend(a.harness_rows("burst"));
+            text.push_str(&a.render());
+            text.push('\n');
+        }
+        if which == "regen" || which == "all" {
+            let a = regeneration_skewed(&topo, &SkewParams::default());
+            rows.extend(a.harness_rows("regen-skew"));
+            text.push_str(&a.render());
+            text.push('\n');
+            let a = regeneration(
+                &topo,
+                &AmrParams { cycles: 12, redraw_every: 3, ..Default::default() },
+            );
+            rows.extend(a.harness_rows("regen-amr"));
+            text.push_str(&a.render());
+            text.push('\n');
+        }
+        if which == "zoo" || which == "all" {
+            let a = scheduler_zoo(&topo, &HeatParams::conduction());
+            rows.extend(a.harness_rows("zoo"));
+            text.push_str(&a.render());
+            text.push('\n');
+        }
+        if which == "memory" || which == "all" {
+            let a = memory_policy(&topo, &HeatParams::conduction());
+            rows.extend(a.harness_rows("memory"));
+            text.push_str(&a.render());
+            text.push('\n');
+        }
+        if text.is_empty() {
+            return Err(Error::config(format!("unknown ablation `{which}`")));
+        }
+        Ok(harness::RunOutput { text, rows, artifact: None })
     }
 }
 

@@ -19,8 +19,10 @@
 
 use std::sync::atomic::Ordering;
 
+use super::harness;
 use crate::apps::engine_with;
 use crate::config::SchedKind;
+use crate::error::{Error, Result};
 use crate::sched::factory::make_default;
 use crate::sim::{Program, SimConfig, SimEngine};
 use crate::task::{TaskId, PRIO_THREAD};
@@ -201,17 +203,110 @@ impl AdaptCmp {
         format!("== {} ==\n{}", self.title, t.render())
     }
 
-    /// Minimal JSON for the CI artifact trail (`BENCH_adaptive.json`).
-    pub fn json_rows(&self, workload: &str) -> Vec<String> {
+    /// Structured harness rows for the artifact trail and the sweep
+    /// runner (`BENCH_adaptive.json`).
+    pub fn harness_rows(&self, workload: &str) -> Vec<harness::Row> {
         self.rows
             .iter()
             .map(|r| {
-                format!(
-                    "{{\"workload\":\"{}\",\"policy\":\"{}\",\"makespan\":{},\"local_ratio\":{:.4},\"migrations\":{},\"cross_node\":{}}}",
-                    workload, r.sched, r.makespan, r.local_ratio, r.migrations, r.cross_node
-                )
+                harness::Row::new()
+                    .label("workload", workload)
+                    .label("policy", r.sched.clone())
+                    .int("makespan", r.makespan)
+                    .float("local_ratio", r.local_ratio)
+                    .int("migrations", r.migrations)
+                    .int("cross_node", r.cross_node)
             })
             .collect()
+    }
+}
+
+/// The `adaptcmp` experiment on the shared harness: `repro adaptcmp`
+/// and sweep grid cells both run through here. The `workload` param
+/// narrows the run to one of the two load shapes (grids sweep them as
+/// an axis); the CLI default runs both, as it always has.
+pub struct AdaptCmpExperiment;
+
+const PARAMS: &[harness::ParamSpec] = &[
+    harness::ParamSpec { key: "machine", help: "machine preset (default numa-4x4)" },
+    harness::ParamSpec { key: "scheds", help: "comma-separated policy list" },
+    harness::ParamSpec { key: "workload", help: "phase|bursty|both (default both)" },
+    harness::ParamSpec { key: "seed", help: "sim engine seed" },
+    harness::ParamSpec { key: "smoke", help: "small CI-sized run" },
+    harness::ParamSpec { key: "trace", help: "write first-leg Chrome trace to this path" },
+];
+
+impl harness::Experiment for AdaptCmpExperiment {
+    fn name(&self) -> &'static str {
+        "adaptcmp"
+    }
+
+    fn param_schema(&self) -> &'static [harness::ParamSpec] {
+        PARAMS
+    }
+
+    fn run(&self, args: &harness::Params) -> Result<harness::RunOutput> {
+        let topo = args.machine()?;
+        let kinds = args.kinds(default_kinds())?;
+        let smoke = args.flag("smoke");
+        let seed = args.u64_or("seed", SimConfig::default().seed);
+        let (pp, bp) = if smoke {
+            (PhaseParams::smoke(&topo), BurstParams::smoke(&topo))
+        } else {
+            (PhaseParams::for_machine(&topo), BurstParams::for_machine(&topo))
+        };
+        let trace_out = args.get("trace");
+        let workload = args.str_or("workload", "both");
+        let (want_phase, want_bursty) = match workload {
+            "phase" => (true, false),
+            "bursty" => (false, true),
+            "both" => (true, true),
+            other => {
+                return Err(Error::config(format!(
+                    "unknown workload `{other}` (want phase|bursty|both)"
+                )))
+            }
+        };
+        let mut rows = Vec::new();
+        let mut tables = Vec::new();
+        if want_phase {
+            let phase = run_phase(&topo, &pp, &kinds, seed, trace_out);
+            rows.extend(phase.harness_rows("phase"));
+            tables.push(phase.render());
+        }
+        if want_bursty {
+            let bursty = run_bursty(&topo, &bp, &kinds, seed);
+            rows.extend(bursty.harness_rows("bursty"));
+            tables.push(bursty.render());
+        }
+        let artifact = harness::Artifact {
+            bench: "adaptcmp".to_string(),
+            mode: if smoke { "smoke" } else { "full" }.to_string(),
+            machine: topo.name().to_string(),
+            seed: Some(seed),
+            config: args.canonical(),
+            extras: Vec::new(),
+            rows: rows.clone(),
+        };
+        let trace_note = match trace_out {
+            Some(p) => format!("\nwrote first-leg Chrome trace to {p}"),
+            None => String::new(),
+        };
+        let text = format!(
+            "adaptive steal-scope comparison on `{}`{}\n\n{}{}",
+            topo.name(),
+            if smoke { " (smoke)" } else { "" },
+            tables.join("\n"),
+            trace_note
+        );
+        Ok(harness::RunOutput {
+            text,
+            rows,
+            artifact: Some(harness::ArtifactOut {
+                path: "BENCH_adaptive.json".to_string(),
+                artifact,
+            }),
+        })
     }
 }
 
@@ -362,6 +457,6 @@ mod tests {
             assert!(out.contains(k.label()), "{} missing:\n{out}", k.label());
         }
         assert!(out.contains("widens"));
-        assert_eq!(c.json_rows("phase").len(), default_kinds().len());
+        assert_eq!(c.harness_rows("phase").len(), default_kinds().len());
     }
 }

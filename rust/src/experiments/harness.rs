@@ -1,0 +1,366 @@
+//! Shared experiment harness: one `Experiment` trait, one `Row` shape,
+//! one provenance-stamped artifact writer.
+//!
+//! Before this layer each experiment (`memcmp`, `adaptcmp`, `serve`,
+//! the ablations) carried its own CLI glue, run loop and hand-rolled
+//! JSON assembly. Now they all implement [`Experiment`]: a name, a
+//! declared parameter schema, and `run(&Params) -> RunOutput` whose
+//! [`Row`]s — string *labels* identifying the cell plus numeric
+//! *metrics* — are what both the CLI artifact writer and the
+//! `repro sweep` grid runner consume. Every artifact is stamped with
+//! provenance ([`Artifact::json`]): schema version, git revision and
+//! the FNV-1a config hash shared with the bench gate
+//! ([`crate::bench::gate::fnv1a`]), so result history stays comparable
+//! across runs, machines and commits.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::bench::gate;
+use crate::config::SchedKind;
+use crate::error::{Error, Result};
+use crate::topology::Topology;
+
+/// Artifact schema version: bumped when the artifact envelope changes.
+/// Version 3 added the provenance fields (`git_rev`, `config_hash`)
+/// and the harness-rendered `results` rows.
+pub const SCHEMA_VERSION: u32 = 3;
+
+/// One declared parameter of an experiment: the key as it appears on
+/// the CLI (`--key value`) and in sweep cells, plus a help line.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamSpec {
+    pub key: &'static str,
+    pub help: &'static str,
+}
+
+/// Flat string parameters for one experiment run — the single currency
+/// between the CLI (`--key value` options), the sweep runner (grid
+/// axes) and the experiments themselves. Stored sorted so
+/// [`Params::canonical`] is a stable hash input.
+#[derive(Debug, Clone, Default)]
+pub struct Params {
+    map: BTreeMap<String, String>,
+}
+
+impl Params {
+    pub fn new() -> Params {
+        Params::default()
+    }
+
+    /// Adopt parsed CLI options verbatim.
+    pub fn from_options(options: &HashMap<String, String>) -> Params {
+        Params { map: options.iter().map(|(k, v)| (k.clone(), v.clone())).collect() }
+    }
+
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.map.insert(key.to_string(), value.into());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Boolean flag: present and not explicitly disabled.
+    pub fn flag(&self, key: &str) -> bool {
+        self.map.get(key).map(|v| v != "false" && v != "0").unwrap_or(false)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.map.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.map.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Build the machine named by the `machine` param (`numa-4x4` when
+    /// absent), with the error message every CLI test pins.
+    pub fn machine(&self) -> Result<Topology> {
+        let name = self.str_or("machine", "numa-4x4");
+        Topology::preset(name).ok_or_else(|| {
+            Error::config(format!(
+                "unknown machine `{name}`; presets: {:?}",
+                Topology::preset_names()
+            ))
+        })
+    }
+
+    /// Parse the comma-separated `scheds` param into policy kinds, or
+    /// fall back to the experiment's default list.
+    pub fn kinds(&self, default: Vec<SchedKind>) -> Result<Vec<SchedKind>> {
+        match self.get("scheds") {
+            Some(list) => list
+                .split(',')
+                .map(|s| {
+                    SchedKind::parse(s.trim()).ok_or_else(|| {
+                        Error::config(format!(
+                            "unknown scheduler `{s}`; try `repro schedulers`"
+                        ))
+                    })
+                })
+                .collect(),
+            None => Ok(default),
+        }
+    }
+
+    /// Sorted `k=v` pairs joined by spaces: the canonical config string
+    /// hashed into artifact provenance and sweep job identities.
+    pub fn canonical(&self) -> String {
+        let pairs: Vec<String> = self.map.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        pairs.join(" ")
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(String::as_str)
+    }
+
+    pub fn pairs(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+/// One numeric result value. Integers render bare; floats render with
+/// four decimals (enough for ratios, stable for bit-identical diffs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Metric {
+    Int(u64),
+    Float(f64),
+}
+
+impl Metric {
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Metric::Int(v) => v as f64,
+            Metric::Float(v) => v,
+        }
+    }
+
+    fn json(self) -> String {
+        match self {
+            Metric::Int(v) => v.to_string(),
+            Metric::Float(v) => {
+                if v.is_finite() {
+                    format!("{v:.4}")
+                } else {
+                    "null".to_string()
+                }
+            }
+        }
+    }
+}
+
+/// One result row: string labels that identify the cell (policy,
+/// structure, engine, workload, ...) plus numeric metrics. The JSON
+/// rendering is flat, so [`crate::bench::gate::parse_cells`] can pull
+/// the rows back out of any artifact for regression diffs.
+#[derive(Debug, Clone, Default)]
+pub struct Row {
+    labels: Vec<(String, String)>,
+    metrics: Vec<(String, Metric)>,
+}
+
+impl Row {
+    pub fn new() -> Row {
+        Row::default()
+    }
+
+    pub fn label(mut self, key: &str, value: impl Into<String>) -> Row {
+        self.labels.push((key.to_string(), value.into()));
+        self
+    }
+
+    pub fn int(mut self, key: &str, value: u64) -> Row {
+        self.metrics.push((key.to_string(), Metric::Int(value)));
+        self
+    }
+
+    pub fn float(mut self, key: &str, value: f64) -> Row {
+        self.metrics.push((key.to_string(), Metric::Float(value)));
+        self
+    }
+
+    pub fn get_label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_f64())
+    }
+
+    /// Stable cell identity: sorted `k=v` label pairs (the same key
+    /// shape [`crate::bench::gate::parse_cells`] reconstructs).
+    pub fn key(&self) -> String {
+        let mut pairs: Vec<String> =
+            self.labels.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        pairs.sort();
+        pairs.join(" ")
+    }
+
+    /// Flat JSON object, labels first then metrics, insertion order.
+    pub fn json(&self) -> String {
+        let mut fields: Vec<String> =
+            self.labels.iter().map(|(k, v)| format!("\"{k}\":\"{v}\"")).collect();
+        fields.extend(self.metrics.iter().map(|(k, v)| format!("\"{k}\":{}", v.json())));
+        format!("{{{}}}", fields.join(","))
+    }
+}
+
+/// The provenance-stamped artifact envelope every experiment writes.
+/// `extras` are pre-rendered JSON values (numbers, booleans, quoted
+/// strings) appended verbatim after the common header fields.
+#[derive(Debug, Clone, Default)]
+pub struct Artifact {
+    pub bench: String,
+    pub mode: String,
+    pub machine: String,
+    pub seed: Option<u64>,
+    /// Canonical config string; hashed (FNV-1a) into `config_hash`.
+    pub config: String,
+    pub extras: Vec<(String, String)>,
+    pub rows: Vec<Row>,
+}
+
+impl Artifact {
+    pub fn json(&self) -> String {
+        let mut s = format!(
+            "{{\n  \"bench\": \"{}\",\n  \"schema\": {},\n  \"git_rev\": \"{}\",\n  \"config_hash\": \"{:016x}\",\n  \"mode\": \"{}\",\n  \"machine\": \"{}\"",
+            self.bench,
+            SCHEMA_VERSION,
+            gate::git_rev(),
+            gate::fnv1a(&self.config),
+            self.mode,
+            self.machine
+        );
+        if let Some(seed) = self.seed {
+            s.push_str(&format!(",\n  \"seed\": {seed}"));
+        }
+        for (k, v) in &self.extras {
+            s.push_str(&format!(",\n  \"{k}\": {v}"));
+        }
+        let rows: Vec<String> = self.rows.iter().map(Row::json).collect();
+        s.push_str(&format!(",\n  \"results\": [{}]\n}}\n", rows.join(",\n")));
+        s
+    }
+}
+
+/// An artifact plus the default path the CLI writes it to.
+#[derive(Debug, Clone)]
+pub struct ArtifactOut {
+    pub path: String,
+    pub artifact: Artifact,
+}
+
+/// What one experiment run produces: the human-readable report text,
+/// the structured rows, and (for experiments that keep a `BENCH_*.json`
+/// trail) the artifact. The CLI prints `text` and writes the artifact;
+/// the sweep runner keeps only the rows and writes its own
+/// content-addressed cell artifact.
+#[derive(Debug, Clone, Default)]
+pub struct RunOutput {
+    pub text: String,
+    pub rows: Vec<Row>,
+    pub artifact: Option<ArtifactOut>,
+}
+
+/// A named, parameterised experiment the CLI and the sweep runner can
+/// both drive.
+pub trait Experiment {
+    fn name(&self) -> &'static str;
+    /// The parameters this experiment accepts — sweep cells are
+    /// validated against this schema so a typo'd grid axis fails
+    /// loudly instead of being ignored.
+    fn param_schema(&self) -> &'static [ParamSpec];
+    fn run(&self, p: &Params) -> Result<RunOutput>;
+}
+
+/// Every registered experiment, in listing order.
+pub fn registry() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(super::memcmp::MemCmpExperiment),
+        Box::new(super::adaptcmp::AdaptCmpExperiment),
+        Box::new(super::serve::ServeExperiment),
+        Box::new(super::ablations::AblationsExperiment),
+    ]
+}
+
+/// Look an experiment up by name.
+pub fn lookup(name: &str) -> Option<Box<dyn Experiment>> {
+    registry().into_iter().find(|e| e.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_canonical_is_sorted_and_stable() {
+        let mut p = Params::new();
+        p.set("seed", "1");
+        p.set("machine", "smp-4");
+        p.set("scheds", "afs");
+        assert_eq!(p.canonical(), "machine=smp-4 scheds=afs seed=1");
+        let mut q = Params::new();
+        q.set("scheds", "afs");
+        q.set("machine", "smp-4");
+        q.set("seed", "1");
+        assert_eq!(p.canonical(), q.canonical(), "insertion order must not matter");
+    }
+
+    #[test]
+    fn row_json_is_flat_and_cells_round_trip() {
+        let row = Row::new()
+            .label("engine", "sim")
+            .label("policy", "afs")
+            .int("makespan", 1200)
+            .float("local_ratio", 0.75);
+        let json = row.json();
+        assert_eq!(
+            json,
+            r#"{"engine":"sim","policy":"afs","makespan":1200,"local_ratio":0.7500}"#
+        );
+        crate::util::json::validate(&json).unwrap();
+        // The gate's generic cell extractor reconstructs the row key.
+        let cells = gate::parse_cells(&json, &["makespan"]);
+        assert_eq!(cells, vec![(format!("{}:makespan", row.key()), 1200.0)]);
+    }
+
+    #[test]
+    fn artifact_json_carries_provenance() {
+        let art = Artifact {
+            bench: "memcmp".into(),
+            mode: "smoke".into(),
+            machine: "numa-2x2".into(),
+            seed: Some(7),
+            config: "machine=numa-2x2 seed=7".into(),
+            extras: vec![("engine".into(), "\"sim\"".into()), ("cpus".into(), "4".into())],
+            rows: vec![Row::new().label("policy", "afs").int("makespan", 10)],
+        };
+        let json = art.json();
+        crate::util::json::validate(&json).unwrap_or_else(|e| panic!("invalid: {e}\n{json}"));
+        assert!(json.contains("\"schema\": 3"), "{json}");
+        assert!(json.contains("\"git_rev\""), "{json}");
+        assert!(json.contains(&format!(
+            "\"config_hash\": \"{:016x}\"",
+            gate::fnv1a("machine=numa-2x2 seed=7")
+        )));
+        assert!(json.contains("\"seed\": 7"), "{json}");
+        assert!(json.contains("\"cpus\": 4"), "{json}");
+        assert!(json.contains("\"policy\":\"afs\""), "{json}");
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_looked_up() {
+        let names: Vec<&str> = registry().iter().map(|e| e.name()).collect();
+        assert_eq!(names, vec!["memcmp", "adaptcmp", "serve", "ablations"]);
+        for n in names {
+            assert!(lookup(n).is_some(), "{n} must resolve");
+            let exp = lookup(n).unwrap();
+            assert!(!exp.param_schema().is_empty(), "{n} must declare params");
+        }
+        assert!(lookup("warp").is_none());
+    }
+}

@@ -24,9 +24,11 @@
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
+use super::harness;
 use crate::apps::conduction::{self, HeatParams};
 use crate::apps::{engine_with, StructureMode};
 use crate::config::SchedKind;
+use crate::error::{Error, Result};
 use crate::exec::Executor;
 use crate::mem::AllocPolicy;
 use crate::sched::factory::make_default;
@@ -109,27 +111,168 @@ impl MemCmp {
         format!("== {} ==\n{}", self.title, t.render())
     }
 
-    /// Minimal JSON rows for the CI artifact trail
-    /// (`BENCH_mem_native.json`).
-    pub fn json_rows(&self, engine: &str) -> Vec<String> {
+    /// Structured harness rows for the artifact trail and the sweep
+    /// runner: labels identify the cell, metrics carry the numbers.
+    pub fn harness_rows(&self, engine: &str) -> Vec<harness::Row> {
         self.rows
             .iter()
             .map(|r| {
-                format!(
-                    "{{\"engine\":\"{engine}\",\"policy\":\"{}\",\"structure\":\"{}\",\"makespan\":{},\"local_ratio\":{:.4},\"steals\":{},\"mem_migrations\":{},\"migrated_bytes\":{},\"preemptions\":{},\"workers_pinned\":{},\"pin_failures\":{}}}",
-                    r.sched,
-                    r.structure,
-                    r.makespan,
-                    r.local_ratio,
-                    r.steals,
-                    r.mem_migrations,
-                    r.migrated_bytes,
-                    r.preemptions,
-                    r.workers_pinned,
-                    r.pin_failures
-                )
+                harness::Row::new()
+                    .label("engine", engine)
+                    .label("policy", r.sched.clone())
+                    .label("structure", r.structure.clone())
+                    .int("makespan", r.makespan)
+                    .float("local_ratio", r.local_ratio)
+                    .int("steals", r.steals)
+                    .int("mem_migrations", r.mem_migrations)
+                    .int("migrated_bytes", r.migrated_bytes)
+                    .int("preemptions", r.preemptions)
+                    .int("workers_pinned", r.workers_pinned)
+                    .int("pin_failures", r.pin_failures)
             })
             .collect()
+    }
+}
+
+/// The `memcmp` experiment on the shared harness: `repro memcmp` and
+/// sweep grid cells both run through here.
+pub struct MemCmpExperiment;
+
+const PARAMS: &[harness::ParamSpec] = &[
+    harness::ParamSpec { key: "machine", help: "machine preset (default numa-4x4)" },
+    harness::ParamSpec { key: "scheds", help: "comma-separated policy list" },
+    harness::ParamSpec { key: "engine", help: "sim|native (default sim)" },
+    harness::ParamSpec { key: "structure", help: "simple|bubbles|both (native only)" },
+    harness::ParamSpec { key: "arena", help: "back regions with real mmap pages (native only)" },
+    harness::ParamSpec { key: "seed", help: "sim engine seed" },
+    harness::ParamSpec { key: "smoke", help: "small CI-sized run" },
+    harness::ParamSpec { key: "trace", help: "write first-leg Chrome trace to this path" },
+];
+
+impl harness::Experiment for MemCmpExperiment {
+    fn name(&self) -> &'static str {
+        "memcmp"
+    }
+
+    fn param_schema(&self) -> &'static [harness::ParamSpec] {
+        PARAMS
+    }
+
+    fn run(&self, args: &harness::Params) -> Result<harness::RunOutput> {
+        let topo = args.machine()?;
+        let kinds = args.kinds(default_kinds())?;
+        let smoke = args.flag("smoke");
+        let seed = args.u64_or("seed", SimConfig::default().seed);
+        let trace_out = args.get("trace");
+        let trace_note = match trace_out {
+            Some(p) => format!("\nwrote first-leg Chrome trace to {p}"),
+            None => String::new(),
+        };
+        // Oversubscribe the machine so rebalancing pressure is real:
+        // that is where memory-blind policies scatter accesses.
+        let p = HeatParams {
+            threads: topo.n_cpus() + topo.n_cpus() / 2,
+            cycles: if smoke { 4 } else { 20 },
+            ..HeatParams::conduction()
+        };
+        match args.str_or("engine", "sim") {
+            "sim" => {
+                if args.get("structure").is_some() {
+                    return Err(Error::config(
+                        "--structure applies to --engine native only (the sim harness \
+                         picks the structure per policy)"
+                            .to_string(),
+                    ));
+                }
+                if args.flag("arena") {
+                    return Err(Error::config(
+                        "--arena applies to --engine native only (the sim engine models \
+                         memory, it does not touch real pages)"
+                            .to_string(),
+                    ));
+                }
+                let c = run(&topo, &p, &kinds, seed, trace_out);
+                let text = format!(
+                    "memory locality comparison on `{}` ({} stripes, {} cycles, seed {seed})\n\n{}{}",
+                    topo.name(),
+                    p.threads,
+                    p.cycles,
+                    c.render(),
+                    trace_note
+                );
+                Ok(harness::RunOutput { text, rows: c.harness_rows("sim"), artifact: None })
+            }
+            "native" => {
+                let touches = if smoke { 2 } else { 4 };
+                let structure = args.str_or("structure", "both");
+                let modes: Vec<StructureMode> = match structure {
+                    "simple" => vec![StructureMode::Simple],
+                    "bubbles" => vec![StructureMode::Bubbles],
+                    "both" => vec![StructureMode::Simple, StructureMode::Bubbles],
+                    other => {
+                        return Err(Error::config(format!(
+                            "unknown structure `{other}` (want simple|bubbles|both)"
+                        )))
+                    }
+                };
+                let c = run_native(
+                    &topo,
+                    &p,
+                    &kinds,
+                    touches,
+                    AllocPolicy::FirstTouch,
+                    args.flag("arena"),
+                    &modes,
+                    trace_out,
+                );
+                let rows = c.harness_rows("native");
+                // No seed in the native artifact: native makespans are
+                // wall clock and OS scheduling makes them run-to-run
+                // noisy — a seed field would falsely promise
+                // reproducibility. The structure axis lives on each
+                // result row, and the detected shape rides along so the
+                // CI detect leg can check the machine the workers
+                // actually ran on.
+                let artifact = harness::Artifact {
+                    bench: "memcmp".to_string(),
+                    mode: if smoke { "smoke" } else { "full" }.to_string(),
+                    machine: topo.name().to_string(),
+                    seed: None,
+                    config: args.canonical(),
+                    extras: vec![
+                        ("engine".to_string(), "\"native\"".to_string()),
+                        ("cpus".to_string(), topo.n_cpus().to_string()),
+                        ("numa_nodes".to_string(), topo.n_numa().to_string()),
+                        ("pinnable".to_string(), topo.os_cpus().is_some().to_string()),
+                    ],
+                    rows: rows.clone(),
+                };
+                let seed_note = if args.get("seed").is_some() {
+                    "\nnote: --seed applies to the sim engine only; native makespans are wall-clock"
+                } else {
+                    ""
+                };
+                let text = format!(
+                    "memory locality comparison on `{}` (native engine, {} green threads, {} cycles, structure {})\n\n{}{}{}",
+                    topo.name(),
+                    p.threads,
+                    p.cycles,
+                    structure,
+                    c.render(),
+                    seed_note,
+                    trace_note
+                );
+                Ok(harness::RunOutput {
+                    text,
+                    rows,
+                    artifact: Some(harness::ArtifactOut {
+                        path: "BENCH_mem_native.json".to_string(),
+                        artifact,
+                    }),
+                })
+            }
+            other => Err(Error::config(format!("unknown engine `{other}` (want sim|native)"))),
+        }
     }
 }
 
@@ -315,7 +458,7 @@ mod tests {
         for k in default_kinds() {
             assert!(out.contains(k.label()), "{} missing:\n{out}", k.label());
         }
-        assert_eq!(c.json_rows("sim").len(), default_kinds().len());
+        assert_eq!(c.harness_rows("sim").len(), default_kinds().len());
     }
 
     #[test]
@@ -379,7 +522,8 @@ mod tests {
         }
         let out = c.render();
         assert!(out.contains("Simple") && out.contains("Bubbles"), "{out}");
-        for j in c.json_rows("native") {
+        for r in c.harness_rows("native") {
+            let j = r.json();
             assert!(j.contains("\"structure\""), "{j}");
         }
     }

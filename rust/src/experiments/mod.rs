@@ -7,7 +7,9 @@
 pub mod ablations;
 pub mod adaptcmp;
 pub mod fig5;
+pub mod harness;
 pub mod memcmp;
 pub mod serve;
+pub mod sweep;
 pub mod table1;
 pub mod table2;

@@ -14,10 +14,11 @@
 
 use std::collections::HashMap;
 
+use super::harness;
 use crate::config::SchedKind;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::serve::{
-    quantile, run_native, run_sim, Arrival, GenConfig, ServeConfig, ServeOutcome,
+    quantile, run_native, run_sim, Arrival, GenConfig, JobApp, ServeConfig, ServeOutcome,
 };
 use crate::topology::Topology;
 use crate::util::fmt::Table;
@@ -91,27 +92,152 @@ impl ServeCmp {
         format!("== {} ==\n{}", self.title, t.render())
     }
 
-    /// JSON result rows for the `BENCH_serve.json` artifact.
-    pub fn json_rows(&self) -> Vec<String> {
+    /// Structured harness rows for the `BENCH_serve.json` artifact and
+    /// the sweep runner. `mix_makespan` and `p99_slowdown` are the
+    /// gated metrics ([`crate::bench::gate::GATED_METRICS`]).
+    pub fn harness_rows(&self) -> Vec<harness::Row> {
         self.rows
             .iter()
             .map(|r| {
-                format!(
-                    "{{\"engine\":\"{}\",\"policy\":\"{}\",\"jobs\":{},\"lost\":{},\"mix_makespan\":{},\"admission_p50\":{},\"admission_p99\":{},\"p95_slowdown\":{:.4},\"p99_slowdown\":{:.4},\"admission_throughput\":{:.2},\"mean_local_ratio\":{:.4}}}",
-                    r.engine,
-                    r.policy,
-                    r.jobs,
-                    r.lost,
-                    r.mix_makespan,
-                    r.admission_p50,
-                    r.admission_p99,
-                    r.p95_slowdown,
-                    r.p99_slowdown,
-                    r.admission_throughput,
-                    r.mean_local_ratio
-                )
+                harness::Row::new()
+                    .label("engine", r.engine.clone())
+                    .label("policy", r.policy.clone())
+                    .int("jobs", r.jobs as u64)
+                    .int("lost", r.lost as u64)
+                    .int("mix_makespan", r.mix_makespan)
+                    .int("admission_p50", r.admission_p50)
+                    .int("admission_p99", r.admission_p99)
+                    .float("p95_slowdown", r.p95_slowdown)
+                    .float("p99_slowdown", r.p99_slowdown)
+                    .float("admission_throughput", r.admission_throughput)
+                    .float("mean_local_ratio", r.mean_local_ratio)
             })
             .collect()
+    }
+}
+
+/// The `serve` experiment on the shared harness: `repro serve` and
+/// sweep grid cells both run through here. The `workload` param selects
+/// the app shape the generator gives jobs (`touch` is the classic
+/// region-touch job; `conduction`/`amr` emit real-app jobs; `mix`
+/// sprinkles app jobs into the touch stream) so app shape is a grid
+/// axis.
+pub struct ServeExperiment;
+
+const PARAMS: &[harness::ParamSpec] = &[
+    harness::ParamSpec { key: "machine", help: "machine preset (default numa-4x4)" },
+    harness::ParamSpec { key: "engine", help: "sim|native|both (default both)" },
+    harness::ParamSpec { key: "workload", help: "touch|conduction|amr|mix (generated stream)" },
+    harness::ParamSpec { key: "jobs", help: "generated stream length (default 200)" },
+    harness::ParamSpec { key: "seed", help: "stream + engine seed" },
+    harness::ParamSpec { key: "submitters", help: "native submitter threads (default 4)" },
+    harness::ParamSpec { key: "queue", help: "serve a spool file instead of generating" },
+    harness::ParamSpec { key: "gap", help: "inter-arrival gap for --queue streams" },
+    harness::ParamSpec { key: "smoke", help: "CI stream: >= 1000 short jobs" },
+    harness::ParamSpec { key: "trace", help: "write first-leg Chrome trace to this path" },
+];
+
+impl harness::Experiment for ServeExperiment {
+    fn name(&self) -> &'static str {
+        "serve"
+    }
+
+    fn param_schema(&self) -> &'static [harness::ParamSpec] {
+        PARAMS
+    }
+
+    fn run(&self, args: &harness::Params) -> Result<harness::RunOutput> {
+        let topo = args.machine()?;
+        let smoke = args.flag("smoke");
+        let seed = args.u64_or("seed", crate::sim::SimConfig::default().seed);
+        let submitters = args.u64_or("submitters", 4).max(1) as usize;
+        let trace_out = args.get("trace");
+        let engines = match args.str_or("engine", "both") {
+            "sim" => (true, false),
+            "native" => (false, true),
+            "both" => (true, true),
+            other => {
+                return Err(Error::config(format!(
+                    "unknown engine `{other}` (want sim|native|both)"
+                )))
+            }
+        };
+        // The app shape the generated jobs carry (`touch` is the
+        // classic region-touch member program).
+        let (app, app_fraction) = match args.str_or("workload", "touch") {
+            "touch" => (None, 0.0),
+            "conduction" => (Some(JobApp::Conduction), 1.0),
+            "amr" => (Some(JobApp::Amr), 1.0),
+            "mix" => (None, 0.3),
+            other => {
+                return Err(Error::config(format!(
+                    "unknown workload `{other}` (want touch|conduction|amr|mix)"
+                )))
+            }
+        };
+        // The stream: a spool file (`serve --queue`, fed by
+        // `repro submit`) or the seeded bursty generator. `--smoke` is
+        // the CI stream: the ISSUE-8 acceptance floor of >= 1000 short
+        // jobs.
+        let (arrivals, source) = match args.get("queue") {
+            Some(path) => {
+                if args.get("workload").is_some() {
+                    return Err(Error::config(
+                        "--workload applies to the generated stream (the spool \
+                         carries each job's app)"
+                            .to_string(),
+                    ));
+                }
+                let specs = crate::serve::read_spool(path)?;
+                if specs.is_empty() {
+                    return Err(Error::config(format!("queue `{path}` holds no jobs")));
+                }
+                let gap = args.u64_or("gap", 10_000).max(1);
+                let n = specs.len();
+                let arrivals: Vec<_> =
+                    specs.into_iter().map(|spec| Arrival { gap, spec }).collect();
+                (arrivals, format!("queue {path} ({n} jobs)"))
+            }
+            None => {
+                let gen = if smoke {
+                    GenConfig { app, app_fraction, ..smoke_gen(seed) }
+                } else {
+                    GenConfig {
+                        jobs: args.u64_or("jobs", 200).max(1) as usize,
+                        seed,
+                        app,
+                        app_fraction,
+                        ..GenConfig::default()
+                    }
+                };
+                let arrivals = crate::serve::generate(&gen);
+                (arrivals, format!("generated stream ({} jobs, seed {seed})", gen.jobs))
+            }
+        };
+        let c = run(&topo, &arrivals, seed, engines, submitters, trace_out)?;
+        let rows = c.harness_rows();
+        let artifact = harness::Artifact {
+            bench: "serve".to_string(),
+            mode: if smoke { "smoke" } else { "full" }.to_string(),
+            machine: topo.name().to_string(),
+            seed: Some(seed),
+            config: args.canonical(),
+            extras: vec![("jobs".to_string(), arrivals.len().to_string())],
+            rows: rows.clone(),
+        };
+        let trace_note = match trace_out {
+            Some(p) => format!("\nwrote first-leg Chrome trace to {p}"),
+            None => String::new(),
+        };
+        let text = format!("{}\nsource: {source}\n\n{}{}", c.title, c.render(), trace_note);
+        Ok(harness::RunOutput {
+            text,
+            rows,
+            artifact: Some(harness::ArtifactOut {
+                path: "BENCH_serve.json".to_string(),
+                artifact,
+            }),
+        })
     }
 }
 
@@ -257,8 +383,9 @@ mod tests {
         }
         let out = c.render();
         assert!(out.contains("job-fair") && out.contains("job-fair-static"), "{out}");
-        assert_eq!(c.json_rows().len(), 4);
-        for j in c.json_rows() {
+        assert_eq!(c.harness_rows().len(), 4);
+        for r in c.harness_rows() {
+            let j = r.json();
             assert!(j.contains("\"p99_slowdown\""), "{j}");
         }
     }

@@ -1,0 +1,465 @@
+//! `repro sweep`: run an experiment grid unattended, with provenance.
+//!
+//! A [`GridSpec`] expands into cells (one parameter map each); the
+//! runner executes every cell as a **subprocess** (`repro sweep --cell
+//! <spec>`) so a panicking cell — including the deliberate
+//! `plant_fail` drill cells — costs one job, not the sweep. N worker
+//! threads drain the job queue; by default the sweep aborts after the
+//! first failure, `--continue-on-failure` finishes the grid either way.
+//!
+//! Results are content-addressed: the grid's canonical string hashes
+//! (FNV-1a, shared with the bench gate) into the results directory
+//! name, and each cell's canonical spec into its artifact file, so the
+//! same grid always lands in the same place and identical seeded runs
+//! are byte-identical. A `manifest.json` records every cell's hash,
+//! status and parameters.
+//!
+//! The exit-code contract, for unattended drivers:
+//!
+//! * cell subprocess: `0` ok, anything else (panic = 101) failed;
+//! * `repro sweep --grid`: exit `1` when any cell failed;
+//! * `repro sweep diff`: exit `2` when a matched cell regressed past
+//!   the gate threshold ([`crate::bench::gate::DEFAULT_THRESHOLD`]).
+//!
+//! `diff` accepts results directories (or their `manifest.json`) and
+//! compares matched cells — job params + row labels + metric — through
+//! [`crate::bench::gate::compare_cells`]; plain artifact files
+//! (`BENCH_serve.json`, a cell artifact) diff the same way, which is
+//! how CI gates the serve rows. Unmatched cells are reported, never
+//! gated. `SWEEP_INJECT_REGRESSION=<factor>` multiplies the current
+//! side's metrics — the CI drill proving the gate is armed.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::{Arc, Mutex};
+
+use super::harness;
+use crate::bench::gate;
+use crate::config::GridSpec;
+use crate::error::{Error, Result};
+use crate::util::json::{field_str, flat_objects};
+
+/// Runner knobs (`-j`, `--continue-on-failure`, `--out`).
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    pub workers: usize,
+    pub continue_on_failure: bool,
+    /// Parent of the per-grid content-addressed directory.
+    pub out_dir: String,
+    /// Binary to spawn per cell; the current executable when `None`.
+    pub repro_bin: Option<PathBuf>,
+}
+
+impl Default for SweepOptions {
+    fn default() -> SweepOptions {
+        SweepOptions {
+            workers: 4,
+            continue_on_failure: false,
+            out_dir: "results".to_string(),
+            repro_bin: None,
+        }
+    }
+}
+
+fn unknown_experiment(name: &str) -> Error {
+    let known: Vec<&str> = harness::registry().iter().map(|e| e.name()).collect();
+    Error::config(format!("unknown experiment `{name}` (have: {known:?})"))
+}
+
+/// Reject parameters the experiment does not declare — a typo'd grid
+/// axis fails the whole sweep upfront instead of being ignored.
+fn validate_params(exp: &dyn harness::Experiment, params: &harness::Params) -> Result<()> {
+    for key in params.keys() {
+        if !exp.param_schema().iter().any(|p| p.key == key) {
+            let known: Vec<&str> = exp.param_schema().iter().map(|p| p.key).collect();
+            return Err(Error::config(format!(
+                "experiment `{}` has no parameter `{key}` (schema: {known:?})",
+                exp.name()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Run one grid cell in this process (`repro sweep --cell <spec>`): the
+/// per-job subprocess entry point. The spec is space-separated `k=v`
+/// pairs; `experiment=<name>` picks the experiment and `__plant_fail=1`
+/// panics deliberately (the failure drill). `out` writes the cell's
+/// provenance-stamped artifact.
+pub fn run_cell(spec: &str, out: Option<&str>) -> Result<String> {
+    let mut map = BTreeMap::new();
+    for pair in spec.split_whitespace() {
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| Error::config(format!("cell spec needs `k=v` pairs, got `{pair}`")))?;
+        map.insert(k.to_string(), v.to_string());
+    }
+    if map.remove("__plant_fail").is_some() {
+        panic!("sweep: planted cell failure (drill)");
+    }
+    let experiment = map.remove("experiment").unwrap_or_else(|| "memcmp".to_string());
+    let exp = harness::lookup(&experiment).ok_or_else(|| unknown_experiment(&experiment))?;
+    let mut params = harness::Params::new();
+    for (k, v) in &map {
+        params.set(k, v.clone());
+    }
+    validate_params(exp.as_ref(), &params)?;
+    let run = exp.run(&params)?;
+    let note = match out {
+        Some(path) => {
+            // The cell artifact's config is the full canonical spec
+            // (params + experiment), matching the job hash the sweep
+            // runner names the file by.
+            let mut pairs: Vec<String> =
+                params.pairs().map(|(k, v)| format!("{k}={v}")).collect();
+            pairs.push(format!("experiment={experiment}"));
+            pairs.sort();
+            let artifact = harness::Artifact {
+                bench: "sweep-cell".to_string(),
+                mode: "cell".to_string(),
+                machine: params.str_or("machine", "numa-4x4").to_string(),
+                seed: params.get("seed").and_then(|s| s.parse().ok()),
+                config: pairs.join(" "),
+                extras: vec![
+                    ("experiment".to_string(), format!("\"{experiment}\"")),
+                    ("params".to_string(), format!("\"{}\"", params.canonical())),
+                ],
+                rows: run.rows.clone(),
+            };
+            std::fs::write(path, artifact.json())?;
+            format!("\nwrote {path}")
+        }
+        None => String::new(),
+    };
+    Ok(format!("{}{note}", run.text))
+}
+
+/// Execute a grid: expand cells, spawn each as a subprocess across
+/// `workers` threads, write per-cell artifacts and the sweep manifest
+/// into `out_dir/<cfg-hash>/`. Returns the report, or
+/// [`Error::Exit`] with code 1 when any cell failed.
+pub fn run_sweep(grid: &GridSpec, opts: &SweepOptions) -> Result<String> {
+    let exp = harness::lookup(&grid.experiment)
+        .ok_or_else(|| unknown_experiment(&grid.experiment))?;
+    // Fail fast on a typo'd axis before burning any cell runs.
+    let mut probe = harness::Params::new();
+    for (k, _) in &grid.axes {
+        probe.set(k, "probe");
+    }
+    for (k, v) in &grid.extras {
+        probe.set(k, v.clone());
+    }
+    validate_params(exp.as_ref(), &probe)?;
+
+    let bin = match &opts.repro_bin {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()
+            .map_err(|e| Error::config(format!("cannot locate the repro binary: {e}")))?,
+    };
+    let jobs = grid.jobs();
+    let n = jobs.len();
+    let cfg_hash = gate::fnv1a(&grid.canonical());
+    let dir = Path::new(&opts.out_dir).join(format!("{cfg_hash:016x}"));
+    std::fs::create_dir_all(&dir)?;
+
+    // One (spec, artifact path) per cell; the spec string is the cell's
+    // canonical identity (sorted `k=v`, experiment included) and hashes
+    // into its artifact name.
+    let mut hashes = Vec::with_capacity(n);
+    let mut work = Vec::with_capacity(n);
+    for job in &jobs {
+        let mut cell = job.clone();
+        cell.insert("experiment".to_string(), grid.experiment.clone());
+        let spec: Vec<String> = cell.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        let spec = spec.join(" ");
+        let hash = gate::fnv1a(&spec);
+        let file = dir.join(format!("{hash:016x}.json"));
+        hashes.push(hash);
+        work.push((spec, file.to_string_lossy().to_string()));
+    }
+    let work = Arc::new(work);
+    // (next job index, abort flag) — fail-fast stops handing out jobs.
+    let queue = Arc::new(Mutex::new((0usize, false)));
+    let results = Arc::new(Mutex::new(vec![("skipped", 0i32); n]));
+    let workers = opts.workers.clamp(1, n.max(1));
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let work = Arc::clone(&work);
+        let queue = Arc::clone(&queue);
+        let results = Arc::clone(&results);
+        let bin = bin.clone();
+        let keep_going = opts.continue_on_failure;
+        handles.push(std::thread::spawn(move || loop {
+            let i = {
+                let mut q = queue.lock().unwrap();
+                if q.1 || q.0 >= n {
+                    break;
+                }
+                q.0 += 1;
+                q.0 - 1
+            };
+            let (spec, out_path) = &work[i];
+            let status = Command::new(&bin)
+                .args(["sweep", "--cell", spec, "--cell-out", out_path])
+                .stdout(Stdio::null())
+                .stderr(Stdio::null())
+                .status();
+            let (ok, code) = match status {
+                Ok(s) if s.success() => (true, 0),
+                Ok(s) => (false, s.code().unwrap_or(-1)),
+                Err(_) => (false, -1),
+            };
+            results.lock().unwrap()[i] = (if ok { "ok" } else { "failed" }, code);
+            if !ok && !keep_going {
+                queue.lock().unwrap().1 = true;
+            }
+        }));
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+
+    let results = results.lock().unwrap();
+    let (mut ok_n, mut failed_n, mut skipped_n) = (0usize, 0usize, 0usize);
+    let mut job_lines = Vec::with_capacity(n);
+    let mut report_lines = Vec::with_capacity(n);
+    for (i, job) in jobs.iter().enumerate() {
+        let (status, code) = results[i];
+        match status {
+            "ok" => ok_n += 1,
+            "failed" => failed_n += 1,
+            _ => skipped_n += 1,
+        }
+        let params: Vec<String> = job.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        let params = params.join(" ");
+        let hash = hashes[i];
+        job_lines.push(format!(
+            "{{\"job_hash\":\"{hash:016x}\",\"status\":\"{status}\",\"artifact\":\"{hash:016x}.json\",\"params\":\"{params}\"}}"
+        ));
+        report_lines.push(match status {
+            "ok" => format!("  ok      {hash:016x}  {params}"),
+            "failed" => format!("  FAILED  {hash:016x}  {params} (exit {code})"),
+            _ => format!("  skipped {hash:016x}  {params}"),
+        });
+    }
+    // No timestamps anywhere: the manifest must be byte-identical for
+    // identical seeded grids (pinned by the sweep determinism test).
+    let manifest = format!(
+        "{{\n  \"sweep\": \"{}\",\n  \"schema\": {},\n  \"git_rev\": \"{}\",\n  \"config_hash\": \"{cfg_hash:016x}\",\n  \"config\": \"{}\",\n  \"cells\": {n},\n  \"failed\": {failed_n},\n  \"jobs\": [{}]\n}}\n",
+        grid.experiment,
+        harness::SCHEMA_VERSION,
+        gate::git_rev(),
+        grid.canonical(),
+        job_lines.join(",\n")
+    );
+    std::fs::write(dir.join("manifest.json"), &manifest)?;
+
+    let skipped_note = if skipped_n > 0 {
+        format!(", {skipped_n} skipped")
+    } else {
+        String::new()
+    };
+    let mut report = format!(
+        "sweep `{}` on grid {cfg_hash:016x}: {n} cells, {ok_n} ok, {failed_n} failed{skipped_note}\n{}\nresults: {}\n",
+        grid.experiment,
+        report_lines.join("\n"),
+        dir.display()
+    );
+    if failed_n > 0 {
+        if skipped_n > 0 {
+            report.push_str(
+                "aborted after first failure (use --continue-on-failure to finish the grid)\n",
+            );
+        }
+        return Err(Error::Exit { code: 1, report });
+    }
+    Ok(report)
+}
+
+/// Load gateable cells from a sweep run (results dir or its
+/// `manifest.json`: job params + row labels + metric) or from a plain
+/// artifact file (row labels + metric).
+fn load_cells(path: &str) -> Result<Vec<(String, f64)>> {
+    let p = Path::new(path);
+    let manifest = if p.is_dir() { p.join("manifest.json") } else { p.to_path_buf() };
+    let is_manifest =
+        p.is_dir() || manifest.file_name().map(|f| f == "manifest.json").unwrap_or(false);
+    let text = std::fs::read_to_string(&manifest)
+        .map_err(|e| Error::config(format!("cannot read `{}`: {e}", manifest.display())))?;
+    if !is_manifest {
+        return Ok(gate::parse_cells(&text, gate::GATED_METRICS));
+    }
+    let dir = manifest.parent().map(Path::to_path_buf).unwrap_or_default();
+    let mut out = Vec::new();
+    for obj in flat_objects(&text) {
+        if let (Some(status), Some(artifact), Some(params)) = (
+            field_str(obj, "status"),
+            field_str(obj, "artifact"),
+            field_str(obj, "params"),
+        ) {
+            if status != "ok" {
+                continue;
+            }
+            let cell_path = dir.join(&artifact);
+            let cell_text = std::fs::read_to_string(&cell_path).map_err(|e| {
+                Error::config(format!("cannot read cell `{}`: {e}", cell_path.display()))
+            })?;
+            for (k, v) in gate::parse_cells(&cell_text, gate::GATED_METRICS) {
+                out.push((format!("{params} {k}"), v));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// `repro sweep diff <baseline> <current>`: gate two runs against each
+/// other through the shared comparator. Passing runs return the report;
+/// regressions return [`Error::Exit`] with code 2.
+pub fn diff(baseline: &str, current: &str) -> Result<String> {
+    let base = load_cells(baseline)?;
+    let mut cur = load_cells(current)?;
+    // The CI drill: multiply the current side to prove the gate trips.
+    if let Ok(factor) = std::env::var("SWEEP_INJECT_REGRESSION") {
+        if let Ok(factor) = factor.parse::<f64>() {
+            for (_, v) in &mut cur {
+                *v *= factor;
+            }
+        }
+    }
+    let report = gate::compare_cells(&base, &cur, gate::DEFAULT_THRESHOLD);
+    let text = format!(
+        "sweep diff: {} matched cells, {} regressed ({} only in current, {} only in baseline)\n{}",
+        report.deltas.len(),
+        report.regressions().len(),
+        report.unmatched_current.len(),
+        report.unmatched_baseline.len(),
+        report.render()
+    );
+    if report.passed() {
+        Ok(format!("{text}gate: OK\n"))
+    } else {
+        Err(Error::Exit { code: 2, report: format!("{text}gate: REGRESSED\n") })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CELL: &str = "experiment=memcmp machine=numa-2x2 scheds=afs engine=sim seed=3 smoke=true";
+
+    #[test]
+    fn run_cell_writes_a_provenance_stamped_artifact() {
+        let path = std::env::temp_dir().join("bubbles-sweep-cell-unit.json");
+        let out = run_cell(CELL, Some(&path.to_string_lossy())).unwrap();
+        assert!(out.contains("afs"), "{out}");
+        assert!(out.contains("wrote"), "{out}");
+        let s = std::fs::read_to_string(&path).unwrap();
+        crate::util::json::validate(&s).unwrap_or_else(|e| panic!("invalid JSON: {e}\n{s}"));
+        assert!(s.contains("\"bench\": \"sweep-cell\""), "{s}");
+        assert!(s.contains("\"config_hash\""), "{s}");
+        assert!(s.contains("\"experiment\": \"memcmp\""), "{s}");
+        assert!(s.contains("\"policy\":\"afs\""), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "planted cell failure")]
+    fn planted_cells_panic_deliberately() {
+        let _ = run_cell("experiment=memcmp __plant_fail=1", None);
+    }
+
+    #[test]
+    fn unknown_experiments_and_params_error_loudly() {
+        let err = run_cell("experiment=warp", None).unwrap_err();
+        assert!(err.to_string().contains("unknown experiment"), "{err}");
+        let err = run_cell("experiment=memcmp warp=1", None).unwrap_err();
+        assert!(err.to_string().contains("no parameter `warp`"), "{err}");
+        assert!(err.to_string().contains("schema"), "{err}");
+        let err = run_cell("experiment=memcmp notapair", None).unwrap_err();
+        assert!(err.to_string().contains("k=v"), "{err}");
+    }
+
+    #[test]
+    fn identical_cells_diff_clean_and_2x_trips() {
+        // Two seeded sim cells with the same spec are bit-identical, so
+        // their diff gates clean; a planted 2x makespan regresses.
+        let dir = std::env::temp_dir();
+        let a = dir.join("bubbles-sweep-diff-a.json");
+        let b = dir.join("bubbles-sweep-diff-b.json");
+        run_cell(CELL, Some(&a.to_string_lossy())).unwrap();
+        run_cell(CELL, Some(&b.to_string_lossy())).unwrap();
+        assert_eq!(
+            std::fs::read(&a).unwrap(),
+            std::fs::read(&b).unwrap(),
+            "same seeded spec must produce byte-identical artifacts"
+        );
+        let out = diff(&a.to_string_lossy(), &b.to_string_lossy()).unwrap();
+        assert!(out.contains("gate: OK"), "{out}");
+        assert!(out.contains("0 regressed"), "{out}");
+        // Doctor the current side: double one makespan.
+        let doctored = std::fs::read_to_string(&b).unwrap();
+        let (pre, rest) = doctored.split_once("\"makespan\":").unwrap();
+        let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap();
+        let span: u64 = rest[..end].parse().unwrap();
+        let doctored = format!("{pre}\"makespan\":{}{}", span * 2, &rest[end..]);
+        std::fs::write(&b, doctored).unwrap();
+        match diff(&a.to_string_lossy(), &b.to_string_lossy()).unwrap_err() {
+            Error::Exit { code, report } => {
+                assert_eq!(code, 2, "regression exit contract");
+                assert!(report.contains("REGRESSED"), "{report}");
+            }
+            other => panic!("want Exit, got {other}"),
+        }
+    }
+
+    #[test]
+    fn run_sweep_exit_contract_and_fail_fast() {
+        // `false` as the cell binary: every cell fails without running
+        // an experiment, which is exactly what the exit-code contract
+        // and the fail-fast/continue-on-failure split need.
+        let grid = GridSpec::from_toml(
+            "[grid]\nexperiment = \"memcmp\"\nseed = [1, 2, 3]\n\
+             [run]\nengine = \"sim\"\nsmoke = true\nmachine = \"smp-4\"\npolicy = \"afs\"",
+        )
+        .unwrap();
+        let out_dir = std::env::temp_dir().join("bubbles-sweep-unit");
+        let opts = SweepOptions {
+            workers: 1,
+            continue_on_failure: false,
+            out_dir: out_dir.to_string_lossy().to_string(),
+            repro_bin: Some(PathBuf::from("false")),
+        };
+        match run_sweep(&grid, &opts).unwrap_err() {
+            Error::Exit { code, report } => {
+                assert_eq!(code, 1, "failed sweep exit contract");
+                assert!(report.contains("FAILED"), "{report}");
+                assert!(report.contains("skipped"), "fail-fast must skip the rest: {report}");
+                assert!(report.contains("--continue-on-failure"), "{report}");
+            }
+            other => panic!("want Exit, got {other}"),
+        }
+        match run_sweep(&grid, &SweepOptions { continue_on_failure: true, ..opts }).unwrap_err() {
+            Error::Exit { code, report } => {
+                assert_eq!(code, 1);
+                assert!(report.contains("3 cells, 0 ok, 3 failed"), "{report}");
+                assert!(!report.contains("skipped"), "{report}");
+            }
+            other => panic!("want Exit, got {other}"),
+        }
+        // The manifest exists and is valid JSON either way.
+        let cfg = gate::fnv1a(&grid.canonical());
+        let manifest = out_dir.join(format!("{cfg:016x}")).join("manifest.json");
+        let s = std::fs::read_to_string(&manifest).unwrap();
+        crate::util::json::validate(&s).unwrap_or_else(|e| panic!("invalid JSON: {e}\n{s}"));
+        assert!(s.contains("\"config_hash\""), "{s}");
+    }
+
+    #[test]
+    fn typoed_grid_axes_fail_before_any_cell_runs() {
+        let grid =
+            GridSpec::from_toml("[grid]\nexperiment = \"memcmp\"\nwarp = [1, 2]").unwrap();
+        let err = run_sweep(&grid, &SweepOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("no parameter `warp`"), "{err}");
+    }
+}

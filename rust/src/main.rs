@@ -4,6 +4,13 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     match bubbles::cli::run(&argv) {
         Ok(out) => println!("{out}"),
+        // Exit carries a report for stdout plus a contract exit code
+        // (1 = failed sweep cells, 2 = gated regression) so unattended
+        // drivers can branch on the status without scraping stderr.
+        Err(bubbles::Error::Exit { code, report }) => {
+            println!("{report}");
+            std::process::exit(code);
+        }
         Err(e) => {
             eprintln!("error: {e}");
             std::process::exit(1);

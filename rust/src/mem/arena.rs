@@ -9,7 +9,11 @@
 //! [`ArenaSet::touch`] walks a bounded window of its pages with real
 //! volatile writes, and the region's home-node preference is forwarded
 //! to the kernel via `mbind` (best-effort — see
-//! [`crate::util::os::bind_to_node`]).
+//! [`crate::util::os::bind_to_node`]). Striped regions bind *per
+//! stripe*: each stripe's page range within the one mapping gets its
+//! own `mbind` to the stripe's declared node
+//! ([`ArenaSet::back_striped`]), so the kernel layout mirrors the
+//! modelled one instead of collapsing onto the first node.
 //!
 //! Failure is always soft: a denied map or bind leaves the region in
 //! counter-only mode and the run proceeds unchanged. Mapping sizes are
@@ -19,7 +23,7 @@
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::RwLock;
 
-use super::RegionId;
+use super::{RegionId, Stripe};
 use crate::util::os::{bind_to_node, MapRegion};
 
 /// Page stride for touch walks (the kernel page size on every platform
@@ -75,6 +79,10 @@ pub struct ArenaSet {
     arenas: RwLock<Vec<Option<Arena>>>,
     bytes_mapped: AtomicU64,
     touches: AtomicU64,
+    /// `mbind` calls the kernel rejected (sandboxed CI, single-node
+    /// kernels). Binding stays best-effort; this keeps the misses
+    /// observable instead of silent.
+    bind_failures: AtomicU64,
 }
 
 impl ArenaSet {
@@ -101,15 +109,61 @@ impl ArenaSet {
         }
         let Some(arena) = Arena::new(bytes) else { return false };
         if let Some(node) = home {
-            let _ = bind_to_node(arena.map.as_ptr(), arena.map.len(), node);
+            if !bind_to_node(arena.map.as_ptr(), arena.map.len(), node) {
+                self.bind_failures.fetch_add(1, Ordering::Relaxed);
+            }
         }
+        self.install(r, arena);
+        true
+    }
+
+    /// Back a *striped* region: one mapping, with each stripe's page
+    /// range `mbind`-preferred onto that stripe's declared node. The
+    /// modelled stripe sizes are scaled onto the (possibly clamped)
+    /// mapping length and rounded to page boundaries, so a stripe too
+    /// small to own a full page simply cedes it to a neighbour. Binds
+    /// are best-effort; rejections count in [`ArenaSet::bind_failures`].
+    pub fn back_striped(&self, r: RegionId, bytes: u64, stripes: &[Stripe]) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        if stripes.is_empty() {
+            return self.back(r, bytes, None);
+        }
+        let Some(arena) = Arena::new(bytes) else { return false };
+        let len = arena.map.len();
+        let total: u128 = stripes.iter().map(|s| u128::from(s.size)).sum::<u128>().max(1);
+        let ptr = arena.map.as_ptr();
+        let mut acc: u128 = 0;
+        let mut start = 0usize;
+        for (i, s) in stripes.iter().enumerate() {
+            acc += u128::from(s.size);
+            let end = if i + 1 == stripes.len() {
+                len
+            } else {
+                ((acc * len as u128 / total) as usize) & !(PAGE - 1)
+            };
+            if end > start {
+                // SAFETY: `start < end <= len`, so the whole range lies
+                // inside the live mapping.
+                let range = unsafe { ptr.add(start) };
+                if !bind_to_node(range, end - start, s.node) {
+                    self.bind_failures.fetch_add(1, Ordering::Relaxed);
+                }
+                start = end;
+            }
+        }
+        self.install(r, arena);
+        true
+    }
+
+    fn install(&self, r: RegionId, arena: Arena) {
         self.bytes_mapped.fetch_add(arena.map.len() as u64, Ordering::Relaxed);
         let mut v = self.arenas.write().unwrap();
         if v.len() <= r {
             v.resize_with(r + 1, || None);
         }
         v[r] = Some(arena);
-        true
     }
 
     /// Walk real bytes of region `r`'s backing window, if any.
@@ -130,6 +184,12 @@ impl ArenaSet {
             self.bytes_mapped.load(Ordering::Relaxed),
             self.touches.load(Ordering::Relaxed),
         )
+    }
+
+    /// `mbind` calls rejected by the kernel so far (best-effort
+    /// binding never fails the allocation).
+    pub fn bind_failures(&self) -> u64 {
+        self.bind_failures.load(Ordering::Relaxed)
     }
 }
 
@@ -159,6 +219,36 @@ mod tests {
         // Unbacked ids stay no-ops even while enabled.
         set.touch(999);
         assert_eq!(set.stats().1, 2);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn striped_backing_binds_each_stripe_best_effort() {
+        let set = ArenaSet::new();
+        set.set_enabled(true);
+        let stripes = [Stripe { node: 0, size: 4 * 4096 }, Stripe { node: 1, size: 4 * 4096 }];
+        assert!(set.back_striped(7, 8 * 4096, &stripes), "anonymous mmap should succeed");
+        set.touch(7);
+        let (bytes, touches) = set.stats();
+        assert_eq!(bytes, 8 * 4096);
+        assert_eq!(touches, 1);
+        // The kernel may reject mbind (sandbox, node 1 absent on a
+        // single-node machine); best-effort means at worst one counted
+        // failure per stripe and the mapping still stands.
+        assert!(set.bind_failures() <= stripes.len() as u64, "{}", set.bind_failures());
+    }
+
+    #[test]
+    fn striped_backing_without_stripes_degrades_to_plain() {
+        let set = ArenaSet::new();
+        set.set_enabled(true);
+        if set.back_striped(0, 4096, &[]) {
+            assert_eq!(set.stats().0, 4096);
+        }
+        // Disabled sets stay inert on the striped path too.
+        let off = ArenaSet::new();
+        assert!(!off.back_striped(0, 4096, &[Stripe { node: 0, size: 4096 }]));
+        assert_eq!(off.bind_failures(), 0);
     }
 
     #[test]

@@ -118,10 +118,10 @@ impl MemState {
     /// (see [`RegionRegistry::alloc_striped`]).
     pub fn alloc_striped(&self, size: u64, nodes: &[usize]) -> RegionId {
         let r = self.regions.alloc_striped(size, nodes);
-        // One mapping per region; the kernel preference follows the
-        // first declared stripe node (per-stripe binding is a ROADMAP
-        // follow-on).
-        self.arenas.back(r, size, nodes.first().copied());
+        // One mapping per region, with each stripe's page range bound
+        // to its declared node so the kernel layout mirrors the model
+        // (best-effort; rejections count in [`ArenaSet::bind_failures`]).
+        self.arenas.back_striped(r, size, &self.regions.info(r).stripes);
         r
     }
 
@@ -418,6 +418,22 @@ mod tests {
         }
         assert!(mem.conserved(&tasks));
         assert!(mem.hierarchy_consistent(&tasks));
+    }
+
+    #[test]
+    fn striped_alloc_binds_per_stripe_when_arenas_on() {
+        let topo = numa22();
+        let mem = MemState::new(&topo);
+        mem.enable_arenas();
+        let r = mem.alloc_striped(8192, &[0, 1]);
+        assert_eq!(mem.info(r).stripes.len(), 2);
+        let (bytes, _) = mem.arenas.stats();
+        // mmap may be unavailable off-Linux; when it works, the
+        // per-stripe binds are best-effort (at most one failure each).
+        if bytes > 0 {
+            assert_eq!(bytes, 8192);
+        }
+        assert!(mem.arenas.bind_failures() <= 2);
     }
 
     #[test]

@@ -79,6 +79,63 @@ pub const JOB_REGION_BYTES: u64 = 256 << 10;
 
 // ---------------------------------------------------------------- specs
 
+/// What each member computes: the job's application shape. `Touch` is
+/// the synthetic default (the spec's work/mem numbers as written);
+/// `Conduction` and `Amr` are the paper's real-app profiles scaled to
+/// job size — a uniform memory-bound stencil sweep, and a refinement
+/// run whose members carry deliberately skewed work (1x..3x) so the
+/// serving policy has to rebalance inside the job. Both stay
+/// barrier-free (see the module docs on cross-member coupling).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum JobApp {
+    #[default]
+    Touch,
+    Conduction,
+    Amr,
+}
+
+impl JobApp {
+    pub fn label(self) -> &'static str {
+        match self {
+            JobApp::Touch => "touch",
+            JobApp::Conduction => "conduction",
+            JobApp::Amr => "amr",
+        }
+    }
+
+    /// Parse an app label (CLI / spool).
+    pub fn parse(s: &str) -> Option<JobApp> {
+        match s.to_ascii_lowercase().as_str() {
+            "touch" => Some(JobApp::Touch),
+            "conduction" => Some(JobApp::Conduction),
+            "amr" => Some(JobApp::Amr),
+            _ => None,
+        }
+    }
+
+    /// Per-member sim compute profile: `(work, mem_fraction)` for
+    /// member `k` of the job.
+    pub fn member_profile(self, spec: &JobSpec, k: usize) -> (u64, f64) {
+        match self {
+            JobApp::Touch => (spec.work.max(1), spec.mem_fraction),
+            // Stencil sweep: uniform work, firmly memory-bound.
+            JobApp::Conduction => (spec.work.max(1), spec.mem_fraction.max(0.35)),
+            // Refinement skew: member k carries 1x..3x the base work.
+            JobApp::Amr => (spec.work.max(1) * (1 + k as u64 % 3), spec.mem_fraction),
+        }
+    }
+
+    /// Per-member region-touch count on the native engine (the wall
+    /// clock analogue of [`JobApp::member_profile`]).
+    pub fn native_touches(self, touches: usize, k: usize) -> usize {
+        match self {
+            JobApp::Touch => touches.max(1),
+            JobApp::Conduction => touches.max(2),
+            JobApp::Amr => touches.max(1) * (1 + k % 3),
+        }
+    }
+}
+
 /// One job's shape: what the tenant submitted.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
@@ -86,6 +143,9 @@ pub struct JobSpec {
     /// How the job presents itself: flat members under the job root, or
     /// per-NUMA-node sub-bubbles (the paper's structure axis, per job).
     pub mode: StructureMode,
+    /// What the members compute (synthetic touch loop or a real-app
+    /// profile).
+    pub app: JobApp,
     pub prio: Prio,
     pub class: DeadlineClass,
     /// Member threads.
@@ -106,6 +166,7 @@ impl JobSpec {
         JobSpec {
             name: format!("small{i}"),
             mode: StructureMode::Simple,
+            app: JobApp::Touch,
             prio: PRIO_THREAD,
             class: DeadlineClass::Normal,
             threads: 1,
@@ -118,20 +179,37 @@ impl JobSpec {
 
     /// Medium job: a couple of members, a couple of cycles.
     pub fn medium(i: usize) -> JobSpec {
-        JobSpec { name: format!("medium{i}"), threads: 2, cycles: 2, work: 60_000, ..JobSpec::small(i) }
+        JobSpec {
+            name: format!("medium{i}"),
+            threads: 2,
+            cycles: 2,
+            work: 60_000,
+            ..JobSpec::small(i)
+        }
     }
 
     /// Large job: node-filling gang.
     pub fn large(i: usize) -> JobSpec {
-        JobSpec { name: format!("large{i}"), threads: 4, cycles: 2, work: 150_000, ..JobSpec::small(i) }
+        JobSpec {
+            name: format!("large{i}"),
+            threads: 4,
+            cycles: 2,
+            work: 150_000,
+            ..JobSpec::small(i)
+        }
     }
 
     /// Key identifying the job's *shape* (everything that determines
     /// its solo runtime) — the slowdown baseline is recorded per key.
     pub fn shape_key(&self) -> String {
         format!(
-            "{}t{}c{}w{:.2}m:{}",
-            self.threads, self.cycles, self.work, self.mem_fraction, self.mode.label()
+            "{}t{}c{}w{:.2}m:{}:{}",
+            self.threads,
+            self.cycles,
+            self.work,
+            self.mem_fraction,
+            self.mode.label(),
+            self.app.label()
         )
     }
 
@@ -139,9 +217,10 @@ impl JobSpec {
     /// `repro submit` → `repro serve` file queue.
     pub fn spool_line(&self) -> String {
         format!(
-            "name={} mode={} prio={} class={} threads={} cycles={} work={} mem={} touches={}",
+            "name={} mode={} app={} prio={} class={} threads={} cycles={} work={} mem={} touches={}",
             self.name,
             self.mode.label().to_lowercase(),
+            self.app.label(),
             self.prio,
             self.class.label(),
             self.threads,
@@ -165,6 +244,7 @@ impl JobSpec {
             match k {
                 "name" => spec.name = v.to_string(),
                 "mode" => spec.mode = parse_mode(v).ok_or_else(|| bad("mode"))?,
+                "app" => spec.app = JobApp::parse(v).ok_or_else(|| bad("app"))?,
                 "prio" => spec.prio = v.parse().map_err(|_| bad("prio"))?,
                 "class" => spec.class = DeadlineClass::parse(v).ok_or_else(|| bad("class"))?,
                 "threads" => spec.threads = v.parse().map_err(|_| bad("threads"))?,
@@ -234,6 +314,12 @@ pub struct GenConfig {
     pub burst_len: usize,
     /// ...with this tiny fixed gap.
     pub burst_gap: u64,
+    /// Fraction of jobs that carry a real-app profile instead of the
+    /// synthetic touch loop. Zero (the default) draws nothing extra, so
+    /// pre-existing seeded streams stay bit-identical.
+    pub app_fraction: f64,
+    /// The app those jobs carry; `None` draws conduction/amr 50:50.
+    pub app: Option<JobApp>,
 }
 
 impl Default for GenConfig {
@@ -245,6 +331,8 @@ impl Default for GenConfig {
             burst_every: 16,
             burst_len: 8,
             burst_gap: 1_000,
+            app_fraction: 0.0,
+            app: None,
         }
     }
 }
@@ -281,6 +369,20 @@ pub fn generate(cfg: &GenConfig) -> Vec<Arrival> {
         };
         if rng.chance(0.3) {
             spec.mode = StructureMode::Bubbles;
+        }
+        // Guarded behind the fraction: a zero-fraction config draws
+        // nothing here, keeping older seeded streams bit-identical.
+        if cfg.app_fraction > 0.0 && rng.chance(cfg.app_fraction) {
+            spec.app = match cfg.app {
+                Some(app) => app,
+                None => {
+                    if rng.chance(0.5) {
+                        JobApp::Conduction
+                    } else {
+                        JobApp::Amr
+                    }
+                }
+            };
         }
         out.push(Arrival { gap, spec });
     }
@@ -497,11 +599,13 @@ pub fn build_job(sys: &Arc<System>, spec: &JobSpec, id: usize) -> BuiltJob {
 }
 
 /// The member program on the simulator: `cycles` compute items on the
-/// member's own region. Deliberately barrier-free (see module docs).
-fn member_program(spec: &JobSpec, region: RegionId) -> Program {
+/// member's own region, with work/mem set by the job's app profile for
+/// member `k`. Deliberately barrier-free (see module docs).
+fn member_program(spec: &JobSpec, k: usize, region: RegionId) -> Program {
+    let (work, mem) = spec.app.member_profile(spec, k);
     let mut p = Program::new();
     for _ in 0..spec.cycles.max(1) {
-        p = p.compute(spec.work.max(1), spec.mem_fraction, Some(region));
+        p = p.compute(work, mem, Some(region));
     }
     p
 }
@@ -584,7 +688,12 @@ impl ServeOutcome {
 }
 
 /// Fold the book into a [`ServeOutcome`] once the engine drained.
-fn collect(sys: &System, book: &JobBook, policy: String, mix_makespan: u64) -> Result<ServeOutcome> {
+fn collect(
+    sys: &System,
+    book: &JobBook,
+    policy: String,
+    mix_makespan: u64,
+) -> Result<ServeOutcome> {
     let records = book.records();
     let lost = records.iter().filter(|r| r.finished.is_none()).count();
     if lost > 0 {
@@ -655,8 +764,8 @@ pub fn run_sim(
         if let Some(jf) = &jf {
             jf.set_class(built.root, a.spec.class);
         }
-        for (&t, &r) in built.members.iter().zip(built.regions.iter()) {
-            e.set_program(t, member_program(&a.spec, r));
+        for (k, (&t, &r)) in built.members.iter().zip(built.regions.iter()).enumerate() {
+            e.set_program(t, member_program(&a.spec, k, r));
         }
         book.register(&a.spec, &built);
         driver = driver.compute(a.gap.max(1), 0.0, None).wake(built.root);
@@ -664,7 +773,8 @@ pub fn run_sim(
     let d = e.add_thread("arrivals", PRIO_HIGH, driver);
     e.wake(d);
     let rep = e.run()?;
-    let policy = format!("{}{}", cfg.kind.label(), if cfg.static_partition { "-static" } else { "" });
+    let policy =
+        format!("{}{}", cfg.kind.label(), if cfg.static_partition { "-static" } else { "" });
     if let Some(path) = trace_out {
         let label = format!("serve sim/{policy} on {}", topo.name());
         write_trace(&e.sys.trace, topo, path, &label);
@@ -718,8 +828,10 @@ pub fn run_native(
                         jf.set_class(built.root, a.spec.class);
                     }
                     let cycles = a.spec.cycles.max(1);
-                    let touches = a.spec.touches.max(1);
-                    for (&t, &r) in built.members.iter().zip(built.regions.iter()) {
+                    for (k, (&t, &r)) in
+                        built.members.iter().zip(built.regions.iter()).enumerate()
+                    {
+                        let touches = a.spec.app.native_touches(a.spec.touches, k);
                         sub.register(t, move |api| {
                             for _ in 0..cycles {
                                 for _ in 0..touches {
@@ -741,7 +853,8 @@ pub fn run_native(
     for h in handles {
         h.join().map_err(|_| Error::Sim("serve: submitter thread panicked".into()))?;
     }
-    let policy = format!("{}{}", cfg.kind.label(), if cfg.static_partition { "-static" } else { "" });
+    let policy =
+        format!("{}{}", cfg.kind.label(), if cfg.static_partition { "-static" } else { "" });
     if let Some(path) = trace_out {
         let label = format!("serve native/{policy} on {}", topo.name());
         write_trace(&sys.trace, topo, path, &label);
@@ -790,16 +903,67 @@ mod tests {
         let mut s = JobSpec::large(3);
         s.class = DeadlineClass::Latency;
         s.mode = StructureMode::Bubbles;
+        s.app = JobApp::Amr;
         let line = s.spool_line();
         let back = JobSpec::parse_spool(&line).unwrap();
         assert_eq!(back.name, s.name);
         assert_eq!(back.class, s.class);
         assert_eq!(back.mode, s.mode);
+        assert_eq!(back.app, s.app);
         assert_eq!(back.threads, s.threads);
         assert_eq!(back.work, s.work);
         assert!(JobSpec::parse_spool("nonsense").is_err());
         assert!(JobSpec::parse_spool("threads=0").is_err());
         assert!(JobSpec::parse_spool("bogus=1").is_err());
+        assert!(JobSpec::parse_spool("app=warp").is_err());
+    }
+
+    #[test]
+    fn app_profiles_shape_members_and_streams() {
+        // The amr profile skews work per member; conduction forces the
+        // memory-bound floor; touch leaves the spec as written.
+        let spec = JobSpec { app: JobApp::Amr, ..JobSpec::large(0) };
+        assert_eq!(JobApp::Amr.member_profile(&spec, 0).0, spec.work);
+        assert_eq!(JobApp::Amr.member_profile(&spec, 1).0, spec.work * 2);
+        assert_eq!(JobApp::Amr.member_profile(&spec, 2).0, spec.work * 3);
+        assert!(JobApp::Conduction.member_profile(&spec, 0).1 >= 0.35);
+        assert_eq!(JobApp::Touch.member_profile(&spec, 1), (spec.work, spec.mem_fraction));
+        // shape_key carries the app axis (solo runtime depends on it).
+        assert!(spec.shape_key().ends_with(":amr"), "{}", spec.shape_key());
+        // A zero app_fraction draws nothing: the stream matches the
+        // pre-app generator bit for bit (all jobs stay Touch).
+        let base = generate(&GenConfig { jobs: 48, ..GenConfig::default() });
+        assert!(base.iter().all(|a| a.spec.app == JobApp::Touch));
+        // Full-fraction single-app streams carry that app everywhere...
+        let cfg = GenConfig {
+            jobs: 48,
+            app_fraction: 1.0,
+            app: Some(JobApp::Conduction),
+            ..GenConfig::default()
+        };
+        let all = generate(&cfg);
+        assert!(all.iter().all(|a| a.spec.app == JobApp::Conduction));
+        // ...and the first job's pre-app draws (gap, shape) are
+        // untouched (later jobs see a shifted stream: the app draw
+        // consumes the rng, which is fine — only the zero-fraction
+        // config promises bit-compatibility).
+        assert_eq!(base[0].gap, all[0].gap);
+        assert_eq!(base[0].spec.threads, all[0].spec.threads);
+        // The mixed stream draws both real apps.
+        let mix =
+            generate(&GenConfig { jobs: 48, app_fraction: 1.0, ..GenConfig::default() });
+        assert!(mix.iter().any(|a| a.spec.app == JobApp::Conduction), "conduction missing");
+        assert!(mix.iter().any(|a| a.spec.app == JobApp::Amr), "amr missing");
+    }
+
+    #[test]
+    fn sim_serve_drains_real_app_jobs() {
+        let topo = Topology::numa(2, 2);
+        let cfg = GenConfig { jobs: 24, app_fraction: 1.0, ..GenConfig::default() };
+        let arrivals = generate(&cfg);
+        let out = run_sim(&topo, &ServeConfig::default(), &arrivals, None).unwrap();
+        assert_eq!(out.lost, 0);
+        assert_eq!(out.jobs.len(), 24);
     }
 
     #[test]

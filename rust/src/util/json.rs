@@ -1,7 +1,10 @@
 //! Minimal JSON validity checker (recursive descent, no allocation of
-//! a document model). The crate is dependency-free, but tests and the
-//! trace exporter need to assert "this artifact is well-formed JSON" —
-//! this is exactly that check, nothing more (no value access).
+//! a document model) plus the flat-object field extractors shared by
+//! the bench gate and the sweep differ. The crate is dependency-free,
+//! but tests and the trace exporter need to assert "this artifact is
+//! well-formed JSON", and the regression tooling needs to pull labels
+//! and metrics back out of the artifacts this crate itself writes —
+//! this module is exactly those two capabilities, nothing more.
 
 /// Validate that `s` is one well-formed JSON value (with surrounding
 /// whitespace allowed). `Err` carries the byte offset and what went
@@ -15,6 +18,151 @@ pub fn validate(s: &str) -> Result<(), String> {
         return Err(format!("trailing data at byte {}", p.i));
     }
     Ok(())
+}
+
+/// Numeric value of `key` in a flat `{...}` object string.
+pub fn field_num(obj: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let rest = obj[obj.find(&pat)? + pat.len()..].trim_start();
+    let end = rest
+        .find(|c: char| c == ',' || c == '}' || c.is_whitespace())
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// String value of `key` in a flat `{...}` object string.
+pub fn field_str(obj: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let rest = obj[obj.find(&pat)? + pat.len()..].trim_start();
+    let quoted = rest.strip_prefix('"')?;
+    Some(quoted[..quoted.find('"')?].to_string())
+}
+
+/// Innermost `{...}` spans of a document. The artifacts this crate
+/// writes keep their result rows as flat objects inside arrays, so the
+/// innermost spans are exactly the rows; enclosing objects (which
+/// contain them) never appear.
+pub fn flat_objects(json: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = None;
+    for (i, b) in json.bytes().enumerate() {
+        match b {
+            b'{' => start = Some(i),
+            b'}' => {
+                if let Some(s) = start.take() {
+                    out.push(&json[s..=i]);
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// A scalar field value inside a flat object.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldValue {
+    Num(f64),
+    Str(String),
+    /// Bool / null / array — present but not a gateable scalar.
+    Other,
+}
+
+/// Every `"key": value` pair of a flat `{...}` object, in document
+/// order. String values keep escapes verbatim (our writers never emit
+/// any); array values are skipped as [`FieldValue::Other`].
+pub fn flat_fields(obj: &str) -> Vec<(String, FieldValue)> {
+    fn take_str(b: &[u8], mut i: usize) -> Option<(String, usize)> {
+        if b.get(i) != Some(&b'"') {
+            return None;
+        }
+        i += 1;
+        let start = i;
+        while i < b.len() {
+            match b[i] {
+                b'\\' => i += 2,
+                b'"' => {
+                    let s = String::from_utf8_lossy(&b[start..i]).into_owned();
+                    return Some((s, i + 1));
+                }
+                _ => i += 1,
+            }
+        }
+        None
+    }
+    fn skip_ws(b: &[u8], mut i: usize) -> usize {
+        while matches!(b.get(i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            i += 1;
+        }
+        i
+    }
+    let b = obj.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        let Some((key, j)) = take_str(b, i) else {
+            i += 1;
+            continue;
+        };
+        let k = skip_ws(b, j);
+        if b.get(k) != Some(&b':') {
+            i = j;
+            continue;
+        }
+        let v = skip_ws(b, k + 1);
+        match b.get(v) {
+            Some(b'"') => {
+                if let Some((s, m)) = take_str(b, v) {
+                    out.push((key, FieldValue::Str(s)));
+                    i = m;
+                } else {
+                    i = v + 1;
+                }
+            }
+            Some(b'[') => {
+                // Skip to the matching bracket, quote-aware.
+                let mut depth = 0usize;
+                let mut m = v;
+                while m < b.len() {
+                    match b[m] {
+                        b'"' => match take_str(b, m) {
+                            Some((_, next)) => {
+                                m = next;
+                                continue;
+                            }
+                            None => break,
+                        },
+                        b'[' => depth += 1,
+                        b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                m += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    m += 1;
+                }
+                out.push((key, FieldValue::Other));
+                i = m;
+            }
+            Some(_) => {
+                let rest = &obj[v..];
+                let end = rest
+                    .find(|c: char| c == ',' || c == '}' || c.is_whitespace())
+                    .unwrap_or(rest.len());
+                let token = &rest[..end];
+                match token.parse::<f64>() {
+                    Ok(n) => out.push((key, FieldValue::Num(n))),
+                    Err(_) => out.push((key, FieldValue::Other)),
+                }
+                i = v + end;
+            }
+            None => break,
+        }
+    }
+    out
 }
 
 struct Parser<'a> {
@@ -182,7 +330,36 @@ impl Parser<'_> {
 
 #[cfg(test)]
 mod tests {
-    use super::validate;
+    use super::{field_num, field_str, flat_fields, flat_objects, validate, FieldValue};
+
+    #[test]
+    fn flat_objects_yield_innermost_rows_only() {
+        let doc = r#"{"bench":"x","results":[{"a":1},{"b":"two"}],"tail":3}"#;
+        let objs = flat_objects(doc);
+        assert_eq!(objs, vec![r#"{"a":1}"#, r#"{"b":"two"}"#]);
+    }
+
+    #[test]
+    fn field_extractors_pull_scalars() {
+        let obj = r#"{"policy":"afs","makespan":1200,"local_ratio":0.7500}"#;
+        assert_eq!(field_str(obj, "policy").as_deref(), Some("afs"));
+        assert_eq!(field_num(obj, "makespan"), Some(1200.0));
+        assert_eq!(field_num(obj, "local_ratio"), Some(0.75));
+        assert_eq!(field_num(obj, "absent"), None);
+        assert_eq!(field_str(obj, "makespan"), None, "numbers are not strings");
+    }
+
+    #[test]
+    fn flat_fields_enumerate_labels_and_metrics() {
+        let obj = r#"{"engine":"sim","policy":"afs","makespan":1200,"ok":true,"xs":[1,"a"],"r":0.5}"#;
+        let fields = flat_fields(obj);
+        assert_eq!(fields.len(), 6);
+        assert_eq!(fields[0], ("engine".into(), FieldValue::Str("sim".into())));
+        assert_eq!(fields[2], ("makespan".into(), FieldValue::Num(1200.0)));
+        assert_eq!(fields[3], ("ok".into(), FieldValue::Other));
+        assert_eq!(fields[4], ("xs".into(), FieldValue::Other), "arrays are skipped whole");
+        assert_eq!(fields[5], ("r".into(), FieldValue::Num(0.5)));
+    }
 
     #[test]
     fn accepts_well_formed() {

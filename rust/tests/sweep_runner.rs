@@ -1,0 +1,199 @@
+//! End-to-end `repro sweep` tests: subprocess cell isolation, the
+//! planted-failure / `--continue-on-failure` drill, content-addressed
+//! determinism, and the regression gate — the sweep acceptance criteria.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+/// ≥2 policies × ≥2 machines × ≥2 seeds, all sim smoke cells.
+const GRID: &str = "\
+[grid]
+experiment = \"memcmp\"
+policy  = [\"afs\", \"memaware\"]
+machine = [\"smp-4\", \"numa-4x4\"]
+seed    = [1, 2]
+
+[run]
+engine = \"sim\"
+smoke  = true
+";
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("bubbles-sweep-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn repro(args: &[&str], envs: &[(&str, &str)], cwd: Option<&Path>) -> Output {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_repro"));
+    cmd.args(args);
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    if let Some(d) = cwd {
+        cmd.current_dir(d);
+    }
+    cmd.output().expect("spawn repro")
+}
+
+fn stdout_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+/// The single content-addressed run directory under a sweep out dir.
+fn only_subdir(dir: &Path) -> PathBuf {
+    let mut subs: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.is_dir())
+        .collect();
+    assert_eq!(subs.len(), 1, "want exactly one run dir in {}: {subs:?}", dir.display());
+    subs.pop().unwrap()
+}
+
+#[test]
+fn planted_failure_completes_the_grid_and_exits_nonzero() {
+    let root = scratch("plant");
+    let grid_path = root.join("grid.toml");
+    std::fs::write(
+        &grid_path,
+        format!("{GRID}\n[sweep]\nplant_fail = \"machine=smp-4 seed=2\"\n"),
+    )
+    .unwrap();
+    let out_dir = root.join("results");
+    let out = repro(
+        &[
+            "sweep",
+            "--grid",
+            &grid_path.to_string_lossy(),
+            "-j",
+            "4",
+            "--continue-on-failure",
+            "--out",
+            &out_dir.to_string_lossy(),
+        ],
+        &[],
+        None,
+    );
+    let stdout = stdout_of(&out);
+    // Exit contract: any failed cell → 1; the other 6 cells still ran.
+    assert_eq!(out.status.code(), Some(1), "{stdout}");
+    assert!(stdout.contains("8 cells, 6 ok, 2 failed"), "{stdout}");
+    assert!(!stdout.contains("skipped"), "continue-on-failure must run everything: {stdout}");
+    let run = only_subdir(&out_dir);
+    let manifest = std::fs::read_to_string(run.join("manifest.json")).unwrap();
+    assert_eq!(manifest.matches("\"status\":\"ok\"").count(), 6, "{manifest}");
+    assert_eq!(manifest.matches("\"status\":\"failed\"").count(), 2, "{manifest}");
+    // Planted cells panic before writing, so exactly the ok cells left
+    // artifacts behind.
+    let artifacts = std::fs::read_dir(&run)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+        .filter(|n| n != "manifest.json")
+        .count();
+    assert_eq!(artifacts, 6, "one artifact per ok cell");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn identical_seeded_sweeps_are_byte_identical_and_gate_clean() {
+    let root = scratch("det");
+    let grid_path = root.join("grid.toml");
+    std::fs::write(&grid_path, GRID).unwrap();
+    let (a, b) = (root.join("a"), root.join("b"));
+    for out_dir in [&a, &b] {
+        let out = repro(
+            &[
+                "sweep",
+                "--grid",
+                &grid_path.to_string_lossy(),
+                "-j",
+                "2",
+                "--out",
+                &out_dir.to_string_lossy(),
+            ],
+            &[],
+            None,
+        );
+        assert!(out.status.success(), "{}", stdout_of(&out));
+    }
+    let (ra, rb) = (only_subdir(&a), only_subdir(&b));
+    assert_eq!(ra.file_name(), rb.file_name(), "same grid must hash to the same run dir");
+    let mut names: Vec<String> = std::fs::read_dir(&ra)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+        .collect();
+    names.sort();
+    assert_eq!(names.len(), 9, "8 cell artifacts + manifest: {names:?}");
+    for name in &names {
+        assert_eq!(
+            std::fs::read(ra.join(name)).unwrap(),
+            std::fs::read(rb.join(name)).unwrap(),
+            "`{name}` must be byte-identical across seeded runs"
+        );
+    }
+
+    // Diffing the two runs gates clean with matched cells on both sides.
+    let out = repro(&["sweep", "diff", &ra.to_string_lossy(), &rb.to_string_lossy()], &[], None);
+    let stdout = stdout_of(&out);
+    assert!(out.status.success(), "{stdout}");
+    assert!(stdout.contains("gate: OK"), "{stdout}");
+    assert!(stdout.contains("0 regressed"), "{stdout}");
+    assert!(!stdout.contains("diff: 0 matched"), "diff must actually match cells: {stdout}");
+
+    // The one-arg form reads the baseline from BENCH_BASELINE.
+    let out = repro(
+        &["sweep", "diff", &rb.to_string_lossy()],
+        &[("BENCH_BASELINE", &ra.to_string_lossy())],
+        None,
+    );
+    assert!(out.status.success(), "{}", stdout_of(&out));
+
+    // The injected-regression drill: a 2x inflation must trip the gate
+    // with the contract exit code.
+    let out = repro(
+        &["sweep", "diff", &ra.to_string_lossy(), &rb.to_string_lossy()],
+        &[("SWEEP_INJECT_REGRESSION", "2.0")],
+        None,
+    );
+    let stdout = stdout_of(&out);
+    assert_eq!(out.status.code(), Some(2), "{stdout}");
+    assert!(stdout.contains("REGRESSED"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn serve_rows_gate_through_sweep_diff() {
+    // Two identically-seeded sim serve runs produce identical
+    // BENCH_serve.json artifacts; `sweep diff` gates their
+    // mix_makespan / p99_slowdown rows like any other cells.
+    let root = scratch("serve");
+    let (a, b) = (root.join("a"), root.join("b"));
+    for dir in [&a, &b] {
+        std::fs::create_dir_all(dir).unwrap();
+        let out = repro(
+            &["serve", "--engine", "sim", "--smoke", "--seed", "7"],
+            &[],
+            Some(dir),
+        );
+        assert!(out.status.success(), "{}", stdout_of(&out));
+        assert!(dir.join("BENCH_serve.json").exists());
+    }
+    let (fa, fb) = (a.join("BENCH_serve.json"), b.join("BENCH_serve.json"));
+    let out = repro(&["sweep", "diff", &fa.to_string_lossy(), &fb.to_string_lossy()], &[], None);
+    let stdout = stdout_of(&out);
+    assert!(out.status.success(), "{stdout}");
+    assert!(stdout.contains("gate: OK"), "{stdout}");
+    assert!(!stdout.contains("diff: 0 matched"), "serve rows must gate: {stdout}");
+    let out = repro(
+        &["sweep", "diff", &fa.to_string_lossy(), &fb.to_string_lossy()],
+        &[("SWEEP_INJECT_REGRESSION", "2.0")],
+        None,
+    );
+    let stdout = stdout_of(&out);
+    assert_eq!(out.status.code(), Some(2), "{stdout}");
+    assert!(stdout.contains("REGRESSED"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&root);
+}
